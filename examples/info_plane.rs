@@ -1,0 +1,41 @@
+//! §III information-plane analysis (the experiment that motivates LGC):
+//! measure how much of one node's gradient information is shared with
+//! another node's gradient, per layer, during real training.
+//!
+//!   cargo run --release --example info_plane [model] [steps]
+//!
+//! Prints the per-layer mean entropy / MI table (Fig. 4's view) and the
+//! overall MI/H ratio (the paper's "~80% of information is common" claim).
+
+use lgc::exp::info_plane::{fig3_fig4, per_layer_means};
+use lgc::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "resnet_mini".into());
+    let steps: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    let engine = Engine::open_default()?;
+    let rows = fig3_fig4(&engine, &model, steps, 256)?;
+
+    // Fig 3's view: MI and H over iterations for a couple of layers.
+    let means = per_layer_means(&rows);
+    let probe_layers: Vec<usize> = means
+        .iter()
+        .map(|(l, _, _)| *l)
+        .filter(|l| l % 4 == 1)
+        .take(3)
+        .collect();
+    println!("\nper-iteration traces (layers {probe_layers:?}):");
+    println!("{:>5} {:>8} {:>10} {:>10}", "iter", "layer", "H(bits)", "MI(bits)");
+    for r in rows.iter().filter(|r| probe_layers.contains(&r.layer)) {
+        if r.iter % (steps / 10).max(1) == 0 {
+            println!(
+                "{:>5} {:>8} {:>10.3} {:>10.3}",
+                r.iter, r.layer, r.h, r.mi
+            );
+        }
+    }
+    Ok(())
+}

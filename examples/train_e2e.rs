@@ -1,0 +1,87 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): train the transformer
+//! LM on the synthetic Markov corpus across 4 simulated nodes with LGC
+//! (ring-allreduce instance) for several hundred steps, logging the loss
+//! curve, and cross-check against the uncompressed baseline.
+//!
+//! This exercises every layer of the stack in one run:
+//!   L1: Pallas conv1d/deconv1d inside the AE encode/decode HLOs
+//!   L2: transformer fwd/bwd + AE train-step HLOs
+//!   L3: ring-allreduce latent exchange, EF memories, ledger, scheduler
+//!
+//! Scale note (DESIGN.md §2): the paper-scale model would be ~100M params;
+//! CPU-PJRT interpret throughput pins this driver at transformer_mini
+//! (~0.4M params). Structure, not scale, is what this run validates.
+//!
+//!   cargo run --release --example train_e2e [steps]
+
+use lgc::config::{Method, TrainConfig};
+use lgc::coordinator;
+use lgc::metrics::Csv;
+use lgc::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let engine = Engine::open_default()?;
+
+    let mut csv = Csv::new(
+        "results/e2e_transformer.csv",
+        &["method", "iter", "train_loss", "train_acc"],
+    );
+    let mut finals = Vec::new();
+
+    for method in [Method::LgcRar, Method::Baseline] {
+        let cfg = TrainConfig {
+            model: "transformer_mini".into(),
+            method,
+            nodes: 4,
+            steps,
+            lr: 0.05,
+            eval_every: (steps / 10).max(10),
+            verbose: true,
+            ..Default::default()
+        }
+        .scaled_phases();
+        println!(
+            "\n=== e2e: transformer_mini ({} params), {} nodes, {} steps, {} ===",
+            engine.manifest.model("transformer_mini").n_params,
+            cfg.nodes,
+            cfg.steps,
+            method.name()
+        );
+        let r = coordinator::train(&engine, cfg)?;
+        for p in &r.curve {
+            csv.row(&[
+                method.name().into(),
+                p.iter.to_string(),
+                format!("{}", p.train_loss),
+                format!("{}", p.train_acc),
+            ]);
+        }
+        println!(
+            "{}: loss {:.4} -> {:.4} | eval acc {:.4} | {:.4} MB/iter/node | CR {:.0}x",
+            method.name(),
+            r.curve.first().unwrap().train_loss,
+            r.final_train_loss(),
+            r.final_eval.1,
+            r.info_size_mb(),
+            r.compression_ratio()
+        );
+        finals.push((method, r));
+    }
+    csv.finish()?;
+    println!("\nloss curves -> results/e2e_transformer.csv");
+
+    // The e2e acceptance criterion: LGC must track the baseline's loss
+    // trajectory (within a tolerance band) at a far lower rate.
+    let (lgc, base) = (&finals[0].1, &finals[1].1);
+    let gap = lgc.final_train_loss() - base.final_train_loss();
+    println!(
+        "final-loss gap LGC vs baseline: {gap:+.4} (paper: <=0.2); \
+         rate reduction {:.0}x",
+        lgc.compression_ratio()
+    );
+    Ok(())
+}

@@ -1,0 +1,279 @@
+"""AOT pipeline: lower every entry point to HLO text + write the manifest.
+
+python runs ONCE (`make artifacts`); after that the rust binary is
+self-contained.  Interchange is HLO *text*, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` crate binds) rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Modules emitted (see DESIGN.md §5-6):
+  {model}_grad_step        (params..., x, y) -> (loss, acc, grads...)
+  {model}_eval             (params..., x, y) -> (loss, acc)
+  {model}_sparsify         (g, acc, thr)     -> (g_sp, acc')   [mid params]
+  ae_enc_{mu}              (enc..., g (1,mu))            -> latent
+  ae_dec_rar_{mu}          (dec..., latent)              -> rec (1,mu)
+  ae_dec_ps_{mu}           (dec..., latent, innov (1,mu))-> rec (1,mu)
+  ae_train_rar_{mu}_k{K}   (enc..., dec..., grads (K,mu), lr)
+                           -> (enc'..., dec'..., loss)
+  ae_train_ps_{mu}_k{K}    (enc..., decs(K-stacked)..., grads, innovs,
+                            ridx, lr, lam1, lam2)
+                           -> (enc'..., decs'..., rec_loss, sim_loss)
+
+manifest.json records every module's I/O shapes/dtypes plus the model and
+autoencoder metadata the rust side needs (param shapes for He-init replay,
+per-param layer indices for the info-plane analysis and the first/last
+layer rules, mu / eligible-parameter bookkeeping).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import autoencoder as ae
+from .kernels.sparsify import sparsify_pallas
+from .models import MODELS
+
+# (model, K) pairs that actually run LGC in the experiment suite
+# (DESIGN.md §5).  Info-plane-only configs (K=16/22) need no autoencoder.
+AE_CONFIGS = {
+    "convnet5": [2, 4],
+    "resnet_mini": [2, 4, 8],
+    "resnet_mini_deep": [4],
+    "segnet_mini": [2],
+    "transformer_mini": [4],
+}
+ALPHA = 1e-3          # top-k sparsity (paper: alpha = 0.1%)
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dt(dtype) -> str:
+    return {jnp.float32: "f32", jnp.int32: "i32"}[dtype]
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.modules = {}
+
+    def emit(self, name: str, fn, in_specs):
+        """Lower fn(*in_specs) and record the module in the manifest."""
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        flat_out, _ = jax.tree_util.tree_flatten(out_avals)
+        self.modules[name] = {
+            "file": fname,
+            "inputs": [list(s.shape) for s in in_specs],
+            "input_dtypes": [_dt(s.dtype.type) for s in in_specs],
+            "outputs": [list(a.shape) for a in flat_out],
+            "output_dtypes": [_dt(a.dtype.type) for a in flat_out],
+        }
+        print(f"  {name}: {len(in_specs)} in / {len(flat_out)} out, "
+              f"{len(text)/1e6:.2f} MB hlo", flush=True)
+
+
+def pad16(x: int) -> int:
+    return max(16, ((x + 15) // 16) * 16)
+
+
+def model_meta(m):
+    """Split params into first-layer / middle / last-layer groups (§VI-A)."""
+    last_layer = max(m.layer_of_param)
+    first_idx = [i for i, l in enumerate(m.layer_of_param) if l == 0]
+    last_idx = [i for i, l in enumerate(m.layer_of_param) if l == last_layer]
+    mid_idx = [i for i, l in enumerate(m.layer_of_param)
+               if l not in (0, last_layer)]
+    sz = lambda s: int(jnp.prod(jnp.array(s))) if s else 1
+    n_mid = sum(sz(m.param_shapes()[i]) for i in mid_idx)
+    mu = pad16(int(-(-ALPHA * n_mid // 1)))  # ceil then pad to DOWN multiple
+    return {
+        "params": [list(s) for s in m.param_shapes()],
+        "layer_of_param": list(m.layer_of_param),
+        "n_params": m.n_params(),
+        "n_mid": n_mid,
+        "mu": mu,
+        "first_param_idx": first_idx,
+        "mid_param_idx": mid_idx,
+        "last_param_idx": last_idx,
+        "batch": m.batch,
+        "input_shape": list(m.input_shape),
+        "input_dtype": m.input_dtype,
+        "num_classes": m.num_classes,
+        "grad_step": f"{m.name}_grad_step",
+        "evaluate": f"{m.name}_eval",
+        "sparsify": f"{m.name}_sparsify",
+    }
+
+
+def io_specs(m):
+    """(param_specs, x_spec, y_spec) for a model's grad_step/eval."""
+    batch = m.batch
+    if m.input_dtype == "i32":
+        x_spec = spec((batch,) + tuple(m.input_shape), I32)
+        y_spec = spec((batch,) + tuple(m.input_shape), I32)
+    elif m.name == "segnet_mini":
+        x_spec = spec((batch,) + tuple(m.input_shape))
+        y_spec = spec((batch, m.input_shape[0] * m.input_shape[1]), I32)
+    else:
+        x_spec = spec((batch,) + tuple(m.input_shape))
+        y_spec = spec((batch,), I32)
+    return [spec(s) for s in m.param_shapes()], x_spec, y_spec
+
+
+def emit_model(em: Emitter, m):
+    n_p = len(m.param_shapes())
+    p_specs, x_spec, y_spec = io_specs(m)
+
+    def grad_step(*args):
+        params, x, y = list(args[:n_p]), args[n_p], args[n_p + 1]
+        loss, acc, grads = m.grad_step(params, x, y)
+        return (loss, acc, *grads)
+
+    def evaluate(*args):
+        params, x, y = list(args[:n_p]), args[n_p], args[n_p + 1]
+        return m.evaluate(params, x, y)
+
+    em.emit(f"{m.name}_grad_step", grad_step, p_specs + [x_spec, y_spec])
+    em.emit(f"{m.name}_eval", evaluate, p_specs + [x_spec, y_spec])
+
+    meta = model_meta(m)
+    n_mid = meta["n_mid"]
+    em.emit(f"{m.name}_sparsify", sparsify_pallas,
+            [spec((n_mid,)), spec((n_mid,)), spec((1,))])
+    return meta
+
+
+def emit_ae(em: Emitter, mu: int, ks):
+    enc_shapes = ae.enc_param_shapes()
+    dec_shapes_rar = ae.dec_param_shapes(ps=False)
+    dec_shapes_ps = ae.dec_param_shapes(ps=True)
+    ne, nr, np_ = len(enc_shapes), len(dec_shapes_rar), len(dec_shapes_ps)
+    lat = (ae.LATENT_CH, mu // ae.DOWN)
+
+    def enc(*args):
+        return (ae.encode(list(args[:ne]), args[ne]),)
+
+    em.emit(f"ae_enc_{mu}", enc, [spec(s) for s in enc_shapes] + [spec((1, mu))])
+
+    def dec_rar(*args):
+        return (ae.decode(list(args[:nr]), args[nr]),)
+
+    em.emit(f"ae_dec_rar_{mu}", dec_rar,
+            [spec(s) for s in dec_shapes_rar] + [spec(lat)])
+
+    def dec_ps(*args):
+        return (ae.decode(list(args[:np_]), args[np_], args[np_ + 1]),)
+
+    em.emit(f"ae_dec_ps_{mu}", dec_ps,
+            [spec(s) for s in dec_shapes_ps] + [spec(lat), spec((1, mu))])
+
+    variants = {"enc": f"ae_enc_{mu}", "dec_rar": f"ae_dec_rar_{mu}",
+                "dec_ps": f"ae_dec_ps_{mu}", "train_rar": {}, "train_ps": {}}
+
+    for k in ks:
+        def train_rar(*args, _k=k):
+            ep = list(args[:ne])
+            dp = list(args[ne:ne + nr])
+            grads, lr = args[ne + nr], args[ne + nr + 1]
+            ep2, dp2, loss = ae.rar_train_step(ep, dp, grads, lr)
+            return (*ep2, *dp2, loss)
+
+        em.emit(f"ae_train_rar_{mu}_k{k}", train_rar,
+                [spec(s) for s in enc_shapes] +
+                [spec(s) for s in dec_shapes_rar] +
+                [spec((k, mu)), spec((), F32)])
+
+        def train_ps(*args, _k=k):
+            ep = list(args[:ne])
+            dps = list(args[ne:ne + np_])
+            grads, innovs, ridx, lr, lam1, lam2 = args[ne + np_:]
+            ep2, dps2, rec, sim = ae.ps_train_step(
+                ep, dps, grads, innovs, ridx, lr, lam1, lam2)
+            return (*ep2, *dps2, rec, sim)
+
+        em.emit(f"ae_train_ps_{mu}_k{k}", train_ps,
+                [spec(s) for s in enc_shapes] +
+                [spec((k,) + tuple(s)) for s in dec_shapes_ps] +
+                [spec((k, mu)), spec((k, mu)), spec((), I32),
+                 spec((), F32), spec((), F32), spec((), F32)])
+
+        variants["train_rar"][str(k)] = f"ae_train_rar_{mu}_k{k}"
+        variants["train_ps"][str(k)] = f"ae_train_ps_{mu}_k{k}"
+    return variants
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip cleanly."""
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated model subset (debugging)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    em = Emitter(args.out)
+    manifest = {"version": 1, "alpha": ALPHA, "models": {}, "ae": {
+        "enc_shapes": [list(s) for s in ae.enc_param_shapes()],
+        "dec_shapes_rar": [list(s) for s in ae.dec_param_shapes(ps=False)],
+        "dec_shapes_ps": [list(s) for s in ae.dec_param_shapes(ps=True)],
+        "latent_ch": ae.LATENT_CH,
+        "down": ae.DOWN,
+        "variants": {},
+    }}
+
+    names = list(MODELS) if not args.only else args.only.split(",")
+    mus = {}
+    for name in names:
+        print(f"model {name}:", flush=True)
+        meta = emit_model(em, MODELS[name])
+        manifest["models"][name] = meta
+        mus.setdefault(meta["mu"], set()).update(AE_CONFIGS.get(name, []))
+
+    for mu, ks in sorted(mus.items()):
+        if not ks:
+            continue
+        print(f"autoencoder mu={mu} K={sorted(ks)}:", flush=True)
+        manifest["ae"]["variants"][str(mu)] = emit_ae(em, mu, sorted(ks))
+
+    manifest["modules"] = em.modules
+    manifest["fingerprint"] = source_fingerprint()
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(em.modules)} modules + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""L2: the LGC gradient-compression autoencoders (paper §IV, Tables I & II).
+
+Two instances, matching the two communication patterns:
+
+  * PS  (§IV-A, "decoupling"): one shared encoder E_c, K per-node decoders
+    D_c^k.  The decoder receives the compressed common representation g^c
+    plus the node's *innovation* vector (dense-scattered top-10%-of-top-k),
+    concatenated as an extra channel before the final 1x1 conv.
+    Training loss: lambda1 * L_rec + lambda2 * L_sim   (eqs. 5-7).
+  * RAR (§IV-B, "aggregation"): one shared encoder + one shared decoder;
+    the K latents are averaged and the decoder reconstructs the *average*
+    gradient (eqs. 8-11).
+
+Architecture (paper Table I/II, one documented deviation — DESIGN.md §7):
+  encoder: conv(64,k3,s2) conv(128,k3,s2) conv(256,k3,s2) conv(64,k3,s2)
+           conv(4,k1,s1), leaky-relu between layers  ->  latent (4, mu/16)
+  decoder: deconv(4,k3,s1) deconv(32,k3,s2) deconv(64,k3,s2)
+           deconv(128,k3,s2) deconv(32,k3,s2) [concat innovation] conv(1,k1)
+
+All convs are the L1 Pallas kernels (kernels/conv1d.py, deconv1d.py), so
+every entry point lowered by aot.py carries the kernels in its HLO.
+
+Parameter layout (the flat order the rust runtime uses, see aot.py):
+  encoder: [w1, b1, ..., w5, b5]                          (10 arrays)
+  decoder: [w1, b1, ..., w5, b5, wf, bf]                  (12 arrays)
+PS decoders are stacked along a leading K axis (same 12 arrays, K-leading).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv1d, deconv1d
+from .kernels.ref import leaky_relu
+
+# (cout, cin, k, stride) per layer.
+ENC_SPEC = [
+    (64, 1, 3, 2),
+    (128, 64, 3, 2),
+    (256, 128, 3, 2),
+    (64, 256, 3, 2),
+    (4, 64, 1, 1),
+]
+# Five deconvs; the first is stride-1 (paper's Table II lists five stride-2
+# deconvs, which cannot invert a 16x-downsampling encoder — DESIGN.md §7).
+DEC_SPEC = [
+    (4, 4, 3, 1),
+    (32, 4, 3, 2),
+    (64, 32, 3, 2),
+    (128, 64, 3, 2),
+    (32, 128, 3, 2),
+]
+LATENT_CH = 4
+DOWN = 16  # total encoder downsampling; mu must be a multiple of this.
+
+
+def enc_param_shapes():
+    shapes = []
+    for cout, cin, k, _ in ENC_SPEC:
+        shapes += [(cout, cin, k), (cout,)]
+    return shapes
+
+
+def dec_param_shapes(ps: bool):
+    """ps=True adds the innovation channel to the final 1x1 conv input."""
+    shapes = []
+    for cout, cin, k, _ in DEC_SPEC:
+        shapes += [(cout, cin, k), (cout,)]
+    final_cin = DEC_SPEC[-1][0] + (1 if ps else 0)
+    shapes += [(1, final_cin, 1), (1,)]
+    return shapes
+
+
+def init_params(shapes, key):
+    """He-normal init (fan-in = prod of all dims but the first for weights)."""
+    params = []
+    for shape in shapes:
+        key, sub = jax.random.split(key)
+        if len(shape) > 1:
+            fan_in = 1
+            for d in shape[1:]:
+                fan_in *= d
+            params.append(jax.random.normal(sub, shape, jnp.float32)
+                          * jnp.sqrt(2.0 / fan_in))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def encode(enc_params, g):
+    """g (1, mu) -> latent (4, mu/16).  E_c of eqs. (3)/(8)."""
+    h = g
+    for i, (_, _, _, stride) in enumerate(ENC_SPEC):
+        w, b = enc_params[2 * i], enc_params[2 * i + 1]
+        h = conv1d(h, w, b, stride)
+        if i < len(ENC_SPEC) - 1:
+            h = leaky_relu(h)
+    return h
+
+
+def decode(dec_params, latent, innovation=None):
+    """latent (4, mu/16) [+ innovation (1, mu)] -> g_rec (1, mu).
+
+    innovation != None selects the PS decoder D_c^k (eq. 4): the dense
+    innovation vector is concatenated as an extra channel before the final
+    1x1 conv, exactly as Fig. 5(a) describes.
+    """
+    h = latent
+    for i, (_, _, _, stride) in enumerate(DEC_SPEC):
+        w, b = dec_params[2 * i], dec_params[2 * i + 1]
+        h = deconv1d(h, w, b, stride)
+        h = leaky_relu(h)
+    if innovation is not None:
+        h = jnp.concatenate([h, innovation], axis=0)
+    wf, bf = dec_params[-2], dec_params[-1]
+    return conv1d(h, wf, bf, 1)
+
+
+def _sgd(params, grads, lr):
+    return [p - lr * g for p, g in zip(params, grads)]
+
+
+# ---------------------------------------------------------------------------
+# RAR train step (eq. 11): decoder targets the average gradient.
+# ---------------------------------------------------------------------------
+
+def rar_train_step(enc_params, dec_params, grads, lr):
+    """grads (K, mu).  Returns (enc', dec', rec_loss)."""
+    k_nodes = grads.shape[0]
+
+    def loss_fn(ep, dp):
+        latents = [encode(ep, grads[k][None, :]) for k in range(k_nodes)]
+        lat_avg = sum(latents) / float(k_nodes)
+        rec = decode(dp, lat_avg)[0]
+        target = jnp.mean(grads, axis=0)
+        # Mean (not the paper's sum): keeps the SGD step size independent
+        # of mu and K, which the fixed lr=1e-3 of SS VI-A requires once
+        # inputs are RMS-normalized (see rust compress/autoencoder.rs).
+        return jnp.mean((rec - target) ** 2)
+
+    loss, (g_enc, g_dec) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+        enc_params, dec_params)
+    return _sgd(enc_params, g_enc, lr), _sgd(dec_params, g_dec, lr), loss
+
+
+# ---------------------------------------------------------------------------
+# PS train step (eqs. 5-7): K decoders, similarity + reconstruction loss.
+# ---------------------------------------------------------------------------
+
+def ps_train_step(enc_params, dec_params_stacked, grads, innovations, ridx,
+                  lr, lam1, lam2):
+    """grads, innovations: (K, mu); dec_params_stacked: 12 arrays, K-leading.
+
+    ridx (traced i32 scalar) picks which node's encoding is used as the
+    common representation this iteration (the paper chooses randomly; the
+    rust coordinator draws it and passes it in).
+    Returns (enc', decs', rec_loss, sim_loss).
+    """
+    k_nodes = grads.shape[0]
+
+    def loss_fn(ep, dps):
+        encs = [encode(ep, grads[k][None, :]) for k in range(k_nodes)]
+        sim = 0.0
+        npairs = max(k_nodes * (k_nodes - 1) // 2, 1)
+        for a in range(k_nodes):
+            for b in range(a + 1, k_nodes):
+                sim = sim + jnp.mean((encs[a] - encs[b]) ** 2)
+        sim = sim / npairs  # mean over pairs (scale-stable; see rar note)
+        enc_stack = jnp.stack(encs)                       # (K, 4, mu/16)
+        g_common = jnp.take(enc_stack, ridx, axis=0)      # dynamic choice
+        rec = 0.0
+        for k in range(k_nodes):
+            dp_k = [p[k] for p in dps]
+            rec_k = decode(dp_k, g_common, innovations[k][None, :])[0]
+            rec = rec + jnp.mean((rec_k - grads[k]) ** 2)
+        rec = rec / k_nodes
+        return lam1 * rec + lam2 * sim, (rec, sim)
+
+    (_, (rec, sim)), (g_enc, g_dec) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True)(enc_params, dec_params_stacked)
+    return (_sgd(enc_params, g_enc, lr), _sgd(dec_params_stacked, g_dec, lr),
+            rec, sim)

@@ -1,0 +1,15 @@
+"""L1 Pallas kernels for the LGC compute hot-spot + their jnp oracles.
+
+conv1d   — strided 1-D conv (encoder layers, paper Table I)
+deconv1d — stride-2 transposed 1-D conv (decoder layers, paper Table II)
+sparsify — fused threshold-sparsify + error-feedback update (Algorithm 1)
+ref      — pure-jnp oracles; the single correctness contract for all three
+"""
+
+from .conv1d import conv1d, conv1d_pallas
+from .deconv1d import deconv1d, deconv1d_pallas
+from .sparsify import sparsify_pallas
+from . import ref
+
+__all__ = ["conv1d", "conv1d_pallas", "deconv1d", "deconv1d_pallas",
+           "sparsify_pallas", "ref"]

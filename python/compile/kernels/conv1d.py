@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: strided 1-D convolution (LGC autoencoder hot-spot).
+
+The LGC encoder (paper Table I) is five 1-D convolutions over the
+sparsified-gradient vector; at steady state (phase 3) this runs on every
+node at every training iteration, so it is the compute hot path of the
+whole system.  The kernel is written for the TPU mental model:
+
+  * the weight tensor (cout, cin, k) is tiny (<=256x128x3 f32 ~ 384 KB) and
+    is pinned whole in VMEM for every grid step;
+  * the output is tiled along the length dimension; each grid step produces
+    one (cout, TILE) tile with a single (cout x cin*k) @ (cin*k x TILE)
+    contraction, which is the shape the MXU systolic array wants (the
+    paper's GPU formulation was a cuDNN conv; a pointwise CUDA-style port
+    would waste the MXU — see DESIGN.md §Hardware-Adaptation);
+  * the input row is small (mu <= a few thousand floats), so it is kept
+    fully VMEM-resident and each grid step dynamic-slices its stride-2
+    window out of it.  On a real TPU with large mu the x BlockSpec would
+    stream overlapping halo tiles instead; the schedule is documented in
+    DESIGN.md §9.
+
+interpret=True always: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+
+Differentiation: pallas_call has no autodiff rule, so `conv1d` is wrapped
+in jax.custom_vjp with the backward pass derived from the pure-jnp oracle
+(kernels/ref.py) via jax.vjp — correct by construction given fwd parity,
+which pytest asserts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_SLOPE = 0.01  # leaky-relu negative slope (shared with ref.leaky_relu)
+
+
+def _pick_tile(n_out: int, cap: int = 128) -> int:
+    """Largest divisor of n_out that is <= cap (grid must tile exactly)."""
+    for t in range(min(cap, n_out), 0, -1):
+        if n_out % t == 0:
+            return t
+    return 1
+
+
+def _conv1d_kernel(x_ref, w_ref, b_ref, o_ref, *, stride, k, pad, tile, fuse_act):
+    """One grid step: compute a (cout, tile) output tile.
+
+    cols[c, j, t] = xpad[c, stride*(j0 + j) + t]  gathered with strided
+    slices, then contracted against w as an einsum -> MXU-shaped GEMM.
+    """
+    j0 = pl.program_id(0)
+    x = x_ref[...]                      # (cin, n), VMEM-resident
+    w = w_ref[...]                      # (cout, cin, k)
+    b = b_ref[...]                      # (cout,)
+    cin = x.shape[0]
+    xp = jnp.pad(x, ((0, 0), (pad, pad)))
+    span = (tile - 1) * stride + k      # input window feeding this tile
+    win = jax.lax.dynamic_slice(xp, (0, j0 * tile * stride), (cin, span))
+    # (cin, tile, k): one strided slice per tap.
+    cols = jnp.stack(
+        [jax.lax.slice(win, (0, t), (cin, t + (tile - 1) * stride + 1), (1, stride))
+         for t in range(k)],
+        axis=-1,
+    )
+    z = jnp.einsum("ock,ctk->ot", w, cols, preferred_element_type=jnp.float32)
+    z = z + b[:, None]
+    if fuse_act:
+        z = jnp.where(z >= 0, z, _SLOPE * z)
+    o_ref[...] = z.astype(o_ref.dtype)
+
+
+def conv1d_pallas(x, w, b, stride: int, fuse_act: bool = False):
+    """Forward-only Pallas conv1d.  x (cin, n) -> (cout, n_out)."""
+    cin, n = x.shape
+    cout, cin_w, k = w.shape
+    assert cin == cin_w, (cin, cin_w)
+    assert k in (1, 3) and stride in (1, 2), (k, stride)
+    pad = 1 if k == 3 else 0
+    n_out = ref.conv1d_out_len(n, k, stride)
+    tile = _pick_tile(n_out)
+    kernel = functools.partial(
+        _conv1d_kernel, stride=stride, k=k, pad=pad, tile=tile, fuse_act=fuse_act
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_out // tile,),
+        in_specs=[
+            pl.BlockSpec((cin, n), lambda j: (0, 0)),        # x: pinned whole
+            pl.BlockSpec((cout, cin, k), lambda j: (0, 0, 0)),  # w: pinned whole
+            pl.BlockSpec((cout,), lambda j: (0,)),           # b: pinned whole
+        ],
+        out_specs=pl.BlockSpec((cout, tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((cout, n_out), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: fwd = Pallas kernel, bwd = vjp of the jnp oracle.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def conv1d(x, w, b, stride: int):
+    """Differentiable strided conv1d whose forward pass is the Pallas kernel."""
+    return conv1d_pallas(x, w, b, stride)
+
+
+def _conv1d_fwd(x, w, b, stride):
+    return conv1d_pallas(x, w, b, stride), (x, w, b)
+
+
+def _conv1d_bwd(stride, res, dz):
+    x, w, b = res
+    _, vjp = jax.vjp(lambda x_, w_, b_: ref.conv1d(x_, w_, b_, stride), x, w, b)
+    return vjp(dz)
+
+
+conv1d.defvjp(_conv1d_fwd, _conv1d_bwd)

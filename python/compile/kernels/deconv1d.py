@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: stride-2 transposed 1-D convolution (LGC decoder).
+
+The LGC decoder (paper Table II) upsamples the 4-channel latent back to the
+mu-length gradient vector with stride-2 transposed convs.  The kernel
+realizes the transpose as zero-interleave + stride-1 k3 conv, entirely in
+VMEM:
+
+  xz (cin, 2n+2), xz[:, 2i+1] = x[:, i]        (zero-interleave, pad 1/2)
+  out[o, j] = b[o] + sum_{c,t} w[o, c, t] * xz[c, j + t],  j in [0, 2n)
+
+which matches lax.conv_general_dilated(lhs_dilation=2, padding=(1,2)) —
+the oracle in kernels/ref.py.  Tiling mirrors conv1d.py: weights pinned in
+VMEM, output tiled along length, one MXU-shaped einsum per grid step.
+
+stride == 1 (first decoder layer) delegates to the conv1d kernel.
+
+Differentiation: custom_vjp with the backward derived from the oracle,
+same scheme as conv1d.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .conv1d import _pick_tile, conv1d
+
+
+def _deconv1d_kernel(x_ref, w_ref, b_ref, o_ref, *, tile):
+    j0 = pl.program_id(0)
+    x = x_ref[...]                        # (cin, n)
+    w = w_ref[...]                        # (cout, cin, 3)
+    b = b_ref[...]
+    cin, n = x.shape
+    # Zero-interleave with the (1, 2) padding baked in: length 2n + 2,
+    # values at odd positions 1, 3, ..., 2n-1.
+    xz = jnp.zeros((cin, 2 * n + 2), x.dtype)
+    xz = xz.at[:, 1:2 * n:2].set(x)
+    win = jax.lax.dynamic_slice(xz, (0, j0 * tile), (cin, tile + 2))
+    cols = jnp.stack([win[:, t:t + tile] for t in range(3)], axis=-1)  # (cin, tile, 3)
+    z = jnp.einsum("ock,ctk->ot", w, cols, preferred_element_type=jnp.float32)
+    o_ref[...] = (z + b[:, None]).astype(o_ref.dtype)
+
+
+def deconv1d_pallas(x, w, b, stride: int):
+    """Forward-only Pallas transposed conv1d.  x (cin, n) -> (cout, 2n)."""
+    if stride == 1:
+        # First decoder layer is stride-1 "SAME"; reuse the conv kernel.
+        from .conv1d import conv1d_pallas
+
+        return conv1d_pallas(x, w, b, 1)
+    cin, n = x.shape
+    cout, cin_w, k = w.shape
+    assert cin == cin_w and k == 3 and stride == 2, (x.shape, w.shape, stride)
+    n_out = 2 * n
+    tile = _pick_tile(n_out)
+    kernel = functools.partial(_deconv1d_kernel, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_out // tile,),
+        in_specs=[
+            pl.BlockSpec((cin, n), lambda j: (0, 0)),
+            pl.BlockSpec((cout, cin, k), lambda j: (0, 0, 0)),
+            pl.BlockSpec((cout,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((cout, tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((cout, n_out), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def deconv1d(x, w, b, stride: int):
+    """Differentiable transposed conv1d; forward pass is the Pallas kernel."""
+    return deconv1d_pallas(x, w, b, stride)
+
+
+def _deconv1d_fwd(x, w, b, stride):
+    return deconv1d_pallas(x, w, b, stride), (x, w, b)
+
+
+def _deconv1d_bwd(stride, res, dz):
+    x, w, b = res
+    _, vjp = jax.vjp(lambda x_, w_, b_: ref.deconv1d(x_, w_, b_, stride), x, w, b)
+    return vjp(dz)
+
+
+deconv1d.defvjp(_deconv1d_fwd, _deconv1d_bwd)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact functional twin here,
+implemented with stock jax.lax / jnp primitives.  pytest (python/tests/)
+sweeps shapes and dtypes with hypothesis and asserts allclose between the
+kernel (interpret=True) and these oracles.  The custom-vjp backward passes
+of the kernels are *derived* from these oracles via jax.vjp, so matching
+forward semantics here is the single correctness contract.
+
+Conventions (shared with conv1d.py / deconv1d.py):
+  x : (cin, n)        channel-major 1-D signal
+  w : (cout, cin, k)  k in {1, 3}
+  b : (cout,)
+  stride 2 convs use padding (1, 1)  -> n_out = n // 2   (n even)
+  stride 1 k3 convs use padding (1, 1) -> n_out = n      ("SAME")
+  stride 1 k1 convs use no padding     -> n_out = n
+  stride 2 deconvs use lhs_dilation=2, padding (1, 2) -> n_out = 2 * n
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv1d_out_len(n: int, k: int, stride: int) -> int:
+    """Output length of conv1d under the padding conventions above."""
+    pad = 2 if k == 3 else 0
+    return (n + pad - k) // stride + 1
+
+
+def conv1d(x, w, b, stride: int):
+    """Reference strided 1-D convolution (cross-correlation), channel-major.
+
+    out[o, j] = b[o] + sum_{c,t} w[o, c, t] * xpad[c, stride*j + t]
+    """
+    k = w.shape[2]
+    pad = (1, 1) if k == 3 else (0, 0)
+    # lax conv wants NCH; add a unit batch dim.
+    out = jax.lax.conv_general_dilated(
+        x[None, :, :].astype(jnp.float32),
+        # OIH layout: (cout, cin, k)
+        w.astype(jnp.float32),
+        window_strides=(stride,),
+        padding=[pad],
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    )[0]
+    return out + b[:, None]
+
+
+def deconv1d(x, w, b, stride: int):
+    """Reference transposed 1-D convolution.
+
+    stride == 2: zero-interleave the input (values at odd positions of a
+    (cin, 2n+2) buffer), then run a k=3, stride-1 valid conv -> (cout, 2n).
+    Equivalent to lax lhs_dilation=2 with padding (1, 2).
+    stride == 1: plain "SAME" k3 conv (used by the first decoder layer).
+    """
+    if stride == 1:
+        return conv1d(x, w, b, 1)
+    out = jax.lax.conv_general_dilated(
+        x[None, :, :].astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1,),
+        padding=[(1, 2)],
+        lhs_dilation=(2,),
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    )[0]
+    return out + b[:, None]
+
+
+def leaky_relu(x, slope: float = 0.01):
+    """LeakyReLU used between autoencoder layers (paper cites [52])."""
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def sparsify(g, acc, thr):
+    """Reference fused sparsify + error-feedback update (Algorithm 1 core).
+
+    u      = g + acc                   (gradient + locally accumulated residual)
+    mask   = |u| >= thr
+    g_sp   = u * mask                  (the transmitted sparse gradient)
+    acc'   = u * (1 - mask)            (residual kept for the next iteration)
+    """
+    u = g + acc
+    mask = (jnp.abs(u) >= thr).astype(u.dtype)
+    return u * mask, u * (1.0 - mask)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: fused threshold-sparsify + error-feedback update.
+
+The inner loop of Algorithm 1 (both communication patterns):
+
+    u    = grad + acc            # add back the accumulated residual
+    mask = |u| >= thr
+    g_sp = u * mask              # transmitted sparse gradient
+    acc' = u * (1 - mask)        # residual carried to the next iteration
+
+Fusing the three elementwise passes into one kernel halves HBM traffic on
+the full-length gradient vector (read g, read acc, write g_sp, write acc'
+— versus two separate mask/select passes).  The threshold is computed by
+the rust coordinator (exact top-k selection, see rust/src/compress/topk.rs)
+and passed as a (1,)-shaped operand.
+
+Tiled along the vector; purely elementwise, so each grid step touches one
+(TILE,) block of each operand — no halos, no pinned tensors.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv1d import _pick_tile
+
+
+def _sparsify_kernel(g_ref, acc_ref, thr_ref, gsp_ref, acc_out_ref):
+    u = g_ref[...] + acc_ref[...]
+    thr = thr_ref[0]
+    keep = jnp.abs(u) >= thr
+    gsp_ref[...] = jnp.where(keep, u, 0.0).astype(gsp_ref.dtype)
+    acc_out_ref[...] = jnp.where(keep, 0.0, u).astype(acc_out_ref.dtype)
+
+
+def sparsify_pallas(g, acc, thr):
+    """g, acc: (n,); thr: (1,) -> (g_sparse, acc_next), both (n,)."""
+    (n,) = g.shape
+    assert acc.shape == (n,) and thr.shape == (1,)
+    tile = _pick_tile(n, cap=1024)
+    return pl.pallas_call(
+        _sparsify_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda j: (j,)),
+            pl.BlockSpec((tile,), lambda j: (j,)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda j: (j,)),
+            pl.BlockSpec((tile,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), g.dtype),
+            jax.ShapeDtypeStruct((n,), g.dtype),
+        ],
+        interpret=True,
+    )(g, acc, thr)

@@ -1,0 +1,17 @@
+"""L2 registry facade: primary models + LGC autoencoder entry points.
+
+The rust coordinator never imports python; everything it needs is lowered
+by aot.py into artifacts/*.hlo.txt and described in artifacts/manifest.json.
+This module just re-exports the pieces aot.py lowers:
+
+  models.MODELS[name].grad_step / evaluate      (per-node compute)
+  autoencoder.encode / decode / *_train_step    (LGC compressor, §IV)
+  kernels.*                                     (L1 Pallas hot-spots)
+"""
+
+from . import autoencoder
+from .models import MODELS
+from .kernels import conv1d, deconv1d, sparsify_pallas, ref
+
+__all__ = ["MODELS", "autoencoder", "conv1d", "deconv1d", "sparsify_pallas",
+           "ref"]

@@ -1,0 +1,41 @@
+"""L2 primary models (the networks being trained in a distributed manner).
+
+Scaled-down stand-ins for the paper's workloads (DESIGN.md §2):
+
+  convnet5        — 5-conv CNN + fc        (paper's ConvNet5, §VI-E)
+  resnet_mini     — residual CNN, 2 blocks/stage  (ResNet50 stand-in)
+  resnet_mini_deep— residual CNN, 3 blocks/stage  (ResNet101 stand-in)
+  segnet_mini     — encoder-decoder dense predictor (PSPNet stand-in)
+  transformer_mini— decoder-only LM (e2e driver workload)
+  vgg11_mini      — 11-conv VGG (paper's VGG11, §VI-E / Fig. 12)
+
+Every model exposes the same flat-parameter interface consumed by aot.py
+and the rust runtime:
+
+  spec = MODELS[name]
+  spec.param_shapes()            -> [shape, ...]      (flat order)
+  spec.init(key)                 -> [array, ...]
+  spec.grad_step(params, x, y)   -> (loss, acc, [grad, ...])
+  spec.evaluate(params, x, y)    -> (loss, acc)
+  spec.layer_of_param            -> [layer_idx, ...]  (per param, for the
+                                     per-layer info-plane analysis and the
+                                     first/last-layer exclusion rule §VI-A)
+"""
+
+from .common import ModelSpec
+from .cnn import convnet5_spec
+from .resnet import resnet_mini_spec
+from .segnet import segnet_mini_spec
+from .transformer import transformer_mini_spec
+from .vgg import vgg11_mini_spec
+
+MODELS = {
+    "convnet5": convnet5_spec(),
+    "resnet_mini": resnet_mini_spec(blocks_per_stage=2),
+    "resnet_mini_deep": resnet_mini_spec(blocks_per_stage=3, name="resnet_mini_deep"),
+    "segnet_mini": segnet_mini_spec(),
+    "transformer_mini": transformer_mini_spec(),
+    "vgg11_mini": vgg11_mini_spec(),
+}
+
+__all__ = ["MODELS", "ModelSpec"]

@@ -1,0 +1,52 @@
+"""ConvNet5: the paper's 5-conv custom CNN (§VI-E), BN-free (DESIGN.md §10).
+
+16x16x3 input, 10 classes.  conv(24,s1) conv(32,s2) conv(48,s2) conv(64,s2)
+conv(64,s1) -> global-average-pool -> fc.  ~80K params.
+"""
+
+import jax.numpy as jnp
+
+from .common import ModelSpec, conv2d, softmax_xent_and_acc
+
+_LAYERS = [  # (cin, cout, stride)
+    (3, 24, 1),
+    (24, 32, 2),
+    (32, 48, 2),
+    (48, 64, 2),
+    (64, 64, 1),
+]
+_CLASSES = 10
+
+
+def _shapes():
+    shapes, layer_of = [], []
+    for li, (cin, cout, _) in enumerate(_LAYERS):
+        shapes += [(3, 3, cin, cout), (cout,)]
+        layer_of += [li, li]
+    shapes += [(_LAYERS[-1][1], _CLASSES), (_CLASSES,)]
+    layer_of += [len(_LAYERS), len(_LAYERS)]
+    return shapes, layer_of
+
+
+def _loss_and_acc(params, x, y):
+    h = x
+    for li, (_, _, stride) in enumerate(_LAYERS):
+        w, b = params[2 * li], params[2 * li + 1]
+        h = jnp.maximum(conv2d(h, w, stride) + b, 0.0)
+    h = jnp.mean(h, axis=(1, 2))                      # GAP (B, C)
+    logits = h @ params[-2] + params[-1]
+    return softmax_xent_and_acc(logits, y)
+
+
+def convnet5_spec(batch: int = 16) -> ModelSpec:
+    shapes, layer_of = _shapes()
+    return ModelSpec(
+        name="convnet5",
+        param_shapes_=shapes,
+        layer_of_param=layer_of,
+        input_shape=(16, 16, 3),
+        input_dtype="f32",
+        num_classes=_CLASSES,
+        batch=batch,
+        loss_and_acc=_loss_and_acc,
+    )

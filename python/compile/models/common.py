@@ -1,0 +1,89 @@
+"""Shared plumbing for the flat-parameter model interface."""
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    """A model exposed to aot.py / the rust runtime with flat parameters.
+
+    `loss_and_acc(params, x, y) -> (loss, acc)` is the only model-specific
+    piece; grad_step / evaluate derive from it.
+    """
+
+    name: str
+    param_shapes_: List[Tuple[int, ...]]
+    layer_of_param: List[int]          # layer index per param (info plane)
+    input_shape: Tuple[int, ...]       # per-example, e.g. (16, 16, 3)
+    input_dtype: str                   # "f32" | "i32" (token ids)
+    num_classes: int
+    batch: int
+    loss_and_acc: Callable = None
+
+    def param_shapes(self):
+        return list(self.param_shapes_)
+
+    def n_params(self) -> int:
+        total = 0
+        for s in self.param_shapes_:
+            n = 1
+            for d in s:
+                n *= d
+            total += n
+        return total
+
+    def init(self, key):
+        return he_init(self.param_shapes_, key)
+
+    def grad_step(self, params, x, y):
+        """(loss, acc, grads) — the per-node per-iteration HLO entry point."""
+        def f(ps):
+            loss, acc = self.loss_and_acc(ps, x, y)
+            return loss, acc
+        (loss, acc), grads = jax.value_and_grad(f, has_aux=True)(params)
+        return loss, acc, grads
+
+    def evaluate(self, params, x, y):
+        return self.loss_and_acc(params, x, y)
+
+
+def he_init(shapes: Sequence[Tuple[int, ...]], key):
+    """He-normal for weights (rank > 1), zeros for biases (rank 1).
+
+    fan_in = prod(shape[1:]) — the same rule the rust side replays from the
+    manifest so both runtimes produce identically-distributed inits.
+    """
+    params = []
+    for shape in shapes:
+        key, sub = jax.random.split(key)
+        if len(shape) > 1:
+            fan_in = 1
+            for d in shape[1:]:
+                fan_in *= d
+            params.append(jax.random.normal(sub, shape, jnp.float32)
+                          * jnp.sqrt(2.0 / fan_in))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def conv2d(x, w, stride: int = 1):
+    """x (B, H, W, C), w (kh, kw, cin, cout), SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def softmax_xent_and_acc(logits, y):
+    """logits (B, C) or (B, P, C) flattened; y int labels of matching rank."""
+    if logits.ndim == 3:
+        logits = logits.reshape(-1, logits.shape[-1])
+        y = y.reshape(-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc

@@ -1,0 +1,90 @@
+"""resnet_mini / resnet_mini_deep: residual CNNs (ResNet50/101 stand-ins).
+
+Residual element-wise adds are structurally load-bearing for the paper's
+Fig. 4 observation (MI/entropy peaks on layers that follow residual sums),
+so the minis keep the exact block topology: stem conv, three stages of
+basic blocks (two 3x3 convs + identity/projection skip), stride-2 stage
+transitions with 1x1 projection, GAP, fc.
+
+blocks_per_stage=2 -> 15 convs (~0.9M params, "ResNet50" stand-in)
+blocks_per_stage=3 -> 21 convs (~1.3M params, "ResNet101" stand-in)
+"""
+
+import jax.numpy as jnp
+
+from .common import ModelSpec, conv2d, softmax_xent_and_acc
+
+_WIDTHS = [32, 64, 128]
+_CLASSES = 10
+
+
+def _plan(blocks_per_stage):
+    """Emit the conv layer list: (kind, cin, cout, stride) with kinds
+    'stem' | 'a' | 'b' | 'proj'."""
+    plan = [("stem", 3, _WIDTHS[0], 1)]
+    cin = _WIDTHS[0]
+    for si, width in enumerate(_WIDTHS):
+        for bi in range(blocks_per_stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            plan.append(("a", cin, width, stride))
+            plan.append(("b", width, width, 1))
+            if cin != width or stride != 1:
+                plan.append(("proj", cin, width, stride))
+            cin = width
+    return plan
+
+
+def _shapes(blocks_per_stage):
+    shapes, layer_of = [], []
+    for li, (kind, cin, cout, _) in enumerate(_plan(blocks_per_stage)):
+        k = 1 if kind == "proj" else 3
+        shapes += [(k, k, cin, cout), (cout,)]
+        layer_of += [li, li]
+    n_layers = len(_plan(blocks_per_stage))
+    shapes += [(_WIDTHS[-1], _CLASSES), (_CLASSES,)]
+    layer_of += [n_layers, n_layers]
+    return shapes, layer_of
+
+
+def _loss_and_acc_factory(blocks_per_stage):
+    plan = _plan(blocks_per_stage)
+
+    def loss_and_acc(params, x, y):
+        def cv(i, h, stride):
+            return conv2d(h, params[2 * i], stride) + params[2 * i + 1]
+
+        i = 0
+        h = jnp.maximum(cv(0, x, plan[0][3]), 0.0)
+        i = 1
+        while i < len(plan):
+            kind, cin, cout, stride = plan[i]
+            assert kind == "a"
+            z = jnp.maximum(cv(i, h, stride), 0.0)
+            z = cv(i + 1, z, 1)
+            if i + 2 < len(plan) and plan[i + 2][0] == "proj":
+                skip = cv(i + 2, h, stride)
+                i += 3
+            else:
+                skip = h
+                i += 2
+            h = jnp.maximum(z + skip, 0.0)     # the residual sum (Fig. 4)
+        h = jnp.mean(h, axis=(1, 2))
+        logits = h @ params[-2] + params[-1]
+        return softmax_xent_and_acc(logits, y)
+
+    return loss_and_acc
+
+
+def resnet_mini_spec(blocks_per_stage: int = 2, name: str = "resnet_mini",
+                     batch: int = 16) -> ModelSpec:
+    shapes, layer_of = _shapes(blocks_per_stage)
+    return ModelSpec(
+        name=name,
+        param_shapes_=shapes,
+        layer_of_param=layer_of,
+        input_shape=(16, 16, 3),
+        input_dtype="f32",
+        num_classes=_CLASSES,
+        batch=batch,
+        loss_and_acc=_loss_and_acc_factory(blocks_per_stage),
+    )

@@ -1,0 +1,67 @@
+"""segnet_mini: encoder-decoder dense predictor (PSPNet/CamVid stand-in).
+
+24x24x3 input -> per-pixel logits over 8 classes.  Encoder: three convs
+(two stride-2); decoder: two nearest-upsample+conv stages (resize-conv in
+place of transposed conv2d — avoids checkerboard artifacts and keeps the
+jax graph simple); final 1x1 conv classifier.  "Pixel accuracy" is the
+paper's §VI-D metric.
+"""
+
+import jax.numpy as jnp
+
+from .common import ModelSpec, conv2d, softmax_xent_and_acc
+
+_CLASSES = 8
+_ENC = [(3, 32, 2), (32, 64, 2), (64, 64, 1)]   # (cin, cout, stride)
+_DEC = [(64, 48), (48, 32)]                      # upsample x2 then conv
+
+
+def _shapes():
+    shapes, layer_of = [], []
+    li = 0
+    for cin, cout, _ in _ENC:
+        shapes += [(3, 3, cin, cout), (cout,)]
+        layer_of += [li, li]
+        li += 1
+    for cin, cout in _DEC:
+        shapes += [(3, 3, cin, cout), (cout,)]
+        layer_of += [li, li]
+        li += 1
+    shapes += [(1, 1, _DEC[-1][1], _CLASSES), (_CLASSES,)]
+    layer_of += [li, li]
+    return shapes, layer_of
+
+
+def _upsample2(h):
+    b, hh, ww, c = h.shape
+    h = jnp.broadcast_to(h[:, :, None, :, None, :], (b, hh, 2, ww, 2, c))
+    return h.reshape(b, hh * 2, ww * 2, c)
+
+
+def _loss_and_acc(params, x, y):
+    i = 0
+    h = x
+    for _, _, stride in _ENC:
+        h = jnp.maximum(conv2d(h, params[2 * i], stride) + params[2 * i + 1], 0.0)
+        i += 1
+    for _ in _DEC:
+        h = _upsample2(h)
+        h = jnp.maximum(conv2d(h, params[2 * i], 1) + params[2 * i + 1], 0.0)
+        i += 1
+    logits = conv2d(h, params[2 * i], 1) + params[2 * i + 1]  # (B, H, W, C)
+    return softmax_xent_and_acc(logits.reshape(logits.shape[0], -1, _CLASSES),
+                                y)
+
+
+def segnet_mini_spec(batch: int = 8) -> ModelSpec:
+    shapes, layer_of = _shapes()
+    return ModelSpec(
+        name="segnet_mini",
+        param_shapes_=shapes,
+        layer_of_param=layer_of,
+        input_shape=(24, 24, 3),
+        input_dtype="f32",
+        num_classes=_CLASSES,
+        batch=batch,
+        loss_and_acc=_loss_and_acc,
+    )

@@ -1,0 +1,99 @@
+"""transformer_mini: decoder-only LM for the end-to-end driver.
+
+The paper's method is model-agnostic; the e2e example (examples/train_e2e.rs)
+trains this transformer with LGC on a synthetic Markov corpus to prove all
+layers compose on a modern workload.  Sized for CPU-PJRT throughput
+(~0.8M params at the default d_model=128; the paper's ResNet50 scale is a
+documented substitution, DESIGN.md §2).
+
+Pre-LN blocks: LN -> causal MHA -> residual; LN -> MLP(4x, gelu) -> residual;
+learned positional embeddings; weight-tied output head is *not* used (a
+separate unembedding keeps the flat-param interface uniform).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelSpec, softmax_xent_and_acc
+
+_VOCAB = 64
+_SEQ = 32
+_D = 128
+_HEADS = 4
+_LAYERS = 2
+_MLP = 4 * _D
+
+
+def _shapes():
+    shapes, layer_of = [], []
+    shapes += [(_VOCAB, _D)]           # token embedding
+    layer_of += [0]
+    shapes += [(_SEQ, _D)]             # positional embedding
+    layer_of += [0]
+    li = 1
+    for _ in range(_LAYERS):
+        # ln1 scale/bias, wq, wk, wv, wo, ln2 scale/bias, w1, b1, w2, b2
+        shapes += [(_D,), (_D,),
+                   (_D, _D), (_D, _D), (_D, _D), (_D, _D),
+                   (_D,), (_D,),
+                   (_D, _MLP), (_MLP,), (_MLP, _D), (_D,)]
+        layer_of += [li] * 12
+        li += 1
+    shapes += [(_D,), (_D,)]           # final LN
+    layer_of += [li, li]
+    shapes += [(_D, _VOCAB), (_VOCAB,)]  # unembedding
+    layer_of += [li + 1, li + 1]
+    return shapes, layer_of
+
+
+def _ln(h, scale, bias):
+    # (1 + scale) parameterization: the flat-param init rule zeroes all
+    # rank-1 tensors, so the effective initial gain is 1, not 0.
+    m = jnp.mean(h, axis=-1, keepdims=True)
+    v = jnp.var(h, axis=-1, keepdims=True)
+    return (h - m) / jnp.sqrt(v + 1e-5) * (1.0 + scale) + bias
+
+
+def _loss_and_acc(params, x, y):
+    """x (B, S) int32 tokens; y (B, S) int32 next-token targets."""
+    b, s = x.shape
+    it = iter(range(len(params)))
+    p = lambda: params[next(it)]
+    emb, pos = p(), p()
+    h = emb[x] + pos[None, :, :]
+    dh = _D // _HEADS
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    for _ in range(_LAYERS):
+        g1, b1 = p(), p()
+        wq, wk, wv, wo = p(), p(), p(), p()
+        g2, b2 = p(), p()
+        w1, bb1, w2, bb2 = p(), p(), p(), p()
+        z = _ln(h, g1, b1)
+        q = (z @ wq).reshape(b, s, _HEADS, dh)
+        k = (z @ wk).reshape(b, s, _HEADS, dh)
+        v = (z @ wv).reshape(b, s, _HEADS, dh)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(dh))
+        att = jnp.where(mask[None, None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, _D)
+        h = h + o @ wo
+        z = _ln(h, g2, b2)
+        h = h + jax.nn.gelu(z @ w1 + bb1) @ w2 + bb2
+    gf, bf = p(), p()
+    wu, bu = p(), p()
+    logits = _ln(h, gf, bf) @ wu + bu            # (B, S, V)
+    return softmax_xent_and_acc(logits, y)
+
+
+def transformer_mini_spec(batch: int = 8) -> ModelSpec:
+    shapes, layer_of = _shapes()
+    return ModelSpec(
+        name="transformer_mini",
+        param_shapes_=shapes,
+        layer_of_param=layer_of,
+        input_shape=(_SEQ,),
+        input_dtype="i32",
+        num_classes=_VOCAB,
+        batch=batch,
+        loss_and_acc=_loss_and_acc,
+    )

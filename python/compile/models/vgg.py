@@ -1,0 +1,60 @@
+"""vgg11_mini: the paper's VGG11 (§VI-E) — 11 conv layers + fc, scaled.
+
+Used by the Fig. 12 large-scale information-plane experiment (paper:
+VGG11 on Food101 across 16 nodes).  Plain conv stacks with max-pool
+stand-ins realized as stride-2 convs (pooling-free keeps the flat-param
+gradient analysis uniform); ReLU after every conv like the original.
+"""
+
+import jax.numpy as jnp
+
+from .common import ModelSpec, conv2d, softmax_xent_and_acc
+
+# (cin, cout, stride) x 11 — stride-2 where VGG11 max-pools.
+_LAYERS = [
+    (3, 16, 1),
+    (16, 32, 2),
+    (32, 64, 1),
+    (64, 64, 2),
+    (64, 96, 1),
+    (96, 96, 2),
+    (96, 128, 1),
+    (128, 128, 1),
+    (128, 128, 2),
+    (128, 128, 1),
+    (128, 128, 1),
+]
+_CLASSES = 10
+
+
+def _shapes():
+    shapes, layer_of = [], []
+    for li, (cin, cout, _) in enumerate(_LAYERS):
+        shapes += [(3, 3, cin, cout), (cout,)]
+        layer_of += [li, li]
+    shapes += [(_LAYERS[-1][1], _CLASSES), (_CLASSES,)]
+    layer_of += [len(_LAYERS), len(_LAYERS)]
+    return shapes, layer_of
+
+
+def _loss_and_acc(params, x, y):
+    h = x
+    for li, (_, _, stride) in enumerate(_LAYERS):
+        h = jnp.maximum(conv2d(h, params[2 * li], stride) + params[2 * li + 1], 0.0)
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ params[-2] + params[-1]
+    return softmax_xent_and_acc(logits, y)
+
+
+def vgg11_mini_spec(batch: int = 16) -> ModelSpec:
+    shapes, layer_of = _shapes()
+    return ModelSpec(
+        name="vgg11_mini",
+        param_shapes_=shapes,
+        layer_of_param=layer_of,
+        input_shape=(16, 16, 3),
+        input_dtype="f32",
+        num_classes=_CLASSES,
+        batch=batch,
+        loss_and_acc=_loss_and_acc,
+    )

@@ -1,0 +1,101 @@
+"""AOT pipeline: manifest consistency + HLO text parses structural checks.
+
+These tests run against a freshly-emitted single-model artifact dir (tmp),
+so they don't depend on `make artifacts` having been run.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        subprocess.check_call(
+            [sys.executable, "-m", "compile.aot", "--out", ART],
+            cwd=os.path.join(os.path.dirname(__file__), ".."))
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_models(manifest):
+    for name in ["convnet5", "resnet_mini", "resnet_mini_deep",
+                 "segnet_mini", "transformer_mini"]:
+        assert name in manifest["models"]
+
+
+def test_every_module_file_exists(manifest):
+    for name, mod in manifest["modules"].items():
+        path = os.path.join(ART, mod["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_model_module_io_shapes(manifest):
+    for name, m in manifest["models"].items():
+        gs = manifest["modules"][m["grad_step"]]
+        n_p = len(m["params"])
+        assert len(gs["inputs"]) == n_p + 2      # params + x + y
+        assert len(gs["outputs"]) == n_p + 2     # loss + acc + grads
+        assert gs["outputs"][0] == [] and gs["outputs"][1] == []
+        assert gs["outputs"][2:] == m["params"]
+        ev = manifest["modules"][m["evaluate"]]
+        assert len(ev["outputs"]) == 2
+
+
+def test_mu_is_downsample_aligned(manifest):
+    down = manifest["ae"]["down"]
+    for name, m in manifest["models"].items():
+        assert m["mu"] % down == 0
+        # mu must cover alpha * n_mid
+        assert m["mu"] >= manifest["alpha"] * m["n_mid"]
+
+
+def test_param_groups_partition(manifest):
+    for name, m in manifest["models"].items():
+        all_idx = sorted(m["first_param_idx"] + m["mid_param_idx"]
+                         + m["last_param_idx"])
+        assert all_idx == list(range(len(m["params"]))), name
+
+
+def test_ae_variants_cover_model_mus(manifest):
+    from compile.aot import AE_CONFIGS
+    for name, ks in AE_CONFIGS.items():
+        mu = manifest["models"][name]["mu"]
+        var = manifest["ae"]["variants"][str(mu)]
+        for k in ks:
+            assert str(k) in var["train_rar"], (name, k)
+            assert str(k) in var["train_ps"], (name, k)
+
+
+def test_ae_module_shapes(manifest):
+    for mu_s, var in manifest["ae"]["variants"].items():
+        mu = int(mu_s)
+        enc = manifest["modules"][var["enc"]]
+        assert enc["inputs"][-1] == [1, mu]
+        assert enc["outputs"][0] == [manifest["ae"]["latent_ch"],
+                                     mu // manifest["ae"]["down"]]
+        dec = manifest["modules"][var["dec_rar"]]
+        assert dec["outputs"][0] == [1, mu]
+        dps = manifest["modules"][var["dec_ps"]]
+        assert dps["inputs"][-1] == [1, mu]       # innovation input
+
+
+def test_sparsify_module_covers_mid_params(manifest):
+    for name, m in manifest["models"].items():
+        sp = manifest["modules"][m["sparsify"]]
+        assert sp["inputs"][0] == [m["n_mid"]]
+        assert sp["outputs"] == [[m["n_mid"]], [m["n_mid"]]]
+
+
+def test_fingerprint_present(manifest):
+    assert len(manifest["fingerprint"]) == 64

@@ -1,0 +1,125 @@
+"""L2 correctness: LGC autoencoder shapes, losses, and convergence (§IV)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import autoencoder as ae
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _enc():
+    return ae.init_params(ae.enc_param_shapes(), KEY)
+
+
+def _dec(ps=False):
+    return ae.init_params(ae.dec_param_shapes(ps=ps), KEY)
+
+
+@pytest.mark.parametrize("mu", [96, 256, 432, 704, 1088])
+def test_encode_shape(mu):
+    lat = ae.encode(_enc(), jax.random.normal(KEY, (1, mu)))
+    assert lat.shape == (ae.LATENT_CH, mu // ae.DOWN)
+
+
+@pytest.mark.parametrize("mu", [96, 256])
+def test_decode_rar_shape(mu):
+    lat = jax.random.normal(KEY, (ae.LATENT_CH, mu // ae.DOWN))
+    rec = ae.decode(_dec(), lat)
+    assert rec.shape == (1, mu)
+
+
+@pytest.mark.parametrize("mu", [96, 256])
+def test_decode_ps_shape_uses_innovation(mu):
+    lat = jax.random.normal(KEY, (ae.LATENT_CH, mu // ae.DOWN))
+    innov = jax.random.normal(KEY, (1, mu))
+    dp = _dec(ps=True)
+    rec0 = ae.decode(dp, lat, jnp.zeros((1, mu)))
+    rec1 = ae.decode(dp, lat, innov)
+    assert rec0.shape == (1, mu)
+    # The innovation channel must actually influence the reconstruction.
+    assert float(jnp.max(jnp.abs(rec0 - rec1))) > 0.0
+
+
+def test_latent_is_4x_compression_of_mu():
+    """The paper's rate math: latent floats = mu/4 (4 ch x mu/16 length)."""
+    mu = 512
+    lat = ae.encode(_enc(), jnp.zeros((1, mu)))
+    assert lat.size == mu // 4
+
+
+def test_rar_train_step_reduces_loss():
+    # Smooth (sorted) inputs at lr 1e-2: the regime the LGC protocol
+    # actually feeds the AE (leader-signed order, DESIGN.md SS6.7).
+    base = jnp.sort(jax.random.normal(KEY, (256,)))[::-1]
+    grads = jnp.stack([base + 0.05 * jax.random.normal(jax.random.PRNGKey(i), (256,))
+                       for i in range(4)])
+    ep, dp = _enc(), _dec()
+    first = None
+    for _ in range(60):
+        ep, dp, loss = ae.rar_train_step(ep, dp, grads, 1e-2)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first * 0.8, f"{first} -> {float(loss)}" 
+
+
+def test_ps_train_step_reduces_both_losses():
+    k = 2
+    grads = jax.random.normal(KEY, (k, 256)) * 0.1
+    innov = grads * (jnp.abs(grads) > 0.25)
+    ep = _enc()
+    dps = [jnp.stack([p] * k) for p in _dec(ps=True)]
+    rec0 = sim0 = None
+    for i in range(60):
+        ridx = jnp.int32(i % k)
+        ep, dps, rec, sim = ae.ps_train_step(
+            ep, dps, grads, innov, ridx, 1e-2, 1.0, 0.5)
+        if rec0 is None:
+            rec0, sim0 = float(rec), float(sim)
+    assert float(rec) < rec0
+    assert float(sim) < sim0 * 1.5  # sim loss must not blow up
+
+
+def test_ps_similarity_loss_zero_for_identical_gradients():
+    grads = jnp.tile(jax.random.normal(KEY, (1, 256)) * 0.1, (3, 1))
+    innov = jnp.zeros_like(grads)
+    ep = _enc()
+    dps = [jnp.stack([p] * 3) for p in _dec(ps=True)]
+    _, _, _, sim = ae.ps_train_step(ep, dps, grads, innov, jnp.int32(0),
+                                    0.0, 1.0, 1.0)
+    assert float(sim) < 1e-8
+
+
+def test_ps_ridx_selects_common_representation():
+    """With lr=0 the step is pure evaluation; different ridx must generally
+    give different reconstruction losses (different encodings chosen)."""
+    grads = jax.random.normal(KEY, (2, 256)) * 0.5
+    innov = jnp.zeros_like(grads)
+    ep = _enc()
+    dps = [jnp.stack([p] * 2) for p in _dec(ps=True)]
+    _, _, rec0, _ = ae.ps_train_step(ep, dps, grads, innov, jnp.int32(0),
+                                     0.0, 1.0, 0.0)
+    _, _, rec1, _ = ae.ps_train_step(ep, dps, grads, innov, jnp.int32(1),
+                                     0.0, 1.0, 0.0)
+    assert float(rec0) != pytest.approx(float(rec1))
+
+
+def test_param_shapes_match_spec_tables():
+    """Paper Tables I/II filter counts (with the DESIGN.md §7 deviation)."""
+    enc = ae.enc_param_shapes()
+    assert [s[0] for s in enc[::2]] == [64, 128, 256, 64, 4]
+    dec = ae.dec_param_shapes(ps=False)
+    assert [s[0] for s in dec[::2]] == [4, 32, 64, 128, 32, 1]
+    dec_ps = ae.dec_param_shapes(ps=True)
+    assert dec_ps[-2] == (1, 33, 1)  # +1 innovation channel
+
+
+def test_init_he_scaling():
+    params = ae.init_params(ae.enc_param_shapes(), KEY)
+    w2 = params[2]  # (128, 64, 3): fan_in 192
+    std = float(jnp.std(w2))
+    assert 0.5 * np.sqrt(2 / 192) < std < 2.0 * np.sqrt(2 / 192)
+    assert float(jnp.max(jnp.abs(params[1]))) == 0.0  # bias zeros

@@ -1,0 +1,192 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+hypothesis sweeps shapes/strides/values; assert_allclose against ref.py is
+the CORE correctness signal for the compute hot path (the same HLO the rust
+runtime executes at every training iteration).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (conv1d, conv1d_pallas, deconv1d, deconv1d_pallas,
+                             ref, sparsify_pallas)
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = jnp.float32
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, F32)
+
+
+# ---------------------------------------------------------------------------
+# conv1d
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    cin=st.sampled_from([1, 3, 4, 32, 64]),
+    cout=st.sampled_from([1, 4, 32, 64]),
+    n_half=st.integers(2, 40),
+    stride=st.sampled_from([1, 2]),
+    k=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv1d_matches_ref(cin, cout, n_half, stride, k, seed):
+    n = 2 * n_half  # stride-2 convs require even length
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (cin, n))
+    w = _arr(rng, (cout, cin, k), scale=0.5)
+    b = _arr(rng, (cout,))
+    got = conv1d_pallas(x, w, b, stride)
+    want = ref.conv1d(x, w, b, stride)
+    assert got.shape == want.shape == (cout, ref.conv1d_out_len(n, k, stride))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_conv1d_fused_activation(seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (8, 32)), _arr(rng, (16, 8, 3)), _arr(rng, (16,))
+    got = conv1d_pallas(x, w, b, 2, fuse_act=True)
+    want = ref.leaky_relu(ref.conv1d(x, w, b, 2))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv1d_odd_length_tile():
+    # n_out = 57 (prime-ish) exercises the non-power-of-two tile picker.
+    rng = np.random.default_rng(0)
+    x, w, b = _arr(rng, (4, 114)), _arr(rng, (8, 4, 3)), _arr(rng, (8,))
+    got = conv1d_pallas(x, w, b, 2)
+    np.testing.assert_allclose(got, ref.conv1d(x, w, b, 2), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv1d_vjp_matches_ref_grad(stride, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (6, 24)), _arr(rng, (5, 6, 3)), _arr(rng, (5,))
+
+    def f(x_, w_, b_):
+        return jnp.sum(conv1d(x_, w_, b_, stride) ** 2)
+
+    def fr(x_, w_, b_):
+        return jnp.sum(ref.conv1d(x_, w_, b_, stride) ** 2)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(g, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# deconv1d
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    cin=st.sampled_from([2, 4, 32, 128]),
+    cout=st.sampled_from([1, 4, 32]),
+    n=st.integers(2, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_deconv1d_matches_ref(cin, cout, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (cin, n))
+    w = _arr(rng, (cout, cin, 3), scale=0.5)
+    b = _arr(rng, (cout,))
+    got = deconv1d_pallas(x, w, b, 2)
+    want = ref.deconv1d(x, w, b, 2)
+    assert got.shape == want.shape == (cout, 2 * n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_deconv1d_stride1_delegates_to_conv():
+    rng = np.random.default_rng(1)
+    x, w, b = _arr(rng, (4, 16)), _arr(rng, (4, 4, 3)), _arr(rng, (4,))
+    np.testing.assert_allclose(deconv1d_pallas(x, w, b, 1),
+                               ref.conv1d(x, w, b, 1), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_deconv1d_vjp_matches_ref_grad(seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (4, 12)), _arr(rng, (6, 4, 3)), _arr(rng, (6,))
+
+    def f(x_, w_, b_):
+        return jnp.sum(deconv1d(x_, w_, b_, 2) ** 2)
+
+    def fr(x_, w_, b_):
+        return jnp.sum(ref.deconv1d(x_, w_, b_, 2) ** 2)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(g, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+
+def test_deconv_inverts_conv_shape():
+    """Encoder downsample x16 and decoder upsample x16 must round-trip mu."""
+    rng = np.random.default_rng(2)
+    mu = 256
+    h = _arr(rng, (1, mu))
+    for cout, cin, k, s in [(64, 1, 3, 2), (128, 64, 3, 2), (256, 128, 3, 2),
+                            (64, 256, 3, 2), (4, 64, 1, 1)]:
+        h = conv1d_pallas(h, _arr(rng, (cout, cin, k), 0.1),
+                          jnp.zeros((cout,), F32), s)
+    assert h.shape == (4, mu // 16)
+    for cout, cin, k, s in [(4, 4, 3, 1), (32, 4, 3, 2), (64, 32, 3, 2),
+                            (128, 64, 3, 2), (32, 128, 3, 2)]:
+        h = deconv1d_pallas(h, _arr(rng, (cout, cin, k), 0.1),
+                            jnp.zeros((cout,), F32), s)
+    assert h.shape == (32, mu)
+
+
+# ---------------------------------------------------------------------------
+# sparsify
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.sampled_from([16, 96, 512, 1000, 4096]),
+    thr=st.floats(0.0, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparsify_matches_ref(n, thr, seed):
+    rng = np.random.default_rng(seed)
+    g, acc = _arr(rng, (n,)), _arr(rng, (n,))
+    t = jnp.asarray([thr], F32)
+    gsp, acc2 = sparsify_pallas(g, acc, t)
+    rsp, racc2 = ref.sparsify(g, acc, thr)
+    np.testing.assert_allclose(gsp, rsp, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(acc2, racc2, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([64, 480]), seed=st.integers(0, 2**31 - 1))
+def test_sparsify_invariants(n, seed):
+    """Property: g_sp + acc' == g + acc (lossless split), supports disjoint."""
+    rng = np.random.default_rng(seed)
+    g, acc = _arr(rng, (n,)), _arr(rng, (n,))
+    t = jnp.asarray([0.8], F32)
+    gsp, acc2 = sparsify_pallas(g, acc, t)
+    np.testing.assert_allclose(gsp + acc2, g + acc, rtol=1e-6, atol=1e-6)
+    assert not np.any((np.abs(np.asarray(gsp)) > 0)
+                      & (np.abs(np.asarray(acc2)) > 0))
+
+
+def test_sparsify_zero_threshold_sends_everything():
+    rng = np.random.default_rng(3)
+    g, acc = _arr(rng, (128,)), _arr(rng, (128,))
+    gsp, acc2 = sparsify_pallas(g, acc, jnp.asarray([0.0], F32))
+    np.testing.assert_allclose(gsp, g + acc, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(acc2, jnp.zeros(128), atol=1e-7)

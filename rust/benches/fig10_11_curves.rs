@@ -1,0 +1,25 @@
+//! Bench: regenerate Figs 10 & 11 — learning curves of every method on the
+//! classification (Fig 10) and segmentation (Fig 11) workloads.
+//!
+//! Reproduced claim: LGC/DGC curves track the baseline; Sparse GD lags.
+
+use lgc::exp;
+use lgc::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open_default()?;
+    let steps = exp::default_steps();
+    let r10 = exp::learning_curves(&engine, "resnet_mini", 2, steps, "results/fig10.csv")?;
+    let r11 = exp::learning_curves(&engine, "segnet_mini", 2, steps, "results/fig11.csv")?;
+    for (rows, tag) in [(&r10, "fig10"), (&r11, "fig11")] {
+        let base = rows.iter().find(|r| r.method == lgc::config::Method::Baseline).unwrap();
+        let lgc_ps = rows.iter().find(|r| r.method == lgc::config::Method::LgcPs).unwrap();
+        println!(
+            "shape check [{tag}]: LGC-PS final loss {:.4} within 0.5 of baseline {:.4}: {}",
+            lgc_ps.result.final_train_loss(),
+            base.result.final_train_loss(),
+            (lgc_ps.result.final_train_loss() - base.result.final_train_loss()).abs() < 0.5
+        );
+    }
+    Ok(())
+}

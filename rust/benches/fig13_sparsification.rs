@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig 13 — sparsification-strategy ablation (fixed vs
+//! exponential vs warmup) on ConvNet5 and ResNet-mini.
+//!
+//! Reproduced claim: warmup (LGC's choice) reaches lower loss faster than
+//! fixed-from-start and exponential-ramp sparsification.
+
+use lgc::exp;
+use lgc::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open_default()?;
+    let steps = exp::default_steps();
+    exp::fig13(&engine, steps)?;
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig 14 — autoencoder reconstruction-loss convergence
+//! during online training, with the similarity-loss (lambda_2) ablation.
+//!
+//! Reproduced claims: (a) the AE converges within the phase-2 window for
+//! both patterns; (b) lambda_2 = 0.5 reconstructs better than lambda_2 = 0.
+
+use lgc::exp;
+use lgc::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open_default()?;
+    let steps = exp::default_steps();
+    exp::fig14(&engine, steps)?;
+    Ok(())
+}

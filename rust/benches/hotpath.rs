@@ -1,0 +1,138 @@
+//! Bench: hot-path microbenchmarks (the §Perf iteration targets).
+//!
+//! Times each building block of the steady-state (phase 3) iteration in
+//! isolation so the optimization loop (EXPERIMENTS.md §Perf) can see where
+//! per-iteration time goes:
+//!   grad_step HLO | top-k select | index coding | AE encode | AE decode |
+//!   sparsify HLO | ring allreduce | full phase-3 LGC iteration
+
+use lgc::compress::autoencoder::{AeCompressor, Pattern};
+use lgc::compress::{index_coding, topk};
+use lgc::config::{Method, TrainConfig};
+use lgc::coordinator::ring;
+use lgc::metrics::{Kind, Ledger};
+use lgc::runtime::{Engine, Tensor};
+use lgc::util::bench::{time, time_budget, Table};
+use lgc::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open_default()?;
+    let model = std::env::var("LGC_MODEL").unwrap_or_else(|_| "resnet_mini".into());
+    let meta = engine.manifest.model(&model).clone();
+    let mu = meta.mu;
+    let n_mid = meta.n_mid;
+    let mut rng = Rng::new(1);
+    let mut t = Table::new(&["hot-path op", "mean", "p95", "notes"]);
+    let fmt = |s: &lgc::util::bench::Stats| {
+        (format!("{:.3} ms", s.mean_ms()), format!("{:.3} ms", s.p95_ns / 1e6))
+    };
+
+    // grad_step HLO (the dominant compute).
+    let m = lgc::model::Model::new(&meta, 7);
+    let data = lgc::data::for_model(&meta, 8);
+    let batch = data.batch(0, 0);
+    m.grad_step(&engine, &batch)?; // compile
+    let s = time_budget(2_000, || {
+        m.grad_step(&engine, &batch).unwrap();
+    });
+    let (a, b) = fmt(&s);
+    t.row(&[format!("{model}_grad_step"), a, b, format!("n={}", meta.n_params)]);
+
+    // top-k selection over the mid group.
+    let g = rng.normal_vec(n_mid, 1.0);
+    let s = time_budget(1_000, || {
+        std::hint::black_box(topk::top_k(&g, mu));
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["top-k select".into(), a, b, format!("n={n_mid} k={mu}")]);
+
+    // Index coding.
+    let sel = topk::top_k(&g, mu);
+    let s = time_budget(500, || {
+        std::hint::black_box(index_coding::encode(&sel.indices, n_mid).unwrap());
+    });
+    let coded = index_coding::encode(&sel.indices, n_mid)?.len();
+    let (a, b) = fmt(&s);
+    t.row(&["index encode (DEFLATE)".into(), a, b,
+            format!("{} idx -> {} B", sel.indices.len(), coded)]);
+
+    // AE encode / decode.
+    let ae = AeCompressor::new(&engine, mu, 2, Pattern::RingAllreduce, 3)?;
+    let vals = rng.normal_vec(mu, 0.01);
+    let (lat, sc) = ae.encode(&engine, &vals)?;
+    let s = time(3, 50, || {
+        ae.encode(&engine, &vals).unwrap();
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["AE encode (L1 conv1d)".into(), a, b,
+            format!("mu={mu} (paper GPU: 0.007-0.01 ms)")]);
+    let s = time(3, 50, || {
+        ae.decode_rar(&engine, &lat, sc).unwrap();
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["AE decode (L1 deconv1d)".into(), a, b,
+            format!("mu={mu} (paper GPU: ~1 ms)")]);
+
+    // Fused sparsify HLO (Pallas) vs rust scalar reference.
+    let acc = rng.normal_vec(n_mid, 0.5);
+    let gt = Tensor::f32(vec![n_mid], g.clone());
+    let at = Tensor::f32(vec![n_mid], acc.clone());
+    let tt = Tensor::f32(vec![1], vec![0.8]);
+    engine.run(&meta.sparsify, &[gt.clone(), at.clone(), tt.clone()])?;
+    let s = time(3, 50, || {
+        engine.run(&meta.sparsify, &[gt.clone(), at.clone(), tt.clone()]).unwrap();
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["sparsify HLO (Pallas)".into(), a, b, format!("n={n_mid}")]);
+    let s = time_budget(500, || {
+        let mut o1 = vec![0.0f32; n_mid];
+        let mut o2 = vec![0.0f32; n_mid];
+        for i in 0..n_mid {
+            let u = g[i] + acc[i];
+            if u.abs() >= 0.8 {
+                o1[i] = u;
+            } else {
+                o2[i] = u;
+            }
+        }
+        std::hint::black_box((o1, o2));
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["sparsify rust scalar".into(), a, b, "reference".into()]);
+
+    // Ring allreduce on latent vectors (K = 8).
+    let latents: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(mu / 4, 1.0)).collect();
+    let s = time_budget(500, || {
+        let mut work = latents.clone();
+        let mut ledger = Ledger::new();
+        std::hint::black_box(ring::ring_allreduce_sum(&mut work, &mut ledger, Kind::Latent));
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["ring allreduce latents K=8".into(), a, b, format!("len={}", mu / 4)]);
+
+    // Full steady-state iteration (phase 3 only, measured via a run whose
+    // phases are all compressed after a minimal warmup).
+    let cfg = TrainConfig {
+        model: model.clone(),
+        method: Method::LgcPs,
+        nodes: 2,
+        steps: 14,
+        warmup_iters: 2,
+        ae_train_iters: 2,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let r = lgc::coordinator::train(&engine, cfg)?;
+    t.row(&[
+        "full LGC-PS phase-3 iter (K=2)".into(),
+        format!("{:.3} ms", r.phase_time[2].as_secs_f64() * 1e3 / r.phase_iters[2] as f64),
+        "-".into(),
+        format!("{} iters", r.phase_iters[2]),
+    ]);
+
+    println!("\n=== hot-path microbenchmarks ({model}) ===");
+    t.print();
+    t.write_csv("results/hotpath.csv")?;
+    println!("-> results/hotpath.csv");
+    Ok(())
+}

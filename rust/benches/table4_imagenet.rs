@@ -1,0 +1,32 @@
+//! Bench: regenerate Table IV — top-1 accuracy vs compression ratio vs
+//! total transferred information, 8 nodes (paper: ResNet50/ImageNet;
+//! scaled: resnet_mini/synth-cifar, DESIGN.md §2).
+//!
+//!   cargo bench --bench table4_imagenet        (LGC_STEPS to resize)
+//!
+//! Expected shape (paper Table IV): every compressed method's steady rate
+//! is orders of magnitude under baseline; LGC-PS compresses hardest,
+//! LGC-RAR and DGC next, ScaleCom/SparseGD behind; accuracy within noise
+//! of baseline for all EF-corrected methods.
+
+use lgc::exp;
+use lgc::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open_default()?;
+    let steps = exp::default_steps();
+    let rows = exp::table4(&engine, steps)?;
+
+    // Paper-shape assertions (who wins, roughly by what factor).
+    let get = |m: lgc::config::Method| {
+        rows.iter().find(|r| r.method == m).unwrap()
+    };
+    use lgc::config::Method::*;
+    let ps = get(LgcPs).ratio;
+    let rar = get(LgcRar).ratio;
+    let dgc = get(Dgc).ratio;
+    let sc = get(ScaleCom).ratio;
+    println!("\nshape check: LGC-PS {ps:.0}x > DGC {dgc:.0}x: {}", ps > dgc);
+    println!("shape check: LGC-RAR {rar:.0}x > ScaleCom {sc:.0}x: {}", rar > sc);
+    Ok(())
+}

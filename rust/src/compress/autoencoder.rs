@@ -1,0 +1,266 @@
+//! The learned compressor: rust-side wrapper over the LGC autoencoder HLOs.
+//!
+//! Holds the autoencoder parameters host-side (He-init replayed from the
+//! manifest shapes), and drives four AOT'd entry points:
+//!
+//!   encode      ae_enc_{mu}           g~ (1,mu)            -> latent
+//!   decode RAR  ae_dec_rar_{mu}       latent               -> g_rec
+//!   decode PS   ae_dec_ps_{mu}        latent + innovation  -> g_rec
+//!   train       ae_train_{ps|rar}_{mu}_k{K}  (online, phase 2)
+//!
+//! Rates: a transmitted latent is `mu/4` f32s (4 channels x mu/16) plus a
+//! 4-byte RMS scale — [`AeCompressor::latent_bytes`] is what the ledger
+//! charges.
+//!
+//! Normalization: gradient value-vectors have tiny, drifting RMS (~1e-2
+//! early, decaying over training); the autoencoder is trained and run on
+//! unit-RMS inputs, with the scale transmitted alongside each payload and
+//! re-applied after decoding.  This is standard practice in learned
+//! compression and is what makes the few-hundred-step online training
+//! regime of §V-B stable (DESIGN.md §6).
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, Tensor};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    ParamServer,
+    RingAllreduce,
+}
+
+pub struct AeCompressor {
+    pub mu: usize,
+    pub k_nodes: usize,
+    pub pattern: Pattern,
+    enc_params: Vec<Tensor>,
+    /// RAR: one decoder. PS: K stacked decoders (leading K axis per array).
+    dec_params: Vec<Tensor>,
+    enc_name: String,
+    dec_name: String,
+    train_name: String,
+    latent_dims: Vec<usize>,
+    /// Train-step losses observed so far (Fig. 14 traces).
+    pub train_losses: Vec<(f32, f32)>,
+}
+
+/// RMS of a vector, clamped away from zero.
+pub fn rms(v: &[f32]) -> f32 {
+    let ms = v.iter().map(|x| x * x).sum::<f32>() / v.len().max(1) as f32;
+    ms.sqrt().max(1e-8)
+}
+
+fn he_init_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    if shape.len() > 1 {
+        let fan_in: usize = shape[1..].iter().product();
+        let std = (2.0f32 / fan_in as f32).sqrt();
+        Tensor::f32(shape.to_vec(), rng.normal_vec(n, std))
+    } else {
+        Tensor::zeros(shape.to_vec())
+    }
+}
+
+impl AeCompressor {
+    pub fn new(
+        engine: &Engine,
+        mu: usize,
+        k_nodes: usize,
+        pattern: Pattern,
+        seed: u64,
+    ) -> Result<AeCompressor> {
+        let ae = &engine.manifest.ae;
+        let var = engine.manifest.ae_variant(mu);
+        let mut rng = Rng::new(seed);
+        let enc_params: Vec<Tensor> = ae
+            .enc_shapes
+            .iter()
+            .map(|s| he_init_tensor(s, &mut rng))
+            .collect();
+        let (dec_params, dec_name, train_name) = match pattern {
+            Pattern::RingAllreduce => {
+                let dp = ae
+                    .dec_shapes_rar
+                    .iter()
+                    .map(|s| he_init_tensor(s, &mut rng))
+                    .collect();
+                (
+                    dp,
+                    var.dec_rar.clone(),
+                    var.train_rar
+                        .get(&k_nodes)
+                        .unwrap_or_else(|| panic!("no RAR train variant mu={mu} K={k_nodes}"))
+                        .clone(),
+                )
+            }
+            Pattern::ParamServer => {
+                // K stacked decoders, each He-initialized independently.
+                let dp = ae
+                    .dec_shapes_ps
+                    .iter()
+                    .map(|s| {
+                        let mut dims = vec![k_nodes];
+                        dims.extend_from_slice(s);
+                        let per: usize = s.iter().product();
+                        let mut data = Vec::with_capacity(per * k_nodes);
+                        for _ in 0..k_nodes {
+                            data.extend(he_init_tensor(s, &mut rng).as_f32());
+                        }
+                        Tensor::f32(dims, data)
+                    })
+                    .collect();
+                (
+                    dp,
+                    var.dec_ps.clone(),
+                    var.train_ps
+                        .get(&k_nodes)
+                        .unwrap_or_else(|| panic!("no PS train variant mu={mu} K={k_nodes}"))
+                        .clone(),
+                )
+            }
+        };
+        Ok(AeCompressor {
+            mu,
+            k_nodes,
+            pattern,
+            enc_params,
+            dec_params,
+            enc_name: var.enc.clone(),
+            dec_name,
+            train_name,
+            latent_dims: vec![ae.latent_ch, mu / ae.down],
+            train_losses: Vec::new(),
+        })
+    }
+
+    /// Latent payload size on the wire (f32).
+    pub fn latent_len(&self) -> usize {
+        self.latent_dims.iter().product()
+    }
+
+    /// Wire bytes of one latent payload: latent f32s + the RMS scale.
+    pub fn latent_bytes(&self) -> usize {
+        self.latent_len() * 4 + 4
+    }
+
+    /// Total autoencoder parameter bytes (the one-time RAR weight
+    /// broadcast, paper §V-B2).
+    pub fn param_bytes(&self) -> usize {
+        let e: usize = self.enc_params.iter().map(|t| t.len() * 4).sum();
+        let d: usize = self.dec_params.iter().map(|t| t.len() * 4).sum();
+        e + d
+    }
+
+    /// E_c(g~ / rms): compress a mu-length sparsified-gradient vector.
+    /// Returns (latent, scale); the scale travels with the payload.
+    pub fn encode(&self, engine: &Engine, g: &[f32]) -> Result<(Vec<f32>, f32)> {
+        assert_eq!(g.len(), self.mu);
+        let s = rms(g);
+        let normed: Vec<f32> = g.iter().map(|x| x / s).collect();
+        let mut inputs = self.enc_params.clone();
+        inputs.push(Tensor::f32(vec![1, self.mu], normed));
+        let out = engine.run(&self.enc_name, &inputs)?;
+        Ok((out.into_iter().next().unwrap().as_f32().to_vec(), s))
+    }
+
+    /// RAR decode: D_c(latent_avg) * scale -> aggregated mu-length gradient.
+    pub fn decode_rar(&self, engine: &Engine, latent: &[f32], scale: f32) -> Result<Vec<f32>> {
+        assert_eq!(self.pattern, Pattern::RingAllreduce);
+        let mut inputs = self.dec_params.clone();
+        inputs.push(Tensor::f32(self.latent_dims.clone(), latent.to_vec()));
+        let out = engine.run(&self.dec_name, &inputs)?;
+        Ok(out.into_iter().next().unwrap().as_f32().iter().map(|x| x * scale).collect())
+    }
+
+    /// PS decode with node-k's decoder D_c^k and dense innovation vector
+    /// (raw scale; normalized inside by the node's transmitted `scale`).
+    pub fn decode_ps(
+        &self,
+        engine: &Engine,
+        node: usize,
+        latent: &[f32],
+        innovation: &[f32],
+        scale: f32,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(self.pattern, Pattern::ParamServer);
+        assert!(node < self.k_nodes);
+        let mut inputs: Vec<Tensor> = self
+            .dec_params
+            .iter()
+            .map(|stacked| {
+                // Slice row `node` out of the K-leading stacked tensor.
+                let per = stacked.len() / self.k_nodes;
+                let dims = stacked.dims[1..].to_vec();
+                Tensor::f32(dims, stacked.as_f32()[node * per..(node + 1) * per].to_vec())
+            })
+            .collect();
+        inputs.push(Tensor::f32(self.latent_dims.clone(), latent.to_vec()));
+        inputs.push(Tensor::f32(
+            vec![1, self.mu],
+            innovation.iter().map(|x| x / scale).collect(),
+        ));
+        let out = engine.run(&self.dec_name, &inputs)?;
+        Ok(out.into_iter().next().unwrap().as_f32().iter().map(|x| x * scale).collect())
+    }
+
+    /// One online SGD step on the autoencoder (phase 2), on unit-RMS
+    /// normalized inputs (each row by its own scale; PS innovations by
+    /// the matching row's scale, mirroring the inference path).
+    ///
+    /// RAR: `innovations` is ignored. PS: `ridx` picks the common node.
+    /// Returns (rec_loss, sim_loss) — sim_loss is 0 for RAR.
+    pub fn train_step(
+        &mut self,
+        engine: &Engine,
+        grads: &[Vec<f32>],
+        innovations: Option<&[Vec<f32>]>,
+        ridx: usize,
+        lr: f32,
+        lam1: f32,
+        lam2: f32,
+    ) -> Result<(f32, f32)> {
+        assert_eq!(grads.len(), self.k_nodes);
+        let scales: Vec<f32> = grads.iter().map(|g| rms(g)).collect();
+        let stack = |rows: &[Vec<f32>], scales: &[f32]| {
+            let mut data = Vec::with_capacity(self.k_nodes * self.mu);
+            for (r, &s) in rows.iter().zip(scales) {
+                assert_eq!(r.len(), self.mu);
+                data.extend(r.iter().map(|x| x / s));
+            }
+            Tensor::f32(vec![self.k_nodes, self.mu], data)
+        };
+        let mut inputs: Vec<Tensor> = self.enc_params.clone();
+        inputs.extend(self.dec_params.clone());
+        inputs.push(stack(grads, &scales));
+        let (rec, sim) = match self.pattern {
+            Pattern::RingAllreduce => {
+                inputs.push(Tensor::scalar_f32(lr));
+                let out = engine.run(&self.train_name, &inputs)?;
+                let ne = self.enc_params.len();
+                let nd = self.dec_params.len();
+                self.enc_params = out[..ne].to_vec();
+                self.dec_params = out[ne..ne + nd].to_vec();
+                (out[ne + nd].scalar(), 0.0)
+            }
+            Pattern::ParamServer => {
+                inputs.push(stack(
+                    innovations.expect("PS training needs innovations"),
+                    &scales,
+                ));
+                inputs.push(Tensor::scalar_i32(ridx as i32));
+                inputs.push(Tensor::scalar_f32(lr));
+                inputs.push(Tensor::scalar_f32(lam1));
+                inputs.push(Tensor::scalar_f32(lam2));
+                let out = engine.run(&self.train_name, &inputs)?;
+                let ne = self.enc_params.len();
+                let nd = self.dec_params.len();
+                self.enc_params = out[..ne].to_vec();
+                self.dec_params = out[ne..ne + nd].to_vec();
+                (out[ne + nd].scalar(), out[ne + nd + 1].scalar())
+            }
+        };
+        self.train_losses.push((rec, sim));
+        Ok((rec, sim))
+    }
+}

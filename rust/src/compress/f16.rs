@@ -1,0 +1,148 @@
+//! IEEE-754 binary16 conversion for half-precision value payloads.
+//!
+//! The paper transmits f32 values; several follow-ups halve the value
+//! payload with f16. The framework exposes this as a rate option
+//! (`TrainConfig::value_bytes` = 4 | 2); conversions here are exact
+//! round-to-nearest-even, implemented locally (no `half` crate in the
+//! offline set).
+
+/// f32 -> f16 bit pattern (round-to-nearest-even, IEEE 754).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        let frac16 = if frac != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | frac16;
+    }
+    // Re-bias: f32 exp-127, f16 exp-15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal f16.
+        let exp16 = (unbiased + 15) as u32;
+        let mut mant = frac >> 13;
+        // Round to nearest even on the truncated 13 bits.
+        let rem = frac & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (mant & 1) == 1) {
+            mant += 1;
+        }
+        let out = (exp16 << 10) + mant; // mantissa carry bumps exponent
+        return sign | out as u16;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16: mantissa = RNE(|x| / 2^-24)
+        //              = RNE((2^23 + frac) >> (-1 - unbiased)).
+        let shift = (-1 - unbiased) as u32; // 14 ..= 24
+        let mant32 = 0x0080_0000 | frac;
+        let mut mant = mant32 >> shift;
+        let rem = mant32 & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (mant & 1) == 1) {
+            mant += 1; // may carry into the smallest normal (0x0400): fine
+        }
+        return sign | mant as u16;
+    }
+    sign // underflow -> signed zero
+}
+
+/// f16 bit pattern -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let neg = h & 0x8000 != 0;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let mag = match (exp, frac) {
+        (0, f) => f as f32 * 2.0f32.powi(-24), // zero / subnormal (exact in f32)
+        (0x1f, 0) => f32::INFINITY,
+        (0x1f, _) => f32::NAN,
+        (e, f) => f32::from_bits(((e + 127 - 15) << 23) | (f << 13)),
+    };
+    if neg {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Round-trip a whole vector through f16 (the wire representation), and
+/// report the payload size.
+pub fn quantize_f16(values: &[f32]) -> (Vec<f32>, usize) {
+    let deq = values
+        .iter()
+        .map(|&x| f16_bits_to_f32(f32_to_f16_bits(x)))
+        .collect();
+    (deq, values.len() * 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(x: f32) -> f32 {
+        f16_bits_to_f32(f32_to_f16_bits(x))
+    }
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0,
+                  1.5, 0.25, 1024.0] {
+            assert_eq!(roundtrip(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn special_values() {
+        assert_eq!(roundtrip(f32::INFINITY), f32::INFINITY);
+        assert_eq!(roundtrip(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(roundtrip(f32::NAN).is_nan());
+        assert_eq!(roundtrip(1e9), f32::INFINITY); // overflow
+        assert_eq!(roundtrip(1e-10), 0.0); // underflow
+    }
+
+    #[test]
+    fn relative_error_bounded_for_normals() {
+        let mut rng = crate::util::rng::Rng::new(20);
+        for _ in 0..10_000 {
+            let x = rng.normal() * 10.0;
+            if x.abs() < 6.2e-5 {
+                continue; // subnormal range has absolute, not relative bounds
+            }
+            let r = roundtrip(x);
+            let rel = ((r - x) / x).abs();
+            assert!(rel <= 1.0 / 1024.0, "x={x} r={r} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        // Smallest positive f16 subnormal = 2^-24.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(roundtrip(tiny), tiny);
+        assert_eq!(roundtrip(2.0f32.powi(-14)), 2.0f32.powi(-14)); // smallest normal
+        let sub = 3.0 * 2.0f32.powi(-24);
+        assert_eq!(roundtrip(sub), sub);
+    }
+
+    #[test]
+    fn quantize_vec_size() {
+        let (deq, bytes) = quantize_f16(&[1.0, 2.0, 3.0]);
+        assert_eq!(bytes, 6);
+        assert_eq!(deq, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn monotone_on_samples() {
+        // f16 quantization must preserve ordering of representable gaps.
+        let mut prev = f16_bits_to_f32(0x0001);
+        for bits in 2..0x7c00u16 {
+            let v = f16_bits_to_f32(bits);
+            assert!(v > prev, "bits={bits:#x} {v} !> {prev}");
+            prev = v;
+        }
+    }
+}

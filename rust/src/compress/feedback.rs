@@ -1,0 +1,178 @@
+//! Error-feedback memory with momentum correction (paper §V-A / DGC [20]).
+//!
+//! Each node keeps, per parameter group, the residual of everything it did
+//! not transmit.  Two variants (Table III):
+//!
+//! * plain accumulation (Sparse GD [19]):        acc += g; send top-k(acc)
+//! * momentum correction (DGC [20] / LGC):       u = m*u + g; v += u;
+//!                                               send top-k(v)
+//!
+//! Both subtract the transmitted coordinates from the memory after
+//! selection, which is exactly Algorithm 1's `g_acc <- g_acc + (!mask) * g`
+//! formulation rearranged.
+
+use super::topk::{self, TopK};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Correction {
+    /// acc += g (Sparse GD)
+    Plain,
+    /// Momentum-corrected accumulation (DGC §3.2, LGC §V-A)
+    Momentum,
+}
+
+#[derive(Debug, Clone)]
+pub struct FeedbackMemory {
+    correction: Correction,
+    momentum: f32,
+    /// Momentum buffer u (only used under `Correction::Momentum`).
+    u: Vec<f32>,
+    /// Accumulated (velocity) buffer v — the memory that feeds selection.
+    v: Vec<f32>,
+}
+
+impl FeedbackMemory {
+    pub fn new(n: usize, correction: Correction, momentum: f32) -> Self {
+        FeedbackMemory { correction, momentum, u: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.v.is_empty()
+    }
+
+    /// Fold a fresh gradient into the memory; the result (`self.v`) is the
+    /// vector selection should run on.
+    pub fn accumulate(&mut self, grad: &[f32]) {
+        assert_eq!(grad.len(), self.v.len());
+        match self.correction {
+            Correction::Plain => {
+                for (v, g) in self.v.iter_mut().zip(grad) {
+                    *v += g;
+                }
+            }
+            Correction::Momentum => {
+                for ((u, v), g) in self.u.iter_mut().zip(&mut self.v).zip(grad) {
+                    *u = self.momentum * *u + g;
+                    *v += *u;
+                }
+            }
+        }
+    }
+
+    /// Current memory state (selection input).
+    pub fn memory(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Select top-k of the memory, clear the transmitted coordinates
+    /// (and their momentum, per DGC's momentum masking), return the packet.
+    pub fn select_and_clear(&mut self, k: usize) -> TopK {
+        let sel = topk::top_k(&self.v, k);
+        for &i in &sel.indices {
+            self.v[i as usize] = 0.0;
+            if self.correction == Correction::Momentum {
+                self.u[i as usize] = 0.0;
+            }
+        }
+        sel
+    }
+
+    /// Clear given coordinates after transmitting them (CLT-k path: the
+    /// index set came from the leader, not from our own top-k).
+    pub fn take_at(&mut self, indices: &[u32]) -> Vec<f32> {
+        let vals = topk::gather(&self.v, indices);
+        for &i in indices {
+            self.v[i as usize] = 0.0;
+            if self.correction == Correction::Momentum {
+                self.u[i as usize] = 0.0;
+            }
+        }
+        vals
+    }
+
+    /// Scatter-add a correction back into the memory (error feedback on a
+    /// *biased, shared* compressor output: after an aggregate update
+    /// `rec` replaced the ideal per-node contribution `vals_k`, each node
+    /// re-accumulates e_k = vals_k - rec at the transmitted coordinates;
+    /// mean_k(e_k) = ideal - applied, so the averaged update recovers the
+    /// compressor error on later iterations — Stich et al. [40] extended
+    /// to the shared-reconstruction setting, DESIGN.md §6.10).
+    pub fn add_at(&mut self, indices: &[u32], deltas: &[f32]) {
+        for (&i, &d) in indices.iter().zip(deltas) {
+            self.v[i as usize] += d;
+        }
+    }
+
+    /// L2 norm of the residual (used by tests / diagnostics).
+    pub fn residual_norm(&self) -> f32 {
+        self.v.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_accumulates_and_clears() {
+        let mut fb = FeedbackMemory::new(4, Correction::Plain, 0.0);
+        fb.accumulate(&[1.0, -3.0, 0.5, 0.0]);
+        let sel = fb.select_and_clear(1);
+        assert_eq!(sel.indices, vec![1]);
+        assert_eq!(sel.values, vec![-3.0]);
+        // Untransmitted residual remains.
+        assert_eq!(fb.memory(), &[1.0, 0.0, 0.5, 0.0]);
+        fb.accumulate(&[0.0; 4]);
+        let sel2 = fb.select_and_clear(1);
+        assert_eq!(sel2.indices, vec![0]); // residual eventually drains
+    }
+
+    #[test]
+    fn momentum_correction_amplifies_repeated_signal() {
+        let mut fb = FeedbackMemory::new(2, Correction::Momentum, 0.9);
+        for _ in 0..5 {
+            fb.accumulate(&[1.0, 0.0]);
+        }
+        // With momentum, v[0] > 5 (sum of partial geometric series).
+        assert!(fb.memory()[0] > 5.0);
+        assert_eq!(fb.memory()[1], 0.0);
+    }
+
+    #[test]
+    fn momentum_cleared_on_transmit() {
+        let mut fb = FeedbackMemory::new(2, Correction::Momentum, 0.9);
+        fb.accumulate(&[1.0, 0.1]);
+        fb.select_and_clear(1);
+        fb.accumulate(&[0.0, 0.0]);
+        // u[0] was masked out: no phantom momentum re-appears.
+        assert_eq!(fb.memory()[0], 0.0);
+    }
+
+    #[test]
+    fn take_at_uses_external_indices() {
+        let mut fb = FeedbackMemory::new(3, Correction::Plain, 0.0);
+        fb.accumulate(&[1.0, 2.0, 3.0]);
+        let vals = fb.take_at(&[0, 2]);
+        assert_eq!(vals, vec![1.0, 3.0]);
+        assert_eq!(fb.memory(), &[0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn nothing_lost_split_invariant() {
+        // transmitted + residual == accumulated input (plain EF)
+        let mut rng = crate::util::rng::Rng::new(3);
+        let g = rng.normal_vec(100, 1.0);
+        let mut fb = FeedbackMemory::new(100, Correction::Plain, 0.0);
+        fb.accumulate(&g);
+        let sel = fb.select_and_clear(10);
+        let mut recon = fb.memory().to_vec();
+        super::topk::scatter_add(&mut recon, &sel.indices, &sel.values);
+        for (a, b) in recon.iter().zip(&g) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

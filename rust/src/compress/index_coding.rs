@@ -1,0 +1,234 @@
+//! Index coding for sparse-gradient payloads (paper §V-A: "the transferred
+//! indices are entropy encoded — using the DEFLATE compression method —
+//! and their rate is taken into account in the total rate calculation").
+//!
+//! Pipeline: sorted u32 indices -> delta encoding -> LEB128 varints ->
+//! DEFLATE.  A raw-bitmap fallback is chosen automatically when denser
+//! selections would make it cheaper; the 1-byte header records the mode.
+//! Every byte that leaves a node flows through [`encode`], so ledger totals
+//! are measured, never modeled.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+use flate2::read::DeflateDecoder;
+use flate2::write::DeflateEncoder;
+use flate2::Compression;
+
+const MODE_DEFLATE_DELTA: u8 = 0;
+const MODE_BITMAP: u8 = 1;
+
+/// Encode a sorted index set over a universe of size `n`.
+pub fn encode(indices: &[u32], n: usize) -> Result<Vec<u8>> {
+    debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices must be sorted unique");
+    if let Some(&last) = indices.last() {
+        if last as usize >= n {
+            bail!("index {last} out of universe {n}");
+        }
+    }
+    // Candidate A: delta + varint + deflate.
+    let mut varints = Vec::with_capacity(indices.len() * 2);
+    let mut prev = 0u32;
+    for (i, &idx) in indices.iter().enumerate() {
+        let delta = if i == 0 { idx } else { idx - prev - 1 };
+        write_varint(&mut varints, delta);
+        prev = idx;
+    }
+    let mut enc = DeflateEncoder::new(Vec::new(), Compression::default());
+    enc.write_all(&varints)?;
+    let deflated = enc.finish()?;
+
+    // Candidate B: raw bitmap (wins for dense selections).
+    let bitmap_len = n.div_ceil(8);
+
+    if deflated.len() <= bitmap_len {
+        let mut out = Vec::with_capacity(deflated.len() + 5);
+        out.push(MODE_DEFLATE_DELTA);
+        out.extend((indices.len() as u32).to_le_bytes());
+        out.extend(deflated);
+        Ok(out)
+    } else {
+        let mut out = vec![0u8; 1 + bitmap_len];
+        out[0] = MODE_BITMAP;
+        for &i in indices {
+            out[1 + (i as usize) / 8] |= 1 << (i % 8);
+        }
+        Ok(out)
+    }
+}
+
+/// Decode back to the sorted index list.
+pub fn decode(bytes: &[u8], n: usize) -> Result<Vec<u32>> {
+    match bytes.first() {
+        Some(&MODE_DEFLATE_DELTA) => {
+            let count = u32::from_le_bytes(bytes[1..5].try_into()?) as usize;
+            let mut inflated = Vec::new();
+            DeflateDecoder::new(&bytes[5..]).read_to_end(&mut inflated)?;
+            let mut out = Vec::with_capacity(count);
+            let mut pos = 0usize;
+            let mut prev = 0u32;
+            for i in 0..count {
+                let (delta, used) = read_varint(&inflated[pos..])?;
+                pos += used;
+                let idx = if i == 0 { delta } else { prev + delta + 1 };
+                out.push(idx);
+                prev = idx;
+            }
+            Ok(out)
+        }
+        Some(&MODE_BITMAP) => {
+            let mut out = Vec::new();
+            for i in 0..n {
+                if bytes[1 + i / 8] & (1 << (i % 8)) != 0 {
+                    out.push(i as u32);
+                }
+            }
+            Ok(out)
+        }
+        _ => bail!("bad index-coding header"),
+    }
+}
+
+/// Encode an index list whose ORDER is significant (LGC phase 3: the
+/// leader broadcasts its support in signed-descending-value order, which
+/// is what makes the value-vectors smooth enough for the conv
+/// autoencoder — DESIGN.md §6.6).  Delta coding would destroy the order,
+/// so this DEFLATEs the raw LE-u32 stream; still counted byte-exactly.
+pub fn encode_ordered(indices: &[u32]) -> Result<Vec<u8>> {
+    let mut raw = Vec::with_capacity(indices.len() * 4 + 4);
+    raw.extend((indices.len() as u32).to_le_bytes());
+    for &i in indices {
+        raw.extend(i.to_le_bytes());
+    }
+    let mut enc = DeflateEncoder::new(Vec::new(), Compression::default());
+    enc.write_all(&raw)?;
+    Ok(enc.finish()?)
+}
+
+/// Decode an order-significant index list.
+pub fn decode_ordered(bytes: &[u8]) -> Result<Vec<u32>> {
+    let mut raw = Vec::new();
+    DeflateDecoder::new(bytes).read_to_end(&mut raw)?;
+    if raw.len() < 4 {
+        bail!("truncated ordered index payload");
+    }
+    let count = u32::from_le_bytes(raw[0..4].try_into()?) as usize;
+    if raw.len() != 4 + 4 * count {
+        bail!("ordered index payload length mismatch");
+    }
+    Ok((0..count)
+        .map(|i| u32::from_le_bytes(raw[4 + 4 * i..8 + 4 * i].try_into().unwrap()))
+        .collect())
+}
+
+fn write_varint(out: &mut Vec<u8>, mut v: u32) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn read_varint(b: &[u8]) -> Result<(u32, usize)> {
+    let mut v = 0u32;
+    for (i, &byte) in b.iter().enumerate().take(5) {
+        v |= ((byte & 0x7f) as u32) << (7 * i);
+        if byte & 0x80 == 0 {
+            return Ok((v, i + 1));
+        }
+    }
+    bail!("truncated varint")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(indices: &[u32], n: usize) {
+        let bytes = encode(indices, n).unwrap();
+        assert_eq!(decode(&bytes, n).unwrap(), indices);
+    }
+
+    #[test]
+    fn roundtrip_empty_and_single() {
+        roundtrip(&[], 100);
+        roundtrip(&[0], 100);
+        roundtrip(&[99], 100);
+    }
+
+    #[test]
+    fn roundtrip_random_sparse() {
+        let mut rng = Rng::new(11);
+        for n in [100usize, 10_000, 1_000_000] {
+            let k = (n / 1000).max(2);
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut idx);
+            let mut sel: Vec<u32> = idx[..k].to_vec();
+            sel.sort_unstable();
+            roundtrip(&sel, n);
+        }
+    }
+
+    #[test]
+    fn dense_never_worse_than_bitmap() {
+        // Contiguous dense runs delta-code to all zeros, which DEFLATE
+        // crushes below the bitmap; either way the chosen mode must not
+        // exceed bitmap size by more than the 5-byte header.
+        let n = 1024usize;
+        let all: Vec<u32> = (0..n as u32).collect();
+        let bytes = encode(&all, n).unwrap();
+        assert!(bytes.len() <= 1 + n / 8 + 5, "len={}", bytes.len());
+        roundtrip(&all, n);
+        // An adversarial random half-dense set round-trips through
+        // whichever mode wins.
+        let mut rng = Rng::new(77);
+        let sel: Vec<u32> = (0..n as u32).filter(|_| rng.uniform() < 0.5).collect();
+        roundtrip(&sel, n);
+    }
+
+    #[test]
+    fn sparse_beats_raw_u32() {
+        // 0.1% sparsity over 1M: coded indices must be well under 4 B each.
+        let mut rng = Rng::new(5);
+        let n = 1_000_000usize;
+        let mut sel: Vec<u32> = (0..1000).map(|_| rng.below(n) as u32).collect();
+        sel.sort_unstable();
+        sel.dedup();
+        let bytes = encode(&sel, n).unwrap();
+        assert!(
+            bytes.len() < sel.len() * 3,
+            "coded {} bytes for {} indices",
+            bytes.len(),
+            sel.len()
+        );
+    }
+
+    #[test]
+    fn rejects_out_of_universe() {
+        assert!(encode(&[100], 100).is_err());
+    }
+
+    #[test]
+    fn ordered_roundtrip_preserves_order() {
+        let idx = vec![5u32, 1, 999, 3, 3_000_000];
+        let bytes = encode_ordered(&idx).unwrap();
+        assert_eq!(decode_ordered(&bytes).unwrap(), idx);
+        assert!(encode_ordered(&[]).is_ok());
+        assert_eq!(decode_ordered(&encode_ordered(&[]).unwrap()).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        let mut buf = Vec::new();
+        for v in [0u32, 127, 128, 16383, 16384, u32::MAX] {
+            buf.clear();
+            write_varint(&mut buf, v);
+            assert_eq!(read_varint(&buf).unwrap(), (v, buf.len()));
+        }
+    }
+}

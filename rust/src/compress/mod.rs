@@ -1,0 +1,19 @@
+//! Gradient compression substrates (paper §IV-V).
+//!
+//! * [`topk`]         — exact top-k magnitude selection (Algorithm 1)
+//! * [`feedback`]     — error-feedback memory w/ momentum correction
+//! * [`index_coding`] — DEFLATE index entropy coding (§V-A)
+//! * [`quantize`]     — QSGD / ternary baselines (§II-B)
+//! * [`autoencoder`]  — the learned compressor: wraps the AOT'd LGC
+//!   autoencoder HLOs (encode / decode / online train)
+
+pub mod autoencoder;
+pub mod f16;
+pub mod feedback;
+pub mod index_coding;
+pub mod quantize;
+pub mod topk;
+
+pub use autoencoder::AeCompressor;
+pub use feedback::{Correction, FeedbackMemory};
+pub use topk::TopK;

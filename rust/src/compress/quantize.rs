@@ -1,0 +1,124 @@
+//! Gradient quantizers for the quantization baselines (paper §II-B).
+//!
+//! * [`qsgd`]: QSGD [22] — per-bucket L2-norm scaling with `s` stochastic
+//!   levels; payload = norm (f32) + sign+level per coordinate.
+//! * [`ternary`]: TernGrad-style {-1, 0, +1} * scale quantization.
+//!
+//! Both return (packet, dequantized) so callers can byte-account the packet
+//! and apply the dequantized gradient.
+
+use crate::util::rng::Rng;
+
+/// QSGD with `levels` quantization levels and `bucket` coordinates per
+/// scaling group. Payload size: 4 bytes per bucket (norm) + ceil(bits)/8
+/// per coordinate where bits = 1 (sign) + ceil(log2(levels+1)).
+pub struct QsgdPacket {
+    pub bytes: usize,
+    pub dequant: Vec<f32>,
+}
+
+pub fn qsgd(g: &[f32], levels: u32, bucket: usize, rng: &mut Rng) -> QsgdPacket {
+    assert!(levels >= 1 && bucket >= 1);
+    let mut dequant = vec![0.0f32; g.len()];
+    let bits_per_coord = 1 + (32 - (levels as u32).leading_zeros()) as usize;
+    let mut bytes = 0usize;
+    for (bi, chunk) in g.chunks(bucket).enumerate() {
+        let norm = chunk.iter().map(|x| x * x).sum::<f32>().sqrt();
+        bytes += 4; // the bucket norm
+        if norm == 0.0 {
+            continue;
+        }
+        for (i, &x) in chunk.iter().enumerate() {
+            let r = x.abs() / norm * levels as f32;
+            let low = r.floor();
+            // Stochastic rounding: E[level] = r (unbiasedness, QSGD lemma 3.1)
+            let level = if rng.uniform() < r - low { low + 1.0 } else { low };
+            dequant[bi * bucket + i] = x.signum() * norm * level / levels as f32;
+        }
+        bytes += (chunk.len() * bits_per_coord).div_ceil(8);
+    }
+    QsgdPacket { bytes, dequant }
+}
+
+/// TernGrad-style ternarization: scale = max |g|, coords in {-1, 0, 1}
+/// chosen stochastically so E[q] = g.  Payload: 4 + 2 bits/coord.
+pub fn ternary(g: &[f32], rng: &mut Rng) -> QsgdPacket {
+    let scale = g.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    let mut dequant = vec![0.0f32; g.len()];
+    if scale > 0.0 {
+        for (i, &x) in g.iter().enumerate() {
+            let p = x.abs() / scale;
+            if rng.uniform() < p {
+                dequant[i] = x.signum() * scale;
+            }
+        }
+    }
+    QsgdPacket { bytes: 4 + (g.len() * 2).div_ceil(8), dequant }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qsgd_is_unbiased() {
+        let mut rng = Rng::new(17);
+        let g = vec![0.5f32, -0.25, 0.1, 0.0];
+        let trials = 20_000;
+        let mut mean = vec![0.0f64; g.len()];
+        for _ in 0..trials {
+            let p = qsgd(&g, 4, g.len(), &mut rng);
+            for (m, d) in mean.iter_mut().zip(&p.dequant) {
+                *m += *d as f64;
+            }
+        }
+        for (m, x) in mean.iter().zip(&g) {
+            assert!(
+                (m / trials as f64 - *x as f64).abs() < 0.01,
+                "E[q]={} vs {}", m / trials as f64, x
+            );
+        }
+    }
+
+    #[test]
+    fn qsgd_zero_vector() {
+        let mut rng = Rng::new(1);
+        let p = qsgd(&[0.0; 64], 8, 32, &mut rng);
+        assert!(p.dequant.iter().all(|&x| x == 0.0));
+        assert_eq!(p.bytes, 8); // two bucket norms only
+    }
+
+    #[test]
+    fn qsgd_packet_smaller_than_f32() {
+        let mut rng = Rng::new(2);
+        let g = rng.normal_vec(10_000, 1.0);
+        let p = qsgd(&g, 15, 512, &mut rng);
+        assert!(p.bytes < g.len() * 4 / 4, "bytes={}", p.bytes); // >4x smaller
+    }
+
+    #[test]
+    fn ternary_levels() {
+        let mut rng = Rng::new(3);
+        let g = vec![1.0f32, -0.5, 0.0];
+        let p = ternary(&g, &mut rng);
+        for (d, _x) in p.dequant.iter().zip(&g) {
+            assert!(*d == 0.0 || d.abs() == 1.0);
+        }
+        assert_eq!(p.dequant[2], 0.0);
+    }
+
+    #[test]
+    fn ternary_unbiased() {
+        let mut rng = Rng::new(4);
+        let g = vec![0.3f32, -0.7];
+        let trials = 30_000;
+        let mut mean = [0.0f64; 2];
+        for _ in 0..trials {
+            let p = ternary(&g, &mut rng);
+            mean[0] += p.dequant[0] as f64;
+            mean[1] += p.dequant[1] as f64;
+        }
+        assert!((mean[0] / trials as f64 - 0.3).abs() < 0.02);
+        assert!((mean[1] / trials as f64 + 0.7).abs() < 0.02);
+    }
+}

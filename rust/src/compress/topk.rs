@@ -1,0 +1,154 @@
+//! Exact top-k magnitude selection (paper §V-A, Algorithm 1).
+//!
+//! `threshold = min(top alpha% of |g|)`, realised with an O(n) partial
+//! selection (`select_nth_unstable`) on a scratch copy of magnitudes —
+//! this is the L3 hot-path version; the fused Pallas `sparsify` kernel
+//! consumes the threshold it produces (see python/compile/kernels/).
+
+/// Result of a top-k selection over a dense vector.
+#[derive(Debug, Clone, Default)]
+pub struct TopK {
+    /// Ascending indices of the selected entries.
+    pub indices: Vec<u32>,
+    /// Values at those indices (same order).
+    pub values: Vec<f32>,
+    /// The magnitude threshold actually used.
+    pub threshold: f32,
+}
+
+/// Number of elements a sparsity fraction keeps (at least 1).
+pub fn k_of(n: usize, fraction: f64) -> usize {
+    ((n as f64 * fraction).ceil() as usize).clamp(1, n)
+}
+
+/// Magnitude threshold that keeps ~k elements of `g` (O(n)).
+pub fn threshold_for_k(g: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= g.len());
+    let mut mags: Vec<f32> = g.iter().map(|x| x.abs()).collect();
+    let idx = g.len() - k;
+    let (_, thr, _) =
+        mags.select_nth_unstable_by(idx, f32::total_cmp);
+    *thr
+}
+
+/// Select the k largest-magnitude entries. Ties at the threshold are
+/// resolved by index order, and the result is always *exactly* k entries
+/// (the paper's rate accounting assumes a fixed payload size).
+pub fn top_k(g: &[f32], k: usize) -> TopK {
+    let threshold = threshold_for_k(g, k);
+    let mut indices = Vec::with_capacity(k + 8);
+    for (i, &v) in g.iter().enumerate() {
+        if v.abs() > threshold {
+            indices.push(i as u32);
+        }
+    }
+    // Fill the remainder with threshold-magnitude ties (index order).
+    if indices.len() < k {
+        for (i, &v) in g.iter().enumerate() {
+            if v.abs() == threshold {
+                indices.push(i as u32);
+                if indices.len() == k {
+                    break;
+                }
+            }
+        }
+    }
+    indices.sort_unstable();
+    indices.truncate(k);
+    let values = indices.iter().map(|&i| g[i as usize]).collect();
+    TopK { indices, values, threshold }
+}
+
+/// Gather values of `g` at `indices` (ScaleCom's CLT-k: follow the leader's
+/// index set).
+pub fn gather(g: &[f32], indices: &[u32]) -> Vec<f32> {
+    indices.iter().map(|&i| g[i as usize]).collect()
+}
+
+/// Scatter (indices, values) into a dense zero vector of length n.
+pub fn scatter(n: usize, indices: &[u32], values: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0; n];
+    for (&i, &v) in indices.iter().zip(values) {
+        out[i as usize] = v;
+    }
+    out
+}
+
+/// Scatter-add into an existing dense vector.
+pub fn scatter_add(dst: &mut [f32], indices: &[u32], values: &[f32]) {
+    for (&i, &v) in indices.iter().zip(values) {
+        dst[i as usize] += v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_exactly_k_largest() {
+        let g = vec![0.1, -5.0, 0.2, 3.0, -0.3, 0.05];
+        let t = top_k(&g, 2);
+        assert_eq!(t.indices, vec![1, 3]);
+        assert_eq!(t.values, vec![-5.0, 3.0]);
+    }
+
+    #[test]
+    fn handles_ties_deterministically() {
+        let g = vec![1.0; 10];
+        let t = top_k(&g, 3);
+        assert_eq!(t.indices, vec![0, 1, 2]);
+        assert_eq!(t.values.len(), 3);
+    }
+
+    #[test]
+    fn k_of_clamps() {
+        assert_eq!(k_of(1000, 0.001), 1);
+        assert_eq!(k_of(1_000_000, 0.001), 1000);
+        assert_eq!(k_of(5, 1e-9), 1);
+        assert_eq!(k_of(5, 2.0), 5);
+    }
+
+    #[test]
+    fn threshold_matches_sorted_definition() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let g = rng.normal_vec(997, 1.0);
+        let k = 50;
+        let thr = threshold_for_k(&g, k);
+        let mut mags: Vec<f32> = g.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert_eq!(thr, mags[k - 1]);
+    }
+
+    #[test]
+    fn scatter_roundtrip() {
+        let g = vec![0.0, 2.0, 0.0, -1.0];
+        let t = top_k(&g, 2);
+        assert_eq!(scatter(4, &t.indices, &t.values), g);
+    }
+
+    #[test]
+    fn gather_follows_leader_indices() {
+        let g = vec![10., 20., 30., 40.];
+        assert_eq!(gather(&g, &[3, 0]), vec![40., 10.]);
+    }
+
+    #[test]
+    fn top_k_full_vector() {
+        let g = vec![1.0, -2.0];
+        let t = top_k(&g, 2);
+        assert_eq!(t.indices, vec![0, 1]);
+    }
+}
+
+#[cfg(test)]
+mod debug_tests {
+    use super::*;
+
+    #[test]
+    fn top_k_on_zero_memory() {
+        let g = vec![0.0f32; 100];
+        let t = top_k(&g, 5);
+        assert_eq!(t.indices.len(), 5, "{t:?}");
+    }
+}

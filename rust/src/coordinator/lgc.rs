@@ -1,0 +1,490 @@
+//! LGC — the paper's contribution, both communication-pattern instances.
+//!
+//! Shared structure (Algorithm 1 / 2):
+//!   phase 1 (dense):      plain dense exchange
+//!   phase 2 (top-k):      per-node top-mu EF selection transmitted like
+//!                         DGC, while the autoencoder trains online on the
+//!                         observed value-vectors
+//!   phase 3 (compressed): top-mu value-vectors flow *through* the learned
+//!                         compressor
+//!
+//! Support-set protocol clarification (DESIGN.md §6.6): in phase 3 the
+//! per-iteration leader's top-mu index set defines every node's selection
+//! (ScaleCom's CLT-k rule, which §V-A prescribes for ring-allreduce; we
+//! apply it to the PS pattern's phase 3 too so the master can scatter
+//! reconstructions without per-node index uploads — this is what makes the
+//! paper's "innovation-only" rate for non-leader workers realizable).
+//!
+//! * PS (§V-B1): leader uploads latent + coded indices (+ its innovation);
+//!   every other worker uploads only its innovation (top 10% of its
+//!   value-vector). The master decodes per-node with decoder D_c^k and the
+//!   node's innovation, averages, scatters.
+//! * RAR (§V-B2): every node encodes its value-vector; the *latents* are
+//!   ring-allreduced; every node decodes the averaged latent. The AE
+//!   weights are broadcast once when phase 3 begins (rate counted).
+
+use anyhow::Result;
+
+use crate::baselines::{ExchangeCtx, MidStrategy};
+use crate::compress::autoencoder::{AeCompressor, Pattern};
+use crate::compress::{index_coding, topk, Correction, FeedbackMemory};
+use crate::coordinator::ring;
+use crate::coordinator::scheduler::Phase;
+use crate::metrics::{Kind, Ledger};
+
+/// Knobs shared by both LGC instances (subset of [`crate::config::TrainConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LgcParams {
+    pub momentum: f32,
+    pub innovation_frac: f64,
+    pub ae_lr: f32,
+    pub lambda2: f32,
+    pub ae_inner_steps: usize,
+    pub ae_gate: f32,
+    pub seed: u64,
+}
+
+/// Stability guard for the compressed phase.  Error feedback makes the
+/// EF memories grow whenever the reconstruction drains them slower than
+/// momentum-corrected gradients flow in, so any bound tied to the memory
+/// norm grows with it and cannot prevent divergence.  The correct trust
+/// region is the *fresh gradient* scale: the applied update may never
+/// exceed `CLIP_MULT x || mean of this iteration\'s raw mid gradients ||`.
+/// Clipped mass is not lost — the EF correction re-accumulates it.
+const CLIP_MULT: f32 = 2.0;
+
+fn clip_to_gradient_scale(rec: &mut [f32], grads: &[Vec<f32>]) {
+    // Non-finite outputs zero out entirely (EF retransmits the mass).
+    if rec.iter().any(|x| !x.is_finite()) {
+        rec.iter_mut().for_each(|x| *x = 0.0);
+        return;
+    }
+    let n = grads[0].len();
+    let k = grads.len() as f32;
+    let mut norm2 = 0.0f64;
+    for j in 0..n {
+        let m: f32 = grads.iter().map(|g| g[j]).sum::<f32>() / k;
+        norm2 += (m as f64) * (m as f64);
+    }
+    let target = (norm2.sqrt() as f32) * CLIP_MULT;
+    let rec_norm = rec.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if rec_norm > target && rec_norm > 0.0 {
+        let scale = target / rec_norm;
+        rec.iter_mut().for_each(|x| *x *= scale);
+    }
+}
+
+pub struct LgcCommon {
+    fbs: Vec<FeedbackMemory>,
+    pub ae: AeCompressor,
+    mu: usize,
+    innovation_frac: f64,
+    ae_lr: f32,
+    lambda2: f32,
+    ae_inner_steps: usize,
+    ae_gate: f32,
+    /// Sticky readiness gate: compressed updates engage only after the
+    /// online reconstruction loss (unit-RMS MSE) clears AE_READY_GATE.
+    /// An under-trained decoder emits noise at gradient scale; applying
+    /// it as the update stalls or diverges training (the paper trains
+    /// "until it can be used", §V-B — the gate operationalizes that).
+    ae_ready: bool,
+}
+
+/// Rec-loss averaging window for the readiness gate.
+const AE_GATE_WINDOW: usize = 8;
+
+/// Whether nodes re-accumulate the shared-reconstruction error into their
+/// EF memories.  Algorithm 1/2 discard it (only non-selected coordinates
+/// accumulate); with the gradient-scale clip that is also the stabler
+/// configuration — EF-on-rec keeps ~all selected mass in the memory
+/// (drainage << inflow), ballooning it without improving updates.
+/// Kept as a switch for the ablation (LGC_EF_ON_REC=1).
+fn ef_on_rec() -> bool {
+    std::env::var("LGC_EF_ON_REC").is_ok()
+}
+
+impl LgcCommon {
+    fn new(nodes: usize, n: usize, mu: usize, p: &LgcParams, ae: AeCompressor) -> Self {
+        LgcCommon {
+            fbs: (0..nodes)
+                .map(|_| FeedbackMemory::new(n, Correction::Momentum, p.momentum))
+                .collect(),
+            ae,
+            mu,
+            innovation_frac: p.innovation_frac,
+            ae_lr: p.ae_lr,
+            lambda2: p.lambda2,
+            ae_inner_steps: p.ae_inner_steps.max(1),
+            ae_gate: p.ae_gate,
+            ae_ready: false,
+        }
+    }
+
+    /// Check (and latch) autoencoder readiness.
+    fn check_ae_ready(&mut self) -> bool {
+        if self.ae_ready {
+            return true;
+        }
+        let losses = &self.ae.train_losses;
+        if losses.len() >= AE_GATE_WINDOW {
+            let tail = &losses[losses.len() - AE_GATE_WINDOW..];
+            let mean = tail.iter().map(|(r, _)| r).sum::<f32>() / AE_GATE_WINDOW as f32;
+            if mean < self.ae_gate {
+                self.ae_ready = true;
+            }
+        }
+        self.ae_ready
+    }
+
+    fn dense_exchange(&self, grads: &[Vec<f32>], ledger: &mut Ledger) -> Vec<f32> {
+        let n = grads[0].len();
+        let mut mean = vec![0.0f32; n];
+        for (node, g) in grads.iter().enumerate() {
+            ledger.record(node, Kind::Dense, n * 4);
+            for (m, x) in mean.iter_mut().zip(g) {
+                *m += x;
+            }
+        }
+        mean.iter_mut().for_each(|m| *m /= grads.len() as f32);
+        mean
+    }
+
+    /// Innovation component of a value-vector: top `innovation_frac` of
+    /// |values| kept at their positions, zeros elsewhere (Algorithm 1's
+    /// mask_inv).  Returns (dense mu-vector, wire bytes).
+    fn innovation(&self, values: &[f32]) -> Result<(Vec<f32>, usize)> {
+        let k_inn = topk::k_of(values.len(), self.innovation_frac);
+        let sel = topk::top_k(values, k_inn);
+        let dense = topk::scatter(values.len(), &sel.indices, &sel.values);
+        let bytes =
+            sel.values.len() * 4 + index_coding::encode(&sel.indices, values.len())?.len();
+        Ok((dense, bytes))
+    }
+
+    /// Phase-2 step shared by both patterns: leader-support top-mu
+    /// selection, transmitted values (+ the leader's ordered index
+    /// broadcast), exact-value updates, AE online training.
+    ///
+    /// The selection uses the same leader-signed-order protocol as phase 3
+    /// (see leader_support) so the autoencoder trains on exactly the
+    /// distribution it will compress — training it on per-node index-order
+    /// vectors and deploying it on leader-ordered ones is a train/serve
+    /// skew that cancels the learned gains.
+    fn topk_phase(
+        &mut self,
+        ctx: &mut ExchangeCtx,
+        grads: &[Vec<f32>],
+        ps: bool,
+    ) -> Result<Vec<f32>> {
+        let n = grads[0].len();
+        let nodes = grads.len();
+        let leader = if ps { 0 } else { ctx.iter % nodes };
+        let indices = self.leader_support_inner(ctx, grads, leader)?;
+        let mut mean = vec![0.0f32; n];
+        let mut value_vectors = Vec::with_capacity(nodes);
+        for node in 0..nodes {
+            let vals = self.fbs[node].take_at(&indices);
+            ctx.ledger.record(node, Kind::Values, vals.len() * 4);
+            topk::scatter_add(&mut mean, &indices, &vals);
+            value_vectors.push(vals);
+        }
+        mean.iter_mut().for_each(|m| *m /= nodes as f32);
+
+        // Online AE training on the just-observed value-vectors.  The data
+        // already sits where the trainer runs (master for PS, the gathered
+        // trainer node for RAR), so the inner steps add compute, not bytes
+        // — they recover the paper's 200-300-iteration AE training budget
+        // within our scaled phase-2 window.
+        if ps {
+            let innovations: Vec<Vec<f32>> = value_vectors
+                .iter()
+                .map(|v| self.innovation(v).map(|(d, _)| d))
+                .collect::<Result<_>>()?;
+            for _ in 0..self.ae_inner_steps {
+                let ridx = ctx.rng.below(nodes);
+                self.ae.train_step(
+                    ctx.engine,
+                    &value_vectors,
+                    Some(&innovations),
+                    ridx,
+                    self.ae_lr,
+                    1.0,
+                    self.lambda2,
+                )?;
+            }
+        } else {
+            // RAR: the trainer node gathers the other nodes' value-vectors
+            // (paper Fig. 7); count those uplinks.
+            let trainer = ctx.iter % nodes;
+            for node in 0..nodes {
+                if node != trainer {
+                    ctx.ledger.record(node, Kind::Values, self.mu * 4);
+                }
+            }
+            for _ in 0..self.ae_inner_steps {
+                self.ae
+                    .train_step(ctx.engine, &value_vectors, None, 0, self.ae_lr, 1.0, 0.0)?;
+            }
+        }
+        Ok(mean)
+    }
+
+    /// Leader-driven shared support for phase 3.
+    ///
+    /// PS uses a fixed leader (the worker hosting the trained encoder,
+    /// §V-B1: "the weights of the learned encoder are transferred to one
+    /// of the worker nodes"); RAR rotates it per iteration (§V-A).
+    /// The support is broadcast in the leader's *signed-descending-value*
+    /// order, so every node's gathered value-vector is a near-monotone
+    /// curve (large positive -> large negative).  That smoothness is what
+    /// the 1-D conv autoencoder exploits; with index-order vectors the
+    /// input is position-iid heavy-tailed noise and no 4:1 learned coder
+    /// can reconstruct it (rate-distortion, DESIGN.md §6.6).  The order-
+    /// significant index payload is DEFLATE'd raw (encode_ordered) and
+    /// byte-counted as such.
+    fn leader_support_inner(
+        &mut self,
+        ctx: &mut ExchangeCtx,
+        grads: &[Vec<f32>],
+        leader: usize,
+    ) -> Result<Vec<u32>> {
+        for (node, g) in grads.iter().enumerate() {
+            self.fbs[node].accumulate(g);
+        }
+        let mem = self.fbs[leader].memory();
+        let sel = topk::top_k(mem, self.mu);
+        debug_assert_eq!(sel.indices.len(), self.mu);
+        let mut ordered = sel.indices;
+        ordered.sort_by(|&a, &b| {
+            mem[b as usize]
+                .partial_cmp(&mem[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        ctx.ledger.record(
+            leader,
+            Kind::Indices,
+            index_coding::encode_ordered(&ordered)?.len(),
+        );
+        Ok(ordered)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameter-server instance
+// ---------------------------------------------------------------------------
+
+pub struct LgcPs {
+    c: LgcCommon,
+}
+
+impl LgcPs {
+    pub fn new(
+        engine: &crate::runtime::Engine,
+        nodes: usize,
+        n: usize,
+        mu: usize,
+        p: LgcParams,
+    ) -> Result<Self> {
+        let ae = AeCompressor::new(engine, mu, nodes, Pattern::ParamServer, p.seed)?;
+        Ok(LgcPs { c: LgcCommon::new(nodes, n, mu, &p, ae) })
+    }
+
+    pub fn ae(&self) -> &AeCompressor {
+        &self.c.ae
+    }
+}
+
+impl MidStrategy for LgcPs {
+    fn name(&self) -> &'static str {
+        "lgc_ps"
+    }
+
+    fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
+        match ctx.phase {
+            Phase::Dense => Ok(self.c.dense_exchange(grads, ctx.ledger)),
+            Phase::TopK => self.c.topk_phase(ctx, grads, true),
+            Phase::Compressed if !self.c.check_ae_ready() => {
+                // AE not converged yet: stay on exact top-k updates and
+                // keep training it (bytes counted by the top-k path).
+                self.c.topk_phase(ctx, grads, true)
+            }
+            Phase::Compressed => {
+                let n = grads[0].len();
+                let nodes = grads.len();
+                // Fixed leader: worker 0 hosts the trained encoder.
+                let leader = 0usize;
+                let indices = self.c.leader_support_inner(ctx, grads, leader)?;
+
+                // Every node gathers its EF memory at the shared support.
+                let value_vectors: Vec<Vec<f32>> = (0..nodes)
+                    .map(|node| self.c.fbs[node].take_at(&indices))
+                    .collect();
+
+                // Leader uploads the compressed common representation
+                // (latent + RMS scale).
+                let (latent, _s0) = self.c.ae.encode(ctx.engine, &value_vectors[leader])?;
+                ctx.ledger.record(leader, Kind::Latent, self.c.ae.latent_bytes());
+
+                // Every worker uploads its innovation (+ its scale, 4 B);
+                // master decodes with the per-node decoder and averages
+                // (eqs. 12-13).
+                let mut mean_vals = vec![0.0f32; self.c.mu];
+                for node in 0..nodes {
+                    let (innov, bytes) = self.c.innovation(&value_vectors[node])?;
+                    ctx.ledger.record(node, Kind::Values, bytes + 4);
+                    let s_k = crate::compress::autoencoder::rms(&value_vectors[node]);
+                    let rec =
+                        self.c.ae.decode_ps(ctx.engine, node, &latent, &innov, s_k)?;
+                    for (m, x) in mean_vals.iter_mut().zip(&rec) {
+                        *m += x;
+                    }
+                }
+                mean_vals.iter_mut().for_each(|m| *m /= nodes as f32);
+                clip_to_gradient_scale(&mut mean_vals, grads);
+                // Optional error feedback on the shared reconstruction
+                // (see ef_on_rec; default off, per Algorithm 1).
+                if ef_on_rec() {
+                    for node in 0..nodes {
+                        let e: Vec<f32> = value_vectors[node]
+                            .iter()
+                            .zip(&mean_vals)
+                            .map(|(v, r)| v - r)
+                            .collect();
+                        self.c.fbs[node].add_at(&indices, &e);
+                    }
+                }
+                if std::env::var("LGC_DEBUG").is_ok() {
+                    let mut true_mean = vec![0.0f32; self.c.mu];
+                    for v in &value_vectors {
+                        for (t, x) in true_mean.iter_mut().zip(v) {
+                            *t += x / nodes as f32;
+                        }
+                    }
+                    let err: f32 = mean_vals.iter().zip(&true_mean)
+                        .map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+                    let nrm: f32 = true_mean.iter().map(|x| x * x).sum::<f32>().sqrt();
+                    eprintln!("DBG ps rec rel_err={:.3} ||true||={:.4}", err / nrm.max(1e-9), nrm);
+                }
+                Ok(topk::scatter(n, &indices, &mean_vals))
+            }
+        }
+    }
+
+    fn ae_losses(&self) -> &[(f32, f32)] {
+        &self.c.ae.train_losses
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ring-allreduce instance
+// ---------------------------------------------------------------------------
+
+pub struct LgcRar {
+    c: LgcCommon,
+    /// AE weights are broadcast once when phase 3 begins (§V-B2).
+    weights_broadcast: bool,
+}
+
+impl LgcRar {
+    pub fn new(
+        engine: &crate::runtime::Engine,
+        nodes: usize,
+        n: usize,
+        mu: usize,
+        p: LgcParams,
+    ) -> Result<Self> {
+        let ae = AeCompressor::new(engine, mu, nodes, Pattern::RingAllreduce, p.seed)?;
+        Ok(LgcRar {
+            c: LgcCommon::new(nodes, n, mu, &p, ae),
+            weights_broadcast: false,
+        })
+    }
+
+    pub fn ae(&self) -> &AeCompressor {
+        &self.c.ae
+    }
+}
+
+impl MidStrategy for LgcRar {
+    fn name(&self) -> &'static str {
+        "lgc_rar"
+    }
+
+    fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
+        match ctx.phase {
+            Phase::Dense => {
+                // Dense ring-allreduce of raw gradients.
+                let mut work = grads.to_vec();
+                Ok(ring::ring_allreduce_mean(&mut work, ctx.ledger, Kind::Dense))
+            }
+            Phase::TopK => self.c.topk_phase(ctx, grads, false),
+            Phase::Compressed if !self.c.check_ae_ready() => {
+                self.c.topk_phase(ctx, grads, false)
+            }
+            Phase::Compressed => {
+                let n = grads[0].len();
+                let nodes = grads.len();
+                if !self.weights_broadcast {
+                    // One-time AE weight broadcast from the trainer node
+                    // (counted in totals; excluded from per-iter rates).
+                    ctx.ledger.record_oneoff(
+                        ctx.iter % nodes,
+                        Kind::AeWeights,
+                        self.c.ae.param_bytes() * (nodes - 1),
+                    );
+                    self.weights_broadcast = true;
+                }
+                let indices = self.c.leader_support_inner(ctx, grads, ctx.iter % nodes)?;
+                // Encode each node's value-vector; ring-allreduce the
+                // latents (scales ride along: +4 B is already inside
+                // latent_bytes and the ring traffic is measured below).
+                let mut scales = Vec::with_capacity(nodes);
+                let mut value_vectors = Vec::with_capacity(nodes);
+                let mut latents: Vec<Vec<f32>> = (0..nodes)
+                    .map(|node| {
+                        let vals = self.c.fbs[node].take_at(&indices);
+                        let (lat, s) = self.c.ae.encode(ctx.engine, &vals)?;
+                        scales.push(s);
+                        value_vectors.push(vals);
+                        Ok(lat)
+                    })
+                    .collect::<Result<_>>()?;
+                let latent_avg =
+                    ring::ring_allreduce_mean(&mut latents, ctx.ledger, Kind::Latent);
+                let scale_avg = scales.iter().sum::<f32>() / nodes as f32;
+                // Every node decodes the same averaged latent (eq. 19);
+                // compute is replicated, the result identical.
+                let mut rec = self.c.ae.decode_rar(ctx.engine, &latent_avg, scale_avg)?;
+                clip_to_gradient_scale(&mut rec, grads);
+                // Optional error feedback on the shared reconstruction
+                // (see ef_on_rec; default off, per Algorithm 2).
+                if ef_on_rec() {
+                    for node in 0..nodes {
+                        let e: Vec<f32> = value_vectors[node]
+                            .iter()
+                            .zip(&rec)
+                            .map(|(v, r)| v - r)
+                            .collect();
+                        self.c.fbs[node].add_at(&indices, &e);
+                    }
+                }
+                if std::env::var("LGC_DEBUG").is_ok() {
+                    let nrm = |v: &[f32]| v.iter().map(|x| x * x).sum::<f32>().sqrt();
+                    let vbar: f32 =
+                        value_vectors.iter().map(|v| nrm(v)).sum::<f32>() / nodes as f32;
+                    eprintln!(
+                        "DBG rar it={} ||rec||={:.3} ||v||~{:.3} scale_avg={:.4} mem0={:.3}",
+                        ctx.iter, nrm(&rec), vbar, scale_avg,
+                        nrm(self.c.fbs[0].memory())
+                    );
+                }
+                Ok(topk::scatter(n, &indices, &rec))
+            }
+        }
+    }
+
+    fn ae_losses(&self) -> &[(f32, f32)] {
+        &self.c.ae.train_losses
+    }
+}

@@ -1,0 +1,374 @@
+//! L3 coordinator: the distributed-training loop (paper §V).
+//!
+//! [`Trainer`] simulates K synchronous data-parallel nodes inside one
+//! process: every node is a (data shard, error-feedback memory) pair; the
+//! model parameters are stored once because synchronous SGD keeps replicas
+//! identical.  All compute (grad steps, eval, autoencoder) executes through
+//! the PJRT runtime; all communication flows through byte-accounted
+//! exchanges (see [`crate::metrics::Ledger`]).
+//!
+//! Per-group gradient handling (paper §VI-A):
+//!   first layer — always dense (all methods)
+//!   mid layers  — the selected [`MidStrategy`] (baselines or LGC)
+//!   last layer  — dense for Baseline/QSGD; top-k + EF for sparse methods
+
+pub mod lgc;
+pub mod ring;
+pub mod scheduler;
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::baselines::{Baseline, Dgc, ExchangeCtx, HardThreshold, MidStrategy, Qsgd, ScaleCom, SparseGd};
+use crate::compress::{index_coding, topk, Correction, FeedbackMemory};
+use crate::config::{Method, TrainConfig};
+use crate::data::{self, Dataset};
+use crate::metrics::{Kind, Ledger};
+use crate::model::{Group, Model};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+use scheduler::{phase_and_alpha, Phase};
+
+/// Step LR decay mirroring the paper's schedule ("initial learning rate of
+/// 0.1 that decays by 10 every 30 epochs" over ~90 epochs, SS VI-B):
+/// x1 for the first half, x0.1 to 80%, x0.01 after.  Besides fidelity,
+/// this is what keeps EF methods from blowing up logits after the
+/// separable synthetic tasks are fully fit.
+pub fn lr_at(cfg: &TrainConfig, it: usize) -> f32 {
+    if it < cfg.steps / 2 {
+        cfg.lr
+    } else if it < cfg.steps * 4 / 5 {
+        cfg.lr * 0.1
+    } else {
+        cfg.lr * 0.01
+    }
+}
+
+/// One recorded training point.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    pub iter: usize,
+    pub train_loss: f32,
+    pub train_acc: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub method: Method,
+    pub model: String,
+    pub nodes: usize,
+    pub steps: usize,
+    pub curve: Vec<CurvePoint>,
+    /// (iter, eval_loss, eval_acc) on held-out batches.
+    pub evals: Vec<(usize, f32, f32)>,
+    pub ledger: Ledger,
+    pub phase_time: [Duration; 3],
+    pub phase_iters: [usize; 3],
+    /// AE (rec, sim) loss trace (empty for baselines) — Fig. 14.
+    pub ae_losses: Vec<(f32, f32)>,
+    pub final_eval: (f32, f32),
+    /// Uncompressed per-node bytes/iteration (the CR denominator).
+    pub dense_bytes_per_node: u64,
+    /// Wall-clock breakdown: grad-step HLO, mid exchange (incl. AE HLOs),
+    /// first/last exchanges + optimizer update, per training phase.
+    pub time_grad: Duration,
+    pub time_exchange: Duration,
+    pub time_update: Duration,
+}
+
+impl TrainResult {
+    /// Steady-state mean uplink bytes/iteration across all nodes.
+    /// The window never reaches back past the start of phase 3 (or the
+    /// final phase actually reached), so warmup traffic is excluded.
+    pub fn steady_total_bytes_per_iter(&self, window: usize) -> f64 {
+        let steady_iters = *self.phase_iters.iter().rev().find(|&&n| n > 0).unwrap_or(&1);
+        self.ledger.steady_bytes_per_iter(window.min(steady_iters.max(1)))
+    }
+
+    /// Compression ratio vs uncompressed dense training (mean node,
+    /// steady state) — the paper's "Ratio" column.
+    pub fn compression_ratio(&self) -> f64 {
+        let per_node = self.steady_total_bytes_per_iter(50) / self.nodes as f64;
+        self.dense_bytes_per_node as f64 / per_node.max(1e-9)
+    }
+
+    /// Mean steady-state bytes/iter per node ("Info size" column, MB).
+    pub fn info_size_mb(&self) -> f64 {
+        self.steady_total_bytes_per_iter(50) / self.nodes as f64 / 1e6
+    }
+
+    pub fn final_train_loss(&self) -> f32 {
+        self.curve.last().map(|c| c.train_loss).unwrap_or(f32::NAN)
+    }
+}
+
+/// Build the mid-group strategy for a config.
+fn make_strategy(
+    engine: &Engine,
+    cfg: &TrainConfig,
+    n_mid: usize,
+    mu: usize,
+) -> Result<Box<dyn MidStrategy>> {
+    let ramp = cfg.warmup_iters + cfg.ae_train_iters;
+    Ok(match cfg.method {
+        Method::Baseline => Box::new(Baseline),
+        Method::SparseGd => Box::new(SparseGd::new(cfg.nodes, n_mid, cfg.alpha)),
+        Method::Dgc => Box::new(Dgc::new(cfg.nodes, n_mid, cfg.alpha, ramp, cfg.momentum)),
+        Method::ScaleCom => Box::new(ScaleCom::new(cfg.nodes, n_mid, cfg.alpha, cfg.momentum)),
+        Method::Qsgd => Box::new(Qsgd { levels: cfg.qsgd_levels, bucket: 512 }),
+        Method::Threshold => Box::new(HardThreshold::new(cfg.nodes, n_mid, cfg.alpha)),
+        Method::LgcPs => {
+            let p = lgc::LgcParams {
+                momentum: cfg.momentum,
+                innovation_frac: cfg.innovation_frac,
+                ae_lr: cfg.ae_lr,
+                lambda2: cfg.lambda2,
+                ae_inner_steps: cfg.ae_inner_steps,
+                ae_gate: cfg.ae_gate,
+                seed: cfg.seed ^ 0xAE,
+            };
+            Box::new(lgc::LgcPs::new(engine, cfg.nodes, n_mid, mu, p)?)
+        }
+        Method::LgcRar => {
+            let p = lgc::LgcParams {
+                momentum: cfg.momentum,
+                innovation_frac: cfg.innovation_frac,
+                ae_lr: cfg.ae_lr,
+                lambda2: 0.0,
+                ae_inner_steps: cfg.ae_inner_steps,
+                ae_gate: cfg.ae_gate,
+                seed: cfg.seed ^ 0xAE,
+            };
+            Box::new(lgc::LgcRar::new(engine, cfg.nodes, n_mid, mu, p)?)
+        }
+    })
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub cfg: TrainConfig,
+    pub model: Model,
+    dataset: Box<dyn Dataset>,
+    strategy: Box<dyn MidStrategy>,
+    /// Per-node EF memories for the last-layer group (sparse methods).
+    last_fbs: Vec<FeedbackMemory>,
+    rng: Rng,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: TrainConfig) -> Result<Trainer<'e>> {
+        let meta = engine.manifest.model(&cfg.model).clone();
+        let mut model = Model::new(&meta, cfg.seed);
+        // Momentum lives in the optimizer for Baseline/QSGD, and in the
+        // EF memories (momentum correction) for the sparse methods
+        // (Table III / DGC §3.2) — not in both.
+        model.momentum = match cfg.method {
+            Method::Baseline | Method::Qsgd => cfg.momentum,
+            _ => 0.0,
+        };
+        model.weight_decay = cfg.weight_decay;
+        let dataset = data::for_model(&meta, cfg.seed ^ 0xDA7A);
+        let n_mid = meta.group_len(&meta.mid_param_idx);
+        let strategy = make_strategy(engine, &cfg, n_mid, meta.mu)?;
+        let n_last = meta.group_len(&meta.last_param_idx);
+        let last_correction = match cfg.method {
+            Method::SparseGd | Method::Threshold => Correction::Plain,
+            _ => Correction::Momentum,
+        };
+        let last_fbs = (0..cfg.nodes)
+            .map(|_| FeedbackMemory::new(n_last, last_correction, cfg.momentum))
+            .collect();
+        let rng = Rng::new(cfg.seed ^ 0x7124);
+        Ok(Trainer { engine, cfg, model, dataset, strategy, last_fbs, rng })
+    }
+
+    /// Last-layer exchange: dense for Baseline/QSGD (and everyone's dense
+    /// phase), top-k + EF otherwise (§VI-A: "top-magnitude values ...
+    /// without further compression").
+    fn last_exchange(
+        &mut self,
+        phase: Phase,
+        grads: &[Vec<f32>],
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        let n = grads[0].len();
+        let nodes = grads.len();
+        let dense = matches!(self.cfg.method, Method::Baseline | Method::Qsgd)
+            || phase == Phase::Dense;
+        let mut mean = vec![0.0f32; n];
+        if dense {
+            for (node, g) in grads.iter().enumerate() {
+                ledger.record(node, Kind::Dense, n * 4);
+                for (m, x) in mean.iter_mut().zip(g) {
+                    *m += x;
+                }
+            }
+        } else {
+            let k_sel = topk::k_of(n, self.cfg.alpha);
+            for (node, g) in grads.iter().enumerate() {
+                self.last_fbs[node].accumulate(g);
+                let sel = self.last_fbs[node].select_and_clear(k_sel);
+                ledger.record(node, Kind::Values, sel.values.len() * 4);
+                ledger.record(
+                    node,
+                    Kind::Indices,
+                    index_coding::encode(&sel.indices, n)?.len(),
+                );
+                topk::scatter_add(&mut mean, &sel.indices, &sel.values);
+            }
+        }
+        mean.iter_mut().for_each(|m| *m /= nodes as f32);
+        Ok(mean)
+    }
+
+    /// Run the full training loop.
+    pub fn run(mut self) -> Result<TrainResult> {
+        let meta = self.model.meta.clone();
+        let mut ledger = Ledger::new();
+        let mut curve = Vec::with_capacity(self.cfg.steps);
+        let mut evals = Vec::new();
+        let mut phase_time = [Duration::ZERO; 3];
+        let mut phase_iters = [0usize; 3];
+        let mut time_grad = Duration::ZERO;
+        let mut time_exchange = Duration::ZERO;
+        let mut time_update = Duration::ZERO;
+
+        for it in 0..self.cfg.steps {
+            let (phase, _alpha) = phase_and_alpha(&self.cfg, it);
+            ledger.set_phase(phase.index() as u8 + 1);
+            let t0 = Instant::now();
+
+            // --- local compute: one grad step per node -------------------
+            let t_grad0 = Instant::now();
+            let mut first_g = Vec::with_capacity(self.cfg.nodes);
+            let mut mid_g = Vec::with_capacity(self.cfg.nodes);
+            let mut last_g = Vec::with_capacity(self.cfg.nodes);
+            let mut loss_sum = 0.0f32;
+            let mut acc_sum = 0.0f32;
+            for node in 0..self.cfg.nodes {
+                let batch = self.dataset.batch(node, it);
+                let (loss, acc, grads) = self.model.grad_step(self.engine, &batch)?;
+                anyhow::ensure!(
+                    loss.is_finite(),
+                    "training diverged: non-finite loss at iter {it}, node {node} \
+                     (method {}, lr {})",
+                    self.cfg.method.name(),
+                    self.cfg.lr
+                );
+                loss_sum += loss;
+                acc_sum += acc;
+                first_g.push(self.model.flatten_group(&grads, Group::First));
+                mid_g.push(self.model.flatten_group(&grads, Group::Mid));
+                last_g.push(self.model.flatten_group(&grads, Group::Last));
+            }
+
+            time_grad += t_grad0.elapsed();
+
+            // --- exchanges -----------------------------------------------
+            let t_ex0 = Instant::now();
+            // First layer: always dense (all methods, §VI-A).
+            let n_first = first_g[0].len();
+            let mut first_mean = vec![0.0f32; n_first];
+            for (node, g) in first_g.iter().enumerate() {
+                ledger.record(node, Kind::Dense, n_first * 4);
+                for (m, x) in first_mean.iter_mut().zip(g) {
+                    *m += x;
+                }
+            }
+            first_mean.iter_mut().for_each(|m| *m /= self.cfg.nodes as f32);
+
+            let mid_mean = {
+                let mut ctx = ExchangeCtx {
+                    engine: self.engine,
+                    ledger: &mut ledger,
+                    iter: it,
+                    phase,
+                    alpha: self.cfg.alpha,
+                    fp16: self.cfg.fp16_values,
+                    rng: &mut self.rng,
+                };
+                self.strategy.exchange(&mut ctx, &mid_g)?
+            };
+            let last_mean = self.last_exchange(phase, &last_g, &mut ledger)?;
+            time_exchange += t_ex0.elapsed();
+
+            // --- update ---------------------------------------------------
+            let t_up0 = Instant::now();
+            self.model.apply_update(
+                &[
+                    (Group::First, first_mean),
+                    (Group::Mid, mid_mean),
+                    (Group::Last, last_mean),
+                ],
+                lr_at(&self.cfg, it),
+            );
+            time_update += t_up0.elapsed();
+            ledger.end_iteration();
+
+            let dt = t0.elapsed();
+            phase_time[phase.index()] += dt;
+            phase_iters[phase.index()] += 1;
+
+            curve.push(CurvePoint {
+                iter: it,
+                train_loss: loss_sum / self.cfg.nodes as f32,
+                train_acc: acc_sum / self.cfg.nodes as f32,
+            });
+
+            if self.cfg.eval_every > 0 && (it + 1) % self.cfg.eval_every == 0 {
+                let (l, a) = self.evaluate()?;
+                evals.push((it, l, a));
+                if self.cfg.verbose {
+                    eprintln!(
+                        "[{}] it {:>5} phase {:<10} train_loss {:.4} eval_loss {:.4} eval_acc {:.4}",
+                        self.strategy.name(),
+                        it,
+                        phase.name(),
+                        curve.last().unwrap().train_loss,
+                        l,
+                        a
+                    );
+                }
+            }
+        }
+
+        let final_eval = self.evaluate()?;
+        Ok(TrainResult {
+            method: self.cfg.method,
+            model: self.cfg.model.clone(),
+            nodes: self.cfg.nodes,
+            steps: self.cfg.steps,
+            curve,
+            evals,
+            ledger,
+            phase_time,
+            phase_iters,
+            ae_losses: self.strategy.ae_losses().to_vec(),
+            final_eval,
+            dense_bytes_per_node: (meta.n_params * 4) as u64,
+            time_grad,
+            time_exchange,
+            time_update,
+        })
+    }
+
+    /// Mean loss/acc over the held-out eval batches.
+    pub fn evaluate(&self) -> Result<(f32, f32)> {
+        let mut l = 0.0;
+        let mut a = 0.0;
+        for i in 0..self.cfg.eval_batches {
+            let b = self.dataset.eval_batch(i);
+            let (li, ai) = self.model.evaluate(self.engine, &b)?;
+            l += li;
+            a += ai;
+        }
+        let n = self.cfg.eval_batches as f32;
+        Ok((l / n, a / n))
+    }
+}
+
+/// Convenience: build + run in one call.
+pub fn train(engine: &Engine, cfg: TrainConfig) -> Result<TrainResult> {
+    Trainer::new(engine, cfg)?.run()
+}

@@ -1,0 +1,166 @@
+//! Ring-allreduce protocol (paper §II-A, Fig. 2) — an actual chunked
+//! implementation, not a cost formula.
+//!
+//! K nodes each hold a vector; the vector is split into K chunks. K-1
+//! reduce-scatter steps (each node sends one chunk to its successor, which
+//! accumulates) leave node i holding the fully-reduced chunk (i+1) mod K;
+//! K-1 allgather steps circulate the reduced chunks.  Every transmission
+//! is byte-accounted against the sending node, so the well-known
+//! 2(K-1)/K * size bound is *measured* by the tests rather than assumed.
+
+use crate::metrics::{Kind, Ledger};
+
+/// Chunk boundaries: near-equal split of `n` into `k` chunks.
+fn chunks(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut off = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push(off..off + len);
+        off += len;
+    }
+    out
+}
+
+/// In-place ring allreduce (sum) over `vectors` (one per node).
+/// Returns the reduced sum (identical at every node afterwards).
+pub fn ring_allreduce_sum(
+    vectors: &mut [Vec<f32>],
+    ledger: &mut Ledger,
+    kind: Kind,
+) -> Vec<f32> {
+    let k = vectors.len();
+    assert!(k >= 1);
+    let n = vectors[0].len();
+    assert!(vectors.iter().all(|v| v.len() == n));
+    if k == 1 {
+        return vectors[0].clone();
+    }
+    let ch = chunks(n, k);
+
+    // Reduce-scatter: at step s, node i sends chunk (i - s) mod k.
+    for s in 0..k - 1 {
+        // Snapshot the outgoing chunks first (simultaneous exchange).
+        let outgoing: Vec<(usize, Vec<f32>)> = (0..k)
+            .map(|i| {
+                let c = (i + k - s) % k;
+                (c, vectors[i][ch[c].clone()].to_vec())
+            })
+            .collect();
+        for (i, (c, data)) in outgoing.into_iter().enumerate() {
+            let dst = (i + 1) % k;
+            ledger.record(i, kind, data.len() * 4);
+            let slot = &mut vectors[dst][ch[c].clone()];
+            for (d, v) in slot.iter_mut().zip(&data) {
+                *d += v;
+            }
+        }
+    }
+    // After reduce-scatter, node i holds the full sum of chunk (i+1) mod k.
+    // Allgather: circulate the reduced chunks.
+    for s in 0..k - 1 {
+        let outgoing: Vec<(usize, Vec<f32>)> = (0..k)
+            .map(|i| {
+                let c = (i + 1 + k - s) % k;
+                (c, vectors[i][ch[c].clone()].to_vec())
+            })
+            .collect();
+        for (i, (c, data)) in outgoing.into_iter().enumerate() {
+            let dst = (i + 1) % k;
+            ledger.record(i, kind, data.len() * 4);
+            vectors[dst][ch[c].clone()].copy_from_slice(&data);
+        }
+    }
+    vectors[0].clone()
+}
+
+/// Ring allreduce returning the *mean* (the aggregation every method wants).
+pub fn ring_allreduce_mean(
+    vectors: &mut [Vec<f32>],
+    ledger: &mut Ledger,
+    kind: Kind,
+) -> Vec<f32> {
+    let k = vectors.len() as f32;
+    let mut sum = ring_allreduce_sum(vectors, ledger, kind);
+    for v in &mut sum {
+        *v /= k;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn allreduce_matches_direct_sum() {
+        let mut rng = Rng::new(1);
+        for k in [1usize, 2, 3, 4, 8] {
+            for n in [1usize, 5, 16, 103] {
+                if n < k {
+                    continue;
+                }
+                let vecs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(n, 1.0)).collect();
+                let want: Vec<f32> = (0..n)
+                    .map(|j| vecs.iter().map(|v| v[j]).sum::<f32>())
+                    .collect();
+                let mut work = vecs.clone();
+                let mut ledger = Ledger::new();
+                let got = ring_allreduce_sum(&mut work, &mut ledger, crate::metrics::Kind::Dense);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "k={k} n={n}");
+                }
+                // Every node converged to the same vector.
+                for v in &work {
+                    for (a, b) in v.iter().zip(&got) {
+                        assert!((a - b).abs() < 1e-5);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_match_2k_minus_1_over_k_bound() {
+        let k = 4;
+        let n = 1000;
+        let mut rng = Rng::new(2);
+        let mut vecs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(n, 1.0)).collect();
+        let mut ledger = Ledger::new();
+        ring_allreduce_sum(&mut vecs, &mut ledger, crate::metrics::Kind::Dense);
+        let per_node = ledger.per_node[&0] as f64;
+        let expected = 2.0 * (k as f64 - 1.0) / k as f64 * (n * 4) as f64;
+        assert!(
+            (per_node - expected).abs() / expected < 0.02,
+            "per_node={per_node} expected={expected}"
+        );
+    }
+
+    #[test]
+    fn single_node_sends_nothing() {
+        let mut vecs = vec![vec![1.0f32, 2.0]];
+        let mut ledger = Ledger::new();
+        let out = ring_allreduce_sum(&mut vecs, &mut ledger, crate::metrics::Kind::Dense);
+        assert_eq!(out, vec![1.0, 2.0]);
+        assert_eq!(ledger.total(), 0);
+    }
+
+    #[test]
+    fn mean_divides_by_k() {
+        let mut vecs = vec![vec![2.0f32; 8], vec![4.0f32; 8]];
+        let mut ledger = Ledger::new();
+        let out = ring_allreduce_mean(&mut vecs, &mut ledger, crate::metrics::Kind::Dense);
+        assert!(out.iter().all(|&x| (x - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn chunks_partition() {
+        let ch = chunks(10, 3);
+        assert_eq!(ch, vec![0..4, 4..7, 7..10]);
+        let ch = chunks(3, 8); // more nodes than elements: empty chunks ok
+        assert_eq!(ch.iter().map(|r| r.len()).sum::<usize>(), 3);
+    }
+}

@@ -1,0 +1,134 @@
+//! Three-phase training schedule (paper §V-B) + sparsification-strategy
+//! ablation (§VI-F, Fig. 13).
+//!
+//! Phase 1 (dense):      weights update with original gradients (eq. 14)
+//! Phase 2 (top-k):      top-k updates while the autoencoder trains (eq. 15)
+//! Phase 3 (compressed): updates with autoencoder reconstructions (eq. 16)
+//!
+//! The ablation schedules reproduce Fig. 13's comparison:
+//! * Warmup      — LGC's choice: dense first, then fixed alpha
+//! * Fixed       — fixed alpha from iteration 0 (Sparse GD / QSGD / ScaleCom)
+//! * Exponential — DGC's ramp: keep-fraction decays 25% -> alpha over the
+//!                 ramp window, then stays at alpha
+
+use crate::config::{SparsifySchedule, TrainConfig};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Dense,
+    TopK,
+    Compressed,
+}
+
+impl Phase {
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Dense => 0,
+            Phase::TopK => 1,
+            Phase::Compressed => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Dense => "dense",
+            Phase::TopK => "topk",
+            Phase::Compressed => "compressed",
+        }
+    }
+}
+
+/// DGC's exponential keep-fraction ramp: 0.25 -> alpha over `ramp` iters.
+pub fn exponential_alpha(it: usize, ramp: usize, alpha: f64) -> f64 {
+    if it >= ramp || ramp == 0 {
+        return alpha;
+    }
+    let t = (it + 1) as f64 / ramp as f64;
+    0.25 * (alpha / 0.25_f64).powf(t)
+}
+
+/// The LGC phase + keep-fraction for iteration `it`.
+pub fn phase_and_alpha(cfg: &TrainConfig, it: usize) -> (Phase, f64) {
+    match cfg.schedule {
+        SparsifySchedule::Warmup => {
+            if it < cfg.warmup_iters {
+                (Phase::Dense, 1.0)
+            } else if it < cfg.warmup_iters + cfg.ae_train_iters {
+                (Phase::TopK, cfg.alpha)
+            } else {
+                (Phase::Compressed, cfg.alpha)
+            }
+        }
+        SparsifySchedule::Fixed => {
+            if it < cfg.ae_train_iters {
+                (Phase::TopK, cfg.alpha)
+            } else {
+                (Phase::Compressed, cfg.alpha)
+            }
+        }
+        SparsifySchedule::Exponential => {
+            let ramp = cfg.warmup_iters + cfg.ae_train_iters;
+            if it < ramp {
+                (Phase::TopK, exponential_alpha(it, ramp, cfg.alpha))
+            } else {
+                (Phase::Compressed, cfg.alpha)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn cfg(schedule: SparsifySchedule) -> TrainConfig {
+        TrainConfig {
+            warmup_iters: 10,
+            ae_train_iters: 20,
+            alpha: 1e-3,
+            schedule,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn warmup_schedule_phases() {
+        let c = cfg(SparsifySchedule::Warmup);
+        assert_eq!(phase_and_alpha(&c, 0), (Phase::Dense, 1.0));
+        assert_eq!(phase_and_alpha(&c, 9), (Phase::Dense, 1.0));
+        assert_eq!(phase_and_alpha(&c, 10), (Phase::TopK, 1e-3));
+        assert_eq!(phase_and_alpha(&c, 29), (Phase::TopK, 1e-3));
+        assert_eq!(phase_and_alpha(&c, 30), (Phase::Compressed, 1e-3));
+    }
+
+    #[test]
+    fn fixed_schedule_sparsifies_immediately() {
+        let c = cfg(SparsifySchedule::Fixed);
+        let (p, a) = phase_and_alpha(&c, 0);
+        assert_eq!(p, Phase::TopK);
+        assert_eq!(a, 1e-3);
+        assert_eq!(phase_and_alpha(&c, 20).0, Phase::Compressed);
+    }
+
+    #[test]
+    fn exponential_ramp_monotone_decreasing() {
+        let c = cfg(SparsifySchedule::Exponential);
+        let mut prev = 1.0;
+        for it in 0..30 {
+            let (p, a) = phase_and_alpha(&c, it);
+            assert_eq!(p, Phase::TopK);
+            assert!(a <= prev + 1e-12, "alpha must ramp down");
+            assert!(a >= 1e-3 && a <= 0.25);
+            prev = a;
+        }
+        assert_eq!(phase_and_alpha(&c, 30), (Phase::Compressed, 1e-3));
+    }
+
+    #[test]
+    fn exponential_alpha_endpoints() {
+        assert!((exponential_alpha(99, 100, 1e-3) - 1e-3).abs() < 1e-9);
+        assert!(exponential_alpha(0, 100, 1e-3) < 0.25);
+        assert_eq!(exponential_alpha(5, 0, 1e-3), 1e-3);
+    }
+}

@@ -1,0 +1,47 @@
+//! Synthetic data substrate (replaces ImageNet / Cifar10 / CamVid /
+//! Food101 / TinyImageNet — DESIGN.md §2).
+//!
+//! Three generators, all deterministic given (seed, node, iteration):
+//!
+//! * [`SynthCifar`]   — class-conditional Gaussian images (classification)
+//! * [`SynthCamvid`]  — procedural blob scenes with per-pixel labels
+//!                      (semantic segmentation)
+//! * [`TinyCorpus`]   — order-2 Markov token streams (language modeling)
+//!
+//! Data-parallel sharding: node k draws from the same distribution but a
+//! disjoint seed stream, which is exactly the i.i.d.-shards regime the
+//! paper's gradient-correlation analysis (§III) assumes.
+
+pub mod synth_camvid;
+pub mod synth_cifar;
+pub mod tiny_corpus;
+
+pub use synth_camvid::SynthCamvid;
+pub use synth_cifar::SynthCifar;
+pub use tiny_corpus::TinyCorpus;
+
+use crate::runtime::{ModelMeta, Tensor};
+
+/// One minibatch, already in the model's HLO input layout.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Tensor,
+    pub y: Tensor,
+}
+
+/// A deterministic stream of minibatches for one node.
+pub trait Dataset {
+    /// Batch for (node, iteration). Must be pure in its arguments.
+    fn batch(&self, node: usize, iter: usize) -> Batch;
+    /// A held-out evaluation batch (same across nodes).
+    fn eval_batch(&self, idx: usize) -> Batch;
+}
+
+/// Construct the dataset matching a model's input contract.
+pub fn for_model(meta: &ModelMeta, seed: u64) -> Box<dyn Dataset> {
+    match meta.name.as_str() {
+        "segnet_mini" => Box::new(SynthCamvid::new(meta, seed)),
+        "transformer_mini" => Box::new(TinyCorpus::new(meta, seed)),
+        _ => Box::new(SynthCifar::new(meta, seed)),
+    }
+}

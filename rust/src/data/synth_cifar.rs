@@ -1,0 +1,146 @@
+//! Class-conditional Gaussian image classification data (Cifar10 stand-in).
+//!
+//! Each class c has a fixed mean image m_c (drawn once from the dataset
+//! seed); a sample is m_c + sigma * N(0, I).  Low sigma makes the task
+//! separable, so optimization produces the loss-decrease dynamics the
+//! gradient-compression experiments need (DESIGN.md §2).
+
+use crate::runtime::{ModelMeta, Tensor};
+use crate::util::rng::Rng;
+
+use super::{Batch, Dataset};
+
+pub struct SynthCifar {
+    batch: usize,
+    input_shape: Vec<usize>,
+    num_classes: usize,
+    seed: u64,
+    /// (num_classes, prod(input_shape)) fixed class means.
+    means: Vec<Vec<f32>>,
+    sigma: f32,
+}
+
+impl SynthCifar {
+    pub fn new(meta: &ModelMeta, seed: u64) -> SynthCifar {
+        let dim: usize = meta.input_shape.iter().product();
+        let mut rng = Rng::new(seed ^ 0xC1FA_0000);
+        let means = (0..meta.num_classes)
+            .map(|_| rng.normal_vec(dim, 1.0))
+            .collect();
+        SynthCifar {
+            batch: meta.batch,
+            input_shape: meta.input_shape.clone(),
+            num_classes: meta.num_classes,
+            seed,
+            means,
+            sigma: 0.35,
+        }
+    }
+
+    fn make(&self, stream: u64) -> Batch {
+        let mut rng = Rng::new(self.seed).fork(stream);
+        let dim: usize = self.input_shape.iter().product();
+        let mut xs = Vec::with_capacity(self.batch * dim);
+        let mut ys = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let c = rng.below(self.num_classes);
+            ys.push(c as i32);
+            let m = &self.means[c];
+            xs.extend(m.iter().map(|&v| v + self.sigma * rng.normal()));
+        }
+        let mut dims = vec![self.batch];
+        dims.extend(&self.input_shape);
+        Batch { x: Tensor::f32(dims, xs), y: Tensor::i32(vec![self.batch], ys) }
+    }
+}
+
+impl Dataset for SynthCifar {
+    fn batch(&self, node: usize, iter: usize) -> Batch {
+        // Disjoint shards: stream id partitions by node.
+        self.make(((node as u64) << 40) | iter as u64)
+    }
+
+    fn eval_batch(&self, idx: usize) -> Batch {
+        self.make(0xEEE0_0000_0000 | idx as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "convnet5".into(),
+            params: vec![],
+            layer_of_param: vec![],
+            n_params: 0,
+            n_mid: 0,
+            mu: 16,
+            first_param_idx: vec![],
+            mid_param_idx: vec![],
+            last_param_idx: vec![],
+            batch: 8,
+            input_shape: vec![4, 4, 3],
+            input_dtype: "f32".into(),
+            num_classes: 10,
+            grad_step: String::new(),
+            evaluate: String::new(),
+            sparsify: String::new(),
+        }
+    }
+
+    #[test]
+    fn deterministic_per_node_iter() {
+        let d = SynthCifar::new(&meta(), 7);
+        let a = d.batch(1, 5);
+        let b = d.batch(1, 5);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn nodes_get_different_shards() {
+        let d = SynthCifar::new(&meta(), 7);
+        assert_ne!(d.batch(0, 5).x, d.batch(1, 5).x);
+    }
+
+    #[test]
+    fn labels_in_range_and_shapes() {
+        let d = SynthCifar::new(&meta(), 7);
+        let b = d.batch(0, 0);
+        assert_eq!(b.x.dims, vec![8, 4, 4, 3]);
+        assert_eq!(b.y.dims, vec![8]);
+        assert!(b.y.as_i32().iter().all(|&c| (0..10).contains(&c)));
+    }
+
+    #[test]
+    fn class_structure_is_separable() {
+        // Two samples of the same class are closer than different classes
+        // in expectation (sanity of the generator's signal-to-noise).
+        let d = SynthCifar::new(&meta(), 7);
+        let b = d.batch(0, 1);
+        let dim = 48;
+        let xs = b.x.as_f32();
+        let ys = b.y.as_i32();
+        let mut same = vec![];
+        let mut diff = vec![];
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                let dist: f32 = (0..dim)
+                    .map(|t| (xs[i * dim + t] - xs[j * dim + t]).powi(2))
+                    .sum();
+                if ys[i] == ys[j] {
+                    same.push(dist);
+                } else {
+                    diff.push(dist);
+                }
+            }
+        }
+        if !same.is_empty() && !diff.is_empty() {
+            let ms = same.iter().sum::<f32>() / same.len() as f32;
+            let md = diff.iter().sum::<f32>() / diff.len() as f32;
+            assert!(ms < md);
+        }
+    }
+}

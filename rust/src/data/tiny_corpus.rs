@@ -1,0 +1,156 @@
+//! Markov token streams (the e2e transformer workload's corpus).
+//!
+//! An order-2 Markov chain over the vocabulary with a sparse, seeded
+//! transition structure: each (a, b) context has 4 likely successors.
+//! A transformer can reach substantially-below-uniform loss by learning
+//! the transition table, giving the e2e driver a real loss curve.
+
+use crate::runtime::{ModelMeta, Tensor};
+use crate::util::rng::Rng;
+
+use super::{Batch, Dataset};
+
+pub struct TinyCorpus {
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    seed: u64,
+    /// successors[(a * vocab + b)] = 4 candidate next tokens.
+    successors: Vec<[u16; 4]>,
+}
+
+impl TinyCorpus {
+    pub fn new(meta: &ModelMeta, seed: u64) -> TinyCorpus {
+        let vocab = meta.num_classes;
+        let mut rng = Rng::new(seed ^ 0xC0_2B_05);
+        let successors = (0..vocab * vocab)
+            .map(|_| {
+                [
+                    rng.below(vocab) as u16,
+                    rng.below(vocab) as u16,
+                    rng.below(vocab) as u16,
+                    rng.below(vocab) as u16,
+                ]
+            })
+            .collect();
+        TinyCorpus { batch: meta.batch, seq: meta.input_shape[0], vocab, seed, successors }
+    }
+
+    fn make(&self, stream: u64) -> Batch {
+        let mut rng = Rng::new(self.seed).fork(stream);
+        let mut xs = Vec::with_capacity(self.batch * self.seq);
+        let mut ys = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let mut a = rng.below(self.vocab);
+            let mut b = rng.below(self.vocab);
+            // Generate seq + 1 tokens; x = t[..seq], y = t[1..].
+            let mut toks = Vec::with_capacity(self.seq + 1);
+            toks.push(b as i32);
+            for _ in 0..self.seq {
+                let next = if rng.uniform() < 0.9 {
+                    // Likely successor from the context table.
+                    self.successors[a * self.vocab + b][rng.below(4)] as usize
+                } else {
+                    rng.below(self.vocab)
+                };
+                toks.push(next as i32);
+                a = b;
+                b = next;
+            }
+            xs.extend(&toks[..self.seq]);
+            ys.extend(&toks[1..]);
+        }
+        Batch {
+            x: Tensor::i32(vec![self.batch, self.seq], xs),
+            y: Tensor::i32(vec![self.batch, self.seq], ys),
+        }
+    }
+}
+
+impl Dataset for TinyCorpus {
+    fn batch(&self, node: usize, iter: usize) -> Batch {
+        self.make(((node as u64) << 40) | iter as u64)
+    }
+
+    fn eval_batch(&self, idx: usize) -> Batch {
+        self.make(0xEEE0_0000_0000 | idx as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "transformer_mini".into(),
+            params: vec![],
+            layer_of_param: vec![],
+            n_params: 0,
+            n_mid: 0,
+            mu: 16,
+            first_param_idx: vec![],
+            mid_param_idx: vec![],
+            last_param_idx: vec![],
+            batch: 4,
+            input_shape: vec![16],
+            input_dtype: "i32".into(),
+            num_classes: 64,
+            grad_step: String::new(),
+            evaluate: String::new(),
+            sparsify: String::new(),
+        }
+    }
+
+    #[test]
+    fn next_token_targets_shifted() {
+        let d = TinyCorpus::new(&meta(), 5);
+        let b = d.batch(0, 0);
+        let xs = b.x.as_i32();
+        let ys = b.y.as_i32();
+        // y[t] == x[t+1] within each row.
+        for r in 0..4 {
+            for t in 0..15 {
+                assert_eq!(ys[r * 16 + t], xs[r * 16 + t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let d = TinyCorpus::new(&meta(), 5);
+        let b = d.batch(1, 3);
+        assert!(b.x.as_i32().iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn transition_structure_is_predictable() {
+        // ~90% of transitions must come from the 4-successor table.
+        let d = TinyCorpus::new(&meta(), 5);
+        let mut hits = 0;
+        let mut total = 0;
+        for it in 0..20 {
+            let b = d.batch(0, it);
+            let xs = b.x.as_i32();
+            for r in 0..4 {
+                for t in 2..16 {
+                    let a = xs[r * 16 + t - 2] as usize;
+                    let bb = xs[r * 16 + t - 1] as usize;
+                    let next = xs[r * 16 + t] as u16;
+                    if d.successors[a * 64 + bb].contains(&next) {
+                        hits += 1;
+                    }
+                    total += 1;
+                }
+            }
+        }
+        assert!(hits as f64 / total as f64 > 0.75, "{hits}/{total}");
+    }
+
+    #[test]
+    fn deterministic_shards() {
+        let d = TinyCorpus::new(&meta(), 5);
+        assert_eq!(d.batch(0, 7).x, d.batch(0, 7).x);
+        assert_ne!(d.batch(0, 7).x, d.batch(1, 7).x);
+    }
+}

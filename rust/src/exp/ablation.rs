@@ -1,0 +1,158 @@
+//! Design-choice ablations (DESIGN.md §5 calls these out beyond the
+//! paper's own figures):
+//!
+//!   A1  innovation fraction (Algorithm 1's top-10%-of-g~): rate vs acc
+//!   A2  AE online budget (`ae_inner_steps`): reconstruction quality
+//!   A3  f16 value payloads: rate saving vs accuracy cost
+//!   A4  similarity-loss weight lambda_2 sweep (beyond Fig 14's 0/0.5)
+//!
+//! Run with `lgc exp --id ablation [--steps N]`; outputs
+//! results/ablation_*.csv.
+
+use anyhow::Result;
+
+use crate::config::{Method, TrainConfig};
+use crate::coordinator;
+use crate::metrics::Csv;
+use crate::runtime::Engine;
+use crate::util::bench::Table;
+
+fn cfg(model: &str, method: Method, nodes: usize, steps: usize) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        method,
+        nodes,
+        steps,
+        eval_every: 0,
+        ..Default::default()
+    }
+    .scaled_phases()
+}
+
+/// A1: innovation fraction sweep on LGC-PS.
+pub fn innovation_sweep(engine: &Engine, steps: usize) -> Result<()> {
+    println!("\n=== ablation A1: innovation fraction (LGC-PS, convnet5 K=2) ===");
+    let mut t = Table::new(&["innovation_frac", "final loss", "eval acc", "info MB", "ratio"]);
+    let mut csv = Csv::new("results/ablation_innovation.csv",
+                           &["frac", "loss", "acc", "info_mb", "ratio"]);
+    for frac in [0.02f64, 0.05, 0.1, 0.25, 0.5] {
+        let mut c = cfg("convnet5", Method::LgcPs, 2, steps);
+        c.innovation_frac = frac;
+        let r = coordinator::train(engine, c)?;
+        t.row(&[
+            format!("{frac}"),
+            format!("{:.4}", r.final_train_loss()),
+            format!("{:.4}", r.final_eval.1),
+            format!("{:.6}", r.info_size_mb()),
+            format!("{:.0}x", r.compression_ratio()),
+        ]);
+        csv.row(&[
+            format!("{frac}"),
+            format!("{}", r.final_train_loss()),
+            format!("{}", r.final_eval.1),
+            format!("{}", r.info_size_mb()),
+            format!("{}", r.compression_ratio()),
+        ]);
+    }
+    t.print();
+    csv.finish()?;
+    Ok(())
+}
+
+/// A2: AE online-training budget sweep.
+pub fn ae_budget_sweep(engine: &Engine, steps: usize) -> Result<()> {
+    println!("\n=== ablation A2: AE inner steps (LGC-RAR, convnet5 K=2) ===");
+    let mut t = Table::new(&["ae_inner_steps", "last rec loss", "final loss", "eval acc"]);
+    let mut csv = Csv::new("results/ablation_ae_budget.csv",
+                           &["inner", "rec_loss", "loss", "acc"]);
+    for inner in [1usize, 2, 4, 8] {
+        let mut c = cfg("convnet5", Method::LgcRar, 2, steps);
+        c.ae_inner_steps = inner;
+        let r = coordinator::train(engine, c)?;
+        let rec = r.ae_losses.last().map(|x| x.0).unwrap_or(f32::NAN);
+        t.row(&[
+            inner.to_string(),
+            format!("{rec:.4}"),
+            format!("{:.4}", r.final_train_loss()),
+            format!("{:.4}", r.final_eval.1),
+        ]);
+        csv.row(&[
+            inner.to_string(),
+            format!("{rec}"),
+            format!("{}", r.final_train_loss()),
+            format!("{}", r.final_eval.1),
+        ]);
+    }
+    t.print();
+    csv.finish()?;
+    Ok(())
+}
+
+/// A3: f16 value payloads across sparse methods.
+pub fn fp16_sweep(engine: &Engine, steps: usize) -> Result<()> {
+    println!("\n=== ablation A3: f16 value payloads (convnet5 K=2) ===");
+    let mut t = Table::new(&["method", "precision", "eval acc", "info MB", "ratio"]);
+    let mut csv = Csv::new("results/ablation_fp16.csv",
+                           &["method", "fp16", "acc", "info_mb", "ratio"]);
+    for m in [Method::Dgc, Method::ScaleCom, Method::LgcPs] {
+        for fp16 in [false, true] {
+            let mut c = cfg("convnet5", m, 2, steps);
+            c.fp16_values = fp16;
+            let r = coordinator::train(engine, c)?;
+            t.row(&[
+                m.name().into(),
+                if fp16 { "f16" } else { "f32" }.into(),
+                format!("{:.4}", r.final_eval.1),
+                format!("{:.6}", r.info_size_mb()),
+                format!("{:.0}x", r.compression_ratio()),
+            ]);
+            csv.row(&[
+                m.name().into(),
+                fp16.to_string(),
+                format!("{}", r.final_eval.1),
+                format!("{}", r.info_size_mb()),
+                format!("{}", r.compression_ratio()),
+            ]);
+        }
+    }
+    t.print();
+    csv.finish()?;
+    Ok(())
+}
+
+/// A4: lambda_2 sweep (extends Fig 14's two-point comparison).
+pub fn lambda2_sweep(engine: &Engine, steps: usize) -> Result<()> {
+    println!("\n=== ablation A4: similarity-loss weight (LGC-PS, convnet5 K=4) ===");
+    let mut t = Table::new(&["lambda2", "last rec loss", "last sim loss", "eval acc"]);
+    let mut csv = Csv::new("results/ablation_lambda2.csv",
+                           &["lambda2", "rec", "sim", "acc"]);
+    for lam2 in [0.0f32, 0.1, 0.5, 1.0, 2.0] {
+        let mut c = cfg("convnet5", Method::LgcPs, 4, steps);
+        c.lambda2 = lam2;
+        let r = coordinator::train(engine, c)?;
+        let (rec, sim) = r.ae_losses.last().copied().unwrap_or((f32::NAN, f32::NAN));
+        t.row(&[
+            format!("{lam2}"),
+            format!("{rec:.4}"),
+            format!("{sim:.4}"),
+            format!("{:.4}", r.final_eval.1),
+        ]);
+        csv.row(&[
+            format!("{lam2}"),
+            format!("{rec}"),
+            format!("{sim}"),
+            format!("{}", r.final_eval.1),
+        ]);
+    }
+    t.print();
+    csv.finish()?;
+    Ok(())
+}
+
+pub fn run_all(engine: &Engine, steps: usize) -> Result<()> {
+    innovation_sweep(engine, steps)?;
+    ae_budget_sweep(engine, steps)?;
+    fp16_sweep(engine, steps)?;
+    lambda2_sweep(engine, steps)?;
+    Ok(())
+}

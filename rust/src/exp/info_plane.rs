@@ -1,0 +1,190 @@
+//! §III information-plane experiments (Figs 3, 4, 12).
+//!
+//! Runs K-node synchronous training (dense updates) while estimating, at
+//! every iteration, per-layer marginal entropy H(g_{l,2}) and mutual
+//! information I(g_{l,1}; g_{l,2}) between two chosen nodes' gradients via
+//! joint histograms (see [`crate::info`]).
+
+use anyhow::Result;
+
+use crate::data;
+use crate::info::{info_plane, InfoPlane};
+use crate::metrics::Csv;
+use crate::model::{Group, Model};
+use crate::runtime::Engine;
+use crate::util::bench::Table;
+
+#[derive(Debug, Clone)]
+pub struct InfoPlaneRow {
+    pub iter: usize,
+    pub layer: usize,
+    pub h: f64,
+    pub mi: f64,
+}
+
+/// Per-layer flat slices over the FULL parameter list (all groups),
+/// in param order.
+fn full_layer_slices(model: &Model) -> Vec<(usize, std::ops::Range<usize>)> {
+    let meta = &model.meta;
+    let mut out: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
+    let mut off = 0usize;
+    for i in 0..meta.params.len() {
+        let layer = meta.layer_of_param[i];
+        let len = meta.param_len(i);
+        match out.last_mut() {
+            Some((l, r)) if *l == layer && r.end == off => r.end = off + len,
+            _ => out.push((layer, off..off + len)),
+        }
+        off += len;
+    }
+    out
+}
+
+/// Run the info-plane experiment: K nodes, `steps` dense iterations,
+/// measuring MI/H between gradients of nodes `pair.0` and `pair.1`.
+///
+/// Returns one row per (iteration, layer), and writes `csv_path`.
+pub fn info_plane_run(
+    engine: &Engine,
+    model_name: &str,
+    nodes: usize,
+    steps: usize,
+    pair: (usize, usize),
+    bins: usize,
+    lr: f32,
+    csv_path: &str,
+) -> Result<Vec<InfoPlaneRow>> {
+    let meta = engine.manifest.model(model_name).clone();
+    let mut model = Model::new(&meta, 42);
+    model.momentum = 0.9;
+    let dataset = data::for_model(&meta, 0xDA7A);
+    let slices = full_layer_slices(&model);
+    let mut rows = Vec::new();
+
+    for it in 0..steps {
+        // Per-node gradient computation (full flat vectors).
+        let mut flats: Vec<Vec<f32>> = Vec::with_capacity(nodes);
+        for node in 0..nodes {
+            let batch = dataset.batch(node, it);
+            let (_, _, grads) = model.grad_step(engine, &batch)?;
+            let mut flat = Vec::with_capacity(meta.n_params);
+            for g in &grads {
+                flat.extend_from_slice(g.as_f32());
+            }
+            flats.push(flat);
+        }
+        // Information plane between the chosen node pair, per layer.
+        let (a, b) = pair;
+        for (layer, range) in &slices {
+            let ip: InfoPlane =
+                info_plane(&flats[a][range.clone()], &flats[b][range.clone()], bins);
+            rows.push(InfoPlaneRow { iter: it, layer: *layer, h: ip.h_b, mi: ip.mi });
+        }
+        // Synchronous dense update (mean of all nodes) to advance training.
+        let n = meta.n_params;
+        let mut mean = vec![0.0f32; n];
+        for f in &flats {
+            for (m, x) in mean.iter_mut().zip(f) {
+                *m += x;
+            }
+        }
+        mean.iter_mut().for_each(|m| *m /= nodes as f32);
+        // Split the mean back into groups for apply_update.
+        let split = |idx: &[usize]| {
+            let mut v = Vec::new();
+            let mut offsets = Vec::new();
+            let mut off = 0;
+            for i in 0..meta.params.len() {
+                offsets.push(off);
+                off += meta.param_len(i);
+            }
+            for &i in idx {
+                v.extend_from_slice(&mean[offsets[i]..offsets[i] + meta.param_len(i)]);
+            }
+            v
+        };
+        let updates = [
+            (Group::First, split(&meta.first_param_idx)),
+            (Group::Mid, split(&meta.mid_param_idx)),
+            (Group::Last, split(&meta.last_param_idx)),
+        ];
+        model.apply_update(&updates, lr);
+    }
+
+    let mut csv = Csv::new(csv_path, &["iter", "layer", "entropy_bits", "mi_bits"]);
+    for r in &rows {
+        csv.row(&[
+            r.iter.to_string(),
+            r.layer.to_string(),
+            format!("{}", r.h),
+            format!("{}", r.mi),
+        ]);
+    }
+    csv.finish()?;
+    Ok(rows)
+}
+
+/// Aggregate rows into per-layer means (Fig. 4's view).
+pub fn per_layer_means(rows: &[InfoPlaneRow]) -> Vec<(usize, f64, f64)> {
+    let max_layer = rows.iter().map(|r| r.layer).max().unwrap_or(0);
+    let mut acc = vec![(0.0f64, 0.0f64, 0usize); max_layer + 1];
+    for r in rows {
+        acc[r.layer].0 += r.h;
+        acc[r.layer].1 += r.mi;
+        acc[r.layer].2 += 1;
+    }
+    acc.iter()
+        .enumerate()
+        .filter(|(_, (_, _, n))| *n > 0)
+        .map(|(l, (h, mi, n))| (l, h / *n as f64, mi / *n as f64))
+        .collect()
+}
+
+/// Print + persist the Fig 3/4 pair for one workload.
+pub fn fig3_fig4(
+    engine: &Engine,
+    model_name: &str,
+    steps: usize,
+    bins: usize,
+) -> Result<Vec<InfoPlaneRow>> {
+    let rows = info_plane_run(
+        engine,
+        model_name,
+        2,
+        steps,
+        (0, 1),
+        bins,
+        0.05,
+        &format!("results/fig3_{model_name}.csv"),
+    )?;
+    println!("\n=== Fig 3/4 (scaled): {model_name}, 2 nodes, {steps} iters ===");
+    let means = per_layer_means(&rows);
+    let mut t = Table::new(&["layer", "mean H (bits)", "mean MI (bits)", "MI/H"]);
+    let mut csv = Csv::new(
+        &format!("results/fig4_{model_name}.csv"),
+        &["layer", "mean_entropy", "mean_mi", "ratio"],
+    );
+    for (l, h, mi) in &means {
+        let ratio = if *h > 0.0 { mi / h } else { 0.0 };
+        t.row(&[
+            l.to_string(),
+            format!("{h:.3}"),
+            format!("{mi:.3}"),
+            format!("{ratio:.2}"),
+        ]);
+        csv.row(&[
+            l.to_string(),
+            format!("{h}"),
+            format!("{mi}"),
+            format!("{ratio}"),
+        ]);
+    }
+    t.print();
+    csv.finish()?;
+    let (hs, mis): (Vec<f64>, Vec<f64>) =
+        means.iter().map(|(_, h, mi)| (*h, *mi)).unzip();
+    let hm = hs.iter().sum::<f64>() / hs.len() as f64;
+    let mm = mis.iter().sum::<f64>() / mis.len() as f64;
+    println!("overall mean MI/H = {:.2} (paper: ~0.8)", mm / hm);
+    Ok(rows)
+}

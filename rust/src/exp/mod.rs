@@ -1,0 +1,334 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §5).
+//!
+//! Each driver returns structured rows AND writes `results/*.csv`; the
+//! bench targets and the `lgc exp` subcommand are thin wrappers around
+//! these functions, so the paper's evaluation is regenerable from one
+//! place.  Workloads are the scaled substitutions of DESIGN.md §2; the
+//! claims under reproduction are *orderings and ratios*, not absolute
+//! numbers.
+
+pub mod ablation;
+pub mod info_plane;
+pub mod speedup;
+
+use anyhow::Result;
+
+use crate::config::{Method, SparsifySchedule, TrainConfig};
+use crate::coordinator::{self, TrainResult};
+use crate::metrics::Csv;
+use crate::runtime::Engine;
+use crate::util::bench::Table;
+
+pub use info_plane::{info_plane_run, InfoPlaneRow};
+pub use speedup::{speedup_table, LinkModel};
+
+/// Default step budget for table experiments; benches/CLI can override.
+pub fn default_steps() -> usize {
+    std::env::var("LGC_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(280)
+}
+
+fn base_cfg(model: &str, method: Method, nodes: usize, steps: usize) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        method,
+        nodes,
+        steps,
+        eval_every: (steps / 12).max(5),
+        eval_batches: 4,
+        ..Default::default()
+    }
+    .scaled_phases()
+}
+
+/// One comparison row of Tables IV/VI.
+#[derive(Debug, Clone)]
+pub struct MethodRow {
+    pub method: Method,
+    pub acc: f32,
+    pub info_size_mb: f64,
+    pub ratio: f64,
+    pub total_mb: f64,
+    pub result: TrainResult,
+}
+
+/// Run `methods` on one workload; returns rows in input order.
+pub fn compare_methods(
+    engine: &Engine,
+    model: &str,
+    nodes: usize,
+    steps: usize,
+    methods: &[Method],
+    lr: Option<f32>,
+) -> Result<Vec<MethodRow>> {
+    let mut rows = Vec::new();
+    for &m in methods {
+        let mut cfg = base_cfg(model, m, nodes, steps);
+        if let Some(lr) = lr {
+            cfg.lr = lr;
+        }
+        match coordinator::train(engine, cfg) {
+            Ok(r) => rows.push(MethodRow {
+                method: m,
+                acc: r.final_eval.1,
+                info_size_mb: r.info_size_mb(),
+                ratio: r.compression_ratio(),
+                total_mb: r.ledger.total() as f64 / 1e6,
+                result: r,
+            }),
+            Err(e) => {
+                // A diverged method is a *result* (NaN row), not a reason
+                // to abort the whole comparison.
+                eprintln!("[{model} K={nodes}] {} failed: {e:#}", m.name());
+                rows.push(MethodRow {
+                    method: m,
+                    acc: f32::NAN,
+                    info_size_mb: f64::NAN,
+                    ratio: f64::NAN,
+                    total_mb: f64::NAN,
+                    result: TrainResult {
+                        method: m,
+                        model: model.to_string(),
+                        nodes,
+                        steps,
+                        curve: vec![],
+                        evals: vec![],
+                        ledger: Default::default(),
+                        phase_time: Default::default(),
+                        phase_iters: [0; 3],
+                        ae_losses: vec![],
+                        final_eval: (f32::NAN, f32::NAN),
+                        dense_bytes_per_node: 0,
+                        time_grad: Default::default(),
+                        time_exchange: Default::default(),
+                        time_update: Default::default(),
+                    },
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+fn emit_method_table(
+    title: &str,
+    rows: &[MethodRow],
+    csv_path: &str,
+) -> Result<()> {
+    println!("\n=== {title} ===");
+    let mut t = Table::new(&["method", "final acc", "info size (MB/iter/node)", "ratio", "total sent (MB)"]);
+    let mut csv = Csv::new(csv_path, &["method", "acc", "info_mb", "ratio", "total_mb"]);
+    for r in rows {
+        let cells = vec![
+            r.method.name().to_string(),
+            format!("{:.4}", r.acc),
+            format!("{:.6}", r.info_size_mb),
+            format!("{:.0}x", r.ratio),
+            format!("{:.3}", r.total_mb),
+        ];
+        t.row(&cells);
+        csv.row(&[
+            r.method.name().to_string(),
+            format!("{}", r.acc),
+            format!("{}", r.info_size_mb),
+            format!("{}", r.ratio),
+            format!("{}", r.total_mb),
+        ]);
+    }
+    t.print();
+    csv.finish()?;
+    println!("-> {csv_path}");
+    Ok(())
+}
+
+/// Table IV: "ResNet50 on ImageNet", K=8 — scaled: resnet_mini, synth data.
+pub fn table4(engine: &Engine, steps: usize) -> Result<Vec<MethodRow>> {
+    let methods = [
+        Method::Baseline,
+        Method::LgcPs,
+        Method::LgcRar,
+        Method::ScaleCom,
+        Method::Dgc,
+        Method::SparseGd,
+    ];
+    let rows = compare_methods(engine, "resnet_mini", 8, steps, &methods, None)?;
+    emit_method_table(
+        "Table IV (scaled): resnet_mini, K=8, synth-cifar",
+        &rows,
+        "results/table4.csv",
+    )?;
+    Ok(rows)
+}
+
+/// Table V: per-phase iteration duration for the two LGC instances.
+pub fn table5(engine: &Engine, steps: usize) -> Result<[[f64; 3]; 2]> {
+    let mut out = [[0.0; 3]; 2];
+    println!("\n=== Table V (scaled): per-phase iteration duration, resnet_mini K=8 ===");
+    let mut t = Table::new(&["phase", "LGC param-server (ms/iter)", "LGC ring-allreduce (ms/iter)"]);
+    let mut results = Vec::new();
+    for (i, m) in [Method::LgcPs, Method::LgcRar].into_iter().enumerate() {
+        let r = coordinator::train(engine, base_cfg("resnet_mini", m, 8, steps))?;
+        for p in 0..3 {
+            out[i][p] = if r.phase_iters[p] > 0 {
+                r.phase_time[p].as_secs_f64() * 1e3 / r.phase_iters[p] as f64
+            } else {
+                f64::NAN
+            };
+        }
+        results.push(r);
+    }
+    let mut csv = Csv::new("results/table5.csv", &["phase", "lgc_ps_ms", "lgc_rar_ms"]);
+    for (p, name) in ["full update", "top-k update", "compressed update"].iter().enumerate() {
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}", out[0][p]),
+            format!("{:.2}", out[1][p]),
+        ]);
+        csv.row(&[name.to_string(), format!("{}", out[0][p]), format!("{}", out[1][p])]);
+    }
+    t.print();
+    csv.finish()?;
+    println!("-> results/table5.csv");
+    Ok(out)
+}
+
+/// Table VI: three workloads x five methods.
+pub fn table6(engine: &Engine, steps: usize) -> Result<()> {
+    let methods = [
+        Method::Baseline,
+        Method::SparseGd,
+        Method::Dgc,
+        Method::LgcRar,
+        Method::LgcPs,
+    ];
+    for (model, nodes, tag) in [
+        ("resnet_mini", 2usize, "resnet_mini K=2 (ResNet50/Cifar10)"),
+        ("resnet_mini_deep", 4, "resnet_mini_deep K=4 (ResNet101/Cifar10)"),
+        ("segnet_mini", 2, "segnet_mini K=2 (PSPNet/CamVid)"),
+    ] {
+        let rows = compare_methods(engine, model, nodes, steps, &methods, None)?;
+        emit_method_table(
+            &format!("Table VI (scaled): {tag}"),
+            &rows,
+            &format!("results/table6_{model}.csv"),
+        )?;
+    }
+    Ok(())
+}
+
+/// Figs 10/11: learning curves for all methods on one workload.
+pub fn learning_curves(
+    engine: &Engine,
+    model: &str,
+    nodes: usize,
+    steps: usize,
+    csv_path: &str,
+) -> Result<Vec<MethodRow>> {
+    let methods = [
+        Method::Baseline,
+        Method::SparseGd,
+        Method::Dgc,
+        Method::LgcRar,
+        Method::LgcPs,
+    ];
+    let rows = compare_methods(engine, model, nodes, steps, &methods, None)?;
+    // Long-format CSV: method, iter, train_loss, train_acc, eval marker.
+    let mut csv = Csv::new(csv_path, &["method", "iter", "train_loss", "train_acc"]);
+    for r in &rows {
+        for p in &r.result.curve {
+            csv.row(&[
+                r.method.name().to_string(),
+                p.iter.to_string(),
+                format!("{}", p.train_loss),
+                format!("{}", p.train_acc),
+            ]);
+        }
+    }
+    csv.finish()?;
+    println!("\n=== learning curves {model} K={nodes} -> {csv_path} ===");
+    let mut t = Table::new(&["method", "final train loss", "final eval acc"]);
+    for r in &rows {
+        t.row(&[
+            r.method.name().to_string(),
+            format!("{:.4}", r.result.final_train_loss()),
+            format!("{:.4}", r.acc),
+        ]);
+    }
+    t.print();
+    Ok(rows)
+}
+
+/// Fig 13: sparsification-strategy ablation on LGC (fixed / exponential /
+/// warmup), two models.
+pub fn fig13(engine: &Engine, steps: usize) -> Result<()> {
+    println!("\n=== Fig 13 (scaled): sparsification strategies ===");
+    let mut csv = Csv::new(
+        "results/fig13.csv",
+        &["model", "schedule", "iter", "train_loss"],
+    );
+    let mut t = Table::new(&["model", "schedule", "final loss"]);
+    for model in ["convnet5", "resnet_mini"] {
+        for (sched, name) in [
+            (SparsifySchedule::Fixed, "fixed"),
+            (SparsifySchedule::Exponential, "exponential"),
+            (SparsifySchedule::Warmup, "warmup"),
+        ] {
+            let nodes = if model == "convnet5" { 4 } else { 2 };
+            let mut cfg = base_cfg(model, Method::LgcPs, nodes, steps);
+            cfg.schedule = sched;
+            let r = coordinator::train(engine, cfg)?;
+            for p in &r.curve {
+                csv.row(&[
+                    model.to_string(),
+                    name.to_string(),
+                    p.iter.to_string(),
+                    format!("{}", p.train_loss),
+                ]);
+            }
+            t.row(&[
+                model.to_string(),
+                name.to_string(),
+                format!("{:.4}", r.final_train_loss()),
+            ]);
+        }
+    }
+    t.print();
+    csv.finish()?;
+    println!("-> results/fig13.csv");
+    Ok(())
+}
+
+/// Fig 14: autoencoder reconstruction-loss convergence, lambda_2 ablation.
+pub fn fig14(engine: &Engine, steps: usize) -> Result<()> {
+    println!("\n=== Fig 14 (scaled): AE convergence ===");
+    let mut csv = Csv::new(
+        "results/fig14.csv",
+        &["setting", "step", "rec_loss", "sim_loss"],
+    );
+    let mut t = Table::new(&["setting", "first rec loss", "last rec loss"]);
+    // (pattern, model, nodes, lambda2)
+    let settings: [(&str, Method, &str, usize, f32); 3] = [
+        ("ps_lam0", Method::LgcPs, "resnet_mini", 8, 0.0),
+        ("ps_lam05", Method::LgcPs, "resnet_mini", 8, 0.5),
+        ("rar", Method::LgcRar, "convnet5", 4, 0.0),
+    ];
+    for (name, method, model, nodes, lam2) in settings {
+        let mut cfg = base_cfg(model, method, nodes, steps);
+        cfg.lambda2 = lam2;
+        let r = coordinator::train(engine, cfg)?;
+        for (i, (rec, sim)) in r.ae_losses.iter().enumerate() {
+            csv.row(&[
+                name.to_string(),
+                i.to_string(),
+                format!("{rec}"),
+                format!("{sim}"),
+            ]);
+        }
+        let first = r.ae_losses.first().map(|x| x.0).unwrap_or(f32::NAN);
+        let last = r.ae_losses.last().map(|x| x.0).unwrap_or(f32::NAN);
+        t.row(&[name.to_string(), format!("{first:.4}"), format!("{last:.4}")]);
+    }
+    t.print();
+    csv.finish()?;
+    println!("-> results/fig14.csv");
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Histogram entropy / mutual-information estimators (paper §III).
+//!
+//! The paper quantizes gradient pairs and estimates marginal entropy
+//! H(g2), conditional entropy H(g2|g1), and MI I(g1; g2) from histograms.
+//! The paper states a "2^32-level" quantizer, which is degenerate for
+//! ~10^4-10^6 samples (every bin holds <= 1 sample, H -> log N, MI -> H);
+//! we use 2^6-2^12 bins (sweepable) over a symmetric range clipped at a
+//! high percentile — the regime where the estimates stabilize
+//! (DESIGN.md §10, deviation 3).
+
+/// Marginal + joint histogram statistics of a gradient pair.
+#[derive(Debug, Clone)]
+pub struct InfoPlane {
+    /// H(a) in bits.
+    pub h_a: f64,
+    /// H(b) in bits.
+    pub h_b: f64,
+    /// H(a, b) in bits.
+    pub h_ab: f64,
+    /// I(a; b) = H(a) + H(b) - H(a,b), clamped at >= 0.
+    pub mi: f64,
+}
+
+impl InfoPlane {
+    /// H(b | a) = H(a,b) - H(a).
+    pub fn cond_b_given_a(&self) -> f64 {
+        (self.h_ab - self.h_a).max(0.0)
+    }
+}
+
+fn entropy(counts: &[u32], total: f64) -> f64 {
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / total;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Symmetric clip range covering ~99.5% of both vectors' mass.
+fn clip_range(a: &[f32], b: &[f32]) -> f32 {
+    let mut mags: Vec<f32> = a.iter().chain(b).map(|x| x.abs()).collect();
+    let idx = ((mags.len() as f64) * 0.995) as usize;
+    let idx = idx.min(mags.len() - 1);
+    let (_, v, _) = mags.select_nth_unstable_by(idx, |x, y| x.partial_cmp(y).unwrap());
+    let r = *v;
+    if r > 0.0 { r } else { 1e-8 }
+}
+
+/// Estimate the information plane of two equal-length gradient vectors
+/// with a `bins` x `bins` joint histogram.
+pub fn info_plane(a: &[f32], b: &[f32], bins: usize) -> InfoPlane {
+    assert_eq!(a.len(), b.len());
+    assert!(bins >= 2 && !a.is_empty());
+    let r = clip_range(a, b);
+    let quant = |x: f32| -> usize {
+        let t = ((x + r) / (2.0 * r)).clamp(0.0, 1.0);
+        ((t * bins as f32) as usize).min(bins - 1)
+    };
+    let mut ha = vec![0u32; bins];
+    let mut hb = vec![0u32; bins];
+    let mut hab = vec![0u32; bins * bins];
+    for (&x, &y) in a.iter().zip(b) {
+        let (i, j) = (quant(x), quant(y));
+        ha[i] += 1;
+        hb[j] += 1;
+        hab[i * bins + j] += 1;
+    }
+    let n = a.len() as f64;
+    let h_a = entropy(&ha, n);
+    let h_b = entropy(&hb, n);
+    let h_ab = entropy(&hab, n);
+    InfoPlane { h_a, h_b, h_ab, mi: (h_a + h_b - h_ab).max(0.0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_vectors_mi_equals_entropy() {
+        let mut rng = Rng::new(1);
+        let a = rng.normal_vec(50_000, 1.0);
+        let ip = info_plane(&a, &a, 64);
+        assert!((ip.mi - ip.h_b).abs() < 0.02, "mi={} h={}", ip.mi, ip.h_b);
+        assert!(ip.cond_b_given_a() < 0.02);
+    }
+
+    #[test]
+    fn independent_vectors_mi_near_zero() {
+        let mut rng = Rng::new(2);
+        let a = rng.normal_vec(100_000, 1.0);
+        let b = rng.normal_vec(100_000, 1.0);
+        let ip = info_plane(&a, &b, 32);
+        // finite-sample bias ~ (bins-1)^2 / (2 N ln 2) ~ 0.007 bits
+        assert!(ip.mi < 0.05, "mi={}", ip.mi);
+        assert!(ip.h_a > 3.0); // gaussian over 32 bins carries real entropy
+    }
+
+    #[test]
+    fn correlated_vectors_match_analytic_gaussian_mi() {
+        // b = a + sigma*noise, both ~N(0,1):
+        // I(a;b) = 0.5 * log2(1 + 1/sigma^2) bits exactly.
+        let mut rng = Rng::new(3);
+        let a = rng.normal_vec(200_000, 1.0);
+        let sigma = 0.3f32;
+        let b: Vec<f32> = a.iter().map(|x| x + sigma * rng.normal()).collect();
+        let ip = info_plane(&a, &b, 64);
+        let analytic = 0.5 * (1.0 + 1.0 / (sigma as f64).powi(2)).log2(); // ~1.80
+        assert!(
+            (ip.mi - analytic).abs() < 0.25,
+            "mi={} analytic={analytic}", ip.mi
+        );
+        assert!(ip.mi < ip.h_b); // lossy channel: MI strictly below H
+    }
+
+    #[test]
+    fn mi_symmetric() {
+        let mut rng = Rng::new(4);
+        let a = rng.normal_vec(20_000, 1.0);
+        let b: Vec<f32> = a.iter().map(|x| 0.5 * x + 0.5 * rng.normal()).collect();
+        let ab = info_plane(&a, &b, 32).mi;
+        let ba = info_plane(&b, &a, 32).mi;
+        assert!((ab - ba).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_vector_zero_entropy() {
+        let a = vec![0.0f32; 1000];
+        let mut rng = Rng::new(5);
+        let b = rng.normal_vec(1000, 1.0);
+        let ip = info_plane(&a, &b, 16);
+        assert!(ip.h_a < 1e-9);
+        assert!(ip.mi < 1e-9);
+    }
+
+    #[test]
+    fn bins_sweep_is_stable_for_correlated_data() {
+        // The MI/H ratio (the paper's "~80%" claim) should be roughly
+        // bin-count independent in the stable regime.
+        let mut rng = Rng::new(6);
+        let a = rng.normal_vec(200_000, 1.0);
+        let b: Vec<f32> = a.iter().map(|x| x + 0.2 * rng.normal()).collect();
+        let r1 = {
+            let ip = info_plane(&a, &b, 64);
+            ip.mi / ip.h_b
+        };
+        let r2 = {
+            let ip = info_plane(&a, &b, 256);
+            ip.mi / ip.h_b
+        };
+        assert!((r1 - r2).abs() < 0.15, "{r1} vs {r2}");
+    }
+}

@@ -1,0 +1,34 @@
+//! # LGC — Learned Gradient Compression for Distributed Deep Learning
+//!
+//! Rust + JAX + Pallas reproduction of Abrahamyan et al., 2021 (cs.LG).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the distributed-training coordinator: simulated
+//!   multi-node topology, parameter-server + ring-allreduce protocols,
+//!   three-phase scheduler, gradient compression strategies (LGC + the
+//!   paper's comparators), byte-accounted rate ledger.
+//! * **L2 (python/compile, build time only)** — JAX models and the LGC
+//!   autoencoders, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
+//!   hot-spot (1-D conv encoder/decoder, fused sparsify).
+//!
+//! Quickstart:
+//! ```no_run
+//! use lgc::{config::TrainConfig, coordinator, runtime::Engine};
+//! let engine = Engine::open_default().unwrap();
+//! let cfg = TrainConfig { steps: 100, ..Default::default() }.scaled_phases();
+//! let result = coordinator::train(&engine, cfg).unwrap();
+//! println!("compression ratio: {:.0}x", result.compression_ratio());
+//! ```
+
+pub mod baselines;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod info;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,228 @@
+//! `lgc` — CLI launcher for the LGC distributed-training framework.
+//!
+//! Subcommands:
+//!   train       run one distributed-training configuration
+//!   exp         regenerate a paper table/figure (--id table4|table5|...)
+//!   info-plane  §III MI/entropy analysis
+//!   latency     AE encode/decode latency measurement
+//!   profile     per-HLO-module call profile of a short run
+//!   list        show manifest contents
+//!
+//! Examples:
+//!   lgc train --model resnet_mini --method lgc_ps --nodes 4 --steps 300
+//!   lgc exp --id table6 --steps 280
+//!   lgc info-plane --model resnet_mini --steps 40
+
+use anyhow::{bail, Result};
+
+use lgc::config::TrainConfig;
+use lgc::exp::{self, speedup::LinkModel};
+use lgc::runtime::Engine;
+use lgc::util::cli::Args;
+
+const FLAGS: &[&str] = &[
+    "model", "method", "nodes", "steps", "lr", "momentum", "alpha", "warmup",
+    "ae-train", "ae-lr", "lambda2", "schedule", "eval-every", "seed",
+    "verbose", "id", "bins", "pair", "bandwidth-mbps", "artifacts",
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), FLAGS)
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `lgc help` for usage"))?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    if sub == "help" {
+        print_help();
+        return Ok(());
+    }
+    if let Some(dir) = args.opt_str("artifacts") {
+        std::env::set_var("LGC_ARTIFACTS", dir);
+    }
+    let engine = Engine::open_default()?;
+    eprintln!(
+        "lgc: platform={} models={:?}",
+        engine.platform(),
+        engine.manifest.models.keys().collect::<Vec<_>>()
+    );
+
+    match sub.as_str() {
+        "train" => {
+            let mut cfg = TrainConfig::from_args(&args);
+            if !args.has("warmup") && !args.has("ae-train") {
+                cfg = cfg.scaled_phases();
+            }
+            let r = lgc::coordinator::train(&engine, cfg)?;
+            println!("final eval: loss {:.4}, acc {:.4}", r.final_eval.0, r.final_eval.1);
+            println!(
+                "steady info size: {:.6} MB/iter/node, compression ratio {:.0}x",
+                r.info_size_mb(),
+                r.compression_ratio()
+            );
+            println!("{}", r.ledger.summary());
+        }
+        "exp" => {
+            let id = args.str("id", "all");
+            let steps = args.usize("steps", exp::default_steps());
+            run_exp(&engine, &id, steps, &args)?;
+        }
+        "info-plane" => {
+            let model = args.str("model", "resnet_mini");
+            let steps = args.usize("steps", 40);
+            let bins = args.usize("bins", 256);
+            exp::info_plane::fig3_fig4(&engine, &model, steps, bins)?;
+        }
+        "latency" => {
+            let model = args.str("model", "resnet_mini");
+            let mu = engine.manifest.model(&model).mu;
+            let (e, d, dp) = exp::speedup::ae_latency(&engine, mu, 2)?;
+            println!("mu={mu}: encode {e:.3} ms, decode RAR {d:.3} ms, decode PS {dp:.3} ms");
+        }
+        "profile" => {
+            let mut cfg = TrainConfig::from_args(&args);
+            cfg.steps = args.usize("steps", 60);
+            cfg = cfg.scaled_phases();
+            let r = lgc::coordinator::train(&engine, cfg)?;
+            println!(
+                "coordinator wall: grad {:.1} ms, exchange {:.1} ms, update {:.1} ms",
+                r.time_grad.as_secs_f64() * 1e3,
+                r.time_exchange.as_secs_f64() * 1e3,
+                r.time_update.as_secs_f64() * 1e3
+            );
+            println!("{:<28} {:>8} {:>12} {:>10}", "module", "calls", "total ms", "ms/call");
+            for (name, n, d) in engine.profile() {
+                println!(
+                    "{:<28} {:>8} {:>12.1} {:>10.3}",
+                    name,
+                    n,
+                    d.as_secs_f64() * 1e3,
+                    d.as_secs_f64() * 1e3 / n as f64
+                );
+            }
+        }
+        "list" => {
+            println!("alpha = {}", engine.manifest.alpha);
+            for (name, m) in &engine.manifest.models {
+                println!(
+                    "model {name}: n={} layers={} mu={} batch={}",
+                    m.n_params,
+                    m.n_layers(),
+                    m.mu,
+                    m.batch
+                );
+            }
+            for (mu, v) in &engine.manifest.ae.variants {
+                println!(
+                    "ae mu={mu}: train K(rar)={:?} K(ps)={:?}",
+                    v.train_rar.keys().collect::<Vec<_>>(),
+                    v.train_ps.keys().collect::<Vec<_>>()
+                );
+            }
+            println!("{} modules", engine.manifest.modules.len());
+        }
+        other => bail!("unknown subcommand {other:?}; run `lgc help`"),
+    }
+    Ok(())
+}
+
+fn run_exp(engine: &Engine, id: &str, steps: usize, args: &Args) -> Result<()> {
+    match id {
+        "table4" => {
+            exp::table4(engine, steps)?;
+        }
+        "table5" => {
+            exp::table5(engine, steps)?;
+        }
+        "table6" => {
+            exp::table6(engine, steps)?;
+        }
+        "fig3" | "fig4" => {
+            let bins = args.usize("bins", 256);
+            exp::info_plane::fig3_fig4(engine, "resnet_mini", steps.min(60), bins)?;
+            exp::info_plane::fig3_fig4(engine, "segnet_mini", steps.min(60), bins)?;
+        }
+        "fig10" => {
+            exp::learning_curves(engine, "resnet_mini", 2, steps, "results/fig10.csv")?;
+        }
+        "fig11" => {
+            exp::learning_curves(engine, "segnet_mini", 2, steps, "results/fig11.csv")?;
+        }
+        "fig12" => {
+            let bins = args.usize("bins", 256);
+            println!("=== Fig 12 (scaled): info plane at scale ===");
+            // VGG11@16 nodes; ConvNet5@22 nodes (paper SS VI-E).
+            for (model, nodes, pair) in [
+                ("vgg11_mini", 16usize, (3usize, 11usize)),
+                ("convnet5", 22, (8usize, 10usize)),
+            ] {
+                let rows = exp::info_plane::info_plane_run(
+                    engine,
+                    model,
+                    nodes,
+                    steps.min(30),
+                    pair,
+                    bins,
+                    0.05,
+                    &format!("results/fig12_k{nodes}.csv"),
+                )?;
+                let means = exp::info_plane::per_layer_means(&rows);
+                let (h, mi): (Vec<f64>, Vec<f64>) =
+                    means.iter().map(|(_, h, m)| (*h, *m)).unzip();
+                println!(
+                    "K={nodes} pair={pair:?}: mean H {:.3} bits, mean MI {:.3} bits, MI/H {:.2}",
+                    h.iter().sum::<f64>() / h.len() as f64,
+                    mi.iter().sum::<f64>() / mi.len() as f64,
+                    mi.iter().sum::<f64>() / h.iter().sum::<f64>()
+                );
+            }
+        }
+        "fig13" => {
+            exp::fig13(engine, steps)?;
+        }
+        "fig14" => {
+            exp::fig14(engine, steps)?;
+        }
+        "ablation" => {
+            exp::ablation::run_all(engine, steps)?;
+        }
+        "speedup" => {
+            let mbps = args.f32("bandwidth-mbps", 125.0) as f64;
+            let link = LinkModel {
+                bandwidth_bytes_per_s: mbps * 1e6,
+                latency_s: 50e-6,
+            };
+            exp::speedup_table(engine, "resnet_mini", 4, steps, link)?;
+        }
+        "all" => {
+            for id in [
+                "fig3", "table4", "table5", "table6", "fig10", "fig11", "fig12",
+                "fig13", "fig14", "speedup",
+            ] {
+                run_exp(engine, id, steps, args)?;
+            }
+        }
+        other => bail!("unknown experiment id {other:?}"),
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        r#"lgc — Learned Gradient Compression (distributed training framework)
+
+USAGE:
+  lgc <subcommand> [--flag value]...
+
+SUBCOMMANDS:
+  train        --model M --method baseline|sparse_gd|dgc|scalecom|qsgd|lgc_ps|lgc_rar
+               --nodes K --steps N [--lr F --alpha F --schedule warmup|fixed|exp
+               --warmup N --ae-train N --lambda2 F --seed S --verbose]
+  exp          --id table4|table5|table6|fig3|fig10|fig11|fig12|fig13|fig14|speedup|all
+               [--steps N]
+  info-plane   --model M [--steps N --bins B]
+  latency      --model M
+  profile      --model M --method X [--steps N]
+  list
+
+MODELS: convnet5, resnet_mini, resnet_mini_deep, segnet_mini, transformer_mini
+Artifacts are read from $LGC_ARTIFACTS or ./artifacts (run `make artifacts`)."#
+    );
+}

@@ -1,0 +1,182 @@
+//! Rate accounting + run telemetry (ground truth for every table/figure).
+//!
+//! [`Ledger`] records every payload any node puts on the wire, tagged with
+//! (iteration, node, direction, kind). Compression ratios in the
+//! experiment outputs are *derived from these measured bytes*, never from
+//! closed-form rate formulas (DESIGN.md §6.4).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// What a payload contains (for per-kind breakdowns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Kind {
+    /// Dense f32 gradient data.
+    Dense,
+    /// Sparse value payloads.
+    Values,
+    /// Entropy-coded index payloads.
+    Indices,
+    /// Autoencoder latent.
+    Latent,
+    /// One-time autoencoder weight broadcast.
+    AeWeights,
+}
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Dense => "dense",
+            Kind::Values => "values",
+            Kind::Indices => "indices",
+            Kind::Latent => "latent",
+            Kind::AeWeights => "ae_weights",
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Ledger {
+    /// Total uplink bytes per node (worker -> master / around the ring).
+    pub per_node: BTreeMap<usize, u64>,
+    /// Totals per payload kind.
+    pub per_kind: BTreeMap<Kind, u64>,
+    /// Bytes per training phase (1: dense, 2: top-k, 3: compressed).
+    pub per_phase: BTreeMap<u8, u64>,
+    /// Recurring bytes per (phase, node) — excludes one-off payloads, so
+    /// per-node steady-state rates (the paper's leader/non-leader split)
+    /// derive from here.
+    pub per_phase_node: BTreeMap<(u8, usize), u64>,
+    /// Bytes of the current iteration (reset by `end_iteration`).
+    cur_iter: u64,
+    /// Finished-iteration byte totals.
+    pub iter_bytes: Vec<u64>,
+    phase: u8,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    pub fn set_phase(&mut self, phase: u8) {
+        self.phase = phase;
+    }
+
+    /// Record `bytes` sent by `node`.
+    pub fn record(&mut self, node: usize, kind: Kind, bytes: usize) {
+        let b = bytes as u64;
+        *self.per_node.entry(node).or_default() += b;
+        *self.per_kind.entry(kind).or_default() += b;
+        *self.per_phase.entry(self.phase).or_default() += b;
+        *self.per_phase_node.entry((self.phase, node)).or_default() += b;
+        self.cur_iter += b;
+    }
+
+    /// Record a one-time setup payload (e.g. the RAR autoencoder weight
+    /// broadcast, §V-B2): counted in all totals, but excluded from the
+    /// per-iteration series so steady-state rates reflect recurring
+    /// traffic only.
+    pub fn record_oneoff(&mut self, node: usize, kind: Kind, bytes: usize) {
+        let b = bytes as u64;
+        *self.per_node.entry(node).or_default() += b;
+        *self.per_kind.entry(kind).or_default() += b;
+        *self.per_phase.entry(self.phase).or_default() += b;
+    }
+
+    /// Close the current iteration's accounting window.
+    pub fn end_iteration(&mut self) {
+        self.iter_bytes.push(self.cur_iter);
+        self.cur_iter = 0;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.per_node.values().sum()
+    }
+
+    /// Mean bytes/iteration over the last `n` iterations (steady state).
+    pub fn steady_bytes_per_iter(&self, n: usize) -> f64 {
+        if self.iter_bytes.is_empty() {
+            return 0.0;
+        }
+        let tail = &self.iter_bytes[self.iter_bytes.len().saturating_sub(n)..];
+        tail.iter().sum::<u64>() as f64 / tail.len() as f64
+    }
+
+    /// Max per-node bytes over the last `n` iterations / n (the per-node
+    /// uplink rate the paper's "info size" column reports).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "total: {:.3} MB", self.total() as f64 / 1e6);
+        for (k, v) in &self.per_kind {
+            let _ = writeln!(s, "  {:<10} {:>12.3} MB", k.name(), *v as f64 / 1e6);
+        }
+        s
+    }
+}
+
+/// Simple CSV writer for results/ emission.
+pub struct Csv {
+    path: String,
+    buf: String,
+}
+
+impl Csv {
+    pub fn new(path: &str, headers: &[&str]) -> Csv {
+        Csv { path: path.to_string(), buf: headers.join(",") + "\n" }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.buf += &cells.join(",");
+        self.buf.push('\n');
+    }
+
+    pub fn finish(self) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(&self.path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&self.path, self.buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates_by_node_kind_phase() {
+        let mut l = Ledger::new();
+        l.set_phase(1);
+        l.record(0, Kind::Dense, 100);
+        l.record(1, Kind::Dense, 50);
+        l.end_iteration();
+        l.set_phase(3);
+        l.record(0, Kind::Latent, 10);
+        l.record(0, Kind::Indices, 5);
+        l.end_iteration();
+        assert_eq!(l.total(), 165);
+        assert_eq!(l.per_node[&0], 115);
+        assert_eq!(l.per_kind[&Kind::Dense], 150);
+        assert_eq!(l.per_phase[&1], 150);
+        assert_eq!(l.per_phase[&3], 15);
+        assert_eq!(l.iter_bytes, vec![150, 15]);
+    }
+
+    #[test]
+    fn steady_state_window() {
+        let mut l = Ledger::new();
+        for b in [1000, 1000, 10, 10, 10, 10] {
+            l.record(0, Kind::Values, b);
+            l.end_iteration();
+        }
+        assert_eq!(l.steady_bytes_per_iter(4), 10.0);
+        assert!(l.steady_bytes_per_iter(100) > 10.0);
+    }
+
+    #[test]
+    fn empty_ledger() {
+        let l = Ledger::new();
+        assert_eq!(l.total(), 0);
+        assert_eq!(l.steady_bytes_per_iter(5), 0.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Training-state checkpointing (framework feature; not in the paper).
+//!
+//! Binary format, versioned, self-describing:
+//!   magic "LGCK" | u32 version | u32 n_tensors |
+//!   per tensor: u32 rank | u64 dims[rank] | u8 dtype | payload bytes
+//! plus a trailing CRC32 so truncated files fail loudly.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use flate2::Crc;
+
+use crate::runtime::{Data, Tensor};
+
+const MAGIC: &[u8; 4] = b"LGCK";
+const VERSION: u32 = 1;
+
+pub fn save(path: impl AsRef<Path>, tensors: &[Tensor]) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend(MAGIC);
+    buf.extend(VERSION.to_le_bytes());
+    buf.extend((tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        buf.extend((t.dims.len() as u32).to_le_bytes());
+        for &d in &t.dims {
+            buf.extend((d as u64).to_le_bytes());
+        }
+        match &t.data {
+            Data::F32(v) => {
+                buf.push(0u8);
+                for x in v {
+                    buf.extend(x.to_le_bytes());
+                }
+            }
+            Data::I32(v) => {
+                buf.push(1u8);
+                for x in v {
+                    buf.extend(x.to_le_bytes());
+                }
+            }
+        }
+    }
+    let mut crc = Crc::new();
+    crc.update(&buf);
+    buf.extend(crc.sum().to_le_bytes());
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?
+        .read_to_end(&mut buf)?;
+    if buf.len() < 16 {
+        bail!("checkpoint too short");
+    }
+    let (body, tail) = buf.split_at(buf.len() - 4);
+    let want_crc = u32::from_le_bytes(tail.try_into()?);
+    let mut crc = Crc::new();
+    crc.update(body);
+    if crc.sum() != want_crc {
+        bail!("checkpoint CRC mismatch (truncated or corrupted)");
+    }
+    let mut pos = 0usize;
+    let mut take = |n: usize| -> Result<&[u8]> {
+        if pos + n > body.len() {
+            bail!("checkpoint truncated");
+        }
+        let s = &body[pos..pos + n];
+        pos += n;
+        Ok(s)
+    };
+    if take(4)? != MAGIC {
+        bail!("not an LGC checkpoint");
+    }
+    let version = u32::from_le_bytes(take(4)?.try_into()?);
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let count = u32::from_le_bytes(take(4)?.try_into()?) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let rank = u32::from_le_bytes(take(4)?.try_into()?) as usize;
+        if rank > 16 {
+            bail!("implausible tensor rank {rank}");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(u64::from_le_bytes(take(8)?.try_into()?) as usize);
+        }
+        let n: usize = dims.iter().product();
+        let dtype = take(1)?[0];
+        match dtype {
+            0 => {
+                let raw = take(n * 4)?;
+                let v = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                out.push(Tensor::f32(dims, v));
+            }
+            1 => {
+                let raw = take(n * 4)?;
+                let v = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                out.push(Tensor::i32(dims, v));
+            }
+            other => bail!("unknown dtype tag {other}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("lgc_ckpt_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_mixed_tensors() {
+        let tensors = vec![
+            Tensor::f32(vec![2, 3], vec![1., -2., 3.5, 0., 5., 6.]),
+            Tensor::i32(vec![4], vec![-7, 0, 1, 2]),
+            Tensor::scalar_f32(42.0),
+        ];
+        let p = tmp("roundtrip");
+        save(&p, &tensors).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back, tensors);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let tensors = vec![Tensor::f32(vec![8], vec![1.0; 8])];
+        let p = tmp("corrupt");
+        save(&p, &tensors).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let tensors = vec![Tensor::f32(vec![100], vec![0.5; 100])];
+        let p = tmp("trunc");
+        save(&p, &tensors).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage");
+        std::fs::write(&p, b"this is not a checkpoint at all").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_tensor_list() {
+        let p = tmp("empty");
+        save(&p, &[]).unwrap();
+        assert_eq!(load(&p).unwrap(), vec![]);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,278 @@
+//! Host-side model state: parameter replay, gradient flattening, SGD.
+//!
+//! Synchronous data-parallel SGD keeps all replicas bit-identical, so the
+//! coordinator stores ONE copy of the parameters; per-node state lives in
+//! the compression strategies (error-feedback memories).
+//!
+//! Parameter init replays the same He-normal rule aot.py's python models
+//! use (weights: N(0, sqrt(2/fan_in)), fan_in = prod(shape[1:]); rank-1
+//! tensors: zeros), from the manifest shapes — no weight files needed.
+
+pub mod checkpoint;
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::runtime::{Engine, ModelMeta, Tensor};
+use crate::util::rng::Rng;
+
+/// The three parameter groups of §VI-A's layer rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Group {
+    /// First layer: always updated with original dense gradients.
+    First,
+    /// Middle layers: top-k + autoencoder compression.
+    Mid,
+    /// Last layer: top-k only, no autoencoder.
+    Last,
+}
+
+pub struct Model {
+    pub meta: ModelMeta,
+    pub params: Vec<Tensor>,
+    /// SGD momentum buffer (same layout as the flattened full gradient).
+    velocity: Vec<f32>,
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+impl Model {
+    pub fn new(meta: &ModelMeta, seed: u64) -> Model {
+        let mut rng = Rng::new(seed);
+        let params = meta
+            .params
+            .iter()
+            .map(|shape| {
+                let n: usize = shape.iter().product();
+                if shape.len() > 1 {
+                    let fan_in: usize = shape[1..].iter().product();
+                    let std = (2.0f32 / fan_in as f32).sqrt();
+                    Tensor::f32(shape.clone(), rng.normal_vec(n, std))
+                } else {
+                    Tensor::zeros(shape.clone())
+                }
+            })
+            .collect();
+        Model {
+            meta: meta.clone(),
+            params,
+            velocity: vec![0.0; meta.n_params],
+            momentum: 0.0,
+            weight_decay: 0.0,
+        }
+    }
+
+    pub fn group_idx(&self, g: Group) -> &[usize] {
+        match g {
+            Group::First => &self.meta.first_param_idx,
+            Group::Mid => &self.meta.mid_param_idx,
+            Group::Last => &self.meta.last_param_idx,
+        }
+    }
+
+    /// Scalar length of a parameter group.
+    pub fn group_len(&self, g: Group) -> usize {
+        self.meta.group_len(self.group_idx(g))
+    }
+
+    /// Run one grad_step on `batch`; returns (loss, acc, per-param grads).
+    pub fn grad_step(&self, engine: &Engine, batch: &Batch) -> Result<(f32, f32, Vec<Tensor>)> {
+        let mut inputs = self.params.clone();
+        inputs.push(batch.x.clone());
+        inputs.push(batch.y.clone());
+        let mut out = engine.run(&self.meta.grad_step, &inputs)?;
+        let grads = out.split_off(2);
+        Ok((out[0].scalar(), out[1].scalar(), grads))
+    }
+
+    pub fn evaluate(&self, engine: &Engine, batch: &Batch) -> Result<(f32, f32)> {
+        let mut inputs = self.params.clone();
+        inputs.push(batch.x.clone());
+        inputs.push(batch.y.clone());
+        let out = engine.run(&self.meta.evaluate, &inputs)?;
+        Ok((out[0].scalar(), out[1].scalar()))
+    }
+
+    /// Flatten a parameter group of a per-param gradient list into one
+    /// contiguous vector (the coordinator's working representation).
+    pub fn flatten_group(&self, grads: &[Tensor], g: Group) -> Vec<f32> {
+        let idx = self.group_idx(g);
+        let mut out = Vec::with_capacity(self.group_len(g));
+        for &i in idx {
+            out.extend_from_slice(grads[i].as_f32());
+        }
+        out
+    }
+
+    /// Per-layer slices of the *mid* group flat vector: (layer, range).
+    /// Used by the info-plane analysis, which is per-layer (§III).
+    pub fn layer_slices(&self, g: Group) -> Vec<(usize, std::ops::Range<usize>)> {
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        let mut cur: Option<(usize, usize)> = None; // (layer, start)
+        for &i in self.group_idx(g) {
+            let layer = self.meta.layer_of_param[i];
+            let len = self.meta.param_len(i);
+            match cur {
+                Some((l, start)) if l == layer => {
+                    cur = Some((l, start));
+                }
+                Some((l, start)) => {
+                    out.push((l, start..off));
+                    cur = Some((layer, off));
+                }
+                None => cur = Some((layer, off)),
+            }
+            off += len;
+        }
+        if let Some((l, start)) = cur {
+            out.push((l, start..off));
+        }
+        out
+    }
+
+    /// Persist parameters + optimizer state to a checkpoint file.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut tensors = self.params.clone();
+        tensors.push(Tensor::f32(vec![self.velocity.len()], self.velocity.clone()));
+        checkpoint::save(path, &tensors)
+    }
+
+    /// Restore parameters + optimizer state from a checkpoint file.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut tensors = checkpoint::load(path)?;
+        anyhow::ensure!(
+            tensors.len() == self.params.len() + 1,
+            "checkpoint tensor count mismatch: got {}, want {}",
+            tensors.len(),
+            self.params.len() + 1
+        );
+        let vel = tensors.pop().unwrap();
+        anyhow::ensure!(vel.len() == self.velocity.len(), "velocity length mismatch");
+        for (t, shape) in tensors.iter().zip(&self.meta.params) {
+            anyhow::ensure!(&t.dims == shape, "param shape mismatch: {:?} vs {:?}",
+                            t.dims, shape);
+        }
+        self.velocity = vel.as_f32().to_vec();
+        self.params = tensors;
+        Ok(())
+    }
+
+    /// SGD update from group-flattened aggregated gradients.
+    ///
+    /// `lr` is the step size; momentum/weight decay per the model config.
+    /// The flat layout must match `flatten_group` ordering.
+    pub fn apply_update(&mut self, updates: &[(Group, Vec<f32>)], lr: f32) {
+        // Assemble the full-length flat gradient.
+        let mut full = vec![0.0f32; self.meta.n_params];
+        // Precompute param offsets in full-flat order (param index order).
+        let mut offsets = Vec::with_capacity(self.meta.params.len());
+        let mut off = 0;
+        for i in 0..self.meta.params.len() {
+            offsets.push(off);
+            off += self.meta.param_len(i);
+        }
+        for (g, flat) in updates {
+            let idx = self.group_idx(*g).to_vec();
+            let mut pos = 0usize;
+            for &i in &idx {
+                let len = self.meta.param_len(i);
+                full[offsets[i]..offsets[i] + len]
+                    .copy_from_slice(&flat[pos..pos + len]);
+                pos += len;
+            }
+            debug_assert_eq!(pos, flat.len());
+        }
+        // Momentum + weight decay, then the parameter step.
+        let wd = self.weight_decay;
+        let m = self.momentum;
+        let mut pi = 0usize;
+        for (i, p) in self.params.iter_mut().enumerate() {
+            let base = offsets[i];
+            let data = p.as_f32_mut();
+            for (j, w) in data.iter_mut().enumerate() {
+                let mut g = full[base + j] + wd * *w;
+                if m > 0.0 {
+                    let v = &mut self.velocity[base + j];
+                    *v = m * *v + g;
+                    g = *v;
+                }
+                *w -= lr * g;
+            }
+            pi += data.len();
+        }
+        debug_assert_eq!(pi, self.meta.n_params);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "m".into(),
+            params: vec![vec![2, 3], vec![3], vec![4], vec![2, 2]],
+            layer_of_param: vec![0, 0, 1, 2],
+            n_params: 6 + 3 + 4 + 4,
+            n_mid: 4,
+            mu: 16,
+            first_param_idx: vec![0, 1],
+            mid_param_idx: vec![2],
+            last_param_idx: vec![3],
+            batch: 1,
+            input_shape: vec![1],
+            input_dtype: "f32".into(),
+            num_classes: 2,
+            grad_step: "g".into(),
+            evaluate: "e".into(),
+            sparsify: "s".into(),
+        }
+    }
+
+    #[test]
+    fn init_replays_he_rule() {
+        let m = Model::new(&meta(), 1);
+        assert_eq!(m.params[0].dims, vec![2, 3]);
+        assert!(m.params[0].as_f32().iter().any(|&x| x != 0.0));
+        assert!(m.params[1].as_f32().iter().all(|&x| x == 0.0)); // bias
+    }
+
+    #[test]
+    fn group_flatten_lengths() {
+        let m = Model::new(&meta(), 1);
+        assert_eq!(m.group_len(Group::First), 9);
+        assert_eq!(m.group_len(Group::Mid), 4);
+        assert_eq!(m.group_len(Group::Last), 4);
+    }
+
+    #[test]
+    fn apply_update_touches_only_given_groups() {
+        let mut m = Model::new(&meta(), 1);
+        let before_first = m.params[0].as_f32().to_vec();
+        let before_mid = m.params[2].as_f32().to_vec();
+        m.apply_update(&[(Group::Mid, vec![1.0; 4])], 0.1);
+        assert_eq!(m.params[0].as_f32(), &before_first[..]);
+        for (a, b) in m.params[2].as_f32().iter().zip(&before_mid) {
+            assert!((a - (b - 0.1)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut m = Model::new(&meta(), 1);
+        m.momentum = 0.9;
+        let w0 = m.params[2].as_f32()[0];
+        m.apply_update(&[(Group::Mid, vec![1.0; 4])], 0.1);
+        m.apply_update(&[(Group::Mid, vec![1.0; 4])], 0.1);
+        // First step: -0.1; second: v=1.9 -> -0.19; total -0.29.
+        assert!((m.params[2].as_f32()[0] - (w0 - 0.29)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn layer_slices_group_contiguous() {
+        let m = Model::new(&meta(), 1);
+        let s = m.layer_slices(Group::First);
+        assert_eq!(s, vec![(0usize, 0..9)]);
+    }
+}

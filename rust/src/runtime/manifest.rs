@@ -1,0 +1,195 @@
+//! `artifacts/manifest.json` — the contract between aot.py and the runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModuleMeta {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub input_dtypes: Vec<String>,
+    pub outputs: Vec<Vec<usize>>,
+    pub output_dtypes: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub params: Vec<Vec<usize>>,
+    pub layer_of_param: Vec<usize>,
+    pub n_params: usize,
+    /// Total scalar count of the "middle" parameter group (AE-compressed).
+    pub n_mid: usize,
+    pub mu: usize,
+    pub first_param_idx: Vec<usize>,
+    pub mid_param_idx: Vec<usize>,
+    pub last_param_idx: Vec<usize>,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: String,
+    pub num_classes: usize,
+    pub grad_step: String,
+    pub evaluate: String,
+    pub sparsify: String,
+}
+
+impl ModelMeta {
+    pub fn param_len(&self, i: usize) -> usize {
+        self.params[i].iter().product()
+    }
+
+    pub fn group_len(&self, idx: &[usize]) -> usize {
+        idx.iter().map(|&i| self.param_len(i)).sum()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layer_of_param.iter().copied().max().unwrap_or(0) + 1
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AeVariant {
+    pub enc: String,
+    pub dec_rar: String,
+    pub dec_ps: String,
+    /// K -> module name
+    pub train_rar: BTreeMap<usize, String>,
+    pub train_ps: BTreeMap<usize, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct AeMeta {
+    pub enc_shapes: Vec<Vec<usize>>,
+    pub dec_shapes_rar: Vec<Vec<usize>>,
+    pub dec_shapes_ps: Vec<Vec<usize>>,
+    pub latent_ch: usize,
+    pub down: usize,
+    /// mu -> variant
+    pub variants: BTreeMap<usize, AeVariant>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub alpha: f64,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub ae: AeMeta,
+    pub modules: BTreeMap<String, ModuleMeta>,
+    pub fingerprint: String,
+}
+
+fn shapes(v: &Json) -> Vec<Vec<usize>> {
+    v.as_arr().expect("shape list").iter().map(|s| s.usize_arr()).collect()
+}
+
+fn strings(v: &Json) -> Vec<String> {
+    v.as_arr()
+        .expect("string list")
+        .iter()
+        .map(|s| s.as_str().expect("string").to_string())
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models").as_obj().unwrap() {
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    params: shapes(m.req("params")),
+                    layer_of_param: m.req("layer_of_param").usize_arr(),
+                    n_params: m.usize_of("n_params"),
+                    n_mid: m.usize_of("n_mid"),
+                    mu: m.usize_of("mu"),
+                    first_param_idx: m.req("first_param_idx").usize_arr(),
+                    mid_param_idx: m.req("mid_param_idx").usize_arr(),
+                    last_param_idx: m.req("last_param_idx").usize_arr(),
+                    batch: m.usize_of("batch"),
+                    input_shape: m.req("input_shape").usize_arr(),
+                    input_dtype: m.str_of("input_dtype").to_string(),
+                    num_classes: m.usize_of("num_classes"),
+                    grad_step: m.str_of("grad_step").to_string(),
+                    evaluate: m.str_of("evaluate").to_string(),
+                    sparsify: m.str_of("sparsify").to_string(),
+                },
+            );
+        }
+
+        let ae_j = j.req("ae");
+        let mut variants = BTreeMap::new();
+        for (mu_s, v) in ae_j.req("variants").as_obj().unwrap() {
+            let mut train_rar = BTreeMap::new();
+            for (k, name) in v.req("train_rar").as_obj().unwrap() {
+                train_rar.insert(k.parse()?, name.as_str().unwrap().to_string());
+            }
+            let mut train_ps = BTreeMap::new();
+            for (k, name) in v.req("train_ps").as_obj().unwrap() {
+                train_ps.insert(k.parse()?, name.as_str().unwrap().to_string());
+            }
+            variants.insert(
+                mu_s.parse()?,
+                AeVariant {
+                    enc: v.str_of("enc").to_string(),
+                    dec_rar: v.str_of("dec_rar").to_string(),
+                    dec_ps: v.str_of("dec_ps").to_string(),
+                    train_rar,
+                    train_ps,
+                },
+            );
+        }
+        let ae = AeMeta {
+            enc_shapes: shapes(ae_j.req("enc_shapes")),
+            dec_shapes_rar: shapes(ae_j.req("dec_shapes_rar")),
+            dec_shapes_ps: shapes(ae_j.req("dec_shapes_ps")),
+            latent_ch: ae_j.usize_of("latent_ch"),
+            down: ae_j.usize_of("down"),
+            variants,
+        };
+
+        let mut modules = BTreeMap::new();
+        for (name, m) in j.req("modules").as_obj().unwrap() {
+            modules.insert(
+                name.clone(),
+                ModuleMeta {
+                    file: m.str_of("file").to_string(),
+                    inputs: shapes(m.req("inputs")),
+                    input_dtypes: strings(m.req("input_dtypes")),
+                    outputs: shapes(m.req("outputs")),
+                    output_dtypes: strings(m.req("output_dtypes")),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            alpha: j.req("alpha").as_f64().unwrap(),
+            models,
+            ae,
+            modules,
+            fingerprint: j.str_of("fingerprint").to_string(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> &ModelMeta {
+        self.models
+            .get(name)
+            .unwrap_or_else(|| panic!("model {name:?} not in manifest ({:?})",
+                                      self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn ae_variant(&self, mu: usize) -> &AeVariant {
+        self.ae
+            .variants
+            .get(&mu)
+            .unwrap_or_else(|| panic!("no AE variant for mu={mu}"))
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only module that touches the `xla` crate. Wiring follows
+//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` (HLO *text*
+//! interchange — xla_extension 0.5.1 rejects jax>=0.5 serialized protos)
+//! -> `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute`.
+//!
+//! Executables are compiled lazily and cached per module name; the manifest
+//! gives every module's I/O contract, which [`Executable::run`] validates on
+//! every call (shape bugs surface as errors at the call site, not as XLA
+//! aborts).
+
+pub mod manifest;
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{AeMeta, AeVariant, Manifest, ModelMeta, ModuleMeta};
+pub use tensor::{Data, Tensor};
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Cumulative executable invocations (hot-path profiling).
+    pub calls: RefCell<HashMap<String, (u64, std::time::Duration)>>,
+}
+
+pub struct Executable {
+    pub name: String,
+    pub meta: ModuleMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Open the artifacts directory (compiles nothing yet).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts location: $LGC_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Engine> {
+        let dir = std::env::var("LGC_ARTIFACTS").unwrap_or_else(|_| {
+            // Works from the repo root and from target/ subdirs (benches).
+            for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+                if Path::new(cand).join("manifest.json").exists() {
+                    return cand.to_string();
+                }
+            }
+            "artifacts".to_string()
+        });
+        Engine::new(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (lazily compiling) an executable by manifest module name.
+    pub fn exec(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .modules
+            .get(name)
+            .with_context(|| format!("module {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = Rc::new(Executable { name: name.to_string(), meta, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Execute a module by name, with I/O validation and call accounting.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.exec(name)?;
+        let t0 = std::time::Instant::now();
+        let out = exe.run(inputs)?;
+        self.account(name, t0.elapsed());
+        Ok(out)
+    }
+
+    /// Execute with pre-built literals (hot path: callers that cache
+    /// their big operands as literals skip one full host copy per call
+    /// — EXPERIMENTS.md §Perf iteration 1).
+    pub fn run_literals(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let exe = self.exec(name)?;
+        let t0 = std::time::Instant::now();
+        let out = exe.run_literals(inputs)?;
+        self.account(name, t0.elapsed());
+        Ok(out)
+    }
+
+    fn account(&self, name: &str, dt: std::time::Duration) {
+        let mut calls = self.calls.borrow_mut();
+        let entry = calls.entry(name.to_string()).or_insert((0, Default::default()));
+        entry.0 += 1;
+        entry.1 += dt;
+    }
+
+    /// Per-module (count, total time) profile, sorted by time desc.
+    pub fn profile(&self) -> Vec<(String, u64, std::time::Duration)> {
+        let mut v: Vec<_> = self
+            .calls
+            .borrow()
+            .iter()
+            .map(|(k, (n, d))| (k.clone(), *n, *d))
+            .collect();
+        v.sort_by_key(|(_, _, d)| std::cmp::Reverse(*d));
+        v
+    }
+}
+
+impl Executable {
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        // Validate the call against the manifest contract.
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if &t.dims != want {
+                bail!(
+                    "{}: input {} shape mismatch: got {:?}, want {:?}",
+                    self.name, i, t.dims, want
+                );
+            }
+            if t.dtype() != self.meta.input_dtypes[i] {
+                bail!(
+                    "{}: input {} dtype mismatch: got {}, want {}",
+                    self.name, i, t.dtype(), self.meta.input_dtypes[i]
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.execute_literals(&literals)
+    }
+
+    /// Execute with caller-owned literals (no per-call conversion).
+    /// Shape validation is skipped — the caller guarantees the contract
+    /// (the manifest-driven paths that use this cache validated tensors).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        if literals.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.meta.inputs.len(),
+                literals.len()
+            );
+        }
+        self.execute_literals(literals)
+    }
+
+    fn execute_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let result = self.exe.execute::<xla::Literal>(literals)?;
+        // aot.py lowers with return_tuple=True: one tuple literal out.
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, lit) in parts.iter().enumerate() {
+            let t = Tensor::from_literal(lit)
+                .with_context(|| format!("{}: output {}", self.name, i))?;
+            debug_assert_eq!(
+                t.dims, self.meta.outputs[i],
+                "{}: output {} shape drift", self.name, i
+            );
+            out.push(t);
+        }
+        Ok(out)
+    }
+}

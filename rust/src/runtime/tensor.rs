@@ -1,0 +1,145 @@
+//! Host-side tensor representation + PJRT literal marshaling.
+//!
+//! The coordinator keeps all state (model params, optimizer state, error
+//! feedback, AE params) host-side as `Tensor`s and converts to/from
+//! `xla::Literal` at each executable call boundary.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, values: Vec<f32>) -> Tensor {
+        debug_assert_eq!(dims.iter().product::<usize>(), values.len());
+        Tensor { dims, data: Data::F32(values) }
+    }
+
+    pub fn i32(dims: Vec<usize>, values: Vec<i32>) -> Tensor {
+        debug_assert_eq!(dims.iter().product::<usize>(), values.len());
+        Tensor { dims, data: Data::I32(values) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(vec![], vec![v])
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Tensor {
+        let n = dims.iter().product();
+        Tensor::f32(dims, vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self.data {
+            Data::F32(_) => "f32",
+            Data::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            Data::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> f32 {
+        debug_assert_eq!(self.len(), 1);
+        match &self.data {
+            Data::F32(v) => v[0],
+            Data::I32(v) => v[0] as f32,
+        }
+    }
+
+    /// Serialize into a PJRT literal.
+    pub fn to_literal(&self) -> Result<Literal> {
+        let (ty, bytes): (ElementType, &[u8]) = match &self.data {
+            Data::F32(v) => (ElementType::F32, bytemuck_f32(v)),
+            Data::I32(v) => (ElementType::S32, bytemuck_i32(v)),
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(ty, &self.dims, bytes)?)
+    }
+
+    /// Deserialize from a PJRT literal.
+    pub fn from_literal(lit: &Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    // f32 -> u8 reinterpretation is always valid (alignment only shrinks).
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(vec![4], vec![-1, 0, 7, 42]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = Tensor::scalar_f32(3.5);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.scalar(), 3.5);
+        assert!(back.dims.is_empty());
+    }
+}

@@ -1,0 +1,153 @@
+//! Measurement harness for the `cargo bench` targets (no criterion in the
+//! offline crate set).
+//!
+//! Provides warmup + repeated timing with mean / p50 / p95 reporting, and a
+//! tiny table printer the per-table/figure benches use to emit the same
+//! rows the paper reports.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3} ms  p50 {:>10.3} ms  p95 {:>10.3} ms  (n={})",
+            self.mean_ns / 1e6,
+            self.p50_ns / 1e6,
+            self.p95_ns / 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` unrecorded runs then `iters` recorded runs.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    Stats {
+        iters,
+        mean_ns: mean,
+        p50_ns: q(0.50),
+        p95_ns: q(0.95),
+        min_ns: samples[0],
+    }
+}
+
+/// Adaptive variant: run for ~`budget_ms` wall time (at least 3 iters).
+pub fn time_budget<F: FnMut()>(budget_ms: u64, mut f: F) -> Stats {
+    f(); // warmup + cost estimate
+    let t0 = Instant::now();
+    f();
+    let per_iter = t0.elapsed().as_nanos().max(1) as u64;
+    let iters = ((budget_ms * 1_000_000) / per_iter).clamp(3, 10_000) as usize;
+    time(0, iters, f)
+}
+
+/// Fixed-width table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let s: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i]))
+                .collect();
+            println!("| {} |", s.join(" | "));
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            w.iter().map(|n| "-".repeat(n + 2)).collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            line(r);
+        }
+    }
+
+    /// Also emit CSV alongside stdout (results/ dir convention).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut s = self.headers.join(",") + "\n";
+        for r in &self.rows {
+            s += &r.join(",");
+            s.push('\n');
+        }
+        std::fs::write(path, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reports_sane_stats() {
+        let s = time(1, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p95_ns);
+        assert!(s.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let tmp = std::env::temp_dir().join("lgc_table_test.csv");
+        t.write_csv(tmp.to_str().unwrap()).unwrap();
+        let s = std::fs::read_to_string(&tmp).unwrap();
+        assert_eq!(s, "a,b\n1,2\n");
+    }
+}

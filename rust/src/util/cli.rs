@@ -1,0 +1,122 @@
+//! Tiny CLI argument parser (no clap in the offline crate set).
+//!
+//! Grammar: `lgc <subcommand> [--flag value]... [--switch]...`
+//! Values parse on demand with typed accessors; unknown flags are rejected
+//! eagerly so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    known: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse `args` (without argv[0]). `known` lists every accepted flag /
+    /// switch name (without `--`).
+    pub fn parse(
+        args: impl IntoIterator<Item = String>,
+        known: &[&'static str],
+    ) -> Result<Args, String> {
+        let mut out = Args { known: known.to_vec(), ..Default::default() };
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let name = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got {a:?}"))?
+                .to_string();
+            if !known.contains(&name.as_str()) {
+                return Err(format!("unknown flag --{name}"));
+            }
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    out.flags.insert(name, it.next().unwrap());
+                }
+                _ => out.switches.push(name),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.flags.get(name).cloned()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name}: bad integer {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32(&self, name: &str, default: f32) -> f32 {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name}: bad float {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name}: bad integer {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(
+            v(&["train", "--model", "convnet5", "--steps", "100", "--quiet"]),
+            &["model", "steps", "quiet"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str("model", "x"), "convnet5");
+        assert_eq!(a.usize("steps", 0), 100);
+        assert!(a.has("quiet"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_flag() {
+        assert!(Args::parse(v(&["--bogus", "1"]), &["model"]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(v(&["exp"]), &["id"]).unwrap();
+        assert_eq!(a.str("id", "all"), "all");
+        assert_eq!(a.f32("lr", 0.1), 0.1); // absent flag -> default
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(v(&["run", "--fast"]), &["fast"]).unwrap();
+        assert!(a.has("fast"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Offline-environment substrates.
+//!
+//! This build environment has no network access and only a small vendored
+//! crate set (see `.cargo/config.toml`), so the pieces that would normally
+//! come from crates.io are implemented here: a JSON parser for the artifact
+//! manifest ([`json`]), a deterministic seedable RNG ([`rng`]), a tiny CLI
+//! argument parser ([`cli`]), and the measurement harness the `cargo bench`
+//! targets use ([`bench`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,203 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The offline crate set has no proptest, so this uses the in-tree
+//! deterministic RNG for randomized case generation with fixed seeds
+//! (shrinking is traded for reproducibility: every failure prints the
+//! case seed, and re-running with it is exact).
+
+use lgc::compress::{index_coding, topk, Correction, FeedbackMemory};
+use lgc::coordinator::ring;
+use lgc::info;
+use lgc::metrics::{Kind, Ledger};
+use lgc::util::rng::Rng;
+
+const CASES: u64 = 200;
+
+/// Random sorted unique index set over [0, n).
+fn random_indices(rng: &mut Rng, n: usize, k: usize) -> Vec<u32> {
+    let mut set = std::collections::BTreeSet::new();
+    while set.len() < k.min(n) {
+        set.insert(rng.below(n) as u32);
+    }
+    set.into_iter().collect()
+}
+
+#[test]
+fn prop_index_coding_roundtrips() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x1D0 + case);
+        let n = 16 + rng.below(1_000_000);
+        let k = 1 + rng.below((n / 10).max(1));
+        let idx = random_indices(&mut rng, n, k);
+        let bytes = index_coding::encode(&idx, n).unwrap_or_else(|e| {
+            panic!("case {case}: encode failed: {e}");
+        });
+        let back = index_coding::decode(&bytes, n).unwrap();
+        assert_eq!(back, idx, "case {case} n={n} k={k}");
+    }
+}
+
+#[test]
+fn prop_index_coding_beats_raw_u32_when_sparse() {
+    for case in 0..50 {
+        let mut rng = Rng::new(0x1D1 + case);
+        let n = 100_000 + rng.below(900_000);
+        let k = n / 1000; // 0.1% sparsity, the paper's operating point
+        let idx = random_indices(&mut rng, n, k);
+        let bytes = index_coding::encode(&idx, n).unwrap();
+        assert!(
+            bytes.len() < idx.len() * 4,
+            "case {case}: coded {} >= raw {}",
+            bytes.len(),
+            idx.len() * 4
+        );
+    }
+}
+
+#[test]
+fn prop_topk_is_exact_partial_sort() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x701 + case);
+        let n = 2 + rng.below(5000);
+        let k = 1 + rng.below(n);
+        let g = rng.normal_vec(n, 1.0);
+        let sel = topk::top_k(&g, k);
+        assert_eq!(sel.indices.len(), k, "case {case}");
+        // Every selected magnitude >= every unselected magnitude.
+        let selected: std::collections::BTreeSet<u32> =
+            sel.indices.iter().copied().collect();
+        let min_sel = sel
+            .values
+            .iter()
+            .map(|v| v.abs())
+            .fold(f32::INFINITY, f32::min);
+        for (i, v) in g.iter().enumerate() {
+            if !selected.contains(&(i as u32)) {
+                assert!(
+                    v.abs() <= min_sel + 1e-7,
+                    "case {case}: unselected |{v}| > selected min {min_sel}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_error_feedback_conserves_gradient_mass() {
+    // transmitted + residual == sum of accumulated gradients (plain EF),
+    // across multiple rounds.
+    for case in 0..60 {
+        let mut rng = Rng::new(0xEF + case);
+        let n = 16 + rng.below(2000);
+        let mut fb = FeedbackMemory::new(n, Correction::Plain, 0.0);
+        let mut injected = vec![0.0f64; n];
+        let mut transmitted = vec![0.0f64; n];
+        for _ in 0..5 {
+            let g = rng.normal_vec(n, 1.0);
+            for (a, b) in injected.iter_mut().zip(&g) {
+                *a += *b as f64;
+            }
+            fb.accumulate(&g);
+            let k = 1 + rng.below(n / 4 + 1);
+            let sel = fb.select_and_clear(k);
+            for (&i, &v) in sel.indices.iter().zip(&sel.values) {
+                transmitted[i as usize] += v as f64;
+            }
+        }
+        for i in 0..n {
+            let resid = fb.memory()[i] as f64;
+            assert!(
+                (transmitted[i] + resid - injected[i]).abs() < 1e-3,
+                "case {case} coord {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_ring_allreduce_equals_direct_sum() {
+    for case in 0..60 {
+        let mut rng = Rng::new(0x516 + case);
+        let k = 2 + rng.below(9);
+        let n = k + rng.below(4000);
+        let vecs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(n, 1.0)).collect();
+        let mut work = vecs.clone();
+        let mut ledger = Ledger::new();
+        let got = ring::ring_allreduce_sum(&mut work, &mut ledger, Kind::Dense);
+        for j in 0..n {
+            let want: f32 = vecs.iter().map(|v| v[j]).sum();
+            assert!(
+                (got[j] - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "case {case} k={k} n={n} j={j}"
+            );
+        }
+        // Byte cost: 2(K-1)/K * size per node, within chunk-rounding slop.
+        let per_node = *ledger.per_node.get(&0).unwrap() as f64;
+        let ideal = 2.0 * (k as f64 - 1.0) / k as f64 * (n * 4) as f64;
+        assert!(
+            (per_node - ideal).abs() <= 8.0 * (k as f64 - 1.0) * 2.0,
+            "case {case}: per_node={per_node} ideal={ideal}"
+        );
+    }
+}
+
+#[test]
+fn prop_scatter_gather_inverse() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x5CA + case);
+        let n = 8 + rng.below(3000);
+        let k = 1 + rng.below(n);
+        let idx = random_indices(&mut rng, n, k);
+        let vals: Vec<f32> = (0..idx.len()).map(|_| rng.normal()).collect();
+        let dense = topk::scatter(n, &idx, &vals);
+        assert_eq!(topk::gather(&dense, &idx), vals, "case {case}");
+    }
+}
+
+#[test]
+fn prop_mi_bounds() {
+    // 0 <= MI <= min(H(a), H(b)) for arbitrary correlated inputs.
+    for case in 0..40 {
+        let mut rng = Rng::new(0x311 + case);
+        let n = 5000 + rng.below(20_000);
+        let rho = rng.uniform();
+        let a = rng.normal_vec(n, 1.0);
+        let b: Vec<f32> = a
+            .iter()
+            .map(|x| rho * x + (1.0 - rho) * rng.normal())
+            .collect();
+        let ip = info::info_plane(&a, &b, 32);
+        assert!(ip.mi >= 0.0, "case {case}");
+        assert!(
+            ip.mi <= ip.h_a.min(ip.h_b) + 1e-9,
+            "case {case}: mi={} ha={} hb={}",
+            ip.mi,
+            ip.h_a,
+            ip.h_b
+        );
+    }
+}
+
+#[test]
+fn prop_quantizer_error_bounded_by_bucket_norm() {
+    use lgc::compress::quantize;
+    for case in 0..60 {
+        let mut rng = Rng::new(0x4A + case);
+        let n = 64 + rng.below(4000);
+        let levels = 1 + rng.below(255) as u32;
+        let bucket = 16 + rng.below(512);
+        let g = rng.normal_vec(n, 1.0);
+        let p = quantize::qsgd(&g, levels, bucket, &mut rng);
+        for (chunk_i, chunk) in g.chunks(bucket).enumerate() {
+            let norm = chunk.iter().map(|x| x * x).sum::<f32>().sqrt();
+            for (j, &x) in chunk.iter().enumerate() {
+                let q = p.dequant[chunk_i * bucket + j];
+                assert!(
+                    (q - x).abs() <= norm / levels as f32 + 1e-5,
+                    "case {case}: |{q} - {x}| > {}",
+                    norm / levels as f32
+                );
+            }
+        }
+    }
+}
