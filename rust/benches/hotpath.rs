@@ -3,40 +3,51 @@
 //! Times each building block of the steady-state (phase 3) iteration in
 //! isolation so the optimization loop (EXPERIMENTS.md §Perf) can see where
 //! per-iteration time goes:
-//!   grad_step HLO | top-k select | index coding | AE encode | AE decode |
-//!   sparsify HLO | ring allreduce | full phase-3 LGC iteration
+//!   top-k select | index coding | sparsify scalar | ring allreduce |
+//!   per-node pipeline K=8 sequential vs parallel | — and, when AOT
+//!   artifacts + a PJRT backend are present — grad_step HLO, AE
+//!   encode/decode, sparsify HLO, full phase-3 LGC iteration.
+//!
+//! The pure-CPU sections run everywhere (no artifacts needed); the
+//! headline row is the K=8 node-pipeline comparison, which measures the
+//! wall-clock win of the parallel node runtime (`coordinator::parallel`)
+//! over the sequential per-node loop on the same work.
 
-use lgc::compress::autoencoder::{AeCompressor, Pattern};
-use lgc::compress::{index_coding, topk};
+use lgc::compress::{index_coding, topk, Correction, FeedbackMemory};
 use lgc::config::{Method, TrainConfig};
-use lgc::coordinator::ring;
-use lgc::metrics::{Kind, Ledger};
+use lgc::coordinator::{parallel, ring};
+use lgc::metrics::{Kind, Ledger, NodeLedger};
 use lgc::runtime::{Engine, Tensor};
-use lgc::util::bench::{time, time_budget, Table};
+use lgc::util::bench::{time, time_budget, Stats, Table};
 use lgc::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let engine = Engine::open_default()?;
-    let model = std::env::var("LGC_MODEL").unwrap_or_else(|_| "resnet_mini".into());
-    let meta = engine.manifest.model(&model).clone();
-    let mu = meta.mu;
-    let n_mid = meta.n_mid;
-    let mut rng = Rng::new(1);
-    let mut t = Table::new(&["hot-path op", "mean", "p95", "notes"]);
-    let fmt = |s: &lgc::util::bench::Stats| {
-        (format!("{:.3} ms", s.mean_ms()), format!("{:.3} ms", s.p95_ns / 1e6))
-    };
+fn fmt(s: &Stats) -> (String, String) {
+    (format!("{:.3} ms", s.mean_ms()), format!("{:.3} ms", s.p95_ns / 1e6))
+}
 
-    // grad_step HLO (the dominant compute).
-    let m = lgc::model::Model::new(&meta, 7);
-    let data = lgc::data::for_model(&meta, 8);
-    let batch = data.batch(0, 0);
-    m.grad_step(&engine, &batch)?; // compile
-    let s = time_budget(2_000, || {
-        m.grad_step(&engine, &batch).unwrap();
-    });
-    let (a, b) = fmt(&s);
-    t.row(&[format!("{model}_grad_step"), a, b, format!("n={}", meta.n_params)]);
+/// The K=8 per-node simulation pipeline: EF accumulate -> top-k select ->
+/// index encode, per node, under `threads` workers.  Returns per-node
+/// coded byte counts (kept observable so nothing is optimized away).
+fn node_pipeline(
+    threads: usize,
+    fbs: &mut [FeedbackMemory],
+    shards: &mut [NodeLedger],
+    grads: &[Vec<f32>],
+    k_sel: usize,
+    n: usize,
+) -> Vec<usize> {
+    parallel::par_zip_mut(threads, fbs, shards, |node, fb, shard| {
+        fb.accumulate(&grads[node]);
+        let sel = fb.select_and_clear(k_sel);
+        let coded = index_coding::encode(&sel.indices, n).unwrap().len();
+        shard.record(Kind::Values, sel.values.len() * 4);
+        shard.record(Kind::Indices, coded);
+        coded
+    })
+}
+
+fn pure_sections(t: &mut Table, n_mid: usize, mu: usize) {
+    let mut rng = Rng::new(1);
 
     // top-k selection over the mid group.
     let g = rng.normal_vec(n_mid, 1.0);
@@ -51,39 +62,13 @@ fn main() -> anyhow::Result<()> {
     let s = time_budget(500, || {
         std::hint::black_box(index_coding::encode(&sel.indices, n_mid).unwrap());
     });
-    let coded = index_coding::encode(&sel.indices, n_mid)?.len();
+    let coded = index_coding::encode(&sel.indices, n_mid).unwrap().len();
     let (a, b) = fmt(&s);
     t.row(&["index encode (DEFLATE)".into(), a, b,
             format!("{} idx -> {} B", sel.indices.len(), coded)]);
 
-    // AE encode / decode.
-    let ae = AeCompressor::new(&engine, mu, 2, Pattern::RingAllreduce, 3)?;
-    let vals = rng.normal_vec(mu, 0.01);
-    let (lat, sc) = ae.encode(&engine, &vals)?;
-    let s = time(3, 50, || {
-        ae.encode(&engine, &vals).unwrap();
-    });
-    let (a, b) = fmt(&s);
-    t.row(&["AE encode (L1 conv1d)".into(), a, b,
-            format!("mu={mu} (paper GPU: 0.007-0.01 ms)")]);
-    let s = time(3, 50, || {
-        ae.decode_rar(&engine, &lat, sc).unwrap();
-    });
-    let (a, b) = fmt(&s);
-    t.row(&["AE decode (L1 deconv1d)".into(), a, b,
-            format!("mu={mu} (paper GPU: ~1 ms)")]);
-
-    // Fused sparsify HLO (Pallas) vs rust scalar reference.
+    // Rust scalar sparsify reference (the Pallas kernel's contract).
     let acc = rng.normal_vec(n_mid, 0.5);
-    let gt = Tensor::f32(vec![n_mid], g.clone());
-    let at = Tensor::f32(vec![n_mid], acc.clone());
-    let tt = Tensor::f32(vec![1], vec![0.8]);
-    engine.run(&meta.sparsify, &[gt.clone(), at.clone(), tt.clone()])?;
-    let s = time(3, 50, || {
-        engine.run(&meta.sparsify, &[gt.clone(), at.clone(), tt.clone()]).unwrap();
-    });
-    let (a, b) = fmt(&s);
-    t.row(&["sparsify HLO (Pallas)".into(), a, b, format!("n={n_mid}")]);
     let s = time_budget(500, || {
         let mut o1 = vec![0.0f32; n_mid];
         let mut o2 = vec![0.0f32; n_mid];
@@ -109,26 +94,157 @@ fn main() -> anyhow::Result<()> {
     });
     let (a, b) = fmt(&s);
     t.row(&["ring allreduce latents K=8".into(), a, b, format!("len={}", mu / 4)]);
+}
 
-    // Full steady-state iteration (phase 3 only, measured via a run whose
-    // phases are all compressed after a minimal warmup).
-    let cfg = TrainConfig {
-        model: model.clone(),
-        method: Method::LgcPs,
-        nodes: 2,
-        steps: 14,
-        warmup_iters: 2,
-        ae_train_iters: 2,
-        eval_every: 0,
-        ..Default::default()
+/// Sequential vs parallel per-node simulation at K=8 — the tentpole's
+/// acceptance measurement.  Returns (seq_ms, par_ms).
+fn node_loop_comparison(t: &mut Table, n: usize) -> (f64, f64) {
+    const K: usize = 8;
+    let mut rng = Rng::new(7);
+    let k_sel = topk::k_of(n, 0.01);
+    let grads: Vec<Vec<f32>> = (0..K).map(|_| rng.normal_vec(n, 1.0)).collect();
+
+    let run = |threads: usize| -> Stats {
+        let mut fbs: Vec<FeedbackMemory> = (0..K)
+            .map(|_| FeedbackMemory::new(n, Correction::Momentum, 0.9))
+            .collect();
+        let mut shards = NodeLedger::for_nodes(K);
+        let mut ledger = Ledger::new();
+        time(2, 12, || {
+            let coded =
+                node_pipeline(threads, &mut fbs, &mut shards, &grads, k_sel, n);
+            ledger.merge_shards(&mut shards);
+            ledger.end_iteration();
+            std::hint::black_box(coded);
+        })
     };
-    let r = lgc::coordinator::train(&engine, cfg)?;
-    t.row(&[
-        "full LGC-PS phase-3 iter (K=2)".into(),
-        format!("{:.3} ms", r.phase_time[2].as_secs_f64() * 1e3 / r.phase_iters[2] as f64),
-        "-".into(),
-        format!("{} iters", r.phase_iters[2]),
-    ]);
+
+    let seq = run(1);
+    let par = run(0); // 0 = one worker per core
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let speedup = seq.mean_ms() / par.mean_ms();
+    let (a, b) = fmt(&seq);
+    t.row(&["node pipeline K=8 sequential".into(), a, b,
+            format!("n={n} k={k_sel} x8 nodes")]);
+    let (a, b) = fmt(&par);
+    t.row(&["node pipeline K=8 parallel".into(), a, b,
+            format!("{cores} cores -> {speedup:.2}x speedup")]);
+    println!(
+        "node-pipeline K=8: sequential {:.3} ms/iter, parallel {:.3} ms/iter \
+         ({speedup:.2}x on {cores} cores)",
+        seq.mean_ms(),
+        par.mean_ms()
+    );
+    if cores >= 4 && speedup < 2.0 {
+        eprintln!(
+            "WARNING: expected >=2x parallel speedup at K=8 on a {cores}-core host, \
+             measured {speedup:.2}x"
+        );
+    }
+    (seq.mean_ms(), par.mean_ms())
+}
+
+fn engine_sections(engine: &Engine, t: &mut Table, model: &str) -> anyhow::Result<()> {
+    use lgc::compress::autoencoder::{AeCompressor, Pattern};
+
+    let meta = engine.manifest.model(model).clone();
+    let mu = meta.mu;
+    let n_mid = meta.n_mid;
+    let mut rng = Rng::new(1);
+
+    // grad_step HLO (the dominant compute).
+    let m = lgc::model::Model::new(&meta, 7);
+    let data = lgc::data::for_model(&meta, 8);
+    let batch = data.batch(0, 0);
+    m.grad_step(engine, &batch)?; // compile
+    let s = time_budget(2_000, || {
+        m.grad_step(engine, &batch).unwrap();
+    });
+    let (a, b) = fmt(&s);
+    t.row(&[format!("{model}_grad_step"), a, b, format!("n={}", meta.n_params)]);
+
+    // AE encode / decode.
+    let ae = AeCompressor::new(engine, mu, 2, Pattern::RingAllreduce, 3)?;
+    let vals = rng.normal_vec(mu, 0.01);
+    let (lat, sc) = ae.encode(engine, &vals)?;
+    let s = time(3, 50, || {
+        ae.encode(engine, &vals).unwrap();
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["AE encode (L1 conv1d)".into(), a, b,
+            format!("mu={mu} (paper GPU: 0.007-0.01 ms)")]);
+    let s = time(3, 50, || {
+        ae.decode_rar(engine, &lat, sc).unwrap();
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["AE decode (L1 deconv1d)".into(), a, b,
+            format!("mu={mu} (paper GPU: ~1 ms)")]);
+
+    // Fused sparsify HLO (Pallas).
+    let g = rng.normal_vec(n_mid, 1.0);
+    let acc = rng.normal_vec(n_mid, 0.5);
+    let gt = Tensor::f32(vec![n_mid], g);
+    let at = Tensor::f32(vec![n_mid], acc);
+    let tt = Tensor::f32(vec![1], vec![0.8]);
+    engine.run(&meta.sparsify, &[gt.clone(), at.clone(), tt.clone()])?;
+    let s = time(3, 50, || {
+        engine.run(&meta.sparsify, &[gt.clone(), at.clone(), tt.clone()]).unwrap();
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["sparsify HLO (Pallas)".into(), a, b, format!("n={n_mid}")]);
+
+    // Full steady-state iteration (phase 3 only) — and the end-to-end
+    // view of the parallel node runtime: identical config at 1 thread vs
+    // one-per-core.
+    for (label, threads) in [("1 thread", 1usize), ("per-core", 0)] {
+        let cfg = TrainConfig {
+            model: model.to_string(),
+            method: Method::LgcPs,
+            nodes: 8,
+            steps: 14,
+            warmup_iters: 2,
+            ae_train_iters: 2,
+            eval_every: 0,
+            threads,
+            ..Default::default()
+        };
+        let r = lgc::coordinator::train(engine, cfg)?;
+        t.row(&[
+            format!("full LGC-PS phase-3 iter K=8 ({label})"),
+            format!("{:.3} ms", r.phase_time[2].as_secs_f64() * 1e3 / r.phase_iters[2] as f64),
+            "-".into(),
+            format!("{} iters", r.phase_iters[2]),
+        ]);
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("LGC_MODEL").unwrap_or_else(|_| "resnet_mini".into());
+    let engine = Engine::open_default().ok();
+
+    // Workload sizes come from the manifest when available; otherwise use
+    // resnet_mini-scale defaults so the pure-CPU rows still measure the
+    // real operating point.
+    let (n_mid, mu) = match &engine {
+        Some(e) => {
+            let meta = e.manifest.model(&model);
+            (meta.n_mid, meta.mu)
+        }
+        None => (262_144, 4_096),
+    };
+
+    let mut t = Table::new(&["hot-path op", "mean", "p95", "notes"]);
+    pure_sections(&mut t, n_mid, mu);
+    node_loop_comparison(&mut t, 200_000);
+
+    match &engine {
+        Some(e) => engine_sections(e, &mut t, &model)?,
+        None => println!(
+            "(skipping PJRT sections: artifacts/backend unavailable — pure-CPU \
+             rows above cover the coordinator hot path)"
+        ),
+    }
 
     println!("\n=== hot-path microbenchmarks ({model}) ===");
     t.print();

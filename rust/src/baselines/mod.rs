@@ -7,19 +7,33 @@
 //! strategies live in `coordinator::lgc` (they need the autoencoder and
 //! the 3-phase schedule); everything here is schedule-independent apart
 //! from DGC's own sparsity ramp.
+//!
+//! Execution model (DESIGN.md §6.5): each strategy's *node-local* stage —
+//! error-feedback accumulation, selection, quantization, payload encoding
+//! — runs across worker threads via [`crate::coordinator::parallel`],
+//! with per-node state (feedback memory, RNG stream, ledger shard) owned
+//! per node.  Aggregation back to the dense mean is the synchronization
+//! barrier and always reduces in node order, so results and ledger totals
+//! are independent of the thread count.
 
 use anyhow::Result;
 
 use crate::compress::{f16, index_coding, quantize, topk, Correction, FeedbackMemory};
+use crate::coordinator::parallel;
 use crate::coordinator::scheduler::{exponential_alpha, Phase};
-use crate::metrics::{Kind, Ledger};
+use crate::metrics::{Kind, Ledger, NodeLedger};
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
 
 /// Per-iteration context handed to a strategy.
 pub struct ExchangeCtx<'a> {
     pub engine: &'a Engine,
+    /// Global ledger for *synchronization-stage* traffic (ring steps,
+    /// leader index broadcasts).  Node-local traffic is recorded into
+    /// `shards` instead and merged at end-of-iteration.
     pub ledger: &'a mut Ledger,
+    /// One ledger shard per node, recorded lock-free by the node's worker.
+    pub shards: &'a mut [NodeLedger],
     pub iter: usize,
     pub phase: Phase,
     /// Keep-fraction from the scheduler (LGC methods honour it; baselines
@@ -28,7 +42,11 @@ pub struct ExchangeCtx<'a> {
     /// Transmit value payloads as f16 (rate ablation; lossy, the
     /// dequantized values are what the update actually applies).
     pub fp16: bool,
+    /// Coordinator-level RNG (AE sampling etc.); per-node stochastic work
+    /// must use per-node streams owned by the strategy, never this.
     pub rng: &'a mut Rng,
+    /// Worker threads for per-node stages (0 = one per core).
+    pub threads: usize,
 }
 
 /// Apply the configured value-payload precision: returns the values as
@@ -40,6 +58,27 @@ pub fn pack_values(values: Vec<f32>, fp16: bool) -> (Vec<f32>, usize) {
         let bytes = values.len() * 4;
         (values, bytes)
     }
+}
+
+/// Dense mean with per-node byte accounting into the shards (the PS
+/// uncompressed pattern; also every method's dense warmup phase).
+pub fn dense_mean_accounted(grads: &[Vec<f32>], shards: &mut [NodeLedger]) -> Vec<f32> {
+    assert_eq!(
+        grads.len(),
+        shards.len(),
+        "dense_mean_accounted: one ledger shard per node"
+    );
+    let n = grads[0].len();
+    let mut mean = vec![0.0f32; n];
+    for (g, shard) in grads.iter().zip(shards.iter_mut()) {
+        shard.record(Kind::Dense, n * 4);
+        for (m, x) in mean.iter_mut().zip(g) {
+            *m += x;
+        }
+    }
+    let k = grads.len() as f32;
+    mean.iter_mut().for_each(|m| *m /= k);
+    mean
 }
 
 pub trait MidStrategy {
@@ -64,39 +103,39 @@ impl MidStrategy for Baseline {
     }
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
-        let n = grads[0].len();
-        let mut mean = vec![0.0f32; n];
-        for (node, g) in grads.iter().enumerate() {
-            ctx.ledger.record(node, Kind::Dense, n * 4);
-            for (m, x) in mean.iter_mut().zip(g) {
-                *m += x;
-            }
-        }
-        let k = grads.len() as f32;
-        mean.iter_mut().for_each(|m| *m /= k);
-        Ok(mean)
+        Ok(dense_mean_accounted(grads, &mut *ctx.shards))
     }
 }
 
 /// Shared machinery: per-node EF -> top-k -> (values + coded indices) ->
-/// scatter-mean. Used by SparseGd and Dgc.
+/// scatter-mean. Used by SparseGd and Dgc.  The per-node stage runs in
+/// parallel; the scatter-mean barrier reduces in node order.
 fn sparse_ef_exchange(
     fbs: &mut [FeedbackMemory],
     grads: &[Vec<f32>],
     alpha: f64,
     fp16: bool,
-    ledger: &mut Ledger,
+    shards: &mut [NodeLedger],
+    threads: usize,
 ) -> Result<Vec<f32>> {
     let n = grads[0].len();
     let k_sel = topk::k_of(n, alpha);
+    let packets = parallel::collect_node_results(parallel::par_zip_mut(
+        threads,
+        fbs,
+        shards,
+        |node, fb, shard| -> Result<(Vec<u32>, Vec<f32>)> {
+            fb.accumulate(&grads[node]);
+            let sel = fb.select_and_clear(k_sel);
+            let (values, bytes) = pack_values(sel.values, fp16);
+            shard.record(Kind::Values, bytes);
+            shard.record(Kind::Indices, index_coding::encode(&sel.indices, n)?.len());
+            Ok((sel.indices, values))
+        },
+    ))?;
     let mut mean = vec![0.0f32; n];
-    for (node, g) in grads.iter().enumerate() {
-        fbs[node].accumulate(g);
-        let sel = fbs[node].select_and_clear(k_sel);
-        let (values, bytes) = pack_values(sel.values, fp16);
-        ledger.record(node, Kind::Values, bytes);
-        ledger.record(node, Kind::Indices, index_coding::encode(&sel.indices, n)?.len());
-        topk::scatter_add(&mut mean, &sel.indices, &values);
+    for (indices, values) in &packets {
+        topk::scatter_add(&mut mean, indices, values);
     }
     let k = grads.len() as f32;
     mean.iter_mut().for_each(|m| *m /= k);
@@ -126,7 +165,14 @@ impl MidStrategy for SparseGd {
     }
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
-        sparse_ef_exchange(&mut self.fbs, grads, self.alpha, ctx.fp16, ctx.ledger)
+        sparse_ef_exchange(
+            &mut self.fbs,
+            grads,
+            self.alpha,
+            ctx.fp16,
+            &mut *ctx.shards,
+            ctx.threads,
+        )
     }
 }
 
@@ -156,7 +202,7 @@ impl MidStrategy for Dgc {
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
         let a = exponential_alpha(ctx.iter, self.ramp, self.alpha);
-        sparse_ef_exchange(&mut self.fbs, grads, a, ctx.fp16, ctx.ledger)
+        sparse_ef_exchange(&mut self.fbs, grads, a, ctx.fp16, &mut *ctx.shards, ctx.threads)
     }
 }
 
@@ -187,10 +233,12 @@ impl MidStrategy for ScaleCom {
         let n = grads[0].len();
         let k_sel = topk::k_of(n, self.alpha);
         let nodes = grads.len();
-        for (node, g) in grads.iter().enumerate() {
-            self.fbs[node].accumulate(g);
-        }
-        // Cyclic leader; its local top-k defines everyone's index set.
+        // Node-local stage 1: EF accumulation.
+        parallel::par_map_mut(ctx.threads, &mut self.fbs, |node, fb| {
+            fb.accumulate(&grads[node]);
+        });
+        // Barrier: the cyclic leader's local top-k defines everyone's
+        // index set; the broadcast is leader traffic on the global ledger.
         let leader = ctx.iter % nodes;
         let sel = topk::top_k(self.fbs[leader].memory(), k_sel);
         ctx.ledger.record(
@@ -198,12 +246,24 @@ impl MidStrategy for ScaleCom {
             Kind::Indices,
             index_coding::encode(&sel.indices, n)?.len(),
         );
+        // Node-local stage 2: gather-at-support + value packing.
+        let fp16 = ctx.fp16;
+        let indices = &sel.indices;
+        let packed = parallel::par_zip_mut(
+            ctx.threads,
+            &mut self.fbs,
+            &mut *ctx.shards,
+            |_node, fb, shard| {
+                let vals = fb.take_at(indices);
+                let (vals, bytes) = pack_values(vals, fp16);
+                shard.record(Kind::Values, bytes);
+                vals
+            },
+        );
+        // Barrier: mean in node order.
         let mut mean = vec![0.0f32; n];
-        for node in 0..nodes {
-            let vals = self.fbs[node].take_at(&sel.indices);
-            let (vals, bytes) = pack_values(vals, ctx.fp16);
-            ctx.ledger.record(node, Kind::Values, bytes);
-            topk::scatter_add(&mut mean, &sel.indices, &vals);
+        for vals in &packed {
+            topk::scatter_add(&mut mean, indices, vals);
         }
         mean.iter_mut().for_each(|m| *m /= nodes as f32);
         Ok(mean)
@@ -211,9 +271,23 @@ impl MidStrategy for ScaleCom {
 }
 
 /// QSGD [22]: stochastic quantization, no error feedback (as published).
+/// Each node owns a private RNG stream so quantization draws are
+/// independent of scheduling (and of every other node's draws).
 pub struct Qsgd {
     pub levels: u32,
     pub bucket: usize,
+    rngs: Vec<Rng>,
+}
+
+impl Qsgd {
+    pub fn new(levels: u32, bucket: usize, nodes: usize, seed: u64) -> Self {
+        let root = Rng::new(seed ^ 0x4546_4400);
+        Qsgd {
+            levels,
+            bucket,
+            rngs: (0..nodes).map(|node| root.fork(node as u64)).collect(),
+        }
+    }
 }
 
 impl MidStrategy for Qsgd {
@@ -223,11 +297,20 @@ impl MidStrategy for Qsgd {
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
         let n = grads[0].len();
+        let (levels, bucket) = (self.levels, self.bucket);
+        let packets = parallel::par_zip_mut(
+            ctx.threads,
+            &mut self.rngs,
+            &mut *ctx.shards,
+            |node, rng, shard| {
+                let p = quantize::qsgd(&grads[node], levels, bucket, rng);
+                shard.record(Kind::Values, p.bytes);
+                p.dequant
+            },
+        );
         let mut mean = vec![0.0f32; n];
-        for (node, g) in grads.iter().enumerate() {
-            let p = quantize::qsgd(g, self.levels, self.bucket, ctx.rng);
-            ctx.ledger.record(node, Kind::Values, p.bytes);
-            for (m, x) in mean.iter_mut().zip(&p.dequant) {
+        for dequant in &packets {
+            for (m, x) in mean.iter_mut().zip(dequant) {
                 *m += x;
             }
         }
@@ -237,6 +320,14 @@ impl MidStrategy for Qsgd {
     }
 }
 
+/// Per-node state of the hard-threshold method (owned as one unit so the
+/// node-local stage threads cleanly).
+struct ThresholdNode {
+    fb: FeedbackMemory,
+    /// Current threshold estimate.
+    threshold: f32,
+}
+
 /// Hard-threshold sparsification (Aji & Heafield [29], paper SS II-B):
 /// transmit every EF-memory coordinate whose magnitude exceeds a
 /// threshold. The threshold self-calibrates each iteration from the
@@ -244,20 +335,20 @@ impl MidStrategy for Qsgd {
 /// sizes are *variable* per iteration — the structural contrast to exact
 /// top-k that [29] embodies.
 pub struct HardThreshold {
-    fbs: Vec<FeedbackMemory>,
+    nodes: Vec<ThresholdNode>,
     alpha: f64,
-    /// Current threshold estimate (per node).
-    thresholds: Vec<f32>,
 }
 
 impl HardThreshold {
     pub fn new(nodes: usize, n: usize, alpha: f64) -> Self {
         HardThreshold {
-            fbs: (0..nodes)
-                .map(|_| FeedbackMemory::new(n, Correction::Plain, 0.0))
+            nodes: (0..nodes)
+                .map(|_| ThresholdNode {
+                    fb: FeedbackMemory::new(n, Correction::Plain, 0.0),
+                    threshold: 0.0,
+                })
                 .collect(),
             alpha,
-            thresholds: vec![0.0; nodes],
         }
     }
 }
@@ -270,30 +361,40 @@ impl MidStrategy for HardThreshold {
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
         let n = grads[0].len();
         let k_target = topk::k_of(n, self.alpha);
+        let fp16 = ctx.fp16;
+        let packets = parallel::collect_node_results(parallel::par_zip_mut(
+            ctx.threads,
+            &mut self.nodes,
+            &mut *ctx.shards,
+            |node, st, shard| -> Result<(Vec<u32>, Vec<f32>)> {
+                st.fb.accumulate(&grads[node]);
+                if st.threshold == 0.0 {
+                    // Calibrate from the first post-accumulation
+                    // distribution.
+                    st.threshold = topk::threshold_for_k(st.fb.memory(), k_target);
+                }
+                let thr = st.threshold;
+                let mem = st.fb.memory();
+                let indices: Vec<u32> = (0..n as u32)
+                    .filter(|&i| mem[i as usize].abs() >= thr && mem[i as usize] != 0.0)
+                    .collect();
+                let values = st.fb.take_at(&indices);
+                // Adapt the threshold toward the target payload size
+                // (x2 AIMD).
+                if indices.len() > 2 * k_target {
+                    st.threshold *= 1.25;
+                } else if indices.len() < k_target / 2 {
+                    st.threshold *= 0.8;
+                }
+                let (values, bytes) = pack_values(values, fp16);
+                shard.record(Kind::Values, bytes);
+                shard.record(Kind::Indices, index_coding::encode(&indices, n)?.len());
+                Ok((indices, values))
+            },
+        ))?;
         let mut mean = vec![0.0f32; n];
-        for (node, g) in grads.iter().enumerate() {
-            self.fbs[node].accumulate(g);
-            if self.thresholds[node] == 0.0 {
-                // Calibrate from the first post-accumulation distribution.
-                self.thresholds[node] =
-                    topk::threshold_for_k(self.fbs[node].memory(), k_target);
-            }
-            let thr = self.thresholds[node];
-            let mem = self.fbs[node].memory();
-            let indices: Vec<u32> = (0..n as u32)
-                .filter(|&i| mem[i as usize].abs() >= thr && mem[i as usize] != 0.0)
-                .collect();
-            let values = self.fbs[node].take_at(&indices);
-            // Adapt the threshold toward the target payload size (x2 AIMD).
-            if indices.len() > 2 * k_target {
-                self.thresholds[node] *= 1.25;
-            } else if indices.len() < k_target / 2 {
-                self.thresholds[node] *= 0.8;
-            }
-            let (values, bytes) = pack_values(values, ctx.fp16);
-            ctx.ledger.record(node, Kind::Values, bytes);
-            ctx.ledger.record(node, Kind::Indices, index_coding::encode(&indices, n)?.len());
-            topk::scatter_add(&mut mean, &indices, &values);
+        for (indices, values) in &packets {
+            topk::scatter_add(&mut mean, indices, values);
         }
         mean.iter_mut().for_each(|m| *m /= grads.len() as f32);
         Ok(mean)
@@ -308,6 +409,13 @@ mod tests {
     // Strategies that need an `Engine` are exercised by the integration
     // suite in rust/tests/; the pure helpers are tested here.
 
+    fn merged(shards: &mut [NodeLedger]) -> Ledger {
+        let mut l = Ledger::new();
+        l.merge_shards(shards);
+        l.end_iteration();
+        l
+    }
+
     #[test]
     fn sparse_ef_exchange_conserves_mass() {
         let mut fbs = vec![
@@ -318,21 +426,60 @@ mod tests {
             vec![1.0, 0.0, 0.0, 0.0, 0.0, 5.0],
             vec![0.0, 2.0, 0.0, 0.0, 0.0, -5.0],
         ];
-        let mut ledger = Ledger::new();
-        let mean = sparse_ef_exchange(&mut fbs, &grads, 0.34, false, &mut ledger).unwrap();
-        // k = ceil(0.34 * 6) = 3 coords per node transmitted.
-        // transmitted + residual must equal the full gradient, per node.
-        for (node, g) in grads.iter().enumerate() {
-            let resid = fbs[node].memory();
-            // scatter back what reached `mean`: mean*2 is the sum.
-            let sum_at: Vec<f32> = (0..6).map(|i| mean[i] * 2.0).collect();
-            // residual + share-of-sum isn't exactly g (other node mixes in),
-            // so check the weaker invariant: residual is orthogonal to the
-            // transmitted support (residual zero where node transmitted).
-            let _ = (g, resid, &sum_at);
-        }
+        let mut shards = NodeLedger::for_nodes(2);
+        let mean =
+            sparse_ef_exchange(&mut fbs, &grads, 0.34, false, &mut shards, 1).unwrap();
+        // k = ceil(0.34 * 6) = 3 coords per node transmitted; transmitted
+        // + residual must equal the accumulated gradient per node (the
+        // stronger invariant is proptested in tests/proptests.rs).
+        assert_eq!(mean.len(), 6);
+        let ledger = merged(&mut shards);
         assert!(ledger.total() > 0);
         assert_eq!(ledger.per_kind[&Kind::Values], 2 * 3 * 4);
+    }
+
+    #[test]
+    fn sparse_ef_exchange_thread_invariant() {
+        // Same seed, 1 worker vs many workers: bitwise-identical mean and
+        // bitwise-identical merged ledger (the tentpole's determinism
+        // contract at the strategy level).
+        let run = |threads: usize| {
+            let mut rng = Rng::new(0xBEEF);
+            let nodes = 8;
+            let n = 512;
+            let mut fbs: Vec<FeedbackMemory> = (0..nodes)
+                .map(|_| FeedbackMemory::new(n, Correction::Momentum, 0.9))
+                .collect();
+            let mut shards = NodeLedger::for_nodes(nodes);
+            let mut ledger = Ledger::new();
+            let mut means = Vec::new();
+            for _ in 0..4 {
+                let grads: Vec<Vec<f32>> =
+                    (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
+                let mean = sparse_ef_exchange(
+                    &mut fbs, &grads, 0.05, false, &mut shards, threads,
+                )
+                .unwrap();
+                ledger.merge_shards(&mut shards);
+                ledger.end_iteration();
+                means.push(mean);
+            }
+            (means, ledger.iter_bytes.clone(), ledger.total())
+        };
+        let base = run(1);
+        for threads in [2, 4, 8] {
+            assert_eq!(run(threads), base, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn dense_mean_accounts_full_vectors() {
+        let grads = vec![vec![2.0f32; 8], vec![4.0f32; 8]];
+        let mut shards = NodeLedger::for_nodes(2);
+        let mean = dense_mean_accounted(&grads, &mut shards);
+        assert!(mean.iter().all(|&x| (x - 3.0).abs() < 1e-6));
+        let ledger = merged(&mut shards);
+        assert_eq!(ledger.total(), 2 * 8 * 4);
     }
 
     #[test]

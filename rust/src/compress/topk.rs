@@ -16,14 +16,25 @@ pub struct TopK {
     pub threshold: f32,
 }
 
-/// Number of elements a sparsity fraction keeps (at least 1).
+/// Number of elements a sparsity fraction keeps: at least 1 for non-empty
+/// inputs, and 0 for empty ones.  (A model whose mid or last group is
+/// empty — e.g. a bias-free single-layer head — must yield an empty
+/// selection, not a `clamp(1, 0)` panic.)
 pub fn k_of(n: usize, fraction: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
     ((n as f64 * fraction).ceil() as usize).clamp(1, n)
 }
 
 /// Magnitude threshold that keeps ~k elements of `g` (O(n)).
+/// Degenerate selections (`k == 0` or an empty `g`) yield `f32::INFINITY`
+/// so that no coordinate passes the threshold.
 pub fn threshold_for_k(g: &[f32], k: usize) -> f32 {
-    assert!(k >= 1 && k <= g.len());
+    if k == 0 || g.is_empty() {
+        return f32::INFINITY;
+    }
+    let k = k.min(g.len());
     let mut mags: Vec<f32> = g.iter().map(|x| x.abs()).collect();
     let idx = g.len() - k;
     let (_, thr, _) =
@@ -32,9 +43,14 @@ pub fn threshold_for_k(g: &[f32], k: usize) -> f32 {
 }
 
 /// Select the k largest-magnitude entries. Ties at the threshold are
-/// resolved by index order, and the result is always *exactly* k entries
-/// (the paper's rate accounting assumes a fixed payload size).
+/// resolved by index order, and the result is always *exactly*
+/// `min(k, g.len())` entries (the paper's rate accounting assumes a fixed
+/// payload size); degenerate inputs return an empty selection.
 pub fn top_k(g: &[f32], k: usize) -> TopK {
+    if k == 0 || g.is_empty() {
+        return TopK::default();
+    }
+    let k = k.min(g.len());
     let threshold = threshold_for_k(g, k);
     let mut indices = Vec::with_capacity(k + 8);
     for (i, &v) in g.iter().enumerate() {
@@ -150,5 +166,41 @@ mod debug_tests {
         let g = vec![0.0f32; 100];
         let t = top_k(&g, 5);
         assert_eq!(t.indices.len(), 5, "{t:?}");
+    }
+
+    #[test]
+    fn empty_gradient_group_regression() {
+        // k_of(0, f) used to panic (`.clamp(1, 0)` has min > max); an
+        // empty parameter group must flow through the whole selection
+        // pipeline as an empty — not panicking — selection.
+        assert_eq!(k_of(0, 0.001), 0);
+        assert_eq!(k_of(0, 1.0), 0);
+
+        let t = top_k(&[], 3);
+        assert!(t.indices.is_empty() && t.values.is_empty(), "{t:?}");
+
+        let t = top_k(&[1.0, -2.0], 0);
+        assert!(t.indices.is_empty(), "{t:?}");
+
+        assert_eq!(threshold_for_k(&[], 0), f32::INFINITY);
+        assert_eq!(threshold_for_k(&[1.0], 0), f32::INFINITY);
+
+        // k beyond the vector length clamps instead of asserting.
+        let t = top_k(&[3.0, -1.0], 9);
+        assert_eq!(t.indices, vec![0, 1]);
+
+        // Scatter/gather on the empty selection round-trip.
+        assert_eq!(scatter(0, &[], &[]), Vec::<f32>::new());
+        assert_eq!(gather(&[], &[]), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn empty_group_through_feedback_memory() {
+        use crate::compress::{Correction, FeedbackMemory};
+        let mut fb = FeedbackMemory::new(0, Correction::Momentum, 0.9);
+        fb.accumulate(&[]);
+        let sel = fb.select_and_clear(k_of(0, 0.01));
+        assert!(sel.indices.is_empty());
+        assert!(fb.take_at(&[]).is_empty());
     }
 }

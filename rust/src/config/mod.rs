@@ -129,6 +129,10 @@ pub struct TrainConfig {
     /// loss (unit-RMS MSE, 8-step mean) falls below this. Set high to
     /// force-engage (tests), low to never engage.
     pub ae_gate: f32,
+    /// Worker threads for the per-node simulation stages (0 = one per
+    /// available core).  Thread count changes wall-clock only: curves and
+    /// ledgers are bit-identical across values (DESIGN.md §6.5).
+    pub threads: usize,
     pub verbose: bool,
 }
 
@@ -158,6 +162,7 @@ impl Default for TrainConfig {
             qsgd_levels: 15,
             fp16_values: false,
             ae_gate: 0.55,
+            threads: 0,
             verbose: false,
         }
     }
@@ -195,6 +200,7 @@ impl TrainConfig {
         c.eval_every = a.usize("eval-every", c.eval_every);
         c.seed = a.u64("seed", c.seed);
         c.fp16_values = a.has("fp16");
+        c.threads = a.usize("threads", c.threads);
         c.verbose = a.has("verbose");
         c
     }

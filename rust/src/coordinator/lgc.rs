@@ -22,15 +22,23 @@
 //! * RAR (§V-B2): every node encodes its value-vector; the *latents* are
 //!   ring-allreduced; every node decodes the averaged latent. The AE
 //!   weights are broadcast once when phase 3 begins (rate counted).
+//!
+//! Execution model (DESIGN.md §6.5): node-local stages — EF accumulation,
+//! gather-at-support, innovation selection, per-node encode/decode — fan
+//! out over `coordinator::parallel` with per-node ledger shards; the
+//! leader broadcast, latent ring-allreduce, and every mean reduction are
+//! sequential barriers reducing in node order, so thread count never
+//! changes a result bit.
 
 use anyhow::Result;
 
-use crate::baselines::{ExchangeCtx, MidStrategy};
-use crate::compress::autoencoder::{AeCompressor, Pattern};
+use crate::baselines::{dense_mean_accounted, ExchangeCtx, MidStrategy};
+use crate::compress::autoencoder::{rms, AeCompressor, Pattern};
 use crate::compress::{index_coding, topk, Correction, FeedbackMemory};
+use crate::coordinator::parallel;
 use crate::coordinator::ring;
 use crate::coordinator::scheduler::Phase;
-use crate::metrics::{Kind, Ledger};
+use crate::metrics::Kind;
 
 /// Knobs shared by both LGC instances (subset of [`crate::config::TrainConfig`]).
 #[derive(Debug, Clone, Copy)]
@@ -72,6 +80,19 @@ fn clip_to_gradient_scale(rec: &mut [f32], grads: &[Vec<f32>]) {
         let scale = target / rec_norm;
         rec.iter_mut().for_each(|x| *x *= scale);
     }
+}
+
+/// Innovation component of a value-vector: top `frac` of |values| kept at
+/// their positions, zeros elsewhere (Algorithm 1's mask_inv).
+/// Returns (dense mu-vector, wire bytes).  Free function (not a method)
+/// so the parallel per-node closures can call it while the feedback
+/// memories are mutably split across workers.
+fn innovation(values: &[f32], frac: f64) -> Result<(Vec<f32>, usize)> {
+    let k_inn = topk::k_of(values.len(), frac);
+    let sel = topk::top_k(values, k_inn);
+    let dense = topk::scatter(values.len(), &sel.indices, &sel.values);
+    let bytes = sel.values.len() * 4 + index_coding::encode(&sel.indices, values.len())?.len();
+    Ok((dense, bytes))
 }
 
 pub struct LgcCommon {
@@ -137,37 +158,12 @@ impl LgcCommon {
         self.ae_ready
     }
 
-    fn dense_exchange(&self, grads: &[Vec<f32>], ledger: &mut Ledger) -> Vec<f32> {
-        let n = grads[0].len();
-        let mut mean = vec![0.0f32; n];
-        for (node, g) in grads.iter().enumerate() {
-            ledger.record(node, Kind::Dense, n * 4);
-            for (m, x) in mean.iter_mut().zip(g) {
-                *m += x;
-            }
-        }
-        mean.iter_mut().for_each(|m| *m /= grads.len() as f32);
-        mean
-    }
-
-    /// Innovation component of a value-vector: top `innovation_frac` of
-    /// |values| kept at their positions, zeros elsewhere (Algorithm 1's
-    /// mask_inv).  Returns (dense mu-vector, wire bytes).
-    fn innovation(&self, values: &[f32]) -> Result<(Vec<f32>, usize)> {
-        let k_inn = topk::k_of(values.len(), self.innovation_frac);
-        let sel = topk::top_k(values, k_inn);
-        let dense = topk::scatter(values.len(), &sel.indices, &sel.values);
-        let bytes =
-            sel.values.len() * 4 + index_coding::encode(&sel.indices, values.len())?.len();
-        Ok((dense, bytes))
-    }
-
     /// Phase-2 step shared by both patterns: leader-support top-mu
     /// selection, transmitted values (+ the leader's ordered index
     /// broadcast), exact-value updates, AE online training.
     ///
     /// The selection uses the same leader-signed-order protocol as phase 3
-    /// (see leader_support) so the autoencoder trains on exactly the
+    /// (see leader_support_inner) so the autoencoder trains on exactly the
     /// distribution it will compress — training it on per-node index-order
     /// vectors and deploying it on leader-ordered ones is a train/serve
     /// skew that cancels the learned gains.
@@ -181,13 +177,30 @@ impl LgcCommon {
         let nodes = grads.len();
         let leader = if ps { 0 } else { ctx.iter % nodes };
         let indices = self.leader_support_inner(ctx, grads, leader)?;
+        // Node-local stage: gather each node's EF memory at the shared
+        // support, byte-accounting per shard.  In the RAR pattern the
+        // per-iteration trainer node additionally gathers every other
+        // node's value-vector (paper Fig. 7) — those uplinks ride along.
+        let trainer = ctx.iter % nodes;
+        let mu = self.mu;
+        let idx = &indices;
+        let value_vectors = parallel::par_zip_mut(
+            ctx.threads,
+            &mut self.fbs,
+            &mut *ctx.shards,
+            |node, fb, shard| {
+                let vals = fb.take_at(idx);
+                shard.record(Kind::Values, vals.len() * 4);
+                if !ps && node != trainer {
+                    shard.record(Kind::Values, mu * 4);
+                }
+                vals
+            },
+        );
+        // Barrier: exact-value mean in node order.
         let mut mean = vec![0.0f32; n];
-        let mut value_vectors = Vec::with_capacity(nodes);
-        for node in 0..nodes {
-            let vals = self.fbs[node].take_at(&indices);
-            ctx.ledger.record(node, Kind::Values, vals.len() * 4);
-            topk::scatter_add(&mut mean, &indices, &vals);
-            value_vectors.push(vals);
+        for vals in &value_vectors {
+            topk::scatter_add(&mut mean, idx, vals);
         }
         mean.iter_mut().for_each(|m| *m /= nodes as f32);
 
@@ -197,9 +210,10 @@ impl LgcCommon {
         // — they recover the paper's 200-300-iteration AE training budget
         // within our scaled phase-2 window.
         if ps {
+            let frac = self.innovation_frac;
             let innovations: Vec<Vec<f32>> = value_vectors
                 .iter()
-                .map(|v| self.innovation(v).map(|(d, _)| d))
+                .map(|v| innovation(v, frac).map(|(d, _)| d))
                 .collect::<Result<_>>()?;
             for _ in 0..self.ae_inner_steps {
                 let ridx = ctx.rng.below(nodes);
@@ -214,14 +228,6 @@ impl LgcCommon {
                 )?;
             }
         } else {
-            // RAR: the trainer node gathers the other nodes' value-vectors
-            // (paper Fig. 7); count those uplinks.
-            let trainer = ctx.iter % nodes;
-            for node in 0..nodes {
-                if node != trainer {
-                    ctx.ledger.record(node, Kind::Values, self.mu * 4);
-                }
-            }
             for _ in 0..self.ae_inner_steps {
                 self.ae
                     .train_step(ctx.engine, &value_vectors, None, 0, self.ae_lr, 1.0, 0.0)?;
@@ -243,15 +249,18 @@ impl LgcCommon {
     /// can reconstruct it (rate-distortion, DESIGN.md §6.6).  The order-
     /// significant index payload is DEFLATE'd raw (encode_ordered) and
     /// byte-counted as such.
+    ///
+    /// EF accumulation (node-local) fans out; the leader's selection and
+    /// its broadcast are the barrier and land on the global ledger.
     fn leader_support_inner(
         &mut self,
         ctx: &mut ExchangeCtx,
         grads: &[Vec<f32>],
         leader: usize,
     ) -> Result<Vec<u32>> {
-        for (node, g) in grads.iter().enumerate() {
-            self.fbs[node].accumulate(g);
-        }
+        parallel::par_map_mut(ctx.threads, &mut self.fbs, |node, fb| {
+            fb.accumulate(&grads[node]);
+        });
         let mem = self.fbs[leader].memory();
         let sel = topk::top_k(mem, self.mu);
         debug_assert_eq!(sel.indices.len(), self.mu);
@@ -302,7 +311,7 @@ impl MidStrategy for LgcPs {
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
         match ctx.phase {
-            Phase::Dense => Ok(self.c.dense_exchange(grads, ctx.ledger)),
+            Phase::Dense => Ok(dense_mean_accounted(grads, &mut *ctx.shards)),
             Phase::TopK => self.c.topk_phase(ctx, grads, true),
             Phase::Compressed if !self.c.check_ae_ready() => {
                 // AE not converged yet: stay on exact top-k updates and
@@ -316,27 +325,44 @@ impl MidStrategy for LgcPs {
                 let leader = 0usize;
                 let indices = self.c.leader_support_inner(ctx, grads, leader)?;
 
-                // Every node gathers its EF memory at the shared support.
-                let value_vectors: Vec<Vec<f32>> = (0..nodes)
-                    .map(|node| self.c.fbs[node].take_at(&indices))
-                    .collect();
+                // Node-local stage: gather at the shared support, select
+                // the innovation, byte-account (innovation + 4 B scale).
+                let frac = self.c.innovation_frac;
+                let idx = &indices;
+                let per_node = parallel::collect_node_results(parallel::par_zip_mut(
+                    ctx.threads,
+                    &mut self.c.fbs,
+                    &mut *ctx.shards,
+                    |_node, fb, shard| -> Result<(Vec<f32>, Vec<f32>, f32)> {
+                        let vals = fb.take_at(idx);
+                        let (innov, bytes) = innovation(&vals, frac)?;
+                        shard.record(Kind::Values, bytes + 4);
+                        let s_k = rms(&vals);
+                        Ok((vals, innov, s_k))
+                    },
+                ))?;
 
-                // Leader uploads the compressed common representation
-                // (latent + RMS scale).
-                let (latent, _s0) = self.c.ae.encode(ctx.engine, &value_vectors[leader])?;
+                // Barrier: leader uploads the compressed common
+                // representation (latent + RMS scale).
+                let (latent, _s0) = self.c.ae.encode(ctx.engine, &per_node[leader].0)?;
                 ctx.ledger.record(leader, Kind::Latent, self.c.ae.latent_bytes());
 
-                // Every worker uploads its innovation (+ its scale, 4 B);
-                // master decodes with the per-node decoder and averages
-                // (eqs. 12-13).
+                // Master decodes per node with decoder D_c^k and the
+                // node's innovation (eqs. 12-13); decodes fan out, the
+                // average reduces in node order.
+                let ae = &self.c.ae;
+                let engine = ctx.engine;
+                let recs = parallel::collect_node_results(parallel::par_map_indexed(
+                    ctx.threads,
+                    nodes,
+                    |node| -> Result<Vec<f32>> {
+                        let (_, innov, s_k) = &per_node[node];
+                        ae.decode_ps(engine, node, &latent, innov, *s_k)
+                    },
+                ))?;
                 let mut mean_vals = vec![0.0f32; self.c.mu];
-                for node in 0..nodes {
-                    let (innov, bytes) = self.c.innovation(&value_vectors[node])?;
-                    ctx.ledger.record(node, Kind::Values, bytes + 4);
-                    let s_k = crate::compress::autoencoder::rms(&value_vectors[node]);
-                    let rec =
-                        self.c.ae.decode_ps(ctx.engine, node, &latent, &innov, s_k)?;
-                    for (m, x) in mean_vals.iter_mut().zip(&rec) {
+                for rec in &recs {
+                    for (m, x) in mean_vals.iter_mut().zip(rec) {
                         *m += x;
                     }
                 }
@@ -345,19 +371,21 @@ impl MidStrategy for LgcPs {
                 // Optional error feedback on the shared reconstruction
                 // (see ef_on_rec; default off, per Algorithm 1).
                 if ef_on_rec() {
-                    for node in 0..nodes {
-                        let e: Vec<f32> = value_vectors[node]
+                    let mean_ref = &mean_vals;
+                    parallel::par_map_mut(ctx.threads, &mut self.c.fbs, |node, fb| {
+                        let e: Vec<f32> = per_node[node]
+                            .0
                             .iter()
-                            .zip(&mean_vals)
+                            .zip(mean_ref)
                             .map(|(v, r)| v - r)
                             .collect();
-                        self.c.fbs[node].add_at(&indices, &e);
-                    }
+                        fb.add_at(idx, &e);
+                    });
                 }
                 if std::env::var("LGC_DEBUG").is_ok() {
                     let mut true_mean = vec![0.0f32; self.c.mu];
-                    for v in &value_vectors {
-                        for (t, x) in true_mean.iter_mut().zip(v) {
+                    for (vals, _, _) in &per_node {
+                        for (t, x) in true_mean.iter_mut().zip(vals) {
                             *t += x / nodes as f32;
                         }
                     }
@@ -436,38 +464,52 @@ impl MidStrategy for LgcRar {
                     self.weights_broadcast = true;
                 }
                 let indices = self.c.leader_support_inner(ctx, grads, ctx.iter % nodes)?;
-                // Encode each node's value-vector; ring-allreduce the
-                // latents (scales ride along: +4 B is already inside
-                // latent_bytes and the ring traffic is measured below).
-                let mut scales = Vec::with_capacity(nodes);
+                // Node-local stage: gather at the support + encode each
+                // node's value-vector on its worker.  (The 4-byte scale
+                // rides inside latent_bytes; the ring traffic below is
+                // measured per transmission.)
+                let idx = &indices;
+                let ae = &self.c.ae;
+                let engine = ctx.engine;
+                let encoded = parallel::collect_node_results(parallel::par_zip_mut(
+                    ctx.threads,
+                    &mut self.c.fbs,
+                    &mut *ctx.shards,
+                    |_node, fb, _shard| -> Result<(Vec<f32>, Vec<f32>, f32)> {
+                        let vals = fb.take_at(idx);
+                        let (lat, s) = ae.encode(engine, &vals)?;
+                        Ok((vals, lat, s))
+                    },
+                ))?;
                 let mut value_vectors = Vec::with_capacity(nodes);
-                let mut latents: Vec<Vec<f32>> = (0..nodes)
-                    .map(|node| {
-                        let vals = self.c.fbs[node].take_at(&indices);
-                        let (lat, s) = self.c.ae.encode(ctx.engine, &vals)?;
-                        scales.push(s);
-                        value_vectors.push(vals);
-                        Ok(lat)
-                    })
-                    .collect::<Result<_>>()?;
+                let mut latents = Vec::with_capacity(nodes);
+                let mut scales = Vec::with_capacity(nodes);
+                for (vals, lat, s) in encoded {
+                    value_vectors.push(vals);
+                    latents.push(lat);
+                    scales.push(s);
+                }
+                // Barrier: ring-allreduce the latents (eq. 19).
                 let latent_avg =
                     ring::ring_allreduce_mean(&mut latents, ctx.ledger, Kind::Latent);
                 let scale_avg = scales.iter().sum::<f32>() / nodes as f32;
-                // Every node decodes the same averaged latent (eq. 19);
-                // compute is replicated, the result identical.
+                // Every node decodes the same averaged latent; compute is
+                // replicated, the result identical — one decode suffices.
                 let mut rec = self.c.ae.decode_rar(ctx.engine, &latent_avg, scale_avg)?;
                 clip_to_gradient_scale(&mut rec, grads);
                 // Optional error feedback on the shared reconstruction
                 // (see ef_on_rec; default off, per Algorithm 2).
                 if ef_on_rec() {
-                    for node in 0..nodes {
-                        let e: Vec<f32> = value_vectors[node]
+                    let rec_ref = &rec;
+                    let vv = &value_vectors;
+                    parallel::par_map_mut(ctx.threads, &mut self.c.fbs, |node, fb| {
+                        let e: Vec<f32> = vv[node]
                             .iter()
-                            .zip(&rec)
+                            .zip(rec_ref)
                             .map(|(v, r)| v - r)
                             .collect();
-                        self.c.fbs[node].add_at(&indices, &e);
-                    }
+                        fb.add_at(idx, &e);
+                    });
                 }
                 if std::env::var("LGC_DEBUG").is_ok() {
                     let nrm = |v: &[f32]| v.iter().map(|x| x * x).sum::<f32>().sqrt();

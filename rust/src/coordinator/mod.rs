@@ -7,12 +7,21 @@
 //! the PJRT runtime; all communication flows through byte-accounted
 //! exchanges (see [`crate::metrics::Ledger`]).
 //!
+//! Execution model (DESIGN.md §6.5): within each iteration, the per-node
+//! work — grad-shard compute, error-feedback updates, compress/encode —
+//! fans out across worker threads via [`parallel`], with each node owning
+//! its state (data stream, EF memory, ledger shard).  The exchange steps
+//! (PS gather, ring reduce-scatter/allgather, leader broadcasts) are
+//! explicit synchronization barriers that always reduce in node order, so
+//! curves and ledgers are bit-identical across thread counts.
+//!
 //! Per-group gradient handling (paper §VI-A):
 //!   first layer — always dense (all methods)
 //!   mid layers  — the selected [`MidStrategy`] (baselines or LGC)
 //!   last layer  — dense for Baseline/QSGD; top-k + EF for sparse methods
 
 pub mod lgc;
+pub mod parallel;
 pub mod ring;
 pub mod scheduler;
 
@@ -20,11 +29,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::baselines::{Baseline, Dgc, ExchangeCtx, HardThreshold, MidStrategy, Qsgd, ScaleCom, SparseGd};
+use crate::baselines::{
+    dense_mean_accounted, Baseline, Dgc, ExchangeCtx, HardThreshold, MidStrategy, Qsgd,
+    ScaleCom, SparseGd,
+};
 use crate::compress::{index_coding, topk, Correction, FeedbackMemory};
 use crate::config::{Method, TrainConfig};
 use crate::data::{self, Dataset};
-use crate::metrics::{Kind, Ledger};
+use crate::metrics::{Kind, Ledger, NodeLedger};
 use crate::model::{Group, Model};
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
@@ -116,7 +128,9 @@ fn make_strategy(
         Method::SparseGd => Box::new(SparseGd::new(cfg.nodes, n_mid, cfg.alpha)),
         Method::Dgc => Box::new(Dgc::new(cfg.nodes, n_mid, cfg.alpha, ramp, cfg.momentum)),
         Method::ScaleCom => Box::new(ScaleCom::new(cfg.nodes, n_mid, cfg.alpha, cfg.momentum)),
-        Method::Qsgd => Box::new(Qsgd { levels: cfg.qsgd_levels, bucket: 512 }),
+        Method::Qsgd => {
+            Box::new(Qsgd::new(cfg.qsgd_levels, 512, cfg.nodes, cfg.seed ^ 0x45D0))
+        }
         Method::Threshold => Box::new(HardThreshold::new(cfg.nodes, n_mid, cfg.alpha)),
         Method::LgcPs => {
             let p = lgc::LgcParams {
@@ -185,38 +199,37 @@ impl<'e> Trainer<'e> {
 
     /// Last-layer exchange: dense for Baseline/QSGD (and everyone's dense
     /// phase), top-k + EF otherwise (§VI-A: "top-magnitude values ...
-    /// without further compression").
+    /// without further compression").  The per-node EF + selection +
+    /// encoding stage fans out; the scatter-mean is the barrier.
     fn last_exchange(
         &mut self,
         phase: Phase,
         grads: &[Vec<f32>],
-        ledger: &mut Ledger,
+        shards: &mut [NodeLedger],
     ) -> Result<Vec<f32>> {
         let n = grads[0].len();
         let nodes = grads.len();
         let dense = matches!(self.cfg.method, Method::Baseline | Method::Qsgd)
             || phase == Phase::Dense;
-        let mut mean = vec![0.0f32; n];
         if dense {
-            for (node, g) in grads.iter().enumerate() {
-                ledger.record(node, Kind::Dense, n * 4);
-                for (m, x) in mean.iter_mut().zip(g) {
-                    *m += x;
-                }
-            }
-        } else {
-            let k_sel = topk::k_of(n, self.cfg.alpha);
-            for (node, g) in grads.iter().enumerate() {
-                self.last_fbs[node].accumulate(g);
-                let sel = self.last_fbs[node].select_and_clear(k_sel);
-                ledger.record(node, Kind::Values, sel.values.len() * 4);
-                ledger.record(
-                    node,
-                    Kind::Indices,
-                    index_coding::encode(&sel.indices, n)?.len(),
-                );
-                topk::scatter_add(&mut mean, &sel.indices, &sel.values);
-            }
+            return Ok(dense_mean_accounted(grads, shards));
+        }
+        let k_sel = topk::k_of(n, self.cfg.alpha);
+        let packets = parallel::collect_node_results(parallel::par_zip_mut(
+            self.cfg.threads,
+            &mut self.last_fbs,
+            shards,
+            |node, fb, shard| -> Result<(Vec<u32>, Vec<f32>)> {
+                fb.accumulate(&grads[node]);
+                let sel = fb.select_and_clear(k_sel);
+                shard.record(Kind::Values, sel.values.len() * 4);
+                shard.record(Kind::Indices, index_coding::encode(&sel.indices, n)?.len());
+                Ok((sel.indices, sel.values))
+            },
+        ))?;
+        let mut mean = vec![0.0f32; n];
+        for (indices, values) in &packets {
+            topk::scatter_add(&mut mean, indices, values);
         }
         mean.iter_mut().for_each(|m| *m /= nodes as f32);
         Ok(mean)
@@ -225,7 +238,9 @@ impl<'e> Trainer<'e> {
     /// Run the full training loop.
     pub fn run(mut self) -> Result<TrainResult> {
         let meta = self.model.meta.clone();
+        let threads = self.cfg.threads;
         let mut ledger = Ledger::new();
+        let mut shards = NodeLedger::for_nodes(self.cfg.nodes);
         let mut curve = Vec::with_capacity(self.cfg.steps);
         let mut evals = Vec::new();
         let mut phase_time = [Duration::ZERO; 3];
@@ -239,61 +254,71 @@ impl<'e> Trainer<'e> {
             ledger.set_phase(phase.index() as u8 + 1);
             let t0 = Instant::now();
 
-            // --- local compute: one grad step per node -------------------
+            // --- local compute: one grad step per node, fanned out ------
             let t_grad0 = Instant::now();
+            let engine = self.engine;
+            let model = &self.model;
+            let dataset = &*self.dataset;
+            let method_name = self.cfg.method.name();
+            let lr_cfg = self.cfg.lr;
+            type NodeGrads = (f32, f32, Vec<f32>, Vec<f32>, Vec<f32>);
+            let per_node = parallel::collect_node_results(parallel::par_map_indexed(
+                threads,
+                self.cfg.nodes,
+                |node| -> Result<NodeGrads> {
+                    let batch = dataset.batch(node, it);
+                    let (loss, acc, grads) = model.grad_step(engine, &batch)?;
+                    anyhow::ensure!(
+                        loss.is_finite(),
+                        "training diverged: non-finite loss at iter {it}, node {node} \
+                         (method {method_name}, lr {lr_cfg})"
+                    );
+                    Ok((
+                        loss,
+                        acc,
+                        model.flatten_group(&grads, Group::First),
+                        model.flatten_group(&grads, Group::Mid),
+                        model.flatten_group(&grads, Group::Last),
+                    ))
+                },
+            ))?;
             let mut first_g = Vec::with_capacity(self.cfg.nodes);
             let mut mid_g = Vec::with_capacity(self.cfg.nodes);
             let mut last_g = Vec::with_capacity(self.cfg.nodes);
             let mut loss_sum = 0.0f32;
             let mut acc_sum = 0.0f32;
-            for node in 0..self.cfg.nodes {
-                let batch = self.dataset.batch(node, it);
-                let (loss, acc, grads) = self.model.grad_step(self.engine, &batch)?;
-                anyhow::ensure!(
-                    loss.is_finite(),
-                    "training diverged: non-finite loss at iter {it}, node {node} \
-                     (method {}, lr {})",
-                    self.cfg.method.name(),
-                    self.cfg.lr
-                );
+            for (loss, acc, first, mid, last) in per_node {
                 loss_sum += loss;
                 acc_sum += acc;
-                first_g.push(self.model.flatten_group(&grads, Group::First));
-                mid_g.push(self.model.flatten_group(&grads, Group::Mid));
-                last_g.push(self.model.flatten_group(&grads, Group::Last));
+                first_g.push(first);
+                mid_g.push(mid);
+                last_g.push(last);
             }
-
             time_grad += t_grad0.elapsed();
 
-            // --- exchanges -----------------------------------------------
+            // --- exchanges (synchronization barriers) -------------------
             let t_ex0 = Instant::now();
             // First layer: always dense (all methods, §VI-A).
-            let n_first = first_g[0].len();
-            let mut first_mean = vec![0.0f32; n_first];
-            for (node, g) in first_g.iter().enumerate() {
-                ledger.record(node, Kind::Dense, n_first * 4);
-                for (m, x) in first_mean.iter_mut().zip(g) {
-                    *m += x;
-                }
-            }
-            first_mean.iter_mut().for_each(|m| *m /= self.cfg.nodes as f32);
+            let first_mean = dense_mean_accounted(&first_g, &mut shards);
 
             let mid_mean = {
                 let mut ctx = ExchangeCtx {
                     engine: self.engine,
                     ledger: &mut ledger,
+                    shards: &mut shards,
                     iter: it,
                     phase,
                     alpha: self.cfg.alpha,
                     fp16: self.cfg.fp16_values,
                     rng: &mut self.rng,
+                    threads,
                 };
                 self.strategy.exchange(&mut ctx, &mid_g)?
             };
-            let last_mean = self.last_exchange(phase, &last_g, &mut ledger)?;
+            let last_mean = self.last_exchange(phase, &last_g, &mut shards)?;
             time_exchange += t_ex0.elapsed();
 
-            // --- update ---------------------------------------------------
+            // --- update -------------------------------------------------
             let t_up0 = Instant::now();
             self.model.apply_update(
                 &[
@@ -304,6 +329,9 @@ impl<'e> Trainer<'e> {
                 lr_at(&self.cfg, it),
             );
             time_update += t_up0.elapsed();
+            // Deterministic shard merge (ascending node order), then close
+            // the iteration's accounting window.
+            ledger.merge_shards(&mut shards);
             ledger.end_iteration();
 
             let dt = t0.elapsed();

@@ -1,0 +1,241 @@
+//! Parallel node runtime: fan per-node work out over scoped threads.
+//!
+//! The coordinator simulates K synchronous data-parallel nodes.  All
+//! *node-local* work of an iteration — grad-shard compute, error-feedback
+//! updates, top-k selection, payload encoding — is independent across
+//! nodes by construction, so it fans out here; the *exchange* steps (PS
+//! gather, ring reduce-scatter/allgather, leader broadcasts) remain
+//! sequential barriers in the caller (DESIGN.md §6.5).
+//!
+//! Determinism contract: every helper returns results indexed by node,
+//! each node's closure sees only that node's `&mut` state (enforced by
+//! the borrow checker via slice splitting), and callers reduce the
+//! returned per-node values in node order.  Thread count therefore
+//! affects wall-clock only — never a single output bit.  This is what
+//! makes "ledger totals bit-identical between 1-thread and N-thread
+//! runs" a structural property rather than a hope.
+//!
+//! Implementation: `std::thread::scope` + contiguous chunking (no rayon
+//! in the offline crate set).  K is small (2..64), so one spawn per chunk
+//! per iteration is noise next to a grad step.
+
+use std::num::NonZeroUsize;
+
+/// Resolve a requested thread count: 0 = one per available core, always
+/// clamped to `[1, tasks]`.
+pub fn effective_threads(requested: usize, tasks: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1);
+    let t = if requested == 0 { hw } else { requested };
+    t.clamp(1, tasks.max(1))
+}
+
+/// Run `f(node)` for `node in 0..tasks` across `threads` workers and
+/// return the results in node order.
+pub fn par_map_indexed<R, F>(threads: usize, tasks: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let t = effective_threads(threads, tasks);
+    if t <= 1 || tasks <= 1 {
+        return (0..tasks).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(tasks);
+    out.resize_with(tasks, || None);
+    let chunk = tasks.div_ceil(t);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut slots: &mut [Option<R>] = &mut out;
+        let mut base = 0usize;
+        while !slots.is_empty() {
+            let len = chunk.min(slots.len());
+            let (head, tail) = std::mem::take(&mut slots).split_at_mut(len);
+            slots = tail;
+            let start = base;
+            base += len;
+            scope.spawn(move || {
+                for (j, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(f(start + j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+}
+
+/// Run `f(node, &mut a[node])` for every element of `a` across `threads`
+/// workers; results in node order.  Each worker owns a disjoint chunk of
+/// `a`, so the closure is lock-free on the per-node state.
+pub fn par_map_mut<A, R, F>(threads: usize, a: &mut [A], f: F) -> Vec<R>
+where
+    A: Send,
+    R: Send,
+    F: Fn(usize, &mut A) -> R + Sync,
+{
+    let tasks = a.len();
+    let t = effective_threads(threads, tasks);
+    if t <= 1 || tasks <= 1 {
+        return a.iter_mut().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(tasks);
+    out.resize_with(tasks, || None);
+    let chunk = tasks.div_ceil(t);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut items: &mut [A] = a;
+        let mut slots: &mut [Option<R>] = &mut out;
+        let mut base = 0usize;
+        while !items.is_empty() {
+            let len = chunk.min(items.len());
+            let (ihead, itail) = std::mem::take(&mut items).split_at_mut(len);
+            let (shead, stail) = std::mem::take(&mut slots).split_at_mut(len);
+            items = itail;
+            slots = stail;
+            let start = base;
+            base += len;
+            scope.spawn(move || {
+                for (j, (x, slot)) in ihead.iter_mut().zip(shead.iter_mut()).enumerate() {
+                    *slot = Some(f(start + j, x));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+}
+
+/// Run `f(node, &mut a[node], &mut b[node])` across `threads` workers;
+/// results in node order.  `a` and `b` must be the same length — the
+/// typical pairing is (per-node feedback memory, per-node ledger shard).
+pub fn par_zip_mut<A, B, R, F>(threads: usize, a: &mut [A], b: &mut [B], f: F) -> Vec<R>
+where
+    A: Send,
+    B: Send,
+    R: Send,
+    F: Fn(usize, &mut A, &mut B) -> R + Sync,
+{
+    assert_eq!(a.len(), b.len(), "par_zip_mut: slice lengths differ");
+    let tasks = a.len();
+    let t = effective_threads(threads, tasks);
+    if t <= 1 || tasks <= 1 {
+        return a
+            .iter_mut()
+            .zip(b.iter_mut())
+            .enumerate()
+            .map(|(i, (x, y))| f(i, x, y))
+            .collect();
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(tasks);
+    out.resize_with(tasks, || None);
+    let chunk = tasks.div_ceil(t);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut a_rest: &mut [A] = a;
+        let mut b_rest: &mut [B] = b;
+        let mut slots: &mut [Option<R>] = &mut out;
+        let mut base = 0usize;
+        while !a_rest.is_empty() {
+            let len = chunk.min(a_rest.len());
+            let (ahead, atail) = std::mem::take(&mut a_rest).split_at_mut(len);
+            let (bhead, btail) = std::mem::take(&mut b_rest).split_at_mut(len);
+            let (shead, stail) = std::mem::take(&mut slots).split_at_mut(len);
+            a_rest = atail;
+            b_rest = btail;
+            slots = stail;
+            let start = base;
+            base += len;
+            scope.spawn(move || {
+                for (j, ((x, y), slot)) in
+                    ahead.iter_mut().zip(bhead.iter_mut()).zip(shead.iter_mut()).enumerate()
+                {
+                    *slot = Some(f(start + j, x, y));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+}
+
+/// Collect a vector of per-node fallible results into `Result<Vec<_>>`,
+/// surfacing the lowest-node error (deterministic regardless of which
+/// thread failed first).
+pub fn collect_node_results<T>(results: Vec<anyhow::Result<T>>) -> anyhow::Result<Vec<T>> {
+    results.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexed_results_in_order() {
+        for threads in [1, 2, 3, 8] {
+            let got = par_map_indexed(threads, 17, |i| i * i);
+            let want: Vec<usize> = (0..17).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_mut_touches_every_element_once() {
+        for threads in [1, 2, 5] {
+            let mut v = vec![0u64; 23];
+            let r = par_map_mut(threads, &mut v, |i, x| {
+                *x += 1;
+                i as u64
+            });
+            assert!(v.iter().all(|&x| x == 1), "threads={threads}");
+            assert_eq!(r, (0..23).map(|i| i as u64).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn zip_mut_pairs_by_index() {
+        for threads in [1, 4] {
+            let mut a: Vec<usize> = (0..11).collect();
+            let mut b = vec![0usize; 11];
+            let r = par_zip_mut(threads, &mut a, &mut b, |i, x, y| {
+                *y = *x * 2;
+                assert_eq!(*x, i);
+                *y
+            });
+            assert_eq!(r, (0..11).map(|i| i * 2).collect::<Vec<_>>());
+            assert_eq!(b, (0..11).map(|i| i * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_results() {
+        // The determinism contract, at the helper level: any thread count
+        // produces bitwise-identical outputs.
+        let baseline = par_map_indexed(1, 64, |i| {
+            let mut rng = crate::util::rng::Rng::new(i as u64);
+            rng.normal_vec(50, 1.0)
+        });
+        for threads in [2, 3, 7, 16] {
+            let got = par_map_indexed(threads, 64, |i| {
+                let mut rng = crate::util::rng::Rng::new(i as u64);
+                rng.normal_vec(50, 1.0)
+            });
+            assert_eq!(got, baseline, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn effective_threads_clamps() {
+        assert_eq!(effective_threads(4, 2), 2);
+        assert_eq!(effective_threads(1, 100), 1);
+        assert!(effective_threads(0, 100) >= 1);
+        assert_eq!(effective_threads(3, 0), 1);
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        assert!(par_map_indexed(4, 0, |i| i).is_empty());
+        let mut one = vec![7u32];
+        let r = par_map_mut(4, &mut one, |_, x| {
+            *x += 1;
+            *x
+        });
+        assert_eq!(r, vec![8]);
+    }
+}

@@ -30,7 +30,13 @@ pub struct Batch {
 }
 
 /// A deterministic stream of minibatches for one node.
-pub trait Dataset {
+///
+/// `Send + Sync` is part of the contract: the coordinator's parallel node
+/// runtime calls [`Dataset::batch`] concurrently from worker threads, so
+/// implementations must be pure in their arguments (no interior
+/// mutability) — which deterministic (seed, node, iteration) streams are
+/// by construction.
+pub trait Dataset: Send + Sync {
     /// Batch for (node, iteration). Must be pure in its arguments.
     fn batch(&self, node: usize, iter: usize) -> Batch;
     /// A held-out evaluation batch (same across nodes).

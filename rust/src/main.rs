@@ -23,7 +23,7 @@ use lgc::util::cli::Args;
 const FLAGS: &[&str] = &[
     "model", "method", "nodes", "steps", "lr", "momentum", "alpha", "warmup",
     "ae-train", "ae-lr", "lambda2", "schedule", "eval-every", "seed",
-    "verbose", "id", "bins", "pair", "bandwidth-mbps", "artifacts",
+    "threads", "verbose", "id", "bins", "pair", "bandwidth-mbps", "artifacts",
 ];
 
 fn main() -> Result<()> {
@@ -214,7 +214,8 @@ USAGE:
 SUBCOMMANDS:
   train        --model M --method baseline|sparse_gd|dgc|scalecom|qsgd|lgc_ps|lgc_rar
                --nodes K --steps N [--lr F --alpha F --schedule warmup|fixed|exp
-               --warmup N --ae-train N --lambda2 F --seed S --verbose]
+               --warmup N --ae-train N --lambda2 F --seed S --verbose
+               --threads T (0 = one per core; results are identical for any T)]
   exp          --id table4|table5|table6|fig3|fig10|fig11|fig12|fig13|fig14|speedup|all
                [--steps N]
   info-plane   --model M [--steps N --bins B]

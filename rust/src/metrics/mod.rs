@@ -4,6 +4,16 @@
 //! (iteration, node, direction, kind). Compression ratios in the
 //! experiment outputs are *derived from these measured bytes*, never from
 //! closed-form rate formulas (DESIGN.md §6.4).
+//!
+//! Sharding (DESIGN.md §6.5): the coordinator's parallel node runtime
+//! gives every simulated node its own [`NodeLedger`] shard.  Worker
+//! threads record into their shard lock-free; at the end of each
+//! iteration the coordinator merges all shards into the global [`Ledger`]
+//! in ascending node order, record order within a node.  Because a
+//! shard's contents depend only on that node's deterministic work — never
+//! on thread interleaving — ledger totals are bit-identical between
+//! 1-thread and N-thread runs of the same seed (asserted by the
+//! proptests and the integration suite).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -90,6 +100,25 @@ impl Ledger {
         self.cur_iter = 0;
     }
 
+    /// Merge per-node shards into the global ledger, draining them for
+    /// reuse.  Deterministic by construction: shards are applied in slice
+    /// (= ascending node) order, and records within a shard in the order
+    /// that node produced them — independent of which worker thread ran
+    /// which node when.  Call once per iteration, before
+    /// [`Ledger::end_iteration`], so shard traffic lands in the right
+    /// per-iteration window.
+    pub fn merge_shards(&mut self, shards: &mut [NodeLedger]) {
+        for shard in shards.iter_mut() {
+            let node = shard.node;
+            for (kind, bytes) in shard.records.drain(..) {
+                self.record(node, kind, bytes);
+            }
+            for (kind, bytes) in shard.oneoffs.drain(..) {
+                self.record_oneoff(node, kind, bytes);
+            }
+        }
+    }
+
     pub fn total(&self) -> u64 {
         self.per_node.values().sum()
     }
@@ -112,6 +141,53 @@ impl Ledger {
             let _ = writeln!(s, "  {:<10} {:>12.3} MB", k.name(), *v as f64 / 1e6);
         }
         s
+    }
+}
+
+/// One node's private ledger shard for a single iteration.
+///
+/// Recorded lock-free by the worker thread that simulates the node, then
+/// merged into the global [`Ledger`] by [`Ledger::merge_shards`].  Keeps
+/// the insertion sequence (a `Vec`, not a map) so the merge replays the
+/// node's records in their original order.
+#[derive(Debug, Default, Clone)]
+pub struct NodeLedger {
+    node: usize,
+    records: Vec<(Kind, usize)>,
+    oneoffs: Vec<(Kind, usize)>,
+}
+
+impl NodeLedger {
+    pub fn new(node: usize) -> NodeLedger {
+        NodeLedger { node, records: Vec::new(), oneoffs: Vec::new() }
+    }
+
+    /// Build one shard per node.
+    pub fn for_nodes(nodes: usize) -> Vec<NodeLedger> {
+        (0..nodes).map(NodeLedger::new).collect()
+    }
+
+    pub fn node(&self) -> usize {
+        self.node
+    }
+
+    /// Record `bytes` this node sent (recurring traffic).
+    pub fn record(&mut self, kind: Kind, bytes: usize) {
+        self.records.push((kind, bytes));
+    }
+
+    /// Record a one-time setup payload (mirrors [`Ledger::record_oneoff`]).
+    pub fn record_oneoff(&mut self, kind: Kind, bytes: usize) {
+        self.oneoffs.push((kind, bytes));
+    }
+
+    /// Bytes recorded since the last merge (recurring + one-off).
+    pub fn pending_bytes(&self) -> u64 {
+        self.records.iter().chain(&self.oneoffs).map(|&(_, b)| b as u64).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty() && self.oneoffs.is_empty()
     }
 }
 
@@ -178,5 +254,74 @@ mod tests {
         let l = Ledger::new();
         assert_eq!(l.total(), 0);
         assert_eq!(l.steady_bytes_per_iter(5), 0.0);
+    }
+
+    #[test]
+    fn merge_shards_equals_direct_recording() {
+        // The same traffic recorded (a) directly and (b) via per-node
+        // shards must produce identical ledgers.
+        let traffic: &[(usize, Kind, usize)] = &[
+            (0, Kind::Dense, 400),
+            (1, Kind::Values, 120),
+            (1, Kind::Indices, 17),
+            (2, Kind::Latent, 64),
+            (0, Kind::Values, 88),
+        ];
+        let mut direct = Ledger::new();
+        direct.set_phase(2);
+        for &(node, kind, bytes) in traffic {
+            direct.record(node, kind, bytes);
+        }
+        direct.end_iteration();
+
+        let mut sharded = Ledger::new();
+        sharded.set_phase(2);
+        let mut shards = NodeLedger::for_nodes(3);
+        for &(node, kind, bytes) in traffic {
+            shards[node].record(kind, bytes);
+        }
+        sharded.merge_shards(&mut shards);
+        sharded.end_iteration();
+
+        assert_eq!(direct.total(), sharded.total());
+        assert_eq!(direct.per_node, sharded.per_node);
+        assert_eq!(direct.per_kind, sharded.per_kind);
+        assert_eq!(direct.per_phase, sharded.per_phase);
+        assert_eq!(direct.per_phase_node, sharded.per_phase_node);
+        assert_eq!(direct.iter_bytes, sharded.iter_bytes);
+        assert!(shards.iter().all(NodeLedger::is_empty), "merge must drain");
+    }
+
+    #[test]
+    fn shard_oneoffs_skip_iteration_series() {
+        let mut l = Ledger::new();
+        l.set_phase(3);
+        let mut shards = NodeLedger::for_nodes(2);
+        shards[0].record(Kind::Latent, 100);
+        shards[1].record_oneoff(Kind::AeWeights, 5000);
+        assert_eq!(shards[1].pending_bytes(), 5000);
+        l.merge_shards(&mut shards);
+        l.end_iteration();
+        assert_eq!(l.total(), 5100);
+        // One-offs count in totals but not the per-iteration series.
+        assert_eq!(l.iter_bytes, vec![100]);
+        assert_eq!(l.per_node[&1], 5000);
+    }
+
+    #[test]
+    fn shards_reusable_across_iterations() {
+        let mut l = Ledger::new();
+        l.set_phase(1);
+        let mut shards = NodeLedger::for_nodes(2);
+        for it in 0..3 {
+            for s in shards.iter_mut() {
+                s.record(Kind::Dense, 10 * (it + 1));
+            }
+            l.merge_shards(&mut shards);
+            l.end_iteration();
+        }
+        assert_eq!(l.iter_bytes, vec![20, 40, 60]);
+        assert_eq!(l.per_node[&0], 60);
+        assert_eq!(l.per_node[&1], 60);
     }
 }

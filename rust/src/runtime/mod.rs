@@ -9,27 +9,48 @@
 //! gives every module's I/O contract, which [`Executable::run`] validates on
 //! every call (shape bugs surface as errors at the call site, not as XLA
 //! aborts).
+//!
+//! Thread model: `Engine` is `Sync` — the executable cache and call
+//! accounting sit behind mutexes, and the PJRT CPU client is internally
+//! synchronized — so the coordinator's parallel node runtime
+//! (`coordinator::parallel`) can drive per-node grad steps from worker
+//! threads through one shared engine.
 
 pub mod manifest;
 pub mod tensor;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
 pub use manifest::{AeMeta, AeVariant, Manifest, ModelMeta, ModuleMeta};
 pub use tensor::{Data, Tensor};
 
+/// Thread-sharing wrapper for the PJRT client.
+///
+/// SAFETY: the PJRT CPU client is internally synchronized (this is the
+/// same soundness argument the integration suite's old `EngineHolder`
+/// made when it shared an Engine across test threads), and all mutable
+/// engine state on our side lives behind the mutexes below.  With the
+/// offline stub the impls are vacuous (the stub types are plain data and
+/// already `Send + Sync`); with the real `xla` crate — whose client is a
+/// raw-pointer wrapper and therefore not auto-`Sync` — they carry the
+/// internal-synchronization justification, keeping the parallel node
+/// runtime compiling in both configurations.
+struct SyncClient(xla::PjRtClient);
+
+unsafe impl Send for SyncClient {}
+unsafe impl Sync for SyncClient {}
+
 pub struct Engine {
-    client: xla::PjRtClient,
+    client: SyncClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
     /// Cumulative executable invocations (hot-path profiling).
-    pub calls: RefCell<HashMap<String, (u64, std::time::Duration)>>,
+    calls: Mutex<HashMap<String, (u64, std::time::Duration)>>,
 }
 
 pub struct Executable {
@@ -38,18 +59,24 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
 }
 
+// SAFETY: same argument as `SyncClient` — a loaded executable is
+// immutable after compilation and PJRT CPU execution is internally
+// synchronized; vacuous with the offline stub.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
 impl Engine {
     /// Open the artifacts directory (compiles nothing yet).
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
         let dir = artifacts_dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = SyncClient(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
         Ok(Engine {
             client,
             dir,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            calls: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
+            calls: Mutex::new(HashMap::new()),
         })
     }
 
@@ -68,12 +95,15 @@ impl Engine {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.client.0.platform_name()
     }
 
     /// Fetch (lazily compiling) an executable by manifest module name.
-    pub fn exec(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    /// Concurrent first calls may compile the same module twice; the
+    /// cache keeps whichever lands last (identical artifacts, so this is
+    /// benign and avoids holding the lock across compilation).
+    pub fn exec(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
         let meta = self
@@ -88,10 +118,11 @@ impl Engine {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
+            .0
             .compile(&comp)
             .with_context(|| format!("compiling {name}"))?;
-        let e = Rc::new(Executable { name: name.to_string(), meta, exe });
-        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        let e = Arc::new(Executable { name: name.to_string(), meta, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), e.clone());
         Ok(e)
     }
 
@@ -116,7 +147,7 @@ impl Engine {
     }
 
     fn account(&self, name: &str, dt: std::time::Duration) {
-        let mut calls = self.calls.borrow_mut();
+        let mut calls = self.calls.lock().unwrap();
         let entry = calls.entry(name.to_string()).or_insert((0, Default::default()));
         entry.0 += 1;
         entry.1 += dt;
@@ -126,7 +157,8 @@ impl Engine {
     pub fn profile(&self) -> Vec<(String, u64, std::time::Duration)> {
         let mut v: Vec<_> = self
             .calls
-            .borrow()
+            .lock()
+            .unwrap()
             .iter()
             .map(|(k, (n, d))| (k.clone(), *n, *d))
             .collect();

@@ -5,10 +5,10 @@
 //! (shrinking is traded for reproducibility: every failure prints the
 //! case seed, and re-running with it is exact).
 
-use lgc::compress::{index_coding, topk, Correction, FeedbackMemory};
-use lgc::coordinator::ring;
+use lgc::compress::{f16, index_coding, topk, Correction, FeedbackMemory};
+use lgc::coordinator::{parallel, ring};
 use lgc::info;
-use lgc::metrics::{Kind, Ledger};
+use lgc::metrics::{Kind, Ledger, NodeLedger};
 use lgc::util::rng::Rng;
 
 const CASES: u64 = 200;
@@ -52,6 +52,181 @@ fn prop_index_coding_beats_raw_u32_when_sparse() {
             idx.len() * 4
         );
     }
+}
+
+#[test]
+fn prop_index_coding_universe_boundaries() {
+    // Extremes of the index universe: empty selections, singleton at
+    // u32::MAX (largest encodable index; varint path must emit the full
+    // 5-byte LEB128), and mixed sets touching both ends.
+    let huge = u32::MAX as usize + 1;
+    for n in [1usize, 100, 1_000_000, huge] {
+        let bytes = index_coding::encode(&[], n).unwrap();
+        assert_eq!(index_coding::decode(&bytes, n).unwrap(), Vec::<u32>::new(), "n={n}");
+    }
+    let idx = vec![u32::MAX];
+    let bytes = index_coding::encode(&idx, huge).unwrap();
+    assert_eq!(index_coding::decode(&bytes, huge).unwrap(), idx);
+
+    let idx = vec![0u32, 1, 12_345, u32::MAX - 1, u32::MAX];
+    let bytes = index_coding::encode(&idx, huge).unwrap();
+    assert_eq!(index_coding::decode(&bytes, huge).unwrap(), idx);
+
+    // u32::MAX is out of universe for n == u32::MAX (valid: 0..n-1).
+    assert!(index_coding::encode(&[u32::MAX], u32::MAX as usize).is_err());
+
+    // Order-significant coding at the same extremes.
+    let idx = vec![u32::MAX, 0u32, u32::MAX - 1];
+    let bytes = index_coding::encode_ordered(&idx).unwrap();
+    assert_eq!(index_coding::decode_ordered(&bytes).unwrap(), idx);
+    let bytes = index_coding::encode_ordered(&[]).unwrap();
+    assert_eq!(index_coding::decode_ordered(&bytes).unwrap(), Vec::<u32>::new());
+}
+
+// ---------------------------------------------------------------------------
+// f16 round trips vs a bit-exact reference
+// ---------------------------------------------------------------------------
+
+/// Exact value of an f16 bit pattern, computed independently of the
+/// implementation under test (f64 holds every f16 value exactly).
+fn ref_f16_value(h: u16) -> f64 {
+    let sign = if h & 0x8000 != 0 { -1.0 } else { 1.0 };
+    let exp = ((h >> 10) & 0x1F) as i32;
+    let frac = (h & 0x3FF) as f64;
+    match exp {
+        0 => sign * frac * 2f64.powi(-24),
+        0x1F => {
+            if frac == 0.0 {
+                sign * f64::INFINITY
+            } else {
+                f64::NAN
+            }
+        }
+        e => sign * (1.0 + frac / 1024.0) * 2f64.powi(e - 15),
+    }
+}
+
+/// Bit-exact round-to-nearest-even f32 -> f16 reference: for positive
+/// values the f16 grid is monotone in the bit pattern, so binary-search
+/// the bracketing patterns and resolve ties to the even pattern.  Returns
+/// `None` for NaN inputs (any NaN payload is acceptable).
+fn ref_f32_to_f16(x: f32) -> Option<u16> {
+    if x.is_nan() {
+        return None;
+    }
+    let sign = if x.is_sign_negative() { 0x8000u16 } else { 0 };
+    let ax = x.abs() as f64;
+    if ax == 0.0 {
+        return Some(sign);
+    }
+    let max_finite = ref_f16_value(0x7BFF); // 65504
+    if ax >= max_finite {
+        // RNE at the overflow boundary: the grid step above 65504 is 32,
+        // so values < 65520 round down; >= 65520 round to infinity (the
+        // tie goes to 0x7C00, the "even" pattern after 0x7BFF).
+        return Some(if ax < max_finite + 16.0 { sign | 0x7BFF } else { sign | 0x7C00 });
+    }
+    let (mut lo, mut hi) = (0u16, 0x7BFEu16);
+    while lo < hi {
+        let mid = (lo + hi).div_ceil(2);
+        if ref_f16_value(mid) <= ax {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    let d_lo = ax - ref_f16_value(lo);
+    let d_hi = ref_f16_value(lo + 1) - ax;
+    let pick = if d_lo < d_hi {
+        lo
+    } else if d_hi < d_lo {
+        lo + 1
+    } else if lo % 2 == 0 {
+        lo
+    } else {
+        lo + 1
+    };
+    Some(sign | pick)
+}
+
+#[test]
+fn prop_f16_decode_matches_reference_for_all_patterns() {
+    // Exhaustive: every one of the 65536 f16 bit patterns.
+    for h in 0..=u16::MAX {
+        let got = f16::f16_bits_to_f32(h);
+        let want = ref_f16_value(h);
+        if want.is_nan() {
+            assert!(got.is_nan(), "bits={h:#06x}: {got} should be NaN");
+        } else {
+            assert_eq!(got as f64, want, "bits={h:#06x}");
+        }
+    }
+}
+
+#[test]
+fn prop_f16_encode_matches_reference() {
+    // Deterministic boundary sweep: every f16 grid value, its exact
+    // midpoints with both neighbours (ties-to-even), and nudges across
+    // the subnormal/normal and overflow boundaries.
+    let mut cases: Vec<f32> = vec![
+        0.0,
+        -0.0,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        65504.0,   // max finite f16
+        65519.9,   // below the overflow tie
+        65520.0,   // the overflow tie itself -> inf
+        65520.1,
+        1e9,
+        2f32.powi(-24),        // smallest subnormal
+        2f32.powi(-25),        // tie between 0 and the smallest subnormal
+        2f32.powi(-14),        // smallest normal
+        2f32.powi(-14) * 0.999,
+        1e-10,
+        f32::MIN_POSITIVE,     // deep underflow
+    ];
+    for h in (0u16..0x7C00).step_by(7) {
+        let v = ref_f16_value(h);
+        let v_next = ref_f16_value(h + 1);
+        cases.push(v as f32);
+        cases.push(((v + v_next) / 2.0) as f32); // exact tie
+        cases.push((v + (v_next - v) * 0.25) as f32);
+        cases.push((v + (v_next - v) * 0.75) as f32);
+    }
+    let mut rng = Rng::new(0xF16);
+    for _ in 0..20_000 {
+        let scale = (rng.uniform() * 40.0 - 25.0).exp2();
+        cases.push(rng.normal() * scale);
+    }
+    for (i, &x) in cases.iter().enumerate() {
+        let got = f16::f32_to_f16_bits(x);
+        let want = ref_f32_to_f16(x).expect("no NaNs in this sweep");
+        assert_eq!(
+            got, want,
+            "case {i}: x={x:e} got={got:#06x} want={want:#06x}"
+        );
+        cases_negative(x, i);
+    }
+    // NaN maps to some NaN.
+    assert!(f16::f16_bits_to_f32(f16::f32_to_f16_bits(f32::NAN)).is_nan());
+
+    fn cases_negative(x: f32, i: usize) {
+        let got = f16::f32_to_f16_bits(-x);
+        let want = ref_f32_to_f16(-x).unwrap();
+        assert_eq!(got, want, "case {i} (negated): x={:e}", -x);
+    }
+}
+
+#[test]
+fn prop_f16_quantize_roundtrip_is_idempotent() {
+    // Dequantized values are exactly representable, so a second pass
+    // through the wire format must be the identity.
+    let mut rng = Rng::new(0x1D3);
+    let vals: Vec<f32> = (0..5000).map(|_| rng.normal() * 8.0).collect();
+    let (once, bytes) = f16::quantize_f16(&vals);
+    assert_eq!(bytes, vals.len() * 2);
+    let (twice, _) = f16::quantize_f16(&once);
+    assert_eq!(once, twice);
 }
 
 #[test]
@@ -175,6 +350,74 @@ fn prop_mi_bounds() {
             ip.h_a,
             ip.h_b
         );
+    }
+}
+
+#[test]
+fn prop_sharded_ledger_thread_invariance() {
+    // The tentpole determinism contract, over randomized configurations:
+    // running the per-node pipeline (EF accumulate -> top-k select ->
+    // encode -> shard-record) under any worker-thread count produces a
+    // bit-identical merged ledger and bit-identical aggregated means.
+    for case in 0..12u64 {
+        let mut cfg_rng = Rng::new(0x5AAD + case);
+        let nodes = 2 + cfg_rng.below(9);
+        let n = 64 + cfg_rng.below(3000);
+        let alpha = 0.005 + cfg_rng.uniform() as f64 * 0.1;
+        let rounds = 3;
+
+        let run = |threads: usize| {
+            let mut rng = Rng::new(0xDA7A + case);
+            let mut fbs: Vec<FeedbackMemory> = (0..nodes)
+                .map(|_| FeedbackMemory::new(n, Correction::Momentum, 0.9))
+                .collect();
+            let mut shards = NodeLedger::for_nodes(nodes);
+            let mut ledger = Ledger::new();
+            ledger.set_phase(2);
+            let mut means: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..rounds {
+                let grads: Vec<Vec<f32>> =
+                    (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
+                let k_sel = topk::k_of(n, alpha);
+                let packets: Vec<(Vec<u32>, Vec<f32>)> = parallel::par_zip_mut(
+                    threads,
+                    &mut fbs,
+                    &mut shards,
+                    |node, fb, shard| {
+                        fb.accumulate(&grads[node]);
+                        let sel = fb.select_and_clear(k_sel);
+                        shard.record(Kind::Values, sel.values.len() * 4);
+                        shard.record(
+                            Kind::Indices,
+                            index_coding::encode(&sel.indices, n).unwrap().len(),
+                        );
+                        (sel.indices, sel.values)
+                    },
+                );
+                let mut mean = vec![0.0f32; n];
+                for (idx, vals) in &packets {
+                    topk::scatter_add(&mut mean, idx, vals);
+                }
+                mean.iter_mut().for_each(|m| *m /= nodes as f32);
+                means.push(mean);
+                ledger.merge_shards(&mut shards);
+                ledger.end_iteration();
+            }
+            (means, ledger)
+        };
+
+        let (base_means, base_ledger) = run(1);
+        for threads in [2, nodes, 16] {
+            let (means, ledger) = run(threads);
+            assert_eq!(means, base_means, "case {case} threads={threads}");
+            assert_eq!(
+                ledger.iter_bytes, base_ledger.iter_bytes,
+                "case {case} threads={threads}"
+            );
+            assert_eq!(ledger.total(), base_ledger.total(), "case {case}");
+            assert_eq!(ledger.per_node, base_ledger.per_node, "case {case}");
+            assert_eq!(ledger.per_kind, base_ledger.per_kind, "case {case}");
+        }
     }
 }
 

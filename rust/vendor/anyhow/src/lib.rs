@@ -1,0 +1,236 @@
+//! Offline stand-in for the `anyhow` crate (vendored; DESIGN.md §7).
+//!
+//! The build environment has no network access and no crates.io mirror, so
+//! this implements exactly the subset the `lgc` workspace uses with the
+//! same API shape: [`Error`], [`Result`], the [`Context`] trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros.  Swapping in the real crate is
+//! a one-line change in `Cargo.toml`; no call site would notice.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamically-typed error with a human-readable context chain.
+///
+/// Like the real `anyhow::Error`, this deliberately does NOT implement
+/// `std::error::Error` itself, which is what allows the blanket
+/// `From<E: std::error::Error>` conversion to exist.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete `std::error::Error`.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Attach a higher-level context message, pushing `self` down the
+    /// cause chain.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(Chained(self))) }
+    }
+
+    /// Iterate the cause chain, outermost first (the top message is not
+    /// itself an element; this mirrors `anyhow::Error::chain`).
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: self.source.as_deref().map(shrink_dyn) }
+    }
+}
+
+/// Drop the auto-trait bounds from a cause reference (plain coercion).
+fn shrink_dyn(e: &(dyn StdError + Send + Sync + 'static)) -> &(dyn StdError + 'static) {
+    e
+}
+
+/// Internal adapter so an [`Error`] can sit inside a `dyn std::error::Error`
+/// cause chain.
+struct Chained(Error);
+
+impl fmt::Display for Chained {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)
+    }
+}
+
+impl fmt::Debug for Chained {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.0)
+    }
+}
+
+impl StdError for Chained {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.0.source.as_deref().map(shrink_dyn)
+    }
+}
+
+/// Iterator over an error's cause chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in self.chain() {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<String> = self.chain().map(|c| c.to_string()).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "missing");
+        let e = e.context("opening manifest");
+        assert_eq!(e.to_string(), "opening manifest");
+        assert_eq!(format!("{e:#}"), "opening manifest: missing");
+        assert_eq!(e.chain().count(), 1);
+    }
+
+    #[test]
+    fn result_and_option_context() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = Context::context(r, "ctx").unwrap_err();
+        assert_eq!(e.to_string(), "ctx");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -1,0 +1,510 @@
+//! Offline stand-in for the `flate2` crate (vendored; DESIGN.md §7).
+//!
+//! Implements the subset the `lgc` workspace uses — raw-DEFLATE encode /
+//! decode (`write::DeflateEncoder`, `read::DeflateDecoder`) and [`Crc`] —
+//! with no C dependency and no crates.io access.
+//!
+//! The encoder emits RFC 1951-conformant streams built from stored and
+//! fixed-Huffman blocks, choosing whichever is smaller for the payload.
+//! The decoder inflates stored and fixed-Huffman blocks, including LZ77
+//! length/distance pairs, so any conformant fixed/stored stream decodes;
+//! dynamic-Huffman blocks are rejected (this pair only ever decodes its
+//! own output inside the workspace).  Swapping in the real crate is a
+//! one-line `Cargo.toml` change; the byte-accounting tests only assume
+//! round-tripping plus "sparse index payloads beat raw u32", both of
+//! which hold for fixed-Huffman coding of delta varints.
+
+use std::io;
+
+/// Compression level knob (accepted for API compatibility; the block-type
+/// choice here is size-driven, not level-driven).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compression(u32);
+
+impl Compression {
+    pub const fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+
+    pub const fn level(self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Compression {
+        Compression(6)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-level I/O (DEFLATE packs fields LSB-first; Huffman codes MSB-first)
+// ---------------------------------------------------------------------------
+
+struct BitWriter {
+    out: Vec<u8>,
+    bit_buf: u32,
+    bit_count: u32,
+}
+
+impl BitWriter {
+    fn new() -> BitWriter {
+        BitWriter { out: Vec::new(), bit_buf: 0, bit_count: 0 }
+    }
+
+    /// Write `n` (1..=16) bits of `value`, least-significant bit first.
+    fn write_bits(&mut self, value: u32, n: u32) {
+        debug_assert!((1..=16).contains(&n) && (value >> n) == 0);
+        self.bit_buf |= value << self.bit_count;
+        self.bit_count += n;
+        while self.bit_count >= 8 {
+            self.out.push((self.bit_buf & 0xff) as u8);
+            self.bit_buf >>= 8;
+            self.bit_count -= 8;
+        }
+    }
+
+    /// Write a Huffman code: codes are defined most-significant-bit first.
+    fn write_huffman(&mut self, code: u32, len: u32) {
+        let mut rev = 0u32;
+        for i in 0..len {
+            rev |= ((code >> i) & 1) << (len - 1 - i);
+        }
+        self.write_bits(rev, len);
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.bit_count > 0 {
+            self.out.push((self.bit_buf & 0xff) as u8);
+        }
+        self.out
+    }
+}
+
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    bit_buf: u32,
+    bit_count: u32,
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("deflate: {msg}"))
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> BitReader<'a> {
+        BitReader { data, pos: 0, bit_buf: 0, bit_count: 0 }
+    }
+
+    fn read_bits(&mut self, n: u32) -> io::Result<u32> {
+        debug_assert!(n <= 16);
+        while self.bit_count < n {
+            let b = *self.data.get(self.pos).ok_or_else(|| bad("unexpected end of stream"))?;
+            self.pos += 1;
+            self.bit_buf |= (b as u32) << self.bit_count;
+            self.bit_count += 8;
+        }
+        let v = self.bit_buf & ((1u32 << n) - 1);
+        self.bit_buf >>= n;
+        self.bit_count -= n;
+        Ok(v)
+    }
+
+    /// Read a Huffman-ordered (MSB-first) code of `n` bits.
+    fn read_huffman_bits(&mut self, n: u32) -> io::Result<u32> {
+        let mut code = 0u32;
+        for _ in 0..n {
+            code = (code << 1) | self.read_bits(1)?;
+        }
+        Ok(code)
+    }
+
+    /// Discard bits up to the next byte boundary (stored-block headers).
+    fn align_byte(&mut self) {
+        let drop = self.bit_count % 8;
+        self.bit_buf >>= drop;
+        self.bit_count -= drop;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixed-Huffman tables (RFC 1951 §3.2.6)
+// ---------------------------------------------------------------------------
+
+/// (code, length) of literal/length symbol `sym` in the fixed tree.
+fn fixed_lit_code(sym: u32) -> (u32, u32) {
+    match sym {
+        0..=143 => (0x30 + sym, 8),
+        144..=255 => (0x190 + (sym - 144), 9),
+        256..=279 => (sym - 256, 7),
+        _ => (0xC0 + (sym - 280), 8),
+    }
+}
+
+const LEN_BASE: [u32; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u32; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+const DIST_BASE: [u32; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u32; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+
+// ---------------------------------------------------------------------------
+// Encoder
+// ---------------------------------------------------------------------------
+
+fn stored_size(n: usize) -> usize {
+    // Per stored block: 1 header byte (3 bits + pad) + 4 bytes LEN/NLEN.
+    if n == 0 {
+        return 5;
+    }
+    n.div_ceil(65_535) * 5 + n
+}
+
+fn fixed_size(data: &[u8]) -> usize {
+    let mut bits = 3usize + 7; // block header + end-of-block code
+    for &b in data {
+        bits += if b < 144 { 8 } else { 9 };
+    }
+    bits.div_ceil(8)
+}
+
+fn encode_stored(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(stored_size(data.len()));
+    let mut chunks: Vec<&[u8]> = data.chunks(65_535).collect();
+    if chunks.is_empty() {
+        chunks.push(&[]);
+    }
+    let last = chunks.len() - 1;
+    for (i, chunk) in chunks.iter().enumerate() {
+        // BFINAL in bit 0, BTYPE=00, then padding to the byte boundary.
+        out.push(u8::from(i == last));
+        let len = chunk.len() as u16;
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&(!len).to_le_bytes());
+        out.extend_from_slice(chunk);
+    }
+    out
+}
+
+fn encode_fixed(data: &[u8]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    w.write_bits(1, 1); // BFINAL
+    w.write_bits(1, 2); // BTYPE = 01 (fixed Huffman)
+    for &b in data {
+        let (code, len) = fixed_lit_code(b as u32);
+        w.write_huffman(code, len);
+    }
+    let (code, len) = fixed_lit_code(256);
+    w.write_huffman(code, len);
+    w.finish()
+}
+
+/// Raw-DEFLATE compress: pick the smaller of a stored and a fixed-Huffman
+/// encoding (both conformant; no LZ77 search — callers in this workspace
+/// pre-compact with delta+varint coding, where match search buys little).
+fn deflate(data: &[u8]) -> Vec<u8> {
+    if fixed_size(data) <= stored_size(data.len()) {
+        encode_fixed(data)
+    } else {
+        encode_stored(data)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoder
+// ---------------------------------------------------------------------------
+
+fn read_fixed_symbol(r: &mut BitReader) -> io::Result<u32> {
+    let mut code = r.read_huffman_bits(7)?;
+    if code <= 0b001_0111 {
+        return Ok(256 + code);
+    }
+    code = (code << 1) | r.read_bits(1)?;
+    if (0x30..=0xBF).contains(&code) {
+        return Ok(code - 0x30);
+    }
+    if (0xC0..=0xC7).contains(&code) {
+        return Ok(280 + (code - 0xC0));
+    }
+    code = (code << 1) | r.read_bits(1)?;
+    if (0x190..=0x1FF).contains(&code) {
+        return Ok(144 + (code - 0x190));
+    }
+    Err(bad("invalid fixed-Huffman code"))
+}
+
+fn inflate(data: &[u8]) -> io::Result<Vec<u8>> {
+    let mut r = BitReader::new(data);
+    let mut out = Vec::new();
+    loop {
+        let bfinal = r.read_bits(1)?;
+        match r.read_bits(2)? {
+            0 => {
+                r.align_byte();
+                let len = r.read_bits(16)?;
+                let nlen = r.read_bits(16)?;
+                if len ^ nlen != 0xFFFF {
+                    return Err(bad("stored-block LEN/NLEN mismatch"));
+                }
+                out.reserve(len as usize);
+                for _ in 0..len {
+                    out.push(r.read_bits(8)? as u8);
+                }
+            }
+            1 => loop {
+                let sym = read_fixed_symbol(&mut r)?;
+                match sym {
+                    0..=255 => out.push(sym as u8),
+                    256 => break,
+                    257..=285 => {
+                        let i = (sym - 257) as usize;
+                        let len = (LEN_BASE[i] + r.read_bits(LEN_EXTRA[i])?) as usize;
+                        let dcode = r.read_huffman_bits(5)? as usize;
+                        if dcode >= DIST_BASE.len() {
+                            return Err(bad("invalid distance code"));
+                        }
+                        let dist = (DIST_BASE[dcode] + r.read_bits(DIST_EXTRA[dcode])?) as usize;
+                        if dist == 0 || dist > out.len() {
+                            return Err(bad("distance beyond window"));
+                        }
+                        let start = out.len() - dist;
+                        for k in 0..len {
+                            let b = out[start + k];
+                            out.push(b);
+                        }
+                    }
+                    _ => return Err(bad("invalid literal/length symbol")),
+                }
+            },
+            2 => return Err(bad("dynamic-Huffman blocks unsupported in offline inflate")),
+            _ => return Err(bad("reserved block type")),
+        }
+        if bfinal == 1 {
+            return Ok(out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public reader/writer wrappers (the `flate2` API surface we use)
+// ---------------------------------------------------------------------------
+
+pub mod write {
+    use std::io::{self, Write};
+
+    use crate::Compression;
+
+    /// Buffers everything written, emits one raw-DEFLATE stream on
+    /// [`DeflateEncoder::finish`].
+    pub struct DeflateEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> DeflateEncoder<W> {
+        pub fn new(inner: W, _level: Compression) -> DeflateEncoder<W> {
+            DeflateEncoder { inner, buf: Vec::new() }
+        }
+
+        pub fn finish(mut self) -> io::Result<W> {
+            let packed = crate::deflate(&self.buf);
+            self.inner.write_all(&packed)?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for DeflateEncoder<W> {
+        fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+pub mod read {
+    use std::io::{self, Read};
+
+    /// Reads the whole compressed stream on first use, inflates, then
+    /// serves plain bytes.
+    pub struct DeflateDecoder<R: Read> {
+        inner: Option<R>,
+        out: Vec<u8>,
+        pos: usize,
+    }
+
+    impl<R: Read> DeflateDecoder<R> {
+        pub fn new(inner: R) -> DeflateDecoder<R> {
+            DeflateDecoder { inner: Some(inner), out: Vec::new(), pos: 0 }
+        }
+
+        fn fill(&mut self) -> io::Result<()> {
+            if let Some(mut r) = self.inner.take() {
+                let mut raw = Vec::new();
+                r.read_to_end(&mut raw)?;
+                self.out = crate::inflate(&raw)?;
+            }
+            Ok(())
+        }
+    }
+
+    impl<R: Read> Read for DeflateDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.fill()?;
+            let n = (self.out.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&self.out[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE, reflected) — `flate2::Crc` surface
+// ---------------------------------------------------------------------------
+
+pub struct Crc {
+    state: u32,
+    amount: u32,
+}
+
+impl Crc {
+    pub fn new() -> Crc {
+        Crc { state: 0xFFFF_FFFF, amount: 0 }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        for &b in data {
+            self.state ^= b as u32;
+            for _ in 0..8 {
+                let mask = 0u32.wrapping_sub(self.state & 1);
+                self.state = (self.state >> 1) ^ (0xEDB8_8320 & mask);
+            }
+        }
+        self.amount = self.amount.wrapping_add(data.len() as u32);
+    }
+
+    pub fn sum(&self) -> u32 {
+        !self.state
+    }
+
+    pub fn amount(&self) -> u32 {
+        self.amount
+    }
+
+    pub fn reset(&mut self) {
+        *self = Crc::new();
+    }
+}
+
+impl Default for Crc {
+    fn default() -> Crc {
+        Crc::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::{Read, Write};
+
+    use super::*;
+
+    fn roundtrip(data: &[u8]) {
+        let mut enc = write::DeflateEncoder::new(Vec::new(), Compression::default());
+        enc.write_all(data).unwrap();
+        let packed = enc.finish().unwrap();
+        let mut back = Vec::new();
+        read::DeflateDecoder::new(&packed[..]).read_to_end(&mut back).unwrap();
+        assert_eq!(back, data, "len {}", data.len());
+    }
+
+    #[test]
+    fn roundtrip_empty_and_small() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"hello, deflate");
+    }
+
+    #[test]
+    fn roundtrip_all_byte_values() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn roundtrip_multi_block_stored() {
+        // Uniform-random bytes force the stored path; > 65535 forces
+        // multiple blocks.
+        let mut state = 0x12345678u64;
+        let data: Vec<u8> = (0..200_000)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                (state >> 56) as u8
+            })
+            .collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn small_bytes_compress() {
+        // Delta-varint-like payloads (small byte values) must shrink below
+        // raw size: that is the property the index-coding tests rely on.
+        let data = vec![3u8; 10_000];
+        let mut enc = write::DeflateEncoder::new(Vec::new(), Compression::default());
+        enc.write_all(&data).unwrap();
+        let packed = enc.finish().unwrap();
+        assert!(packed.len() < data.len(), "{} !< {}", packed.len(), data.len());
+    }
+
+    #[test]
+    fn inflate_handles_lz77_matches() {
+        // Hand-built fixed-Huffman block: "abc" + <len 6, dist 3> + EOB
+        // => "abcabcabc".
+        let mut w = BitWriter::new();
+        w.write_bits(1, 1);
+        w.write_bits(1, 2);
+        for &b in b"abc" {
+            let (c, l) = fixed_lit_code(b as u32);
+            w.write_huffman(c, l);
+        }
+        let (c, l) = fixed_lit_code(260); // length symbol 260 = base 6
+        w.write_huffman(c, l);
+        w.write_huffman(2, 5); // distance code 2 = dist 3
+        let (c, l) = fixed_lit_code(256);
+        w.write_huffman(c, l);
+        let packed = w.finish();
+        assert_eq!(inflate(&packed).unwrap(), b"abcabcabc");
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        let mut crc = Crc::new();
+        crc.update(b"123456789");
+        assert_eq!(crc.sum(), 0xCBF4_3926);
+        assert_eq!(crc.amount(), 9);
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let mut enc = write::DeflateEncoder::new(Vec::new(), Compression::default());
+        enc.write_all(&[7u8; 500]).unwrap();
+        let packed = enc.finish().unwrap();
+        let mut out = Vec::new();
+        assert!(read::DeflateDecoder::new(&packed[..packed.len() / 2])
+            .read_to_end(&mut out)
+            .is_err());
+    }
+}

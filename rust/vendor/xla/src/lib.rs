@@ -1,0 +1,307 @@
+//! Offline API-compatible stub of the `xla` (xla_extension) bindings
+//! (vendored; DESIGN.md §7).
+//!
+//! The build environment ships neither the xla_extension shared library
+//! nor a crates.io mirror, so this crate provides the exact API surface
+//! `lgc::runtime` compiles against:
+//!
+//! * [`Literal`] is fully functional host-side (shape + untyped bytes +
+//!   tuples) — the `Tensor` marshaling layer and its tests work for real.
+//! * [`PjRtClient`] constructs, but [`PjRtClient::compile`] and
+//!   [`PjRtLoadedExecutable::execute`] return a clear "PJRT backend
+//!   unavailable" error.  Everything engine-driven (HLO grad steps, AE
+//!   encode/decode) therefore fails fast at the call site with an
+//!   actionable message, while the pure-Rust 95% of the framework —
+//!   compression, ledgers, ring protocol, schedulers, parallel runtime —
+//!   builds and tests offline.
+//!
+//! When a real PJRT toolchain is present, point `Cargo.toml` at the real
+//! `xla` crate (pinned 0.5.1 wiring per /opt/xla-example/load_hlo); no
+//! call site changes.
+//!
+//! All types here are plain host data (no raw pointers), so they are
+//! `Send + Sync` — which is what lets the coordinator's parallel node
+//! runtime share one `Engine` across worker threads.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (the real crate's `xla::Error` equivalent).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const NO_PJRT: &str = "PJRT backend unavailable: this build uses the offline xla stub \
+                       (vendor/xla). Install xla_extension and point Cargo.toml at the \
+                       real `xla` crate to execute HLO modules.";
+
+/// XLA element types (subset + padding variants so `match` arms on
+/// concrete types keep a reachable wildcard).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    /// Bytes per element (0 for sub-byte/predicate types in this stub).
+    pub fn byte_size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Array shape: dims + element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Rust native types that can view a literal's payload.
+pub trait NativeType: Sized + Copy {
+    const TY: ElementType;
+    fn from_le_bytes(b: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_bytes(b: &[u8]) -> f32 {
+        f32::from_le_bytes(b.try_into().expect("4-byte chunk"))
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_bytes(b: &[u8]) -> i32 {
+        i32::from_le_bytes(b.try_into().expect("4-byte chunk"))
+    }
+}
+
+/// Host-side literal: either an array (shape + untyped little-endian
+/// bytes) or a tuple of literals.  Fully functional in the stub.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    Array { ty: ElementType, dims: Vec<i64>, data: Vec<u8> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        let want = n * ty.byte_size();
+        if data.len() != want {
+            return Err(Error::new(format!(
+                "literal payload size mismatch: {} bytes for {dims:?} x {ty:?} (want {want})",
+                data.len()
+            )));
+        }
+        Ok(Literal::Array {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal::Tuple(elems)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { ty, dims, .. } => Ok(ArrayShape { dims: dims.clone(), ty: *ty }),
+            Literal::Tuple(_) => Err(Error::new("tuple literal has no array shape")),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { ty, data, .. } => {
+                if *ty != T::TY {
+                    return Err(Error::new(format!(
+                        "element type mismatch: literal is {ty:?}, requested {:?}",
+                        T::TY
+                    )));
+                }
+                let sz = ty.byte_size();
+                Ok(data.chunks_exact(sz).map(T::from_le_bytes).collect())
+            }
+            Literal::Tuple(_) => Err(Error::new("cannot view a tuple literal as a vector")),
+        }
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(elems) => Ok(elems.clone()),
+            Literal::Array { .. } => Err(Error::new("literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed HLO module (the stub stores the text verbatim; parsing happens
+/// in the real backend).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::new(format!("reading {:?}: {e}", path.as_ref())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation wrapper (carried through to `compile`).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// PJRT client stub: constructs (so manifest-less tooling can report the
+/// platform), but cannot compile.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (offline: no PJRT)".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(NO_PJRT))
+    }
+}
+
+/// Loaded-executable stub.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(NO_PJRT))
+    }
+}
+
+/// Device-buffer stub.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(NO_PJRT))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes)
+            .unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_size_validation() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 7])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let a = Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[1, 0, 0, 0])
+            .unwrap();
+        let t = Literal::tuple(vec![a.clone()]);
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+        assert!(t.array_shape().is_err());
+        assert!(a.to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_constructs_but_cannot_compile() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("stub"));
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = c.compile(&comp).unwrap_err().to_string();
+        assert!(err.contains("PJRT backend unavailable"), "{err}");
+    }
+
+    #[test]
+    fn stub_types_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<PjRtClient>();
+        assert_send_sync::<PjRtLoadedExecutable>();
+        assert_send_sync::<Literal>();
+    }
+}
