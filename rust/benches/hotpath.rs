@@ -3,73 +3,229 @@
 //! Times each building block of the steady-state (phase 3) iteration in
 //! isolation so the optimization loop (EXPERIMENTS.md §Perf) can see where
 //! per-iteration time goes:
-//!   top-k select | index coding | sparsify scalar | ring allreduce |
-//!   per-node pipeline K=8 sequential vs parallel | — and, when AOT
-//!   artifacts + a PJRT backend are present — grad_step HLO, AE
-//!   encode/decode, sparsify HLO, full phase-3 LGC iteration.
+//!   top-k select | index coding (fixed-only baseline vs LZ77+dynamic) |
+//!   sparsify scalar | ring allreduce | per-node pipeline K=8 sequential
+//!   vs parallel | — and, when AOT artifacts + a PJRT backend are present
+//!   — grad_step HLO, AE encode/decode, sparsify HLO, full phase-3 LGC
+//!   iteration.
 //!
-//! The pure-CPU sections run everywhere (no artifacts needed); the
-//! headline row is the K=8 node-pipeline comparison, which measures the
-//! wall-clock win of the parallel node runtime (`coordinator::parallel`)
-//! over the sequential per-node loop on the same work.
+//! Besides the human-readable table (+ results/hotpath.csv), every run
+//! emits machine-readable `BENCH_hotpath.json` at the repo root — median
+//! ns/op and payload bytes per bench — so the bench trajectory is tracked
+//! PR-over-PR.  `LGC_BENCH_SMOKE=1` shrinks the timing budgets for CI.
+//!
+//! The index-encode rows measure the tentpole: the PR-2-era
+//! fixed-Huffman-only encoder (`index_coding::encode_fixed_baseline`,
+//! fresh allocations) against the rewritten zero-allocation
+//! LZ77+dynamic-Huffman path (`index_coding::encode_into` with a
+//! persistent `Scratch`), over a corpus of operating points.
 
-use lgc::compress::{index_coding, topk, Correction, FeedbackMemory};
+use std::collections::BTreeMap;
+
+use lgc::compress::{index_coding, topk, Correction, FeedbackMemory, Scratch};
 use lgc::config::{Method, TrainConfig};
 use lgc::coordinator::{parallel, ring};
 use lgc::metrics::{Kind, Ledger, NodeLedger};
 use lgc::runtime::{Engine, Tensor};
 use lgc::util::bench::{time, time_budget, Stats, Table};
+use lgc::util::json::Json;
 use lgc::util::rng::Rng;
+
+/// One JSON entry: a named timing (and optionally a payload size).
+struct JsonEntry {
+    name: String,
+    stats: Stats,
+    bytes: Option<usize>,
+}
+
+struct JsonOut {
+    smoke: bool,
+    entries: Vec<JsonEntry>,
+    /// (speedup_median, baseline_bytes_median, new_bytes_median)
+    index_encode: Option<(f64, usize, usize)>,
+}
+
+impl JsonOut {
+    fn push(&mut self, name: &str, stats: &Stats, bytes: Option<usize>) {
+        self.entries.push(JsonEntry { name: name.into(), stats: stats.clone(), bytes });
+    }
+
+    fn write(&self, path: &str) -> std::io::Result<()> {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("hotpath".into()));
+        root.insert("smoke".to_string(), Json::Bool(self.smoke));
+        if let Some((speedup, old_b, new_b)) = self.index_encode {
+            let mut ie = BTreeMap::new();
+            ie.insert("speedup_median".to_string(), Json::Num(speedup));
+            ie.insert("baseline_bytes_median".to_string(), Json::Num(old_b as f64));
+            ie.insert("new_bytes_median".to_string(), Json::Num(new_b as f64));
+            root.insert("index_encode".to_string(), Json::Obj(ie));
+        }
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(e.name.clone()));
+                m.insert("median_ns".to_string(), Json::Num(e.stats.p50_ns));
+                m.insert("mean_ns".to_string(), Json::Num(e.stats.mean_ns));
+                m.insert("p95_ns".to_string(), Json::Num(e.stats.p95_ns));
+                let bytes = match e.bytes {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                };
+                m.insert("bytes".to_string(), bytes);
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("entries".to_string(), Json::Arr(entries));
+        std::fs::write(path, format!("{}\n", Json::Obj(root)))
+    }
+}
 
 fn fmt(s: &Stats) -> (String, String) {
     (format!("{:.3} ms", s.mean_ms()), format!("{:.3} ms", s.p95_ns / 1e6))
 }
 
+/// Timing budget (ms), shrunk under LGC_BENCH_SMOKE.
+fn budget(smoke: bool, ms: u64) -> u64 {
+    if smoke {
+        (ms / 20).max(5)
+    } else {
+        ms
+    }
+}
+
+/// Random sorted unique index set over [0, n) — the index-coding corpus
+/// generator (same shape as the proptests').
+fn random_indices(rng: &mut Rng, n: usize, k: usize) -> Vec<u32> {
+    let mut set = std::collections::BTreeSet::new();
+    while set.len() < k.min(n) {
+        set.insert(rng.below(n) as u32);
+    }
+    set.into_iter().collect()
+}
+
 /// The K=8 per-node simulation pipeline: EF accumulate -> top-k select ->
-/// index encode, per node, under `threads` workers.  Returns per-node
-/// coded byte counts (kept observable so nothing is optimized away).
+/// index encode, per node, under `threads` workers, each node borrowing
+/// its own scratch arena.  Returns per-node coded byte counts (kept
+/// observable so nothing is optimized away).
 fn node_pipeline(
     threads: usize,
     fbs: &mut [FeedbackMemory],
     shards: &mut [NodeLedger],
+    arenas: &mut [Scratch],
     grads: &[Vec<f32>],
     k_sel: usize,
     n: usize,
 ) -> Vec<usize> {
-    parallel::par_zip_mut(threads, fbs, shards, |node, fb, shard| {
+    parallel::par_zip3_mut(threads, fbs, shards, arenas, |node, fb, shard, sc| {
         fb.accumulate(&grads[node]);
-        let sel = fb.select_and_clear(k_sel);
-        let coded = index_coding::encode(&sel.indices, n).unwrap().len();
-        shard.record(Kind::Values, sel.values.len() * 4);
+        fb.select_and_clear_into(k_sel, sc);
+        let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc).unwrap().len();
+        shard.record(Kind::Values, sc.vals.len() * 4);
         shard.record(Kind::Indices, coded);
         coded
     })
 }
 
-fn pure_sections(t: &mut Table, n_mid: usize, mu: usize) {
+/// The tentpole's acceptance measurement: fixed-Huffman-only baseline vs
+/// the LZ77+dynamic zero-allocation encoder, over the operating-point
+/// corpus.  Returns (median speedup, median baseline bytes, median new
+/// bytes).
+fn index_encode_comparison(t: &mut Table, json: &mut JsonOut, smoke: bool) -> (f64, usize, usize) {
+    let corpus: [(usize, usize); 4] =
+        [(262_144, 4_096), (1_000_000, 1_000), (200_000, 2_000), (65_536, 8_192)];
+    let mut speedups = Vec::new();
+    let mut old_bytes = Vec::new();
+    let mut new_bytes = Vec::new();
+    let mut scratch = Scratch::new();
+    for (ci, &(n, k)) in corpus.iter().enumerate() {
+        let mut rng = Rng::new(0x1DE + ci as u64);
+        let idx = random_indices(&mut rng, n, k);
+
+        let s_old = time_budget(budget(smoke, 400), || {
+            std::hint::black_box(index_coding::encode_fixed_baseline(&idx, n).unwrap());
+        });
+        let b_old = index_coding::encode_fixed_baseline(&idx, n).unwrap().len();
+
+        let s_new = time_budget(budget(smoke, 400), || {
+            std::hint::black_box(
+                index_coding::encode_into(&idx, n, &mut scratch.enc).unwrap().len(),
+            );
+        });
+        let b_new = index_coding::encode_into(&idx, n, &mut scratch.enc).unwrap().len();
+
+        let speedup = s_old.p50_ns / s_new.p50_ns;
+        speedups.push(speedup);
+        old_bytes.push(b_old);
+        new_bytes.push(b_new);
+
+        let (a, b) = fmt(&s_old);
+        t.row(&[
+            format!("index encode fixed-only n={n} k={k}"),
+            a,
+            b,
+            format!("{b_old} B (baseline)"),
+        ]);
+        let (a, b) = fmt(&s_new);
+        t.row(&[
+            format!("index encode LZ77+dyn  n={n} k={k}"),
+            a,
+            b,
+            format!("{b_new} B, {speedup:.2}x vs baseline"),
+        ]);
+        json.push(&format!("index_encode_baseline_n{n}_k{k}"), &s_old, Some(b_old));
+        json.push(&format!("index_encode_new_n{n}_k{k}"), &s_new, Some(b_new));
+    }
+    let median = |v: &mut Vec<f64>| -> f64 {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let med_speedup = median(&mut speedups);
+    old_bytes.sort_unstable();
+    new_bytes.sort_unstable();
+    let med_old = old_bytes[old_bytes.len() / 2];
+    let med_new = new_bytes[new_bytes.len() / 2];
+    println!(
+        "index-encode: median speedup {med_speedup:.2}x, median bytes {med_old} -> {med_new} \
+         ({:.1}% smaller)",
+        100.0 * (1.0 - med_new as f64 / med_old as f64)
+    );
+    if !smoke && med_speedup < 2.0 {
+        eprintln!("WARNING: index-encode median speedup {med_speedup:.2}x < 2x target");
+    }
+    if !smoke && med_new >= med_old {
+        eprintln!("WARNING: new index payloads not smaller ({med_new} >= {med_old})");
+    }
+    (med_speedup, med_old, med_new)
+}
+
+fn pure_sections(t: &mut Table, json: &mut JsonOut, n_mid: usize, mu: usize, smoke: bool) {
     let mut rng = Rng::new(1);
 
     // top-k selection over the mid group.
     let g = rng.normal_vec(n_mid, 1.0);
-    let s = time_budget(1_000, || {
+    let s = time_budget(budget(smoke, 1_000), || {
         std::hint::black_box(topk::top_k(&g, mu));
     });
     let (a, b) = fmt(&s);
     t.row(&["top-k select".into(), a, b, format!("n={n_mid} k={mu}")]);
+    json.push("topk_select", &s, None);
 
-    // Index coding.
-    let sel = topk::top_k(&g, mu);
-    let s = time_budget(500, || {
-        std::hint::black_box(index_coding::encode(&sel.indices, n_mid).unwrap());
+    // top-k selection through a reused arena (the hot-path variant).
+    let mut sc = Scratch::new();
+    let s = time_budget(budget(smoke, 1_000), || {
+        topk::top_k_into(&g, mu, &mut sc.mags, &mut sc.idx, &mut sc.vals);
+        std::hint::black_box(sc.idx.len());
     });
-    let coded = index_coding::encode(&sel.indices, n_mid).unwrap().len();
     let (a, b) = fmt(&s);
-    t.row(&["index encode (DEFLATE)".into(), a, b,
-            format!("{} idx -> {} B", sel.indices.len(), coded)]);
+    t.row(&["top-k select (arena)".into(), a, b, format!("n={n_mid} k={mu}")]);
+    json.push("topk_select_arena", &s, None);
 
     // Rust scalar sparsify reference (the Pallas kernel's contract).
     let acc = rng.normal_vec(n_mid, 0.5);
-    let s = time_budget(500, || {
+    let s = time_budget(budget(smoke, 500), || {
         let mut o1 = vec![0.0f32; n_mid];
         let mut o2 = vec![0.0f32; n_mid];
         for i in 0..n_mid {
@@ -84,35 +240,39 @@ fn pure_sections(t: &mut Table, n_mid: usize, mu: usize) {
     });
     let (a, b) = fmt(&s);
     t.row(&["sparsify rust scalar".into(), a, b, "reference".into()]);
+    json.push("sparsify_scalar", &s, None);
 
     // Ring allreduce on latent vectors (K = 8).
     let latents: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(mu / 4, 1.0)).collect();
-    let s = time_budget(500, || {
+    let s = time_budget(budget(smoke, 500), || {
         let mut work = latents.clone();
         let mut ledger = Ledger::new();
         std::hint::black_box(ring::ring_allreduce_sum(&mut work, &mut ledger, Kind::Latent));
     });
     let (a, b) = fmt(&s);
     t.row(&["ring allreduce latents K=8".into(), a, b, format!("len={}", mu / 4)]);
+    json.push("ring_allreduce_latents_k8", &s, None);
 }
 
-/// Sequential vs parallel per-node simulation at K=8 — the tentpole's
-/// acceptance measurement.  Returns (seq_ms, par_ms).
-fn node_loop_comparison(t: &mut Table, n: usize) -> (f64, f64) {
+/// Sequential vs parallel per-node simulation at K=8.
+/// Returns (seq_ms, par_ms).
+fn node_loop_comparison(t: &mut Table, json: &mut JsonOut, n: usize, smoke: bool) -> (f64, f64) {
     const K: usize = 8;
     let mut rng = Rng::new(7);
     let k_sel = topk::k_of(n, 0.01);
     let grads: Vec<Vec<f32>> = (0..K).map(|_| rng.normal_vec(n, 1.0)).collect();
 
+    let iters = if smoke { 4 } else { 12 };
     let run = |threads: usize| -> Stats {
         let mut fbs: Vec<FeedbackMemory> = (0..K)
             .map(|_| FeedbackMemory::new(n, Correction::Momentum, 0.9))
             .collect();
         let mut shards = NodeLedger::for_nodes(K);
+        let mut arenas = Scratch::for_nodes(K);
         let mut ledger = Ledger::new();
-        time(2, 12, || {
+        time(2, iters, || {
             let coded =
-                node_pipeline(threads, &mut fbs, &mut shards, &grads, k_sel, n);
+                node_pipeline(threads, &mut fbs, &mut shards, &mut arenas, &grads, k_sel, n);
             ledger.merge_shards(&mut shards);
             ledger.end_iteration();
             std::hint::black_box(coded);
@@ -129,13 +289,15 @@ fn node_loop_comparison(t: &mut Table, n: usize) -> (f64, f64) {
     let (a, b) = fmt(&par);
     t.row(&["node pipeline K=8 parallel".into(), a, b,
             format!("{cores} cores -> {speedup:.2}x speedup")]);
+    json.push("node_pipeline_k8_sequential", &seq, None);
+    json.push("node_pipeline_k8_parallel", &par, None);
     println!(
         "node-pipeline K=8: sequential {:.3} ms/iter, parallel {:.3} ms/iter \
          ({speedup:.2}x on {cores} cores)",
         seq.mean_ms(),
         par.mean_ms()
     );
-    if cores >= 4 && speedup < 2.0 {
+    if !smoke && cores >= 4 && speedup < 2.0 {
         eprintln!(
             "WARNING: expected >=2x parallel speedup at K=8 on a {cores}-core host, \
              measured {speedup:.2}x"
@@ -144,7 +306,12 @@ fn node_loop_comparison(t: &mut Table, n: usize) -> (f64, f64) {
     (seq.mean_ms(), par.mean_ms())
 }
 
-fn engine_sections(engine: &Engine, t: &mut Table, model: &str) -> anyhow::Result<()> {
+fn engine_sections(
+    engine: &Engine,
+    t: &mut Table,
+    json: &mut JsonOut,
+    model: &str,
+) -> anyhow::Result<()> {
     use lgc::compress::autoencoder::{AeCompressor, Pattern};
 
     let meta = engine.manifest.model(model).clone();
@@ -162,6 +329,7 @@ fn engine_sections(engine: &Engine, t: &mut Table, model: &str) -> anyhow::Resul
     });
     let (a, b) = fmt(&s);
     t.row(&[format!("{model}_grad_step"), a, b, format!("n={}", meta.n_params)]);
+    json.push(&format!("{model}_grad_step"), &s, None);
 
     // AE encode / decode.
     let ae = AeCompressor::new(engine, mu, 2, Pattern::RingAllreduce, 3)?;
@@ -173,12 +341,14 @@ fn engine_sections(engine: &Engine, t: &mut Table, model: &str) -> anyhow::Resul
     let (a, b) = fmt(&s);
     t.row(&["AE encode (L1 conv1d)".into(), a, b,
             format!("mu={mu} (paper GPU: 0.007-0.01 ms)")]);
+    json.push("ae_encode", &s, None);
     let s = time(3, 50, || {
         ae.decode_rar(engine, &lat, sc).unwrap();
     });
     let (a, b) = fmt(&s);
     t.row(&["AE decode (L1 deconv1d)".into(), a, b,
             format!("mu={mu} (paper GPU: ~1 ms)")]);
+    json.push("ae_decode", &s, None);
 
     // Fused sparsify HLO (Pallas).
     let g = rng.normal_vec(n_mid, 1.0);
@@ -192,6 +362,7 @@ fn engine_sections(engine: &Engine, t: &mut Table, model: &str) -> anyhow::Resul
     });
     let (a, b) = fmt(&s);
     t.row(&["sparsify HLO (Pallas)".into(), a, b, format!("n={n_mid}")]);
+    json.push("sparsify_hlo", &s, None);
 
     // Full steady-state iteration (phase 3 only) — and the end-to-end
     // view of the parallel node runtime: identical config at 1 thread vs
@@ -221,6 +392,7 @@ fn engine_sections(engine: &Engine, t: &mut Table, model: &str) -> anyhow::Resul
 
 fn main() -> anyhow::Result<()> {
     let model = std::env::var("LGC_MODEL").unwrap_or_else(|_| "resnet_mini".into());
+    let smoke = std::env::var("LGC_BENCH_SMOKE").is_ok();
     let engine = Engine::open_default().ok();
 
     // Workload sizes come from the manifest when available; otherwise use
@@ -234,12 +406,14 @@ fn main() -> anyhow::Result<()> {
         None => (262_144, 4_096),
     };
 
+    let mut json = JsonOut { smoke, entries: Vec::new(), index_encode: None };
     let mut t = Table::new(&["hot-path op", "mean", "p95", "notes"]);
-    pure_sections(&mut t, n_mid, mu);
-    node_loop_comparison(&mut t, 200_000);
+    pure_sections(&mut t, &mut json, n_mid, mu, smoke);
+    json.index_encode = Some(index_encode_comparison(&mut t, &mut json, smoke));
+    node_loop_comparison(&mut t, &mut json, 200_000, smoke);
 
     match &engine {
-        Some(e) => engine_sections(e, &mut t, &model)?,
+        Some(e) => engine_sections(e, &mut t, &mut json, &model)?,
         None => println!(
             "(skipping PJRT sections: artifacts/backend unavailable — pure-CPU \
              rows above cover the coordinator hot path)"
@@ -250,5 +424,8 @@ fn main() -> anyhow::Result<()> {
     t.print();
     t.write_csv("results/hotpath.csv")?;
     println!("-> results/hotpath.csv");
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    json.write(json_path)?;
+    println!("-> {json_path}");
     Ok(())
 }

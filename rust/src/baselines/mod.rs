@@ -18,7 +18,7 @@
 
 use anyhow::Result;
 
-use crate::compress::{f16, index_coding, quantize, topk, Correction, FeedbackMemory};
+use crate::compress::{f16, index_coding, quantize, topk, Correction, FeedbackMemory, Scratch};
 use crate::coordinator::parallel;
 use crate::coordinator::scheduler::{exponential_alpha, Phase};
 use crate::metrics::{Kind, Ledger, NodeLedger};
@@ -47,16 +47,30 @@ pub struct ExchangeCtx<'a> {
     pub rng: &'a mut Rng,
     /// Worker threads for per-node stages (0 = one per core).
     pub threads: usize,
+    /// One scratch arena per node, owned by the coordinator alongside the
+    /// ledger shards (DESIGN.md §6.11): node-local stages borrow buffers
+    /// from their node's arena instead of allocating per iteration.
+    pub scratches: &'a mut [Scratch],
 }
 
 /// Apply the configured value-payload precision: returns the values as
 /// they arrive at the receiver plus the wire bytes.
-pub fn pack_values(values: Vec<f32>, fp16: bool) -> (Vec<f32>, usize) {
+pub fn pack_values(mut values: Vec<f32>, fp16: bool) -> (Vec<f32>, usize) {
+    let bytes = pack_values_in_place(&mut values, fp16);
+    (values, bytes)
+}
+
+/// In-place [`pack_values`] over an arena-resident value buffer: under
+/// fp16 each value is replaced by its wire round-trip (what the receiver
+/// applies), element-wise with no allocation; returns the wire bytes.
+fn pack_values_in_place(values: &mut [f32], fp16: bool) -> usize {
     if fp16 {
-        f16::quantize_f16(&values)
+        for v in values.iter_mut() {
+            *v = f16::f16_bits_to_f32(f16::f32_to_f16_bits(*v));
+        }
+        values.len() * 2
     } else {
-        let bytes = values.len() * 4;
-        (values, bytes)
+        values.len() * 4
     }
 }
 
@@ -109,33 +123,37 @@ impl MidStrategy for Baseline {
 
 /// Shared machinery: per-node EF -> top-k -> (values + coded indices) ->
 /// scatter-mean. Used by SparseGd and Dgc.  The per-node stage runs in
-/// parallel; the scatter-mean barrier reduces in node order.
+/// parallel and leaves each node's packet in its scratch arena
+/// (`sc.idx` / `sc.vals`); the scatter-mean barrier reads the arenas in
+/// node order, so no per-packet allocation survives into steady state.
 fn sparse_ef_exchange(
     fbs: &mut [FeedbackMemory],
     grads: &[Vec<f32>],
     alpha: f64,
     fp16: bool,
     shards: &mut [NodeLedger],
+    scratches: &mut [Scratch],
     threads: usize,
 ) -> Result<Vec<f32>> {
     let n = grads[0].len();
     let k_sel = topk::k_of(n, alpha);
-    let packets = parallel::collect_node_results(parallel::par_zip_mut(
+    parallel::collect_node_results(parallel::par_zip3_mut(
         threads,
         fbs,
         shards,
-        |node, fb, shard| -> Result<(Vec<u32>, Vec<f32>)> {
+        scratches,
+        |node, fb, shard, sc| -> Result<()> {
             fb.accumulate(&grads[node]);
-            let sel = fb.select_and_clear(k_sel);
-            let (values, bytes) = pack_values(sel.values, fp16);
+            fb.select_and_clear_into(k_sel, sc);
+            let bytes = pack_values_in_place(&mut sc.vals, fp16);
             shard.record(Kind::Values, bytes);
-            shard.record(Kind::Indices, index_coding::encode(&sel.indices, n)?.len());
-            Ok((sel.indices, values))
+            shard.record(Kind::Indices, index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len());
+            Ok(())
         },
     ))?;
     let mut mean = vec![0.0f32; n];
-    for (indices, values) in &packets {
-        topk::scatter_add(&mut mean, indices, values);
+    for sc in scratches.iter() {
+        topk::scatter_add(&mut mean, &sc.idx, &sc.vals);
     }
     let k = grads.len() as f32;
     mean.iter_mut().for_each(|m| *m /= k);
@@ -171,6 +189,7 @@ impl MidStrategy for SparseGd {
             self.alpha,
             ctx.fp16,
             &mut *ctx.shards,
+            &mut *ctx.scratches,
             ctx.threads,
         )
     }
@@ -202,7 +221,15 @@ impl MidStrategy for Dgc {
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
         let a = exponential_alpha(ctx.iter, self.ramp, self.alpha);
-        sparse_ef_exchange(&mut self.fbs, grads, a, ctx.fp16, &mut *ctx.shards, ctx.threads)
+        sparse_ef_exchange(
+            &mut self.fbs,
+            grads,
+            a,
+            ctx.fp16,
+            &mut *ctx.shards,
+            &mut *ctx.scratches,
+            ctx.threads,
+        )
     }
 }
 
@@ -211,6 +238,9 @@ impl MidStrategy for Dgc {
 pub struct ScaleCom {
     fbs: Vec<FeedbackMemory>,
     alpha: f64,
+    /// The leader's broadcast index set, refilled per iteration
+    /// (persistent so the steady state allocates nothing; §6.11).
+    support: Vec<u32>,
 }
 
 impl ScaleCom {
@@ -220,6 +250,7 @@ impl ScaleCom {
                 .map(|_| FeedbackMemory::new(n, Correction::Momentum, momentum))
                 .collect(),
             alpha,
+            support: Vec::new(),
         }
     }
 }
@@ -239,31 +270,40 @@ impl MidStrategy for ScaleCom {
         });
         // Barrier: the cyclic leader's local top-k defines everyone's
         // index set; the broadcast is leader traffic on the global ledger.
+        // Selection + encode borrow the leader's arena; the index list is
+        // staged into the persistent support buffer so the arenas are
+        // free for the gather stage.
         let leader = ctx.iter % nodes;
-        let sel = topk::top_k(self.fbs[leader].memory(), k_sel);
-        ctx.ledger.record(
-            leader,
-            Kind::Indices,
-            index_coding::encode(&sel.indices, n)?.len(),
-        );
+        {
+            let sc = &mut ctx.scratches[leader];
+            let mem = self.fbs[leader].memory();
+            topk::top_k_into(mem, k_sel, &mut sc.mags, &mut sc.idx, &mut sc.vals);
+            ctx.ledger.record(
+                leader,
+                Kind::Indices,
+                index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len(),
+            );
+            self.support.clear();
+            self.support.extend_from_slice(&sc.idx);
+        }
         // Node-local stage 2: gather-at-support + value packing.
         let fp16 = ctx.fp16;
-        let indices = &sel.indices;
-        let packed = parallel::par_zip_mut(
+        let indices = &self.support;
+        parallel::par_zip3_mut(
             ctx.threads,
             &mut self.fbs,
             &mut *ctx.shards,
-            |_node, fb, shard| {
-                let vals = fb.take_at(indices);
-                let (vals, bytes) = pack_values(vals, fp16);
+            &mut *ctx.scratches,
+            |_node, fb, shard, sc| {
+                fb.take_at_into(indices, &mut sc.vals);
+                let bytes = pack_values_in_place(&mut sc.vals, fp16);
                 shard.record(Kind::Values, bytes);
-                vals
             },
         );
         // Barrier: mean in node order.
         let mut mean = vec![0.0f32; n];
-        for vals in &packed {
-            topk::scatter_add(&mut mean, indices, vals);
+        for sc in ctx.scratches.iter() {
+            topk::scatter_add(&mut mean, indices, &sc.vals);
         }
         mean.iter_mut().for_each(|m| *m /= nodes as f32);
         Ok(mean)
@@ -298,19 +338,20 @@ impl MidStrategy for Qsgd {
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
         let n = grads[0].len();
         let (levels, bucket) = (self.levels, self.bucket);
-        let packets = parallel::par_zip_mut(
+        // Node-local stage: quantize into each node's arena buffer.
+        parallel::par_zip3_mut(
             ctx.threads,
             &mut self.rngs,
             &mut *ctx.shards,
-            |node, rng, shard| {
-                let p = quantize::qsgd(&grads[node], levels, bucket, rng);
-                shard.record(Kind::Values, p.bytes);
-                p.dequant
+            &mut *ctx.scratches,
+            |node, rng, shard, sc| {
+                let bytes = quantize::qsgd_into(&grads[node], levels, bucket, rng, &mut sc.vals);
+                shard.record(Kind::Values, bytes);
             },
         );
         let mut mean = vec![0.0f32; n];
-        for dequant in &packets {
-            for (m, x) in mean.iter_mut().zip(dequant) {
+        for sc in ctx.scratches.iter() {
+            for (m, x) in mean.iter_mut().zip(&sc.vals) {
                 *m += x;
             }
         }
@@ -362,39 +403,43 @@ impl MidStrategy for HardThreshold {
         let n = grads[0].len();
         let k_target = topk::k_of(n, self.alpha);
         let fp16 = ctx.fp16;
-        let packets = parallel::collect_node_results(parallel::par_zip_mut(
+        parallel::collect_node_results(parallel::par_zip3_mut(
             ctx.threads,
             &mut self.nodes,
             &mut *ctx.shards,
-            |node, st, shard| -> Result<(Vec<u32>, Vec<f32>)> {
+            &mut *ctx.scratches,
+            |node, st, shard, sc| -> Result<()> {
                 st.fb.accumulate(&grads[node]);
                 if st.threshold == 0.0 {
                     // Calibrate from the first post-accumulation
                     // distribution.
-                    st.threshold = topk::threshold_for_k(st.fb.memory(), k_target);
+                    st.threshold = topk::threshold_for_k_in(st.fb.memory(), k_target, &mut sc.mags);
                 }
                 let thr = st.threshold;
                 let mem = st.fb.memory();
-                let indices: Vec<u32> = (0..n as u32)
-                    .filter(|&i| mem[i as usize].abs() >= thr && mem[i as usize] != 0.0)
-                    .collect();
-                let values = st.fb.take_at(&indices);
+                sc.idx.clear();
+                sc.idx.extend(
+                    (0..n as u32)
+                        .filter(|&i| mem[i as usize].abs() >= thr && mem[i as usize] != 0.0),
+                );
+                st.fb.take_at_into(&sc.idx, &mut sc.vals);
                 // Adapt the threshold toward the target payload size
                 // (x2 AIMD).
-                if indices.len() > 2 * k_target {
+                if sc.idx.len() > 2 * k_target {
                     st.threshold *= 1.25;
-                } else if indices.len() < k_target / 2 {
+                } else if sc.idx.len() < k_target / 2 {
                     st.threshold *= 0.8;
                 }
-                let (values, bytes) = pack_values(values, fp16);
+                let bytes = pack_values_in_place(&mut sc.vals, fp16);
                 shard.record(Kind::Values, bytes);
-                shard.record(Kind::Indices, index_coding::encode(&indices, n)?.len());
-                Ok((indices, values))
+                let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
+                shard.record(Kind::Indices, coded);
+                Ok(())
             },
         ))?;
         let mut mean = vec![0.0f32; n];
-        for (indices, values) in &packets {
-            topk::scatter_add(&mut mean, indices, values);
+        for sc in ctx.scratches.iter() {
+            topk::scatter_add(&mut mean, &sc.idx, &sc.vals);
         }
         mean.iter_mut().for_each(|m| *m /= grads.len() as f32);
         Ok(mean)
@@ -427,8 +472,10 @@ mod tests {
             vec![0.0, 2.0, 0.0, 0.0, 0.0, -5.0],
         ];
         let mut shards = NodeLedger::for_nodes(2);
+        let mut scratches = Scratch::for_nodes(2);
         let mean =
-            sparse_ef_exchange(&mut fbs, &grads, 0.34, false, &mut shards, 1).unwrap();
+            sparse_ef_exchange(&mut fbs, &grads, 0.34, false, &mut shards, &mut scratches, 1)
+                .unwrap();
         // k = ceil(0.34 * 6) = 3 coords per node transmitted; transmitted
         // + residual must equal the accumulated gradient per node (the
         // stronger invariant is proptested in tests/proptests.rs).
@@ -451,13 +498,14 @@ mod tests {
                 .map(|_| FeedbackMemory::new(n, Correction::Momentum, 0.9))
                 .collect();
             let mut shards = NodeLedger::for_nodes(nodes);
+            let mut scratches = Scratch::for_nodes(nodes);
             let mut ledger = Ledger::new();
             let mut means = Vec::new();
             for _ in 0..4 {
                 let grads: Vec<Vec<f32>> =
                     (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
                 let mean = sparse_ef_exchange(
-                    &mut fbs, &grads, 0.05, false, &mut shards, threads,
+                    &mut fbs, &grads, 0.05, false, &mut shards, &mut scratches, threads,
                 )
                 .unwrap();
                 ledger.merge_shards(&mut shards);

@@ -210,21 +210,26 @@ impl AeCompressor {
     ///
     /// RAR: `innovations` is ignored. PS: `ridx` picks the common node.
     /// Returns (rec_loss, sim_loss) — sim_loss is 0 for RAR.
-    pub fn train_step(
+    ///
+    /// Rows are taken generically (`Vec<f32>`, `&[f32]`, ...) so the
+    /// coordinator can pass value-vectors borrowed straight out of its
+    /// per-node arenas without re-collecting them (DESIGN.md §6.11).
+    pub fn train_step<R: AsRef<[f32]>>(
         &mut self,
         engine: &Engine,
-        grads: &[Vec<f32>],
-        innovations: Option<&[Vec<f32>]>,
+        grads: &[R],
+        innovations: Option<&[R]>,
         ridx: usize,
         lr: f32,
         lam1: f32,
         lam2: f32,
     ) -> Result<(f32, f32)> {
         assert_eq!(grads.len(), self.k_nodes);
-        let scales: Vec<f32> = grads.iter().map(|g| rms(g)).collect();
-        let stack = |rows: &[Vec<f32>], scales: &[f32]| {
+        let scales: Vec<f32> = grads.iter().map(|g| rms(g.as_ref())).collect();
+        let stack = |rows: &[R], scales: &[f32]| {
             let mut data = Vec::with_capacity(self.k_nodes * self.mu);
             for (r, &s) in rows.iter().zip(scales) {
+                let r = r.as_ref();
                 assert_eq!(r.len(), self.mu);
                 data.extend(r.iter().map(|x| x / s));
             }

@@ -11,6 +11,7 @@
 //! selection, which is exactly Algorithm 1's `g_acc <- g_acc + (!mask) * g`
 //! formulation rearranged.
 
+use super::scratch::Scratch;
 use super::topk::{self, TopK};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,26 +73,39 @@ impl FeedbackMemory {
     /// (and their momentum, per DGC's momentum masking), return the packet.
     pub fn select_and_clear(&mut self, k: usize) -> TopK {
         let sel = topk::top_k(&self.v, k);
-        for &i in &sel.indices {
-            self.v[i as usize] = 0.0;
-            if self.correction == Correction::Momentum {
-                self.u[i as usize] = 0.0;
-            }
-        }
+        self.clear_at(&sel.indices);
         sel
+    }
+
+    /// [`FeedbackMemory::select_and_clear`] into the arena's selection
+    /// buffers (`sc.idx` / `sc.vals`), allocation-free in steady state.
+    pub fn select_and_clear_into(&mut self, k: usize, sc: &mut Scratch) {
+        topk::top_k_into(&self.v, k, &mut sc.mags, &mut sc.idx, &mut sc.vals);
+        self.clear_at(&sc.idx);
     }
 
     /// Clear given coordinates after transmitting them (CLT-k path: the
     /// index set came from the leader, not from our own top-k).
     pub fn take_at(&mut self, indices: &[u32]) -> Vec<f32> {
-        let vals = topk::gather(&self.v, indices);
+        let mut out = Vec::new();
+        self.take_at_into(indices, &mut out);
+        out
+    }
+
+    /// [`FeedbackMemory::take_at`] into a caller-owned buffer (cleared
+    /// first).
+    pub fn take_at_into(&mut self, indices: &[u32], out: &mut Vec<f32>) {
+        topk::gather_into(&self.v, indices, out);
+        self.clear_at(indices);
+    }
+
+    fn clear_at(&mut self, indices: &[u32]) {
         for &i in indices {
             self.v[i as usize] = 0.0;
             if self.correction == Correction::Momentum {
                 self.u[i as usize] = 0.0;
             }
         }
-        vals
     }
 
     /// Scatter-add a correction back into the memory (error feedback on a
@@ -159,6 +173,24 @@ mod tests {
         let vals = fb.take_at(&[0, 2]);
         assert_eq!(vals, vec![1.0, 3.0]);
         assert_eq!(fb.memory(), &[0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn scratch_select_matches_allocating_select() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        let g = rng.normal_vec(500, 1.0);
+        let mut a = FeedbackMemory::new(500, Correction::Momentum, 0.9);
+        let mut b = a.clone();
+        let mut sc = Scratch::new();
+        for k in [1usize, 7, 50] {
+            a.accumulate(&g);
+            b.accumulate(&g);
+            let sel = a.select_and_clear(k);
+            b.select_and_clear_into(k, &mut sc);
+            assert_eq!(sel.indices, sc.idx);
+            assert_eq!(sel.values, sc.vals);
+            assert_eq!(a.memory(), b.memory());
+        }
     }
 
     #[test]

@@ -3,23 +3,29 @@
 //! and their rate is taken into account in the total rate calculation").
 //!
 //! Pipeline: sorted u32 indices -> delta encoding -> LEB128 varints ->
-//! DEFLATE.  A raw-bitmap fallback is chosen automatically when denser
-//! selections would make it cheaper; the 1-byte header records the mode.
-//! Every byte that leaves a node flows through [`encode`], so ledger totals
-//! are measured, never modeled.
-
-use std::io::{Read, Write};
+//! DEFLATE (LZ77 + dynamic Huffman since the vendored-`flate2` rewrite;
+//! previously fixed-Huffman literals only).  A raw-bitmap fallback is
+//! chosen automatically when denser selections would make it cheaper; the
+//! 1-byte header records the mode.  Every byte that leaves a node flows
+//! through [`encode`] / [`encode_into`], so ledger totals are measured,
+//! never modeled.
+//!
+//! Hot-path variants ([`encode_into`], [`encode_ordered_into`]) borrow an
+//! [`EncScratch`] arena and allocate nothing in the steady state
+//! (DESIGN.md §6.11); the allocating wrappers delegate to them, so both
+//! paths are byte-identical by construction.
 
 use anyhow::{bail, Result};
-use flate2::read::DeflateDecoder;
-use flate2::write::DeflateEncoder;
 use flate2::Compression;
+
+use super::scratch::EncScratch;
 
 const MODE_DEFLATE_DELTA: u8 = 0;
 const MODE_BITMAP: u8 = 1;
 
-/// Encode a sorted index set over a universe of size `n`.
-pub fn encode(indices: &[u32], n: usize) -> Result<Vec<u8>> {
+/// Encode a sorted index set over a universe of size `n`, reusing the
+/// arena's buffers; the returned slice borrows `s.payload`.
+pub fn encode_into<'a>(indices: &[u32], n: usize, s: &'a mut EncScratch) -> Result<&'a [u8]> {
     debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices must be sorted unique");
     if let Some(&last) = indices.last() {
         if last as usize >= n {
@@ -27,6 +33,54 @@ pub fn encode(indices: &[u32], n: usize) -> Result<Vec<u8>> {
         }
     }
     // Candidate A: delta + varint + deflate.
+    s.varints.clear();
+    let mut prev = 0u32;
+    for (i, &idx) in indices.iter().enumerate() {
+        let delta = if i == 0 { idx } else { idx - prev - 1 };
+        write_varint(&mut s.varints, delta);
+        prev = idx;
+    }
+    s.payload.clear();
+    s.payload.push(MODE_DEFLATE_DELTA);
+    s.payload.extend((indices.len() as u32).to_le_bytes());
+    flate2::compress_into(&s.varints, Compression::default(), &mut s.deflate, &mut s.payload);
+    let deflated_len = s.payload.len() - 5;
+
+    // Candidate B: raw bitmap (wins for dense selections).  Compare full
+    // wire sizes: deflate mode carries a 5-byte header, bitmap 1 byte.
+    // (The old encoder compared the bodies only and could pick a payload
+    // up to 4 bytes larger; `encode_fixed_baseline` preserves that rule.)
+    let bitmap_len = n.div_ceil(8);
+    if deflated_len + 4 <= bitmap_len {
+        return Ok(&s.payload);
+    }
+    s.payload.clear();
+    s.payload.resize(1 + bitmap_len, 0);
+    s.payload[0] = MODE_BITMAP;
+    for &i in indices {
+        s.payload[1 + (i as usize) / 8] |= 1 << (i % 8);
+    }
+    Ok(&s.payload)
+}
+
+/// Encode a sorted index set over a universe of size `n` (allocating
+/// wrapper around [`encode_into`]).
+pub fn encode(indices: &[u32], n: usize) -> Result<Vec<u8>> {
+    let mut s = EncScratch::new();
+    encode_into(indices, n, &mut s).map(|b| b.to_vec())
+}
+
+/// The PR-2-era encoder: identical delta+varint+bitmap framing, but the
+/// DEFLATE stage is the legacy fixed-Huffman/stored-only compressor with
+/// per-call allocations.  Kept as the bench baseline the hot-path speedup
+/// is measured against, and for the differential tests; never used on a
+/// production path.
+pub fn encode_fixed_baseline(indices: &[u32], n: usize) -> Result<Vec<u8>> {
+    if let Some(&last) = indices.last() {
+        if last as usize >= n {
+            bail!("index {last} out of universe {n}");
+        }
+    }
     let mut varints = Vec::with_capacity(indices.len() * 2);
     let mut prev = 0u32;
     for (i, &idx) in indices.iter().enumerate() {
@@ -34,13 +88,8 @@ pub fn encode(indices: &[u32], n: usize) -> Result<Vec<u8>> {
         write_varint(&mut varints, delta);
         prev = idx;
     }
-    let mut enc = DeflateEncoder::new(Vec::new(), Compression::default());
-    enc.write_all(&varints)?;
-    let deflated = enc.finish()?;
-
-    // Candidate B: raw bitmap (wins for dense selections).
+    let deflated = flate2::legacy::deflate_fixed_only(&varints);
     let bitmap_len = n.div_ceil(8);
-
     if deflated.len() <= bitmap_len {
         let mut out = Vec::with_capacity(deflated.len() + 5);
         out.push(MODE_DEFLATE_DELTA);
@@ -58,25 +107,59 @@ pub fn encode(indices: &[u32], n: usize) -> Result<Vec<u8>> {
 }
 
 /// Decode back to the sorted index list.
+///
+/// Total on untrusted input: truncated headers, truncated bitmaps,
+/// inconsistent counts, and non-canonical varints all `bail!` instead of
+/// panicking (the out-of-bounds bitmap read and the varint overflow were
+/// real bugs; see the regression tests).
 pub fn decode(bytes: &[u8], n: usize) -> Result<Vec<u32>> {
     match bytes.first() {
         Some(&MODE_DEFLATE_DELTA) => {
+            if bytes.len() < 5 {
+                bail!("truncated index payload: {} bytes < 5-byte header", bytes.len());
+            }
             let count = u32::from_le_bytes(bytes[1..5].try_into()?) as usize;
-            let mut inflated = Vec::new();
-            DeflateDecoder::new(&bytes[5..]).read_to_end(&mut inflated)?;
+            // A valid payload holds at most 5 varint bytes per index and
+            // indices < n, so cap the inflation there — an adversarial
+            // stream cannot demand unbounded memory (DEFLATE expands up
+            // to ~1032x).
+            let max_out = n.saturating_mul(5).saturating_add(16);
+            let inflated = flate2::decompress_limited(&bytes[5..], max_out)?;
+            // Each index costs at least one varint byte, so a count beyond
+            // the inflated size is corrupt — reject before reserving.
+            if count > inflated.len() {
+                bail!("index count {count} exceeds payload ({} bytes)", inflated.len());
+            }
             let mut out = Vec::with_capacity(count);
             let mut pos = 0usize;
             let mut prev = 0u32;
             for i in 0..count {
                 let (delta, used) = read_varint(&inflated[pos..])?;
                 pos += used;
-                let idx = if i == 0 { delta } else { prev + delta + 1 };
+                let idx = if i == 0 {
+                    delta
+                } else {
+                    match prev.checked_add(delta).and_then(|v| v.checked_add(1)) {
+                        Some(v) => v,
+                        None => bail!("index delta overflows u32"),
+                    }
+                };
+                // Enforce the output contract (sorted indices < n): a
+                // corrupt payload must not hand out-of-universe indices
+                // to unchecked scatter/gather consumers.
+                if idx as usize >= n {
+                    bail!("decoded index {idx} out of universe {n}");
+                }
                 out.push(idx);
                 prev = idx;
             }
             Ok(out)
         }
         Some(&MODE_BITMAP) => {
+            let need = 1 + n.div_ceil(8);
+            if bytes.len() < need {
+                bail!("truncated bitmap payload: {} bytes < {need}", bytes.len());
+            }
             let mut out = Vec::new();
             for i in 0..n {
                 if bytes[1 + i / 8] & (1 << (i % 8)) != 0 {
@@ -94,21 +177,32 @@ pub fn decode(bytes: &[u8], n: usize) -> Result<Vec<u32>> {
 /// is what makes the value-vectors smooth enough for the conv
 /// autoencoder — DESIGN.md §6.6).  Delta coding would destroy the order,
 /// so this DEFLATEs the raw LE-u32 stream; still counted byte-exactly.
-pub fn encode_ordered(indices: &[u32]) -> Result<Vec<u8>> {
-    let mut raw = Vec::with_capacity(indices.len() * 4 + 4);
-    raw.extend((indices.len() as u32).to_le_bytes());
+/// The returned slice borrows `s.payload`.
+pub fn encode_ordered_into<'a>(indices: &[u32], s: &'a mut EncScratch) -> Result<&'a [u8]> {
+    s.varints.clear();
+    s.varints.extend((indices.len() as u32).to_le_bytes());
     for &i in indices {
-        raw.extend(i.to_le_bytes());
+        s.varints.extend(i.to_le_bytes());
     }
-    let mut enc = DeflateEncoder::new(Vec::new(), Compression::default());
-    enc.write_all(&raw)?;
-    Ok(enc.finish()?)
+    s.payload.clear();
+    flate2::compress_into(&s.varints, Compression::default(), &mut s.deflate, &mut s.payload);
+    Ok(&s.payload)
 }
+
+/// Allocating wrapper around [`encode_ordered_into`].
+pub fn encode_ordered(indices: &[u32]) -> Result<Vec<u8>> {
+    let mut s = EncScratch::new();
+    encode_ordered_into(indices, &mut s).map(|b| b.to_vec())
+}
+
+/// Upper bound on an inflated ordered-index payload (16M indices —
+/// orders of magnitude above any support size this codebase transmits);
+/// keeps adversarial streams from demanding unbounded memory.
+const MAX_ORDERED_BYTES: usize = 64 << 20;
 
 /// Decode an order-significant index list.
 pub fn decode_ordered(bytes: &[u8]) -> Result<Vec<u32>> {
-    let mut raw = Vec::new();
-    DeflateDecoder::new(bytes).read_to_end(&mut raw)?;
+    let raw = flate2::decompress_limited(bytes, MAX_ORDERED_BYTES)?;
     if raw.len() < 4 {
         bail!("truncated ordered index payload");
     }
@@ -136,6 +230,12 @@ fn write_varint(out: &mut Vec<u8>, mut v: u32) {
 fn read_varint(b: &[u8]) -> Result<(u32, usize)> {
     let mut v = 0u32;
     for (i, &byte) in b.iter().enumerate().take(5) {
+        // A u32 uses at most 4 bits of the 5th byte; anything above (or a
+        // continuation bit there) is a non-canonical encoding whose high
+        // bits would silently vanish — reject instead of mis-decoding.
+        if i == 4 && byte > 0x0F {
+            bail!("varint overflow: byte 5 is {byte:#04x}");
+        }
         v |= ((byte & 0x7f) as u32) << (7 * i);
         if byte & 0x80 == 0 {
             return Ok((v, i + 1));
@@ -209,8 +309,36 @@ mod tests {
     }
 
     #[test]
+    fn new_encoder_never_beaten_by_fixed_baseline() {
+        // The dynamic-Huffman encoder considers fixed and stored blocks
+        // too, so it can never lose to the old fixed-only path by more
+        // than the block-choice tie; at the paper's operating points it
+        // must win outright.
+        let mut rng = Rng::new(21);
+        let mut strictly_smaller = 0;
+        let cases = [(262_144usize, 4096usize), (1_000_000, 1000), (200_000, 2000)];
+        for &(n, k) in &cases {
+            let mut set = std::collections::BTreeSet::new();
+            while set.len() < k {
+                set.insert(rng.below(n) as u32);
+            }
+            let sel: Vec<u32> = set.into_iter().collect();
+            let new = encode(&sel, n).unwrap();
+            let old = encode_fixed_baseline(&sel, n).unwrap();
+            assert!(new.len() <= old.len(), "n={n} k={k}: {} > {}", new.len(), old.len());
+            if new.len() < old.len() {
+                strictly_smaller += 1;
+            }
+            assert_eq!(decode(&new, n).unwrap(), sel);
+            assert_eq!(decode(&old, n).unwrap(), sel, "baseline framing must still decode");
+        }
+        assert_eq!(strictly_smaller, cases.len(), "dynamic coding should win every case");
+    }
+
+    #[test]
     fn rejects_out_of_universe() {
         assert!(encode(&[100], 100).is_err());
+        assert!(encode_fixed_baseline(&[100], 100).is_err());
     }
 
     #[test]
@@ -229,6 +357,80 @@ mod tests {
             buf.clear();
             write_varint(&mut buf, v);
             assert_eq!(read_varint(&buf).unwrap(), (v, buf.len()));
+        }
+    }
+
+    #[test]
+    fn varint_rejects_overflow_bits() {
+        // u32::MAX is the canonical ceiling: [FF FF FF FF 0F].
+        assert_eq!(
+            read_varint(&[0xFF, 0xFF, 0xFF, 0xFF, 0x0F]).unwrap(),
+            (u32::MAX, 5)
+        );
+        // One bit past the top of u32 must be rejected, not discarded.
+        assert!(read_varint(&[0xFF, 0xFF, 0xFF, 0xFF, 0x1F]).is_err());
+        assert!(read_varint(&[0x80, 0x80, 0x80, 0x80, 0x7F]).is_err());
+        // A continuation bit in the 5th byte can never be valid either.
+        assert!(read_varint(&[0xFF, 0xFF, 0xFF, 0xFF, 0xFF]).is_err());
+        // Truncated streams still error.
+        assert!(read_varint(&[]).is_err());
+        assert!(read_varint(&[0x80]).is_err());
+    }
+
+    #[test]
+    fn truncated_bitmap_errors_instead_of_panicking() {
+        // Regression: a MODE_BITMAP payload shorter than the universe's
+        // bitmap used to index out of bounds.  Craft the bitmap wire
+        // format directly (the LZ77 encoder now crushes most dense
+        // selections below bitmap size, so the mode is rarely chosen).
+        let n = 1024usize;
+        let sel: Vec<u32> = (0..n as u32).step_by(2).collect();
+        let mut bytes = vec![0u8; 1 + n.div_ceil(8)];
+        bytes[0] = 1;
+        for &i in &sel {
+            bytes[1 + (i as usize) / 8] |= 1 << (i % 8);
+        }
+        assert_eq!(decode(&bytes, n).unwrap(), sel, "crafted bitmap must decode");
+        for cut in [1usize, 2, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut], n).is_err(), "cut={cut}");
+        }
+        // Bitmap header alone, arbitrary n.
+        assert!(decode(&[1u8], 64).is_err());
+        assert!(decode(&[1u8, 0xFF], 64).is_err());
+    }
+
+    #[test]
+    fn truncated_delta_header_errors() {
+        // MODE_DEFLATE_DELTA with fewer than 5 header bytes.
+        for len in 1..5 {
+            let bytes = vec![0u8; len];
+            assert!(decode(&bytes, 100).is_err(), "len={len}");
+        }
+        // Absurd count over a tiny payload is rejected before allocating.
+        let mut bytes = vec![0u8];
+        bytes.extend(u32::MAX.to_le_bytes());
+        bytes.extend(flate2::compress(&[0u8; 4], flate2::Compression::default()));
+        assert!(decode(&bytes, 100).is_err());
+    }
+
+    #[test]
+    fn scratch_and_allocating_paths_agree() {
+        let mut rng = Rng::new(0x1DC);
+        let mut sc = crate::compress::scratch::EncScratch::new();
+        for _ in 0..30 {
+            let n = 128 + rng.below(100_000);
+            let k = 1 + rng.below((n / 8).max(1));
+            let mut set = std::collections::BTreeSet::new();
+            while set.len() < k.min(n) {
+                set.insert(rng.below(n) as u32);
+            }
+            let sel: Vec<u32> = set.into_iter().collect();
+            let a = encode(&sel, n).unwrap();
+            let b = encode_into(&sel, n, &mut sc).unwrap();
+            assert_eq!(a, b);
+            let c = encode_ordered(&sel).unwrap();
+            let d = encode_ordered_into(&sel, &mut sc).unwrap();
+            assert_eq!(c, d);
         }
     }
 }

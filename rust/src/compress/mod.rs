@@ -3,6 +3,8 @@
 //! * [`topk`]         — exact top-k magnitude selection (Algorithm 1)
 //! * [`feedback`]     — error-feedback memory w/ momentum correction
 //! * [`index_coding`] — DEFLATE index entropy coding (§V-A)
+//! * [`scratch`]      — per-worker arenas for the zero-allocation hot
+//!   path (DESIGN.md §6.11)
 //! * [`quantize`]     — QSGD / ternary baselines (§II-B)
 //! * [`autoencoder`]  — the learned compressor: wraps the AOT'd LGC
 //!   autoencoder HLOs (encode / decode / online train)
@@ -12,8 +14,10 @@ pub mod f16;
 pub mod feedback;
 pub mod index_coding;
 pub mod quantize;
+pub mod scratch;
 pub mod topk;
 
 pub use autoencoder::AeCompressor;
 pub use feedback::{Correction, FeedbackMemory};
+pub use scratch::Scratch;
 pub use topk::TopK;

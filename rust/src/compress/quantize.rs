@@ -37,9 +37,20 @@ pub fn bits_per_coord(levels: u32) -> usize {
     1 + (32 - levels.leading_zeros()) as usize
 }
 
-pub fn qsgd(g: &[f32], levels: u32, bucket: usize, rng: &mut Rng) -> QsgdPacket {
+/// [`qsgd`] into a caller-owned dequant buffer (cleared and re-zeroed
+/// first); returns the packet bytes.  The hot path borrows the buffer
+/// from a per-node arena (DESIGN.md §6.11); draws from `rng` are
+/// identical to [`qsgd`]'s, so both paths quantize bit-identically.
+pub fn qsgd_into(
+    g: &[f32],
+    levels: u32,
+    bucket: usize,
+    rng: &mut Rng,
+    dequant: &mut Vec<f32>,
+) -> usize {
     assert!(levels >= 1 && bucket >= 1);
-    let mut dequant = vec![0.0f32; g.len()];
+    dequant.clear();
+    dequant.resize(g.len(), 0.0);
     let bits_per_coord = bits_per_coord(levels);
     let mut bytes = 0usize;
     for (bi, chunk) in g.chunks(bucket).enumerate() {
@@ -57,6 +68,12 @@ pub fn qsgd(g: &[f32], levels: u32, bucket: usize, rng: &mut Rng) -> QsgdPacket 
         }
         bytes += (chunk.len() * bits_per_coord).div_ceil(8);
     }
+    bytes
+}
+
+pub fn qsgd(g: &[f32], levels: u32, bucket: usize, rng: &mut Rng) -> QsgdPacket {
+    let mut dequant = Vec::new();
+    let bytes = qsgd_into(g, levels, bucket, rng, &mut dequant);
     QsgdPacket { bytes, dequant }
 }
 

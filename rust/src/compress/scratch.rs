@@ -1,0 +1,113 @@
+//! Per-worker scratch arenas for the compression hot path (DESIGN.md
+//! §6.11).
+//!
+//! Every per-node, per-iteration stage — magnitude selection, gather at
+//! the shared support, innovation scatter, varint/DEFLATE index coding —
+//! needs working buffers sized by the gradient group.  Allocating them
+//! per call is the dominant steady-state allocator traffic, so each
+//! simulated node owns one [`Scratch`] (created once, next to its ledger
+//! shard) and every stage borrows from it.  After the first iteration the
+//! buffers sit at the workload's high-water mark and the steady state
+//! allocates nothing.
+//!
+//! Determinism (§6.5): arenas hold no state that outlives a call — every
+//! user clears or overwrites before reading — and each node always uses
+//! its own arena, so they are a wall-clock knob, never a semantics knob.
+//! The proptests pin this down by comparing scratch-path outputs against
+//! the allocating reference paths bit-for-bit.
+
+/// Reusable buffers for one worker/node.
+///
+/// The selection fields (`idx`, `vals`) double as the *output* of a
+/// node-local stage: the barrier that follows reads them directly (e.g.
+/// scatter-mean over all nodes), which is what removes the per-packet
+/// allocations of the old pipeline.
+pub struct Scratch {
+    /// |g| magnitude buffer for threshold selection (gradient-group size).
+    pub mags: Vec<f32>,
+    /// Selected indices of the last selection stage (ascending).
+    pub idx: Vec<u32>,
+    /// Values at `idx` (same order), or the last gathered value-vector.
+    pub vals: Vec<f32>,
+    /// Index-codec state: varint staging, payload output, DEFLATE state.
+    pub enc: EncScratch,
+}
+
+/// Encoder-side buffers of [`crate::compress::index_coding`]: the staged
+/// varint bytes, the final wire payload, and the vendored-`flate2`
+/// compressor state (hash chains, token buffer, code-gen tables).
+pub struct EncScratch {
+    pub(crate) varints: Vec<u8>,
+    pub(crate) payload: Vec<u8>,
+    pub(crate) deflate: flate2::DeflateScratch,
+}
+
+impl EncScratch {
+    pub fn new() -> EncScratch {
+        EncScratch {
+            varints: Vec::new(),
+            payload: Vec::new(),
+            deflate: flate2::DeflateScratch::new(),
+        }
+    }
+}
+
+impl Default for EncScratch {
+    fn default() -> EncScratch {
+        EncScratch::new()
+    }
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch {
+            mags: Vec::new(),
+            idx: Vec::new(),
+            vals: Vec::new(),
+            enc: EncScratch::new(),
+        }
+    }
+
+    /// One arena per simulated node (mirrors `NodeLedger::for_nodes`).
+    pub fn for_nodes(nodes: usize) -> Vec<Scratch> {
+        (0..nodes).map(|_| Scratch::new()).collect()
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Scratch {
+        Scratch::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{index_coding, topk};
+
+    #[test]
+    fn arenas_are_pure_scratch() {
+        // Using one arena across unrelated payloads must give the same
+        // results as fresh arenas: no state leaks between calls.
+        let mut rng = crate::util::rng::Rng::new(9);
+        let mut sc = Scratch::new();
+        for _ in 0..20 {
+            let n = 64 + rng.below(4000);
+            let g = rng.normal_vec(n, 1.0);
+            let k = 1 + rng.below(n / 2 + 1);
+            let want = topk::top_k(&g, k);
+            topk::top_k_into(&g, k, &mut sc.mags, &mut sc.idx, &mut sc.vals);
+            assert_eq!(sc.idx, want.indices);
+            assert_eq!(sc.vals, want.values);
+            let want_bytes = index_coding::encode(&sc.idx, n).unwrap();
+            let got = index_coding::encode_into(&sc.idx, n, &mut sc.enc).unwrap();
+            assert_eq!(got, &want_bytes[..]);
+        }
+    }
+
+    #[test]
+    fn for_nodes_builds_one_arena_each() {
+        assert_eq!(Scratch::for_nodes(5).len(), 5);
+        assert!(Scratch::for_nodes(0).is_empty());
+    }
+}

@@ -27,32 +27,46 @@ pub fn k_of(n: usize, fraction: f64) -> usize {
     ((n as f64 * fraction).ceil() as usize).clamp(1, n)
 }
 
-/// Magnitude threshold that keeps ~k elements of `g` (O(n)).
-/// Degenerate selections (`k == 0` or an empty `g`) yield `f32::INFINITY`
-/// so that no coordinate passes the threshold.
-pub fn threshold_for_k(g: &[f32], k: usize) -> f32 {
+/// Magnitude threshold that keeps ~k elements of `g` (O(n)), staging
+/// magnitudes in the caller's reusable buffer (DESIGN.md §6.11: the
+/// n-sized magnitude copy is the selection stage's only large
+/// allocation, so the hot path borrows it from a per-node arena).
+pub fn threshold_for_k_in(g: &[f32], k: usize, mags: &mut Vec<f32>) -> f32 {
     if k == 0 || g.is_empty() {
         return f32::INFINITY;
     }
     let k = k.min(g.len());
-    let mut mags: Vec<f32> = g.iter().map(|x| x.abs()).collect();
+    mags.clear();
+    mags.extend(g.iter().map(|x| x.abs()));
     let idx = g.len() - k;
-    let (_, thr, _) =
-        mags.select_nth_unstable_by(idx, f32::total_cmp);
+    let (_, thr, _) = mags.select_nth_unstable_by(idx, f32::total_cmp);
     *thr
 }
 
-/// Select the k largest-magnitude entries. Ties at the threshold are
-/// resolved by index order, and the result is always *exactly*
-/// `min(k, g.len())` entries (the paper's rate accounting assumes a fixed
-/// payload size); degenerate inputs return an empty selection.
-pub fn top_k(g: &[f32], k: usize) -> TopK {
+/// Magnitude threshold that keeps ~k elements of `g` (O(n)).
+/// Degenerate selections (`k == 0` or an empty `g`) yield `f32::INFINITY`
+/// so that no coordinate passes the threshold.
+pub fn threshold_for_k(g: &[f32], k: usize) -> f32 {
+    threshold_for_k_in(g, k, &mut Vec::new())
+}
+
+/// [`top_k`] into caller-owned buffers (cleared first); returns the
+/// threshold.  Selection semantics are identical to [`top_k`] — the
+/// proptests compare the two paths bit-for-bit.
+pub fn top_k_into(
+    g: &[f32],
+    k: usize,
+    mags: &mut Vec<f32>,
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+) -> f32 {
+    indices.clear();
+    values.clear();
     if k == 0 || g.is_empty() {
-        return TopK::default();
+        return f32::INFINITY;
     }
     let k = k.min(g.len());
-    let threshold = threshold_for_k(g, k);
-    let mut indices = Vec::with_capacity(k + 8);
+    let threshold = threshold_for_k_in(g, k, mags);
     for (i, &v) in g.iter().enumerate() {
         if v.abs() > threshold {
             indices.push(i as u32);
@@ -71,22 +85,50 @@ pub fn top_k(g: &[f32], k: usize) -> TopK {
     }
     indices.sort_unstable();
     indices.truncate(k);
-    let values = indices.iter().map(|&i| g[i as usize]).collect();
+    values.extend(indices.iter().map(|&i| g[i as usize]));
+    threshold
+}
+
+/// Select the k largest-magnitude entries. Ties at the threshold are
+/// resolved by index order, and the result is always *exactly*
+/// `min(k, g.len())` entries (the paper's rate accounting assumes a fixed
+/// payload size); degenerate inputs return an empty selection.
+pub fn top_k(g: &[f32], k: usize) -> TopK {
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    let threshold = top_k_into(g, k, &mut Vec::new(), &mut indices, &mut values);
     TopK { indices, values, threshold }
+}
+
+/// Gather values of `g` at `indices` into a caller-owned buffer
+/// (cleared first).
+pub fn gather_into(g: &[f32], indices: &[u32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(indices.iter().map(|&i| g[i as usize]));
 }
 
 /// Gather values of `g` at `indices` (ScaleCom's CLT-k: follow the leader's
 /// index set).
 pub fn gather(g: &[f32], indices: &[u32]) -> Vec<f32> {
-    indices.iter().map(|&i| g[i as usize]).collect()
+    let mut out = Vec::new();
+    gather_into(g, indices, &mut out);
+    out
+}
+
+/// Scatter (indices, values) into a caller-owned dense buffer, resized to
+/// `n` and zeroed first.
+pub fn scatter_into(out: &mut Vec<f32>, n: usize, indices: &[u32], values: &[f32]) {
+    out.clear();
+    out.resize(n, 0.0);
+    for (&i, &v) in indices.iter().zip(values) {
+        out[i as usize] = v;
+    }
 }
 
 /// Scatter (indices, values) into a dense zero vector of length n.
 pub fn scatter(n: usize, indices: &[u32], values: &[f32]) -> Vec<f32> {
-    let mut out = vec![0.0; n];
-    for (&i, &v) in indices.iter().zip(values) {
-        out[i as usize] = v;
-    }
+    let mut out = Vec::new();
+    scatter_into(&mut out, n, indices, values);
     out
 }
 

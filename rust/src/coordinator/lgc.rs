@@ -23,18 +23,20 @@
 //!   ring-allreduced; every node decodes the averaged latent. The AE
 //!   weights are broadcast once when phase 3 begins (rate counted).
 //!
-//! Execution model (DESIGN.md §6.5): node-local stages — EF accumulation,
-//! gather-at-support, innovation selection, per-node encode/decode — fan
-//! out over `coordinator::parallel` with per-node ledger shards; the
-//! leader broadcast, latent ring-allreduce, and every mean reduction are
-//! sequential barriers reducing in node order, so thread count never
-//! changes a result bit.
+//! Execution model (DESIGN.md §6.5, §6.11): each simulated node owns one
+//! [`NodeState`] — its EF memory, its value-vector and innovation
+//! buffers, and its scratch arena — so the node-local stages (EF
+//! accumulation, gather-at-support, innovation selection, per-node
+//! encode/decode) fan out over `coordinator::parallel` with zero
+//! steady-state allocation; the leader broadcast, latent ring-allreduce,
+//! and every mean reduction are sequential barriers reducing in node
+//! order, so thread count never changes a result bit.
 
 use anyhow::Result;
 
 use crate::baselines::{dense_mean_accounted, ExchangeCtx, MidStrategy};
 use crate::compress::autoencoder::{rms, AeCompressor, Pattern};
-use crate::compress::{index_coding, topk, Correction, FeedbackMemory};
+use crate::compress::{index_coding, topk, Correction, FeedbackMemory, Scratch};
 use crate::coordinator::parallel;
 use crate::coordinator::ring;
 use crate::coordinator::scheduler::Phase;
@@ -82,22 +84,46 @@ fn clip_to_gradient_scale(rec: &mut [f32], grads: &[Vec<f32>]) {
     }
 }
 
+/// All per-node state of an LGC instance, bundled so one worker thread
+/// owns the whole row (DESIGN.md §6.5/§6.11): the EF memory, the
+/// value-vector gathered at the shared support, the dense innovation
+/// vector, and the scratch arena every node-local stage borrows from.
+struct NodeState {
+    fb: FeedbackMemory,
+    /// Value-vector gathered at the shared support (mu-length).
+    vv: Vec<f32>,
+    /// Dense innovation vector (mu-length; PS pattern).
+    inn: Vec<f32>,
+    scratch: Scratch,
+}
+
 /// Innovation component of a value-vector: top `frac` of |values| kept at
-/// their positions, zeros elsewhere (Algorithm 1's mask_inv).
-/// Returns (dense mu-vector, wire bytes).  Free function (not a method)
-/// so the parallel per-node closures can call it while the feedback
-/// memories are mutably split across workers.
-fn innovation(values: &[f32], frac: f64) -> Result<(Vec<f32>, usize)> {
+/// their positions, zeros elsewhere (Algorithm 1's mask_inv), written
+/// into the node's `dense` buffer.  Returns the wire bytes (values +
+/// coded indices).  Free function (not a method) so the parallel
+/// per-node closures can call it while node rows are mutably split
+/// across workers.
+fn innovation_into(
+    values: &[f32],
+    frac: f64,
+    dense: &mut Vec<f32>,
+    sc: &mut Scratch,
+) -> Result<usize> {
     let k_inn = topk::k_of(values.len(), frac);
-    let sel = topk::top_k(values, k_inn);
-    let dense = topk::scatter(values.len(), &sel.indices, &sel.values);
-    let bytes = sel.values.len() * 4 + index_coding::encode(&sel.indices, values.len())?.len();
-    Ok((dense, bytes))
+    topk::top_k_into(values, k_inn, &mut sc.mags, &mut sc.idx, &mut sc.vals);
+    topk::scatter_into(dense, values.len(), &sc.idx, &sc.vals);
+    let coded = index_coding::encode_into(&sc.idx, values.len(), &mut sc.enc)?.len();
+    Ok(sc.vals.len() * 4 + coded)
 }
 
 pub struct LgcCommon {
-    fbs: Vec<FeedbackMemory>,
+    nodes: Vec<NodeState>,
     pub ae: AeCompressor,
+    /// The shared support of the current iteration, in the leader's
+    /// signed-descending-value order.  Persistent buffer: refilled by
+    /// [`LgcCommon::leader_support_inner`] each iteration, borrowed by
+    /// every node-local stage after it.
+    support: Vec<u32>,
     mu: usize,
     innovation_frac: f64,
     ae_lr: f32,
@@ -128,10 +154,16 @@ fn ef_on_rec() -> bool {
 impl LgcCommon {
     fn new(nodes: usize, n: usize, mu: usize, p: &LgcParams, ae: AeCompressor) -> Self {
         LgcCommon {
-            fbs: (0..nodes)
-                .map(|_| FeedbackMemory::new(n, Correction::Momentum, p.momentum))
+            nodes: (0..nodes)
+                .map(|_| NodeState {
+                    fb: FeedbackMemory::new(n, Correction::Momentum, p.momentum),
+                    vv: Vec::new(),
+                    inn: Vec::new(),
+                    scratch: Scratch::new(),
+                })
                 .collect(),
             ae,
+            support: Vec::new(),
             mu,
             innovation_frac: p.innovation_frac,
             ae_lr: p.ae_lr,
@@ -176,31 +208,30 @@ impl LgcCommon {
         let n = grads[0].len();
         let nodes = grads.len();
         let leader = if ps { 0 } else { ctx.iter % nodes };
-        let indices = self.leader_support_inner(ctx, grads, leader)?;
+        self.leader_support_inner(ctx, grads, leader)?;
         // Node-local stage: gather each node's EF memory at the shared
-        // support, byte-accounting per shard.  In the RAR pattern the
-        // per-iteration trainer node additionally gathers every other
-        // node's value-vector (paper Fig. 7) — those uplinks ride along.
+        // support into the node's value-vector buffer, byte-accounting
+        // per shard.  In the RAR pattern the per-iteration trainer node
+        // additionally gathers every other node's value-vector (paper
+        // Fig. 7) — those uplinks ride along.
         let trainer = ctx.iter % nodes;
         let mu = self.mu;
-        let idx = &indices;
-        let value_vectors = parallel::par_zip_mut(
+        parallel::par_zip_mut(
             ctx.threads,
-            &mut self.fbs,
+            &mut self.nodes,
             &mut *ctx.shards,
-            |node, fb, shard| {
-                let vals = fb.take_at(idx);
-                shard.record(Kind::Values, vals.len() * 4);
+            |node, st, shard| {
+                st.fb.take_at_into(&self.support, &mut st.vv);
+                shard.record(Kind::Values, st.vv.len() * 4);
                 if !ps && node != trainer {
                     shard.record(Kind::Values, mu * 4);
                 }
-                vals
             },
         );
         // Barrier: exact-value mean in node order.
         let mut mean = vec![0.0f32; n];
-        for vals in &value_vectors {
-            topk::scatter_add(&mut mean, idx, vals);
+        for st in &self.nodes {
+            topk::scatter_add(&mut mean, &self.support, &st.vv);
         }
         mean.iter_mut().for_each(|m| *m /= nodes as f32);
 
@@ -211,16 +242,22 @@ impl LgcCommon {
         // within our scaled phase-2 window.
         if ps {
             let frac = self.innovation_frac;
-            let innovations: Vec<Vec<f32>> = value_vectors
-                .iter()
-                .map(|v| innovation(v, frac).map(|(d, _)| d))
-                .collect::<Result<_>>()?;
+            parallel::collect_node_results(parallel::par_map_mut(
+                ctx.threads,
+                &mut self.nodes,
+                |_node, st| -> Result<()> {
+                    innovation_into(&st.vv, frac, &mut st.inn, &mut st.scratch)?;
+                    Ok(())
+                },
+            ))?;
+            let rows: Vec<&[f32]> = self.nodes.iter().map(|st| st.vv.as_slice()).collect();
+            let inns: Vec<&[f32]> = self.nodes.iter().map(|st| st.inn.as_slice()).collect();
             for _ in 0..self.ae_inner_steps {
                 let ridx = ctx.rng.below(nodes);
                 self.ae.train_step(
                     ctx.engine,
-                    &value_vectors,
-                    Some(&innovations),
+                    &rows,
+                    Some(&inns),
                     ridx,
                     self.ae_lr,
                     1.0,
@@ -228,15 +265,16 @@ impl LgcCommon {
                 )?;
             }
         } else {
+            let rows: Vec<&[f32]> = self.nodes.iter().map(|st| st.vv.as_slice()).collect();
             for _ in 0..self.ae_inner_steps {
-                self.ae
-                    .train_step(ctx.engine, &value_vectors, None, 0, self.ae_lr, 1.0, 0.0)?;
+                self.ae.train_step(ctx.engine, &rows, None, 0, self.ae_lr, 1.0, 0.0)?;
             }
         }
         Ok(mean)
     }
 
-    /// Leader-driven shared support for phase 3.
+    /// Leader-driven shared support for phase 3, refilled into
+    /// `self.support`.
     ///
     /// PS uses a fixed leader (the worker hosting the trained encoder,
     /// §V-B1: "the weights of the learned encoder are transferred to one
@@ -251,21 +289,25 @@ impl LgcCommon {
     /// byte-counted as such.
     ///
     /// EF accumulation (node-local) fans out; the leader's selection and
-    /// its broadcast are the barrier and land on the global ledger.
+    /// its broadcast are the barrier and land on the global ledger.  The
+    /// selection's magnitude pass and the payload encode borrow the
+    /// leader's arena (§6.11).
     fn leader_support_inner(
         &mut self,
         ctx: &mut ExchangeCtx,
         grads: &[Vec<f32>],
         leader: usize,
-    ) -> Result<Vec<u32>> {
-        parallel::par_map_mut(ctx.threads, &mut self.fbs, |node, fb| {
-            fb.accumulate(&grads[node]);
+    ) -> Result<()> {
+        parallel::par_map_mut(ctx.threads, &mut self.nodes, |node, st| {
+            st.fb.accumulate(&grads[node]);
         });
-        let mem = self.fbs[leader].memory();
-        let sel = topk::top_k(mem, self.mu);
-        debug_assert_eq!(sel.indices.len(), self.mu);
-        let mut ordered = sel.indices;
-        ordered.sort_by(|&a, &b| {
+        let mu = self.mu;
+        let support = &mut self.support;
+        let st = &mut self.nodes[leader];
+        topk::top_k_into(st.fb.memory(), mu, &mut st.scratch.mags, support, &mut st.scratch.vals);
+        debug_assert_eq!(support.len(), mu);
+        let mem = st.fb.memory();
+        support.sort_by(|&a, &b| {
             mem[b as usize]
                 .partial_cmp(&mem[a as usize])
                 .unwrap_or(std::cmp::Ordering::Equal)
@@ -273,9 +315,9 @@ impl LgcCommon {
         ctx.ledger.record(
             leader,
             Kind::Indices,
-            index_coding::encode_ordered(&ordered)?.len(),
+            index_coding::encode_ordered_into(support, &mut st.scratch.enc)?.len(),
         );
-        Ok(ordered)
+        Ok(())
     }
 }
 
@@ -323,28 +365,28 @@ impl MidStrategy for LgcPs {
                 let nodes = grads.len();
                 // Fixed leader: worker 0 hosts the trained encoder.
                 let leader = 0usize;
-                let indices = self.c.leader_support_inner(ctx, grads, leader)?;
+                self.c.leader_support_inner(ctx, grads, leader)?;
 
                 // Node-local stage: gather at the shared support, select
-                // the innovation, byte-account (innovation + 4 B scale).
+                // the innovation into the node's buffers, byte-account
+                // (innovation + 4 B scale).  Returns each node's RMS
+                // scale s_k.
                 let frac = self.c.innovation_frac;
-                let idx = &indices;
-                let per_node = parallel::collect_node_results(parallel::par_zip_mut(
+                let s_ks = parallel::collect_node_results(parallel::par_zip_mut(
                     ctx.threads,
-                    &mut self.c.fbs,
+                    &mut self.c.nodes,
                     &mut *ctx.shards,
-                    |_node, fb, shard| -> Result<(Vec<f32>, Vec<f32>, f32)> {
-                        let vals = fb.take_at(idx);
-                        let (innov, bytes) = innovation(&vals, frac)?;
+                    |_node, st, shard| -> Result<f32> {
+                        st.fb.take_at_into(&self.c.support, &mut st.vv);
+                        let bytes = innovation_into(&st.vv, frac, &mut st.inn, &mut st.scratch)?;
                         shard.record(Kind::Values, bytes + 4);
-                        let s_k = rms(&vals);
-                        Ok((vals, innov, s_k))
+                        Ok(rms(&st.vv))
                     },
                 ))?;
 
                 // Barrier: leader uploads the compressed common
                 // representation (latent + RMS scale).
-                let (latent, _s0) = self.c.ae.encode(ctx.engine, &per_node[leader].0)?;
+                let (latent, _s0) = self.c.ae.encode(ctx.engine, &self.c.nodes[leader].vv)?;
                 ctx.ledger.record(leader, Kind::Latent, self.c.ae.latent_bytes());
 
                 // Master decodes per node with decoder D_c^k and the
@@ -352,12 +394,12 @@ impl MidStrategy for LgcPs {
                 // average reduces in node order.
                 let ae = &self.c.ae;
                 let engine = ctx.engine;
+                let node_rows = &self.c.nodes;
                 let recs = parallel::collect_node_results(parallel::par_map_indexed(
                     ctx.threads,
                     nodes,
                     |node| -> Result<Vec<f32>> {
-                        let (_, innov, s_k) = &per_node[node];
-                        ae.decode_ps(engine, node, &latent, innov, *s_k)
+                        ae.decode_ps(engine, node, &latent, &node_rows[node].inn, s_ks[node])
                     },
                 ))?;
                 let mut mean_vals = vec![0.0f32; self.c.mu];
@@ -372,20 +414,16 @@ impl MidStrategy for LgcPs {
                 // (see ef_on_rec; default off, per Algorithm 1).
                 if ef_on_rec() {
                     let mean_ref = &mean_vals;
-                    parallel::par_map_mut(ctx.threads, &mut self.c.fbs, |node, fb| {
-                        let e: Vec<f32> = per_node[node]
-                            .0
-                            .iter()
-                            .zip(mean_ref)
-                            .map(|(v, r)| v - r)
-                            .collect();
-                        fb.add_at(idx, &e);
+                    parallel::par_map_mut(ctx.threads, &mut self.c.nodes, |_node, st| {
+                        let e: Vec<f32> =
+                            st.vv.iter().zip(mean_ref).map(|(v, r)| v - r).collect();
+                        st.fb.add_at(&self.c.support, &e);
                     });
                 }
                 if std::env::var("LGC_DEBUG").is_ok() {
                     let mut true_mean = vec![0.0f32; self.c.mu];
-                    for (vals, _, _) in &per_node {
-                        for (t, x) in true_mean.iter_mut().zip(vals) {
+                    for st in &self.c.nodes {
+                        for (t, x) in true_mean.iter_mut().zip(&st.vv) {
                             *t += x / nodes as f32;
                         }
                     }
@@ -394,7 +432,7 @@ impl MidStrategy for LgcPs {
                     let nrm: f32 = true_mean.iter().map(|x| x * x).sum::<f32>().sqrt();
                     eprintln!("DBG ps rec rel_err={:.3} ||true||={:.4}", err / nrm.max(1e-9), nrm);
                 }
-                Ok(topk::scatter(n, &indices, &mean_vals))
+                Ok(topk::scatter(n, &self.c.support, &mean_vals))
             }
         }
     }
@@ -410,6 +448,9 @@ impl MidStrategy for LgcPs {
 
 pub struct LgcRar {
     c: LgcCommon,
+    /// Reused per-node working copies for the dense-phase ring allreduce
+    /// (replaces the per-iteration `grads.to_vec()`; §6.11).
+    ring_work: Vec<Vec<f32>>,
     /// AE weights are broadcast once when phase 3 begins (§V-B2).
     weights_broadcast: bool,
 }
@@ -425,6 +466,7 @@ impl LgcRar {
         let ae = AeCompressor::new(engine, mu, nodes, Pattern::RingAllreduce, p.seed)?;
         Ok(LgcRar {
             c: LgcCommon::new(nodes, n, mu, &p, ae),
+            ring_work: Vec::new(),
             weights_broadcast: false,
         })
     }
@@ -440,11 +482,21 @@ impl MidStrategy for LgcRar {
     }
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
+        // The dense-phase working copies are only live during warmup;
+        // release the K gradient-sized buffers once the phase moves on.
+        if ctx.phase != Phase::Dense && !self.ring_work.is_empty() {
+            self.ring_work = Vec::new();
+        }
         match ctx.phase {
             Phase::Dense => {
-                // Dense ring-allreduce of raw gradients.
-                let mut work = grads.to_vec();
-                Ok(ring::ring_allreduce_mean(&mut work, ctx.ledger, Kind::Dense))
+                // Dense ring-allreduce of raw gradients, staged in the
+                // persistent working copies.
+                self.ring_work.resize(grads.len(), Vec::new());
+                for (w, g) in self.ring_work.iter_mut().zip(grads) {
+                    w.clear();
+                    w.extend_from_slice(g);
+                }
+                Ok(ring::ring_allreduce_mean(&mut self.ring_work, ctx.ledger, Kind::Dense))
             }
             Phase::TopK => self.c.topk_phase(ctx, grads, false),
             Phase::Compressed if !self.c.check_ae_ready() => {
@@ -463,29 +515,26 @@ impl MidStrategy for LgcRar {
                     );
                     self.weights_broadcast = true;
                 }
-                let indices = self.c.leader_support_inner(ctx, grads, ctx.iter % nodes)?;
-                // Node-local stage: gather at the support + encode each
-                // node's value-vector on its worker.  (The 4-byte scale
-                // rides inside latent_bytes; the ring traffic below is
-                // measured per transmission.)
-                let idx = &indices;
+                self.c.leader_support_inner(ctx, grads, ctx.iter % nodes)?;
+                // Node-local stage: gather at the support into the node's
+                // value-vector buffer + encode each node's value-vector on
+                // its worker.  (The 4-byte scale rides inside
+                // latent_bytes; the ring traffic below is measured per
+                // transmission.)
                 let ae = &self.c.ae;
                 let engine = ctx.engine;
                 let encoded = parallel::collect_node_results(parallel::par_zip_mut(
                     ctx.threads,
-                    &mut self.c.fbs,
+                    &mut self.c.nodes,
                     &mut *ctx.shards,
-                    |_node, fb, _shard| -> Result<(Vec<f32>, Vec<f32>, f32)> {
-                        let vals = fb.take_at(idx);
-                        let (lat, s) = ae.encode(engine, &vals)?;
-                        Ok((vals, lat, s))
+                    |_node, st, _shard| -> Result<(Vec<f32>, f32)> {
+                        st.fb.take_at_into(&self.c.support, &mut st.vv);
+                        ae.encode(engine, &st.vv)
                     },
                 ))?;
-                let mut value_vectors = Vec::with_capacity(nodes);
                 let mut latents = Vec::with_capacity(nodes);
                 let mut scales = Vec::with_capacity(nodes);
-                for (vals, lat, s) in encoded {
-                    value_vectors.push(vals);
+                for (lat, s) in encoded {
                     latents.push(lat);
                     scales.push(s);
                 }
@@ -501,27 +550,23 @@ impl MidStrategy for LgcRar {
                 // (see ef_on_rec; default off, per Algorithm 2).
                 if ef_on_rec() {
                     let rec_ref = &rec;
-                    let vv = &value_vectors;
-                    parallel::par_map_mut(ctx.threads, &mut self.c.fbs, |node, fb| {
-                        let e: Vec<f32> = vv[node]
-                            .iter()
-                            .zip(rec_ref)
-                            .map(|(v, r)| v - r)
-                            .collect();
-                        fb.add_at(idx, &e);
+                    parallel::par_map_mut(ctx.threads, &mut self.c.nodes, |_node, st| {
+                        let e: Vec<f32> =
+                            st.vv.iter().zip(rec_ref).map(|(v, r)| v - r).collect();
+                        st.fb.add_at(&self.c.support, &e);
                     });
                 }
                 if std::env::var("LGC_DEBUG").is_ok() {
                     let nrm = |v: &[f32]| v.iter().map(|x| x * x).sum::<f32>().sqrt();
                     let vbar: f32 =
-                        value_vectors.iter().map(|v| nrm(v)).sum::<f32>() / nodes as f32;
+                        self.c.nodes.iter().map(|st| nrm(&st.vv)).sum::<f32>() / nodes as f32;
                     eprintln!(
                         "DBG rar it={} ||rec||={:.3} ||v||~{:.3} scale_avg={:.4} mem0={:.3}",
                         ctx.iter, nrm(&rec), vbar, scale_avg,
-                        nrm(self.c.fbs[0].memory())
+                        nrm(self.c.nodes[0].fb.memory())
                     );
                 }
-                Ok(topk::scatter(n, &indices, &rec))
+                Ok(topk::scatter(n, &self.c.support, &rec))
             }
         }
     }

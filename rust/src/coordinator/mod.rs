@@ -33,7 +33,7 @@ use crate::baselines::{
     dense_mean_accounted, Baseline, Dgc, ExchangeCtx, HardThreshold, MidStrategy, Qsgd,
     ScaleCom, SparseGd,
 };
-use crate::compress::{index_coding, topk, Correction, FeedbackMemory};
+use crate::compress::{index_coding, topk, Correction, FeedbackMemory, Scratch};
 use crate::config::{Method, TrainConfig};
 use crate::data::{self, Dataset};
 use crate::metrics::{Kind, Ledger, NodeLedger};
@@ -167,6 +167,11 @@ pub struct Trainer<'e> {
     strategy: Box<dyn MidStrategy>,
     /// Per-node EF memories for the last-layer group (sparse methods).
     last_fbs: Vec<FeedbackMemory>,
+    /// Per-node scratch arenas (DESIGN.md §6.11), created once next to
+    /// the ledger shards and lent to every exchange stage; buffers reach
+    /// their high-water mark in the first iterations and the steady state
+    /// allocates nothing on the encode path.
+    arenas: Vec<Scratch>,
     rng: Rng,
 }
 
@@ -193,8 +198,9 @@ impl<'e> Trainer<'e> {
         let last_fbs = (0..cfg.nodes)
             .map(|_| FeedbackMemory::new(n_last, last_correction, cfg.momentum))
             .collect();
+        let arenas = Scratch::for_nodes(cfg.nodes);
         let rng = Rng::new(cfg.seed ^ 0x7124);
-        Ok(Trainer { engine, cfg, model, dataset, strategy, last_fbs, rng })
+        Ok(Trainer { engine, cfg, model, dataset, strategy, last_fbs, arenas, rng })
     }
 
     /// Last-layer exchange: dense for Baseline/QSGD (and everyone's dense
@@ -215,21 +221,23 @@ impl<'e> Trainer<'e> {
             return Ok(dense_mean_accounted(grads, shards));
         }
         let k_sel = topk::k_of(n, self.cfg.alpha);
-        let packets = parallel::collect_node_results(parallel::par_zip_mut(
+        parallel::collect_node_results(parallel::par_zip3_mut(
             self.cfg.threads,
             &mut self.last_fbs,
             shards,
-            |node, fb, shard| -> Result<(Vec<u32>, Vec<f32>)> {
+            &mut self.arenas,
+            |node, fb, shard, sc| -> Result<()> {
                 fb.accumulate(&grads[node]);
-                let sel = fb.select_and_clear(k_sel);
-                shard.record(Kind::Values, sel.values.len() * 4);
-                shard.record(Kind::Indices, index_coding::encode(&sel.indices, n)?.len());
-                Ok((sel.indices, sel.values))
+                fb.select_and_clear_into(k_sel, sc);
+                shard.record(Kind::Values, sc.vals.len() * 4);
+                let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
+                shard.record(Kind::Indices, coded);
+                Ok(())
             },
         ))?;
         let mut mean = vec![0.0f32; n];
-        for (indices, values) in &packets {
-            topk::scatter_add(&mut mean, indices, values);
+        for sc in &self.arenas {
+            topk::scatter_add(&mut mean, &sc.idx, &sc.vals);
         }
         mean.iter_mut().for_each(|m| *m /= nodes as f32);
         Ok(mean)
@@ -312,6 +320,7 @@ impl<'e> Trainer<'e> {
                     fp16: self.cfg.fp16_values,
                     rng: &mut self.rng,
                     threads,
+                    scratches: &mut self.arenas,
                 };
                 self.strategy.exchange(&mut ctx, &mid_g)?
             };

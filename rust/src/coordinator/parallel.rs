@@ -66,41 +66,18 @@ where
 /// Run `f(node, &mut a[node])` for every element of `a` across `threads`
 /// workers; results in node order.  Each worker owns a disjoint chunk of
 /// `a`, so the closure is lock-free on the per-node state.
+///
+/// Delegates to [`par_zip3_mut`] with zero-sized dummy lanes (a `Vec<()>`
+/// never allocates), so the chunk/split/spawn machinery exists once.
 pub fn par_map_mut<A, R, F>(threads: usize, a: &mut [A], f: F) -> Vec<R>
 where
     A: Send,
     R: Send,
     F: Fn(usize, &mut A) -> R + Sync,
 {
-    let tasks = a.len();
-    let t = effective_threads(threads, tasks);
-    if t <= 1 || tasks <= 1 {
-        return a.iter_mut().enumerate().map(|(i, x)| f(i, x)).collect();
-    }
-    let mut out: Vec<Option<R>> = Vec::with_capacity(tasks);
-    out.resize_with(tasks, || None);
-    let chunk = tasks.div_ceil(t);
-    std::thread::scope(|scope| {
-        let f = &f;
-        let mut items: &mut [A] = a;
-        let mut slots: &mut [Option<R>] = &mut out;
-        let mut base = 0usize;
-        while !items.is_empty() {
-            let len = chunk.min(items.len());
-            let (ihead, itail) = std::mem::take(&mut items).split_at_mut(len);
-            let (shead, stail) = std::mem::take(&mut slots).split_at_mut(len);
-            items = itail;
-            slots = stail;
-            let start = base;
-            base += len;
-            scope.spawn(move || {
-                for (j, (x, slot)) in ihead.iter_mut().zip(shead.iter_mut()).enumerate() {
-                    *slot = Some(f(start + j, x));
-                }
-            });
-        }
-    });
-    out.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+    let mut dummy_b = vec![(); a.len()];
+    let mut dummy_c = vec![(); a.len()];
+    par_zip3_mut(threads, a, &mut dummy_b, &mut dummy_c, |i, x, _, _| f(i, x))
 }
 
 /// Run `f(node, &mut a[node], &mut b[node])` across `threads` workers;
@@ -114,15 +91,38 @@ where
     F: Fn(usize, &mut A, &mut B) -> R + Sync,
 {
     assert_eq!(a.len(), b.len(), "par_zip_mut: slice lengths differ");
+    let mut dummy_c = vec![(); a.len()];
+    par_zip3_mut(threads, a, b, &mut dummy_c, |i, x, y, _| f(i, x, y))
+}
+
+/// Run `f(node, &mut a[node], &mut b[node], &mut c[node])` across
+/// `threads` workers; results in node order.  All three slices must be
+/// the same length — the typical triple is (per-node feedback memory,
+/// per-node ledger shard, per-node scratch arena; DESIGN.md §6.11).
+pub fn par_zip3_mut<A, B, C, R, F>(
+    threads: usize,
+    a: &mut [A],
+    b: &mut [B],
+    c: &mut [C],
+    f: F,
+) -> Vec<R>
+where
+    A: Send,
+    B: Send,
+    C: Send,
+    R: Send,
+    F: Fn(usize, &mut A, &mut B, &mut C) -> R + Sync,
+{
+    assert_eq!(a.len(), b.len(), "par_zip3_mut: slice lengths differ");
+    assert_eq!(a.len(), c.len(), "par_zip3_mut: slice lengths differ");
     let tasks = a.len();
     let t = effective_threads(threads, tasks);
     if t <= 1 || tasks <= 1 {
-        return a
-            .iter_mut()
-            .zip(b.iter_mut())
-            .enumerate()
-            .map(|(i, (x, y))| f(i, x, y))
-            .collect();
+        let mut out = Vec::with_capacity(tasks);
+        for (i, ((x, y), z)) in a.iter_mut().zip(b.iter_mut()).zip(c.iter_mut()).enumerate() {
+            out.push(f(i, x, y, z));
+        }
+        return out;
     }
     let mut out: Vec<Option<R>> = Vec::with_capacity(tasks);
     out.resize_with(tasks, || None);
@@ -131,23 +131,30 @@ where
         let f = &f;
         let mut a_rest: &mut [A] = a;
         let mut b_rest: &mut [B] = b;
+        let mut c_rest: &mut [C] = c;
         let mut slots: &mut [Option<R>] = &mut out;
         let mut base = 0usize;
         while !a_rest.is_empty() {
             let len = chunk.min(a_rest.len());
             let (ahead, atail) = std::mem::take(&mut a_rest).split_at_mut(len);
             let (bhead, btail) = std::mem::take(&mut b_rest).split_at_mut(len);
+            let (chead, ctail) = std::mem::take(&mut c_rest).split_at_mut(len);
             let (shead, stail) = std::mem::take(&mut slots).split_at_mut(len);
             a_rest = atail;
             b_rest = btail;
+            c_rest = ctail;
             slots = stail;
             let start = base;
             base += len;
             scope.spawn(move || {
-                for (j, ((x, y), slot)) in
-                    ahead.iter_mut().zip(bhead.iter_mut()).zip(shead.iter_mut()).enumerate()
+                for (j, (((x, y), z), slot)) in ahead
+                    .iter_mut()
+                    .zip(bhead.iter_mut())
+                    .zip(chead.iter_mut())
+                    .zip(shead.iter_mut())
+                    .enumerate()
                 {
-                    *slot = Some(f(start + j, x, y));
+                    *slot = Some(f(start + j, x, y, z));
                 }
             });
         }
@@ -200,6 +207,24 @@ mod tests {
             });
             assert_eq!(r, (0..11).map(|i| i * 2).collect::<Vec<_>>());
             assert_eq!(b, (0..11).map(|i| i * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn zip3_mut_pairs_by_index() {
+        for threads in [1, 3, 8] {
+            let mut a: Vec<usize> = (0..13).collect();
+            let mut b = vec![0usize; 13];
+            let mut c = vec![100usize; 13];
+            let r = par_zip3_mut(threads, &mut a, &mut b, &mut c, |i, x, y, z| {
+                assert_eq!(*x, i);
+                *y = *x * 3;
+                *z += i;
+                *y
+            });
+            assert_eq!(r, (0..13).map(|i| i * 3).collect::<Vec<_>>());
+            assert_eq!(b, (0..13).map(|i| i * 3).collect::<Vec<_>>());
+            assert_eq!(c, (0..13).map(|i| 100 + i).collect::<Vec<_>>());
         }
     }
 

@@ -421,6 +421,188 @@ fn prop_sharded_ledger_thread_invariance() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// DEFLATE rewrite (LZ77 + dynamic Huffman): differential + fuzz properties
+// ---------------------------------------------------------------------------
+
+/// Payload generator spanning the encoder's regimes: incompressible,
+/// tiny-alphabet, high-bit-skewed (varint-continuation-like), and
+/// repeated patterns (forces LZ77 matches).
+fn random_payload(rng: &mut Rng) -> Vec<u8> {
+    let n = rng.below(4000);
+    match rng.below(4) {
+        0 => (0..n).map(|_| rng.below(256) as u8).collect(),
+        1 => (0..n).map(|_| rng.below(8) as u8).collect(),
+        2 => (0..n).map(|_| 0x80 | rng.below(64) as u8).collect(),
+        _ => {
+            let pat: Vec<u8> =
+                (0..1 + rng.below(37)).map(|_| rng.below(256) as u8).collect();
+            (0..n).map(|i| pat[i % pat.len()]).collect()
+        }
+    }
+}
+
+#[test]
+fn prop_deflate_roundtrips_all_levels() {
+    for case in 0..120u64 {
+        let mut rng = Rng::new(0xDEF1 + case);
+        let data = random_payload(&mut rng);
+        for level in [0u32, 1, 6, 9] {
+            let packed = flate2::compress(&data, flate2::Compression::new(level));
+            assert_eq!(
+                flate2::decompress(&packed).unwrap(),
+                data,
+                "case {case} level {level}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_both_decoders_agree_on_fixed_and_stored_streams() {
+    // Differential over the decoder pair: whenever a stream contains only
+    // stored/fixed blocks — everything the legacy decoder understands —
+    // the legacy fixed-only inflate and the new dynamic-capable inflate
+    // must produce bit-identical output.
+    for case in 0..150u64 {
+        let mut rng = Rng::new(0xD1F + case);
+        let data = random_payload(&mut rng);
+        // Level 0 output is stored-only by construction.
+        let stored = flate2::compress(&data, flate2::Compression::new(0));
+        let a = flate2::legacy::inflate_fixed_only(&stored).unwrap();
+        let b = flate2::decompress(&stored).unwrap();
+        assert_eq!(a, b, "case {case}");
+        assert_eq!(a, data, "case {case}");
+        // Default level: the new decoder always inflates its own output;
+        // the legacy decoder must agree whenever the cost race happened
+        // to avoid dynamic blocks (it errors on them otherwise).
+        let packed = flate2::compress(&data, flate2::Compression::default());
+        let b = flate2::decompress(&packed).unwrap();
+        assert_eq!(b, data, "case {case}");
+        if let Ok(a) = flate2::legacy::inflate_fixed_only(&packed) {
+            assert_eq!(a, b, "case {case}: decoders disagree on a fixed/stored stream");
+        }
+        // The legacy *encoder*'s streams decode identically under both.
+        let legacy_packed = flate2::legacy::deflate_fixed_only(&data);
+        assert_eq!(flate2::decompress(&legacy_packed).unwrap(), data, "case {case}");
+        assert_eq!(
+            flate2::legacy::inflate_fixed_only(&legacy_packed).unwrap(),
+            data,
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn prop_index_payloads_never_grow_vs_fixed_baseline() {
+    // The new encoder considers fixed and stored candidates per block, so
+    // it can never lose to the fixed-only baseline; decode must agree.
+    for case in 0..40u64 {
+        let mut rng = Rng::new(0x1DEA + case);
+        let n = 1000 + rng.below(500_000);
+        let k = 1 + rng.below((n / 50).max(1));
+        let idx = random_indices(&mut rng, n, k);
+        let new = index_coding::encode(&idx, n).unwrap();
+        let old = index_coding::encode_fixed_baseline(&idx, n).unwrap();
+        assert!(
+            new.len() <= old.len(),
+            "case {case} n={n} k={k}: {} > {}",
+            new.len(),
+            old.len()
+        );
+        assert_eq!(index_coding::decode(&new, n).unwrap(), idx, "case {case}");
+        assert_eq!(index_coding::decode(&old, n).unwrap(), idx, "case {case}");
+    }
+}
+
+#[test]
+fn prop_inflate_never_panics_on_arbitrary_bytes() {
+    // Decode-total fuzz: arbitrary byte strings must yield Ok or Err,
+    // never a panic, from both inflate paths.
+    for case in 0..CASES * 10 {
+        let mut rng = Rng::new(0xF422 + case);
+        let n = rng.below(300);
+        let blob: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let _ = flate2::decompress(&blob);
+        let _ = flate2::legacy::inflate_fixed_only(&blob);
+    }
+    // Mutated valid streams probe deeper decoder states than pure noise.
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xF423 + case);
+        let data = random_payload(&mut rng);
+        let mut packed = flate2::compress(&data, flate2::Compression::default());
+        for _ in 0..1 + rng.below(5) {
+            if packed.is_empty() {
+                break;
+            }
+            let pos = rng.below(packed.len());
+            packed[pos] ^= 1 << rng.below(8);
+        }
+        let _ = flate2::decompress(&packed);
+    }
+}
+
+#[test]
+fn prop_index_decode_never_panics_on_arbitrary_bytes() {
+    // Truncated bitmaps, corrupt counts, non-canonical varints, garbage
+    // DEFLATE payloads: decode/decode_ordered must error, not panic.
+    for case in 0..CASES * 5 {
+        let mut rng = Rng::new(0x1DF + case);
+        let n = 1 + rng.below(100_000);
+        let len = rng.below(200);
+        let mut blob: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        // Half the time force a valid mode byte to reach the deep paths.
+        if !blob.is_empty() && rng.below(2) == 0 {
+            blob[0] = rng.below(2) as u8;
+        }
+        let _ = index_coding::decode(&blob, n);
+        let _ = index_coding::decode_ordered(&blob);
+    }
+    // Truncations of *valid* payloads (both modes).
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x1E0 + case);
+        let n = 64 + rng.below(10_000);
+        let dense = rng.below(2) == 0;
+        let k = if dense { n / 2 } else { 1 + n / 100 };
+        let idx = random_indices(&mut rng, n, k);
+        let bytes = index_coding::encode(&idx, n).unwrap();
+        let cut = rng.below(bytes.len().max(1));
+        let _ = index_coding::decode(&bytes[..cut], n);
+        let ordered = index_coding::encode_ordered(&idx).unwrap();
+        let cut = rng.below(ordered.len().max(1));
+        let _ = index_coding::decode_ordered(&ordered[..cut]);
+    }
+}
+
+#[test]
+fn prop_scratch_encode_paths_match_allocating_paths() {
+    // The zero-allocation arena entry points must be byte-identical to
+    // the allocating wrappers for any input (arenas are wall-clock only,
+    // never semantics — DESIGN.md §6.11).
+    use lgc::compress::Scratch;
+    let mut sc = Scratch::new();
+    for case in 0..60u64 {
+        let mut rng = Rng::new(0x5C1 + case);
+        let n = 16 + rng.below(200_000);
+        let k = 1 + rng.below((n / 4).max(1));
+        let idx = random_indices(&mut rng, n, k);
+        let a = index_coding::encode(&idx, n).unwrap();
+        let b = index_coding::encode_into(&idx, n, &mut sc.enc).unwrap();
+        assert_eq!(a, b, "case {case}");
+        let c = index_coding::encode_ordered(&idx).unwrap();
+        let d = index_coding::encode_ordered_into(&idx, &mut sc.enc).unwrap();
+        assert_eq!(c, d, "case {case}");
+        // Selection through the arena matches the allocating top-k.
+        let g = rng.normal_vec(1 + rng.below(3000), 1.0);
+        let kk = 1 + rng.below(g.len());
+        let want = topk::top_k(&g, kk);
+        let thr = topk::top_k_into(&g, kk, &mut sc.mags, &mut sc.idx, &mut sc.vals);
+        assert_eq!(want.indices, sc.idx, "case {case}");
+        assert_eq!(want.values, sc.vals, "case {case}");
+        assert_eq!(want.threshold, thr, "case {case}");
+    }
+}
+
 #[test]
 fn prop_quantizer_error_bounded_by_bucket_norm() {
     use lgc::compress::quantize;
