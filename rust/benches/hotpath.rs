@@ -306,6 +306,47 @@ fn node_loop_comparison(t: &mut Table, json: &mut JsonOut, n: usize, smoke: bool
     (seq.mean_ms(), par.mean_ms())
 }
 
+/// Native-backend AE encode/decode latency (always available: the native
+/// engine needs no artifacts).  Tracked in BENCH_hotpath.json so the
+/// learned-compressor hot path has a PR-over-PR latency trajectory even
+/// on machines without a PJRT toolchain.
+fn native_ae_section(t: &mut Table, json: &mut JsonOut, smoke: bool) -> anyhow::Result<()> {
+    use lgc::compress::autoencoder::{AeCompressor, Pattern};
+
+    let engine = Engine::native()?;
+    let meta = engine.manifest.resolve_model("convnet_mini").clone();
+    let mu = meta.mu;
+    let mut rng = Rng::new(21);
+    let vals = rng.normal_vec(mu, 0.01);
+    let iters = if smoke { 10 } else { 50 };
+
+    let rar = AeCompressor::new(&engine, mu, 2, Pattern::RingAllreduce, 3)?;
+    let (lat, sc) = rar.encode(&engine, &vals)?;
+    let s = time(3, iters, || {
+        rar.encode(&engine, &vals).unwrap();
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["native AE encode".into(), a, b, format!("mu={mu}, pure-rust kernels")]);
+    json.push("native_ae_encode", &s, None);
+
+    let s = time(3, iters, || {
+        rar.decode_rar(&engine, &lat, sc).unwrap();
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["native AE decode RAR".into(), a, b, format!("mu={mu}")]);
+    json.push("native_ae_decode_rar", &s, None);
+
+    let ps = AeCompressor::new(&engine, mu, 2, Pattern::ParamServer, 3)?;
+    let innov = vec![0.0f32; mu];
+    let s = time(3, iters, || {
+        ps.decode_ps(&engine, 0, &lat, &innov, sc).unwrap();
+    });
+    let (a, b) = fmt(&s);
+    t.row(&["native AE decode PS".into(), a, b, format!("mu={mu}, innovation channel")]);
+    json.push("native_ae_decode_ps", &s, None);
+    Ok(())
+}
+
 fn engine_sections(
     engine: &Engine,
     t: &mut Table,
@@ -314,7 +355,7 @@ fn engine_sections(
 ) -> anyhow::Result<()> {
     use lgc::compress::autoencoder::{AeCompressor, Pattern};
 
-    let meta = engine.manifest.model(model).clone();
+    let meta = engine.manifest.resolve_model(model).clone();
     let mu = meta.mu;
     let n_mid = meta.n_mid;
     let mut rng = Rng::new(1);
@@ -395,15 +436,16 @@ fn main() -> anyhow::Result<()> {
     let smoke = std::env::var("LGC_BENCH_SMOKE").is_ok();
     let engine = Engine::open_default().ok();
 
-    // Workload sizes come from the manifest when available; otherwise use
-    // resnet_mini-scale defaults so the pure-CPU rows still measure the
-    // real operating point.
+    // Workload sizes come from the manifest when it carries the requested
+    // model; otherwise (native manifest or no engine) keep resnet_mini-
+    // scale defaults so the pure-CPU rows measure the same operating
+    // point PR-over-PR.
     let (n_mid, mu) = match &engine {
-        Some(e) => {
+        Some(e) if e.manifest.models.contains_key(&model) => {
             let meta = e.manifest.model(&model);
             (meta.n_mid, meta.mu)
         }
-        None => (262_144, 4_096),
+        _ => (262_144, 4_096),
     };
 
     let mut json = JsonOut { smoke, entries: Vec::new(), index_encode: None };
@@ -411,12 +453,21 @@ fn main() -> anyhow::Result<()> {
     pure_sections(&mut t, &mut json, n_mid, mu, smoke);
     json.index_encode = Some(index_encode_comparison(&mut t, &mut json, smoke));
     node_loop_comparison(&mut t, &mut json, 200_000, smoke);
+    native_ae_section(&mut t, &mut json, smoke)?;
 
+    // PJRT-only sections: their JSON keys (ae_encode, sparsify_hlo, ...)
+    // are the HLO-latency trajectory and must never silently record
+    // native-kernel numbers (the native rows above have their own keys).
+    let is_native = |e: &Engine| {
+        e.manifest
+            .fingerprint
+            .starts_with(lgc::runtime::manifest::NATIVE_FINGERPRINT_PREFIX)
+    };
     match &engine {
-        Some(e) => engine_sections(e, &mut t, &mut json, &model)?,
-        None => println!(
-            "(skipping PJRT sections: artifacts/backend unavailable — pure-CPU \
-             rows above cover the coordinator hot path)"
+        Some(e) if !is_native(e) => engine_sections(e, &mut t, &mut json, &model)?,
+        _ => println!(
+            "(skipping PJRT sections: no artifacts/PJRT backend — native AE \
+             rows above cover the learned-compressor hot path)"
         ),
     }
 

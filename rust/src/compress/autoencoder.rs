@@ -90,7 +90,13 @@ impl AeCompressor {
                     var.dec_rar.clone(),
                     var.train_rar
                         .get(&k_nodes)
-                        .unwrap_or_else(|| panic!("no RAR train variant mu={mu} K={k_nodes}"))
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "no RAR AE train variant for mu={mu}, K={k_nodes} \
+                                 (supported K: {:?})",
+                                var.train_rar.keys().collect::<Vec<_>>()
+                            )
+                        })?
                         .clone(),
                 )
             }
@@ -115,7 +121,13 @@ impl AeCompressor {
                     var.dec_ps.clone(),
                     var.train_ps
                         .get(&k_nodes)
-                        .unwrap_or_else(|| panic!("no PS train variant mu={mu} K={k_nodes}"))
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "no PS AE train variant for mu={mu}, K={k_nodes} \
+                                 (supported K: {:?})",
+                                var.train_ps.keys().collect::<Vec<_>>()
+                            )
+                        })?
                         .clone(),
                 )
             }

@@ -176,8 +176,11 @@ pub struct Trainer<'e> {
 }
 
 impl<'e> Trainer<'e> {
-    pub fn new(engine: &'e Engine, cfg: TrainConfig) -> Result<Trainer<'e>> {
-        let meta = engine.manifest.model(&cfg.model).clone();
+    pub fn new(engine: &'e Engine, mut cfg: TrainConfig) -> Result<Trainer<'e>> {
+        // Backend-portable model resolution: missing names fall back to
+        // the manifest's reference workload (native backend).
+        let meta = engine.manifest.resolve_model(&cfg.model).clone();
+        cfg.model = meta.name.clone();
         let mut model = Model::new(&meta, cfg.seed);
         // Momentum lives in the optimizer for Baseline/QSGD, and in the
         // EF memories (momentum correction) for the sparse methods

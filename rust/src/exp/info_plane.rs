@@ -54,7 +54,7 @@ pub fn info_plane_run(
     lr: f32,
     csv_path: &str,
 ) -> Result<Vec<InfoPlaneRow>> {
-    let meta = engine.manifest.model(model_name).clone();
+    let meta = engine.manifest.resolve_model(model_name).clone();
     let mut model = Model::new(&meta, 42);
     model.momentum = 0.9;
     let dataset = data::for_model(&meta, 0xDA7A);

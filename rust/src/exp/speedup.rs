@@ -129,7 +129,7 @@ pub fn speedup_table(
     t.print();
     csv.finish()?;
 
-    let mu = engine.manifest.model(model).mu;
+    let mu = engine.manifest.resolve_model(model).mu;
     let (enc_ms, dec_ms, dec_ps_ms) = ae_latency(engine, mu, nodes)?;
     println!(
         "AE latency (mu={mu}): encode {enc_ms:.3} ms, decode(RAR) {dec_ms:.3} ms, \

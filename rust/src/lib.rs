@@ -12,7 +12,12 @@
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
 //!   hot-spot (1-D conv encoder/decoder, fused sparsify).
 //!
-//! Quickstart:
+//! Execution is backend-pluggable (DESIGN.md §7.3): the AOT'd HLO
+//! modules run through PJRT when artifacts are present, and a pure-Rust
+//! native CPU backend (`runtime/native`) implements the same module
+//! contracts from a clean checkout — `Engine::open_default()` picks
+//! automatically, so the quickstart below always works:
+//!
 //! ```no_run
 //! use lgc::{config::TrainConfig, coordinator, runtime::Engine};
 //! let engine = Engine::open_default().unwrap();

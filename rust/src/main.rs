@@ -17,13 +17,14 @@ use anyhow::{bail, Result};
 
 use lgc::config::TrainConfig;
 use lgc::exp::{self, speedup::LinkModel};
-use lgc::runtime::Engine;
+use lgc::runtime::{BackendKind, Engine};
 use lgc::util::cli::Args;
 
 const FLAGS: &[&str] = &[
     "model", "method", "nodes", "steps", "lr", "momentum", "alpha", "warmup",
     "ae-train", "ae-lr", "lambda2", "schedule", "eval-every", "seed",
     "threads", "verbose", "id", "bins", "pair", "bandwidth-mbps", "artifacts",
+    "backend", "assert-improves",
 ];
 
 fn main() -> Result<()> {
@@ -37,7 +38,19 @@ fn main() -> Result<()> {
     if let Some(dir) = args.opt_str("artifacts") {
         std::env::set_var("LGC_ARTIFACTS", dir);
     }
-    let engine = Engine::open_default()?;
+    // --backend beats $LGC_BACKEND beats auto.  An explicit --artifacts
+    // with no --backend is explicit PJRT intent: a bad path must error
+    // (as it always did), never silently fall back to the native
+    // backend.  The native backend itself needs no artifacts directory.
+    let engine = match args.opt_str("backend") {
+        Some(s) => {
+            let kind = BackendKind::parse(&s)
+                .ok_or_else(|| anyhow::anyhow!("bad --backend {s:?} (auto|pjrt|native)"))?;
+            Engine::open(kind)?
+        }
+        None if args.has("artifacts") => Engine::open(BackendKind::Pjrt)?,
+        None => Engine::open_default()?,
+    };
     eprintln!(
         "lgc: platform={} models={:?}",
         engine.platform(),
@@ -51,6 +64,9 @@ fn main() -> Result<()> {
                 cfg = cfg.scaled_phases();
             }
             let r = lgc::coordinator::train(&engine, cfg)?;
+            let first_loss = r.curve.first().map(|p| p.train_loss).unwrap_or(f32::NAN);
+            let final_loss = r.final_train_loss();
+            println!("train loss: {first_loss:.4} -> {final_loss:.4}");
             println!("final eval: loss {:.4}, acc {:.4}", r.final_eval.0, r.final_eval.1);
             println!(
                 "steady info size: {:.6} MB/iter/node, compression ratio {:.0}x",
@@ -58,6 +74,12 @@ fn main() -> Result<()> {
                 r.compression_ratio()
             );
             println!("{}", r.ledger.summary());
+            if args.has("assert-improves") {
+                // CI gate: the run must end with a finite, improved loss.
+                if !final_loss.is_finite() || !(final_loss < first_loss) {
+                    bail!("--assert-improves: train loss {first_loss} -> {final_loss}");
+                }
+            }
         }
         "exp" => {
             let id = args.str("id", "all");
@@ -72,7 +94,7 @@ fn main() -> Result<()> {
         }
         "latency" => {
             let model = args.str("model", "resnet_mini");
-            let mu = engine.manifest.model(&model).mu;
+            let mu = engine.manifest.resolve_model(&model).mu;
             let (e, d, dp) = exp::speedup::ae_latency(&engine, mu, 2)?;
             println!("mu={mu}: encode {e:.3} ms, decode RAR {d:.3} ms, decode PS {dp:.3} ms");
         }
@@ -215,7 +237,8 @@ SUBCOMMANDS:
   train        --model M --method baseline|sparse_gd|dgc|scalecom|qsgd|lgc_ps|lgc_rar
                --nodes K --steps N [--lr F --alpha F --schedule warmup|fixed|exp
                --warmup N --ae-train N --lambda2 F --seed S --verbose
-               --threads T (0 = one per core; results are identical for any T)]
+               --threads T (0 = one per core; results are identical for any T)
+               --assert-improves (exit nonzero unless train loss decreased)]
   exp          --id table4|table5|table6|fig3|fig10|fig11|fig12|fig13|fig14|speedup|all
                [--steps N]
   info-plane   --model M [--steps N --bins B]
@@ -223,7 +246,18 @@ SUBCOMMANDS:
   profile      --model M --method X [--steps N]
   list
 
-MODELS: convnet5, resnet_mini, resnet_mini_deep, segnet_mini, transformer_mini
-Artifacts are read from $LGC_ARTIFACTS or ./artifacts (run `make artifacts`)."#
+BACKENDS (--backend, or $LGC_BACKEND):
+  auto    (default) PJRT when an artifacts dir with manifest.json exists,
+          native otherwise
+  pjrt    AOT HLO artifacts via the PJRT CPU client; needs `make artifacts`
+          and a real xla toolchain (--artifacts DIR or $LGC_ARTIFACTS;
+          errors out with instructions when unavailable)
+  native  pure-Rust CPU kernels + synthesized manifest; needs no artifacts
+          (--artifacts is ignored); models: convnet_mini, mlp_mini (other
+          model names substitute the reference workload)
+
+MODELS (pjrt): convnet5, resnet_mini, resnet_mini_deep, segnet_mini,
+transformer_mini.  Artifacts are read from $LGC_ARTIFACTS or ./artifacts
+(run `make artifacts`)."#
     );
 }

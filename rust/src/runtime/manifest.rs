@@ -7,6 +7,10 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
+/// Fingerprint prefix identifying a manifest synthesized by the native
+/// backend (vs one written by aot.py).
+pub const NATIVE_FINGERPRINT_PREFIX: &str = "native-backend";
+
 #[derive(Debug, Clone)]
 pub struct ModuleMeta {
     pub file: String,
@@ -184,6 +188,30 @@ impl Manifest {
             .get(name)
             .unwrap_or_else(|| panic!("model {name:?} not in manifest ({:?})",
                                       self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Like [`Manifest::model`], but on the native backend's
+    /// *synthesized* manifest an absent name substitutes the first
+    /// reference model (with a stderr note) — that is what lets the exp
+    /// drivers and presets, which name the aot.py models
+    /// ("resnet_mini", "convnet5", ...), run on the native backend
+    /// unchanged.  On an aot.py manifest (PJRT) an unknown name is a
+    /// user error and panics exactly like [`Manifest::model`], keeping
+    /// typos loud.
+    pub fn resolve_model(&self, name: &str) -> &ModelMeta {
+        if let Some(m) = self.models.get(name) {
+            return m;
+        }
+        if !self.fingerprint.starts_with(NATIVE_FINGERPRINT_PREFIX) {
+            return self.model(name); // panics with the available-models list
+        }
+        let (sub, meta) = self
+            .models
+            .iter()
+            .next()
+            .unwrap_or_else(|| panic!("manifest has no models"));
+        eprintln!("model {name:?} not in native manifest; substituting {sub:?}");
+        meta
     }
 
     pub fn ae_variant(&self, mu: usize) -> &AeVariant {

@@ -1,148 +1,201 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Execution runtime: manifest-driven module execution over pluggable
+//! backends.
 //!
-//! This is the only module that touches the `xla` crate. Wiring follows
-//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` (HLO *text*
-//! interchange — xla_extension 0.5.1 rejects jax>=0.5 serialized protos)
-//! -> `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute`.
+//! [`Engine`] owns the [`Manifest`] (every module's I/O contract), the
+//! call-accounting profiler, and a boxed [`Backend`] that actually runs
+//! modules:
 //!
-//! Executables are compiled lazily and cached per module name; the manifest
-//! gives every module's I/O contract, which [`Executable::run`] validates on
-//! every call (shape bugs surface as errors at the call site, not as XLA
-//! aborts).
+//! * [`pjrt::PjrtBackend`] — loads AOT artifacts (HLO text emitted by
+//!   `python/compile/aot.py`) and executes them through the PJRT CPU
+//!   client.  Requires `artifacts/manifest.json` and a real `xla` crate
+//!   (the offline vendor stub fails at compile time with a clear error).
+//! * [`native::NativeBackend`] — a pure-Rust CPU implementation of the
+//!   same module contracts (hand-written forward/backward kernels), with
+//!   a synthesized in-memory manifest.  Needs no artifacts directory and
+//!   no PJRT, so the full pipeline runs from a clean checkout
+//!   (DESIGN.md §7.3).
 //!
-//! Thread model: `Engine` is `Sync` — the executable cache and call
-//! accounting sit behind mutexes, and the PJRT CPU client is internally
-//! synchronized — so the coordinator's parallel node runtime
-//! (`coordinator::parallel`) can drive per-node grad steps from worker
-//! threads through one shared engine.
+//! Selection: `--backend {auto,pjrt,native}` / `$LGC_BACKEND`; `auto`
+//! (the default) picks PJRT when an artifacts directory with a
+//! `manifest.json` is found and the native backend otherwise.
+//!
+//! Every call is validated against the manifest contract in
+//! [`Engine::run`] — shape bugs surface as errors at the call site, not
+//! as backend aborts — and accounted in the per-module profiler, for
+//! both backends identically.
+//!
+//! Thread model: `Engine` is `Sync` — backends are `Sync` by trait bound
+//! and call accounting sits behind a mutex — so the coordinator's
+//! parallel node runtime (`coordinator::parallel`) can drive per-node
+//! grad steps from worker threads through one shared engine.
 
 pub mod manifest;
+pub mod native;
+pub mod pjrt;
 pub mod tensor;
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
 pub use manifest::{AeMeta, AeVariant, Manifest, ModelMeta, ModuleMeta};
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
 pub use tensor::{Data, Tensor};
 
-/// Thread-sharing wrapper for the PJRT client.
-///
-/// SAFETY: the PJRT CPU client is internally synchronized (this is the
-/// same soundness argument the integration suite's old `EngineHolder`
-/// made when it shared an Engine across test threads), and all mutable
-/// engine state on our side lives behind the mutexes below.  With the
-/// offline stub the impls are vacuous (the stub types are plain data and
-/// already `Send + Sync`); with the real `xla` crate — whose client is a
-/// raw-pointer wrapper and therefore not auto-`Sync` — they carry the
-/// internal-synchronization justification, keeping the parallel node
-/// runtime compiling in both configurations.
-struct SyncClient(xla::PjRtClient);
+/// A module executor: given a manifest module name, its I/O contract and
+/// already-validated inputs, produce the outputs.
+pub trait Backend: Send + Sync {
+    /// Human-readable platform tag (CLI banner / tests).
+    fn platform(&self) -> String;
 
-unsafe impl Send for SyncClient {}
-unsafe impl Sync for SyncClient {}
+    /// Execute one module.  `inputs` have been validated against `meta`
+    /// by [`Engine::run`]; implementations must return exactly
+    /// `meta.outputs.len()` tensors in contract order.
+    fn run(&self, name: &str, meta: &ModuleMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// Which backend to construct (CLI `--backend` / `$LGC_BACKEND`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when artifacts are present, native otherwise.
+    Auto,
+    Pjrt,
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        Some(match s {
+            "auto" => BackendKind::Auto,
+            "pjrt" | "xla" => BackendKind::Pjrt,
+            "native" | "cpu" => BackendKind::Native,
+            _ => return None,
+        })
+    }
+}
+
+/// Default artifacts location: $LGC_ARTIFACTS or ./artifacts (searching
+/// upward so benches running from target/ subdirs find it too).
+pub fn default_artifacts_dir() -> String {
+    std::env::var("LGC_ARTIFACTS").unwrap_or_else(|_| {
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return cand.to_string();
+            }
+        }
+        "artifacts".to_string()
+    })
+}
 
 pub struct Engine {
-    client: SyncClient,
-    dir: PathBuf,
+    backend: Box<dyn Backend>,
     pub manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
-    /// Cumulative executable invocations (hot-path profiling).
+    /// Cumulative module invocations (hot-path profiling).
     calls: Mutex<HashMap<String, (u64, std::time::Duration)>>,
 }
 
-pub struct Executable {
-    pub name: String,
-    pub meta: ModuleMeta,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-// SAFETY: same argument as `SyncClient` — a loaded executable is
-// immutable after compilation and PJRT CPU execution is internally
-// synchronized; vacuous with the offline stub.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
 impl Engine {
-    /// Open the artifacts directory (compiles nothing yet).
+    /// Open a PJRT engine over an artifacts directory (back-compat name;
+    /// compiles nothing yet).
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let client = SyncClient(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
-        Ok(Engine {
-            client,
-            dir,
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-            calls: Mutex::new(HashMap::new()),
-        })
+        let (backend, manifest) = PjrtBackend::open(artifacts_dir)?;
+        Ok(Engine::from_parts(Box::new(backend), manifest))
     }
 
-    /// Default artifacts location: $LGC_ARTIFACTS or ./artifacts.
-    pub fn open_default() -> Result<Engine> {
-        let dir = std::env::var("LGC_ARTIFACTS").unwrap_or_else(|_| {
-            // Works from the repo root and from target/ subdirs (benches).
-            for cand in ["artifacts", "../artifacts", "../../artifacts"] {
-                if Path::new(cand).join("manifest.json").exists() {
-                    return cand.to_string();
+    /// Pure-Rust CPU engine: no artifacts, no PJRT; the manifest is
+    /// synthesized in memory (runtime/native).
+    pub fn native() -> Result<Engine> {
+        let (backend, manifest) = NativeBackend::new();
+        Ok(Engine::from_parts(Box::new(backend), manifest))
+    }
+
+    fn from_parts(backend: Box<dyn Backend>, manifest: Manifest) -> Engine {
+        Engine { backend, manifest, calls: Mutex::new(HashMap::new()) }
+    }
+
+    /// Construct the requested backend kind, resolving `Auto` by probing
+    /// the default artifacts location.
+    pub fn open(kind: BackendKind) -> Result<Engine> {
+        match kind {
+            BackendKind::Pjrt => {
+                let dir = default_artifacts_dir();
+                Engine::new(&dir).with_context(|| {
+                    format!(
+                        "PJRT backend requested but unavailable (artifacts dir {dir:?}); \
+                         run `make artifacts` with a PJRT toolchain, pass --artifacts DIR, \
+                         or use --backend native"
+                    )
+                })
+            }
+            BackendKind::Native => Engine::native(),
+            BackendKind::Auto => {
+                // An explicitly named artifacts dir ($LGC_ARTIFACTS, or
+                // --artifacts via main.rs) is explicit PJRT intent: a
+                // bad path must error, not silently fall back to a
+                // different backend with different numerics.
+                if std::env::var_os("LGC_ARTIFACTS").is_some() {
+                    return Engine::open(BackendKind::Pjrt);
+                }
+                let dir = default_artifacts_dir();
+                if Path::new(&dir).join("manifest.json").exists() {
+                    Engine::new(&dir)
+                } else {
+                    Engine::native()
                 }
             }
-            "artifacts".to_string()
-        });
-        Engine::new(dir)
+        }
+    }
+
+    /// Default engine: `$LGC_BACKEND` if set (`auto`/`pjrt`/`native`),
+    /// otherwise `auto`.
+    pub fn open_default() -> Result<Engine> {
+        let kind = match std::env::var("LGC_BACKEND") {
+            Ok(s) => BackendKind::parse(&s)
+                .with_context(|| format!("bad $LGC_BACKEND {s:?} (auto|pjrt|native)"))?,
+            Err(_) => BackendKind::Auto,
+        };
+        Engine::open(kind)
     }
 
     pub fn platform(&self) -> String {
-        self.client.0.platform_name()
-    }
-
-    /// Fetch (lazily compiling) an executable by manifest module name.
-    /// Concurrent first calls may compile the same module twice; the
-    /// cache keeps whichever lands last (identical artifacts, so this is
-    /// benign and avoids holding the lock across compilation).
-    pub fn exec(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let meta = self
-            .manifest
-            .modules
-            .get(name)
-            .with_context(|| format!("module {name:?} not in manifest"))?
-            .clone();
-        let path = self.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .0
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        let e = Arc::new(Executable { name: name.to_string(), meta, exe });
-        self.cache.lock().unwrap().insert(name.to_string(), e.clone());
-        Ok(e)
+        self.backend.platform()
     }
 
     /// Execute a module by name, with I/O validation and call accounting.
     pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let exe = self.exec(name)?;
+        let meta = self
+            .manifest
+            .modules
+            .get(name)
+            .with_context(|| format!("module {name:?} not in manifest"))?;
+        // Validate the call against the manifest contract.
+        if inputs.len() != meta.inputs.len() {
+            bail!("{}: expected {} inputs, got {}", name, meta.inputs.len(), inputs.len());
+        }
+        for (i, (t, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if &t.dims != want {
+                bail!(
+                    "{}: input {} shape mismatch: got {:?}, want {:?}",
+                    name, i, t.dims, want
+                );
+            }
+            if t.dtype() != meta.input_dtypes[i] {
+                bail!(
+                    "{}: input {} dtype mismatch: got {}, want {}",
+                    name, i, t.dtype(), meta.input_dtypes[i]
+                );
+            }
+        }
         let t0 = std::time::Instant::now();
-        let out = exe.run(inputs)?;
+        let out = self.backend.run(name, meta, inputs)?;
         self.account(name, t0.elapsed());
-        Ok(out)
-    }
-
-    /// Execute with pre-built literals (hot path: callers that cache
-    /// their big operands as literals skip one full host copy per call
-    /// — EXPERIMENTS.md §Perf iteration 1).
-    pub fn run_literals(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
-        let exe = self.exec(name)?;
-        let t0 = std::time::Instant::now();
-        let out = exe.run_literals(inputs)?;
-        self.account(name, t0.elapsed());
+        debug_assert_eq!(out.len(), meta.outputs.len(), "{name}: output arity drift");
+        for (i, (t, want)) in out.iter().zip(&meta.outputs).enumerate() {
+            debug_assert_eq!(&t.dims, want, "{name}: output {i} shape drift");
+        }
         Ok(out)
     }
 
@@ -164,71 +217,5 @@ impl Engine {
             .collect();
         v.sort_by_key(|(_, _, d)| std::cmp::Reverse(*d));
         v
-    }
-}
-
-impl Executable {
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        // Validate the call against the manifest contract.
-        if inputs.len() != self.meta.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                self.meta.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, want)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
-            if &t.dims != want {
-                bail!(
-                    "{}: input {} shape mismatch: got {:?}, want {:?}",
-                    self.name, i, t.dims, want
-                );
-            }
-            if t.dtype() != self.meta.input_dtypes[i] {
-                bail!(
-                    "{}: input {} dtype mismatch: got {}, want {}",
-                    self.name, i, t.dtype(), self.meta.input_dtypes[i]
-                );
-            }
-        }
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        self.execute_literals(&literals)
-    }
-
-    /// Execute with caller-owned literals (no per-call conversion).
-    /// Shape validation is skipped — the caller guarantees the contract
-    /// (the manifest-driven paths that use this cache validated tensors).
-    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
-        if literals.len() != self.meta.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                self.meta.inputs.len(),
-                literals.len()
-            );
-        }
-        self.execute_literals(literals)
-    }
-
-    fn execute_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
-        let result = self.exe.execute::<xla::Literal>(literals)?;
-        // aot.py lowers with return_tuple=True: one tuple literal out.
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        let mut out = Vec::with_capacity(parts.len());
-        for (i, lit) in parts.iter().enumerate() {
-            let t = Tensor::from_literal(lit)
-                .with_context(|| format!("{}: output {}", self.name, i))?;
-            debug_assert_eq!(
-                t.dims, self.meta.outputs[i],
-                "{}: output {} shape drift", self.name, i
-            );
-            out.push(t);
-        }
-        Ok(out)
     }
 }

@@ -1,0 +1,484 @@
+//! Native LGC autoencoder: forward, manual backprop, and the online SGD
+//! train steps for both communication patterns.
+//!
+//! Mirrors `python/compile/autoencoder.py` op for op — same layer specs
+//! (Tables I/II with the §7.1 deviation), same leaky-ReLU placement
+//! (between encoder layers, after every decoder deconv), same innovation
+//! concat before the final 1x1 conv, and the same *mean* (not sum) MSE /
+//! similarity losses, so the fixed `ae_lr` regime transfers unchanged.
+//!
+//! Parameters travel as borrowed flat slices in the python flat order:
+//!   encoder: [w1, b1, ..., w5, b5]            (10 arrays)
+//!   decoder: [w1, b1, ..., w5, b5, wf, bf]    (12 arrays)
+//! PS train takes the K-stacked decoder arrays and slices per-node rows.
+
+use super::ops::{
+    axpy, conv1d_bwd, conv1d_fwd, conv1d_out_len, deconv1d_bwd, deconv1d_fwd, leaky_relu_bwd,
+    leaky_relu_fwd, mse_and_grad,
+};
+
+/// Encoder layers: (cout, cin, k, stride) — python ENC_SPEC.
+pub const ENC_SPEC: [(usize, usize, usize, usize); 5] = [
+    (64, 1, 3, 2),
+    (128, 64, 3, 2),
+    (256, 128, 3, 2),
+    (64, 256, 3, 2),
+    (4, 64, 1, 1),
+];
+
+/// Decoder deconv layers: (cout, cin, k, stride) — python DEC_SPEC
+/// (first layer stride-1; see DESIGN.md §7.1).
+pub const DEC_SPEC: [(usize, usize, usize, usize); 5] = [
+    (4, 4, 3, 1),
+    (32, 4, 3, 2),
+    (64, 32, 3, 2),
+    (128, 64, 3, 2),
+    (32, 128, 3, 2),
+];
+
+pub const LATENT_CH: usize = 4;
+/// Total encoder downsampling; mu must be a multiple of this.
+pub const DOWN: usize = 16;
+
+pub fn enc_param_shapes() -> Vec<Vec<usize>> {
+    let mut shapes = Vec::new();
+    for (cout, cin, k, _) in ENC_SPEC {
+        shapes.push(vec![cout, cin, k]);
+        shapes.push(vec![cout]);
+    }
+    shapes
+}
+
+/// ps=true adds the innovation channel to the final 1x1 conv input.
+pub fn dec_param_shapes(ps: bool) -> Vec<Vec<usize>> {
+    let mut shapes = Vec::new();
+    for (cout, cin, k, _) in DEC_SPEC {
+        shapes.push(vec![cout, cin, k]);
+        shapes.push(vec![cout]);
+    }
+    let final_cin = DEC_SPEC[4].0 + usize::from(ps);
+    shapes.push(vec![1, final_cin, 1]);
+    shapes.push(vec![1]);
+    shapes
+}
+
+/// Latent element count for a given mu.
+pub fn latent_len(mu: usize) -> usize {
+    LATENT_CH * (mu / DOWN)
+}
+
+// ---------------------------------------------------------------------------
+// Encoder
+// ---------------------------------------------------------------------------
+
+/// Saved forward state of one encode (inputs + pre-activations).
+pub struct EncTrace {
+    inputs: Vec<Vec<f32>>,
+    preacts: Vec<Vec<f32>>,
+    lens: Vec<usize>,
+}
+
+/// E_c: g (1, mu) -> latent (4, mu/16), with the trace for backprop.
+pub fn encode_fwd(params: &[&[f32]], g: &[f32], mu: usize) -> (Vec<f32>, EncTrace) {
+    debug_assert_eq!(params.len(), 10);
+    debug_assert_eq!(g.len(), mu);
+    let mut h = g.to_vec();
+    let mut n = mu;
+    let mut trace = EncTrace { inputs: Vec::new(), preacts: Vec::new(), lens: Vec::new() };
+    let mut latent = Vec::new();
+    for (i, (cout, cin, k, stride)) in ENC_SPEC.into_iter().enumerate() {
+        let (w, b) = (params[2 * i], params[2 * i + 1]);
+        trace.inputs.push(h.clone());
+        trace.lens.push(n);
+        let z = conv1d_fwd(&h, cin, n, w, b, cout, k, stride);
+        n = conv1d_out_len(n, k, stride);
+        if i < ENC_SPEC.len() - 1 {
+            h = leaky_relu_fwd(&z);
+            trace.preacts.push(z);
+        } else {
+            latent = z;
+        }
+    }
+    (latent, trace)
+}
+
+/// Backward of [`encode_fwd`]: accumulates parameter cotangents into
+/// `d_params` (10 arrays matching [`enc_param_shapes`]).
+pub fn encode_bwd(params: &[&[f32]], trace: &EncTrace, dlatent: &[f32], d_params: &mut [Vec<f32>]) {
+    let mut dz = dlatent.to_vec();
+    for i in (0..ENC_SPEC.len()).rev() {
+        let (cout, cin, k, stride) = ENC_SPEC[i];
+        let (dh, dw, db) =
+            conv1d_bwd(&trace.inputs[i], cin, trace.lens[i], params[2 * i], cout, k, stride, &dz);
+        axpy(&mut d_params[2 * i], &dw);
+        axpy(&mut d_params[2 * i + 1], &db);
+        if i > 0 {
+            dz = leaky_relu_bwd(&trace.preacts[i - 1], &dh);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoder
+// ---------------------------------------------------------------------------
+
+/// Saved forward state of one decode.
+pub struct DecTrace {
+    inputs: Vec<Vec<f32>>,
+    preacts: Vec<Vec<f32>>,
+    lens: Vec<usize>,
+    /// Input to the final 1x1 conv (h5, or [h5; innovation] for PS).
+    final_in: Vec<f32>,
+    final_cin: usize,
+}
+
+/// D_c: latent (4, mu/16) [+ innovation (1, mu)] -> rec (1, mu).
+pub fn decode_fwd(
+    params: &[&[f32]],
+    latent: &[f32],
+    mu: usize,
+    innovation: Option<&[f32]>,
+) -> (Vec<f32>, DecTrace) {
+    debug_assert_eq!(params.len(), 12);
+    debug_assert_eq!(latent.len(), latent_len(mu));
+    let mut h = latent.to_vec();
+    let mut n = mu / DOWN;
+    let mut trace = DecTrace {
+        inputs: Vec::new(),
+        preacts: Vec::new(),
+        lens: Vec::new(),
+        final_in: Vec::new(),
+        final_cin: 0,
+    };
+    for (i, (cout, cin, _k, stride)) in DEC_SPEC.into_iter().enumerate() {
+        let (w, b) = (params[2 * i], params[2 * i + 1]);
+        trace.inputs.push(h.clone());
+        trace.lens.push(n);
+        let z = deconv1d_fwd(&h, cin, n, w, b, cout, stride);
+        n *= stride;
+        h = leaky_relu_fwd(&z);
+        trace.preacts.push(z);
+    }
+    debug_assert_eq!(n, mu);
+    let mut final_cin = DEC_SPEC[4].0;
+    if let Some(inn) = innovation {
+        debug_assert_eq!(inn.len(), mu);
+        h.extend_from_slice(inn);
+        final_cin += 1;
+    }
+    trace.final_in = h;
+    trace.final_cin = final_cin;
+    let (wf, bf) = (params[10], params[11]);
+    let rec = conv1d_fwd(&trace.final_in, final_cin, mu, wf, bf, 1, 1, 1);
+    (rec, trace)
+}
+
+/// Backward of [`decode_fwd`]: accumulates parameter cotangents into
+/// `d_params` (12 arrays) and returns the latent cotangent.  The
+/// innovation cotangent is dropped (innovations are inputs, not
+/// parameters).
+pub fn decode_bwd(
+    params: &[&[f32]],
+    trace: &DecTrace,
+    mu: usize,
+    drec: &[f32],
+    d_params: &mut [Vec<f32>],
+) -> Vec<f32> {
+    let (dfinal_in, dwf, dbf) =
+        conv1d_bwd(&trace.final_in, trace.final_cin, mu, params[10], 1, 1, 1, drec);
+    axpy(&mut d_params[10], &dwf);
+    axpy(&mut d_params[11], &dbf);
+    let mut dh = dfinal_in[..DEC_SPEC[4].0 * mu].to_vec();
+    for i in (0..DEC_SPEC.len()).rev() {
+        let (cout, cin, _k, stride) = DEC_SPEC[i];
+        let dz = leaky_relu_bwd(&trace.preacts[i], &dh);
+        let (dh_prev, dw, db) =
+            deconv1d_bwd(&trace.inputs[i], cin, trace.lens[i], params[2 * i], cout, stride, &dz);
+        axpy(&mut d_params[2 * i], &dw);
+        axpy(&mut d_params[2 * i + 1], &db);
+        dh = dh_prev;
+    }
+    dh
+}
+
+// ---------------------------------------------------------------------------
+// Train steps (online SGD, phase 2)
+// ---------------------------------------------------------------------------
+
+fn zeros_like(params: &[&[f32]]) -> Vec<Vec<f32>> {
+    params.iter().map(|p| vec![0.0f32; p.len()]).collect()
+}
+
+fn sgd(params: &[&[f32]], grads: &[Vec<f32>], lr: f32) -> Vec<Vec<f32>> {
+    params
+        .iter()
+        .zip(grads)
+        .map(|(p, g)| p.iter().zip(g).map(|(&pv, &gv)| pv - lr * gv).collect())
+        .collect()
+}
+
+/// RAR train step (eq. 11): decoder targets the *average* gradient of
+/// the K averaged latents.  Returns (enc', dec', rec_loss).
+pub fn rar_train_step(
+    enc_params: &[&[f32]],
+    dec_params: &[&[f32]],
+    grads: &[&[f32]],
+    mu: usize,
+    lr: f32,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, f32) {
+    let k = grads.len();
+    let lat_n = latent_len(mu);
+    let mut lat_avg = vec![0.0f32; lat_n];
+    let mut traces = Vec::with_capacity(k);
+    for g in grads {
+        let (lat, tr) = encode_fwd(enc_params, g, mu);
+        axpy(&mut lat_avg, &lat);
+        traces.push(tr);
+    }
+    lat_avg.iter_mut().for_each(|v| *v /= k as f32);
+
+    let (rec, dec_trace) = decode_fwd(dec_params, &lat_avg, mu, None);
+    let mut target = vec![0.0f32; mu];
+    for g in grads {
+        axpy(&mut target, g);
+    }
+    target.iter_mut().for_each(|v| *v /= k as f32);
+    let (loss, drec) = mse_and_grad(&rec, &target, 1.0);
+
+    let mut d_dec = zeros_like(dec_params);
+    let dlat_avg = decode_bwd(dec_params, &dec_trace, mu, &drec, &mut d_dec);
+    let dlat_each: Vec<f32> = dlat_avg.iter().map(|v| v / k as f32).collect();
+    let mut d_enc = zeros_like(enc_params);
+    for tr in &traces {
+        encode_bwd(enc_params, tr, &dlat_each, &mut d_enc);
+    }
+    (sgd(enc_params, &d_enc, lr), sgd(dec_params, &d_dec, lr), loss)
+}
+
+/// PS train step (eqs. 5-7): K per-node decoders (stacked arrays),
+/// similarity + reconstruction loss, `ridx` picking the common encoding.
+/// Returns (enc', dec_stacked', rec_loss, sim_loss) — losses unweighted,
+/// gradients weighted by (lam1, lam2), matching the python aux outputs.
+#[allow(clippy::too_many_arguments)]
+pub fn ps_train_step(
+    enc_params: &[&[f32]],
+    dec_stacked: &[&[f32]],
+    grads: &[&[f32]],
+    innovations: &[&[f32]],
+    mu: usize,
+    ridx: usize,
+    lr: f32,
+    lam1: f32,
+    lam2: f32,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, f32, f32) {
+    let k = grads.len();
+    debug_assert_eq!(innovations.len(), k);
+    debug_assert!(ridx < k);
+    let lat_n = latent_len(mu);
+
+    let mut encs = Vec::with_capacity(k);
+    let mut enc_traces = Vec::with_capacity(k);
+    for g in grads {
+        let (lat, tr) = encode_fwd(enc_params, g, mu);
+        encs.push(lat);
+        enc_traces.push(tr);
+    }
+
+    // Similarity loss over unordered pairs (mean over pairs of mean MSE).
+    let npairs = (k * (k - 1) / 2).max(1);
+    let mut sim = 0.0f32;
+    let mut d_enc_lat: Vec<Vec<f32>> = vec![vec![0.0f32; lat_n]; k];
+    for a in 0..k {
+        for b in (a + 1)..k {
+            let mut pair = 0.0f32;
+            for i in 0..lat_n {
+                let d = encs[a][i] - encs[b][i];
+                pair += d * d;
+                let g = lam2 * 2.0 * d / (lat_n as f32 * npairs as f32);
+                d_enc_lat[a][i] += g;
+                d_enc_lat[b][i] -= g;
+            }
+            sim += pair / lat_n as f32;
+        }
+    }
+    sim /= npairs as f32;
+
+    // Reconstruction: every node decodes the common representation with
+    // its own decoder and innovation.
+    let mut rec_loss = 0.0f32;
+    let mut d_dec = zeros_like(dec_stacked);
+    let mut d_common = vec![0.0f32; lat_n];
+    for node in 0..k {
+        let dp: Vec<&[f32]> = dec_stacked
+            .iter()
+            .map(|stacked| {
+                let per = stacked.len() / k;
+                &stacked[node * per..(node + 1) * per]
+            })
+            .collect();
+        let (rec, tr) = decode_fwd(&dp, &encs[ridx], mu, Some(innovations[node]));
+        let (l, drec) = mse_and_grad(&rec, grads[node], lam1 / k as f32);
+        rec_loss += l;
+        let mut d_dp = zeros_like(&dp);
+        let dlat = decode_bwd(&dp, &tr, mu, &drec, &mut d_dp);
+        axpy(&mut d_common, &dlat);
+        for (dst, src) in d_dec.iter_mut().zip(&d_dp) {
+            let per = src.len();
+            axpy(&mut dst[node * per..(node + 1) * per], src);
+        }
+    }
+    rec_loss /= k as f32;
+    axpy(&mut d_enc_lat[ridx], &d_common);
+
+    let mut d_enc = zeros_like(enc_params);
+    for (tr, dlat) in enc_traces.iter().zip(&d_enc_lat) {
+        encode_bwd(enc_params, tr, dlat, &mut d_enc);
+    }
+    (
+        sgd(enc_params, &d_enc, lr),
+        sgd(dec_stacked, &d_dec, lr),
+        rec_loss,
+        sim,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn he_init(shapes: &[Vec<usize>], rng: &mut Rng) -> Vec<Vec<f32>> {
+        shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                if s.len() > 1 {
+                    let fan_in: usize = s[1..].iter().product();
+                    rng.normal_vec(n, (2.0f32 / fan_in as f32).sqrt())
+                } else {
+                    vec![0.0f32; n]
+                }
+            })
+            .collect()
+    }
+
+    fn refs(v: &[Vec<f32>]) -> Vec<&[f32]> {
+        v.iter().map(|p| p.as_slice()).collect()
+    }
+
+    #[test]
+    fn encode_decode_shapes_compose() {
+        let mu = 32;
+        let mut rng = Rng::new(1);
+        let enc = he_init(&enc_param_shapes(), &mut rng);
+        let dec = he_init(&dec_param_shapes(false), &mut rng);
+        let g = rng.normal_vec(mu, 1.0);
+        let (lat, _) = encode_fwd(&refs(&enc), &g, mu);
+        assert_eq!(lat.len(), mu / 4); // 4 ch x mu/16: the paper's 4:1 rate
+        let (rec, _) = decode_fwd(&refs(&dec), &lat, mu, None);
+        assert_eq!(rec.len(), mu);
+        assert!(rec.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn ps_decoder_uses_innovation_channel() {
+        let mu = 16;
+        let mut rng = Rng::new(2);
+        let dec = he_init(&dec_param_shapes(true), &mut rng);
+        let lat = rng.normal_vec(latent_len(mu), 1.0);
+        let zero = vec![0.0f32; mu];
+        let big: Vec<f32> = (0..mu).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        let (r0, _) = decode_fwd(&refs(&dec), &lat, mu, Some(&zero));
+        let (r1, _) = decode_fwd(&refs(&dec), &lat, mu, Some(&big));
+        let diff: f32 = r0.iter().zip(&r1).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 0.0);
+    }
+
+    #[test]
+    fn rar_training_reduces_reconstruction_loss() {
+        let mu = 16;
+        let mut rng = Rng::new(3);
+        let mut enc = he_init(&enc_param_shapes(), &mut rng);
+        let mut dec = he_init(&dec_param_shapes(false), &mut rng);
+        // Two correlated unit-scale "gradient" rows, fixed across steps.
+        let base = rng.normal_vec(mu, 1.0);
+        let rows: Vec<Vec<f32>> = (0..2)
+            .map(|_| base.iter().map(|x| x + 0.1 * rng.normal()).collect())
+            .collect();
+        let mut first = None;
+        let mut last = f32::INFINITY;
+        for _ in 0..40 {
+            let g: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let (e2, d2, loss) = rar_train_step(&refs(&enc), &refs(&dec), &g, mu, 1e-2);
+            assert!(loss.is_finite());
+            enc = e2;
+            dec = d2;
+            first = first.or(Some(loss));
+            last = loss;
+        }
+        assert!(last < first.unwrap(), "{last} !< {first:?}");
+    }
+
+    #[test]
+    fn ps_training_reduces_weighted_loss_and_reports_both_terms() {
+        let mu = 16;
+        let k = 2;
+        let mut rng = Rng::new(4);
+        let mut enc = he_init(&enc_param_shapes(), &mut rng);
+        // K-stacked decoders, each row independently initialized.
+        let mut dec: Vec<Vec<f32>> = dec_param_shapes(true)
+            .iter()
+            .map(|s| {
+                let per: usize = s.iter().product();
+                let mut data = Vec::with_capacity(per * k);
+                for _ in 0..k {
+                    data.extend(he_init(std::slice::from_ref(s), &mut rng).remove(0));
+                }
+                data
+            })
+            .collect();
+        let base = rng.normal_vec(mu, 1.0);
+        let rows: Vec<Vec<f32>> = (0..k)
+            .map(|_| base.iter().map(|x| x + 0.1 * rng.normal()).collect())
+            .collect();
+        let inns: Vec<Vec<f32>> = (0..k).map(|_| vec![0.0f32; mu]).collect();
+        let mut first = None;
+        let mut last = f32::INFINITY;
+        for it in 0..40 {
+            let g: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let i: Vec<&[f32]> = inns.iter().map(|r| r.as_slice()).collect();
+            let (e2, d2, rec, sim) =
+                ps_train_step(&refs(&enc), &refs(&dec), &g, &i, mu, it % k, 1e-2, 1.0, 0.5);
+            assert!(rec.is_finite() && sim.is_finite() && sim >= 0.0);
+            enc = e2;
+            dec = d2;
+            let total = rec + 0.5 * sim;
+            first = first.or(Some(total));
+            last = total;
+        }
+        assert!(last < first.unwrap(), "{last} !< {first:?}");
+    }
+
+    #[test]
+    fn single_node_ps_has_zero_similarity() {
+        let mu = 16;
+        let mut rng = Rng::new(5);
+        let enc = he_init(&enc_param_shapes(), &mut rng);
+        let dec = he_init(&dec_param_shapes(true), &mut rng);
+        let g = rng.normal_vec(mu, 1.0);
+        let inn = vec![0.0f32; mu];
+        let (_, _, rec, sim) = ps_train_step(
+            &refs(&enc),
+            &refs(&dec),
+            &[g.as_slice()],
+            &[inn.as_slice()],
+            mu,
+            0,
+            1e-2,
+            1.0,
+            0.5,
+        );
+        assert_eq!(sim, 0.0);
+        assert!(rec.is_finite());
+    }
+}

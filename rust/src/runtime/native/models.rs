@@ -1,0 +1,386 @@
+//! Native reference workloads: the models the synthesized manifest
+//! exposes to the coordinator.
+//!
+//! Two minis, both following `python/compile`'s conventions exactly —
+//! He-normal init replayed from manifest shapes (weights rank > 1:
+//! N(0, sqrt(2/fan_in)), fan_in = prod(shape[1:]); biases zero), flat
+//! parameter order `[w0, b0, w1, b1, ...]`, `layer_of_param` driving the
+//! §VI-A first/mid/last grouping, softmax-CE loss with first-max argmax
+//! accuracy (models/common.py):
+//!
+//! * `convnet_mini` — a 1-D ConvNet over (3, 32) signals: three k3
+//!   stride-2 convs (ReLU) -> global average pool -> fc.  The 1-D analog
+//!   of convnet5's shape: conv feature extractor, GAP, linear head.
+//! * `mlp_mini` — 64 -> 96 -> 96 -> 64 -> 10 dense ReLU stack.
+//!
+//! Both read `SynthCifar` batches (x f32 `(B, ...)`, y i32 `(B,)`).
+//! `grad_step` returns `(loss, acc, grads...)`; `evaluate` returns
+//! `(loss, acc)`; `sparsify` is the fused threshold + error-feedback
+//! update of kernels/sparsify.py.
+
+use anyhow::{bail, Result};
+
+use super::ops::{
+    axpy, conv1d_bwd, conv1d_fwd, conv1d_out_len, dense_bwd, dense_fwd, gap_bwd, gap_fwd,
+    relu_bwd, relu_fwd, softmax_xent_and_acc,
+};
+use crate::runtime::Tensor;
+
+/// Architecture of a native model.
+#[derive(Debug, Clone)]
+pub enum Arch {
+    /// Dense ReLU stack; `dims` = [input, hidden..., classes].
+    Mlp { dims: Vec<usize> },
+    /// 1-D ConvNet: k3 convs `(cin, cout, stride)` + GAP + fc.
+    Conv1d { layers: Vec<(usize, usize, usize)>, input_len: usize, classes: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    pub name: &'static str,
+    pub arch: Arch,
+    pub batch: usize,
+}
+
+/// The native backend's model registry.
+pub fn reference_models() -> Vec<NativeModel> {
+    vec![
+        NativeModel {
+            name: "convnet_mini",
+            arch: Arch::Conv1d {
+                layers: vec![(3, 16, 2), (16, 24, 2), (24, 32, 2)],
+                input_len: 32,
+                classes: 10,
+            },
+            batch: 8,
+        },
+        NativeModel {
+            name: "mlp_mini",
+            arch: Arch::Mlp { dims: vec![64, 96, 96, 64, 10] },
+            batch: 8,
+        },
+    ]
+}
+
+impl NativeModel {
+    /// Flat parameter shapes, python order `[w, b]` per layer.
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let mut shapes = Vec::new();
+        match &self.arch {
+            Arch::Mlp { dims } => {
+                for win in dims.windows(2) {
+                    shapes.push(vec![win[1], win[0]]);
+                    shapes.push(vec![win[1]]);
+                }
+            }
+            Arch::Conv1d { layers, classes, .. } => {
+                for &(cin, cout, _) in layers {
+                    shapes.push(vec![cout, cin, 3]);
+                    shapes.push(vec![cout]);
+                }
+                shapes.push(vec![*classes, layers.last().unwrap().1]);
+                shapes.push(vec![*classes]);
+            }
+        }
+        shapes
+    }
+
+    /// Layer index per parameter (w and b share their layer).
+    pub fn layer_of_param(&self) -> Vec<usize> {
+        let n_layers = self.param_shapes().len() / 2;
+        (0..n_layers).flat_map(|l| [l, l]).collect()
+    }
+
+    /// Per-example input shape (SynthCifar prepends the batch dim).
+    pub fn input_shape(&self) -> Vec<usize> {
+        match &self.arch {
+            Arch::Mlp { dims } => vec![dims[0]],
+            Arch::Conv1d { layers, input_len, .. } => vec![layers[0].0, *input_len],
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        match &self.arch {
+            Arch::Mlp { dims } => *dims.last().unwrap(),
+            Arch::Conv1d { classes, .. } => *classes,
+        }
+    }
+
+    /// Forward (+ optional backward): returns (loss, acc, grads?).
+    fn forward(&self, inputs: &[Tensor], want_grads: bool) -> Result<(f32, f32, Vec<Tensor>)> {
+        let shapes = self.param_shapes();
+        let n_p = shapes.len();
+        if inputs.len() != n_p + 2 {
+            bail!("{}: expected {} inputs, got {}", self.name, n_p + 2, inputs.len());
+        }
+        let params: Vec<&[f32]> = inputs[..n_p].iter().map(|t| t.as_f32()).collect();
+        let x = inputs[n_p].as_f32();
+        let y = inputs[n_p + 1].as_i32();
+        let batch = self.batch;
+        let classes = self.num_classes();
+
+        match &self.arch {
+            Arch::Mlp { dims } => {
+                let n_layers = dims.len() - 1;
+                // Forward, saving per-layer inputs and pre-activations.
+                let mut h = x.to_vec();
+                let mut layer_in = Vec::with_capacity(n_layers);
+                let mut preacts = Vec::with_capacity(n_layers);
+                for l in 0..n_layers {
+                    let (fin, fout) = (dims[l], dims[l + 1]);
+                    layer_in.push(h.clone());
+                    let z = dense_fwd(&h, batch, fin, params[2 * l], params[2 * l + 1], fout);
+                    if l < n_layers - 1 {
+                        h = relu_fwd(&z);
+                        preacts.push(z);
+                    } else {
+                        h = z;
+                    }
+                }
+                let (loss, acc, dlogits) = softmax_xent_and_acc(&h, batch, classes, y);
+                if !want_grads {
+                    return Ok((loss, acc, Vec::new()));
+                }
+                let mut grads: Vec<Tensor> =
+                    shapes.iter().map(|s| Tensor::zeros(s.clone())).collect();
+                let mut dz = dlogits;
+                for l in (0..n_layers).rev() {
+                    let (fin, fout) = (dims[l], dims[l + 1]);
+                    let (dh, dw, db) =
+                        dense_bwd(&layer_in[l], batch, fin, params[2 * l], fout, &dz);
+                    grads[2 * l].as_f32_mut().copy_from_slice(&dw);
+                    grads[2 * l + 1].as_f32_mut().copy_from_slice(&db);
+                    if l > 0 {
+                        dz = relu_bwd(&preacts[l - 1], &dh);
+                    }
+                }
+                Ok((loss, acc, grads))
+            }
+            Arch::Conv1d { layers, input_len, .. } => {
+                let n_conv = layers.len();
+                let feat_ch = layers.last().unwrap().1;
+                let ex_len: usize = layers[0].0 * input_len;
+                // Per-example conv stacks (saved for backward), then one
+                // batched dense head over the pooled features.
+                let mut traces = Vec::with_capacity(batch);
+                let mut feats = Vec::with_capacity(batch * feat_ch);
+                for bi in 0..batch {
+                    let mut h = x[bi * ex_len..(bi + 1) * ex_len].to_vec();
+                    let mut n = *input_len;
+                    let mut ins = Vec::with_capacity(n_conv);
+                    let mut pre = Vec::with_capacity(n_conv);
+                    let mut lens = Vec::with_capacity(n_conv);
+                    for (l, &(cin, cout, stride)) in layers.iter().enumerate() {
+                        ins.push(h.clone());
+                        lens.push(n);
+                        let z = conv1d_fwd(&h, cin, n, params[2 * l], params[2 * l + 1], cout, 3, stride);
+                        n = conv1d_out_len(n, 3, stride);
+                        h = relu_fwd(&z);
+                        pre.push(z);
+                    }
+                    feats.extend(gap_fwd(&h, feat_ch, n));
+                    traces.push((ins, pre, lens, n));
+                }
+                let (wf, bf) = (params[n_p - 2], params[n_p - 1]);
+                let logits = dense_fwd(&feats, batch, feat_ch, wf, bf, classes);
+                let (loss, acc, dlogits) = softmax_xent_and_acc(&logits, batch, classes, y);
+                if !want_grads {
+                    return Ok((loss, acc, Vec::new()));
+                }
+                let mut grads: Vec<Tensor> =
+                    shapes.iter().map(|s| Tensor::zeros(s.clone())).collect();
+                let (dfeats, dwf, dbf) = dense_bwd(&feats, batch, feat_ch, wf, classes, &dlogits);
+                grads[n_p - 2].as_f32_mut().copy_from_slice(&dwf);
+                grads[n_p - 1].as_f32_mut().copy_from_slice(&dbf);
+                for (bi, (ins, pre, lens, n_last)) in traces.iter().enumerate() {
+                    let mut dh = gap_bwd(&dfeats[bi * feat_ch..(bi + 1) * feat_ch], feat_ch, *n_last);
+                    for l in (0..n_conv).rev() {
+                        let (cin, cout, stride) = layers[l];
+                        let dz = relu_bwd(&pre[l], &dh);
+                        let (dh_prev, dw, db) =
+                            conv1d_bwd(&ins[l], cin, lens[l], params[2 * l], cout, 3, stride, &dz);
+                        axpy(grads[2 * l].as_f32_mut(), &dw);
+                        axpy(grads[2 * l + 1].as_f32_mut(), &db);
+                        dh = dh_prev;
+                    }
+                }
+                Ok((loss, acc, grads))
+            }
+        }
+    }
+
+    /// `(params..., x, y) -> (loss, acc, grads...)`.
+    pub fn grad_step(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let (loss, acc, grads) = self.forward(inputs, true)?;
+        let mut out = vec![Tensor::scalar_f32(loss), Tensor::scalar_f32(acc)];
+        out.extend(grads);
+        Ok(out)
+    }
+
+    /// `(params..., x, y) -> (loss, acc)`.
+    pub fn evaluate(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let (loss, acc, _) = self.forward(inputs, false)?;
+        Ok(vec![Tensor::scalar_f32(loss), Tensor::scalar_f32(acc)])
+    }
+}
+
+/// Fused threshold-sparsify + error-feedback update (kernels/sparsify.py):
+/// `(g, acc, thr) -> (g_sp, acc')` with u = g + acc, mask = |u| >= thr.
+pub fn sparsify(g: &[f32], acc: &[f32], thr: f32) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(g.len(), acc.len());
+    let mut gsp = vec![0.0f32; g.len()];
+    let mut acc2 = vec![0.0f32; g.len()];
+    for i in 0..g.len() {
+        let u = g[i] + acc[i];
+        if u.abs() >= thr {
+            gsp[i] = u;
+        } else {
+            acc2[i] = u;
+        }
+    }
+    (gsp, acc2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn init_params(shapes: &[Vec<usize>], rng: &mut Rng) -> Vec<Tensor> {
+        shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                if s.len() > 1 {
+                    let fan_in: usize = s[1..].iter().product();
+                    Tensor::f32(s.clone(), rng.normal_vec(n, (2.0f32 / fan_in as f32).sqrt()))
+                } else {
+                    Tensor::zeros(s.clone())
+                }
+            })
+            .collect()
+    }
+
+    fn batch_for(m: &NativeModel, rng: &mut Rng) -> (Tensor, Tensor) {
+        let per: usize = m.input_shape().iter().product();
+        let mut dims = vec![m.batch];
+        dims.extend(m.input_shape());
+        let x = Tensor::f32(dims, rng.normal_vec(m.batch * per, 1.0));
+        let y = Tensor::i32(
+            vec![m.batch],
+            (0..m.batch).map(|i| (i % m.num_classes()) as i32).collect(),
+        );
+        (x, y)
+    }
+
+    fn grad_step_of(m: &NativeModel, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        let mut inputs = init_params(&m.param_shapes(), &mut rng);
+        let (x, y) = batch_for(m, &mut rng);
+        inputs.push(x);
+        inputs.push(y);
+        m.grad_step(&inputs).unwrap()
+    }
+
+    #[test]
+    fn both_models_grad_step_shapes_and_finiteness() {
+        for m in reference_models() {
+            let out = grad_step_of(&m, 1);
+            let shapes = m.param_shapes();
+            assert_eq!(out.len(), 2 + shapes.len(), "{}", m.name);
+            assert!(out[0].scalar().is_finite() && out[0].scalar() > 0.0);
+            assert!((0.0..=1.0).contains(&out[1].scalar()));
+            for (g, s) in out[2..].iter().zip(&shapes) {
+                assert_eq!(&g.dims, s);
+                assert!(g.as_f32().iter().all(|v| v.is_finite()));
+                assert!(g.as_f32().iter().any(|&v| v != 0.0), "{}: zero grad", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_step_is_deterministic() {
+        for m in reference_models() {
+            let a = grad_step_of(&m, 2);
+            let b = grad_step_of(&m, 2);
+            assert_eq!(a[0].scalar(), b[0].scalar());
+            assert_eq!(a[2].as_f32(), b[2].as_f32());
+        }
+    }
+
+    #[test]
+    fn mlp_gradient_matches_finite_difference() {
+        let m = NativeModel {
+            name: "tiny",
+            arch: Arch::Mlp { dims: vec![4, 5, 3] },
+            batch: 2,
+        };
+        let mut rng = Rng::new(3);
+        let mut inputs = init_params(&m.param_shapes(), &mut rng);
+        let (x, y) = batch_for(&m, &mut rng);
+        inputs.push(x);
+        inputs.push(y);
+        let out = m.grad_step(&inputs).unwrap();
+        let eps = 1e-3f32;
+        for pi in 0..m.param_shapes().len() {
+            let analytic = out[2 + pi].as_f32().to_vec();
+            for i in 0..analytic.len() {
+                let orig = inputs[pi].as_f32()[i];
+                inputs[pi].as_f32_mut()[i] = orig + eps;
+                let lp = m.evaluate(&inputs).unwrap()[0].scalar();
+                inputs[pi].as_f32_mut()[i] = orig - eps;
+                let lm = m.evaluate(&inputs).unwrap()[0].scalar();
+                inputs[pi].as_f32_mut()[i] = orig;
+                let num = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (num - analytic[i]).abs() < 2e-2 * (1.0 + num.abs()),
+                    "param {pi} coord {i}: numeric {num} vs analytic {}",
+                    analytic[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn convnet_gradient_matches_finite_difference_spotcheck() {
+        let m = NativeModel {
+            name: "tinyconv",
+            arch: Arch::Conv1d { layers: vec![(2, 4, 2), (4, 4, 2)], input_len: 8, classes: 3 },
+            batch: 2,
+        };
+        let mut rng = Rng::new(4);
+        let mut inputs = init_params(&m.param_shapes(), &mut rng);
+        let (x, y) = batch_for(&m, &mut rng);
+        inputs.push(x);
+        inputs.push(y);
+        let out = m.grad_step(&inputs).unwrap();
+        let eps = 1e-3f32;
+        for pi in 0..m.param_shapes().len() {
+            let analytic = out[2 + pi].as_f32().to_vec();
+            // Spot-check a few coordinates per parameter.
+            for i in (0..analytic.len()).step_by(analytic.len().div_ceil(4).max(1)) {
+                let orig = inputs[pi].as_f32()[i];
+                inputs[pi].as_f32_mut()[i] = orig + eps;
+                let lp = m.evaluate(&inputs).unwrap()[0].scalar();
+                inputs[pi].as_f32_mut()[i] = orig - eps;
+                let lm = m.evaluate(&inputs).unwrap()[0].scalar();
+                inputs[pi].as_f32_mut()[i] = orig;
+                let num = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (num - analytic[i]).abs() < 2e-2 * (1.0 + num.abs()),
+                    "param {pi} coord {i}: numeric {num} vs analytic {}",
+                    analytic[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparsify_matches_reference_semantics() {
+        let g = vec![1.0, -0.2, 0.5, -1.5];
+        let acc = vec![0.0, -0.7, 0.2, 0.1];
+        let (gsp, acc2) = sparsify(&g, &acc, 0.8);
+        assert_eq!(gsp, vec![1.0, -0.9, 0.0, -1.4]);
+        assert_eq!(acc2, vec![0.0, 0.0, 0.7, 0.0]);
+    }
+}

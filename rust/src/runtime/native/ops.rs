@@ -1,0 +1,539 @@
+//! Hand-written CPU kernels (forward + backward) for the native backend.
+//!
+//! Each op mirrors the semantics of its Pallas/jnp twin in
+//! `python/compile/kernels/` exactly — same padding conventions, same
+//! activation branch at zero, same mean-reduction scaling — so the native
+//! backend and the AOT'd HLO modules implement one contract
+//! (DESIGN.md §7.3).  Layout is channel-major `(channels, length)` for
+//! 1-D signals and row-major `(batch, features)` for dense layers, flat
+//! `Vec<f32>` underneath.
+//!
+//! Backward passes are manual backprop: every `*_bwd` takes the saved
+//! forward inputs plus the upstream cotangent and returns the input /
+//! weight / bias cotangents.  No tape, no graph — the module functions in
+//! `models.rs` / `ae.rs` chain them explicitly.
+
+/// Leaky-ReLU negative slope (shared with kernels/ref.py).
+pub const LEAKY_SLOPE: f32 = 0.01;
+
+/// Output length of conv1d under the shared padding conventions
+/// (kernels/ref.py: k3 pads (1,1), k1 pads nothing).
+pub fn conv1d_out_len(n: usize, k: usize, stride: usize) -> usize {
+    let pad = if k == 3 { 2 } else { 0 };
+    (n + pad - k) / stride + 1
+}
+
+/// Strided 1-D convolution (cross-correlation), channel-major.
+///
+/// x (cin, n), w (cout, cin, k), b (cout,) -> (cout, n_out);
+/// out[o, j] = b[o] + sum_{c,t} w[o,c,t] * xpad[c, stride*j + t].
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_fwd(
+    x: &[f32],
+    cin: usize,
+    n: usize,
+    w: &[f32],
+    b: &[f32],
+    cout: usize,
+    k: usize,
+    stride: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), cin * n);
+    debug_assert_eq!(w.len(), cout * cin * k);
+    let pad = if k == 3 { 1 } else { 0 };
+    let n_out = conv1d_out_len(n, k, stride);
+    let mut out = vec![0.0f32; cout * n_out];
+    for o in 0..cout {
+        let orow = &mut out[o * n_out..(o + 1) * n_out];
+        for c in 0..cin {
+            let xrow = &x[c * n..(c + 1) * n];
+            let wrow = &w[(o * cin + c) * k..(o * cin + c + 1) * k];
+            for (j, oj) in orow.iter_mut().enumerate() {
+                let base = (stride * j) as isize - pad as isize;
+                let mut acc = 0.0f32;
+                for (t, &wt) in wrow.iter().enumerate() {
+                    let p = base + t as isize;
+                    if p >= 0 && (p as usize) < n {
+                        acc += wt * xrow[p as usize];
+                    }
+                }
+                *oj += acc;
+            }
+        }
+        for oj in orow.iter_mut() {
+            *oj += b[o];
+        }
+    }
+    out
+}
+
+/// Backward of [`conv1d_fwd`]: given dz (cout, n_out), returns
+/// (dx, dw, db).
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_bwd(
+    x: &[f32],
+    cin: usize,
+    n: usize,
+    w: &[f32],
+    cout: usize,
+    k: usize,
+    stride: usize,
+    dz: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let pad = if k == 3 { 1 } else { 0 };
+    let n_out = conv1d_out_len(n, k, stride);
+    debug_assert_eq!(dz.len(), cout * n_out);
+    let mut dx = vec![0.0f32; cin * n];
+    let mut dw = vec![0.0f32; cout * cin * k];
+    let mut db = vec![0.0f32; cout];
+    for o in 0..cout {
+        let dzrow = &dz[o * n_out..(o + 1) * n_out];
+        db[o] += dzrow.iter().sum::<f32>();
+        for c in 0..cin {
+            let xrow = &x[c * n..(c + 1) * n];
+            let dxrow = &mut dx[c * n..(c + 1) * n];
+            let wbase = (o * cin + c) * k;
+            for (j, &dzj) in dzrow.iter().enumerate() {
+                let base = (stride * j) as isize - pad as isize;
+                for t in 0..k {
+                    let p = base + t as isize;
+                    if p >= 0 && (p as usize) < n {
+                        dw[wbase + t] += dzj * xrow[p as usize];
+                        dxrow[p as usize] += dzj * w[wbase + t];
+                    }
+                }
+            }
+        }
+    }
+    (dx, dw, db)
+}
+
+/// Stride-2 transposed 1-D convolution, realized as zero-interleave +
+/// k=3 valid conv (kernels/ref.py: lhs_dilation=2, padding (1,2)).
+///
+/// x (cin, n) -> (cout, 2n); the interleaved buffer xz (cin, 2n+2) holds
+/// x at odd positions: out[o,j] = b[o] + sum_{c,t} w[o,c,t]*xz[c, j+t].
+/// stride == 1 (first decoder layer) is a plain "SAME" conv.
+pub fn deconv1d_fwd(
+    x: &[f32],
+    cin: usize,
+    n: usize,
+    w: &[f32],
+    b: &[f32],
+    cout: usize,
+    stride: usize,
+) -> Vec<f32> {
+    if stride == 1 {
+        return conv1d_fwd(x, cin, n, w, b, cout, 3, 1);
+    }
+    debug_assert_eq!(stride, 2);
+    let n_out = 2 * n;
+    let mut out = vec![0.0f32; cout * n_out];
+    for o in 0..cout {
+        let orow = &mut out[o * n_out..(o + 1) * n_out];
+        for c in 0..cin {
+            let xrow = &x[c * n..(c + 1) * n];
+            let wrow = &w[(o * cin + c) * 3..(o * cin + c) * 3 + 3];
+            for (j, oj) in orow.iter_mut().enumerate() {
+                // xz[p] = x[(p-1)/2] for odd p in [1, 2n-1].
+                let mut acc = 0.0f32;
+                for (t, &wt) in wrow.iter().enumerate() {
+                    let p = j + t;
+                    if p % 2 == 1 && p >= 1 && (p - 1) / 2 < n {
+                        acc += wt * xrow[(p - 1) / 2];
+                    }
+                }
+                *oj += acc;
+            }
+        }
+        for oj in orow.iter_mut() {
+            *oj += b[o];
+        }
+    }
+    out
+}
+
+/// Backward of [`deconv1d_fwd`]: given dz (cout, n_out), returns
+/// (dx, dw, db).
+pub fn deconv1d_bwd(
+    x: &[f32],
+    cin: usize,
+    n: usize,
+    w: &[f32],
+    cout: usize,
+    stride: usize,
+    dz: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    if stride == 1 {
+        return conv1d_bwd(x, cin, n, w, cout, 3, 1, dz);
+    }
+    debug_assert_eq!(stride, 2);
+    let n_out = 2 * n;
+    debug_assert_eq!(dz.len(), cout * n_out);
+    let mut dx = vec![0.0f32; cin * n];
+    let mut dw = vec![0.0f32; cout * cin * 3];
+    let mut db = vec![0.0f32; cout];
+    for o in 0..cout {
+        let dzrow = &dz[o * n_out..(o + 1) * n_out];
+        db[o] += dzrow.iter().sum::<f32>();
+        for c in 0..cin {
+            let xrow = &x[c * n..(c + 1) * n];
+            let dxrow = &mut dx[c * n..(c + 1) * n];
+            let wbase = (o * cin + c) * 3;
+            for (j, &dzj) in dzrow.iter().enumerate() {
+                for t in 0..3 {
+                    let p = j + t;
+                    if p % 2 == 1 && p >= 1 && (p - 1) / 2 < n {
+                        let i = (p - 1) / 2;
+                        dw[wbase + t] += dzj * xrow[i];
+                        dxrow[i] += dzj * w[wbase + t];
+                    }
+                }
+            }
+        }
+    }
+    (dx, dw, db)
+}
+
+/// Elementwise leaky-ReLU (branch at zero matches ref.leaky_relu:
+/// x >= 0 keeps x).
+pub fn leaky_relu_fwd(z: &[f32]) -> Vec<f32> {
+    z.iter().map(|&v| if v >= 0.0 { v } else { LEAKY_SLOPE * v }).collect()
+}
+
+/// Backward of leaky-ReLU w.r.t. the saved pre-activation `z`.
+pub fn leaky_relu_bwd(z: &[f32], dh: &[f32]) -> Vec<f32> {
+    z.iter()
+        .zip(dh)
+        .map(|(&v, &d)| if v >= 0.0 { d } else { LEAKY_SLOPE * d })
+        .collect()
+}
+
+/// Elementwise ReLU.
+pub fn relu_fwd(z: &[f32]) -> Vec<f32> {
+    z.iter().map(|&v| v.max(0.0)).collect()
+}
+
+/// Backward of ReLU w.r.t. the saved pre-activation `z`.
+pub fn relu_bwd(z: &[f32], dh: &[f32]) -> Vec<f32> {
+    z.iter().zip(dh).map(|(&v, &d)| if v > 0.0 { d } else { 0.0 }).collect()
+}
+
+/// Dense layer: h (batch, fin) @ w (fout, fin)^T + b -> (batch, fout).
+pub fn dense_fwd(
+    h: &[f32],
+    batch: usize,
+    fin: usize,
+    w: &[f32],
+    b: &[f32],
+    fout: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(h.len(), batch * fin);
+    debug_assert_eq!(w.len(), fout * fin);
+    let mut out = vec![0.0f32; batch * fout];
+    for bi in 0..batch {
+        let hrow = &h[bi * fin..(bi + 1) * fin];
+        let orow = &mut out[bi * fout..(bi + 1) * fout];
+        for (o, oo) in orow.iter_mut().enumerate() {
+            let wrow = &w[o * fin..(o + 1) * fin];
+            *oo = b[o] + wrow.iter().zip(hrow).map(|(a, b)| a * b).sum::<f32>();
+        }
+    }
+    out
+}
+
+/// Backward of [`dense_fwd`]: given dz (batch, fout), returns
+/// (dh, dw, db).
+pub fn dense_bwd(
+    h: &[f32],
+    batch: usize,
+    fin: usize,
+    w: &[f32],
+    fout: usize,
+    dz: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dh = vec![0.0f32; batch * fin];
+    let mut dw = vec![0.0f32; fout * fin];
+    let mut db = vec![0.0f32; fout];
+    for bi in 0..batch {
+        let hrow = &h[bi * fin..(bi + 1) * fin];
+        let dhrow = &mut dh[bi * fin..(bi + 1) * fin];
+        let dzrow = &dz[bi * fout..(bi + 1) * fout];
+        for (o, &dzo) in dzrow.iter().enumerate() {
+            db[o] += dzo;
+            let wrow = &w[o * fin..(o + 1) * fin];
+            let dwrow = &mut dw[o * fin..(o + 1) * fin];
+            for f in 0..fin {
+                dwrow[f] += dzo * hrow[f];
+                dhrow[f] += dzo * wrow[f];
+            }
+        }
+    }
+    (dh, dw, db)
+}
+
+/// Softmax cross-entropy + accuracy over (batch, classes) logits.
+///
+/// Matches models/common.py `softmax_xent_and_acc`: loss is the mean
+/// negative log-softmax at the label, accuracy the mean argmax match
+/// (first max wins, like jnp.argmax).  Returns (loss, acc, dlogits)
+/// where dlogits = (softmax - onehot) / batch — the cotangent of the
+/// mean loss, ready to chain.
+pub fn softmax_xent_and_acc(
+    logits: &[f32],
+    batch: usize,
+    classes: usize,
+    y: &[i32],
+) -> (f32, f32, Vec<f32>) {
+    debug_assert_eq!(logits.len(), batch * classes);
+    debug_assert_eq!(y.len(), batch);
+    let mut loss = 0.0f32;
+    let mut correct = 0usize;
+    let mut dlogits = vec![0.0f32; batch * classes];
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let mut maxv = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > maxv {
+                maxv = v;
+                argmax = c;
+            }
+        }
+        let label = y[bi] as usize;
+        debug_assert!(label < classes);
+        if argmax == label {
+            correct += 1;
+        }
+        let sum_exp: f32 = row.iter().map(|&v| (v - maxv).exp()).sum();
+        let log_z = maxv + sum_exp.ln();
+        loss += log_z - row[label];
+        let drow = &mut dlogits[bi * classes..(bi + 1) * classes];
+        for (c, dv) in drow.iter_mut().enumerate() {
+            let p = (row[c] - log_z).exp();
+            *dv = (p - if c == label { 1.0 } else { 0.0 }) / batch as f32;
+        }
+    }
+    (loss / batch as f32, correct as f32 / batch as f32, dlogits)
+}
+
+/// Global average pool over the length axis: (ch, n) -> (ch,).
+pub fn gap_fwd(h: &[f32], ch: usize, n: usize) -> Vec<f32> {
+    (0..ch)
+        .map(|c| h[c * n..(c + 1) * n].iter().sum::<f32>() / n as f32)
+        .collect()
+}
+
+/// Backward of [`gap_fwd`]: spread each channel cotangent over length.
+pub fn gap_bwd(dfeat: &[f32], ch: usize, n: usize) -> Vec<f32> {
+    let mut dh = vec![0.0f32; ch * n];
+    for c in 0..ch {
+        let v = dfeat[c] / n as f32;
+        dh[c * n..(c + 1) * n].iter_mut().for_each(|d| *d = v);
+    }
+    dh
+}
+
+/// `a += b` elementwise.
+pub fn axpy(acc: &mut [f32], v: &[f32]) {
+    debug_assert_eq!(acc.len(), v.len());
+    for (a, b) in acc.iter_mut().zip(v) {
+        *a += b;
+    }
+}
+
+/// Mean squared error between two equal-length slices plus its cotangent
+/// w.r.t. `a` scaled by `scale`: d a = scale * 2 (a - b) / len.
+pub fn mse_and_grad(a: &[f32], b: &[f32], scale: f32) -> (f32, Vec<f32>) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().max(1) as f32;
+    let mut loss = 0.0f32;
+    let mut da = vec![0.0f32; a.len()];
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let d = x - y;
+        loss += d * d;
+        da[i] = scale * 2.0 * d / n;
+    }
+    (loss / n, da)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Central-difference check of an op's input gradient: perturb each
+    /// input coordinate and compare the measured dloss/dx against the
+    /// analytic backward, where loss = sum(out * probe) for a fixed
+    /// random probe (so dz = probe).
+    fn finite_diff<Fwd: Fn(&[f32]) -> Vec<f32>>(
+        fwd: Fwd,
+        x: &[f32],
+        dx_analytic: &[f32],
+        probe: &[f32],
+        tol: f32,
+    ) {
+        let eps = 1e-3f32;
+        for i in 0..x.len() {
+            let mut xp = x.to_vec();
+            xp[i] += eps;
+            let up: f32 = fwd(&xp).iter().zip(probe).map(|(a, b)| a * b).sum();
+            xp[i] -= 2.0 * eps;
+            let um: f32 = fwd(&xp).iter().zip(probe).map(|(a, b)| a * b).sum();
+            let num = (up - um) / (2.0 * eps);
+            assert!(
+                (num - dx_analytic[i]).abs() <= tol * (1.0 + num.abs()),
+                "coord {i}: numeric {num} vs analytic {}",
+                dx_analytic[i]
+            );
+        }
+    }
+
+    #[test]
+    fn conv1d_shapes_and_identity_kernel() {
+        // k=1 stride=1 with identity-ish weights reduces to a channel mix.
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // (2, 2)
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // (2, 2, 1) identity
+        let b = vec![0.5, -0.5];
+        let out = conv1d_fwd(&x, 2, 2, &w, &b, 2, 1, 1);
+        assert_eq!(out, vec![1.5, 2.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn conv1d_stride2_length() {
+        for n in [2usize, 4, 8, 16] {
+            assert_eq!(conv1d_out_len(n, 3, 2), n / 2);
+            assert_eq!(conv1d_out_len(n, 3, 1), n);
+            assert_eq!(conv1d_out_len(n, 1, 1), n);
+        }
+    }
+
+    #[test]
+    fn conv1d_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(11);
+        let (cin, n, cout, k, stride) = (2usize, 8usize, 3usize, 3usize, 2usize);
+        let x = rng.normal_vec(cin * n, 1.0);
+        let w = rng.normal_vec(cout * cin * k, 0.5);
+        let b = rng.normal_vec(cout, 0.1);
+        let n_out = conv1d_out_len(n, k, stride);
+        let probe = rng.normal_vec(cout * n_out, 1.0);
+        let (dx, dw, db) = conv1d_bwd(&x, cin, n, &w, cout, k, stride, &probe);
+        finite_diff(|xx| conv1d_fwd(xx, cin, n, &w, &b, cout, k, stride), &x, &dx, &probe, 2e-2);
+        finite_diff(|ww| conv1d_fwd(&x, cin, n, ww, &b, cout, k, stride), &w, &dw, &probe, 2e-2);
+        finite_diff(|bb| conv1d_fwd(&x, cin, n, &w, bb, cout, k, stride), &b, &db, &probe, 2e-2);
+    }
+
+    #[test]
+    fn deconv1d_doubles_length_and_bwd_checks() {
+        let mut rng = Rng::new(12);
+        let (cin, n, cout) = (3usize, 4usize, 2usize);
+        let x = rng.normal_vec(cin * n, 1.0);
+        let w = rng.normal_vec(cout * cin * 3, 0.5);
+        let b = rng.normal_vec(cout, 0.1);
+        let out = deconv1d_fwd(&x, cin, n, &w, &b, cout, 2);
+        assert_eq!(out.len(), cout * 2 * n);
+        let probe = rng.normal_vec(out.len(), 1.0);
+        let (dx, dw, db) = deconv1d_bwd(&x, cin, n, &w, cout, 2, &probe);
+        finite_diff(|xx| deconv1d_fwd(xx, cin, n, &w, &b, cout, 2), &x, &dx, &probe, 2e-2);
+        finite_diff(|ww| deconv1d_fwd(&x, cin, n, ww, &b, cout, 2), &w, &dw, &probe, 2e-2);
+        finite_diff(|bb| deconv1d_fwd(&x, cin, n, &w, bb, cout, 2), &b, &db, &probe, 2e-2);
+    }
+
+    #[test]
+    fn deconv1d_matches_zero_interleave_conv() {
+        // Cross-check against an explicit xz buffer + valid k3 conv.
+        let mut rng = Rng::new(13);
+        let (cin, n, cout) = (2usize, 4usize, 2usize);
+        let x = rng.normal_vec(cin * n, 1.0);
+        let w = rng.normal_vec(cout * cin * 3, 0.5);
+        let b = vec![0.0; cout];
+        let got = deconv1d_fwd(&x, cin, n, &w, &b, cout, 2);
+        // xz (cin, 2n+2) with x at odd positions.
+        let nz = 2 * n + 2;
+        let mut xz = vec![0.0f32; cin * nz];
+        for c in 0..cin {
+            for i in 0..n {
+                xz[c * nz + 2 * i + 1] = x[c * n + i];
+            }
+        }
+        for o in 0..cout {
+            for j in 0..2 * n {
+                let mut acc = 0.0f32;
+                for c in 0..cin {
+                    for t in 0..3 {
+                        acc += w[(o * cin + c) * 3 + t] * xz[c * nz + j + t];
+                    }
+                }
+                assert!((got[o * 2 * n + j] - acc).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(14);
+        let (batch, fin, fout) = (3usize, 5usize, 4usize);
+        let h = rng.normal_vec(batch * fin, 1.0);
+        let w = rng.normal_vec(fout * fin, 0.5);
+        let b = rng.normal_vec(fout, 0.1);
+        let probe = rng.normal_vec(batch * fout, 1.0);
+        let (dh, dw, db) = dense_bwd(&h, batch, fin, &w, fout, &probe);
+        finite_diff(|hh| dense_fwd(hh, batch, fin, &w, &b, fout), &h, &dh, &probe, 2e-2);
+        finite_diff(|ww| dense_fwd(&h, batch, fin, ww, &b, fout), &w, &dw, &probe, 2e-2);
+        finite_diff(|bb| dense_fwd(&h, batch, fin, &w, bb, fout), &b, &db, &probe, 2e-2);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_sums_to_zero_per_row() {
+        let logits = vec![1.0, 2.0, 0.5, -1.0, 0.0, 3.0];
+        let (loss, acc, d) = softmax_xent_and_acc(&logits, 2, 3, &[1, 2]);
+        assert!(loss > 0.0 && loss.is_finite());
+        assert_eq!(acc, 1.0); // argmaxes are 1 and 2
+        for bi in 0..2 {
+            let s: f32 = d[bi * 3..(bi + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_xent_matches_finite_difference() {
+        let mut rng = Rng::new(15);
+        let (batch, classes) = (4usize, 5usize);
+        let logits = rng.normal_vec(batch * classes, 1.0);
+        let y: Vec<i32> = (0..batch).map(|b| (b % classes) as i32).collect();
+        let (_, _, d) = softmax_xent_and_acc(&logits, batch, classes, &y);
+        let eps = 1e-3f32;
+        for i in 0..logits.len() {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let (up, _, _) = softmax_xent_and_acc(&lp, batch, classes, &y);
+            lp[i] -= 2.0 * eps;
+            let (um, _, _) = softmax_xent_and_acc(&lp, batch, classes, &y);
+            let num = (up - um) / (2.0 * eps);
+            assert!((num - d[i]).abs() < 2e-3, "coord {i}: {num} vs {}", d[i]);
+        }
+    }
+
+    #[test]
+    fn gap_roundtrip() {
+        let h = vec![1.0, 3.0, 2.0, 6.0]; // (2, 2)
+        assert_eq!(gap_fwd(&h, 2, 2), vec![2.0, 4.0]);
+        assert_eq!(gap_bwd(&[2.0, 4.0], 2, 2), vec![1.0, 1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn activations_branch_at_zero_like_jnp() {
+        // jnp.where(x >= 0, x, s*x): zero maps to zero with slope-1 branch.
+        assert_eq!(leaky_relu_fwd(&[0.0, -1.0, 2.0]), vec![0.0, -0.01, 2.0]);
+        assert_eq!(leaky_relu_bwd(&[0.0, -1.0, 2.0], &[1.0, 1.0, 1.0]), vec![1.0, 0.01, 1.0]);
+        assert_eq!(relu_bwd(&[0.0, -1.0, 2.0], &[1.0, 1.0, 1.0]), vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn mse_and_grad_scaling() {
+        let (l, d) = mse_and_grad(&[1.0, 2.0], &[0.0, 0.0], 0.5);
+        assert!((l - 2.5).abs() < 1e-6);
+        assert!((d[0] - 0.5).abs() < 1e-6); // 0.5 * 2 * 1 / 2
+        assert!((d[1] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,138 @@
+//! PJRT backend: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only module that touches the `xla` crate. Wiring follows
+//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` (HLO *text*
+//! interchange — xla_extension 0.5.1 rejects jax>=0.5 serialized protos)
+//! -> `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute`.
+//!
+//! Executables are compiled lazily and cached per module name; I/O
+//! validation against the manifest happens one level up, in
+//! [`crate::runtime::Engine::run`], so it is shared with the native
+//! backend.
+//!
+//! Thread model: the executable cache sits behind a mutex and the PJRT
+//! CPU client is internally synchronized, so the backend is `Sync` and
+//! the coordinator's parallel node runtime (`coordinator::parallel`) can
+//! drive per-node grad steps from worker threads through one shared
+//! engine.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::{Backend, Manifest, ModuleMeta, Tensor};
+
+/// Thread-sharing wrapper for the PJRT client.
+///
+/// SAFETY: the PJRT CPU client is internally synchronized (this is the
+/// same soundness argument the integration suite's old `EngineHolder`
+/// made when it shared an Engine across test threads), and all mutable
+/// engine state on our side lives behind the mutexes below.  With the
+/// offline stub the impls are vacuous (the stub types are plain data and
+/// already `Send + Sync`); with the real `xla` crate — whose client is a
+/// raw-pointer wrapper and therefore not auto-`Sync` — they carry the
+/// internal-synchronization justification, keeping the parallel node
+/// runtime compiling in both configurations.
+struct SyncClient(xla::PjRtClient);
+
+unsafe impl Send for SyncClient {}
+unsafe impl Sync for SyncClient {}
+
+pub struct PjrtBackend {
+    client: SyncClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+pub struct Executable {
+    pub name: String,
+    pub meta: ModuleMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: same argument as `SyncClient` — a loaded executable is
+// immutable after compilation and PJRT CPU execution is internally
+// synchronized; vacuous with the offline stub.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl PjrtBackend {
+    /// Open the artifacts directory (compiles nothing yet) and return the
+    /// backend together with the manifest it serves.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<(PjrtBackend, Manifest)> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = SyncClient(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+        Ok((
+            PjrtBackend { client, dir, cache: Mutex::new(HashMap::new()) },
+            manifest,
+        ))
+    }
+
+    /// Fetch (lazily compiling) an executable by manifest module name.
+    /// Concurrent first calls may compile the same module twice; the
+    /// cache keeps whichever lands last (identical artifacts, so this is
+    /// benign and avoids holding the lock across compilation).
+    fn exec(&self, name: &str, meta: &ModuleMeta) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = Arc::new(Executable { name: name.to_string(), meta: meta.clone(), exe });
+        self.cache.lock().unwrap().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.0.platform_name()
+    }
+
+    fn run(&self, name: &str, meta: &ModuleMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.exec(name, meta)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        exe.execute_literals(&literals)
+    }
+}
+
+impl Executable {
+    fn execute_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let result = self.exe.execute::<xla::Literal>(literals)?;
+        // aot.py lowers with return_tuple=True: one tuple literal out.
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, lit) in parts.iter().enumerate() {
+            let t = Tensor::from_literal(lit)
+                .with_context(|| format!("{}: output {}", self.name, i))?;
+            debug_assert_eq!(
+                t.dims, self.meta.outputs[i],
+                "{}: output {} shape drift", self.name, i
+            );
+            out.push(t);
+        }
+        Ok(out)
+    }
+}

@@ -40,9 +40,14 @@ impl std::fmt::Display for Stats {
 }
 
 /// Time `f` with `warmup` unrecorded runs then `iters` recorded runs.
+/// `iters == 0` records nothing and returns a zeroed `Stats` (the
+/// quantile indexing and mean would otherwise panic / NaN).
 pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
     for _ in 0..warmup {
         f();
+    }
+    if iters == 0 {
+        return Stats { iters: 0, mean_ns: 0.0, p50_ns: 0.0, p95_ns: 0.0, min_ns: 0.0 };
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
@@ -139,6 +144,20 @@ mod tests {
         assert_eq!(s.iters, 10);
         assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p95_ns);
         assert!(s.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn time_zero_iters_returns_zeroed_stats() {
+        // Regression: used to index an empty samples vec (panic) and
+        // divide by zero (NaN mean).
+        let mut calls = 0usize;
+        let s = time(2, 0, || calls += 1);
+        assert_eq!(calls, 2, "warmup still runs");
+        assert_eq!(s.iters, 0);
+        assert_eq!(s.mean_ns, 0.0);
+        assert_eq!(s.p50_ns, 0.0);
+        assert_eq!(s.p95_ns, 0.0);
+        assert_eq!(s.min_ns, 0.0);
     }
 
     #[test]

@@ -4,10 +4,16 @@
 //! Gating: a clean checkout has neither `artifacts/` (built by
 //! `make artifacts` with the JAX toolchain) nor a real PJRT backend (the
 //! offline build links the vendored xla stub).  Every test in this file
-//! therefore acquires the engine through [`engine`], which yields `None`
-//! in that environment and the test records itself as skipped — loudly,
-//! on stderr — instead of failing the tier-1 suite.  With artifacts and
-//! a real `xla` crate present the whole file runs against live HLOs.
+//! therefore acquires the engine through [`engine`], which requests the
+//! PJRT backend explicitly, yields `None` in that environment, and the
+//! test records itself as skipped — loudly, on stderr — instead of
+//! failing the tier-1 suite.  With artifacts and a real `xla` crate
+//! present the whole file runs against live HLOs.
+//!
+//! The same end-to-end coverage runs unconditionally on the native CPU
+//! backend in `tests/native_e2e.rs` — no artifacts, no PJRT, zero skips
+//! — so the full pipeline is exercised from a clean checkout; this file
+//! is what PJRT *adds* on top (AOT HLO parity).
 //!
 //! The PJRT client is process-global state; tests share one Engine via
 //! OnceLock.  `Engine` is `Sync` (mutexed executable cache + internally
@@ -18,18 +24,20 @@ use std::sync::{Mutex, MutexGuard, OnceLock};
 
 use lgc::config::{Method, SparsifySchedule, TrainConfig};
 use lgc::coordinator::{self, scheduler::Phase};
-use lgc::runtime::{Engine, Tensor};
+use lgc::runtime::{BackendKind, Engine, Tensor};
 
-/// Shared engine, or `None` when artifacts / PJRT are unavailable.
+/// Shared PJRT engine, or `None` when artifacts / PJRT are unavailable.
 fn engine() -> Option<MutexGuard<'static, Engine>> {
     static ENGINE: OnceLock<Option<Mutex<Engine>>> = OnceLock::new();
     ENGINE
-        .get_or_init(|| match Engine::open_default() {
+        .get_or_init(|| match Engine::open(BackendKind::Pjrt) {
             Ok(e) => Some(Mutex::new(e)),
             Err(err) => {
                 eprintln!(
-                    "integration suite: engine unavailable, tests will skip \
-                     (run `make artifacts` with a PJRT build to enable): {err:#}"
+                    "integration suite: PJRT engine unavailable, tests will skip \
+                     (run `make artifacts` with a PJRT build to enable; the \
+                     native-backend suite in native_e2e.rs covers this path \
+                     without artifacts): {err:#}"
                 );
                 None
             }
