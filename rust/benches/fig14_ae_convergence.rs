@@ -10,6 +10,6 @@ use lgc::runtime::Engine;
 fn main() -> anyhow::Result<()> {
     let engine = Engine::open_default()?;
     let steps = exp::default_steps();
-    exp::fig14(&engine, steps)?;
+    exp::fig14_ae(&engine, steps)?;
     Ok(())
 }

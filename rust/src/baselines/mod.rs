@@ -22,6 +22,7 @@ use crate::compress::{f16, index_coding, quantize, topk, Correction, FeedbackMem
 use crate::coordinator::parallel;
 use crate::coordinator::scheduler::{exponential_alpha, Phase};
 use crate::metrics::{Kind, Ledger, NodeLedger};
+use crate::net::NetSim;
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
 
@@ -51,6 +52,13 @@ pub struct ExchangeCtx<'a> {
     /// ledger shards (DESIGN.md §6.11): node-local stages borrow buffers
     /// from their node's arena instead of allocating per iteration.
     pub scratches: &'a mut [Scratch],
+    /// The simulated network fabric's event collector (DESIGN.md §11).
+    /// Shard-recorded uplinks reach it automatically at merge time;
+    /// strategies only report their *synchronization* traffic here:
+    /// server fan-outs ([`NetSim::fanout`]), leader/trainer broadcasts
+    /// ([`NetSim::broadcast`]), and ring steps (via
+    /// [`crate::coordinator::ring::ring_allreduce_mean_timed`]).
+    pub net: &'a mut NetSim,
 }
 
 /// Apply the configured value-payload precision: returns the values as
@@ -95,6 +103,9 @@ pub fn dense_mean_accounted(grads: &[Vec<f32>], shards: &mut [NodeLedger]) -> Ve
     mean
 }
 
+/// A mid-group exchange method: the single seam every comparator and
+/// both LGC instances plug into (strategy pattern over the §VI-A
+/// mid-layer group).
 pub trait MidStrategy {
     fn name(&self) -> &'static str;
 
@@ -117,7 +128,10 @@ impl MidStrategy for Baseline {
     }
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
-        Ok(dense_mean_accounted(grads, &mut *ctx.shards))
+        let mean = dense_mean_accounted(grads, &mut *ctx.shards);
+        // The server scatters the dense aggregate back to every worker.
+        ctx.net.fanout((mean.len() * 4) as u64);
+        Ok(mean)
     }
 }
 
@@ -126,6 +140,7 @@ impl MidStrategy for Baseline {
 /// parallel and leaves each node's packet in its scratch arena
 /// (`sc.idx` / `sc.vals`); the scatter-mean barrier reads the arenas in
 /// node order, so no per-packet allocation survives into steady state.
+#[allow(clippy::too_many_arguments)]
 fn sparse_ef_exchange(
     fbs: &mut [FeedbackMemory],
     grads: &[Vec<f32>],
@@ -134,21 +149,23 @@ fn sparse_ef_exchange(
     shards: &mut [NodeLedger],
     scratches: &mut [Scratch],
     threads: usize,
+    net: &mut NetSim,
 ) -> Result<Vec<f32>> {
     let n = grads[0].len();
     let k_sel = topk::k_of(n, alpha);
-    parallel::collect_node_results(parallel::par_zip3_mut(
+    let packet_bytes = parallel::collect_node_results(parallel::par_zip3_mut(
         threads,
         fbs,
         shards,
         scratches,
-        |node, fb, shard, sc| -> Result<()> {
+        |node, fb, shard, sc| -> Result<usize> {
             fb.accumulate(&grads[node]);
             fb.select_and_clear_into(k_sel, sc);
             let bytes = pack_values_in_place(&mut sc.vals, fp16);
             shard.record(Kind::Values, bytes);
-            shard.record(Kind::Indices, index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len());
-            Ok(())
+            let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
+            shard.record(Kind::Indices, coded);
+            Ok(bytes + coded)
         },
     ))?;
     let mut mean = vec![0.0f32; n];
@@ -157,6 +174,10 @@ fn sparse_ef_exchange(
     }
     let k = grads.len() as f32;
     mean.iter_mut().for_each(|m| *m /= k);
+    // Fan-out round: the server relays the sparse aggregate, measured as
+    // the concatenation of the per-node compressed packets (an upper
+    // bound on the union-support encoding; DESIGN.md §11).
+    net.fanout(packet_bytes.iter().map(|&b| b as u64).sum());
     Ok(mean)
 }
 
@@ -191,6 +212,7 @@ impl MidStrategy for SparseGd {
             &mut *ctx.shards,
             &mut *ctx.scratches,
             ctx.threads,
+            &mut *ctx.net,
         )
     }
 }
@@ -229,6 +251,7 @@ impl MidStrategy for Dgc {
             &mut *ctx.shards,
             &mut *ctx.scratches,
             ctx.threads,
+            &mut *ctx.net,
         )
     }
 }
@@ -274,22 +297,24 @@ impl MidStrategy for ScaleCom {
         // staged into the persistent support buffer so the arenas are
         // free for the gather stage.
         let leader = ctx.iter % nodes;
-        {
+        let coded = {
             let sc = &mut ctx.scratches[leader];
             let mem = self.fbs[leader].memory();
             topk::top_k_into(mem, k_sel, &mut sc.mags, &mut sc.idx, &mut sc.vals);
-            ctx.ledger.record(
-                leader,
-                Kind::Indices,
-                index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len(),
-            );
+            let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
+            ctx.ledger.record(leader, Kind::Indices, coded);
             self.support.clear();
             self.support.extend_from_slice(&sc.idx);
-        }
+            coded
+        };
+        // The leader's index broadcast is a synchronization round of its
+        // own on the fabric (DESIGN.md §11).
+        ctx.net.send(leader, coded as u64);
+        ctx.net.barrier();
         // Node-local stage 2: gather-at-support + value packing.
         let fp16 = ctx.fp16;
         let indices = &self.support;
-        parallel::par_zip3_mut(
+        let value_bytes = parallel::par_zip3_mut(
             ctx.threads,
             &mut self.fbs,
             &mut *ctx.shards,
@@ -298,6 +323,7 @@ impl MidStrategy for ScaleCom {
                 fb.take_at_into(indices, &mut sc.vals);
                 let bytes = pack_values_in_place(&mut sc.vals, fp16);
                 shard.record(Kind::Values, bytes);
+                bytes
             },
         );
         // Barrier: mean in node order.
@@ -306,6 +332,12 @@ impl MidStrategy for ScaleCom {
             topk::scatter_add(&mut mean, indices, &sc.vals);
         }
         mean.iter_mut().for_each(|m| *m /= nodes as f32);
+        // Fan-out: the server scatters one aggregated value payload (the
+        // support is already known to every node from the leader's
+        // broadcast); every node packed the same support, so any node's
+        // packet size is the aggregate's.
+        debug_assert!(value_bytes.iter().all(|&b| b == value_bytes[0]));
+        ctx.net.fanout(value_bytes[0] as u64);
         Ok(mean)
     }
 }
@@ -357,6 +389,8 @@ impl MidStrategy for Qsgd {
         }
         let k = grads.len() as f32;
         mean.iter_mut().for_each(|m| *m /= k);
+        // Fan-out: the dequantized aggregate is dense again.
+        ctx.net.fanout((n * 4) as u64);
         Ok(mean)
     }
 }
@@ -403,12 +437,12 @@ impl MidStrategy for HardThreshold {
         let n = grads[0].len();
         let k_target = topk::k_of(n, self.alpha);
         let fp16 = ctx.fp16;
-        parallel::collect_node_results(parallel::par_zip3_mut(
+        let packet_bytes = parallel::collect_node_results(parallel::par_zip3_mut(
             ctx.threads,
             &mut self.nodes,
             &mut *ctx.shards,
             &mut *ctx.scratches,
-            |node, st, shard, sc| -> Result<()> {
+            |node, st, shard, sc| -> Result<usize> {
                 st.fb.accumulate(&grads[node]);
                 if st.threshold == 0.0 {
                     // Calibrate from the first post-accumulation
@@ -434,7 +468,7 @@ impl MidStrategy for HardThreshold {
                 shard.record(Kind::Values, bytes);
                 let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
                 shard.record(Kind::Indices, coded);
-                Ok(())
+                Ok(bytes + coded)
             },
         ))?;
         let mut mean = vec![0.0f32; n];
@@ -442,6 +476,9 @@ impl MidStrategy for HardThreshold {
             topk::scatter_add(&mut mean, &sc.idx, &sc.vals);
         }
         mean.iter_mut().for_each(|m| *m /= grads.len() as f32);
+        // Fan-out: relay of the concatenated per-node packets (variable
+        // payloads, so this is measured per iteration).
+        ctx.net.fanout(packet_bytes.iter().map(|&b| b as u64).sum());
         Ok(mean)
     }
 }
@@ -473,9 +510,11 @@ mod tests {
         ];
         let mut shards = NodeLedger::for_nodes(2);
         let mut scratches = Scratch::for_nodes(2);
-        let mean =
-            sparse_ef_exchange(&mut fbs, &grads, 0.34, false, &mut shards, &mut scratches, 1)
-                .unwrap();
+        let mut net = NetSim::new(Default::default(), 2);
+        let mean = sparse_ef_exchange(
+            &mut fbs, &grads, 0.34, false, &mut shards, &mut scratches, 1, &mut net,
+        )
+        .unwrap();
         // k = ceil(0.34 * 6) = 3 coords per node transmitted; transmitted
         // + residual must equal the accumulated gradient per node (the
         // stronger invariant is proptested in tests/proptests.rs).
@@ -500,19 +539,27 @@ mod tests {
             let mut shards = NodeLedger::for_nodes(nodes);
             let mut scratches = Scratch::for_nodes(nodes);
             let mut ledger = Ledger::new();
+            let mut net = NetSim::new(Default::default(), nodes);
             let mut means = Vec::new();
             for _ in 0..4 {
                 let grads: Vec<Vec<f32>> =
                     (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
                 let mean = sparse_ef_exchange(
                     &mut fbs, &grads, 0.05, false, &mut shards, &mut scratches, threads,
+                    &mut net,
                 )
                 .unwrap();
+                for shard in shards.iter() {
+                    let (msgs, bytes) = shard.pending_recurring();
+                    net.send_many(shard.node(), msgs, bytes);
+                }
+                net.end_iteration();
                 ledger.merge_shards(&mut shards);
                 ledger.end_iteration();
                 means.push(mean);
             }
-            (means, ledger.iter_bytes.clone(), ledger.total())
+            let report = net.into_report();
+            (means, ledger.iter_bytes.clone(), ledger.total(), report)
         };
         let base = run(1);
         for threads in [2, 4, 8] {

@@ -24,12 +24,17 @@ use anyhow::Result;
 use crate::runtime::{Engine, Tensor};
 use crate::util::rng::Rng;
 
+/// Which §V-B communication pattern an autoencoder instance serves
+/// (the two differ in decoder layout and training entry point).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Pattern {
     ParamServer,
     RingAllreduce,
 }
 
+/// The learned gradient compressor: host-side parameter store +
+/// dispatcher for the per-(mu, K) AE modules (encode, pattern-specific
+/// decode, online train step).
 pub struct AeCompressor {
     pub mu: usize,
     pub k_nodes: usize,
@@ -63,6 +68,9 @@ fn he_init_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
 }
 
 impl AeCompressor {
+    /// He-initialize a compressor for `mu`-length value-vectors and
+    /// `k_nodes` nodes; fails cleanly when the manifest lacks the
+    /// (mu, K) module family.
     pub fn new(
         engine: &Engine,
         mu: usize,

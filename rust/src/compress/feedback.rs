@@ -14,6 +14,7 @@
 use super::scratch::Scratch;
 use super::topk::{self, TopK};
 
+/// How the memory folds fresh gradients in (Table III).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Correction {
     /// acc += g (Sparse GD)
@@ -22,6 +23,8 @@ pub enum Correction {
     Momentum,
 }
 
+/// One node's error-feedback memory: the accumulated residual of
+/// everything selection has not yet transmitted.
 #[derive(Debug, Clone)]
 pub struct FeedbackMemory {
     correction: Correction,
@@ -33,14 +36,17 @@ pub struct FeedbackMemory {
 }
 
 impl FeedbackMemory {
+    /// Zeroed memory over `n` coordinates.
     pub fn new(n: usize, correction: Correction, momentum: f32) -> Self {
         FeedbackMemory { correction, momentum, u: vec![0.0; n], v: vec![0.0; n] }
     }
 
+    /// Number of coordinates the memory tracks.
     pub fn len(&self) -> usize {
         self.v.len()
     }
 
+    /// Whether the memory tracks zero coordinates (empty group).
     pub fn is_empty(&self) -> bool {
         self.v.is_empty()
     }

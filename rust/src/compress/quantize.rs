@@ -71,6 +71,7 @@ pub fn qsgd_into(
     bytes
 }
 
+/// Allocating wrapper around [`qsgd_into`].
 pub fn qsgd(g: &[f32], levels: u32, bucket: usize, rng: &mut Rng) -> QsgdPacket {
     let mut dequant = Vec::new();
     let bytes = qsgd_into(g, levels, bucket, rng, &mut dequant);

@@ -43,6 +43,7 @@ pub struct EncScratch {
 }
 
 impl EncScratch {
+    /// Empty codec state; buffers grow to the workload's high-water mark.
     pub fn new() -> EncScratch {
         EncScratch {
             varints: Vec::new(),
@@ -59,6 +60,7 @@ impl Default for EncScratch {
 }
 
 impl Scratch {
+    /// Empty arena; buffers grow on first use and are then reused.
     pub fn new() -> Scratch {
         Scratch {
             mags: Vec::new(),

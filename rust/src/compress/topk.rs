@@ -93,6 +93,14 @@ pub fn top_k_into(
 /// resolved by index order, and the result is always *exactly*
 /// `min(k, g.len())` entries (the paper's rate accounting assumes a fixed
 /// payload size); degenerate inputs return an empty selection.
+///
+/// ```
+/// use lgc::compress::topk::top_k;
+/// let t = top_k(&[0.1, -5.0, 0.2, 3.0, -0.3], 2);
+/// assert_eq!(t.indices, vec![1, 3]); // ascending indices...
+/// assert_eq!(t.values, vec![-5.0, 3.0]); // ...values in index order
+/// assert!(t.threshold >= 0.3 && t.threshold <= 3.0);
+/// ```
 pub fn top_k(g: &[f32], k: usize) -> TopK {
     let mut indices = Vec::new();
     let mut values = Vec::new();

@@ -5,6 +5,7 @@
 //! [`TrainConfig`].  Presets encode the paper's per-experiment settings
 //! scaled to this testbed (DESIGN.md §5).
 
+use crate::net::{model::parse_bandwidth_mbits, Fabric, LinkModel};
 use crate::util::cli::Args;
 
 /// Which gradient-compression method runs the mid-group exchange.
@@ -133,6 +134,15 @@ pub struct TrainConfig {
     /// available core).  Thread count changes wall-clock only: curves and
     /// ledgers are bit-identical across values (DESIGN.md §6.5).
     pub threads: usize,
+    /// Modeled link bandwidth in megabits/s for the network fabric
+    /// (DESIGN.md §11; the paper's Fig. 14 sweeps this axis).
+    pub bandwidth_mbits: f64,
+    /// Modeled per-message base latency in seconds.
+    pub latency_s: f64,
+    /// Per-node straggler multipliers as `(node, multiplier)` overrides;
+    /// unlisted nodes are nominal (1.0).  Entries naming nodes beyond
+    /// `nodes` are ignored.
+    pub straggler_spec: Vec<(usize, f64)>,
     pub verbose: bool,
 }
 
@@ -163,9 +173,35 @@ impl Default for TrainConfig {
             fp16_values: false,
             ae_gate: 0.55,
             threads: 0,
+            bandwidth_mbits: 1000.0,
+            latency_s: 50e-6,
+            straggler_spec: Vec::new(),
             verbose: false,
         }
     }
+}
+
+/// Parse a `--straggler` spec: either a bare multiplier applied to node 0
+/// (`"2.5"`) or comma-separated `node:multiplier` pairs (`"0:2,3:1.5"`).
+pub fn parse_straggler_spec(s: &str) -> Option<Vec<(usize, f64)>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (node, mult) = match part.split_once(':') {
+            Some((n, m)) => {
+                (n.trim().parse::<usize>().ok()?, m.trim().parse::<f64>().ok()?)
+            }
+            None => (0usize, part.parse::<f64>().ok()?),
+        };
+        if !mult.is_finite() || mult <= 0.0 {
+            return None;
+        }
+        out.push((node, mult));
+    }
+    Some(out)
 }
 
 impl TrainConfig {
@@ -176,6 +212,18 @@ impl TrainConfig {
         self.warmup_iters = (self.steps / 10).max(10);
         self.ae_train_iters = (self.steps * 3 / 20).max(15);
         self
+    }
+
+    /// Materialize the simulated network fabric for this run: the
+    /// configured link plus a per-node straggler vector (DESIGN.md §11).
+    pub fn fabric(&self) -> Fabric {
+        let mut mults = vec![1.0f64; self.nodes];
+        for &(node, m) in &self.straggler_spec {
+            if node < self.nodes {
+                mults[node] = m;
+            }
+        }
+        Fabric::new(LinkModel::from_mbits(self.bandwidth_mbits, self.latency_s), mults)
     }
 
     pub fn from_args(a: &Args) -> TrainConfig {
@@ -201,6 +249,15 @@ impl TrainConfig {
         c.seed = a.u64("seed", c.seed);
         c.fp16_values = a.has("fp16");
         c.threads = a.usize("threads", c.threads);
+        if let Some(b) = a.opt_str("bandwidth") {
+            c.bandwidth_mbits = parse_bandwidth_mbits(&b)
+                .unwrap_or_else(|| panic!("bad --bandwidth {b:?} (e.g. 1gbps, 50mbps, 250)"));
+        }
+        c.latency_s = a.f32("latency-us", (c.latency_s * 1e6) as f32) as f64 * 1e-6;
+        if let Some(s) = a.opt_str("straggler") {
+            c.straggler_spec = parse_straggler_spec(&s)
+                .unwrap_or_else(|| panic!("bad --straggler {s:?} (e.g. 2.5 or 0:2,3:1.5)"));
+        }
         c.verbose = a.has("verbose");
         c
     }
@@ -228,12 +285,40 @@ mod tests {
     }
 
     #[test]
+    fn straggler_spec_parsing() {
+        assert_eq!(parse_straggler_spec("2.5"), Some(vec![(0, 2.5)]));
+        assert_eq!(
+            parse_straggler_spec("0:2,3:1.5"),
+            Some(vec![(0, 2.0), (3, 1.5)])
+        );
+        assert_eq!(parse_straggler_spec(""), Some(vec![]));
+        assert_eq!(parse_straggler_spec("0:-1"), None);
+        assert_eq!(parse_straggler_spec("a:b"), None);
+    }
+
+    #[test]
+    fn fabric_materializes_stragglers_per_node() {
+        let c = TrainConfig {
+            nodes: 4,
+            bandwidth_mbits: 100.0,
+            latency_s: 1e-4,
+            straggler_spec: vec![(1, 2.0), (9, 7.0)], // node 9 out of range
+            ..Default::default()
+        };
+        let f = c.fabric();
+        assert_eq!(f.stragglers, vec![1.0, 2.0, 1.0, 1.0]);
+        assert!((f.link.mbits() - 100.0).abs() < 1e-9);
+        assert_eq!(f.link.latency_s, 1e-4);
+    }
+
+    #[test]
     fn from_args_overrides() {
         let a = Args::parse(
             ["--model", "resnet_mini", "--method", "dgc", "--steps", "7"]
                 .iter()
                 .map(|s| s.to_string()),
             &["model", "method", "steps"],
+            &[],
         )
         .unwrap();
         let c = TrainConfig::from_args(&a);

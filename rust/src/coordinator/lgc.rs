@@ -24,7 +24,7 @@
 //!   weights are broadcast once when phase 3 begins (rate counted).
 //!
 //! Execution model (DESIGN.md §6.5, §6.11): each simulated node owns one
-//! [`NodeState`] — its EF memory, its value-vector and innovation
+//! `NodeState` — its EF memory, its value-vector and innovation
 //! buffers, and its scratch arena — so the node-local stages (EF
 //! accumulation, gather-at-support, innovation selection, per-node
 //! encode/decode) fan out over `coordinator::parallel` with zero
@@ -116,6 +116,8 @@ fn innovation_into(
     Ok(sc.vals.len() * 4 + coded)
 }
 
+/// State shared by both LGC instances: per-node rows, the autoencoder,
+/// the leader's broadcast support, and the phase-3 readiness gate.
 pub struct LgcCommon {
     nodes: Vec<NodeState>,
     pub ae: AeCompressor,
@@ -235,6 +237,19 @@ impl LgcCommon {
         }
         mean.iter_mut().for_each(|m| *m /= nodes as f32);
 
+        // Result redistribution: PS scatters from the server (server-side
+        // traffic, fabric time only like every fan-out); RAR's
+        // per-iteration trainer node unicasts the mu aggregated values to
+        // its K-1 peers (paper Fig. 7) — the trainer is a *worker*, so
+        // those bytes are uplink: ledger-recorded on the barrier path
+        // (§6.5) in lockstep with the fabric broadcast.
+        if ps {
+            ctx.net.fanout((self.mu * 4) as u64);
+        } else if nodes > 1 {
+            ctx.ledger.record(trainer, Kind::Values, (nodes - 1) * self.mu * 4);
+            ctx.net.broadcast(trainer, (self.mu * 4) as u64);
+        }
+
         // Online AE training on the just-observed value-vectors.  The data
         // already sits where the trainer runs (master for PS, the gathered
         // trainer node for RAR), so the inner steps add compute, not bytes
@@ -312,11 +327,11 @@ impl LgcCommon {
                 .partial_cmp(&mem[a as usize])
                 .unwrap_or(std::cmp::Ordering::Equal)
         });
-        ctx.ledger.record(
-            leader,
-            Kind::Indices,
-            index_coding::encode_ordered_into(support, &mut st.scratch.enc)?.len(),
-        );
+        let coded = index_coding::encode_ordered_into(support, &mut st.scratch.enc)?.len();
+        ctx.ledger.record(leader, Kind::Indices, coded);
+        // The leader's ordered-support broadcast is its own fabric round.
+        ctx.net.send(leader, coded as u64);
+        ctx.net.barrier();
         Ok(())
     }
 }
@@ -325,11 +340,14 @@ impl LgcCommon {
 // Parameter-server instance
 // ---------------------------------------------------------------------------
 
+/// LGC over the parameter-server pattern (§V-B1, Algorithm 1).
 pub struct LgcPs {
     c: LgcCommon,
 }
 
 impl LgcPs {
+    /// Build the PS instance over `n` mid-group coordinates with a
+    /// mu-length learned compressor.
     pub fn new(
         engine: &crate::runtime::Engine,
         nodes: usize,
@@ -341,6 +359,7 @@ impl LgcPs {
         Ok(LgcPs { c: LgcCommon::new(nodes, n, mu, &p, ae) })
     }
 
+    /// The learned compressor (losses, latent sizing) for inspection.
     pub fn ae(&self) -> &AeCompressor {
         &self.c.ae
     }
@@ -353,7 +372,11 @@ impl MidStrategy for LgcPs {
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
         match ctx.phase {
-            Phase::Dense => Ok(dense_mean_accounted(grads, &mut *ctx.shards)),
+            Phase::Dense => {
+                let mean = dense_mean_accounted(grads, &mut *ctx.shards);
+                ctx.net.fanout((mean.len() * 4) as u64);
+                Ok(mean)
+            }
             Phase::TopK => self.c.topk_phase(ctx, grads, true),
             Phase::Compressed if !self.c.check_ae_ready() => {
                 // AE not converged yet: stay on exact top-k updates and
@@ -384,10 +407,12 @@ impl MidStrategy for LgcPs {
                     },
                 ))?;
 
-                // Barrier: leader uploads the compressed common
-                // representation (latent + RMS scale).
+                // Leader uploads the compressed common representation
+                // (latent + RMS scale).  Recorded on the leader's shard
+                // so it joins the iteration's fan-in round on the fabric,
+                // overlapping with the other nodes' innovation uplinks.
                 let (latent, _s0) = self.c.ae.encode(ctx.engine, &self.c.nodes[leader].vv)?;
-                ctx.ledger.record(leader, Kind::Latent, self.c.ae.latent_bytes());
+                ctx.shards[leader].record(Kind::Latent, self.c.ae.latent_bytes());
 
                 // Master decodes per node with decoder D_c^k and the
                 // node's innovation (eqs. 12-13); decodes fan out, the
@@ -420,6 +445,9 @@ impl MidStrategy for LgcPs {
                         st.fb.add_at(&self.c.support, &e);
                     });
                 }
+                // Fan-out: the master scatters the mu averaged
+                // reconstruction values (support already broadcast).
+                ctx.net.fanout((self.c.mu * 4) as u64);
                 if std::env::var("LGC_DEBUG").is_ok() {
                     let mut true_mean = vec![0.0f32; self.c.mu];
                     for st in &self.c.nodes {
@@ -446,6 +474,7 @@ impl MidStrategy for LgcPs {
 // Ring-allreduce instance
 // ---------------------------------------------------------------------------
 
+/// LGC over the ring-allreduce pattern (§V-B2, Algorithm 2).
 pub struct LgcRar {
     c: LgcCommon,
     /// Reused per-node working copies for the dense-phase ring allreduce
@@ -456,6 +485,8 @@ pub struct LgcRar {
 }
 
 impl LgcRar {
+    /// Build the RAR instance over `n` mid-group coordinates with a
+    /// mu-length learned compressor.
     pub fn new(
         engine: &crate::runtime::Engine,
         nodes: usize,
@@ -471,6 +502,7 @@ impl LgcRar {
         })
     }
 
+    /// The learned compressor (losses, latent sizing) for inspection.
     pub fn ae(&self) -> &AeCompressor {
         &self.c.ae
     }
@@ -496,7 +528,12 @@ impl MidStrategy for LgcRar {
                     w.clear();
                     w.extend_from_slice(g);
                 }
-                Ok(ring::ring_allreduce_mean(&mut self.ring_work, ctx.ledger, Kind::Dense))
+                Ok(ring::ring_allreduce_mean_timed(
+                    &mut self.ring_work,
+                    ctx.ledger,
+                    Kind::Dense,
+                    Some(&mut *ctx.net),
+                ))
             }
             Phase::TopK => self.c.topk_phase(ctx, grads, false),
             Phase::Compressed if !self.c.check_ae_ready() => {
@@ -508,11 +545,14 @@ impl MidStrategy for LgcRar {
                 if !self.weights_broadcast {
                     // One-time AE weight broadcast from the trainer node
                     // (counted in totals; excluded from per-iter rates).
+                    // On the fabric it serializes K-1 unicasts on the
+                    // trainer's link — a real, if one-off, time cost.
                     ctx.ledger.record_oneoff(
                         ctx.iter % nodes,
                         Kind::AeWeights,
                         self.c.ae.param_bytes() * (nodes - 1),
                     );
+                    ctx.net.broadcast_oneoff(ctx.iter % nodes, self.c.ae.param_bytes() as u64);
                     self.weights_broadcast = true;
                 }
                 self.c.leader_support_inner(ctx, grads, ctx.iter % nodes)?;
@@ -538,9 +578,14 @@ impl MidStrategy for LgcRar {
                     latents.push(lat);
                     scales.push(s);
                 }
-                // Barrier: ring-allreduce the latents (eq. 19).
-                let latent_avg =
-                    ring::ring_allreduce_mean(&mut latents, ctx.ledger, Kind::Latent);
+                // Barrier: ring-allreduce the latents (eq. 19), one
+                // fabric round per chunked step.
+                let latent_avg = ring::ring_allreduce_mean_timed(
+                    &mut latents,
+                    ctx.ledger,
+                    Kind::Latent,
+                    Some(&mut *ctx.net),
+                );
                 let scale_avg = scales.iter().sum::<f32>() / nodes as f32;
                 // Every node decodes the same averaged latent; compute is
                 // replicated, the result identical — one decode suffices.

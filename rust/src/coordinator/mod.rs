@@ -38,6 +38,7 @@ use crate::config::{Method, TrainConfig};
 use crate::data::{self, Dataset};
 use crate::metrics::{Kind, Ledger, NodeLedger};
 use crate::model::{Group, Model};
+use crate::net::{LinkModel, NetReport, NetSim};
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
 use scheduler::{phase_and_alpha, Phase};
@@ -65,6 +66,9 @@ pub struct CurvePoint {
     pub train_acc: f32,
 }
 
+/// Everything a finished run hands to the experiment drivers: curves,
+/// evals, the measured byte ledger, wall-clock breakdowns, AE traces,
+/// and the network fabric's modeled-time report.
 #[derive(Debug, Clone)]
 pub struct TrainResult {
     pub method: Method,
@@ -87,6 +91,9 @@ pub struct TrainResult {
     pub time_grad: Duration,
     pub time_exchange: Duration,
     pub time_update: Duration,
+    /// The simulated network fabric's recorded trace + pricing — the
+    /// per-node modeled time ledger (DESIGN.md §11).
+    pub net: NetReport,
 }
 
 impl TrainResult {
@@ -110,8 +117,25 @@ impl TrainResult {
         self.steady_total_bytes_per_iter(50) / self.nodes as f64 / 1e6
     }
 
+    /// Train loss at the last recorded iteration (NaN for empty runs).
     pub fn final_train_loss(&self) -> f32 {
         self.curve.last().map(|c| c.train_loss).unwrap_or(f32::NAN)
+    }
+
+    /// Steady-state modeled communication seconds per iteration under
+    /// `link` (same steady-state window rule as
+    /// [`TrainResult::steady_total_bytes_per_iter`]; straggler
+    /// multipliers stay those the run was recorded with).
+    pub fn steady_comm_s_at(&self, link: LinkModel, window: usize) -> f64 {
+        self.steady_comm_s_under(&self.net.fabric.with_link(link), window)
+    }
+
+    /// [`TrainResult::steady_comm_s_at`] under an arbitrary fabric
+    /// (different link and/or straggler multipliers) — scenario sweeps
+    /// reprice one recorded run instead of retraining (ablation A5).
+    pub fn steady_comm_s_under(&self, fabric: &crate::net::Fabric, window: usize) -> f64 {
+        let steady_iters = *self.phase_iters.iter().rev().find(|&&n| n > 0).unwrap_or(&1);
+        self.net.steady_comm_s_under(fabric, window.min(steady_iters.max(1)))
     }
 }
 
@@ -159,6 +183,8 @@ fn make_strategy(
     })
 }
 
+/// The assembled training loop for one [`TrainConfig`]: model, data
+/// shards, mid-group strategy, per-node EF memories and scratch arenas.
 pub struct Trainer<'e> {
     pub engine: &'e Engine,
     pub cfg: TrainConfig,
@@ -176,6 +202,7 @@ pub struct Trainer<'e> {
 }
 
 impl<'e> Trainer<'e> {
+    /// Resolve the model, build the strategy and all per-node state.
     pub fn new(engine: &'e Engine, mut cfg: TrainConfig) -> Result<Trainer<'e>> {
         // Backend-portable model resolution: missing names fall back to
         // the manifest's reference workload (native backend).
@@ -215,27 +242,30 @@ impl<'e> Trainer<'e> {
         phase: Phase,
         grads: &[Vec<f32>],
         shards: &mut [NodeLedger],
+        net: &mut NetSim,
     ) -> Result<Vec<f32>> {
         let n = grads[0].len();
         let nodes = grads.len();
         let dense = matches!(self.cfg.method, Method::Baseline | Method::Qsgd)
             || phase == Phase::Dense;
         if dense {
-            return Ok(dense_mean_accounted(grads, shards));
+            let mean = dense_mean_accounted(grads, shards);
+            net.fanout((n * 4) as u64);
+            return Ok(mean);
         }
         let k_sel = topk::k_of(n, self.cfg.alpha);
-        parallel::collect_node_results(parallel::par_zip3_mut(
+        let packet_bytes = parallel::collect_node_results(parallel::par_zip3_mut(
             self.cfg.threads,
             &mut self.last_fbs,
             shards,
             &mut self.arenas,
-            |node, fb, shard, sc| -> Result<()> {
+            |node, fb, shard, sc| -> Result<usize> {
                 fb.accumulate(&grads[node]);
                 fb.select_and_clear_into(k_sel, sc);
                 shard.record(Kind::Values, sc.vals.len() * 4);
                 let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
                 shard.record(Kind::Indices, coded);
-                Ok(())
+                Ok(sc.vals.len() * 4 + coded)
             },
         ))?;
         let mut mean = vec![0.0f32; n];
@@ -243,6 +273,9 @@ impl<'e> Trainer<'e> {
             topk::scatter_add(&mut mean, &sc.idx, &sc.vals);
         }
         mean.iter_mut().for_each(|m| *m /= nodes as f32);
+        // Fan-out: relay of the concatenated per-node sparse packets
+        // (DESIGN.md §11).
+        net.fanout(packet_bytes.iter().map(|&b| b as u64).sum());
         Ok(mean)
     }
 
@@ -252,6 +285,9 @@ impl<'e> Trainer<'e> {
         let threads = self.cfg.threads;
         let mut ledger = Ledger::new();
         let mut shards = NodeLedger::for_nodes(self.cfg.nodes);
+        // The simulated network fabric records this run's event trace
+        // alongside the byte ledger (DESIGN.md §11).
+        let mut net = NetSim::new(self.cfg.fabric(), self.cfg.nodes);
         let mut curve = Vec::with_capacity(self.cfg.steps);
         let mut evals = Vec::new();
         let mut phase_time = [Duration::ZERO; 3];
@@ -309,8 +345,10 @@ impl<'e> Trainer<'e> {
 
             // --- exchanges (synchronization barriers) -------------------
             let t_ex0 = Instant::now();
-            // First layer: always dense (all methods, §VI-A).
+            // First layer: always dense (all methods, §VI-A), PS-style
+            // scatter of the aggregate on the fabric.
             let first_mean = dense_mean_accounted(&first_g, &mut shards);
+            net.fanout((first_mean.len() * 4) as u64);
 
             let mid_mean = {
                 let mut ctx = ExchangeCtx {
@@ -324,10 +362,11 @@ impl<'e> Trainer<'e> {
                     rng: &mut self.rng,
                     threads,
                     scratches: &mut self.arenas,
+                    net: &mut net,
                 };
                 self.strategy.exchange(&mut ctx, &mid_g)?
             };
-            let last_mean = self.last_exchange(phase, &last_g, &mut shards)?;
+            let last_mean = self.last_exchange(phase, &last_g, &mut shards, &mut net)?;
             time_exchange += t_ex0.elapsed();
 
             // --- update -------------------------------------------------
@@ -341,6 +380,26 @@ impl<'e> Trainer<'e> {
                 lr_at(&self.cfg, it),
             );
             time_update += t_up0.elapsed();
+            // Feed each node's pending shard payloads into the fabric's
+            // fan-in round (node-local uplinks pipeline per node; cross-
+            // node they run concurrently), then close the fabric
+            // iteration.  Must precede `merge_shards`, which drains the
+            // shards; same ascending-node order, so modeled times inherit
+            // the §6.5 thread-invariance.  Shard-recorded one-offs (none
+            // on today's strategy paths) close as a flagged setup round,
+            // keeping the steady-state time and byte views mirrored.
+            if shards.iter().any(|s| s.pending_oneoff().0 > 0) {
+                for shard in shards.iter() {
+                    let (msgs, bytes) = shard.pending_oneoff();
+                    net.send_many(shard.node(), msgs, bytes);
+                }
+                net.barrier_oneoff();
+            }
+            for shard in shards.iter() {
+                let (msgs, bytes) = shard.pending_recurring();
+                net.send_many(shard.node(), msgs, bytes);
+            }
+            net.end_iteration();
             // Deterministic shard merge (ascending node order), then close
             // the iteration's accounting window.
             ledger.merge_shards(&mut shards);
@@ -390,6 +449,7 @@ impl<'e> Trainer<'e> {
             time_grad,
             time_exchange,
             time_update,
+            net: net.into_report(),
         })
     }
 

@@ -9,6 +9,7 @@
 //! 2(K-1)/K * size bound is *measured* by the tests rather than assumed.
 
 use crate::metrics::{Kind, Ledger};
+use crate::net::NetSim;
 
 /// Chunk boundaries: near-equal split of `n` into `k` chunks.
 fn chunks(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
@@ -31,6 +32,19 @@ pub fn ring_allreduce_sum(
     ledger: &mut Ledger,
     kind: Kind,
 ) -> Vec<f32> {
+    ring_allreduce_sum_timed(vectors, ledger, kind, None)
+}
+
+/// [`ring_allreduce_sum`] that additionally emits one network round per
+/// chunked step into `net` — the `2 * (K - 1)` step structure the fabric
+/// prices (DESIGN.md §11).  Callers must close any pending sends with a
+/// barrier first, so the ring steps are rounds of their own.
+pub fn ring_allreduce_sum_timed(
+    vectors: &mut [Vec<f32>],
+    ledger: &mut Ledger,
+    kind: Kind,
+    mut net: Option<&mut NetSim>,
+) -> Vec<f32> {
     let k = vectors.len();
     assert!(k >= 1);
     let n = vectors[0].len();
@@ -52,10 +66,18 @@ pub fn ring_allreduce_sum(
         for (i, (c, data)) in outgoing.into_iter().enumerate() {
             let dst = (i + 1) % k;
             ledger.record(i, kind, data.len() * 4);
+            // Empty chunks (k > n) are never transmitted: no latency term.
+            match net.as_deref_mut() {
+                Some(net) if !data.is_empty() => net.send(i, (data.len() * 4) as u64),
+                _ => {}
+            }
             let slot = &mut vectors[dst][ch[c].clone()];
             for (d, v) in slot.iter_mut().zip(&data) {
                 *d += v;
             }
+        }
+        if let Some(net) = net.as_deref_mut() {
+            net.barrier();
         }
     }
     // After reduce-scatter, node i holds the full sum of chunk (i+1) mod k.
@@ -70,7 +92,15 @@ pub fn ring_allreduce_sum(
         for (i, (c, data)) in outgoing.into_iter().enumerate() {
             let dst = (i + 1) % k;
             ledger.record(i, kind, data.len() * 4);
+            // Empty chunks (k > n) are never transmitted: no latency term.
+            match net.as_deref_mut() {
+                Some(net) if !data.is_empty() => net.send(i, (data.len() * 4) as u64),
+                _ => {}
+            }
             vectors[dst][ch[c].clone()].copy_from_slice(&data);
+        }
+        if let Some(net) = net.as_deref_mut() {
+            net.barrier();
         }
     }
     vectors[0].clone()
@@ -82,8 +112,19 @@ pub fn ring_allreduce_mean(
     ledger: &mut Ledger,
     kind: Kind,
 ) -> Vec<f32> {
+    ring_allreduce_mean_timed(vectors, ledger, kind, None)
+}
+
+/// [`ring_allreduce_mean`] with the per-step network rounds of
+/// [`ring_allreduce_sum_timed`].
+pub fn ring_allreduce_mean_timed(
+    vectors: &mut [Vec<f32>],
+    ledger: &mut Ledger,
+    kind: Kind,
+    net: Option<&mut NetSim>,
+) -> Vec<f32> {
     let k = vectors.len() as f32;
-    let mut sum = ring_allreduce_sum(vectors, ledger, kind);
+    let mut sum = ring_allreduce_sum_timed(vectors, ledger, kind, net);
     for v in &mut sum {
         *v /= k;
     }
@@ -154,6 +195,68 @@ mod tests {
         let mut ledger = Ledger::new();
         let out = ring_allreduce_mean(&mut vecs, &mut ledger, crate::metrics::Kind::Dense);
         assert!(out.iter().all(|&x| (x - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn timed_ring_trace_matches_closed_form_oracle() {
+        use crate::net::topology::ring_allreduce_s;
+        use crate::net::{Fabric, LinkModel, NetSim};
+        let link = LinkModel::from_mbits(80.0, 1e-4); // 10 MB/s
+        for k in [2usize, 3, 4, 8] {
+            for n in [1000usize, 1001, 4096] {
+                let mut vecs: Vec<Vec<f32>> = (0..k).map(|_| vec![1.0; n]).collect();
+                let mut ledger = Ledger::new();
+                let mut net = NetSim::new(Fabric::new(link, Vec::new()), k);
+                ring_allreduce_sum_timed(
+                    &mut vecs,
+                    &mut ledger,
+                    Kind::Dense,
+                    Some(&mut net),
+                );
+                net.end_iteration();
+                let report = net.into_report();
+                // 2(K-1) rounds, one per chunked step.
+                assert_eq!(report.trace[0].len(), 2 * (k - 1), "k={k} n={n}");
+                let got = report.iter_comm_s()[0];
+                // Element-level oracle: every step is paced by the
+                // largest chunk, ceil(n/k) f32 elements.
+                let chunk_bytes = (n.div_ceil(k) * 4) as u64;
+                let want = 2.0 * (k - 1) as f64 * link.transfer_s(1, chunk_bytes);
+                assert!(
+                    (got - want).abs() < 1e-12 * want.max(1.0),
+                    "k={k} n={n}: {got} vs {want}"
+                );
+                // For k | n the byte-level closed form agrees exactly.
+                if n % k == 0 {
+                    let cf = ring_allreduce_s(&link, (n * 4) as u64, k);
+                    assert!((got - cf).abs() < 1e-12 * cf.max(1.0), "k={k} n={n}");
+                }
+                // The trace carries exactly the ledger's measured bytes.
+                assert_eq!(report.total_bytes(), ledger.total());
+            }
+        }
+    }
+
+    #[test]
+    fn timed_ring_straggler_paces_every_step() {
+        use crate::net::{Fabric, LinkModel, NetSim};
+        let link = LinkModel::from_mbits(80.0, 0.0);
+        let k = 4;
+        let n = 1000; // 4 | 1000: uniform 250-element (1000-byte) chunks
+        let run = |mult: f64| {
+            let mut vecs: Vec<Vec<f32>> = (0..k).map(|_| vec![1.0; n]).collect();
+            let mut ledger = Ledger::new();
+            let stragglers = vec![1.0, 1.0, mult, 1.0];
+            let mut net = NetSim::new(Fabric::new(link, stragglers), k);
+            ring_allreduce_sum_timed(&mut vecs, &mut ledger, Kind::Dense, Some(&mut net));
+            net.end_iteration();
+            net.into_report().iter_comm_s()[0]
+        };
+        // Every one of the 2(K-1) steps includes the straggler's link, so
+        // total time scales exactly with the multiplier.
+        let base = run(1.0);
+        let slow = run(3.0);
+        assert!((slow - 3.0 * base).abs() < 1e-12, "{slow} vs 3x{base}");
     }
 
     #[test]

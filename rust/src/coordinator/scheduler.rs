@@ -13,6 +13,7 @@
 
 use crate::config::{SparsifySchedule, TrainConfig};
 
+/// The three training phases of §V-B (eqs. 14-16).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     Dense,
@@ -21,6 +22,7 @@ pub enum Phase {
 }
 
 impl Phase {
+    /// Zero-based phase index (ledger phases are `index() + 1`).
     pub fn index(self) -> usize {
         match self {
             Phase::Dense => 0,
@@ -29,6 +31,7 @@ impl Phase {
         }
     }
 
+    /// Lower-case phase name for logs and CSV cells.
     pub fn name(self) -> &'static str {
         match self {
             Phase::Dense => "dense",

@@ -4,7 +4,10 @@
 //!   A1  innovation fraction (Algorithm 1's top-10%-of-g~): rate vs acc
 //!   A2  AE online budget (`ae_inner_steps`): reconstruction quality
 //!   A3  f16 value payloads: rate saving vs accuracy cost
-//!   A4  similarity-loss weight lambda_2 sweep (beyond Fig 14's 0/0.5)
+//!   A4  similarity-loss weight lambda_2 sweep (beyond the AE-convergence
+//!       figure's 0/0.5 comparison)
+//!   A5  straggler sensitivity of the two communication patterns on the
+//!       simulated fabric (DESIGN.md §11)
 //!
 //! Run with `lgc exp --id ablation [--steps N]`; outputs
 //! results/ablation_*.csv.
@@ -13,7 +16,9 @@ use anyhow::Result;
 
 use crate::config::{Method, TrainConfig};
 use crate::coordinator;
+use crate::exp::speedup::modeled_compute_s;
 use crate::metrics::Csv;
+use crate::net::{Fabric, LinkModel};
 use crate::runtime::Engine;
 use crate::util::bench::Table;
 
@@ -149,10 +154,61 @@ pub fn lambda2_sweep(engine: &Engine, steps: usize) -> Result<()> {
     Ok(())
 }
 
+/// A5: straggler sensitivity — one slow node hurts the ring pattern on
+/// every chunked step, while the PS pattern only pays it on the fan-in/
+/// fan-out maxima.  Modeled iteration time at 100 Mbit/s, node 0 slowed.
+///
+/// Trains each method *once* and reprices its recorded trace under each
+/// straggler fabric (multipliers never enter recording, only pricing;
+/// DESIGN.md §11).
+pub fn straggler_sweep(engine: &Engine, steps: usize) -> Result<()> {
+    println!("\n=== ablation A5: straggler multiplier (convnet5 K=4, 100 Mbit/s) ===");
+    let link = LinkModel::from_mbits(100.0, 50e-6);
+    let nodes = 4usize;
+    let mut t = Table::new(&["method", "straggler x", "comm ms/iter", "iter ms (modeled)"]);
+    let mut csv = Csv::new(
+        "results/ablation_straggler.csv",
+        &["method", "mult", "comm_ms", "iter_ms"],
+    );
+    for m in [Method::Baseline, Method::LgcPs, Method::LgcRar] {
+        let mut c = cfg("convnet5", m, nodes, steps);
+        c.bandwidth_mbits = link.mbits();
+        c.latency_s = link.latency_s;
+        let r = coordinator::train(engine, c)?;
+        let meta = engine.manifest.resolve_model("convnet5");
+        let compute_ms = (modeled_compute_s(meta.n_params, meta.batch)
+            + crate::exp::speedup::modeled_codec_s(m, meta.mu, nodes))
+            * 1e3;
+        for mult in [1.0f64, 1.5, 2.0, 4.0] {
+            let mut mults = vec![1.0; nodes];
+            mults[0] = mult;
+            let fabric = Fabric::new(link, mults);
+            let comm_ms = r.steady_comm_s_under(&fabric, 50) * 1e3;
+            let iter_ms = compute_ms + comm_ms;
+            t.row(&[
+                m.name().into(),
+                format!("{mult}"),
+                format!("{comm_ms:.3}"),
+                format!("{iter_ms:.3}"),
+            ]);
+            csv.row(&[
+                m.name().into(),
+                format!("{mult}"),
+                format!("{comm_ms}"),
+                format!("{iter_ms}"),
+            ]);
+        }
+    }
+    t.print();
+    csv.finish()?;
+    Ok(())
+}
+
 pub fn run_all(engine: &Engine, steps: usize) -> Result<()> {
     innovation_sweep(engine, steps)?;
     ae_budget_sweep(engine, steps)?;
     fp16_sweep(engine, steps)?;
     lambda2_sweep(engine, steps)?;
+    straggler_sweep(engine, steps)?;
     Ok(())
 }

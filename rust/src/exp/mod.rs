@@ -20,7 +20,7 @@ use crate::runtime::Engine;
 use crate::util::bench::Table;
 
 pub use info_plane::{info_plane_run, InfoPlaneRow};
-pub use speedup::{speedup_table, LinkModel};
+pub use speedup::{fig14, fig14_sweep, speedup_table, Fig14Opts, LinkModel, SweepPoint};
 
 /// Default step budget for table experiments; benches/CLI can override.
 pub fn default_steps() -> usize {
@@ -101,6 +101,7 @@ pub fn compare_methods(
                         time_grad: Default::default(),
                         time_exchange: Default::default(),
                         time_update: Default::default(),
+                        net: Default::default(),
                     },
                 });
             }
@@ -297,11 +298,14 @@ pub fn fig13(engine: &Engine, steps: usize) -> Result<()> {
     Ok(())
 }
 
-/// Fig 14: autoencoder reconstruction-loss convergence, lambda_2 ablation.
-pub fn fig14(engine: &Engine, steps: usize) -> Result<()> {
-    println!("\n=== Fig 14 (scaled): AE convergence ===");
+/// Fig 14 companion: autoencoder reconstruction-loss convergence during
+/// online training, with the lambda_2 ablation (`lgc exp fig14-ae`; the
+/// headline Fig. 14 speedup-vs-bandwidth sweep lives in
+/// [`speedup::fig14_sweep`]).
+pub fn fig14_ae(engine: &Engine, steps: usize) -> Result<()> {
+    println!("\n=== Fig 14 companion (scaled): AE convergence ===");
     let mut csv = Csv::new(
-        "results/fig14.csv",
+        "results/fig14_ae.csv",
         &["setting", "step", "rec_loss", "sim_loss"],
     );
     let mut t = Table::new(&["setting", "first rec loss", "last rec loss"]);
@@ -329,6 +333,6 @@ pub fn fig14(engine: &Engine, steps: usize) -> Result<()> {
     }
     t.print();
     csv.finish()?;
-    println!("-> results/fig14.csv");
+    println!("-> results/fig14_ae.csv");
     Ok(())
 }

@@ -25,6 +25,24 @@
 //! let result = coordinator::train(&engine, cfg).unwrap();
 //! println!("compression ratio: {:.0}x", result.compression_ratio());
 //! ```
+//!
+//! Module map (L3):
+//! * [`coordinator`] — the training loop, exchange protocols, per-node
+//!   parallel runtime;
+//! * [`compress`] — top-k selection, error feedback, index coding, f16,
+//!   the learned autoencoder front-end, per-node scratch arenas;
+//! * [`baselines`] — the paper's comparator methods behind one
+//!   [`baselines::MidStrategy`] trait;
+//! * [`metrics`] — the measured byte ledger every table derives from;
+//! * [`net`] — the simulated network fabric that turns measured bytes
+//!   into modeled wall-clock time (DESIGN.md §11);
+//! * [`exp`] — one driver per paper table/figure, each emitting
+//!   `results/*.csv`;
+//! * [`runtime`] — backend dispatch (PJRT or native CPU), manifest,
+//!   tensors;
+//! * [`config`], [`data`], [`model`], [`info`], [`util`] — run
+//!   configuration, synthetic datasets, the parameter store, the
+//!   information-plane estimator, and support code.
 
 pub mod baselines;
 pub mod compress;
@@ -35,5 +53,6 @@ pub mod exp;
 pub mod info;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod runtime;
 pub mod util;

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   train       run one distributed-training configuration
-//!   exp         regenerate a paper table/figure (--id table4|table5|...)
+//!   exp         regenerate a paper table/figure (`lgc exp fig14` or --id)
 //!   info-plane  §III MI/entropy analysis
 //!   latency     AE encode/decode latency measurement
 //!   profile     per-HLO-module call profile of a short run
@@ -10,30 +10,43 @@
 //!
 //! Examples:
 //!   lgc train --model resnet_mini --method lgc_ps --nodes 4 --steps 300
+//!   lgc exp fig14 --backend native
 //!   lgc exp --id table6 --steps 280
 //!   lgc info-plane --model resnet_mini --steps 40
 
 use anyhow::{bail, Result};
 
 use lgc::config::TrainConfig;
-use lgc::exp::{self, speedup::LinkModel};
+use lgc::exp::{self, speedup::LinkModel, Fig14Opts};
+use lgc::net::{model::parse_bandwidth_mbits, Topology};
 use lgc::runtime::{BackendKind, Engine};
 use lgc::util::cli::Args;
 
+/// Valued flags (`--flag value`).
 const FLAGS: &[&str] = &[
     "model", "method", "nodes", "steps", "lr", "momentum", "alpha", "warmup",
     "ae-train", "ae-lr", "lambda2", "schedule", "eval-every", "seed",
-    "threads", "verbose", "id", "bins", "pair", "bandwidth-mbps", "artifacts",
-    "backend", "assert-improves",
+    "threads", "id", "bins", "pair", "bandwidth-mbps", "artifacts",
+    "backend", "bandwidth", "latency-us", "straggler", "topology",
 ];
 
+/// Boolean switches (never consume the next token).
+const SWITCHES: &[&str] = &["verbose", "assert-improves", "fp16"];
+
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), FLAGS)
+    let args = Args::parse(std::env::args().skip(1), FLAGS, SWITCHES)
         .map_err(|e| anyhow::anyhow!("{e}\nrun `lgc help` for usage"))?;
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     if sub == "help" {
         print_help();
         return Ok(());
+    }
+    // Positionals are only meaningful for `exp <id>`; anywhere else a
+    // bare token is a mistake (e.g. `lgc train lgc_rar` missing
+    // `--method`) and must fail loudly, as unknown flags do.
+    let max_positionals = usize::from(sub == "exp");
+    if let Some(extra) = args.positional(max_positionals) {
+        bail!("unexpected argument {extra:?} for `{sub}`; run `lgc help` for usage");
     }
     if let Some(dir) = args.opt_str("artifacts") {
         std::env::set_var("LGC_ARTIFACTS", dir);
@@ -73,6 +86,25 @@ fn main() -> Result<()> {
                 r.info_size_mb(),
                 r.compression_ratio()
             );
+            let link = r.net.fabric.link;
+            let per_node_note = if r.net.fabric.has_stragglers() {
+                let rounded: Vec<f64> = r
+                    .net
+                    .per_node_s_at(link)
+                    .iter()
+                    .map(|s| (s * 1e3).round() / 1e3)
+                    .collect();
+                format!(", per-node link s: {rounded:?}")
+            } else {
+                String::new()
+            };
+            println!(
+                "modeled comm ({:.0} Mbit/s, {:.0} us): {:.3} ms/iter steady{}",
+                link.mbits(),
+                link.latency_s * 1e6,
+                r.steady_comm_s_at(link, 50) * 1e3,
+                per_node_note
+            );
             println!("{}", r.ledger.summary());
             if args.has("assert-improves") {
                 // CI gate: the run must end with a finite, improved loss.
@@ -82,7 +114,11 @@ fn main() -> Result<()> {
             }
         }
         "exp" => {
-            let id = args.str("id", "all");
+            // `lgc exp fig14` and `lgc exp --id fig14` are equivalent.
+            let id = args
+                .positional(0)
+                .map(str::to_string)
+                .unwrap_or_else(|| args.str("id", "all"));
             let steps = args.usize("steps", exp::default_steps());
             run_exp(&engine, &id, steps, &args)?;
         }
@@ -200,23 +236,61 @@ fn run_exp(engine: &Engine, id: &str, steps: usize, args: &Args) -> Result<()> {
             exp::fig13(engine, steps)?;
         }
         "fig14" => {
-            exp::fig14(engine, steps)?;
+            let mut opts = Fig14Opts {
+                model: args.str("model", "resnet_mini"),
+                nodes: args.usize("nodes", 4),
+                steps,
+                threads: args.usize("threads", 0),
+                ..Default::default()
+            };
+            opts.latency_s =
+                args.f32("latency-us", (opts.latency_s * 1e6) as f32) as f64 * 1e-6;
+            if let Some(b) = args.opt_str("bandwidth") {
+                // An explicit --bandwidth narrows the sweep to one point.
+                let mbits = parse_bandwidth_mbits(&b)
+                    .ok_or_else(|| anyhow::anyhow!("bad --bandwidth {b:?}"))?;
+                opts.bandwidths_mbits = vec![mbits];
+            }
+            if let Some(t) = args.opt_str("topology") {
+                opts.topology = Some(
+                    Topology::parse(&t)
+                        .ok_or_else(|| anyhow::anyhow!("bad --topology {t:?} (ps|ring)"))?,
+                );
+            }
+            if let Some(s) = args.opt_str("straggler") {
+                opts.straggler_spec = lgc::config::parse_straggler_spec(&s)
+                    .ok_or_else(|| anyhow::anyhow!("bad --straggler {s:?}"))?;
+            }
+            exp::fig14_sweep(engine, &opts)?;
+        }
+        "fig14-ae" => {
+            exp::fig14_ae(engine, steps)?;
         }
         "ablation" => {
             exp::ablation::run_all(engine, steps)?;
         }
         "speedup" => {
-            let mbps = args.f32("bandwidth-mbps", 125.0) as f64;
-            let link = LinkModel {
-                bandwidth_bytes_per_s: mbps * 1e6,
-                latency_s: 50e-6,
+            let link = if let Some(b) = args.opt_str("bandwidth") {
+                let mbits = parse_bandwidth_mbits(&b)
+                    .ok_or_else(|| anyhow::anyhow!("bad --bandwidth {b:?}"))?;
+                LinkModel::from_mbits(
+                    mbits,
+                    args.f32("latency-us", 50.0) as f64 * 1e-6,
+                )
+            } else {
+                // Legacy flag: megaBYTES per second.
+                let mbps = args.f32("bandwidth-mbps", 125.0) as f64;
+                LinkModel {
+                    bandwidth_bytes_per_s: mbps * 1e6,
+                    latency_s: args.f32("latency-us", 50.0) as f64 * 1e-6,
+                }
             };
             exp::speedup_table(engine, "resnet_mini", 4, steps, link)?;
         }
         "all" => {
             for id in [
                 "fig3", "table4", "table5", "table6", "fig10", "fig11", "fig12",
-                "fig13", "fig14", "speedup",
+                "fig13", "fig14", "fig14-ae", "speedup",
             ] {
                 run_exp(engine, id, steps, args)?;
             }
@@ -237,14 +311,26 @@ SUBCOMMANDS:
   train        --model M --method baseline|sparse_gd|dgc|scalecom|qsgd|lgc_ps|lgc_rar
                --nodes K --steps N [--lr F --alpha F --schedule warmup|fixed|exp
                --warmup N --ae-train N --lambda2 F --seed S --verbose
+               --fp16 (transmit sparse value payloads as f16)
                --threads T (0 = one per core; results are identical for any T)
                --assert-improves (exit nonzero unless train loss decreased)]
-  exp          --id table4|table5|table6|fig3|fig10|fig11|fig12|fig13|fig14|speedup|all
-               [--steps N]
+  exp          <id> or --id ID, one of table4|table5|table6|fig3|fig10|fig11|
+               fig12|fig13|fig14|fig14-ae|speedup|ablation|all  [--steps N]
+               fig14 = modeled speedup-vs-bandwidth sweep (results/
+               fig14_speedup.csv); fig14-ae = AE convergence traces
   info-plane   --model M [--steps N --bins B]
   latency      --model M
   profile      --model M --method X [--steps N]
   list
+
+NETWORK FABRIC (train, exp fig14, exp speedup; DESIGN.md §11):
+  --bandwidth B      modeled link bandwidth: 1gbps, 50mbps, or Mbit/s number
+                     (default 1gbps; exp fig14 sweeps 1000..50 Mbit/s unless set)
+  --latency-us L     per-message base latency in microseconds (default 50)
+  --straggler S      per-node slowdown: a bare multiplier for node 0 ("2.5")
+                     or node:mult pairs ("0:2,3:1.5")
+  --topology ps|ring restrict exp fig14's LGC curves to one pattern
+  (--bandwidth-mbps is the legacy exp-speedup flag, in megaBYTES/s)
 
 BACKENDS (--backend, or $LGC_BACKEND):
   auto    (default) PJRT when an artifacts dir with manifest.json exists,

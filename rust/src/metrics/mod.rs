@@ -14,6 +14,12 @@
 //! on thread interleaving — ledger totals are bit-identical between
 //! 1-thread and N-thread runs of the same seed (asserted by the
 //! proptests and the integration suite).
+//!
+//! The byte ledger has a time-axis companion: at shard-merge time the
+//! coordinator feeds every shard's pending payloads into the simulated
+//! network fabric ([`crate::net::NetSim`]), which turns the same measured
+//! bytes into a per-node modeled **time ledger** under the same
+//! deterministic merge discipline (DESIGN.md §11).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -34,6 +40,7 @@ pub enum Kind {
 }
 
 impl Kind {
+    /// Lower-case kind name for summaries and CSV cells.
     pub fn name(self) -> &'static str {
         match self {
             Kind::Dense => "dense",
@@ -45,6 +52,8 @@ impl Kind {
     }
 }
 
+/// The global measured-bytes ledger of one training run (§6.4): every
+/// accessor below derives from recorded payloads, never from formulas.
 #[derive(Debug, Default, Clone)]
 pub struct Ledger {
     /// Total uplink bytes per node (worker -> master / around the ring).
@@ -65,10 +74,12 @@ pub struct Ledger {
 }
 
 impl Ledger {
+    /// Empty ledger (phase 0 until [`Ledger::set_phase`]).
     pub fn new() -> Ledger {
         Ledger::default()
     }
 
+    /// Tag subsequent records with training phase `phase` (1-based).
     pub fn set_phase(&mut self, phase: u8) {
         self.phase = phase;
     }
@@ -119,6 +130,7 @@ impl Ledger {
         }
     }
 
+    /// Total bytes recorded across all nodes, kinds and phases.
     pub fn total(&self) -> u64 {
         self.per_node.values().sum()
     }
@@ -132,8 +144,8 @@ impl Ledger {
         tail.iter().sum::<u64>() as f64 / tail.len() as f64
     }
 
-    /// Max per-node bytes over the last `n` iterations / n (the per-node
-    /// uplink rate the paper's "info size" column reports).
+    /// Human-readable total + per-kind byte breakdown (the `lgc train`
+    /// end-of-run summary block).
     pub fn summary(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "total: {:.3} MB", self.total() as f64 / 1e6);
@@ -158,6 +170,7 @@ pub struct NodeLedger {
 }
 
 impl NodeLedger {
+    /// Empty shard owned by `node`.
     pub fn new(node: usize) -> NodeLedger {
         NodeLedger { node, records: Vec::new(), oneoffs: Vec::new() }
     }
@@ -167,6 +180,7 @@ impl NodeLedger {
         (0..nodes).map(NodeLedger::new).collect()
     }
 
+    /// The node this shard belongs to.
     pub fn node(&self) -> usize {
         self.node
     }
@@ -186,6 +200,25 @@ impl NodeLedger {
         self.records.iter().chain(&self.oneoffs).map(|&(_, b)| b as u64).sum()
     }
 
+    /// `(messages, bytes)` of *recurring* payloads pending since the
+    /// last merge — the fabric's ordinary fan-in share of this shard;
+    /// the message count is the per-payload latency term when the fabric
+    /// prices it (DESIGN.md §11).
+    pub fn pending_recurring(&self) -> (u32, u64) {
+        let bytes = self.records.iter().map(|&(_, b)| b as u64).sum();
+        (self.records.len() as u32, bytes)
+    }
+
+    /// `(messages, bytes)` of *one-off* payloads pending since the last
+    /// merge — priced as a flagged setup round so steady-state modeled
+    /// time mirrors the steady-state byte series, which excludes
+    /// one-offs (see [`Ledger::record_oneoff`]).
+    pub fn pending_oneoff(&self) -> (u32, u64) {
+        let bytes = self.oneoffs.iter().map(|&(_, b)| b as u64).sum();
+        (self.oneoffs.len() as u32, bytes)
+    }
+
+    /// Whether nothing is pending since the last merge.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty() && self.oneoffs.is_empty()
     }
@@ -198,15 +231,18 @@ pub struct Csv {
 }
 
 impl Csv {
+    /// Start a CSV at `path` with the given header row.
     pub fn new(path: &str, headers: &[&str]) -> Csv {
         Csv { path: path.to_string(), buf: headers.join(",") + "\n" }
     }
 
+    /// Append one data row.
     pub fn row(&mut self, cells: &[String]) {
         self.buf += &cells.join(",");
         self.buf.push('\n');
     }
 
+    /// Create parent directories and write the buffered file out.
     pub fn finish(self) -> std::io::Result<()> {
         if let Some(dir) = std::path::Path::new(&self.path).parent() {
             std::fs::create_dir_all(dir)?;
@@ -300,6 +336,9 @@ mod tests {
         shards[0].record(Kind::Latent, 100);
         shards[1].record_oneoff(Kind::AeWeights, 5000);
         assert_eq!(shards[1].pending_bytes(), 5000);
+        assert_eq!(shards[0].pending_recurring(), (1, 100));
+        assert_eq!(shards[0].pending_oneoff(), (0, 0));
+        assert_eq!(shards[1].pending_oneoff(), (1, 5000));
         l.merge_shards(&mut shards);
         l.end_iteration();
         assert_eq!(l.total(), 5100);

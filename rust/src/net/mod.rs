@@ -1,0 +1,514 @@
+//! Simulated network fabric: deterministic discrete-event timing over the
+//! measured byte ledger (DESIGN.md §11).
+//!
+//! The coordinator exchanges payloads in-process, so bytes are exact but
+//! instantaneous; this module supplies the missing time axis.  Every
+//! payload a node puts on the wire becomes a *send event* on that node's
+//! modeled link; events group into *rounds* (synchronization barriers:
+//! a ring step, a leader broadcast, a parameter-server fan-in or
+//! fan-out); a round's duration is the slowest participating link, and an
+//! iteration's modeled communication time is the sum of its rounds.
+//!
+//! [`NetSim`] collects the per-iteration round **trace** during a run —
+//! pure `(messages, bytes)` counts per node, no clocks — and
+//! [`NetReport`] prices a trace under any [`LinkModel`] after the fact.
+//! That split is what makes `exp fig14`'s bandwidth sweep cheap (one
+//! training run per method, repriced across the whole bandwidth grid) and
+//! bit-identical for any `--threads` value: the trace depends only on the
+//! measured bytes, which are thread-invariant by the §6.5 sharded-merge
+//! discipline, and pricing is pure arithmetic.
+//!
+//! Round structure emitted by the coordinator per iteration:
+//!
+//! * node-local uplink payloads (recorded in the per-node ledger shards)
+//!   pipeline on each node's link and close in a single fan-in round at
+//!   shard-merge time;
+//! * leader index broadcasts and parameter-server fan-outs are explicit
+//!   rounds on the barrier path;
+//! * ring allreduce emits one round per chunked step — `2 * (K - 1)` of
+//!   them (see [`crate::coordinator::ring`]);
+//! * a worker-to-peers broadcast (RAR's one-time autoencoder weight
+//!   transfer, the phase-2 trainer's result redistribution) serializes
+//!   `K - 1` unicasts on the sender's link.
+
+pub mod model;
+pub mod topology;
+
+pub use model::{Fabric, LinkModel};
+pub use topology::Topology;
+
+/// One synchronization round: per node, how many messages and how many
+/// bytes that node moved over its link during the round.  Round time is
+/// the max over nodes of the straggler-scaled link time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Round {
+    /// `(messages, bytes)` per node, indexed by node id.
+    pub per_node: Vec<(u32, u64)>,
+    /// One-time setup traffic (RAR's AE weight broadcast): counted in
+    /// the iteration it happens in, excluded from steady-state means —
+    /// the time-axis mirror of [`crate::metrics::Ledger::record_oneoff`].
+    pub oneoff: bool,
+}
+
+impl Round {
+    /// Modeled duration of this round under `fabric`: the slowest node's
+    /// link time (concurrent links; a node's own sends serialize).
+    pub fn time_s(&self, fabric: &Fabric) -> f64 {
+        self.per_node
+            .iter()
+            .enumerate()
+            .map(|(k, &(m, b))| fabric.send_s(k, m, b))
+            .fold(0.0, f64::max)
+    }
+
+    fn is_empty(&self) -> bool {
+        self.per_node.iter().all(|&(m, b)| m == 0 && b == 0)
+    }
+}
+
+/// Per-run collector of the network event trace.
+///
+/// Owned by the [`crate::coordinator::Trainer`] next to the byte ledger;
+/// strategies reach it through
+/// [`crate::baselines::ExchangeCtx::net`].  All methods are cheap
+/// integer bookkeeping — no floating point happens until a
+/// [`NetReport`] prices the finished trace.
+///
+/// ```
+/// use lgc::net::{Fabric, LinkModel, NetSim};
+/// let link = LinkModel::from_mbits(80.0, 0.0); // 10 MB/s, no latency
+/// let mut sim = NetSim::new(Fabric::new(link, vec![]), 2);
+/// sim.send(0, 1_000_000); // node 0 uploads 1 MB
+/// sim.end_iteration();
+/// let t = sim.into_report().iter_comm_s();
+/// assert!((t[0] - 0.1).abs() < 1e-12); // 1 MB / 10 MB/s = 0.1 s
+/// ```
+#[derive(Debug, Clone)]
+pub struct NetSim {
+    fabric: Fabric,
+    nodes: usize,
+    cur: Round,
+    rounds: Vec<Round>,
+    trace: Vec<Vec<Round>>,
+    uplink_bytes: u64,
+}
+
+impl NetSim {
+    /// A simulator for `nodes` nodes over `fabric`.
+    pub fn new(fabric: Fabric, nodes: usize) -> NetSim {
+        NetSim {
+            fabric,
+            nodes,
+            cur: Round { per_node: vec![(0, 0); nodes], oneoff: false },
+            rounds: Vec::new(),
+            trace: Vec::new(),
+            uplink_bytes: 0,
+        }
+    }
+
+    /// Number of simulated nodes.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Record one payload sent by `node` in the open round.
+    pub fn send(&mut self, node: usize, bytes: u64) {
+        self.send_many(node, 1, bytes);
+    }
+
+    /// Record `msgs` payloads totalling `bytes` sent by `node` in the
+    /// open round (how the per-node ledger shards feed the fan-in round).
+    pub fn send_many(&mut self, node: usize, msgs: u32, bytes: u64) {
+        let slot = &mut self.cur.per_node[node];
+        slot.0 += msgs;
+        slot.1 += bytes;
+        self.uplink_bytes += bytes;
+    }
+
+    /// Close the open round (a synchronization barrier).  Empty rounds
+    /// are dropped, so a barrier with no pending sends is free.
+    pub fn barrier(&mut self) {
+        self.close_round(false);
+    }
+
+    /// Close the open round flagged as one-time setup traffic (same
+    /// steady-state exclusion as [`NetSim::broadcast_oneoff`]).
+    pub fn barrier_oneoff(&mut self) {
+        self.close_round(true);
+    }
+
+    fn close_round(&mut self, oneoff: bool) {
+        if !self.cur.is_empty() {
+            let mut closed = std::mem::replace(
+                &mut self.cur,
+                Round { per_node: vec![(0, 0); self.nodes], oneoff: false },
+            );
+            closed.oneoff = oneoff;
+            self.rounds.push(closed);
+        }
+    }
+
+    /// Parameter-server fan-out: the server scatters one `bytes`-sized
+    /// aggregate to every node concurrently over the per-node links.
+    /// Closes any pending sends first, then emits the fan-out as its own
+    /// round.
+    pub fn fanout(&mut self, bytes: u64) {
+        self.barrier();
+        if self.nodes == 0 || bytes == 0 {
+            return;
+        }
+        for slot in self.cur.per_node.iter_mut() {
+            *slot = (1, bytes);
+        }
+        self.barrier();
+    }
+
+    /// Worker-to-peers broadcast: node `from` unicasts `bytes` to each of
+    /// the other `K - 1` nodes, serialized on its own link.  Closes any
+    /// pending sends first, then emits the broadcast as its own round.
+    pub fn broadcast(&mut self, from: usize, bytes: u64) {
+        self.broadcast_inner(from, bytes, false);
+    }
+
+    /// [`NetSim::broadcast`] for one-time setup traffic: the round counts
+    /// in its iteration's time and in the totals, but steady-state means
+    /// skip it (the time-axis mirror of
+    /// [`crate::metrics::Ledger::record_oneoff`]).
+    pub fn broadcast_oneoff(&mut self, from: usize, bytes: u64) {
+        self.broadcast_inner(from, bytes, true);
+    }
+
+    fn broadcast_inner(&mut self, from: usize, bytes: u64, oneoff: bool) {
+        self.barrier();
+        let peers = self.nodes.saturating_sub(1) as u64;
+        if peers == 0 || bytes == 0 {
+            return;
+        }
+        self.cur.per_node[from] = (peers as u32, peers * bytes);
+        self.uplink_bytes += peers * bytes;
+        self.close_round(oneoff);
+    }
+
+    /// Close the iteration: flush the open round and append this
+    /// iteration's rounds to the trace (an iteration with no traffic
+    /// records an empty round list, keeping trace indices aligned with
+    /// the ledger's per-iteration byte series).
+    pub fn end_iteration(&mut self) {
+        self.barrier();
+        self.trace.push(std::mem::take(&mut self.rounds));
+    }
+
+    /// Finish the run: hand the trace over for pricing.
+    pub fn into_report(mut self) -> NetReport {
+        // An unterminated partial iteration still prices correctly.
+        if !self.rounds.is_empty() || !self.cur.is_empty() {
+            self.end_iteration();
+        }
+        NetReport {
+            fabric: self.fabric,
+            trace: self.trace,
+            uplink_bytes: self.uplink_bytes,
+        }
+    }
+}
+
+/// The priced view of a finished run's network trace — the per-node
+/// **time ledger** companion of [`crate::metrics::Ledger`].
+///
+/// Stored on [`crate::coordinator::TrainResult`]; all accessors take a
+/// [`LinkModel`] so one recorded trace serves a whole bandwidth sweep
+/// (straggler multipliers stay those of the recording fabric).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NetReport {
+    /// The fabric the run was recorded under (link + stragglers).
+    pub fabric: Fabric,
+    /// Rounds per iteration, in iteration order.
+    pub trace: Vec<Vec<Round>>,
+    /// Bytes sent by nodes (fan-in, broadcasts, ring steps) — the subset
+    /// of [`NetReport::total_bytes`] the uplink-only byte ledger also
+    /// sees, so `uplink_bytes == Ledger::total()` is an invariant the
+    /// end-to-end tests check.
+    pub uplink_bytes: u64,
+}
+
+impl NetReport {
+    /// Modeled communication seconds per iteration under the run's own
+    /// link.
+    pub fn iter_comm_s(&self) -> Vec<f64> {
+        self.iter_comm_s_at(self.fabric.link)
+    }
+
+    /// Modeled communication seconds per iteration under `link`
+    /// (stragglers kept from the recording fabric).
+    pub fn iter_comm_s_at(&self, link: LinkModel) -> Vec<f64> {
+        self.iter_comm_s_under(&self.fabric.with_link(link))
+    }
+
+    /// Price the trace under an arbitrary fabric — different link and/or
+    /// different straggler multipliers — without re-running training.
+    /// Valid because the recorded trace is pure measured `(msgs, bytes)`
+    /// counts: multipliers never enter recording, only pricing (this is
+    /// what lets ablation A5 sweep stragglers from one run per method).
+    pub fn iter_comm_s_under(&self, fabric: &Fabric) -> Vec<f64> {
+        self.trace
+            .iter()
+            .map(|rounds| rounds.iter().map(|r| r.time_s(fabric)).sum())
+            .collect()
+    }
+
+    /// Mean modeled communication seconds over the last `window`
+    /// iterations under `fabric`, counting *recurring* rounds only:
+    /// one-off setup rounds (RAR's AE weight broadcast) are excluded, so
+    /// the steady-state figure does not depend on how many iterations it
+    /// is amortized over — mirroring the byte ledger, whose
+    /// [`crate::metrics::Ledger::record_oneoff`] traffic is likewise
+    /// kept out of the per-iteration series.
+    pub fn steady_comm_s_under(&self, fabric: &Fabric, window: usize) -> f64 {
+        if self.trace.is_empty() || window == 0 {
+            return 0.0;
+        }
+        let tail = &self.trace[self.trace.len().saturating_sub(window)..];
+        let total: f64 = tail
+            .iter()
+            .flatten()
+            .filter(|r| !r.oneoff)
+            .map(|r| r.time_s(fabric))
+            .sum();
+        total / tail.len() as f64
+    }
+
+    /// Per-node total link occupancy in seconds under `link` — the
+    /// per-node time ledger (who actually spent time on the wire; the
+    /// straggler shows up here even when it never paces a round).
+    pub fn per_node_s_at(&self, link: LinkModel) -> Vec<f64> {
+        let fabric = self.fabric.with_link(link);
+        let nodes = self.trace.iter().flatten().map(|r| r.per_node.len()).max().unwrap_or(0);
+        let mut out = vec![0.0f64; nodes];
+        for round in self.trace.iter().flatten() {
+            for (k, &(m, b)) in round.per_node.iter().enumerate() {
+                out[k] += fabric.send_s(k, m, b);
+            }
+        }
+        out
+    }
+
+    /// Mean modeled communication seconds over the last `window`
+    /// iterations (the steady state) under `link`.
+    pub fn steady_comm_s_at(&self, link: LinkModel, window: usize) -> f64 {
+        self.steady_comm_s_under(&self.fabric.with_link(link), window)
+    }
+
+    /// Total bytes in the trace (cross-check against the byte ledger).
+    pub fn total_bytes(&self) -> u64 {
+        self.trace
+            .iter()
+            .flatten()
+            .flat_map(|r| r.per_node.iter())
+            .map(|&(_, b)| b)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::topology::{ps_fan_in_s, ps_fan_out_s};
+    use super::*;
+
+    fn flat(mbits: f64, lat: f64) -> Fabric {
+        Fabric::new(LinkModel::from_mbits(mbits, lat), Vec::new())
+    }
+
+    #[test]
+    fn fan_in_round_matches_closed_form() {
+        // Known payloads + bandwidth + latency => exact modeled PS time.
+        let fabric = flat(80.0, 1e-3); // 10 MB/s
+        let mut sim = NetSim::new(fabric.clone(), 3);
+        sim.send(0, 1_000_000);
+        sim.send(1, 2_000_000);
+        sim.send(1, 500_000); // node 1's sends serialize: 2 msgs
+        sim.send(2, 100_000);
+        sim.end_iteration();
+        let report = sim.into_report();
+        let got = report.iter_comm_s()[0];
+        // Slowest link: node 1, 2 messages, 2.5 MB => 2 ms + 0.25 s.
+        let want = 2.0 * 1e-3 + 2_500_000.0 / 10e6;
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        // Identical to the analytic PS fan-in oracle.
+        let oracle =
+            ps_fan_in_s(&fabric, &[(1, 1_000_000), (2, 2_500_000), (1, 100_000)]);
+        assert_eq!(got, oracle);
+    }
+
+    #[test]
+    fn fanout_round_matches_closed_form() {
+        let fabric = Fabric::new(LinkModel::from_mbits(80.0, 1e-3), vec![1.0, 2.0]);
+        let mut sim = NetSim::new(fabric.clone(), 2);
+        sim.fanout(1_000_000);
+        sim.end_iteration();
+        let got = sim.into_report().iter_comm_s()[0];
+        assert_eq!(got, ps_fan_out_s(&fabric, 2, 1_000_000));
+        // The 2x straggler paces the scatter.
+        assert!((got - 2.0 * (1e-3 + 0.1)).abs() < 1e-12, "{got}");
+    }
+
+    #[test]
+    fn broadcast_serializes_on_sender_link() {
+        let mut sim = NetSim::new(flat(80.0, 1e-3), 4);
+        sim.broadcast(2, 1_000_000);
+        sim.end_iteration();
+        let report = sim.into_report();
+        let got = report.iter_comm_s()[0];
+        // 3 unicasts of 1 MB at 10 MB/s: 3 * (1 ms + 0.1 s).
+        assert!((got - 3.0 * (1e-3 + 0.1)).abs() < 1e-12, "{got}");
+        // All time lands on the sender in the per-node ledger.
+        let per_node = report.per_node_s_at(report.fabric.link);
+        assert_eq!(per_node[0], 0.0);
+        assert!((per_node[2] - got).abs() < 1e-15);
+    }
+
+    #[test]
+    fn straggler_multiplier_scales_rounds_analytically() {
+        let nominal = flat(100.0, 0.0);
+        let straggled = Fabric::new(nominal.link, vec![1.0, 1.0, 2.5, 1.0]);
+        for fabric in [nominal, straggled] {
+            let mut sim = NetSim::new(fabric.clone(), 4);
+            for k in 0..4 {
+                sim.send(k, 1_000_000);
+            }
+            sim.end_iteration();
+            let got = sim.into_report().iter_comm_s()[0];
+            let want = fabric.mult(2).max(1.0) * 1_000_000.0 / 12.5e6;
+            assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rounds_sum_and_barriers_separate() {
+        let mut sim = NetSim::new(flat(8.0, 0.0), 2); // 1 MB/s
+        sim.send(0, 1_000_000);
+        sim.barrier(); // round 1: 1 s
+        sim.send(1, 2_000_000);
+        sim.barrier(); // round 2: 2 s
+        sim.end_iteration();
+        // Same traffic, one round: max(1, 2) = 2 s, not 3.
+        sim.send(0, 1_000_000);
+        sim.send(1, 2_000_000);
+        sim.end_iteration();
+        let t = sim.into_report().iter_comm_s();
+        assert!((t[0] - 3.0).abs() < 1e-12, "{t:?}");
+        assert!((t[1] - 2.0).abs() < 1e-12, "{t:?}");
+    }
+
+    #[test]
+    fn empty_rounds_are_free_and_iterations_align() {
+        let mut sim = NetSim::new(flat(100.0, 1.0), 2);
+        sim.barrier();
+        sim.fanout(0);
+        sim.broadcast(0, 0);
+        sim.end_iteration(); // idle iteration
+        sim.send(0, 100);
+        sim.end_iteration();
+        let report = sim.into_report();
+        assert_eq!(report.trace.len(), 2);
+        assert!(report.trace[0].is_empty());
+        assert_eq!(report.iter_comm_s()[0], 0.0);
+        assert!(report.iter_comm_s()[1] > 0.0);
+    }
+
+    #[test]
+    fn oneoff_rounds_count_in_iteration_time_but_not_steady_state() {
+        let mut sim = NetSim::new(flat(80.0, 0.0), 2); // 10 MB/s
+        sim.broadcast_oneoff(0, 1_000_000); // one-time setup: 0.1 s
+        sim.send(0, 1_000_000); // recurring: 0.1 s
+        sim.end_iteration();
+        sim.send(0, 1_000_000);
+        sim.end_iteration();
+        let report = sim.into_report();
+        let t = report.iter_comm_s();
+        // The one-off is paid in the iteration it happens in...
+        assert!((t[0] - 0.2).abs() < 1e-12, "{t:?}");
+        assert!((t[1] - 0.1).abs() < 1e-12, "{t:?}");
+        // ...but the steady-state mean sees recurring rounds only.
+        let steady = report.steady_comm_s_at(report.fabric.link, 2);
+        assert!((steady - 0.1).abs() < 1e-12, "{steady}");
+        // Totals still include it (matching the byte ledger's totals).
+        assert_eq!(report.uplink_bytes, 3_000_000);
+    }
+
+    #[test]
+    fn single_node_broadcast_is_free() {
+        let mut sim = NetSim::new(flat(100.0, 1e-3), 1);
+        sim.broadcast(0, 1_000_000);
+        sim.end_iteration();
+        assert_eq!(sim.into_report().iter_comm_s()[0], 0.0);
+    }
+
+    #[test]
+    fn repricing_scales_inverse_with_bandwidth() {
+        let mut sim = NetSim::new(flat(1000.0, 0.0), 2);
+        sim.send(0, 5_000_000);
+        sim.end_iteration();
+        let report = sim.into_report();
+        let fast = report.steady_comm_s_at(LinkModel::from_mbits(1000.0, 0.0), 10);
+        let slow = report.steady_comm_s_at(LinkModel::from_mbits(50.0, 0.0), 10);
+        assert!((slow / fast - 20.0).abs() < 1e-9, "{slow} / {fast}");
+        assert_eq!(report.total_bytes(), 5_000_000);
+    }
+
+    #[test]
+    fn repricing_under_stragglers_equals_resimulating_with_them() {
+        let link = LinkModel::from_mbits(100.0, 2e-4);
+        let straggled = Fabric::new(link, vec![1.0, 3.0, 1.0]);
+        let drive = |fabric: Fabric| {
+            let mut sim = NetSim::new(fabric, 3);
+            for it in 0..3 {
+                for k in 0..3 {
+                    sim.send(k, 10_000 * (it + k + 1) as u64);
+                }
+                sim.broadcast(1, 256);
+                sim.fanout(1024);
+                sim.end_iteration();
+            }
+            sim.into_report()
+        };
+        // Trace recorded nominal, repriced under the straggled fabric ==
+        // trace recorded under the straggled fabric directly.
+        let nominal = drive(Fabric::new(link, Vec::new()));
+        let direct = drive(straggled.clone());
+        assert_eq!(
+            nominal.iter_comm_s_under(&straggled),
+            direct.iter_comm_s()
+        );
+        assert_eq!(
+            nominal.steady_comm_s_under(&straggled, 2),
+            direct.steady_comm_s_at(link, 2)
+        );
+    }
+
+    #[test]
+    fn trace_is_pure_data_and_reproducible() {
+        let build = || {
+            let mut sim = NetSim::new(flat(100.0, 2e-4), 3);
+            for it in 0..4 {
+                sim.send(it % 3, 1000 + it as u64);
+                sim.broadcast(0, 64);
+                sim.fanout(512);
+                sim.end_iteration();
+            }
+            sim.into_report()
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a, b);
+        assert_eq!(a.iter_comm_s(), b.iter_comm_s());
+    }
+
+    #[test]
+    fn into_report_flushes_partial_iteration() {
+        let mut sim = NetSim::new(flat(100.0, 0.0), 2);
+        sim.send(1, 125_000);
+        let report = sim.into_report();
+        assert_eq!(report.trace.len(), 1);
+        assert_eq!(report.total_bytes(), 125_000);
+    }
+}

@@ -1,0 +1,186 @@
+//! Link + fabric models: the parameters of the simulated network.
+//!
+//! A [`LinkModel`] is the classic alpha-beta cost model — every message
+//! pays a base latency (alpha) plus bytes/bandwidth (beta) — the same
+//! model DGC and ScaleCom use to turn measured payload sizes into modeled
+//! link time.  A [`Fabric`] adds per-node straggler multipliers on top:
+//! node `k`'s link time is scaled by `stragglers[k]`, which is how
+//! asymmetric-node scenarios (one slow NIC, one congested rack uplink)
+//! are expressed.
+//!
+//! Everything here is pure arithmetic over measured byte counts — no
+//! clocks, no randomness — so modeled times are bit-identical across
+//! runs and across `--threads` values (DESIGN.md §11).
+
+/// Alpha-beta cost model of one network link.
+///
+/// ```
+/// use lgc::net::LinkModel;
+/// // Gigabit Ethernet: 125 MB/s, 50 us per message.
+/// let link = LinkModel::gbe();
+/// // One 1 MB payload: 50 us latency + 8 ms serialization.
+/// let t = link.transfer_s(1, 1_000_000);
+/// assert!((t - (50e-6 + 0.008)).abs() < 1e-12);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Sustained link bandwidth in bytes per second.
+    pub bandwidth_bytes_per_s: f64,
+    /// Base latency per message in seconds (the alpha term).
+    pub latency_s: f64,
+}
+
+impl LinkModel {
+    /// Build a link from a bandwidth in megabits per second (the unit the
+    /// paper's Fig. 14 sweeps) and a latency in seconds.
+    pub fn from_mbits(mbits: f64, latency_s: f64) -> LinkModel {
+        LinkModel { bandwidth_bytes_per_s: mbits * 1e6 / 8.0, latency_s }
+    }
+
+    /// Gigabit-Ethernet-class link: 1 Gbit/s (= 125 MB/s), 50 us latency.
+    pub fn gbe() -> LinkModel {
+        LinkModel { bandwidth_bytes_per_s: 125e6, latency_s: 50e-6 }
+    }
+
+    /// Modeled time to push `msgs` messages totalling `bytes` over this
+    /// link: `msgs * latency + bytes / bandwidth`.
+    pub fn transfer_s(&self, msgs: u32, bytes: u64) -> f64 {
+        msgs as f64 * self.latency_s + bytes as f64 / self.bandwidth_bytes_per_s
+    }
+
+    /// Bandwidth in megabits per second (for display).
+    pub fn mbits(&self) -> f64 {
+        self.bandwidth_bytes_per_s * 8.0 / 1e6
+    }
+}
+
+/// Parse a bandwidth argument into megabits per second.
+///
+/// Accepted forms (case-insensitive): `"1gbps"`, `"50mbps"`, `"0.5gbps"`,
+/// or a bare number meaning Mbit/s (`"250"` = 250 Mbit/s).
+///
+/// ```
+/// use lgc::net::model::parse_bandwidth_mbits;
+/// assert_eq!(parse_bandwidth_mbits("1gbps"), Some(1000.0));
+/// assert_eq!(parse_bandwidth_mbits("50mbps"), Some(50.0));
+/// assert_eq!(parse_bandwidth_mbits("250"), Some(250.0));
+/// assert_eq!(parse_bandwidth_mbits("fast"), None);
+/// ```
+pub fn parse_bandwidth_mbits(s: &str) -> Option<f64> {
+    let s = s.trim().to_ascii_lowercase();
+    let (num, scale) = if let Some(n) = s.strip_suffix("gbps") {
+        (n.to_string(), 1000.0)
+    } else if let Some(n) = s.strip_suffix("mbps") {
+        (n.to_string(), 1.0)
+    } else {
+        (s, 1.0)
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if v > 0.0 && v.is_finite() {
+        Some(v * scale)
+    } else {
+        None
+    }
+}
+
+/// A homogeneous link fabric with optional per-node straggler multipliers.
+///
+/// Every node talks over a [`LinkModel`]-shaped link; node `k`'s link
+/// times are additionally scaled by `stragglers[k]` (1.0 = nominal, 2.0 =
+/// half-speed node).  An empty `stragglers` vector means all nodes are
+/// nominal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fabric {
+    /// The per-node link cost model.
+    pub link: LinkModel,
+    /// Per-node link-time multipliers; nodes beyond the vector (or an
+    /// empty vector) default to 1.0.
+    pub stragglers: Vec<f64>,
+}
+
+impl Default for Fabric {
+    fn default() -> Fabric {
+        Fabric { link: LinkModel::gbe(), stragglers: Vec::new() }
+    }
+}
+
+impl Fabric {
+    /// Fabric over `link` with the given straggler multipliers.
+    pub fn new(link: LinkModel, stragglers: Vec<f64>) -> Fabric {
+        Fabric { link, stragglers }
+    }
+
+    /// The same fabric (same stragglers) over a different link — how the
+    /// bandwidth sweep reprices a recorded trace.
+    pub fn with_link(&self, link: LinkModel) -> Fabric {
+        Fabric { link, stragglers: self.stragglers.clone() }
+    }
+
+    /// Straggler multiplier of `node` (1.0 when unspecified).
+    pub fn mult(&self, node: usize) -> f64 {
+        self.stragglers.get(node).copied().unwrap_or(1.0)
+    }
+
+    /// Whether any node has a non-nominal multiplier.
+    pub fn has_stragglers(&self) -> bool {
+        self.stragglers.iter().any(|&m| m != 1.0)
+    }
+
+    /// Modeled link time for `node` to move `msgs` messages totalling
+    /// `bytes`: `stragglers[node] * (msgs * latency + bytes / bandwidth)`.
+    pub fn send_s(&self, node: usize, msgs: u32, bytes: u64) -> f64 {
+        self.mult(node) * self.link.transfer_s(msgs, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_is_alpha_plus_beta() {
+        let link = LinkModel::from_mbits(100.0, 1e-3);
+        // 100 Mbit/s = 12.5 MB/s; 125_000 B take exactly 10 ms.
+        let t = link.transfer_s(2, 125_000);
+        assert!((t - (2e-3 + 0.01)).abs() < 1e-15, "{t}");
+        assert!((link.mbits() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gbe_is_one_gigabit() {
+        let g = LinkModel::gbe();
+        assert!((g.mbits() - 1000.0).abs() < 1e-9);
+        assert_eq!(g.latency_s, 50e-6);
+    }
+
+    #[test]
+    fn bandwidth_parsing() {
+        assert_eq!(parse_bandwidth_mbits("1gbps"), Some(1000.0));
+        assert_eq!(parse_bandwidth_mbits("2.5Gbps"), Some(2500.0));
+        assert_eq!(parse_bandwidth_mbits(" 50mbps "), Some(50.0));
+        assert_eq!(parse_bandwidth_mbits("125"), Some(125.0));
+        assert_eq!(parse_bandwidth_mbits("0"), None);
+        assert_eq!(parse_bandwidth_mbits("-3"), None);
+        assert_eq!(parse_bandwidth_mbits("nope"), None);
+        assert_eq!(parse_bandwidth_mbits(""), None);
+    }
+
+    #[test]
+    fn straggler_multiplies_link_time() {
+        let f = Fabric::new(LinkModel::from_mbits(800.0, 0.0), vec![1.0, 2.0]);
+        let base = f.send_s(0, 1, 1_000_000);
+        assert!((f.send_s(1, 1, 1_000_000) - 2.0 * base).abs() < 1e-15);
+        // Nodes beyond the vector are nominal.
+        assert_eq!(f.send_s(2, 1, 1_000_000), base);
+        assert!(f.has_stragglers());
+        assert!(!Fabric::default().has_stragglers());
+    }
+
+    #[test]
+    fn with_link_keeps_stragglers() {
+        let f = Fabric::new(LinkModel::gbe(), vec![3.0]);
+        let slow = f.with_link(LinkModel::from_mbits(50.0, 1e-4));
+        assert_eq!(slow.stragglers, vec![3.0]);
+        assert!((slow.link.mbits() - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,145 @@
+//! Topology-aware closed-form cost models (paper §II-A).
+//!
+//! These are the analytic mirrors of the round structures the coordinator
+//! actually emits into a [`crate::net::NetSim`] trace: the unit tests
+//! check the simulated traces against these formulas, and the formulas
+//! are what DESIGN.md §11 documents.  The *results* path never uses them
+//! directly — experiment outputs price recorded traces of measured
+//! payload bytes (§6.4) — they exist as oracles and documentation.
+//!
+//! * **Parameter server** (star): workers push concurrently on their own
+//!   links (fan-in time = slowest worker), then the server scatters the
+//!   aggregate concurrently on the same links (fan-out time = slowest
+//!   receiver).
+//! * **Ring allreduce**: `2 * (K - 1)` chunked steps (reduce-scatter +
+//!   allgather, Fig. 2); at each step every node sends one chunk to its
+//!   successor, so the step time is the slowest node's chunk transfer and
+//!   the iteration pays the sum over steps.
+
+use super::model::{Fabric, LinkModel};
+
+/// Which communication pattern an experiment models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Star: workers <-> one parameter server (paper §V-B1).
+    ParamServer,
+    /// Ring allreduce, `2 * (K - 1)` chunked steps (paper §V-B2, Fig. 2).
+    Ring,
+}
+
+impl Topology {
+    /// Short name used in CLI flags and CSV cells.
+    pub fn name(self) -> &'static str {
+        match self {
+            Topology::ParamServer => "ps",
+            Topology::Ring => "ring",
+        }
+    }
+
+    /// Parse a CLI topology argument (`ps` | `ring`).
+    pub fn parse(s: &str) -> Option<Topology> {
+        match s.to_ascii_lowercase().as_str() {
+            "ps" | "param-server" | "paramserver" => Some(Topology::ParamServer),
+            "ring" | "rar" | "ring-allreduce" => Some(Topology::Ring),
+            _ => None,
+        }
+    }
+}
+
+/// Closed-form parameter-server fan-in time: each worker `k` pushes its
+/// payload (`msgs_bytes[k]`) concurrently; the round ends when the
+/// slowest (straggler-scaled) worker finishes.
+pub fn ps_fan_in_s(fabric: &Fabric, msgs_bytes: &[(u32, u64)]) -> f64 {
+    msgs_bytes
+        .iter()
+        .enumerate()
+        .map(|(k, &(m, b))| fabric.send_s(k, m, b))
+        .fold(0.0, f64::max)
+}
+
+/// Closed-form parameter-server fan-out time: the server scatters one
+/// `bytes`-sized aggregate to each of `nodes` workers concurrently on
+/// their own links; the round ends at the slowest receiver.
+pub fn ps_fan_out_s(fabric: &Fabric, nodes: usize, bytes: u64) -> f64 {
+    (0..nodes).map(|k| fabric.send_s(k, 1, bytes)).fold(0.0, f64::max)
+}
+
+/// Size in bytes of the largest of `k` near-equal chunks of an `n`-byte
+/// payload (the chunk that paces every ring step).
+pub fn ring_chunk_bytes(n_bytes: u64, k: usize) -> u64 {
+    let k = k as u64;
+    n_bytes / k + u64::from(n_bytes % k != 0)
+}
+
+/// Closed-form ring-allreduce time over a straggler-free link: `2*(K-1)`
+/// steps, each paced by the largest chunk.
+///
+/// ```
+/// use lgc::net::{topology::ring_allreduce_s, LinkModel};
+/// let link = LinkModel::from_mbits(800.0, 1e-4); // 100 MB/s
+/// // 4 nodes, 4000-byte vector => 1000-byte chunks, 6 steps:
+/// let t = ring_allreduce_s(&link, 4000, 4);
+/// assert!((t - 6.0 * (1e-4 + 1000.0 / 100e6)).abs() < 1e-12);
+/// ```
+pub fn ring_allreduce_s(link: &LinkModel, n_bytes: u64, k: usize) -> f64 {
+    if k < 2 {
+        return 0.0;
+    }
+    let steps = 2 * (k - 1) as u32;
+    steps as f64 * link.transfer_s(1, ring_chunk_bytes(n_bytes, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_parse_roundtrip() {
+        for t in [Topology::ParamServer, Topology::Ring] {
+            assert_eq!(Topology::parse(t.name()), Some(t));
+        }
+        assert_eq!(Topology::parse("rar"), Some(Topology::Ring));
+        assert_eq!(Topology::parse("mesh"), None);
+    }
+
+    #[test]
+    fn fan_in_is_slowest_worker() {
+        let f = Fabric::new(LinkModel::from_mbits(80.0, 0.0), vec![1.0, 1.0, 3.0]);
+        // 80 Mbit/s = 10 MB/s. Uniform 1 MB payloads: nominal 0.1 s, the
+        // 3x straggler paces the round at 0.3 s.
+        let t = ps_fan_in_s(&f, &[(1, 1_000_000), (1, 1_000_000), (1, 1_000_000)]);
+        assert!((t - 0.3).abs() < 1e-12, "{t}");
+        // Without the straggler the biggest payload paces the round.
+        let f0 = Fabric::new(LinkModel::from_mbits(80.0, 0.0), vec![]);
+        let t = ps_fan_in_s(&f0, &[(1, 2_000_000), (1, 1_000_000)]);
+        assert!((t - 0.2).abs() < 1e-12, "{t}");
+    }
+
+    #[test]
+    fn fan_out_is_slowest_receiver() {
+        let f = Fabric::new(LinkModel::from_mbits(80.0, 1e-3), vec![1.0, 2.0]);
+        let t = ps_fan_out_s(&f, 2, 1_000_000);
+        assert!((t - 2.0 * (1e-3 + 0.1)).abs() < 1e-12, "{t}");
+        assert_eq!(ps_fan_out_s(&f, 0, 1_000_000), 0.0);
+    }
+
+    #[test]
+    fn ring_chunks_cover_and_pace() {
+        assert_eq!(ring_chunk_bytes(4000, 4), 1000);
+        assert_eq!(ring_chunk_bytes(4001, 4), 1001);
+        assert_eq!(ring_chunk_bytes(3, 8), 1);
+    }
+
+    #[test]
+    fn ring_closed_form_k_scaling() {
+        let link = LinkModel::from_mbits(800.0, 0.0); // 100 MB/s, no alpha
+        let n = 1_000_000u64;
+        // 2(K-1)/K * n / bw — the textbook bound — for K | n.
+        for k in [2usize, 4, 8] {
+            let t = ring_allreduce_s(&link, n, k);
+            let bound = 2.0 * (k as f64 - 1.0) / k as f64 * n as f64 / 100e6;
+            assert!((t - bound).abs() < 1e-12, "k={k}: {t} vs {bound}");
+        }
+        assert_eq!(ring_allreduce_s(&link, n, 1), 0.0);
+    }
+}

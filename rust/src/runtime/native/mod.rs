@@ -13,7 +13,7 @@
 //! unchanged; the coordinator cannot tell the backends apart except by
 //! module latency.
 //!
-//! Execution is a name-keyed dispatch over [`Module`]: model entry
+//! Execution is a name-keyed dispatch over `Module`: model entry
 //! points route to `models.rs` (hand-written forward/backward), AE entry
 //! points to `ae.rs` (manual backprop + SGD).  All module functions are
 //! pure in their inputs, so the backend is trivially `Sync` and the

@@ -1,25 +1,36 @@
 //! Tiny CLI argument parser (no clap in the offline crate set).
 //!
-//! Grammar: `lgc <subcommand> [--flag value]... [--switch]...`
+//! Grammar: `lgc <subcommand> [positional]... [--flag value]... [--switch]...`
 //! Values parse on demand with typed accessors; unknown flags are rejected
-//! eagerly so typos fail loudly.
+//! eagerly so typos fail loudly.  Bare tokens that are not consumed as a
+//! valued flag's value collect as positionals (`lgc exp fig14` is sugar
+//! for `lgc exp --id fig14`).  Boolean switches are declared separately
+//! from valued flags, so a switch never swallows the token after it
+//! (`lgc exp --verbose fig14` keeps `fig14` as the positional id) and a
+//! valued flag without a value is an error, not a silent switch.
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, positionals, `--flag value` pairs and
+/// bare `--switch`es.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// First bare token, if any (`train`, `exp`, ...).
     pub subcommand: Option<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
+    positionals: Vec<String>,
     known: Vec<&'static str>,
 }
 
 impl Args {
-    /// Parse `args` (without argv[0]). `known` lists every accepted flag /
-    /// switch name (without `--`).
+    /// Parse `args` (without argv[0]). `known` lists every accepted
+    /// valued flag; `switch_names` lists the boolean switches (both
+    /// without `--`).
     pub fn parse(
         args: impl IntoIterator<Item = String>,
         known: &[&'static str],
+        switch_names: &[&'static str],
     ) -> Result<Args, String> {
         let mut out = Args { known: known.to_vec(), ..Default::default() };
         let mut it = args.into_iter().peekable();
@@ -29,10 +40,17 @@ impl Args {
             }
         }
         while let Some(a) = it.next() {
-            let name = a
-                .strip_prefix("--")
-                .ok_or_else(|| format!("expected --flag, got {a:?}"))?
-                .to_string();
+            let name = match a.strip_prefix("--") {
+                Some(n) => n.to_string(),
+                None => {
+                    out.positionals.push(a);
+                    continue;
+                }
+            };
+            if switch_names.contains(&name.as_str()) {
+                out.switches.push(name);
+                continue;
+            }
             if !known.contains(&name.as_str()) {
                 return Err(format!("unknown flag --{name}"));
             }
@@ -40,10 +58,15 @@ impl Args {
                 Some(v) if !v.starts_with("--") => {
                     out.flags.insert(name, it.next().unwrap());
                 }
-                _ => out.switches.push(name),
+                _ => return Err(format!("--{name} expects a value")),
             }
         }
         Ok(out)
+    }
+
+    /// The `i`-th positional token after the subcommand, if present.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(String::as_str)
     }
 
     pub fn has(&self, name: &str) -> bool {
@@ -92,7 +115,8 @@ mod tests {
     fn parses_subcommand_flags_switches() {
         let a = Args::parse(
             v(&["train", "--model", "convnet5", "--steps", "100", "--quiet"]),
-            &["model", "steps", "quiet"],
+            &["model", "steps"],
+            &["quiet"],
         )
         .unwrap();
         assert_eq!(a.subcommand.as_deref(), Some("train"));
@@ -104,19 +128,54 @@ mod tests {
 
     #[test]
     fn rejects_unknown_flag() {
-        assert!(Args::parse(v(&["--bogus", "1"]), &["model"]).is_err());
+        assert!(Args::parse(v(&["--bogus", "1"]), &["model"], &[]).is_err());
+    }
+
+    #[test]
+    fn rejects_valued_flag_without_value() {
+        assert!(Args::parse(v(&["exp", "--id"]), &["id"], &[]).is_err());
+        assert!(Args::parse(v(&["exp", "--id", "--verbose"]), &["id"], &["verbose"]).is_err());
     }
 
     #[test]
     fn defaults_apply() {
-        let a = Args::parse(v(&["exp"]), &["id"]).unwrap();
+        let a = Args::parse(v(&["exp"]), &["id"], &[]).unwrap();
         assert_eq!(a.str("id", "all"), "all");
         assert_eq!(a.f32("lr", 0.1), 0.1); // absent flag -> default
     }
 
     #[test]
     fn trailing_switch() {
-        let a = Args::parse(v(&["run", "--fast"]), &["fast"]).unwrap();
+        let a = Args::parse(v(&["run", "--fast"]), &[], &["fast"]).unwrap();
         assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn positionals_collect_after_subcommand() {
+        let a = Args::parse(
+            v(&["exp", "fig14", "--steps", "60", "extra"]),
+            &["steps"],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional(0), Some("fig14"));
+        assert_eq!(a.positional(1), Some("extra"));
+        assert_eq!(a.positional(2), None);
+        // Flag values are still consumed as values, not positionals.
+        assert_eq!(a.usize("steps", 0), 60);
+    }
+
+    #[test]
+    fn switch_never_swallows_a_positional() {
+        let a = Args::parse(
+            v(&["exp", "--verbose", "fig14"]),
+            &["id"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(0), Some("fig14"));
+        assert_eq!(a.opt_str("verbose"), None);
     }
 }

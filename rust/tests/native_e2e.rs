@@ -327,8 +327,66 @@ fn training_is_thread_count_invariant_end_to_end() {
             let ls: Vec<f32> = seq.curve.iter().map(|p| p.train_loss).collect();
             let lp: Vec<f32> = par.curve.iter().map(|p| p.train_loss).collect();
             assert_eq!(ls, lp, "{} threads={threads}: loss curve drifted", method.name());
+            // DESIGN.md §11: the network trace — and therefore every
+            // modeled time the speedup sweep derives from it — is
+            // bit-identical too.
+            assert_eq!(
+                seq.net,
+                par.net,
+                "{} threads={threads}: network trace drifted",
+                method.name()
+            );
+            assert_eq!(seq.net.iter_comm_s(), par.net.iter_comm_s(), "{}", method.name());
         }
     }
+}
+
+/// The simulated fabric end-to-end (ISSUE-5 acceptance): the recorded
+/// trace carries the ledger's measured bytes, and at low bandwidth the
+/// compressed methods' modeled iteration time beats Baseline's.
+#[test]
+fn modeled_speedup_from_measured_bytes_favors_lgc_at_low_bandwidth() {
+    use lgc::net::LinkModel;
+    let e = engine();
+    let run = |method: Method| {
+        let mut cfg = tiny_cfg("convnet_mini", method, 4);
+        cfg.steps = 24;
+        cfg.warmup_iters = 6;
+        cfg.ae_train_iters = 8;
+        cfg.ae_gate = f32::INFINITY;
+        coordinator::train(&e, cfg).unwrap()
+    };
+    let base = run(Method::Baseline);
+    // The fabric saw exactly what the ledger measured.
+    assert_eq!(base.net.uplink_bytes, base.ledger.total());
+    assert_eq!(base.net.trace.len(), base.ledger.iter_bytes.len());
+    let slow = LinkModel::from_mbits(50.0, 50e-6);
+    let base_comm = base.steady_comm_s_at(slow, 8);
+    assert!(base_comm > 0.0);
+    for method in [Method::LgcPs, Method::LgcRar] {
+        let r = run(method);
+        assert_eq!(r.net.uplink_bytes, r.ledger.total(), "{}", method.name());
+        let comm = r.steady_comm_s_at(slow, 8);
+        assert!(
+            comm < base_comm / 2.0,
+            "{}: modeled steady comm {comm} not well below baseline {base_comm}",
+            method.name()
+        );
+    }
+    // A straggler slows the modeled clock but never changes the bytes.
+    let nominal = run(Method::LgcRar);
+    let mut cfg = tiny_cfg("convnet_mini", Method::LgcRar, 4);
+    cfg.steps = 24;
+    cfg.warmup_iters = 6;
+    cfg.ae_train_iters = 8;
+    cfg.ae_gate = f32::INFINITY;
+    cfg.straggler_spec = vec![(0, 3.0)];
+    let straggled = coordinator::train(&e, cfg).unwrap();
+    assert_eq!(straggled.ledger.iter_bytes, nominal.ledger.iter_bytes);
+    assert!(
+        straggled.net.iter_comm_s().iter().sum::<f64>()
+            > nominal.net.iter_comm_s().iter().sum::<f64>()
+    );
 }
 
 #[test]
