@@ -71,7 +71,7 @@ pub fn pack_values(mut values: Vec<f32>, fp16: bool) -> (Vec<f32>, usize) {
 /// In-place [`pack_values`] over an arena-resident value buffer: under
 /// fp16 each value is replaced by its wire round-trip (what the receiver
 /// applies), element-wise with no allocation; returns the wire bytes.
-fn pack_values_in_place(values: &mut [f32], fp16: bool) -> usize {
+pub fn pack_values_in_place(values: &mut [f32], fp16: bool) -> usize {
     if fp16 {
         for v in values.iter_mut() {
             *v = f16::f16_bits_to_f32(f16::f32_to_f16_bits(*v));

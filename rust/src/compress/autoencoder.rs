@@ -224,6 +224,44 @@ impl AeCompressor {
         Ok(out.into_iter().next().unwrap().as_f32().iter().map(|x| x * scale).collect())
     }
 
+    /// Serialize the encoder parameters as raw little-endian f32 bits,
+    /// tensor by tensor in declaration order.  Workers only ever run
+    /// `encode`, so shipping the encoder alone suffices — and raw bits
+    /// keep the transferred copy bit-identical to the coordinator's
+    /// (tests/tcp_e2e.rs depends on this).
+    pub fn export_encoder(&self) -> Vec<u8> {
+        let n: usize = self.enc_params.iter().map(|t| t.len() * 4).sum();
+        let mut out = Vec::with_capacity(n);
+        for t in &self.enc_params {
+            for &x in t.as_f32() {
+                out.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Replace the encoder parameters from an [`AeCompressor::export_encoder`]
+    /// payload; shapes stay local, only values cross the wire.
+    pub fn import_encoder(&mut self, bytes: &[u8]) -> Result<()> {
+        let want: usize = self.enc_params.iter().map(|t| t.len() * 4).sum();
+        anyhow::ensure!(
+            bytes.len() == want,
+            "encoder payload is {} bytes, expected {want}",
+            bytes.len()
+        );
+        let mut off = 0;
+        for t in &mut self.enc_params {
+            let dims = t.dims.clone();
+            let vals: Vec<f32> = bytes[off..off + t.len() * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+                .collect();
+            off += t.len() * 4;
+            *t = Tensor::f32(dims, vals);
+        }
+        Ok(())
+    }
+
     /// One online SGD step on the autoencoder (phase 2), on unit-RMS
     /// normalized inputs (each row by its own scale; PS innovations by
     /// the matching row's scale, mirroring the inference path).

@@ -72,6 +72,34 @@ impl Method {
     }
 }
 
+/// Which exchange backend carries the bytes (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// Single-process simulated exchange — the bit-exactness reference.
+    #[default]
+    Sim,
+    /// Real multi-process transport over TCP or Unix-domain sockets
+    /// (`transport/` module): one OS process per node, typed frames.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        Some(match s {
+            "sim" => TransportKind::Sim,
+            "tcp" | "uds" | "socket" => TransportKind::Tcp,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Sim => "sim",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
 /// Sparsification schedule ablation (paper §VI-F, Fig. 13).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SparsifySchedule {
@@ -94,7 +122,7 @@ impl SparsifySchedule {
     }
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
     pub model: String,
     pub method: Method,
@@ -144,6 +172,13 @@ pub struct TrainConfig {
     /// `nodes` are ignored.
     pub straggler_spec: Vec<(usize, f64)>,
     pub verbose: bool,
+    /// Exchange backend: simulated (default) or real sockets.  The sim
+    /// path is the bit-exactness reference; `Tcp` must reproduce its
+    /// ledgers and curves byte-for-byte (tests/tcp_e2e.rs).
+    pub transport: TransportKind,
+    /// Save the final model checkpoint here (both transports), so runs
+    /// can be compared byte-for-byte across backends.
+    pub checkpoint: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -177,6 +212,8 @@ impl Default for TrainConfig {
             latency_s: 50e-6,
             straggler_spec: Vec::new(),
             verbose: false,
+            transport: TransportKind::Sim,
+            checkpoint: None,
         }
     }
 }
@@ -259,6 +296,11 @@ impl TrainConfig {
                 .unwrap_or_else(|| panic!("bad --straggler {s:?} (e.g. 2.5 or 0:2,3:1.5)"));
         }
         c.verbose = a.has("verbose");
+        if let Some(t) = a.opt_str("transport") {
+            c.transport = TransportKind::parse(&t)
+                .unwrap_or_else(|| panic!("bad --transport {t:?} (sim|tcp)"));
+        }
+        c.checkpoint = a.opt_str("checkpoint");
         c
     }
 }

@@ -63,7 +63,7 @@ pub struct LgcParams {
 /// Clipped mass is not lost — the EF correction re-accumulates it.
 const CLIP_MULT: f32 = 2.0;
 
-fn clip_to_gradient_scale(rec: &mut [f32], grads: &[Vec<f32>]) {
+pub(crate) fn clip_to_gradient_scale(rec: &mut [f32], grads: &[Vec<f32>]) {
     // Non-finite outputs zero out entirely (EF retransmits the mass).
     if rec.iter().any(|x| !x.is_finite()) {
         rec.iter_mut().for_each(|x| *x = 0.0);
@@ -103,7 +103,7 @@ struct NodeState {
 /// coded indices).  Free function (not a method) so the parallel
 /// per-node closures can call it while node rows are mutably split
 /// across workers.
-fn innovation_into(
+pub(crate) fn innovation_into(
     values: &[f32],
     frac: f64,
     dense: &mut Vec<f32>,
@@ -141,7 +141,7 @@ pub struct LgcCommon {
 }
 
 /// Rec-loss averaging window for the readiness gate.
-const AE_GATE_WINDOW: usize = 8;
+pub(crate) const AE_GATE_WINDOW: usize = 8;
 
 /// Whether nodes re-accumulate the shared-reconstruction error into their
 /// EF memories.  Algorithm 1/2 discard it (only non-selected coordinates
@@ -149,7 +149,7 @@ const AE_GATE_WINDOW: usize = 8;
 /// configuration — EF-on-rec keeps ~all selected mass in the memory
 /// (drainage << inflow), ballooning it without improving updates.
 /// Kept as a switch for the ablation (LGC_EF_ON_REC=1).
-fn ef_on_rec() -> bool {
+pub(crate) fn ef_on_rec() -> bool {
     std::env::var("LGC_EF_ON_REC").is_ok()
 }
 

@@ -22,8 +22,10 @@
 
 pub mod lgc;
 pub mod parallel;
+pub mod remote;
 pub mod ring;
 pub mod scheduler;
+pub mod worker;
 
 use std::time::{Duration, Instant};
 
@@ -34,7 +36,7 @@ use crate::baselines::{
     ScaleCom, SparseGd,
 };
 use crate::compress::{index_coding, topk, Correction, FeedbackMemory, Scratch};
-use crate::config::{Method, TrainConfig};
+use crate::config::{Method, TrainConfig, TransportKind};
 use crate::data::{self, Dataset};
 use crate::metrics::{Kind, Ledger, NodeLedger};
 use crate::model::{Group, Model};
@@ -433,6 +435,9 @@ impl<'e> Trainer<'e> {
         }
 
         let final_eval = self.evaluate()?;
+        if let Some(path) = &self.cfg.checkpoint {
+            self.model.save_checkpoint(path)?;
+        }
         Ok(TrainResult {
             method: self.cfg.method,
             model: self.cfg.model.clone(),
@@ -468,7 +473,14 @@ impl<'e> Trainer<'e> {
     }
 }
 
-/// Convenience: build + run in one call.
+/// Train under the configured transport: the in-process simulator
+/// (default), or real worker processes over sockets
+/// (`cfg.transport == Tcp`, [`remote::train_tcp`]).  The two backends
+/// produce bit-identical results for the supported methods
+/// (tests/tcp_e2e.rs).
 pub fn train(engine: &Engine, cfg: TrainConfig) -> Result<TrainResult> {
-    Trainer::new(engine, cfg)?.run()
+    match cfg.transport {
+        TransportKind::Sim => Trainer::new(engine, cfg)?.run(),
+        TransportKind::Tcp => remote::train_tcp(engine, cfg),
+    }
 }

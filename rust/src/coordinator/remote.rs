@@ -1,0 +1,1011 @@
+//! Coordinator side of the real multi-process transport (DESIGN.md §12).
+//!
+//! `train_tcp` runs the same three-phase training loop as the in-process
+//! [`crate::coordinator::Trainer`], but every node's local pipeline (EF →
+//! top-k → AE/index-coding) executes in its own `lgc worker` process and
+//! the payloads arrive over TCP or Unix-domain sockets.  The coordinator
+//! keeps its own model replica (for eval, curves, checkpoints), performs
+//! all aggregation and AE training/decoding centrally, and — crucially —
+//! replays the simulator's ledger/fabric call sequence verbatim against
+//! the *received* payload sizes, so `Ledger`, `NetReport`, loss curves,
+//! and checkpoints are bit-identical to a sim run of the same config
+//! (tests/tcp_e2e.rs asserts this for every supported method).
+//!
+//! Accounting order is decoupled from wire arrival order: each iteration
+//! first receives everything (support, gradients, latents), then replays
+//! the sim's exact record/send/barrier sequence, so socket scheduling
+//! can never perturb the ledger.
+//!
+//! Fault semantics: every receive is deadline-bounded by the configured
+//! net timeout.  A worker that dies mid-iteration surfaces as a
+//! descriptive "disconnected"/"timed out" error naming the node and
+//! iteration — never a hang — after which the remaining workers get a
+//! best-effort [`Msg::Shutdown`] and self-spawned children are killed.
+//!
+//! Wall-clock bookkeeping: worker compute and wire time are
+//! indistinguishable from the coordinator's seat, so `time_grad` covers
+//! plan-send → all-payloads-received (compute + wire) and
+//! `time_exchange` covers the central replay (decode, AE work, sync
+//! broadcast).  `lgc train --transport tcp` prints the measured per-
+//! iteration wall-clock next to the fabric's modeled time so the two can
+//! be compared (CI uploads that artifact).
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::baselines::dense_mean_accounted;
+use crate::compress::autoencoder::{AeCompressor, Pattern};
+use crate::compress::{index_coding, topk, Scratch};
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::lgc::{clip_to_gradient_scale, ef_on_rec, innovation_into, AE_GATE_WINDOW};
+use crate::coordinator::scheduler::{phase_and_alpha, Phase};
+use crate::coordinator::{lr_at, ring, CurvePoint, TrainResult};
+use crate::data::{self, Dataset};
+use crate::metrics::{Kind, Ledger, NodeLedger};
+use crate::model::{Group, Model};
+use crate::net::NetSim;
+use crate::runtime::{Engine, ModelMeta};
+use crate::transport::{accept_workers, Conn, LastUp, Listener, MidUp, Msg, RejectorGuard};
+use crate::util::rng::Rng;
+
+/// Methods the wire transport supports (the others error loudly; see
+/// [`gate_method`]).
+pub const TCP_METHODS: &[Method] = &[
+    Method::Baseline,
+    Method::SparseGd,
+    Method::Dgc,
+    Method::Threshold,
+    Method::LgcPs,
+    Method::LgcRar,
+];
+
+/// Coordinator-side knobs for one multi-process run.
+#[derive(Debug, Clone)]
+pub struct RemoteOpts {
+    /// Bind address: `host:port` (port 0 = ephemeral) or `unix:/path`.
+    pub listen: String,
+    /// Session id; joins offering a different id are rejected.
+    pub session: u64,
+    /// Deadline for all K workers to join.
+    pub join_timeout: Duration,
+    /// Per-receive deadline during training — a dead worker surfaces as
+    /// an error within this bound, never a hang.
+    pub net_timeout: Duration,
+    /// Self-spawn K `lgc worker` child processes (the `--transport tcp`
+    /// path).  `lgc serve` sets this false and waits for external
+    /// workers.
+    pub spawn_workers: bool,
+    /// Binary to spawn workers from (default: this executable).
+    pub worker_bin: Option<PathBuf>,
+}
+
+impl RemoteOpts {
+    /// Defaults for a self-contained loopback run.
+    pub fn local(session: u64) -> RemoteOpts {
+        RemoteOpts {
+            listen: "127.0.0.1:0".into(),
+            session,
+            join_timeout: Duration::from_secs(60),
+            net_timeout: Duration::from_secs(30),
+            spawn_workers: true,
+            worker_bin: None,
+        }
+    }
+}
+
+/// A session id that differs across concurrent runs on one host (the
+/// handshake rejects joins carrying another run's id).
+pub fn default_session() -> u64 {
+    ((std::process::id() as u64) << 16) | 0xC0DE
+}
+
+/// Fail fast on configs the wire transport cannot reproduce
+/// bit-identically (satellite 4: loud errors, not silent fallbacks).
+pub fn gate_method(cfg: &TrainConfig) -> Result<()> {
+    match cfg.method {
+        Method::ScaleCom | Method::Qsgd => bail!(
+            "--transport tcp does not support method {} (supported: baseline, sparse_gd, \
+             dgc, threshold, lgc_ps, lgc_rar); rerun with --transport sim",
+            cfg.method.name()
+        ),
+        Method::LgcPs | Method::LgcRar if ef_on_rec() => bail!(
+            "--transport tcp does not support LGC_EF_ON_REC=1 (the shared reconstruction \
+             would have to be re-broadcast into every worker's EF memory); rerun with \
+             --transport sim"
+        ),
+        _ => Ok(()),
+    }
+}
+
+/// Entry point for `cfg.transport == Tcp`: bind loopback, self-spawn K
+/// worker processes from this executable, run the session.
+pub fn train_tcp(engine: &Engine, cfg: TrainConfig) -> Result<TrainResult> {
+    train_with_opts(engine, cfg, &RemoteOpts::local(default_session()))
+}
+
+/// Full-control entry point (also the `lgc serve` implementation with
+/// `spawn_workers: false`).
+pub fn train_with_opts(
+    engine: &Engine,
+    mut cfg: TrainConfig,
+    opts: &RemoteOpts,
+) -> Result<TrainResult> {
+    gate_method(&cfg)?;
+    ensure!(cfg.nodes >= 1, "--transport tcp needs at least one worker node");
+    // Resolve the model up front so every worker receives the resolved
+    // name and builds the identical replica.
+    let meta = engine.manifest.resolve_model(&cfg.model).clone();
+    cfg.model = meta.name.clone();
+
+    let listener = Listener::bind(&opts.listen)
+        .with_context(|| format!("binding coordinator listener on {:?}", opts.listen))?;
+    let addr = listener.local_addr()?;
+    eprintln!(
+        "lgc: coordinator listening on {addr} (session {:#x}, {} workers)",
+        opts.session, cfg.nodes
+    );
+
+    let mut children = ChildGuard::default();
+    if opts.spawn_workers {
+        for _ in 0..cfg.nodes {
+            children.spawn(engine, &addr, opts)?;
+        }
+    }
+
+    let mut conns = accept_workers(
+        &listener,
+        cfg.nodes,
+        opts.session,
+        &engine.platform(),
+        &cfg,
+        opts.join_timeout,
+    )?;
+    for conn in &mut conns {
+        conn.set_read_timeout(Some(opts.net_timeout))?;
+    }
+    // Late connections (double joins, strays) get a descriptive "session
+    // full" refusal for the rest of the run.
+    let _rejector = RejectorGuard::spawn(listener, cfg.nodes)?;
+
+    let mut co = Coordinator::new(engine, cfg, meta, conns)?;
+    let result = co.run();
+    match &result {
+        Ok(_) => co.broadcast_best_effort(&Msg::Shutdown { reason: "training complete".into() }),
+        Err(e) => co.broadcast_best_effort(&Msg::Shutdown {
+            reason: format!("coordinator error: {e:#}"),
+        }),
+    }
+    if result.is_ok() {
+        children.reap(Duration::from_secs(10));
+    }
+    // On error, ChildGuard::drop kills any still-running children.
+    result
+}
+
+/// Kills still-running spawned workers on drop (error paths); `reap`
+/// waits for clean exits first.
+#[derive(Default)]
+struct ChildGuard {
+    children: Vec<Child>,
+}
+
+impl ChildGuard {
+    fn spawn(&mut self, engine: &Engine, addr: &str, opts: &RemoteOpts) -> Result<()> {
+        let bin = match &opts.worker_bin {
+            Some(p) => p.clone(),
+            None => std::env::current_exe().context("locating this executable to spawn workers")?,
+        };
+        // The worker must open the same backend kind or the join-time
+        // platform check refuses it.
+        let backend = if engine.platform().contains("native") {
+            "native"
+        } else {
+            "pjrt"
+        };
+        let child = Command::new(&bin)
+            .arg("worker")
+            .arg("--connect")
+            .arg(addr)
+            .arg("--session")
+            .arg(opts.session.to_string())
+            .arg("--retries")
+            .arg("40")
+            .arg("--backoff-ms")
+            .arg("50")
+            .arg("--net-timeout-ms")
+            .arg((opts.net_timeout.as_millis() as u64 * 4).to_string())
+            .env("LGC_BACKEND", backend)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning worker process from {bin:?}"))?;
+        self.children.push(child);
+        Ok(())
+    }
+
+    /// Give cleanly-shut-down workers time to exit before the kill-on-
+    /// drop backstop.
+    fn reap(&mut self, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            self.children.retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
+            if self.children.is_empty() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Coordinator-side LGC mirror: the full autoencoder (training + both
+/// decoders), the sticky readiness gate, and the one-shot encoder
+/// transfer bookkeeping.
+struct LgcMirror {
+    ae: AeCompressor,
+    ps: bool,
+    /// Sticky readiness latch — mirrors `LgcCommon::check_ae_ready`.
+    ready: bool,
+    /// Encoder weights shipped to the worker(s) (one-shot; the AE is
+    /// frozen once engaged, so the transfer stays exact).
+    enc_shipped: bool,
+    /// RAR's one-time AE-weight broadcast recorded on the ledger.
+    oneoff_recorded: bool,
+    /// Per-node innovation buffers + scratch arenas for the AE-training
+    /// mirror (scratch is stateless between calls, so central recompute
+    /// is bit-identical to the sim's per-node arenas).
+    inns: Vec<Vec<f32>>,
+    scratches: Vec<Scratch>,
+}
+
+/// One received per-node uplink.
+struct Up {
+    loss: f32,
+    acc: f32,
+    first: Vec<f32>,
+    mid: MidUp,
+    last: LastUp,
+    ctrl_mid: Option<Vec<f32>>,
+}
+
+/// The multi-process training session: K worker connections plus the
+/// coordinator's replica of everything the sim's `Trainer` owns
+/// centrally.
+struct Coordinator<'e> {
+    engine: &'e Engine,
+    cfg: TrainConfig,
+    meta: ModelMeta,
+    conns: Vec<Conn>,
+    model: Model,
+    dataset: Box<dyn Dataset>,
+    rng: Rng,
+    lgc: Option<LgcMirror>,
+    n_mid: usize,
+    n_last: usize,
+}
+
+impl<'e> Coordinator<'e> {
+    fn new(
+        engine: &'e Engine,
+        cfg: TrainConfig,
+        meta: ModelMeta,
+        conns: Vec<Conn>,
+    ) -> Result<Self> {
+        let mut model = Model::new(&meta, cfg.seed);
+        model.momentum = match cfg.method {
+            Method::Baseline | Method::Qsgd => cfg.momentum,
+            _ => 0.0,
+        };
+        model.weight_decay = cfg.weight_decay;
+        let dataset = data::for_model(&meta, cfg.seed ^ 0xDA7A);
+        let n_mid = meta.group_len(&meta.mid_param_idx);
+        let n_last = meta.group_len(&meta.last_param_idx);
+        let lgc = match cfg.method {
+            Method::LgcPs | Method::LgcRar => {
+                let ps = matches!(cfg.method, Method::LgcPs);
+                let pattern = if ps {
+                    Pattern::ParamServer
+                } else {
+                    Pattern::RingAllreduce
+                };
+                let ae = AeCompressor::new(engine, meta.mu, cfg.nodes, pattern, cfg.seed ^ 0xAE)?;
+                Some(LgcMirror {
+                    ae,
+                    ps,
+                    ready: false,
+                    enc_shipped: false,
+                    oneoff_recorded: false,
+                    inns: vec![Vec::new(); cfg.nodes],
+                    scratches: Scratch::for_nodes(cfg.nodes),
+                })
+            }
+            _ => None,
+        };
+        let rng = Rng::new(cfg.seed ^ 0x7124);
+        Ok(Coordinator { engine, cfg, meta, conns, model, dataset, rng, lgc, n_mid, n_last })
+    }
+
+    fn broadcast_best_effort(&mut self, msg: &Msg) {
+        for conn in &mut self.conns {
+            let _ = conn.send(msg);
+        }
+    }
+
+    /// Mirror of `LgcCommon::check_ae_ready`, evaluated before each
+    /// iteration's work (exactly where the sim's match guard runs).
+    fn engaged(&mut self, phase: Phase) -> bool {
+        let ae_gate = self.cfg.ae_gate;
+        let Some(l) = &mut self.lgc else { return false };
+        if phase != Phase::Compressed {
+            return false;
+        }
+        if l.ready {
+            return true;
+        }
+        let losses = &l.ae.train_losses;
+        if losses.len() >= AE_GATE_WINDOW {
+            let tail = &losses[losses.len() - AE_GATE_WINDOW..];
+            let mean = tail.iter().map(|(r, _)| r).sum::<f32>() / AE_GATE_WINDOW as f32;
+            if mean < ae_gate {
+                l.ready = true;
+            }
+        }
+        l.ready
+    }
+
+    /// Send every worker its iteration plan; at the engagement
+    /// transition, ship the trained encoder (PS: worker 0 only, §V-B1;
+    /// RAR: all workers — the matching byte accounting happens in the
+    /// replay, mirroring the sim's oneoff).
+    fn send_plans(&mut self, it: usize, engaged: bool) -> Result<()> {
+        let (ship, ps, payload) = match &self.lgc {
+            Some(l) if engaged && !l.enc_shipped => (true, l.ps, l.ae.export_encoder()),
+            Some(l) => (false, l.ps, Vec::new()),
+            None => (false, false, Vec::new()),
+        };
+        for (node, conn) in self.conns.iter_mut().enumerate() {
+            let follows = ship && (!ps || node == 0);
+            conn.send(&Msg::IterPlan { iter: it as u32, engaged, weights_follow: follows })
+                .with_context(|| format!("sending iter {it} plan to node {node}"))?;
+            if follows {
+                conn.send(&Msg::Model { iter: it as u32, payload: payload.clone() })
+                    .with_context(|| format!("shipping AE encoder to node {node}"))?;
+            }
+        }
+        if ship {
+            if let Some(l) = &mut self.lgc {
+                l.enc_shipped = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive the leader's support upload and relay it to every worker
+    /// (the leader included — one uniform decode path on the workers).
+    fn relay_support(&mut self, it: usize, leader: usize) -> Result<Vec<u8>> {
+        let coded = match self.conns[leader]
+            .expect("Support")
+            .with_context(|| format!("node {leader} (support leader) at iter {it}"))?
+        {
+            Msg::Support { iter, coded } => {
+                ensure!(
+                    iter as usize == it,
+                    "protocol desync: Support for iter {iter}, expected {it}"
+                );
+                coded
+            }
+            other => bail!("expected Support from node {leader}, got {}", other.name()),
+        };
+        for (node, conn) in self.conns.iter_mut().enumerate() {
+            conn.send(&Msg::SupportBcast { iter: it as u32, coded: coded.clone() })
+                .with_context(|| format!("broadcasting support to node {node} at iter {it}"))?;
+        }
+        Ok(coded)
+    }
+
+    /// Receive each node's gradient uplink, in node order.
+    fn recv_gradients(&mut self, it: usize) -> Result<Vec<Up>> {
+        let mut ups = Vec::with_capacity(self.conns.len());
+        for node in 0..self.conns.len() {
+            match self.conns[node]
+                .expect("Gradient")
+                .with_context(|| format!("node {node} at iter {it}"))?
+            {
+                Msg::Gradient { iter, loss, acc, first, mid, last, ctrl_mid } => {
+                    ensure!(
+                        iter as usize == it,
+                        "protocol desync: Gradient from node {node} for iter {iter}, expected {it}"
+                    );
+                    ensure!(
+                        first.len() == self.meta.group_len(&self.meta.first_param_idx),
+                        "node {node} sent a first-group gradient of wrong length"
+                    );
+                    ups.push(Up { loss, acc, first, mid, last, ctrl_mid });
+                }
+                other => bail!("expected Gradient from node {node}, got {}", other.name()),
+            }
+        }
+        Ok(ups)
+    }
+
+    /// Receive the expected AE latents (engaged iterations only): node 0
+    /// for PS, every node for RAR.
+    fn recv_latents(&mut self, it: usize) -> Result<Vec<(Vec<f32>, f32)>> {
+        let Some(l) = &self.lgc else { return Ok(Vec::new()) };
+        let senders: Vec<usize> = if l.ps {
+            vec![0]
+        } else {
+            (0..self.conns.len()).collect()
+        };
+        let mut out = Vec::with_capacity(senders.len());
+        for node in senders {
+            match self.conns[node]
+                .expect("Latent")
+                .with_context(|| format!("node {node} at iter {it}"))?
+            {
+                Msg::Latent { iter, latent, scale } => {
+                    ensure!(
+                        iter as usize == it,
+                        "protocol desync: Latent from node {node} for iter {iter}, expected {it}"
+                    );
+                    ensure!(
+                        latent.len() == l.ae.latent_len(),
+                        "node {node} sent a latent of length {}, expected {}",
+                        latent.len(),
+                        l.ae.latent_len()
+                    );
+                    out.push((latent, scale));
+                }
+                other => bail!("expected Latent from node {node}, got {}", other.name()),
+            }
+        }
+        Ok(out)
+    }
+
+    /// The training loop — the sim's `Trainer::run` with the per-node
+    /// stages replaced by wire receives and the accounting replayed
+    /// verbatim.
+    fn run(&mut self) -> Result<TrainResult> {
+        let nodes = self.cfg.nodes;
+        let steps = self.cfg.steps;
+        let mut ledger = Ledger::new();
+        let mut shards = NodeLedger::for_nodes(nodes);
+        let mut net = NetSim::new(self.cfg.fabric(), nodes);
+        let mut curve = Vec::with_capacity(steps);
+        let mut evals = Vec::new();
+        let mut phase_time = [Duration::ZERO; 3];
+        let mut phase_iters = [0usize; 3];
+        let mut time_grad = Duration::ZERO;
+        let mut time_exchange = Duration::ZERO;
+        let mut time_update = Duration::ZERO;
+
+        for it in 0..steps {
+            let (phase, _alpha) = phase_and_alpha(&self.cfg, it);
+            ledger.set_phase(phase.index() as u8 + 1);
+            let t0 = Instant::now();
+            let engaged = self.engaged(phase);
+            let lgc_support_round = self.lgc.is_some() && phase != Phase::Dense;
+
+            // --- wire exchange: plans out, payloads in -----------------
+            let t_grad0 = Instant::now();
+            self.send_plans(it, engaged)?;
+            let support_coded = if lgc_support_round {
+                let ps = self.lgc.as_ref().map(|l| l.ps).unwrap_or(false);
+                let leader = if ps { 0 } else { it % nodes };
+                Some(self.relay_support(it, leader)?)
+            } else {
+                None
+            };
+            let mut ups = self.recv_gradients(it)?;
+            let latents = if engaged {
+                self.recv_latents(it)?
+            } else {
+                Vec::new()
+            };
+            time_grad += t_grad0.elapsed();
+
+            // --- central replay of the sim's exchange ------------------
+            let t_ex0 = Instant::now();
+            // Divergence check in node order, with the sim's exact error.
+            let method_name = self.cfg.method.name();
+            let lr_cfg = self.cfg.lr;
+            let mut loss_sum = 0.0f32;
+            let mut acc_sum = 0.0f32;
+            for (node, up) in ups.iter().enumerate() {
+                anyhow::ensure!(
+                    up.loss.is_finite(),
+                    "training diverged: non-finite loss at iter {it}, node {node} \
+                     (method {method_name}, lr {lr_cfg})"
+                );
+                loss_sum += up.loss;
+                acc_sum += up.acc;
+            }
+
+            // First layer: always dense.
+            let first_g: Vec<Vec<f32>> =
+                ups.iter_mut().map(|u| std::mem::take(&mut u.first)).collect();
+            let first_mean = dense_mean_accounted(&first_g, &mut shards);
+            net.fanout((first_mean.len() * 4) as u64);
+
+            let mid_mean = self.mid_replay(
+                it,
+                phase,
+                engaged,
+                &mut ups,
+                support_coded.as_deref(),
+                latents,
+                &mut ledger,
+                &mut shards,
+                &mut net,
+            )?;
+            let last_mean = self.last_replay(phase, &mut ups, &mut shards, &mut net)?;
+
+            // --- update: broadcast the means, apply locally ------------
+            for (node, conn) in self.conns.iter_mut().enumerate() {
+                conn.send(&Msg::SyncInfo {
+                    iter: it as u32,
+                    first: first_mean.clone(),
+                    mid: mid_mean.clone(),
+                    last: last_mean.clone(),
+                })
+                .with_context(|| format!("broadcasting sync to node {node} at iter {it}"))?;
+            }
+            time_exchange += t_ex0.elapsed();
+            let t_up0 = Instant::now();
+            self.model.apply_update(
+                &[
+                    (Group::First, first_mean),
+                    (Group::Mid, mid_mean),
+                    (Group::Last, last_mean),
+                ],
+                lr_at(&self.cfg, it),
+            );
+            time_update += t_up0.elapsed();
+
+            // Fabric + ledger close-out, verbatim from Trainer::run.
+            if shards.iter().any(|s| s.pending_oneoff().0 > 0) {
+                for shard in shards.iter() {
+                    let (msgs, bytes) = shard.pending_oneoff();
+                    net.send_many(shard.node(), msgs, bytes);
+                }
+                net.barrier_oneoff();
+            }
+            for shard in shards.iter() {
+                let (msgs, bytes) = shard.pending_recurring();
+                net.send_many(shard.node(), msgs, bytes);
+            }
+            net.end_iteration();
+            ledger.merge_shards(&mut shards);
+            ledger.end_iteration();
+
+            let dt = t0.elapsed();
+            phase_time[phase.index()] += dt;
+            phase_iters[phase.index()] += 1;
+
+            curve.push(CurvePoint {
+                iter: it,
+                train_loss: loss_sum / nodes as f32,
+                train_acc: acc_sum / nodes as f32,
+            });
+
+            if self.cfg.eval_every > 0 && (it + 1) % self.cfg.eval_every == 0 {
+                let (l, a) = self.evaluate()?;
+                evals.push((it, l, a));
+                if self.cfg.verbose {
+                    eprintln!(
+                        "[{}/tcp] it {:>5} phase {:<10} train_loss {:.4} eval_loss {:.4} \
+                         eval_acc {:.4}",
+                        method_name,
+                        it,
+                        phase.name(),
+                        curve.last().unwrap().train_loss,
+                        l,
+                        a
+                    );
+                }
+            }
+        }
+
+        let final_eval = self.evaluate()?;
+        if let Some(path) = &self.cfg.checkpoint {
+            self.model.save_checkpoint(path)?;
+        }
+        Ok(TrainResult {
+            method: self.cfg.method,
+            model: self.cfg.model.clone(),
+            nodes,
+            steps,
+            curve,
+            evals,
+            ledger,
+            phase_time,
+            phase_iters,
+            ae_losses: self.lgc.as_ref().map(|l| l.ae.train_losses.clone()).unwrap_or_default(),
+            final_eval,
+            dense_bytes_per_node: (self.meta.n_params * 4) as u64,
+            time_grad,
+            time_exchange,
+            time_update,
+            net: net.into_report(),
+        })
+    }
+
+    /// Mid-group replay: per method/phase, mirror the strategy's exact
+    /// ledger/fabric sequence against the received payloads and return
+    /// the aggregated dense mean.
+    #[allow(clippy::too_many_arguments)]
+    fn mid_replay(
+        &mut self,
+        it: usize,
+        phase: Phase,
+        engaged: bool,
+        ups: &mut [Up],
+        support_coded: Option<&[u8]>,
+        latents: Vec<(Vec<f32>, f32)>,
+        ledger: &mut Ledger,
+        shards: &mut [NodeLedger],
+        net: &mut NetSim,
+    ) -> Result<Vec<f32>> {
+        let nodes = ups.len();
+        let n = self.n_mid;
+        match self.cfg.method {
+            Method::Baseline => {
+                let mids = take_dense_mids(ups)?;
+                let mean = dense_mean_accounted(&mids, shards);
+                net.fanout((mean.len() * 4) as u64);
+                Ok(mean)
+            }
+            Method::SparseGd | Method::Dgc | Method::Threshold => {
+                // Mirror of baselines::sparse_ef_exchange / HardThreshold:
+                // per-node Values+Indices records, scatter-mean in node
+                // order, one fan-out of the concatenated packets.
+                let fp16 = self.cfg.fp16_values;
+                let mut mean = vec![0.0f32; n];
+                let mut total = 0u64;
+                for (node, up) in ups.iter().enumerate() {
+                    let MidUp::Sparse { coded_idx, vals } = &up.mid else {
+                        bail!("node {node} sent {} for a sparse method", up.mid.name())
+                    };
+                    let idx = index_coding::decode(coded_idx, n)?;
+                    ensure!(
+                        idx.len() == vals.len(),
+                        "node {node}: {} indices vs {} values",
+                        idx.len(),
+                        vals.len()
+                    );
+                    let bytes = vals.len() * if fp16 { 2 } else { 4 };
+                    shards[node].record(Kind::Values, bytes);
+                    shards[node].record(Kind::Indices, coded_idx.len());
+                    total += (bytes + coded_idx.len()) as u64;
+                    topk::scatter_add(&mut mean, &idx, vals);
+                }
+                mean.iter_mut().for_each(|m| *m /= nodes as f32);
+                net.fanout(total);
+                Ok(mean)
+            }
+            Method::LgcPs | Method::LgcRar => {
+                let ps = matches!(self.cfg.method, Method::LgcPs);
+                if phase == Phase::Dense {
+                    let mut mids = take_dense_mids(ups)?;
+                    if ps {
+                        let mean = dense_mean_accounted(&mids, shards);
+                        net.fanout((mean.len() * 4) as u64);
+                        Ok(mean)
+                    } else {
+                        Ok(ring::ring_allreduce_mean_timed(
+                            &mut mids,
+                            ledger,
+                            Kind::Dense,
+                            Some(net),
+                        ))
+                    }
+                } else if !engaged {
+                    self.topk_replay(it, ps, ups, support_coded, ledger, shards, net)
+                } else if ps {
+                    self.ps_compressed_replay(ups, support_coded, latents, ledger, shards, net)
+                } else {
+                    self.rar_compressed_replay(it, ups, support_coded, latents, ledger, net)
+                }
+            }
+            Method::ScaleCom | Method::Qsgd => unreachable!("gated in gate_method"),
+        }
+    }
+
+    /// Mirror of the support half of `LgcCommon::leader_support_inner`
+    /// (the EF accumulation + selection ran on the workers): account the
+    /// leader's ordered-index broadcast and decode the shared support.
+    fn support_replay(
+        &self,
+        leader: usize,
+        support_coded: Option<&[u8]>,
+        ledger: &mut Ledger,
+        net: &mut NetSim,
+    ) -> Result<Vec<u32>> {
+        let coded = support_coded.context("support round without a support payload")?;
+        let support = index_coding::decode_ordered(coded)?;
+        ensure!(
+            support.len() == self.meta.mu,
+            "support has {} indices, expected mu={}",
+            support.len(),
+            self.meta.mu
+        );
+        ledger.record(leader, Kind::Indices, coded.len());
+        net.send(leader, coded.len() as u64);
+        net.barrier();
+        Ok(support)
+    }
+
+    /// Phase-2 mirror (`LgcCommon::topk_phase`): exact value-vector
+    /// accounting + the coordinator-resident AE's online training on the
+    /// received vectors (same RNG stream, same inner steps — the loss
+    /// trace and the downstream readiness gate stay bit-identical).
+    #[allow(clippy::too_many_arguments)]
+    fn topk_replay(
+        &mut self,
+        it: usize,
+        ps: bool,
+        ups: &mut [Up],
+        support_coded: Option<&[u8]>,
+        ledger: &mut Ledger,
+        shards: &mut [NodeLedger],
+        net: &mut NetSim,
+    ) -> Result<Vec<f32>> {
+        let nodes = ups.len();
+        let n = self.n_mid;
+        let mu = self.meta.mu;
+        let leader = if ps { 0 } else { it % nodes };
+        let support = self.support_replay(leader, support_coded, ledger, net)?;
+        let trainer = it % nodes;
+        let mut vvs: Vec<&[f32]> = Vec::with_capacity(nodes);
+        for (node, up) in ups.iter().enumerate() {
+            let MidUp::Vv(vv) = &up.mid else {
+                bail!("node {node} sent {} in the top-k phase", up.mid.name())
+            };
+            ensure!(vv.len() == mu, "node {node} value-vector length {} != mu {mu}", vv.len());
+            shards[node].record(Kind::Values, vv.len() * 4);
+            if !ps && node != trainer {
+                shards[node].record(Kind::Values, mu * 4);
+            }
+            vvs.push(vv);
+        }
+        let mut mean = vec![0.0f32; n];
+        for vv in &vvs {
+            topk::scatter_add(&mut mean, &support, vv);
+        }
+        mean.iter_mut().for_each(|m| *m /= nodes as f32);
+        if ps {
+            net.fanout((mu * 4) as u64);
+        } else if nodes > 1 {
+            ledger.record(trainer, Kind::Values, (nodes - 1) * mu * 4);
+            net.broadcast(trainer, (mu * 4) as u64);
+        }
+
+        // Online AE training on the received value-vectors.
+        let l = self.lgc.as_mut().expect("topk_replay only runs for LGC methods");
+        let inner = self.cfg.ae_inner_steps.max(1);
+        if ps {
+            let frac = self.cfg.innovation_frac;
+            for node in 0..nodes {
+                innovation_into(vvs[node], frac, &mut l.inns[node], &mut l.scratches[node])?;
+            }
+            let inns: Vec<&[f32]> = l.inns.iter().map(|i| i.as_slice()).collect();
+            for _ in 0..inner {
+                let ridx = self.rng.below(nodes);
+                l.ae.train_step(
+                    self.engine,
+                    &vvs,
+                    Some(&inns),
+                    ridx,
+                    self.cfg.ae_lr,
+                    1.0,
+                    self.cfg.lambda2,
+                )?;
+            }
+        } else {
+            for _ in 0..inner {
+                l.ae.train_step(self.engine, &vvs, None, 0, self.cfg.ae_lr, 1.0, 0.0)?;
+            }
+        }
+        Ok(mean)
+    }
+
+    /// Phase-3 PS mirror (`LgcPs::exchange`, Compressed arm): innovations
+    /// arrive coded from every worker, the latent from the leader; the
+    /// master decodes per node, averages, clips, scatters.
+    #[allow(clippy::too_many_arguments)]
+    fn ps_compressed_replay(
+        &mut self,
+        ups: &mut [Up],
+        support_coded: Option<&[u8]>,
+        latents: Vec<(Vec<f32>, f32)>,
+        ledger: &mut Ledger,
+        shards: &mut [NodeLedger],
+        net: &mut NetSim,
+    ) -> Result<Vec<f32>> {
+        let nodes = ups.len();
+        let mu = self.meta.mu;
+        let support = self.support_replay(0, support_coded, ledger, net)?;
+        let mut s_ks = Vec::with_capacity(nodes);
+        let mut inns: Vec<Vec<f32>> = Vec::with_capacity(nodes);
+        for (node, up) in ups.iter().enumerate() {
+            let MidUp::Innovation { coded_idx, vals, scale } = &up.mid else {
+                bail!("node {node} sent {} in the engaged PS phase", up.mid.name())
+            };
+            let idx = index_coding::decode(coded_idx, mu)?;
+            ensure!(
+                idx.len() == vals.len(),
+                "node {node}: {} innovation indices vs {} values",
+                idx.len(),
+                vals.len()
+            );
+            // innovation_into's wire bytes: values + coded indices (+4 B
+            // RMS scale recorded by the caller).
+            let bytes = vals.len() * 4 + coded_idx.len();
+            shards[node].record(Kind::Values, bytes + 4);
+            s_ks.push(*scale);
+            inns.push(topk::scatter(mu, &idx, vals));
+        }
+        let l = self.lgc.as_mut().expect("ps replay only runs for LGC methods");
+        let (latent, _s0) = latents.into_iter().next().context("leader latent missing")?;
+        shards[0].record(Kind::Latent, l.ae.latent_bytes());
+        let mut mean_vals = vec![0.0f32; mu];
+        for (node, inn) in inns.iter().enumerate() {
+            let rec = l.ae.decode_ps(self.engine, node, &latent, inn, s_ks[node])?;
+            for (m, x) in mean_vals.iter_mut().zip(&rec) {
+                *m += x;
+            }
+        }
+        mean_vals.iter_mut().for_each(|m| *m /= nodes as f32);
+        let ctrls = take_ctrl_grads(ups, self.n_mid)?;
+        clip_to_gradient_scale(&mut mean_vals, &ctrls);
+        net.fanout((mu * 4) as u64);
+        Ok(topk::scatter(self.n_mid, &support, &mean_vals))
+    }
+
+    /// Phase-3 RAR mirror (`LgcRar::exchange`, Compressed arm): one-time
+    /// AE-weight broadcast accounting, latent ring-allreduce on the
+    /// received latents, shared decode, clip, scatter.
+    fn rar_compressed_replay(
+        &mut self,
+        it: usize,
+        ups: &mut [Up],
+        support_coded: Option<&[u8]>,
+        latents: Vec<(Vec<f32>, f32)>,
+        ledger: &mut Ledger,
+        net: &mut NetSim,
+    ) -> Result<Vec<f32>> {
+        let nodes = ups.len();
+        {
+            let l = self.lgc.as_mut().expect("rar replay only runs for LGC methods");
+            if !l.oneoff_recorded {
+                ledger.record_oneoff(it % nodes, Kind::AeWeights, l.ae.param_bytes() * (nodes - 1));
+                net.broadcast_oneoff(it % nodes, l.ae.param_bytes() as u64);
+                l.oneoff_recorded = true;
+            }
+        }
+        let support = self.support_replay(it % nodes, support_coded, ledger, net)?;
+        for (node, up) in ups.iter().enumerate() {
+            ensure!(
+                matches!(up.mid, MidUp::None),
+                "node {node} sent {} in the engaged RAR phase",
+                up.mid.name()
+            );
+        }
+        let mut lat_vecs = Vec::with_capacity(nodes);
+        let mut scales = Vec::with_capacity(nodes);
+        for (lat, s) in latents {
+            lat_vecs.push(lat);
+            scales.push(s);
+        }
+        ensure!(lat_vecs.len() == nodes, "expected {nodes} latents, got {}", lat_vecs.len());
+        let latent_avg =
+            ring::ring_allreduce_mean_timed(&mut lat_vecs, ledger, Kind::Latent, Some(net));
+        let scale_avg = scales.iter().sum::<f32>() / nodes as f32;
+        let l = self.lgc.as_mut().expect("rar replay only runs for LGC methods");
+        let mut rec = l.ae.decode_rar(self.engine, &latent_avg, scale_avg)?;
+        let ctrls = take_ctrl_grads(ups, self.n_mid)?;
+        clip_to_gradient_scale(&mut rec, &ctrls);
+        Ok(topk::scatter(self.n_mid, &support, &rec))
+    }
+
+    /// Mirror of `Trainer::last_exchange` against received payloads.
+    fn last_replay(
+        &mut self,
+        phase: Phase,
+        ups: &mut [Up],
+        shards: &mut [NodeLedger],
+        net: &mut NetSim,
+    ) -> Result<Vec<f32>> {
+        let nodes = ups.len();
+        let n = self.n_last;
+        let dense = matches!(self.cfg.method, Method::Baseline | Method::Qsgd)
+            || phase == Phase::Dense;
+        if dense {
+            let mut lasts = Vec::with_capacity(nodes);
+            for (node, up) in ups.iter_mut().enumerate() {
+                let LastUp::Dense(g) = &mut up.last else {
+                    bail!("node {node} sent a sparse last-group payload on a dense path")
+                };
+                ensure!(g.len() == n, "node {node} last-group length {} != {n}", g.len());
+                lasts.push(std::mem::take(g));
+            }
+            let mean = dense_mean_accounted(&lasts, shards);
+            net.fanout((n * 4) as u64);
+            return Ok(mean);
+        }
+        let mut mean = vec![0.0f32; n];
+        let mut total = 0u64;
+        for (node, up) in ups.iter().enumerate() {
+            let LastUp::Sparse { coded_idx, vals } = &up.last else {
+                bail!("node {node} sent a dense last-group payload on a sparse path")
+            };
+            let idx = index_coding::decode(coded_idx, n)?;
+            ensure!(
+                idx.len() == vals.len(),
+                "node {node}: {} last indices vs {} values",
+                idx.len(),
+                vals.len()
+            );
+            shards[node].record(Kind::Values, vals.len() * 4);
+            shards[node].record(Kind::Indices, coded_idx.len());
+            total += (vals.len() * 4 + coded_idx.len()) as u64;
+            topk::scatter_add(&mut mean, &idx, vals);
+        }
+        mean.iter_mut().for_each(|m| *m /= nodes as f32);
+        net.fanout(total);
+        Ok(mean)
+    }
+
+    /// Mean loss/acc over the held-out eval batches (coordinator-only;
+    /// workers never evaluate).
+    fn evaluate(&self) -> Result<(f32, f32)> {
+        let mut l = 0.0;
+        let mut a = 0.0;
+        for i in 0..self.cfg.eval_batches {
+            let b = self.dataset.eval_batch(i);
+            let (li, ai) = self.model.evaluate(self.engine, &b)?;
+            l += li;
+            a += ai;
+        }
+        let n = self.cfg.eval_batches as f32;
+        Ok((l / n, a / n))
+    }
+}
+
+/// Extract dense mid payloads from every node (dense phases).
+fn take_dense_mids(ups: &mut [Up]) -> Result<Vec<Vec<f32>>> {
+    let mut out = Vec::with_capacity(ups.len());
+    for (node, up) in ups.iter_mut().enumerate() {
+        let MidUp::Dense(g) = &mut up.mid else {
+            bail!("node {node} sent {} on a dense path", up.mid.name())
+        };
+        out.push(std::mem::take(g));
+    }
+    Ok(out)
+}
+
+/// Extract the raw mid gradients attached for the trust-region clip
+/// (engaged LGC iterations only).
+fn take_ctrl_grads(ups: &mut [Up], n_mid: usize) -> Result<Vec<Vec<f32>>> {
+    let mut out = Vec::with_capacity(ups.len());
+    for (node, up) in ups.iter_mut().enumerate() {
+        let g = up.ctrl_mid.take().with_context(|| {
+            format!("node {node} omitted the raw mid gradient on an engaged iteration")
+        })?;
+        ensure!(g.len() == n_mid, "node {node} raw mid gradient length {} != {n_mid}", g.len());
+        out.push(g);
+    }
+    Ok(out)
+}

@@ -1,0 +1,472 @@
+//! Worker side of the real multi-process transport (DESIGN.md §12).
+//!
+//! One `lgc worker` process owns exactly one simulated node of the
+//! distributed run: its model replica, its data stream, its
+//! error-feedback memories, and (for LGC) its copy of the trained
+//! encoder.  The per-node pipeline executed here — EF accumulation,
+//! top-k / gather-at-support, innovation selection, AE encode, index
+//! coding — is line-for-line the node-local stage of the in-process
+//! simulator ([`crate::coordinator::Trainer`], [`crate::coordinator::lgc`],
+//! [`crate::baselines`]), so a TCP run is bit-identical to a sim run of
+//! the same config (tests/tcp_e2e.rs).
+//!
+//! Replica consistency is inductive: every worker builds the same
+//! deterministic `Model::new(meta, cfg.seed)` and applies the same
+//! broadcast [`Msg::SyncInfo`] means with the same `lr_at` schedule, so
+//! parameters stay identical across processes without ever shipping
+//! them.  Gradients therefore depend only on (seed, node, iter), exactly
+//! as in the simulator.
+//!
+//! Per-iteration protocol (worker's view):
+//!
+//! 1. recv [`Msg::IterPlan`] (or [`Msg::Shutdown`] — clean exit);
+//! 2. if `weights_follow`: recv [`Msg::Model`] (the trained encoder);
+//! 3. grad step on `dataset.batch(node, iter)`;
+//! 4. LGC non-dense iterations: the leader uploads [`Msg::Support`],
+//!    everyone receives [`Msg::SupportBcast`] (the leader included —
+//!    one uniform decode path);
+//! 5. send [`Msg::Gradient`] (+ [`Msg::Latent`] when the learned coder
+//!    is engaged), then recv [`Msg::SyncInfo`] and apply the update.
+
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::baselines::pack_values_in_place;
+use crate::compress::autoencoder::{rms, AeCompressor, Pattern};
+use crate::compress::{index_coding, topk, Correction, FeedbackMemory, Scratch};
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::lr_at;
+use crate::coordinator::scheduler::{exponential_alpha, phase_and_alpha, Phase};
+use crate::data::{self, Dataset};
+use crate::model::{Group, Model};
+use crate::runtime::Engine;
+use crate::transport::{Conn, LastUp, MidUp, Msg, PROTO_VERSION};
+
+/// Connection knobs for one worker process (`lgc worker`).
+#[derive(Debug, Clone)]
+pub struct WorkerOpts {
+    /// Coordinator address: `host:port` or `unix:/path/to.sock`.
+    pub connect: String,
+    /// Session id; must match the coordinator's (stale joins are
+    /// rejected with a descriptive error).
+    pub session: u64,
+    /// Connect attempts before giving up (exponential backoff covers a
+    /// coordinator that is slow to bind).
+    pub retries: usize,
+    /// Initial backoff between connect attempts; doubles per retry.
+    pub backoff_ms: u64,
+    /// Read timeout while awaiting coordinator messages.  Generous by
+    /// default: the coordinator runs AE training and eval between
+    /// iterations.
+    pub net_timeout: Duration,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts {
+            connect: String::new(),
+            session: 0,
+            retries: 40,
+            backoff_ms: 50,
+            net_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Connect, join, and serve the full training run.  Returns when the
+/// coordinator sends [`Msg::Shutdown`] (clean end of training, or a
+/// coordinator-side error relayed as the shutdown reason).
+pub fn run(engine: &Engine, opts: &WorkerOpts) -> Result<()> {
+    let mut conn = Conn::connect_with_retry(&opts.connect, opts.retries, opts.backoff_ms)?;
+    conn.set_read_timeout(Some(opts.net_timeout))?;
+    conn.send(&Msg::Join { proto: PROTO_VERSION, session: opts.session })?;
+    let (node, nodes, platform, cfg) = match conn.expect("JoinAck")? {
+        Msg::JoinAck { node, nodes, platform, cfg } => {
+            (node as usize, nodes as usize, platform, cfg)
+        }
+        other => bail!("expected JoinAck, got {}", other.name()),
+    };
+    ensure!(
+        platform == engine.platform(),
+        "backend mismatch: coordinator runs on {:?}, this worker on {:?} — results would \
+         not be bit-identical; relaunch the worker with a matching --backend/$LGC_BACKEND",
+        platform,
+        engine.platform()
+    );
+    eprintln!(
+        "lgc worker: joined as node {node}/{nodes} (method {}, model {})",
+        cfg.method.name(),
+        cfg.model
+    );
+    Node::new(engine, node, nodes, cfg)?.serve(&mut conn)
+}
+
+/// Mid-group method state owned by this node — the single-node slice of
+/// what the simulator's strategy objects hold for all K nodes.
+enum MidState {
+    /// Baseline: dense uplink, no per-node state.
+    Dense,
+    /// SparseGd (`ramp: None`) / DGC (`ramp: Some`): EF + top-k.
+    Sparse { fb: FeedbackMemory, ramp: Option<usize> },
+    /// Hard threshold: EF + self-calibrating AIMD threshold.
+    Threshold { fb: FeedbackMemory, threshold: f32 },
+    /// LGC (both patterns): EF + the learned encoder copy.
+    Lgc { fb: FeedbackMemory, ae: AeCompressor, ps: bool },
+}
+
+/// One distributed node: model replica, data stream, EF memories,
+/// method state, scratch arena.
+struct Node<'e> {
+    engine: &'e Engine,
+    node: usize,
+    nodes: usize,
+    cfg: TrainConfig,
+    model: Model,
+    dataset: Box<dyn Dataset>,
+    last_fb: FeedbackMemory,
+    mid: MidState,
+    sc: Scratch,
+    /// The leader's broadcast support (signed-descending order).
+    support: Vec<u32>,
+    /// Value-vector gathered at the support (mu-length).
+    vv: Vec<f32>,
+    n_mid: usize,
+    n_last: usize,
+    mu: usize,
+}
+
+impl<'e> Node<'e> {
+    /// Rebuild the node-local slice of the simulator's state from the
+    /// joined config — same constructors, same seeds, same momentum
+    /// routing as [`crate::coordinator::Trainer::new`].
+    fn new(engine: &'e Engine, node: usize, nodes: usize, cfg: TrainConfig) -> Result<Self> {
+        let meta = engine.manifest.resolve_model(&cfg.model).clone();
+        ensure!(
+            meta.name == cfg.model,
+            "model {:?} resolves to {:?} on this worker's backend — coordinator and \
+             workers must resolve identically",
+            cfg.model,
+            meta.name
+        );
+        let mut model = Model::new(&meta, cfg.seed);
+        model.momentum = match cfg.method {
+            Method::Baseline | Method::Qsgd => cfg.momentum,
+            _ => 0.0,
+        };
+        model.weight_decay = cfg.weight_decay;
+        let dataset = data::for_model(&meta, cfg.seed ^ 0xDA7A);
+        let n_mid = meta.group_len(&meta.mid_param_idx);
+        let n_last = meta.group_len(&meta.last_param_idx);
+        let last_correction = match cfg.method {
+            Method::SparseGd | Method::Threshold => Correction::Plain,
+            _ => Correction::Momentum,
+        };
+        let last_fb = FeedbackMemory::new(n_last, last_correction, cfg.momentum);
+        let ramp = cfg.warmup_iters + cfg.ae_train_iters;
+        let mid = match cfg.method {
+            Method::Baseline => MidState::Dense,
+            Method::SparseGd => MidState::Sparse {
+                fb: FeedbackMemory::new(n_mid, Correction::Plain, 0.0),
+                ramp: None,
+            },
+            Method::Dgc => MidState::Sparse {
+                fb: FeedbackMemory::new(n_mid, Correction::Momentum, cfg.momentum),
+                ramp: Some(ramp),
+            },
+            Method::Threshold => MidState::Threshold {
+                fb: FeedbackMemory::new(n_mid, Correction::Plain, 0.0),
+                threshold: 0.0,
+            },
+            Method::LgcPs | Method::LgcRar => {
+                let ps = matches!(cfg.method, Method::LgcPs);
+                let pattern = if ps {
+                    Pattern::ParamServer
+                } else {
+                    Pattern::RingAllreduce
+                };
+                // Same construction as the coordinator's compressor; the
+                // encoder params are overwritten by the one-shot weight
+                // transfer at engagement, so only shapes must agree.
+                let ae = AeCompressor::new(engine, meta.mu, nodes, pattern, cfg.seed ^ 0xAE)?;
+                MidState::Lgc {
+                    fb: FeedbackMemory::new(n_mid, Correction::Momentum, cfg.momentum),
+                    ae,
+                    ps,
+                }
+            }
+            Method::ScaleCom | Method::Qsgd => bail!(
+                "method {} is not supported over the tcp transport",
+                cfg.method.name()
+            ),
+        };
+        let mu = meta.mu;
+        Ok(Node {
+            engine,
+            node,
+            nodes,
+            cfg,
+            model,
+            dataset,
+            last_fb,
+            mid,
+            sc: Scratch::new(),
+            support: Vec::new(),
+            vv: Vec::new(),
+            n_mid,
+            n_last,
+            mu,
+        })
+    }
+
+    /// The iteration loop: one [`Msg::IterPlan`] per step until the
+    /// coordinator's [`Msg::Shutdown`].
+    fn serve(&mut self, conn: &mut Conn) -> Result<()> {
+        loop {
+            match conn.expect("IterPlan")? {
+                Msg::Shutdown { reason } => {
+                    eprintln!("lgc worker: node {} shutting down ({reason})", self.node);
+                    return Ok(());
+                }
+                Msg::IterPlan { iter, engaged, weights_follow } => {
+                    let it = iter as usize;
+                    self.step(conn, it, engaged, weights_follow)
+                        .with_context(|| format!("worker node {} at iter {it}", self.node))?;
+                }
+                other => bail!("expected IterPlan or Shutdown, got {}", other.name()),
+            }
+        }
+    }
+
+    /// One training iteration over the wire.
+    fn step(
+        &mut self,
+        conn: &mut Conn,
+        it: usize,
+        engaged: bool,
+        weights_follow: bool,
+    ) -> Result<()> {
+        if weights_follow {
+            match conn.expect("AE weights")? {
+                Msg::Model { payload, .. } => match &mut self.mid {
+                    MidState::Lgc { ae, .. } => ae.import_encoder(&payload)?,
+                    _ => bail!("received AE weights for a non-LGC method"),
+                },
+                other => bail!("expected Model (AE weights), got {}", other.name()),
+            }
+        }
+        let (phase, _alpha) = phase_and_alpha(&self.cfg, it);
+
+        // Local compute: identical inputs (deterministic replica + data
+        // stream) => identical gradients to the simulator's node closure.
+        let batch = self.dataset.batch(self.node, it);
+        let (loss, acc, grads) = self.model.grad_step(self.engine, &batch)?;
+        let first = self.model.flatten_group(&grads, Group::First);
+        let mid_g = self.model.flatten_group(&grads, Group::Mid);
+        let last_g = self.model.flatten_group(&grads, Group::Last);
+
+        let (mid_up, ctrl_mid, latent) = self.mid_upload(conn, it, phase, engaged, &mid_g)?;
+        let last_up = self.last_upload(phase, last_g)?;
+        // Loss is sent raw (NaN included): the coordinator raises the
+        // simulator's canonical divergence error so both transports fail
+        // with the same message.
+        conn.send(&Msg::Gradient {
+            iter: it as u32,
+            loss,
+            acc,
+            first,
+            mid: mid_up,
+            last: last_up,
+            ctrl_mid,
+        })?;
+        if let Some(l) = latent {
+            conn.send(&l)?;
+        }
+
+        match conn.expect("SyncInfo")? {
+            Msg::SyncInfo { iter, first, mid, last } => {
+                ensure!(
+                    iter as usize == it,
+                    "protocol desync: SyncInfo for iter {iter}, expected {it}"
+                );
+                self.model.apply_update(
+                    &[(Group::First, first), (Group::Mid, mid), (Group::Last, last)],
+                    lr_at(&self.cfg, it),
+                );
+            }
+            Msg::Shutdown { reason } => {
+                bail!("coordinator shut the run down mid-iteration: {reason}")
+            }
+            other => bail!("expected SyncInfo, got {}", other.name()),
+        }
+        Ok(())
+    }
+
+    /// Build the mid-group uplink: the node-local half of the selected
+    /// strategy's exchange.  Returns the payload, the raw mid gradient
+    /// (engaged LGC iterations only — the coordinator's trust-region
+    /// clip needs it), and the AE latent message when this node encodes.
+    fn mid_upload(
+        &mut self,
+        conn: &mut Conn,
+        it: usize,
+        phase: Phase,
+        engaged: bool,
+        mid_g: &[f32],
+    ) -> Result<(MidUp, Option<Vec<f32>>, Option<Msg>)> {
+        let fp16 = self.cfg.fp16_values;
+        match &mut self.mid {
+            MidState::Dense => Ok((MidUp::Dense(mid_g.to_vec()), None, None)),
+            MidState::Sparse { fb, ramp } => {
+                let a = match ramp {
+                    Some(r) => exponential_alpha(it, *r, self.cfg.alpha),
+                    None => self.cfg.alpha,
+                };
+                let k_sel = topk::k_of(self.n_mid, a);
+                fb.accumulate(mid_g);
+                fb.select_and_clear_into(k_sel, &mut self.sc);
+                // Values ship post-pack: under fp16 the wire round-trip is
+                // what every receiver aggregates (baselines::pack_values).
+                pack_values_in_place(&mut self.sc.vals, fp16);
+                let coded =
+                    index_coding::encode_into(&self.sc.idx, self.n_mid, &mut self.sc.enc)?.to_vec();
+                Ok((MidUp::Sparse { coded_idx: coded, vals: self.sc.vals.clone() }, None, None))
+            }
+            MidState::Threshold { fb, threshold } => {
+                let n = self.n_mid;
+                let k_target = topk::k_of(n, self.cfg.alpha);
+                fb.accumulate(mid_g);
+                if *threshold == 0.0 {
+                    *threshold = topk::threshold_for_k_in(fb.memory(), k_target, &mut self.sc.mags);
+                }
+                let thr = *threshold;
+                let mem = fb.memory();
+                self.sc.idx.clear();
+                self.sc.idx.extend(
+                    (0..n as u32)
+                        .filter(|&i| mem[i as usize].abs() >= thr && mem[i as usize] != 0.0),
+                );
+                fb.take_at_into(&self.sc.idx, &mut self.sc.vals);
+                if self.sc.idx.len() > 2 * k_target {
+                    *threshold *= 1.25;
+                } else if self.sc.idx.len() < k_target / 2 {
+                    *threshold *= 0.8;
+                }
+                pack_values_in_place(&mut self.sc.vals, fp16);
+                let coded = index_coding::encode_into(&self.sc.idx, n, &mut self.sc.enc)?.to_vec();
+                Ok((MidUp::Sparse { coded_idx: coded, vals: self.sc.vals.clone() }, None, None))
+            }
+            MidState::Lgc { fb, ae, ps } => {
+                if phase == Phase::Dense {
+                    // Dense warmup: raw gradient uplink (PS mean or dense
+                    // ring, both coordinator-side).  No EF accumulation —
+                    // the memories start at the top-k phase.
+                    return Ok((MidUp::Dense(mid_g.to_vec()), None, None));
+                }
+                let ps = *ps;
+                fb.accumulate(mid_g);
+                let leader = if ps { 0 } else { it % self.nodes };
+                if self.node == leader {
+                    topk::top_k_into(
+                        fb.memory(),
+                        self.mu,
+                        &mut self.sc.mags,
+                        &mut self.support,
+                        &mut self.sc.vals,
+                    );
+                    let mem = fb.memory();
+                    self.support.sort_by(|&a, &b| {
+                        mem[b as usize]
+                            .partial_cmp(&mem[a as usize])
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                    let coded = index_coding::encode_ordered_into(&self.support, &mut self.sc.enc)?
+                        .to_vec();
+                    conn.send(&Msg::Support { iter: it as u32, coded })?;
+                }
+                // Everyone (leader included) decodes the broadcast: one
+                // uniform path, and the wire payload is what defines the
+                // support order on every node.
+                let coded = match conn.expect("SupportBcast")? {
+                    Msg::SupportBcast { iter, coded } => {
+                        ensure!(
+                            iter as usize == it,
+                            "protocol desync: SupportBcast for iter {iter}, expected {it}"
+                        );
+                        coded
+                    }
+                    Msg::Shutdown { reason } => {
+                        bail!("coordinator shut the run down mid-iteration: {reason}")
+                    }
+                    other => bail!("expected SupportBcast, got {}", other.name()),
+                };
+                self.support = index_coding::decode_ordered(&coded)?;
+                ensure!(
+                    self.support.len() == self.mu,
+                    "support broadcast has {} indices, expected mu={}",
+                    self.support.len(),
+                    self.mu
+                );
+                fb.take_at_into(&self.support, &mut self.vv);
+                if !engaged {
+                    // Top-k phase (or compressed with the AE still
+                    // training): exact value-vector uplink.
+                    return Ok((MidUp::Vv(self.vv.clone()), None, None));
+                }
+                // Compressed phase, learned coder engaged.
+                let ctrl = Some(mid_g.to_vec());
+                if ps {
+                    // Innovation (top innovation_frac of |vv|, kept at
+                    // position) + RMS scale; the leader also encodes the
+                    // shared latent (lgc::innovation_into, Algorithm 1).
+                    let k_inn = topk::k_of(self.vv.len(), self.cfg.innovation_frac);
+                    topk::top_k_into(
+                        &self.vv,
+                        k_inn,
+                        &mut self.sc.mags,
+                        &mut self.sc.idx,
+                        &mut self.sc.vals,
+                    );
+                    let coded_idx =
+                        index_coding::encode_into(&self.sc.idx, self.vv.len(), &mut self.sc.enc)?
+                            .to_vec();
+                    let scale = rms(&self.vv);
+                    let latent = if self.node == leader {
+                        let (lat, s) = ae.encode(self.engine, &self.vv)?;
+                        Some(Msg::Latent { iter: it as u32, latent: lat, scale: s })
+                    } else {
+                        None
+                    };
+                    Ok((
+                        MidUp::Innovation { coded_idx, vals: self.sc.vals.clone(), scale },
+                        ctrl,
+                        latent,
+                    ))
+                } else {
+                    // RAR: every node encodes; the latents ring-reduce on
+                    // the coordinator (Algorithm 2, eq. 19).
+                    let (lat, s) = ae.encode(self.engine, &self.vv)?;
+                    let latent = Msg::Latent { iter: it as u32, latent: lat, scale: s };
+                    Ok((MidUp::None, ctrl, Some(latent)))
+                }
+            }
+        }
+    }
+
+    /// Last-group uplink: dense for Baseline/QSGD and everyone's dense
+    /// phase; top-k + EF otherwise (mirrors `Trainer::last_exchange` —
+    /// note: last-group values never fp16-pack, as in the simulator).
+    fn last_upload(&mut self, phase: Phase, last_g: Vec<f32>) -> Result<LastUp> {
+        let dense = matches!(self.cfg.method, Method::Baseline | Method::Qsgd)
+            || phase == Phase::Dense;
+        if dense {
+            return Ok(LastUp::Dense(last_g));
+        }
+        let k_sel = topk::k_of(self.n_last, self.cfg.alpha);
+        self.last_fb.accumulate(&last_g);
+        self.last_fb.select_and_clear_into(k_sel, &mut self.sc);
+        let coded =
+            index_coding::encode_into(&self.sc.idx, self.n_last, &mut self.sc.enc)?.to_vec();
+        Ok(LastUp::Sparse { coded_idx: coded, vals: self.sc.vals.clone() })
+    }
+}

@@ -29,6 +29,7 @@ fn cfg(model: &str, method: Method, nodes: usize, steps: usize) -> TrainConfig {
         nodes,
         steps,
         eval_every: 0,
+        transport: super::transport(),
         ..Default::default()
     }
     .scaled_phases()

@@ -11,9 +11,11 @@ pub mod ablation;
 pub mod info_plane;
 pub mod speedup;
 
+use std::sync::atomic::{AtomicU8, Ordering};
+
 use anyhow::Result;
 
-use crate::config::{Method, SparsifySchedule, TrainConfig};
+use crate::config::{Method, SparsifySchedule, TrainConfig, TransportKind};
 use crate::coordinator::{self, TrainResult};
 use crate::metrics::Csv;
 use crate::runtime::Engine;
@@ -27,6 +29,25 @@ pub fn default_steps() -> usize {
     std::env::var("LGC_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(280)
 }
 
+/// Transport every experiment driver threads into its configs
+/// (`lgc exp --transport tcp`).  Process-wide because the drivers build
+/// dozens of configs internally; unsupported method/transport combos
+/// still error loudly at train time ([`crate::coordinator::remote::gate_method`]).
+static TRANSPORT: AtomicU8 = AtomicU8::new(0);
+
+/// Select the transport used by every config the `exp` drivers build.
+pub fn set_transport(kind: TransportKind) {
+    TRANSPORT.store(matches!(kind, TransportKind::Tcp) as u8, Ordering::Relaxed);
+}
+
+pub(crate) fn transport() -> TransportKind {
+    if TRANSPORT.load(Ordering::Relaxed) == 1 {
+        TransportKind::Tcp
+    } else {
+        TransportKind::Sim
+    }
+}
+
 fn base_cfg(model: &str, method: Method, nodes: usize, steps: usize) -> TrainConfig {
     TrainConfig {
         model: model.into(),
@@ -35,6 +56,7 @@ fn base_cfg(model: &str, method: Method, nodes: usize, steps: usize) -> TrainCon
         steps,
         eval_every: (steps / 12).max(5),
         eval_batches: 4,
+        transport: transport(),
         ..Default::default()
     }
     .scaled_phases()

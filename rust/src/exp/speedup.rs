@@ -195,6 +195,7 @@ pub fn fig14_sweep(engine: &Engine, opts: &Fig14Opts) -> Result<Vec<SweepPoint>>
             // Record under the fastest link of the grid; pricing reuses
             // the same trace for every other point.
             bandwidth_mbits: opts.bandwidths_mbits.first().copied().unwrap_or(1000.0),
+            transport: super::transport(),
             ..Default::default()
         }
         .scaled_phases();
@@ -307,6 +308,7 @@ pub fn speedup_table(
             eval_every: 0,
             bandwidth_mbits: link.mbits(),
             latency_s: link.latency_s,
+            transport: super::transport(),
             ..Default::default()
         }
         .scaled_phases();

@@ -36,6 +36,9 @@
 //! * [`metrics`] — the measured byte ledger every table derives from;
 //! * [`net`] — the simulated network fabric that turns measured bytes
 //!   into modeled wall-clock time (DESIGN.md §11);
+//! * [`transport`] — the real multi-process wire transport (TCP /
+//!   Unix-domain sockets): length-prefixed frames, typed messages, the
+//!   coordinator's join handshake (DESIGN.md §12);
 //! * [`exp`] — one driver per paper table/figure, each emitting
 //!   `results/*.csv`;
 //! * [`runtime`] — backend dispatch (PJRT or native CPU), manifest,
@@ -55,4 +58,5 @@ pub mod metrics;
 pub mod model;
 pub mod net;
 pub mod runtime;
+pub mod transport;
 pub mod util;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train       run one distributed-training configuration
+//!   serve       coordinator for externally-launched workers (DESIGN.md §12)
+//!   worker      one node of a multi-process run; connects to a coordinator
 //!   exp         regenerate a paper table/figure (`lgc exp fig14` or --id)
 //!   info-plane  §III MI/entropy analysis
 //!   latency     AE encode/decode latency measurement
@@ -10,13 +12,17 @@
 //!
 //! Examples:
 //!   lgc train --model resnet_mini --method lgc_ps --nodes 4 --steps 300
+//!   lgc train --method lgc_rar --nodes 4 --steps 120 --transport tcp
 //!   lgc exp fig14 --backend native
 //!   lgc exp --id table6 --steps 280
 //!   lgc info-plane --model resnet_mini --steps 40
 
+use std::time::Duration;
+
 use anyhow::{bail, Result};
 
-use lgc::config::TrainConfig;
+use lgc::config::{TrainConfig, TransportKind};
+use lgc::coordinator::{remote, worker};
 use lgc::exp::{self, speedup::LinkModel, Fig14Opts};
 use lgc::net::{model::parse_bandwidth_mbits, Topology};
 use lgc::runtime::{BackendKind, Engine};
@@ -28,6 +34,8 @@ const FLAGS: &[&str] = &[
     "ae-train", "ae-lr", "lambda2", "schedule", "eval-every", "seed",
     "threads", "id", "bins", "pair", "bandwidth-mbps", "artifacts",
     "backend", "bandwidth", "latency-us", "straggler", "topology",
+    "transport", "listen", "connect", "session", "net-timeout-ms",
+    "join-timeout-ms", "retries", "backoff-ms", "checkpoint",
 ];
 
 /// Boolean switches (never consume the next token).
@@ -76,7 +84,13 @@ fn main() -> Result<()> {
             if !args.has("warmup") && !args.has("ae-train") {
                 cfg = cfg.scaled_phases();
             }
-            let r = lgc::coordinator::train(&engine, cfg)?;
+            let tcp = cfg.transport == TransportKind::Tcp;
+            let iters = cfg.steps.max(1) as f64;
+            let r = if tcp {
+                remote::train_with_opts(&engine, cfg, &remote_opts(&args))?
+            } else {
+                lgc::coordinator::train(&engine, cfg)?
+            };
             let first_loss = r.curve.first().map(|p| p.train_loss).unwrap_or(f32::NAN);
             let final_loss = r.final_train_loss();
             println!("train loss: {first_loss:.4} -> {final_loss:.4}");
@@ -105,6 +119,17 @@ fn main() -> Result<()> {
                 r.steady_comm_s_at(link, 50) * 1e3,
                 per_node_note
             );
+            if tcp {
+                // Measured wall-clock vs the fabric's model (CI uploads
+                // this line as the tcp-loopback artifact).
+                println!(
+                    "measured wall (tcp): grad+wire {:.3} ms/iter, exchange {:.3} ms/iter, \
+                     modeled comm {:.3} ms/iter",
+                    r.time_grad.as_secs_f64() * 1e3 / iters,
+                    r.time_exchange.as_secs_f64() * 1e3 / iters,
+                    r.steady_comm_s_at(link, 50) * 1e3
+                );
+            }
             println!("{}", r.ledger.summary());
             if args.has("assert-improves") {
                 // CI gate: the run must end with a finite, improved loss.
@@ -113,8 +138,40 @@ fn main() -> Result<()> {
                 }
             }
         }
+        "serve" => {
+            // Coordinator only: bind, wait for externally-launched
+            // `lgc worker` processes, run the session.
+            let mut cfg = TrainConfig::from_args(&args);
+            if !args.has("warmup") && !args.has("ae-train") {
+                cfg = cfg.scaled_phases();
+            }
+            cfg.transport = TransportKind::Tcp;
+            let mut opts = remote_opts(&args);
+            opts.spawn_workers = false;
+            let r = remote::train_with_opts(&engine, cfg, &opts)?;
+            println!("final eval: loss {:.4}, acc {:.4}", r.final_eval.0, r.final_eval.1);
+            println!("{}", r.ledger.summary());
+        }
+        "worker" => {
+            let connect = args.opt_str("connect").ok_or_else(|| {
+                anyhow::anyhow!("`lgc worker` needs --connect <host:port|unix:/path>")
+            })?;
+            let mut opts = worker::WorkerOpts { connect, ..Default::default() };
+            opts.session = args.u64("session", opts.session);
+            opts.retries = args.usize("retries", opts.retries);
+            opts.backoff_ms = args.u64("backoff-ms", opts.backoff_ms);
+            opts.net_timeout = Duration::from_millis(
+                args.u64("net-timeout-ms", opts.net_timeout.as_millis() as u64),
+            );
+            worker::run(&engine, &opts)?;
+        }
         "exp" => {
             // `lgc exp fig14` and `lgc exp --id fig14` are equivalent.
+            if let Some(t) = args.opt_str("transport") {
+                let kind = TransportKind::parse(&t)
+                    .ok_or_else(|| anyhow::anyhow!("bad --transport {t:?} (sim|tcp)"))?;
+                exp::set_transport(kind);
+            }
             let id = args
                 .positional(0)
                 .map(str::to_string)
@@ -179,6 +236,16 @@ fn main() -> Result<()> {
         other => bail!("unknown subcommand {other:?}; run `lgc help`"),
     }
     Ok(())
+}
+
+/// Coordinator-side transport knobs from the command line (`train
+/// --transport tcp` and `serve`).
+fn remote_opts(args: &Args) -> remote::RemoteOpts {
+    let mut o = remote::RemoteOpts::local(args.u64("session", remote::default_session()));
+    o.listen = args.str("listen", &o.listen);
+    o.join_timeout = Duration::from_millis(args.u64("join-timeout-ms", 60_000));
+    o.net_timeout = Duration::from_millis(args.u64("net-timeout-ms", 30_000));
+    o
 }
 
 fn run_exp(engine: &Engine, id: &str, steps: usize, args: &Args) -> Result<()> {
@@ -314,6 +381,11 @@ SUBCOMMANDS:
                --fp16 (transmit sparse value payloads as f16)
                --threads T (0 = one per core; results are identical for any T)
                --assert-improves (exit nonzero unless train loss decreased)]
+  serve        coordinator for externally-launched workers; same training
+               flags as train, plus --listen ADDR --session ID
+               [--join-timeout-ms N --net-timeout-ms N]
+  worker       one node of a multi-process run: --connect HOST:PORT|unix:/path
+               [--session ID --retries N --backoff-ms N --net-timeout-ms N]
   exp          <id> or --id ID, one of table4|table5|table6|fig3|fig10|fig11|
                fig12|fig13|fig14|fig14-ae|speedup|ablation|all  [--steps N]
                fig14 = modeled speedup-vs-bandwidth sweep (results/
@@ -322,6 +394,17 @@ SUBCOMMANDS:
   latency      --model M
   profile      --model M --method X [--steps N]
   list
+
+TRANSPORT (train, serve, exp; DESIGN.md §12):
+  --transport sim|tcp  sim (default) = single-process simulated exchange;
+                       tcp = one OS process per node over TCP/UDS, spawned
+                       from this binary, bit-identical results to sim
+  --listen ADDR        coordinator bind: host:port (0 = ephemeral) or
+                       unix:/path.sock (default 127.0.0.1:0)
+  --session ID         session id workers must present (default pid-derived)
+  --net-timeout-ms N   per-receive deadline; a dead peer errors out within
+                       this bound instead of hanging (default 30000)
+  --checkpoint PATH    save the final model replica to PATH (any transport)
 
 NETWORK FABRIC (train, exp fig14, exp speedup; DESIGN.md §11):
   --bandwidth B      modeled link bandwidth: 1gbps, 50mbps, or Mbit/s number

@@ -54,7 +54,7 @@ impl Kind {
 
 /// The global measured-bytes ledger of one training run (§6.4): every
 /// accessor below derives from recorded payloads, never from formulas.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct Ledger {
     /// Total uplink bytes per node (worker -> master / around the ring).
     pub per_node: BTreeMap<usize, u64>,
@@ -162,7 +162,7 @@ impl Ledger {
 /// merged into the global [`Ledger`] by [`Ledger::merge_shards`].  Keeps
 /// the insertion sequence (a `Vec`, not a map) so the merge replays the
 /// node's records in their original order.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct NodeLedger {
     node: usize,
     records: Vec<(Kind, usize)>,

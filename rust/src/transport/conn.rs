@@ -1,0 +1,252 @@
+//! Blocking framed connections over TCP or Unix-domain sockets.
+//!
+//! One code path serves both socket families: an address string starting
+//! with `unix:` selects a Unix-domain socket (the rest is the filesystem
+//! path), anything else is a TCP `host:port`.  [`Conn`] layers the
+//! sans-io [`FrameDecoder`] over a blocking stream and speaks typed
+//! [`Msg`]s; heartbeats are skipped transparently on receive, and a
+//! received [`Msg::Error`] becomes this side's error.
+//!
+//! Liveness discipline (DESIGN.md §12.4): every blocking read runs under
+//! a read timeout, so a hung peer surfaces as a descriptive "timed out"
+//! error and a killed peer as "disconnected" — never a hang.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{self, FrameDecoder};
+use super::msg::Msg;
+
+/// Prefix selecting a Unix-domain socket address.
+pub const UNIX_PREFIX: &str = "unix:";
+
+enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+/// A framed, typed, blocking connection (either socket family).
+pub struct Conn {
+    stream: Stream,
+    dec: FrameDecoder,
+    peer: String,
+}
+
+impl Conn {
+    pub fn from_tcp(s: TcpStream) -> Result<Conn> {
+        s.set_nodelay(true).context("set_nodelay")?;
+        let peer = s
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "tcp-peer".into());
+        Ok(Conn { stream: Stream::Tcp(s), dec: FrameDecoder::new(), peer })
+    }
+
+    pub fn from_unix(s: UnixStream) -> Conn {
+        Conn {
+            stream: Stream::Unix(s),
+            dec: FrameDecoder::new(),
+            peer: "unix-peer".into(),
+        }
+    }
+
+    /// Connect once to `addr` (`host:port` or `unix:PATH`).
+    pub fn connect(addr: &str) -> Result<Conn> {
+        if let Some(path) = addr.strip_prefix(UNIX_PREFIX) {
+            let s = UnixStream::connect(path)
+                .with_context(|| format!("connect to unix socket {path:?}"))?;
+            Ok(Conn::from_unix(s))
+        } else {
+            let s = TcpStream::connect(addr)
+                .with_context(|| format!("connect to tcp address {addr:?}"))?;
+            Conn::from_tcp(s)
+        }
+    }
+
+    /// Connect with exponential backoff: `retries` additional attempts
+    /// after the first, starting at `backoff_ms` and doubling (capped at
+    /// 2s).  Covers the worker-starts-before-coordinator-binds race.
+    pub fn connect_with_retry(addr: &str, retries: usize, backoff_ms: u64) -> Result<Conn> {
+        let mut delay = Duration::from_millis(backoff_ms.max(1));
+        let cap = Duration::from_secs(2);
+        let mut last_err = None;
+        for attempt in 0..=retries {
+            match Conn::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    last_err = Some(e);
+                    if attempt < retries {
+                        std::thread::sleep(delay);
+                        delay = (delay * 2).min(cap);
+                    }
+                }
+            }
+        }
+        Err(last_err.unwrap()).with_context(|| {
+            format!("giving up on {addr:?} after {} attempts", retries + 1)
+        })
+    }
+
+    /// Apply a read timeout to all subsequent [`Conn::recv`] calls.
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        match &self.stream {
+            Stream::Tcp(s) => s.set_read_timeout(t)?,
+            Stream::Unix(s) => s.set_read_timeout(t)?,
+        }
+        Ok(())
+    }
+
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    /// Send one message (blocking write of one frame).
+    pub fn send(&mut self, msg: &Msg) -> Result<()> {
+        let (kind, payload) = msg.encode();
+        let mut wire = Vec::with_capacity(frame::HEADER_LEN + 1 + payload.len());
+        frame::encode_into(kind, &payload, &mut wire)?;
+        let r = match &mut self.stream {
+            Stream::Tcp(s) => s.write_all(&wire),
+            Stream::Unix(s) => s.write_all(&wire),
+        };
+        r.with_context(|| format!("send {} to {}", msg.name(), self.peer))
+    }
+
+    /// Receive the next non-heartbeat message.
+    ///
+    /// A closed stream yields "disconnected", an expired read timeout
+    /// yields "timed out", and a received [`Msg::Error`] is surfaced as
+    /// this side's error — callers add who/what/when context.
+    pub fn recv(&mut self) -> Result<Msg> {
+        let mut buf = [0u8; 64 * 1024];
+        loop {
+            while let Some(f) = self.dec.pop()? {
+                match Msg::decode(f.kind, &f.payload)? {
+                    Msg::Heartbeat => continue,
+                    Msg::Error { msg } => bail!("peer {} reported: {msg}", self.peer),
+                    m => return Ok(m),
+                }
+            }
+            let n = match &mut self.stream {
+                Stream::Tcp(s) => s.read(&mut buf),
+                Stream::Unix(s) => s.read(&mut buf),
+            };
+            match n {
+                Ok(0) => bail!("peer {} disconnected", self.peer),
+                Ok(n) => self.dec.feed(&buf[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    bail!("timed out waiting for data from peer {}", self.peer)
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("read from peer {}", self.peer))
+                }
+            }
+        }
+    }
+
+    /// Receive and require a specific message shape, mapping anything
+    /// else to a protocol error naming both sides' expectations.
+    pub fn expect(&mut self, what: &str) -> Result<Msg> {
+        self.recv().with_context(|| format!("while awaiting {what}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcp_loopback_roundtrip() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut c = Conn::from_tcp(s).unwrap();
+            let m = c.recv().unwrap();
+            c.send(&m).unwrap(); // echo
+        });
+        let mut c = Conn::connect(&addr).unwrap();
+        let m = Msg::Support { iter: 3, coded: vec![1, 2, 3] };
+        c.send(&m).unwrap();
+        assert_eq!(c.recv().unwrap(), m);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn unix_loopback_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("lgc-conn-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("echo.sock");
+        let _ = std::fs::remove_file(&path);
+        let listener = std::os::unix::net::UnixListener::bind(&path).unwrap();
+        let addr = format!("{UNIX_PREFIX}{}", path.display());
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut c = Conn::from_unix(s);
+            let m = c.recv().unwrap();
+            c.send(&m).unwrap();
+        });
+        let mut c = Conn::connect(&addr).unwrap();
+        c.send(&Msg::Heartbeat).unwrap(); // must be skipped by receiver...
+        let m = Msg::Shutdown { reason: "bye".into() };
+        c.send(&m).unwrap();
+        assert_eq!(c.recv().unwrap(), m);
+        t.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recv_reports_disconnect() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            drop(s); // immediate hangup
+        });
+        let mut c = Conn::connect(&addr).unwrap();
+        t.join().unwrap();
+        let err = c.recv().unwrap_err().to_string();
+        assert!(err.contains("disconnected"), "got: {err}");
+    }
+
+    #[test]
+    fn recv_reports_timeout() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut c = Conn::connect(&addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let err = c.recv().unwrap_err().to_string();
+        assert!(err.contains("timed out"), "got: {err}");
+        drop(listener);
+    }
+
+    #[test]
+    fn retry_backoff_waits_for_listener() {
+        // Pick a port, close the listener, reopen it after a delay; the
+        // retrying connect must bridge the gap.
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let addr2 = addr.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            let listener = std::net::TcpListener::bind(&addr2).unwrap();
+            let (s, _) = listener.accept().unwrap();
+            let mut c = Conn::from_tcp(s).unwrap();
+            c.recv().unwrap()
+        });
+        let mut c = Conn::connect_with_retry(&addr, 20, 20).unwrap();
+        c.send(&Msg::Heartbeat).unwrap();
+        c.send(&Msg::Shutdown { reason: "ok".into() }).unwrap();
+        let got = t.join().unwrap();
+        assert_eq!(got, Msg::Shutdown { reason: "ok".into() });
+    }
+}

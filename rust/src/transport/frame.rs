@@ -1,0 +1,185 @@
+//! Length-prefixed frame codec (DESIGN.md §12.1).
+//!
+//! Wire layout of one frame:
+//!
+//! ```text
+//! [len: u32 LE][type: u8][payload: len-1 bytes]
+//! ```
+//!
+//! `len` counts the type byte plus the payload, so an empty message is
+//! `len == 1`.  Frames above [`MAX_FRAME`] are rejected on both encode
+//! and decode — a corrupted length prefix must produce a clean error,
+//! never an attempt to allocate gigabytes or over-read the stream.
+//!
+//! [`FrameDecoder`] is sans-io: bytes go in via [`FrameDecoder::feed`]
+//! in arbitrary chunks (as a socket delivers them) and complete frames
+//! come out via [`FrameDecoder::pop`].  The blocking socket path in
+//! `transport::conn` layers on top of it; the property tests in
+//! `tests/transport_proptests.rs` drive it with adversarial chunkings.
+
+use anyhow::{bail, Result};
+
+/// Hard cap on one frame's `len` field (type byte + payload).  Large
+/// enough for a dense gradient of the biggest manifest model with room
+/// to spare; small enough that a corrupted prefix cannot OOM us.
+pub const MAX_FRAME: u32 = 64 << 20;
+
+/// Size of the length prefix on the wire.
+pub const HEADER_LEN: usize = 4;
+
+/// One decoded frame: the raw type byte and its payload bytes.
+/// Interpretation (known types, payload grammar) happens one layer up in
+/// `transport::msg`, so unknown type bytes are *data* here, not errors —
+/// the decoder must stay in sync with the stream regardless.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: u8,
+    pub payload: Vec<u8>,
+}
+
+/// Encode one frame into `out` (appended).
+pub fn encode_into(kind: u8, payload: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    let len = payload.len() as u64 + 1;
+    if len > MAX_FRAME as u64 {
+        bail!("frame too large: {} bytes (max {})", payload.len(), MAX_FRAME);
+    }
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(payload);
+    Ok(())
+}
+
+/// Incremental frame decoder over an arbitrary chunking of the stream.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Read cursor into `buf`; consumed bytes are compacted lazily.
+    pos: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Append raw bytes from the stream.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // Compact before growing so a long-lived connection does not
+        // accumulate every byte it ever saw.
+        if self.pos > 0 && (self.pos >= self.buf.len() || self.pos > 4096) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Pop the next complete frame, if the buffer holds one.
+    ///
+    /// `Ok(None)` means "need more bytes"; `Err` means the stream is
+    /// corrupt (oversized length prefix) and the connection should be
+    /// dropped — there is no way to resynchronize a length-prefixed
+    /// stream after a bad prefix.
+    pub fn pop(&mut self) -> Result<Option<Frame>> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]);
+        if len == 0 {
+            bail!("corrupt frame: zero-length frame (missing type byte)");
+        }
+        if len > MAX_FRAME {
+            bail!("corrupt frame: length prefix {len} exceeds max {MAX_FRAME}");
+        }
+        let total = HEADER_LEN + len as usize;
+        if avail.len() < total {
+            return Ok(None);
+        }
+        let kind = avail[HEADER_LEN];
+        let payload = avail[HEADER_LEN + 1..total].to_vec();
+        self.pos += total;
+        Ok(Some(Frame { kind, payload }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_single() {
+        let mut wire = Vec::new();
+        encode_into(7, b"hello", &mut wire).unwrap();
+        let mut d = FrameDecoder::new();
+        d.feed(&wire);
+        let f = d.pop().unwrap().unwrap();
+        assert_eq!(f.kind, 7);
+        assert_eq!(f.payload, b"hello");
+        assert!(d.pop().unwrap().is_none());
+    }
+
+    #[test]
+    fn partial_feed_needs_more() {
+        let mut wire = Vec::new();
+        encode_into(1, &[9; 10], &mut wire).unwrap();
+        let mut d = FrameDecoder::new();
+        for b in &wire[..wire.len() - 1] {
+            d.feed(&[*b]);
+            assert!(d.pop().unwrap().is_none());
+        }
+        d.feed(&wire[wire.len() - 1..]);
+        assert_eq!(d.pop().unwrap().unwrap().payload, vec![9; 10]);
+    }
+
+    #[test]
+    fn oversized_prefix_is_clean_error() {
+        let mut d = FrameDecoder::new();
+        d.feed(&(MAX_FRAME + 1).to_le_bytes());
+        d.feed(&[0]);
+        assert!(d.pop().is_err());
+    }
+
+    #[test]
+    fn zero_length_is_clean_error() {
+        let mut d = FrameDecoder::new();
+        d.feed(&0u32.to_le_bytes());
+        assert!(d.pop().is_err());
+    }
+
+    #[test]
+    fn empty_payload_roundtrip() {
+        let mut wire = Vec::new();
+        encode_into(42, &[], &mut wire).unwrap();
+        let mut d = FrameDecoder::new();
+        d.feed(&wire);
+        let f = d.pop().unwrap().unwrap();
+        assert_eq!(f.kind, 42);
+        assert!(f.payload.is_empty());
+    }
+
+    #[test]
+    fn interleaved_frames_stream() {
+        let mut wire = Vec::new();
+        for i in 0..20u8 {
+            encode_into(i, &vec![i; i as usize], &mut wire).unwrap();
+        }
+        let mut d = FrameDecoder::new();
+        let mut got = Vec::new();
+        for chunk in wire.chunks(3) {
+            d.feed(chunk);
+            while let Some(f) = d.pop().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 20);
+        for (i, f) in got.iter().enumerate() {
+            assert_eq!(f.kind, i as u8);
+            assert_eq!(f.payload, vec![i as u8; i]);
+        }
+    }
+}

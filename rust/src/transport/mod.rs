@@ -1,0 +1,29 @@
+//! Real multi-process wire transport (DESIGN.md §12).
+//!
+//! Everything below the `coordinator::remote` / `coordinator::worker`
+//! pair lives here, in three layers:
+//!
+//! * [`frame`] — the length-prefixed frame codec
+//!   (`[len: u32 LE][type: u8][payload]`) with a sans-io incremental
+//!   decoder, hardened against truncation and corrupt prefixes.
+//! * [`msg`] — typed messages ([`Msg`]) and their hand-rolled binary
+//!   grammar, including the `TrainConfig` blob carried by `JoinAck`.
+//!   Floats travel as raw IEEE bits, so the wire never perturbs values.
+//! * [`conn`] / [`server`] — blocking framed connections over TCP or
+//!   Unix-domain sockets (`unix:PATH` addresses), connect retry with
+//!   exponential backoff, read-timeout liveness, and the coordinator's
+//!   join handshake (node-id assignment, stale-session / version /
+//!   session-full rejection).
+//!
+//! The transport carries the *same* per-node pipeline the simulator
+//! runs; `tests/tcp_e2e.rs` asserts the results are bit-identical.
+
+pub mod conn;
+pub mod frame;
+pub mod msg;
+pub mod server;
+
+pub use conn::{Conn, UNIX_PREFIX};
+pub use frame::{Frame, FrameDecoder, MAX_FRAME};
+pub use msg::{LastUp, MidUp, Msg, PROTO_VERSION};
+pub use server::{accept_workers, Listener, RejectorGuard};

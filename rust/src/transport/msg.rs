@@ -1,0 +1,704 @@
+//! Typed wire messages and their hand-rolled binary codec (DESIGN.md
+//! §12.2 — no serde in the offline crate set).
+//!
+//! Every [`Msg`] variant maps to one frame type byte; payload grammar is
+//! little-endian throughout.  `f32` values travel as raw IEEE bits
+//! (`to_bits`/`from_bits`), so NaN payloads and negative zeros survive
+//! the wire untouched — a prerequisite for the sim-vs-wire bit-identity
+//! guarantee.
+//!
+//! Decoding is hardened in the `index_coding::decode` style: every read
+//! is bounds-checked, element counts are validated against the bytes
+//! actually present before allocating, trailing bytes are rejected, and
+//! unknown type bytes or enum tags produce descriptive errors — never a
+//! panic and never an over-read (tests/transport_proptests.rs).
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Method, SparsifySchedule, TrainConfig, TransportKind};
+
+/// Wire protocol version; bumped on any grammar change.  A mismatch is
+/// rejected at join time with both numbers in the error.
+pub const PROTO_VERSION: u16 = 1;
+
+/// Frame type bytes.  Values are wire contract — append only.
+pub mod kind {
+    pub const JOIN: u8 = 1;
+    pub const JOIN_ACK: u8 = 2;
+    pub const ITER_PLAN: u8 = 3;
+    pub const SUPPORT: u8 = 4;
+    pub const SUPPORT_BCAST: u8 = 5;
+    pub const GRADIENT: u8 = 6;
+    pub const LATENT: u8 = 7;
+    pub const SYNC_INFO: u8 = 8;
+    pub const MODEL: u8 = 9;
+    pub const HEARTBEAT: u8 = 10;
+    pub const SHUTDOWN: u8 = 11;
+    pub const ERROR: u8 = 12;
+}
+
+/// The mid-group upload a worker sends for one iteration; which variant
+/// depends on method and phase (see `coordinator::worker`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum MidUp {
+    /// Dense flat gradient (Baseline, or any method's warmup phase).
+    Dense(Vec<f32>),
+    /// Error-fed top-k: index-coded positions + packed values
+    /// (SparseGd / Dgc / Threshold).
+    Sparse { coded_idx: Vec<u8>, vals: Vec<f32> },
+    /// Values gathered at a broadcast support (LGC top-k phase).
+    Vv(Vec<f32>),
+    /// LGC-PS compressed phase: innovation (index-coded top-k of the
+    /// support values) plus its RMS scale.
+    Innovation { coded_idx: Vec<u8>, vals: Vec<f32>, scale: f32 },
+    /// Nothing rides the Gradient message (LGC-RAR compressed phase:
+    /// the latent travels separately).
+    None,
+}
+
+impl MidUp {
+    /// Short human tag for protocol errors ("node 2 sent X, expected Y").
+    pub fn name(&self) -> &'static str {
+        match self {
+            MidUp::Dense(_) => "a dense mid upload",
+            MidUp::Sparse { .. } => "a sparse mid upload",
+            MidUp::Vv(_) => "a value-vector upload",
+            MidUp::Innovation { .. } => "an innovation upload",
+            MidUp::None => "an empty mid upload",
+        }
+    }
+}
+
+/// The last-group upload for one iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LastUp {
+    Dense(Vec<f32>),
+    Sparse { coded_idx: Vec<u8>, vals: Vec<f32> },
+}
+
+/// One typed message.  See DESIGN.md §12.2 for the full grammar and the
+/// per-iteration exchange sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker -> coordinator: first message on a fresh connection.
+    Join { proto: u16, session: u64 },
+    /// Coordinator -> worker: node id assignment + run parameters.
+    JoinAck { node: u32, nodes: u32, platform: String, cfg: TrainConfig },
+    /// Coordinator -> all workers: start iteration `iter`.
+    IterPlan { iter: u32, engaged: bool, weights_follow: bool },
+    /// Leader -> coordinator: index-coded support for this iteration.
+    Support { iter: u32, coded: Vec<u8> },
+    /// Coordinator -> all workers: the leader's support, relayed.
+    SupportBcast { iter: u32, coded: Vec<u8> },
+    /// Worker -> coordinator: per-node training result of one step.
+    Gradient {
+        iter: u32,
+        loss: f32,
+        acc: f32,
+        first: Vec<f32>,
+        mid: MidUp,
+        last: LastUp,
+        /// Raw dense mid gradient, attached un-ledgered on LGC
+        /// compressed-engaged iterations (the coordinator's clip control
+        /// needs it; the sim computes it in-process for free).
+        ctrl_mid: Option<Vec<f32>>,
+    },
+    /// Worker -> coordinator: AE latent (RAR: every node; PS: node 0).
+    Latent { iter: u32, latent: Vec<f32>, scale: f32 },
+    /// Coordinator -> all workers: aggregated group means to apply.
+    SyncInfo { iter: u32, first: Vec<f32>, mid: Vec<f32>, last: Vec<f32> },
+    /// Coordinator -> worker(s): AE encoder weights (raw f32 bits).
+    Model { iter: u32, payload: Vec<u8> },
+    /// Either direction: liveness no-op, skipped transparently on recv.
+    Heartbeat,
+    /// Coordinator -> workers: orderly stop with a reason.
+    Shutdown { reason: String },
+    /// Either direction: fatal protocol error description.
+    Error { msg: String },
+}
+
+impl Msg {
+    /// Short human tag for errors and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Join { .. } => "Join",
+            Msg::JoinAck { .. } => "JoinAck",
+            Msg::IterPlan { .. } => "IterPlan",
+            Msg::Support { .. } => "Support",
+            Msg::SupportBcast { .. } => "SupportBcast",
+            Msg::Gradient { .. } => "Gradient",
+            Msg::Latent { .. } => "Latent",
+            Msg::SyncInfo { .. } => "SyncInfo",
+            Msg::Model { .. } => "Model",
+            Msg::Heartbeat => "Heartbeat",
+            Msg::Shutdown { .. } => "Shutdown",
+            Msg::Error { .. } => "Error",
+        }
+    }
+
+    /// Encode to (frame type byte, payload bytes).
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut w = Vec::new();
+        let k = match self {
+            Msg::Join { proto, session } => {
+                put_u16(&mut w, *proto);
+                put_u64(&mut w, *session);
+                kind::JOIN
+            }
+            Msg::JoinAck { node, nodes, platform, cfg } => {
+                put_u32(&mut w, *node);
+                put_u32(&mut w, *nodes);
+                put_str(&mut w, platform);
+                encode_cfg(&mut w, cfg);
+                kind::JOIN_ACK
+            }
+            Msg::IterPlan { iter, engaged, weights_follow } => {
+                put_u32(&mut w, *iter);
+                w.push(*engaged as u8);
+                w.push(*weights_follow as u8);
+                kind::ITER_PLAN
+            }
+            Msg::Support { iter, coded } => {
+                put_u32(&mut w, *iter);
+                put_bytes(&mut w, coded);
+                kind::SUPPORT
+            }
+            Msg::SupportBcast { iter, coded } => {
+                put_u32(&mut w, *iter);
+                put_bytes(&mut w, coded);
+                kind::SUPPORT_BCAST
+            }
+            Msg::Gradient { iter, loss, acc, first, mid, last, ctrl_mid } => {
+                put_u32(&mut w, *iter);
+                put_f32(&mut w, *loss);
+                put_f32(&mut w, *acc);
+                put_f32s(&mut w, first);
+                match mid {
+                    MidUp::Dense(v) => {
+                        w.push(0);
+                        put_f32s(&mut w, v);
+                    }
+                    MidUp::Sparse { coded_idx, vals } => {
+                        w.push(1);
+                        put_bytes(&mut w, coded_idx);
+                        put_f32s(&mut w, vals);
+                    }
+                    MidUp::Vv(v) => {
+                        w.push(2);
+                        put_f32s(&mut w, v);
+                    }
+                    MidUp::Innovation { coded_idx, vals, scale } => {
+                        w.push(3);
+                        put_bytes(&mut w, coded_idx);
+                        put_f32s(&mut w, vals);
+                        put_f32(&mut w, *scale);
+                    }
+                    MidUp::None => w.push(4),
+                }
+                match last {
+                    LastUp::Dense(v) => {
+                        w.push(0);
+                        put_f32s(&mut w, v);
+                    }
+                    LastUp::Sparse { coded_idx, vals } => {
+                        w.push(1);
+                        put_bytes(&mut w, coded_idx);
+                        put_f32s(&mut w, vals);
+                    }
+                }
+                match ctrl_mid {
+                    Some(v) => {
+                        w.push(1);
+                        put_f32s(&mut w, v);
+                    }
+                    None => w.push(0),
+                }
+                kind::GRADIENT
+            }
+            Msg::Latent { iter, latent, scale } => {
+                put_u32(&mut w, *iter);
+                put_f32s(&mut w, latent);
+                put_f32(&mut w, *scale);
+                kind::LATENT
+            }
+            Msg::SyncInfo { iter, first, mid, last } => {
+                put_u32(&mut w, *iter);
+                put_f32s(&mut w, first);
+                put_f32s(&mut w, mid);
+                put_f32s(&mut w, last);
+                kind::SYNC_INFO
+            }
+            Msg::Model { iter, payload } => {
+                put_u32(&mut w, *iter);
+                put_bytes(&mut w, payload);
+                kind::MODEL
+            }
+            Msg::Heartbeat => kind::HEARTBEAT,
+            Msg::Shutdown { reason } => {
+                put_str(&mut w, reason);
+                kind::SHUTDOWN
+            }
+            Msg::Error { msg } => {
+                put_str(&mut w, msg);
+                kind::ERROR
+            }
+        };
+        (k, w)
+    }
+
+    /// Decode a frame (type byte + payload).  Every byte must be
+    /// consumed; unknown type bytes and enum tags are errors.
+    pub fn decode(kind_byte: u8, payload: &[u8]) -> Result<Msg> {
+        let mut r = Reader::new(payload);
+        let msg = match kind_byte {
+            kind::JOIN => Msg::Join { proto: r.u16()?, session: r.u64()? },
+            kind::JOIN_ACK => Msg::JoinAck {
+                node: r.u32()?,
+                nodes: r.u32()?,
+                platform: r.string()?,
+                cfg: decode_cfg(&mut r)?,
+            },
+            kind::ITER_PLAN => Msg::IterPlan {
+                iter: r.u32()?,
+                engaged: r.bool()?,
+                weights_follow: r.bool()?,
+            },
+            kind::SUPPORT => Msg::Support { iter: r.u32()?, coded: r.bytes()? },
+            kind::SUPPORT_BCAST => {
+                Msg::SupportBcast { iter: r.u32()?, coded: r.bytes()? }
+            }
+            kind::GRADIENT => {
+                let iter = r.u32()?;
+                let loss = r.f32()?;
+                let acc = r.f32()?;
+                let first = r.f32s()?;
+                let mid = match r.u8()? {
+                    0 => MidUp::Dense(r.f32s()?),
+                    1 => MidUp::Sparse { coded_idx: r.bytes()?, vals: r.f32s()? },
+                    2 => MidUp::Vv(r.f32s()?),
+                    3 => MidUp::Innovation {
+                        coded_idx: r.bytes()?,
+                        vals: r.f32s()?,
+                        scale: r.f32()?,
+                    },
+                    4 => MidUp::None,
+                    t => bail!("Gradient: unknown mid-upload tag {t}"),
+                };
+                let last = match r.u8()? {
+                    0 => LastUp::Dense(r.f32s()?),
+                    1 => LastUp::Sparse { coded_idx: r.bytes()?, vals: r.f32s()? },
+                    t => bail!("Gradient: unknown last-upload tag {t}"),
+                };
+                let ctrl_mid = match r.u8()? {
+                    0 => None,
+                    1 => Some(r.f32s()?),
+                    t => bail!("Gradient: unknown ctrl-mid tag {t}"),
+                };
+                Msg::Gradient { iter, loss, acc, first, mid, last, ctrl_mid }
+            }
+            kind::LATENT => Msg::Latent {
+                iter: r.u32()?,
+                latent: r.f32s()?,
+                scale: r.f32()?,
+            },
+            kind::SYNC_INFO => Msg::SyncInfo {
+                iter: r.u32()?,
+                first: r.f32s()?,
+                mid: r.f32s()?,
+                last: r.f32s()?,
+            },
+            kind::MODEL => Msg::Model { iter: r.u32()?, payload: r.bytes()? },
+            kind::HEARTBEAT => Msg::Heartbeat,
+            kind::SHUTDOWN => Msg::Shutdown { reason: r.string()? },
+            kind::ERROR => Msg::Error { msg: r.string()? },
+            t => bail!("unknown message type byte {t}"),
+        };
+        r.finish().with_context(|| format!("{} payload", msg.name()))?;
+        Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------- writer
+
+fn put_u16(w: &mut Vec<u8>, v: u16) {
+    w.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(w: &mut Vec<u8>, v: u32) {
+    w.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(w: &mut Vec<u8>, v: u64) {
+    w.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(w: &mut Vec<u8>, v: f32) {
+    w.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+fn put_f64(w: &mut Vec<u8>, v: f64) {
+    w.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+fn put_bytes(w: &mut Vec<u8>, b: &[u8]) {
+    put_u32(w, b.len() as u32);
+    w.extend_from_slice(b);
+}
+fn put_str(w: &mut Vec<u8>, s: &str) {
+    put_bytes(w, s.as_bytes());
+}
+fn put_f32s(w: &mut Vec<u8>, v: &[f32]) {
+    put_u32(w, v.len() as u32);
+    for &x in v {
+        put_f32(w, x);
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+/// Bounds-checked cursor over a payload slice.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .with_context(|| {
+                format!(
+                    "truncated payload: need {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.buf.len() - self.pos
+                )
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => bail!("bad bool byte {t}"),
+        }
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Length-prefixed byte string; the count is validated against the
+    /// bytes actually remaining before any allocation.
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).context("invalid utf-8 string")
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).context("f32 vector length overflow")?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    /// Reject trailing bytes — a well-formed frame is consumed exactly.
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes after message", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+// --------------------------------------------------- TrainConfig blob
+
+/// Version byte for the embedded config blob inside JoinAck.
+const CFG_VERSION: u8 = 1;
+
+fn method_tag(m: Method) -> u8 {
+    match m {
+        Method::Baseline => 0,
+        Method::SparseGd => 1,
+        Method::Dgc => 2,
+        Method::ScaleCom => 3,
+        Method::Qsgd => 4,
+        Method::Threshold => 5,
+        Method::LgcPs => 6,
+        Method::LgcRar => 7,
+    }
+}
+
+fn method_from_tag(t: u8) -> Result<Method> {
+    Ok(match t {
+        0 => Method::Baseline,
+        1 => Method::SparseGd,
+        2 => Method::Dgc,
+        3 => Method::ScaleCom,
+        4 => Method::Qsgd,
+        5 => Method::Threshold,
+        6 => Method::LgcPs,
+        7 => Method::LgcRar,
+        t => bail!("unknown method tag {t}"),
+    })
+}
+
+fn schedule_tag(s: SparsifySchedule) -> u8 {
+    match s {
+        SparsifySchedule::Warmup => 0,
+        SparsifySchedule::Fixed => 1,
+        SparsifySchedule::Exponential => 2,
+    }
+}
+
+fn schedule_from_tag(t: u8) -> Result<SparsifySchedule> {
+    Ok(match t {
+        0 => SparsifySchedule::Warmup,
+        1 => SparsifySchedule::Fixed,
+        2 => SparsifySchedule::Exponential,
+        t => bail!("unknown schedule tag {t}"),
+    })
+}
+
+/// Serialize every field a worker needs to replicate the run.  The
+/// coordinator-local knobs (`transport`, `checkpoint`) are deliberately
+/// omitted: the receiving side gets `Sim`/`None` so a worker can never
+/// recursively self-spawn or write the coordinator's checkpoint path.
+pub fn encode_cfg(w: &mut Vec<u8>, c: &TrainConfig) {
+    w.push(CFG_VERSION);
+    put_str(w, &c.model);
+    w.push(method_tag(c.method));
+    put_u64(w, c.nodes as u64);
+    put_u64(w, c.steps as u64);
+    put_f32(w, c.lr);
+    put_f32(w, c.momentum);
+    put_f32(w, c.weight_decay);
+    put_f64(w, c.alpha);
+    put_f64(w, c.innovation_frac);
+    put_u64(w, c.warmup_iters as u64);
+    put_u64(w, c.ae_train_iters as u64);
+    put_f32(w, c.ae_lr);
+    put_u64(w, c.ae_inner_steps as u64);
+    put_f32(w, c.lambda2);
+    w.push(schedule_tag(c.schedule));
+    put_u64(w, c.eval_every as u64);
+    put_u64(w, c.eval_batches as u64);
+    put_u64(w, c.seed);
+    put_u32(w, c.qsgd_levels);
+    w.push(c.fp16_values as u8);
+    put_f32(w, c.ae_gate);
+    put_u64(w, c.threads as u64);
+    put_f64(w, c.bandwidth_mbits);
+    put_f64(w, c.latency_s);
+    put_u32(w, c.straggler_spec.len() as u32);
+    for &(node, mult) in &c.straggler_spec {
+        put_u64(w, node as u64);
+        put_f64(w, mult);
+    }
+    w.push(c.verbose as u8);
+}
+
+fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
+    let v = r.u8()?;
+    if v != CFG_VERSION {
+        bail!("config blob version mismatch: got {v}, want {CFG_VERSION}");
+    }
+    let model = r.string()?;
+    let method = method_from_tag(r.u8()?)?;
+    let nodes = r.u64()? as usize;
+    let steps = r.u64()? as usize;
+    let lr = r.f32()?;
+    let momentum = r.f32()?;
+    let weight_decay = r.f32()?;
+    let alpha = r.f64()?;
+    let innovation_frac = r.f64()?;
+    let warmup_iters = r.u64()? as usize;
+    let ae_train_iters = r.u64()? as usize;
+    let ae_lr = r.f32()?;
+    let ae_inner_steps = r.u64()? as usize;
+    let lambda2 = r.f32()?;
+    let schedule = schedule_from_tag(r.u8()?)?;
+    let eval_every = r.u64()? as usize;
+    let eval_batches = r.u64()? as usize;
+    let seed = r.u64()?;
+    let qsgd_levels = r.u32()?;
+    let fp16_values = r.bool()?;
+    let ae_gate = r.f32()?;
+    let threads = r.u64()? as usize;
+    let bandwidth_mbits = r.f64()?;
+    let latency_s = r.f64()?;
+    let n_strag = r.u32()? as usize;
+    let mut straggler_spec = Vec::with_capacity(n_strag.min(1024));
+    for _ in 0..n_strag {
+        straggler_spec.push((r.u64()? as usize, r.f64()?));
+    }
+    let verbose = r.bool()?;
+    Ok(TrainConfig {
+        model,
+        method,
+        nodes,
+        steps,
+        lr,
+        momentum,
+        weight_decay,
+        alpha,
+        innovation_frac,
+        warmup_iters,
+        ae_train_iters,
+        ae_lr,
+        ae_inner_steps,
+        lambda2,
+        schedule,
+        eval_every,
+        eval_batches,
+        seed,
+        qsgd_levels,
+        fp16_values,
+        ae_gate,
+        threads,
+        bandwidth_mbits,
+        latency_s,
+        straggler_spec,
+        verbose,
+        transport: TransportKind::Sim,
+        checkpoint: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: &Msg) {
+        let (k, payload) = m.encode();
+        let back = Msg::decode(k, &payload).unwrap();
+        assert_eq!(&back, m);
+    }
+
+    #[test]
+    fn all_message_types_roundtrip() {
+        let cfg = TrainConfig {
+            straggler_spec: vec![(0, 2.0), (3, 1.5)],
+            fp16_values: true,
+            ..Default::default()
+        };
+        for m in [
+            Msg::Join { proto: PROTO_VERSION, session: 0xDEAD_BEEF },
+            Msg::JoinAck { node: 2, nodes: 4, platform: "native-cpu".into(), cfg },
+            Msg::IterPlan { iter: 7, engaged: true, weights_follow: false },
+            Msg::Support { iter: 7, coded: vec![1, 2, 3] },
+            Msg::SupportBcast { iter: 7, coded: vec![] },
+            Msg::Gradient {
+                iter: 9,
+                loss: f32::NAN,
+                acc: 0.5,
+                first: vec![1.0, -0.0],
+                mid: MidUp::Innovation {
+                    coded_idx: vec![9],
+                    vals: vec![0.25],
+                    scale: 2.0,
+                },
+                last: LastUp::Sparse { coded_idx: vec![4, 5], vals: vec![-1.0] },
+                ctrl_mid: Some(vec![0.0; 3]),
+            },
+            Msg::Latent { iter: 3, latent: vec![0.1, 0.2], scale: 1.5 },
+            Msg::SyncInfo { iter: 1, first: vec![1.0], mid: vec![], last: vec![2.0] },
+            Msg::Model { iter: 0, payload: vec![0; 16] },
+            Msg::Heartbeat,
+            Msg::Shutdown { reason: "done".into() },
+            Msg::Error { msg: "oops".into() },
+        ] {
+            // NaN != NaN breaks PartialEq; compare the NaN case by bits.
+            if let Msg::Gradient { loss, .. } = &m {
+                let (k, p) = m.encode();
+                let back = Msg::decode(k, &p).unwrap();
+                if let Msg::Gradient { loss: l2, .. } = &back {
+                    assert_eq!(loss.to_bits(), l2.to_bits());
+                } else {
+                    panic!("wrong variant");
+                }
+                continue;
+            }
+            roundtrip(&m);
+        }
+    }
+
+    #[test]
+    fn unknown_kind_is_error() {
+        assert!(Msg::decode(200, &[]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let (k, mut p) = Msg::Heartbeat.encode();
+        p.push(0);
+        assert!(Msg::decode(k, &p).is_err());
+    }
+
+    #[test]
+    fn truncated_vec_count_is_clean_error() {
+        // SyncInfo claiming 1000 floats but carrying none.
+        let mut p = Vec::new();
+        put_u32(&mut p, 3); // iter
+        put_u32(&mut p, 1000); // first: count with no data
+        assert!(Msg::decode(kind::SYNC_INFO, &p).is_err());
+    }
+
+    #[test]
+    fn cfg_blob_roundtrips_every_field() {
+        let c = TrainConfig {
+            model: "resnet_mini".into(),
+            method: Method::LgcRar,
+            nodes: 8,
+            steps: 77,
+            seed: 1234,
+            alpha: 0.004,
+            fp16_values: true,
+            schedule: SparsifySchedule::Exponential,
+            straggler_spec: vec![(1, 3.25)],
+            transport: TransportKind::Tcp, // intentionally not carried
+            checkpoint: Some("x.ckpt".into()),
+            ..Default::default()
+        };
+        let mut w = Vec::new();
+        encode_cfg(&mut w, &c);
+        let mut r = Reader::new(&w);
+        let back = decode_cfg(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.model, c.model);
+        assert_eq!(back.method, c.method);
+        assert_eq!(back.nodes, c.nodes);
+        assert_eq!(back.steps, c.steps);
+        assert_eq!(back.seed, c.seed);
+        assert_eq!(back.alpha, c.alpha);
+        assert_eq!(back.schedule, c.schedule);
+        assert_eq!(back.straggler_spec, c.straggler_spec);
+        assert!(back.fp16_values);
+        // Coordinator-local knobs never cross the wire.
+        assert_eq!(back.transport, TransportKind::Sim);
+        assert_eq!(back.checkpoint, None);
+    }
+}

@@ -1,0 +1,304 @@
+//! Coordinator-side listener: bind, join handshake, cluster membership.
+//!
+//! The join state machine (DESIGN.md §12.3): a fresh connection must
+//! send `Join{proto, session}` as its first message.  The coordinator
+//! rejects protocol-version mismatches and stale session ids with a
+//! descriptive [`Msg::Error`] and drops the connection (the worker
+//! surfaces the reason verbatim); a valid join is answered with
+//! `JoinAck{node, nodes, platform, cfg}` where `node` is assigned in
+//! arrival order.  Once all `nodes` slots are filled the run starts and
+//! any further join attempt is refused with "session full".
+
+use std::net::TcpListener;
+use std::os::unix::net::UnixListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::conn::{Conn, UNIX_PREFIX};
+use super::msg::{Msg, PROTO_VERSION};
+use crate::config::TrainConfig;
+
+/// A bound accept socket for either family.  Unix listeners own their
+/// socket path and unlink it on drop.
+pub enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind `addr`: `host:port` (use port 0 for ephemeral) or
+    /// `unix:PATH` (a stale socket file at PATH is replaced).
+    pub fn bind(addr: &str) -> Result<Listener> {
+        if let Some(path) = addr.strip_prefix(UNIX_PREFIX) {
+            let path = PathBuf::from(path);
+            if path.exists() {
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("replace stale socket {path:?}"))?;
+            }
+            let l = UnixListener::bind(&path)
+                .with_context(|| format!("bind unix socket {path:?}"))?;
+            Ok(Listener::Unix(l, path))
+        } else {
+            let l = TcpListener::bind(addr)
+                .with_context(|| format!("bind tcp address {addr:?}"))?;
+            Ok(Listener::Tcp(l))
+        }
+    }
+
+    /// The connectable address string (resolves an ephemeral TCP port).
+    pub fn local_addr(&self) -> Result<String> {
+        Ok(match self {
+            Listener::Tcp(l) => l.local_addr()?.to_string(),
+            Listener::Unix(_, p) => format!("{UNIX_PREFIX}{}", p.display()),
+        })
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb)?,
+            Listener::Unix(l, _) => l.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+
+    /// Accept one connection before `deadline` (polling accept so a
+    /// never-arriving worker cannot hang the coordinator).
+    fn accept_deadline(&self, deadline: Instant) -> Result<Conn> {
+        self.set_nonblocking(true)?;
+        let conn = loop {
+            let r = match self {
+                Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::from_tcp(s)),
+                Listener::Unix(l, _) => l.accept().map(|(s, _)| Ok(Conn::from_unix(s))),
+            };
+            match r {
+                Ok(c) => break c?,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!("timed out waiting for a worker to connect");
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e).context("accept"),
+            }
+        };
+        self.set_nonblocking(false)?;
+        Ok(conn)
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix(_, p) = self {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Run the join handshake until all `nodes` slots are filled; returns
+/// connections indexed by assigned node id.
+///
+/// Invalid joiners (bad protocol version, stale session, or a first
+/// message that is not `Join`) are told why, dropped, and do not consume
+/// a slot.  The whole handshake must finish within `timeout`.
+pub fn accept_workers(
+    listener: &Listener,
+    nodes: usize,
+    session: u64,
+    platform: &str,
+    cfg: &TrainConfig,
+    timeout: Duration,
+) -> Result<Vec<Conn>> {
+    let deadline = Instant::now() + timeout;
+    let mut joined: Vec<Conn> = Vec::with_capacity(nodes);
+    while joined.len() < nodes {
+        let mut conn = listener.accept_deadline(deadline).with_context(|| {
+            format!("join phase: {}/{} workers joined", joined.len(), nodes)
+        })?;
+        conn.set_read_timeout(Some(
+            deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(50)),
+        ))?;
+        match conn.recv() {
+            Ok(Msg::Join { proto, session: got }) if proto != PROTO_VERSION => {
+                let _ = conn.send(&Msg::Error {
+                    msg: format!(
+                        "protocol version mismatch: coordinator v{PROTO_VERSION}, \
+                         worker v{proto} (session {got:#x})"
+                    ),
+                });
+            }
+            Ok(Msg::Join { session: got, .. }) if got != session => {
+                let _ = conn.send(&Msg::Error {
+                    msg: format!(
+                        "stale session: coordinator is running session {session:#x}, \
+                         join offered {got:#x}"
+                    ),
+                });
+            }
+            Ok(Msg::Join { .. }) => {
+                let node = joined.len() as u32;
+                conn.send(&Msg::JoinAck {
+                    node,
+                    nodes: nodes as u32,
+                    platform: platform.to_string(),
+                    cfg: cfg.clone(),
+                })
+                .with_context(|| format!("acking node {node}"))?;
+                joined.push(conn);
+            }
+            Ok(other) => {
+                let _ = conn.send(&Msg::Error {
+                    msg: format!("expected Join as first message, got {}", other.name()),
+                });
+            }
+            Err(e) => {
+                // A connection that dies mid-handshake doesn't kill the
+                // join phase; the deadline still bounds total time.
+                eprintln!("[lgc serve] join attempt failed: {e:#}");
+            }
+        }
+    }
+    Ok(joined)
+}
+
+/// Keeps refusing join attempts with "session full" for the lifetime of
+/// a running session, on a background thread.  Dropping the guard stops
+/// the thread and closes the listener.
+pub struct RejectorGuard {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RejectorGuard {
+    pub fn spawn(listener: Listener, nodes: usize) -> Result<RejectorGuard> {
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                let r = match &listener {
+                    Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::from_tcp(s)),
+                    Listener::Unix(l, _) => {
+                        l.accept().map(|(s, _)| Ok(Conn::from_unix(s)))
+                    }
+                };
+                match r {
+                    Ok(Ok(mut conn)) => {
+                        let _ = conn.set_read_timeout(Some(Duration::from_millis(250)));
+                        let _ = conn.recv(); // drain the Join (or whatever came)
+                        let _ = conn.send(&Msg::Error {
+                            msg: format!(
+                                "session full: run already has all {nodes} nodes"
+                            ),
+                        });
+                    }
+                    _ => std::thread::sleep(Duration::from_millis(20)),
+                }
+            }
+        });
+        Ok(RejectorGuard { stop, handle: Some(handle) })
+    }
+}
+
+impl Drop for RejectorGuard {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn join(addr: &str, session: u64) -> Result<Msg> {
+        let mut c = Conn::connect(addr)?;
+        c.set_read_timeout(Some(Duration::from_secs(5)))?;
+        c.send(&Msg::Join { proto: PROTO_VERSION, session })?;
+        c.recv()
+    }
+
+    #[test]
+    fn handshake_assigns_ids_in_arrival_order() {
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let cfg = TrainConfig::default();
+        let t = std::thread::spawn(move || {
+            accept_workers(&listener, 2, 7, "native-cpu", &cfg, Duration::from_secs(5))
+        });
+        let a = join(&addr, 7).unwrap();
+        let b = join(&addr, 7).unwrap();
+        let conns = t.join().unwrap().unwrap();
+        assert_eq!(conns.len(), 2);
+        match (a, b) {
+            (Msg::JoinAck { node: 0, nodes: 2, .. }, Msg::JoinAck { node: 1, .. }) => {}
+            other => panic!("bad acks: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stale_session_rejected_and_slot_preserved() {
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let cfg = TrainConfig::default();
+        let t = std::thread::spawn(move || {
+            accept_workers(&listener, 1, 42, "native-cpu", &cfg, Duration::from_secs(5))
+        });
+        let err = join(&addr, 41).unwrap_err().to_string();
+        assert!(err.contains("stale session"), "got: {err}");
+        // The slot is still open for a correct joiner.
+        let ok = join(&addr, 42).unwrap();
+        assert!(matches!(ok, Msg::JoinAck { node: 0, .. }));
+        t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn session_full_after_run_starts() {
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let cfg = TrainConfig::default();
+        let addr2 = addr.clone();
+        let t = std::thread::spawn(move || {
+            let conns = accept_workers(
+                &listener,
+                1,
+                9,
+                "native-cpu",
+                &cfg,
+                Duration::from_secs(5),
+            )
+            .unwrap();
+            let guard = RejectorGuard::spawn(listener, 1).unwrap();
+            // Hold the session open until the late joiner is refused.
+            let late = join(&addr2, 9).unwrap_err().to_string();
+            assert!(late.contains("session full"), "got: {late}");
+            drop(guard);
+            conns
+        });
+        let ok = join(&addr, 9).unwrap();
+        assert!(matches!(ok, Msg::JoinAck { node: 0, .. }));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn join_phase_times_out_cleanly() {
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let cfg = TrainConfig::default();
+        let err = accept_workers(
+            &listener,
+            1,
+            1,
+            "native-cpu",
+            &cfg,
+            Duration::from_millis(100),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("timed out"), "got: {err}");
+    }
+}

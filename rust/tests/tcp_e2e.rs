@@ -1,0 +1,287 @@
+//! End-to-end contract of the real wire transport (DESIGN.md §12):
+//!
+//! * **Bit-identity** — `--transport tcp` with K real worker *processes*
+//!   on loopback produces byte-identical ledgers, loss curves, eval
+//!   traces, AE losses, net reports, and checkpoint files to the
+//!   single-process simulator with the same config, for Baseline,
+//!   SparseGd, LgcPs, and LgcRar (TCP and Unix-domain sockets).
+//! * **Fault injection** — killing a worker mid-run surfaces as a
+//!   descriptive coordinator error within the configured timeout (never
+//!   a hang); extra joiners are refused with "session full" while the
+//!   run is live; workers retry with backoff when the coordinator is
+//!   slow to bind.
+//!
+//! Worker processes are spawned from this package's own `lgc` binary
+//! (`CARGO_BIN_EXE_lgc`), on the native backend, so the whole suite runs
+//! from a clean checkout with no artifacts.
+
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use lgc::config::{Method, TrainConfig};
+use lgc::coordinator::{self, remote, TrainResult};
+use lgc::runtime::Engine;
+use lgc::transport::{Conn, Msg, PROTO_VERSION};
+
+const LGC_BIN: &str = env!("CARGO_BIN_EXE_lgc");
+
+fn engine() -> Engine {
+    Engine::native().expect("native engine always constructs")
+}
+
+/// A small three-phase run that reaches the compressed phase *engaged*:
+/// `ae_gate = +inf` latches readiness as soon as the 8-loss window
+/// fills, which 8 phase-2 iterations guarantee.
+fn cfg(model: &str, method: Method, nodes: usize) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        method,
+        nodes,
+        steps: 24,
+        warmup_iters: 6,
+        ae_train_iters: 8,
+        eval_every: 6,
+        eval_batches: 2,
+        ae_gate: f32::INFINITY,
+        ..Default::default()
+    }
+}
+
+fn tmp_path(tag: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lgc-e2e-{}-{tag}", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+/// Run the same config through the simulator and through K real worker
+/// processes, and assert every observable output is bit-identical.
+fn assert_tcp_matches_sim(model: &str, method: Method, nodes: usize, listen: &str, session: u64) {
+    let e = engine();
+    let tag = format!("{}-{}", method.name(), session);
+    let ckpt_sim = tmp_path(&format!("{tag}-sim.ckpt"));
+    let ckpt_tcp = tmp_path(&format!("{tag}-tcp.ckpt"));
+
+    let mut cfg_sim = cfg(model, method, nodes);
+    cfg_sim.checkpoint = Some(ckpt_sim.clone());
+    let sim = coordinator::train(&e, cfg_sim).expect("sim run");
+
+    let mut cfg_tcp = cfg(model, method, nodes);
+    cfg_tcp.checkpoint = Some(ckpt_tcp.clone());
+    let mut opts = remote::RemoteOpts::local(session);
+    opts.listen = listen.into();
+    opts.worker_bin = Some(LGC_BIN.into());
+    let tcp = remote::train_with_opts(&e, cfg_tcp, &opts).expect("tcp run");
+
+    assert_bit_identical(&sim, &tcp);
+    let sim_bytes = std::fs::read(&ckpt_sim).expect("sim checkpoint written");
+    let tcp_bytes = std::fs::read(&ckpt_tcp).expect("tcp checkpoint written");
+    assert_eq!(sim_bytes, tcp_bytes, "{tag}: checkpoint files differ");
+    let _ = std::fs::remove_file(&ckpt_sim);
+    let _ = std::fs::remove_file(&ckpt_tcp);
+}
+
+fn assert_bit_identical(sim: &TrainResult, tcp: &TrainResult) {
+    assert_eq!(sim.curve.len(), tcp.curve.len(), "curve lengths");
+    for (a, b) in sim.curve.iter().zip(&tcp.curve) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "loss at iter {}", a.iter);
+        assert_eq!(a.train_acc.to_bits(), b.train_acc.to_bits(), "acc at iter {}", a.iter);
+    }
+    assert_eq!(sim.evals.len(), tcp.evals.len(), "eval counts");
+    for ((i1, l1, a1), (i2, l2, a2)) in sim.evals.iter().zip(&tcp.evals) {
+        assert_eq!(i1, i2);
+        assert_eq!(l1.to_bits(), l2.to_bits(), "eval loss at iter {i1}");
+        assert_eq!(a1.to_bits(), a2.to_bits(), "eval acc at iter {i1}");
+    }
+    assert_eq!(sim.final_eval.0.to_bits(), tcp.final_eval.0.to_bits(), "final eval loss");
+    assert_eq!(sim.final_eval.1.to_bits(), tcp.final_eval.1.to_bits(), "final eval acc");
+    assert_eq!(sim.phase_iters, tcp.phase_iters, "phase iteration counts");
+    assert_eq!(sim.ledger, tcp.ledger, "byte ledgers");
+    assert_eq!(sim.net, tcp.net, "net fabric reports");
+    assert_eq!(sim.ae_losses.len(), tcp.ae_losses.len(), "AE loss trace lengths");
+    for (i, ((r1, s1), (r2, s2))) in sim.ae_losses.iter().zip(&tcp.ae_losses).enumerate() {
+        assert_eq!(r1.to_bits(), r2.to_bits(), "AE rec loss {i}");
+        assert_eq!(s1.to_bits(), s2.to_bits(), "AE sim loss {i}");
+    }
+    assert_eq!(sim.dense_bytes_per_node, tcp.dense_bytes_per_node);
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identity, 4 worker processes on loopback
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_baseline_bit_identical_to_sim() {
+    assert_tcp_matches_sim("convnet_mini", Method::Baseline, 4, "127.0.0.1:0", 0xE2E1);
+}
+
+#[test]
+fn tcp_sparse_gd_bit_identical_to_sim() {
+    assert_tcp_matches_sim("mlp_mini", Method::SparseGd, 4, "127.0.0.1:0", 0xE2E2);
+}
+
+#[test]
+fn tcp_lgc_ps_bit_identical_to_sim() {
+    assert_tcp_matches_sim("convnet_mini", Method::LgcPs, 4, "127.0.0.1:0", 0xE2E3);
+}
+
+#[test]
+fn tcp_lgc_rar_bit_identical_to_sim() {
+    assert_tcp_matches_sim("mlp_mini", Method::LgcRar, 4, "127.0.0.1:0", 0xE2E4);
+}
+
+#[test]
+fn uds_run_bit_identical_to_sim() {
+    // Same code path over a Unix-domain socket address.
+    let sock = tmp_path("uds.sock");
+    let _ = std::fs::remove_file(&sock);
+    assert_tcp_matches_sim("mlp_mini", Method::LgcPs, 2, &format!("unix:{sock}"), 0xE2E5);
+}
+
+#[test]
+fn unsupported_methods_error_loudly() {
+    let e = engine();
+    for m in [Method::ScaleCom, Method::Qsgd] {
+        let mut opts = remote::RemoteOpts::local(0xE2E6);
+        opts.worker_bin = Some(LGC_BIN.into());
+        let err = remote::train_with_opts(&e, cfg("mlp_mini", m, 2), &opts)
+            .expect_err("gated method must not run");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--transport tcp does not support"), "got: {msg}");
+        assert!(msg.contains("--transport sim"), "got: {msg}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+fn spawn_external_worker(addr: &str, session: u64) -> Child {
+    Command::new(LGC_BIN)
+        .arg("worker")
+        .arg("--connect")
+        .arg(addr)
+        .arg("--session")
+        .arg(session.to_string())
+        .arg("--retries")
+        .arg("80")
+        .arg("--backoff-ms")
+        .arg("25")
+        .arg("--net-timeout-ms")
+        .arg("60000")
+        .env("LGC_BACKEND", "native")
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn external worker")
+}
+
+fn join_within<T>(h: std::thread::JoinHandle<T>, secs: u64, what: &str) -> T {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !h.is_finished() {
+        assert!(Instant::now() < deadline, "{what}: coordinator hung past the deadline");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    h.join().expect("coordinator thread panicked")
+}
+
+/// Killing one worker mid-run must produce a descriptive coordinator
+/// error within the configured net timeout — never a hang.  While the
+/// run is live, a late joiner must be refused with "session full".
+#[test]
+fn killed_worker_errors_within_timeout_and_late_joins_are_refused() {
+    let sock = tmp_path("kill.sock");
+    let _ = std::fs::remove_file(&sock);
+    let addr = format!("unix:{sock}");
+    let session = 0xFA11u64;
+    let nodes = 4;
+
+    let coord_addr = addr.clone();
+    let coord = std::thread::spawn(move || {
+        let e = engine();
+        // Far more steps than will ever run: the kill must end the run.
+        let mut c = cfg("mlp_mini", Method::Baseline, nodes);
+        c.steps = 1_000_000;
+        c.eval_every = 0;
+        let mut opts = remote::RemoteOpts::local(session);
+        opts.listen = coord_addr;
+        opts.spawn_workers = false;
+        opts.net_timeout = Duration::from_secs(10);
+        remote::train_with_opts(&e, c, &opts)
+    });
+
+    let mut workers: Vec<Child> =
+        (0..nodes).map(|_| spawn_external_worker(&addr, session)).collect();
+    // Let the session form fully (all K joins) and the training loop
+    // spin for a moment; a probe that lands during the join phase would
+    // consume a node slot instead of hitting the rejector.
+    std::thread::sleep(Duration::from_secs(5));
+
+    // Probe: a fifth joiner on a live session is refused, descriptively.
+    let mut probe = Conn::connect(&addr).expect("probe connect");
+    probe.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    probe.send(&Msg::Join { proto: PROTO_VERSION, session }).unwrap();
+    let refusal = probe.recv().expect_err("late join must be refused").to_string();
+    assert!(refusal.contains("session full"), "got: {refusal}");
+
+    // Kill one worker mid-iteration.
+    workers[1].kill().expect("kill worker");
+    let _ = workers[1].wait();
+
+    let err = join_within(coord, 60, "kill test").expect_err("run must fail after the kill");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("disconnected") || msg.contains("timed out"),
+        "error must name the fault, got: {msg}"
+    );
+    for w in &mut workers {
+        let _ = w.kill();
+        let _ = w.wait();
+    }
+}
+
+/// Workers launched before the coordinator binds must connect anyway:
+/// `connect_with_retry` backs off exponentially until the listener
+/// appears, and the run then completes normally.
+#[test]
+fn workers_retry_until_coordinator_binds() {
+    let sock = tmp_path("retry.sock");
+    let _ = std::fs::remove_file(&sock);
+    let addr = format!("unix:{sock}");
+    let session = 0xB0FFu64;
+    let nodes = 2;
+
+    let mut workers: Vec<Child> =
+        (0..nodes).map(|_| spawn_external_worker(&addr, session)).collect();
+    // Make the workers wait: the coordinator is deliberately late.
+    std::thread::sleep(Duration::from_millis(500));
+
+    let e = engine();
+    let mut c = cfg("mlp_mini", Method::Baseline, nodes);
+    c.steps = 6;
+    c.eval_every = 0;
+    let mut opts = remote::RemoteOpts::local(session);
+    opts.listen = addr;
+    opts.spawn_workers = false;
+    let r = remote::train_with_opts(&e, c, &opts).expect("late-bound run completes");
+    assert_eq!(r.curve.len(), 6);
+
+    // The shutdown broadcast lets the workers exit on their own.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    for w in &mut workers {
+        loop {
+            match w.try_wait().expect("try_wait") {
+                Some(status) => {
+                    assert!(status.success(), "worker exited with {status}");
+                    break;
+                }
+                None if Instant::now() > deadline => {
+                    let _ = w.kill();
+                    panic!("worker did not exit after shutdown broadcast");
+                }
+                None => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Property tests on the wire layer: the frame codec and the message
+//! grammar must never panic on hostile input — truncation, corrupt
+//! length prefixes, unknown type bytes, interleaved partial reads — and
+//! must roundtrip every well-formed message byte-exactly.
+//!
+//! The offline crate set has no proptest, so this uses the in-tree
+//! deterministic RNG for randomized case generation with fixed seeds
+//! (every failure prints the case seed; re-running with it is exact).
+
+use lgc::config::{Method, SparsifySchedule, TrainConfig, TransportKind};
+use lgc::transport::{frame, Frame, FrameDecoder, LastUp, MidUp, Msg, MAX_FRAME, PROTO_VERSION};
+use lgc::util::rng::Rng;
+
+const CASES: u64 = 200;
+
+fn random_bytes(rng: &mut Rng, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Random f32 payload from raw bit patterns — NaNs, infinities, -0.0 and
+/// subnormals included, since the wire carries raw IEEE bits.
+fn random_f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| f32::from_bits(rng.next_u64() as u32)).collect()
+}
+
+/// Random-length (0..64) raw-bits f32 vector.
+fn vecf(rng: &mut Rng) -> Vec<f32> {
+    let n = rng.below(64);
+    random_f32s(rng, n)
+}
+
+/// Random-length (0..max) byte vector.
+fn vecb(rng: &mut Rng, max: usize) -> Vec<u8> {
+    let n = rng.below(max);
+    random_bytes(rng, n)
+}
+
+// ---------------------------------------------------------------------------
+// Frame codec
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_frames_roundtrip_under_random_chunked_feeds() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xF2A3E + case);
+        let frames: Vec<Frame> = (0..1 + rng.below(8))
+            .map(|_| {
+                let n = rng.below(4096);
+                Frame { kind: rng.below(256) as u8, payload: random_bytes(&mut rng, n) }
+            })
+            .collect();
+        let mut wire = Vec::new();
+        for f in &frames {
+            frame::encode_into(f.kind, &f.payload, &mut wire).unwrap();
+        }
+
+        // Feed the byte stream in random-sized chunks, popping eagerly.
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut off = 0;
+        while off < wire.len() {
+            let n = (1 + rng.below(777)).min(wire.len() - off);
+            dec.feed(&wire[off..off + n]);
+            off += n;
+            while let Some(f) = dec.pop().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, frames, "case {case}");
+        assert_eq!(dec.pending(), 0, "case {case}: leftover bytes after all frames popped");
+    }
+}
+
+#[test]
+fn prop_truncated_streams_wait_and_never_panic() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x7256 + case);
+        let n = 1 + rng.below(512);
+        let payload = random_bytes(&mut rng, n);
+        let mut wire = Vec::new();
+        frame::encode_into(7, &payload, &mut wire).unwrap();
+        // Every strict prefix is an incomplete frame: pop must report
+        // "not yet" (Ok(None)), never a frame and never a panic.
+        let cut = rng.below(wire.len());
+        let mut dec = FrameDecoder::new();
+        dec.feed(&wire[..cut]);
+        assert!(dec.pop().unwrap().is_none(), "case {case}: frame from a {cut}-byte prefix");
+        // Completing the stream later yields the frame intact.
+        dec.feed(&wire[cut..]);
+        let f = dec.pop().unwrap().expect("completed frame");
+        assert_eq!(f.payload, payload, "case {case}");
+    }
+}
+
+#[test]
+fn prop_corrupt_length_prefixes_error_cleanly() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xC0221 + case);
+        let mut wire = Vec::new();
+        frame::encode_into(3, &random_bytes(&mut rng, 32), &mut wire).unwrap();
+        // Zero-length and over-MAX_FRAME prefixes are both invalid: a
+        // frame's length counts the type byte, so it is always >= 1.
+        let bad: u32 = if case % 2 == 0 {
+            0
+        } else {
+            MAX_FRAME + 1 + rng.below(1 << 20) as u32
+        };
+        wire[..4].copy_from_slice(&bad.to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.feed(&wire);
+        assert!(dec.pop().is_err(), "case {case}: accepted length prefix {bad}");
+    }
+}
+
+#[test]
+fn prop_garbage_streams_never_panic() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x6A2BA6E + case);
+        let mut dec = FrameDecoder::new();
+        let n = rng.below(2048);
+        let garbage = random_bytes(&mut rng, n);
+        dec.feed(&garbage);
+        // Drain until the decoder errors or runs dry; anything but a
+        // panic or an infinite loop is acceptable on garbage.
+        for _ in 0..garbage.len() + 1 {
+            match dec.pop() {
+                Ok(Some(_)) => continue,
+                Ok(None) | Err(_) => break,
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Message grammar
+// ---------------------------------------------------------------------------
+
+fn random_mid(rng: &mut Rng) -> MidUp {
+    match rng.below(5) {
+        0 => MidUp::Dense(vecf(rng)),
+        1 => MidUp::Sparse { coded_idx: vecb(rng, 64), vals: vecf(rng) },
+        2 => MidUp::Vv(vecf(rng)),
+        3 => MidUp::Innovation {
+            coded_idx: vecb(rng, 64),
+            vals: vecf(rng),
+            scale: f32::from_bits(rng.next_u64() as u32),
+        },
+        _ => MidUp::None,
+    }
+}
+
+fn random_msg(rng: &mut Rng) -> Msg {
+    match rng.below(12) {
+        0 => Msg::Join { proto: rng.next_u64() as u16, session: rng.next_u64() },
+        1 => Msg::JoinAck {
+            node: rng.next_u64() as u32,
+            nodes: rng.next_u64() as u32,
+            platform: format!("plat-{}", rng.below(100)),
+            cfg: random_cfg(rng),
+        },
+        2 => Msg::IterPlan {
+            iter: rng.next_u64() as u32,
+            engaged: rng.below(2) == 0,
+            weights_follow: rng.below(2) == 0,
+        },
+        3 => Msg::Support { iter: rng.next_u64() as u32, coded: vecb(rng, 256) },
+        4 => Msg::SupportBcast { iter: rng.next_u64() as u32, coded: vecb(rng, 256) },
+        5 => Msg::Gradient {
+            iter: rng.next_u64() as u32,
+            loss: f32::from_bits(rng.next_u64() as u32),
+            acc: f32::from_bits(rng.next_u64() as u32),
+            first: vecf(rng),
+            mid: random_mid(rng),
+            last: if rng.below(2) == 0 {
+                LastUp::Dense(vecf(rng))
+            } else {
+                LastUp::Sparse { coded_idx: vecb(rng, 64), vals: vecf(rng) }
+            },
+            ctrl_mid: if rng.below(2) == 0 {
+                Some(vecf(rng))
+            } else {
+                None
+            },
+        },
+        6 => Msg::Latent {
+            iter: rng.next_u64() as u32,
+            latent: vecf(rng),
+            scale: f32::from_bits(rng.next_u64() as u32),
+        },
+        7 => Msg::SyncInfo {
+            iter: rng.next_u64() as u32,
+            first: vecf(rng),
+            mid: vecf(rng),
+            last: vecf(rng),
+        },
+        8 => Msg::Model { iter: rng.next_u64() as u32, payload: vecb(rng, 256) },
+        9 => Msg::Heartbeat,
+        10 => Msg::Shutdown { reason: format!("reason {}", rng.below(1000)) },
+        _ => Msg::Error { msg: format!("error {}", rng.below(1000)) },
+    }
+}
+
+fn random_cfg(rng: &mut Rng) -> TrainConfig {
+    let methods = Method::all();
+    TrainConfig {
+        model: format!("model_{}", rng.below(50)),
+        method: methods[rng.below(methods.len())],
+        nodes: rng.below(64),
+        steps: rng.below(100_000),
+        lr: rng.uniform(),
+        momentum: rng.uniform(),
+        alpha: rng.uniform() as f64,
+        warmup_iters: rng.below(1000),
+        ae_train_iters: rng.below(1000),
+        seed: rng.next_u64(),
+        fp16_values: rng.below(2) == 0,
+        verbose: rng.below(2) == 0,
+        schedule: match rng.below(3) {
+            0 => SparsifySchedule::Warmup,
+            1 => SparsifySchedule::Fixed,
+            _ => SparsifySchedule::Exponential,
+        },
+        straggler_spec: (0..rng.below(4))
+            .map(|_| (rng.below(8), rng.uniform() as f64 * 4.0))
+            .collect(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_every_message_roundtrips_byte_exactly() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x536 + case);
+        let msg = random_msg(&mut rng);
+        let (kind, payload) = msg.encode();
+        let back = Msg::decode(kind, &payload).unwrap_or_else(|e| {
+            panic!("case {case}: decode of {} failed: {e}", msg.name());
+        });
+        // Compare re-encoded bytes, not values: raw-bit f32 transport
+        // means NaN payloads roundtrip even though NaN != NaN.
+        let (kind2, payload2) = back.encode();
+        assert_eq!((kind, &payload), (kind2, &payload2), "case {case}: {}", msg.name());
+    }
+}
+
+#[test]
+fn prop_cfg_blob_roundtrips_through_join_ack() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xCF6 + case);
+        let mut cfg = random_cfg(&mut rng);
+        cfg.transport = TransportKind::Tcp;
+        cfg.checkpoint = Some("never-forwarded.ckpt".into());
+        let msg =
+            Msg::JoinAck { node: 1, nodes: 4, platform: "native".into(), cfg: cfg.clone() };
+        let (kind, payload) = msg.encode();
+        let Msg::JoinAck { cfg: back, .. } = Msg::decode(kind, &payload).unwrap() else {
+            panic!("case {case}: wrong variant");
+        };
+        // The decoder forces Sim + no checkpoint so a worker can never
+        // recursively self-spawn; everything else must survive exactly.
+        cfg.transport = TransportKind::Sim;
+        cfg.checkpoint = None;
+        assert_eq!(back, cfg, "case {case}");
+    }
+}
+
+#[test]
+fn prop_unknown_message_type_bytes_error_cleanly() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x1214 + case);
+        // Valid kinds are 1..=12; 0 and 13..=255 must be clean errors.
+        let kind = if case % 2 == 0 {
+            0
+        } else {
+            13 + rng.below(243) as u8
+        };
+        let n = rng.below(128);
+        let payload = random_bytes(&mut rng, n);
+        assert!(Msg::decode(kind, &payload).is_err(), "case {case}: accepted kind {kind}");
+    }
+}
+
+#[test]
+fn prop_truncated_payloads_error_and_never_panic() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x7214CA7E + case);
+        let (kind, payload) = random_msg(&mut rng).encode();
+        if payload.is_empty() {
+            continue; // Heartbeat: no strict prefix exists.
+        }
+        let cut = rng.below(payload.len());
+        // A strict prefix can never decode: every field is length- or
+        // count-prefixed and the grammar rejects short *and* trailing
+        // bytes, so truncation is always a clean error.
+        assert!(Msg::decode(kind, &payload[..cut]).is_err(), "case {case}: kind {kind} cut {cut}");
+    }
+}
+
+#[test]
+fn prop_mutated_payloads_never_panic() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xB17F11 + case);
+        let (kind, mut payload) = random_msg(&mut rng).encode();
+        if payload.is_empty() {
+            continue;
+        }
+        // Flip a handful of bytes anywhere (length prefixes included):
+        // decode may succeed or error, but must never panic or OOM.
+        for _ in 0..1 + rng.below(4) {
+            let at = rng.below(payload.len());
+            payload[at] = rng.below(256) as u8;
+        }
+        let _ = Msg::decode(kind, &payload);
+    }
+}
+
+#[test]
+fn prop_interleaved_partial_reads_preserve_message_order() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x1272 + case);
+        let msgs: Vec<Msg> = (0..2 + rng.below(6)).map(|_| random_msg(&mut rng)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            let (kind, payload) = m.encode();
+            frame::encode_into(kind, &payload, &mut wire).unwrap();
+        }
+        // One-byte drip feed: the decoder must reassemble every frame
+        // and the grammar must yield the same messages in order.
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for b in &wire {
+            dec.feed(std::slice::from_ref(b));
+            while let Some(f) = dec.pop().unwrap() {
+                got.push(Msg::decode(f.kind, &f.payload).unwrap());
+            }
+        }
+        assert_eq!(got.len(), msgs.len(), "case {case}");
+        for (g, m) in got.iter().zip(&msgs) {
+            assert_eq!(g.encode(), m.encode(), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn proto_version_is_pinned() {
+    // The join handshake rejects other versions; this test pins the
+    // constant so bumping it is a conscious, reviewed change.
+    assert_eq!(PROTO_VERSION, 1);
+}
