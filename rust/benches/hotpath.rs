@@ -5,7 +5,9 @@
 //! per-iteration time goes:
 //!   top-k select | index coding (fixed-only baseline vs LZ77+dynamic) |
 //!   sparsify scalar | ring allreduce | per-node pipeline K=8 sequential
-//!   vs parallel | — and, when AOT artifacts + a PJRT backend are present
+//!   vs parallel | bucketed per-bucket encode + modeled overlap-on/off
+//!   iteration at 50 Mbit/s (DESIGN.md §13) |
+//!   — and, when AOT artifacts + a PJRT backend are present
 //!   — grad_step HLO, AE encode/decode, sparsify HLO, full phase-3 LGC
 //!   iteration.
 //!
@@ -306,6 +308,123 @@ fn node_loop_comparison(t: &mut Table, json: &mut JsonOut, n: usize, smoke: bool
     (seq.mean_ms(), par.mean_ms())
 }
 
+/// Pipelined execution (DESIGN.md §13): per-bucket encode latency under
+/// an 8-bucket plan, plus the modeled steady-state iteration time at
+/// 50 Mbit/s with overlap on vs off.  The encode rows are measured; the
+/// modeled rows are synthetic single-sample stats derived from those
+/// measurements and the recorded per-bucket byte counts, priced by the
+/// same fabric arithmetic the coordinator uses — so the JSON trajectory
+/// tracks both the per-bucket hot path and the schedule it buys.
+fn pipelined_section(t: &mut Table, json: &mut JsonOut, smoke: bool) {
+    use lgc::coordinator::bucket::BucketPlan;
+    use lgc::net::{Fabric, LinkModel, NetSim};
+
+    const N: usize = 200_000;
+    const K: usize = 8; // nodes
+    const BUCKETS: usize = 8;
+    let k_sel = topk::k_of(N, 0.01);
+    let plan = BucketPlan::from_layers(N, &[], BUCKETS);
+    let mut rng = Rng::new(0x13);
+    let grad = rng.normal_vec(N, 1.0);
+
+    // One steady-state selection: the bucketed path (identical global
+    // threshold, plus per-bucket splits) feeds every row below.
+    let mut fb = FeedbackMemory::new(N, Correction::Momentum, 0.9);
+    let mut sc = Scratch::new();
+    fb.accumulate(&grad);
+    fb.select_and_clear_bucketed_into(k_sel, plan.ranges(), &mut sc);
+    let idx = sc.idx.clone();
+    let splits = sc.splits.clone();
+
+    // Whole-group index encode — the `--no-overlap` packet (one global
+    // stream) as the reference point.
+    let s_mono = time_budget(budget(smoke, 400), || {
+        std::hint::black_box(index_coding::encode_into(&idx, N, &mut sc.enc).unwrap().len());
+    });
+    let (a, b) = fmt(&s_mono);
+    t.row(&["bucket encode monolithic".into(), a, b, format!("n={N} k={k_sel}")]);
+    json.push("pipelined_encode_monolithic", &s_mono, None);
+
+    // Per-bucket encode latency — the overlap packets: bucket-local
+    // indices coded over the bucket width (DESIGN.md §13.4).
+    let mut local: Vec<u32> = Vec::new();
+    let mut per_bucket_s = Vec::with_capacity(plan.len());
+    let mut per_bucket_bytes: Vec<u64> = Vec::with_capacity(plan.len());
+    for (bkt, r) in plan.ranges().iter().enumerate() {
+        let ids = &idx[splits[bkt]..splits[bkt + 1]];
+        let width = r.len().max(1);
+        let s = time_budget(budget(smoke, 150), || {
+            local.clear();
+            local.extend(ids.iter().map(|&i| i - r.start as u32));
+            std::hint::black_box(
+                index_coding::encode_into(&local, width, &mut sc.enc).unwrap().len(),
+            );
+        });
+        local.clear();
+        local.extend(ids.iter().map(|&i| i - r.start as u32));
+        let coded = index_coding::encode_into(&local, width, &mut sc.enc).unwrap().len();
+        per_bucket_bytes.push((coded + ids.len() * 4) as u64);
+        per_bucket_s.push(s.p50_ns / 1e9);
+        json.push(&format!("pipelined_encode_bucket{bkt}"), &s, Some(coded));
+    }
+    let sum_ms: f64 = per_bucket_s.iter().sum::<f64>() * 1e3;
+    t.row(&[
+        format!("bucket encode x{BUCKETS} (sum)"),
+        format!("{sum_ms:.3} ms"),
+        "-".into(),
+        format!("per-bucket packets, k={k_sel} total"),
+    ]);
+
+    // Modeled steady-state iteration at 50 Mbit/s, K=8: the per-bucket
+    // fan-in + bucket-tagged fan-out schedule the coordinator records,
+    // priced sequentially (`--no-overlap`) and pipelined.  Per-bucket
+    // compute is the measured encode latency above.
+    let fabric = Fabric::new(LinkModel::from_mbits(50.0, 50e-6), vec![1.0; K]);
+    let mut sim = NetSim::new(fabric.clone(), K);
+    for (bkt, &bytes) in per_bucket_bytes.iter().enumerate() {
+        for node in 0..K {
+            sim.send(node, bytes);
+        }
+        sim.fanout_bucketed(bkt, bytes * K as u64);
+    }
+    sim.end_iteration();
+    let report = sim.into_report();
+    let total_compute: f64 = per_bucket_s.iter().sum();
+    let barrier_s = total_compute + report.iter_comm_s_under(&fabric)[0];
+    let piped_s = report.pipelined_iter_s_under(&fabric, &per_bucket_s)[0];
+    let model_stats = |secs: f64| Stats {
+        iters: 1,
+        mean_ns: secs * 1e9,
+        p50_ns: secs * 1e9,
+        p95_ns: secs * 1e9,
+        min_ns: secs * 1e9,
+    };
+    t.row(&[
+        "modeled iter 50 Mbit/s overlap off".into(),
+        format!("{:.3} ms", barrier_s * 1e3),
+        "-".into(),
+        format!("K={K}, {BUCKETS} buckets, compute = encode"),
+    ]);
+    t.row(&[
+        "modeled iter 50 Mbit/s overlap on".into(),
+        format!("{:.3} ms", piped_s * 1e3),
+        "-".into(),
+        format!("{:.2}x vs barrier", barrier_s / piped_s),
+    ]);
+    json.push("pipelined_iter_50mbit_overlap_off", &model_stats(barrier_s), None);
+    json.push("pipelined_iter_50mbit_overlap_on", &model_stats(piped_s), None);
+    println!(
+        "pipelined: {BUCKETS}-bucket modeled iteration at 50 Mbit/s {:.3} ms -> {:.3} ms \
+         ({:.2}x) with overlap",
+        barrier_s * 1e3,
+        piped_s * 1e3,
+        barrier_s / piped_s
+    );
+    if piped_s > barrier_s + 1e-12 {
+        eprintln!("WARNING: pipelined modeled iteration above the barrier price");
+    }
+}
+
 /// Native-backend AE encode/decode latency (always available: the native
 /// engine needs no artifacts).  Tracked in BENCH_hotpath.json so the
 /// learned-compressor hot path has a PR-over-PR latency trajectory even
@@ -453,6 +572,7 @@ fn main() -> anyhow::Result<()> {
     pure_sections(&mut t, &mut json, n_mid, mu, smoke);
     json.index_encode = Some(index_encode_comparison(&mut t, &mut json, smoke));
     node_loop_comparison(&mut t, &mut json, 200_000, smoke);
+    pipelined_section(&mut t, &mut json, smoke);
     native_ae_section(&mut t, &mut json, smoke)?;
 
     // PJRT-only sections: their JSON keys (ae_encode, sparsify_hlo, ...)

@@ -19,8 +19,9 @@
 use anyhow::Result;
 
 use crate::compress::{f16, index_coding, quantize, topk, Correction, FeedbackMemory, Scratch};
+use crate::coordinator::bucket::BucketPlan;
 use crate::coordinator::parallel;
-use crate::coordinator::scheduler::{exponential_alpha, Phase};
+use crate::coordinator::scheduler::{bucket_task_graph, exponential_alpha, Phase, StepTask};
 use crate::metrics::{Kind, Ledger, NodeLedger};
 use crate::net::NetSim;
 use crate::runtime::Engine;
@@ -59,6 +60,14 @@ pub struct ExchangeCtx<'a> {
     /// ([`NetSim::broadcast`]), and ring steps (via
     /// [`crate::coordinator::ring::ring_allreduce_mean_timed`]).
     pub net: &'a mut NetSim,
+    /// The mid-group bucket plan (DESIGN.md §13).  Single-bucket for
+    /// non-bucketable methods regardless of `--buckets`.
+    pub plan: &'a BucketPlan,
+    /// Effective overlap mode: `cfg.overlap` and the plan actually has
+    /// more than one bucket.  When false, bucketed strategies emit the
+    /// exact legacy accounting (one packet record pair, one fan-out
+    /// round) — the `--no-overlap` bit-identity contract.
+    pub overlap: bool,
 }
 
 /// Apply the configured value-payload precision: returns the values as
@@ -129,19 +138,102 @@ impl MidStrategy for Baseline {
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
         let mean = dense_mean_accounted(grads, &mut *ctx.shards);
-        // The server scatters the dense aggregate back to every worker.
-        ctx.net.fanout((mean.len() * 4) as u64);
+        // The server scatters the dense aggregate back to every worker —
+        // per bucket under the overlap pipeline (per-node `Dense` ledger
+        // records are slice-size-independent, so the byte ledger is
+        // identical in both modes; only the round structure differs).
+        if ctx.overlap && !ctx.plan.is_single() {
+            let per_bucket: Vec<u64> =
+                ctx.plan.ranges().iter().map(|r| ((r.end - r.start) * 4) as u64).collect();
+            fanout_rounds(ctx.net, true, ctx.plan.len(), &[per_bucket]);
+        } else {
+            ctx.net.fanout((mean.len() * 4) as u64);
+        }
         Ok(mean)
     }
 }
 
+/// Pack + record one node's selected sparse packet under the bucket plan
+/// (the selection — `sc.idx` / `sc.vals` / `sc.splits` — is already in
+/// the arena).  Returns per-bucket wire bytes.
+///
+/// * `overlap == false` (the legacy shape): one whole-group packet —
+///   values packed in one slab, indices coded once over `n` — recorded as
+///   a single `Values` + `Indices` pair, byte-identical to the unbucketed
+///   path for any plan.
+/// * `overlap == true`: one packet per bucket — values slice packed per
+///   bucket, indices rebased to the bucket range and coded over its
+///   width — recorded as `plan.len()` `Values`/`Indices` pairs in bucket
+///   order, the exact sequence the TCP coordinator replays from
+///   bucket-tagged frames (DESIGN.md §13.4).
+pub(crate) fn record_sparse_packet(
+    n: usize,
+    plan: &BucketPlan,
+    overlap: bool,
+    fp16: bool,
+    shard: &mut NodeLedger,
+    sc: &mut Scratch,
+) -> Result<Vec<u64>> {
+    if !overlap {
+        let bytes = pack_values_in_place(&mut sc.vals, fp16);
+        shard.record(Kind::Values, bytes);
+        let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
+        shard.record(Kind::Indices, coded);
+        return Ok(vec![(bytes + coded) as u64]);
+    }
+    debug_assert_eq!(sc.splits.len(), plan.len() + 1);
+    let mut per_bucket = Vec::with_capacity(plan.len());
+    for (b, range) in plan.ranges().iter().enumerate() {
+        let (lo, hi) = (sc.splits[b], sc.splits[b + 1]);
+        let bytes = pack_values_in_place(&mut sc.vals[lo..hi], fp16);
+        shard.record(Kind::Values, bytes);
+        sc.idx_local.clear();
+        sc.idx_local.extend(sc.idx[lo..hi].iter().map(|&i| i - range.start as u32));
+        let coded =
+            index_coding::encode_into(&sc.idx_local, range.end - range.start, &mut sc.enc)?.len();
+        shard.record(Kind::Indices, coded);
+        per_bucket.push((bytes + coded) as u64);
+    }
+    Ok(per_bucket)
+}
+
+/// Emit the exchange rounds of a bucketed fan-out on the fabric,
+/// walking [`bucket_task_graph`] (the single owner of per-iteration
+/// ordering): overlapped mode prices one bucket-tagged round per bucket;
+/// otherwise the legacy single aggregate round.  `per_node[node][b]` is
+/// node `node`'s bucket-`b` wire bytes.
+pub(crate) fn fanout_rounds(
+    net: &mut NetSim,
+    overlap: bool,
+    buckets: usize,
+    per_node: &[Vec<u64>],
+) {
+    if !overlap {
+        net.fanout(per_node.iter().flatten().sum());
+        return;
+    }
+    for task in bucket_task_graph(buckets, true) {
+        if let StepTask::Exchange(b) = task {
+            net.fanout_bucketed(b, per_node.iter().map(|v| v.get(b).copied().unwrap_or(0)).sum());
+        }
+    }
+}
+
 /// Shared machinery: per-node EF -> top-k -> (values + coded indices) ->
-/// scatter-mean. Used by SparseGd and Dgc.  The per-node stage runs in
-/// parallel and leaves each node's packet in its scratch arena
-/// (`sc.idx` / `sc.vals`); the scatter-mean barrier reads the arenas in
-/// node order, so no per-packet allocation survives into steady state.
+/// scatter-mean. Used by SparseGd, Dgc, and the trainer's last-group
+/// exchange.  The per-node stage runs in parallel and leaves each node's
+/// packet in its scratch arena (`sc.idx` / `sc.vals` / `sc.splits`); the
+/// scatter-mean barrier reads the arenas in node order, so no per-packet
+/// allocation survives into steady state.
+///
+/// Selection always runs bucketed
+/// ([`FeedbackMemory::select_and_clear_bucketed_into`]) with one *global*
+/// threshold, so the selected set, the EF clears, and the aggregate are
+/// bit-identical to the monolithic path for any plan; only the packet
+/// framing and the round structure differ between overlap modes
+/// (see [`record_sparse_packet`]).
 #[allow(clippy::too_many_arguments)]
-fn sparse_ef_exchange(
+pub(crate) fn sparse_ef_exchange(
     fbs: &mut [FeedbackMemory],
     grads: &[Vec<f32>],
     alpha: f64,
@@ -149,23 +241,22 @@ fn sparse_ef_exchange(
     shards: &mut [NodeLedger],
     scratches: &mut [Scratch],
     threads: usize,
+    plan: &BucketPlan,
+    overlap: bool,
     net: &mut NetSim,
 ) -> Result<Vec<f32>> {
     let n = grads[0].len();
+    let overlap = overlap && !plan.is_single();
     let k_sel = topk::k_of(n, alpha);
     let packet_bytes = parallel::collect_node_results(parallel::par_zip3_mut(
         threads,
         fbs,
         shards,
         scratches,
-        |node, fb, shard, sc| -> Result<usize> {
+        |node, fb, shard, sc| -> Result<Vec<u64>> {
             fb.accumulate(&grads[node]);
-            fb.select_and_clear_into(k_sel, sc);
-            let bytes = pack_values_in_place(&mut sc.vals, fp16);
-            shard.record(Kind::Values, bytes);
-            let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
-            shard.record(Kind::Indices, coded);
-            Ok(bytes + coded)
+            fb.select_and_clear_bucketed_into(k_sel, plan.ranges(), sc);
+            record_sparse_packet(n, plan, overlap, fp16, shard, sc)
         },
     ))?;
     let mut mean = vec![0.0f32; n];
@@ -174,10 +265,11 @@ fn sparse_ef_exchange(
     }
     let k = grads.len() as f32;
     mean.iter_mut().for_each(|m| *m /= k);
-    // Fan-out round: the server relays the sparse aggregate, measured as
-    // the concatenation of the per-node compressed packets (an upper
-    // bound on the union-support encoding; DESIGN.md §11).
-    net.fanout(packet_bytes.iter().map(|&b| b as u64).sum());
+    // Fan-out round(s): the server relays the sparse aggregate, measured
+    // as the concatenation of the per-node compressed packets (an upper
+    // bound on the union-support encoding; DESIGN.md §11) — per bucket
+    // when overlapping, in one aggregate round otherwise.
+    fanout_rounds(net, overlap, plan.len(), &packet_bytes);
     Ok(mean)
 }
 
@@ -212,6 +304,8 @@ impl MidStrategy for SparseGd {
             &mut *ctx.shards,
             &mut *ctx.scratches,
             ctx.threads,
+            ctx.plan,
+            ctx.overlap,
             &mut *ctx.net,
         )
     }
@@ -251,6 +345,8 @@ impl MidStrategy for Dgc {
             &mut *ctx.shards,
             &mut *ctx.scratches,
             ctx.threads,
+            ctx.plan,
+            ctx.overlap,
             &mut *ctx.net,
         )
     }
@@ -437,12 +533,14 @@ impl MidStrategy for HardThreshold {
         let n = grads[0].len();
         let k_target = topk::k_of(n, self.alpha);
         let fp16 = ctx.fp16;
+        let plan = ctx.plan;
+        let overlap = ctx.overlap && !plan.is_single();
         let packet_bytes = parallel::collect_node_results(parallel::par_zip3_mut(
             ctx.threads,
             &mut self.nodes,
             &mut *ctx.shards,
             &mut *ctx.scratches,
-            |node, st, shard, sc| -> Result<usize> {
+            |node, st, shard, sc| -> Result<Vec<u64>> {
                 st.fb.accumulate(&grads[node]);
                 if st.threshold == 0.0 {
                     // Calibrate from the first post-accumulation
@@ -464,11 +562,10 @@ impl MidStrategy for HardThreshold {
                 } else if sc.idx.len() < k_target / 2 {
                     st.threshold *= 0.8;
                 }
-                let bytes = pack_values_in_place(&mut sc.vals, fp16);
-                shard.record(Kind::Values, bytes);
-                let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
-                shard.record(Kind::Indices, coded);
-                Ok(bytes + coded)
+                // The filter scan above emits ascending indices, so the
+                // plan can segment them directly.
+                plan.splits_of(&sc.idx, &mut sc.splits);
+                record_sparse_packet(n, plan, overlap, fp16, shard, sc)
             },
         ))?;
         let mut mean = vec![0.0f32; n];
@@ -477,8 +574,9 @@ impl MidStrategy for HardThreshold {
         }
         mean.iter_mut().for_each(|m| *m /= grads.len() as f32);
         // Fan-out: relay of the concatenated per-node packets (variable
-        // payloads, so this is measured per iteration).
-        ctx.net.fanout(packet_bytes.iter().map(|&b| b as u64).sum());
+        // payloads, so this is measured per iteration) — per bucket when
+        // overlapping.
+        fanout_rounds(ctx.net, overlap, plan.len(), &packet_bytes);
         Ok(mean)
     }
 }
@@ -512,7 +610,16 @@ mod tests {
         let mut scratches = Scratch::for_nodes(2);
         let mut net = NetSim::new(Default::default(), 2);
         let mean = sparse_ef_exchange(
-            &mut fbs, &grads, 0.34, false, &mut shards, &mut scratches, 1, &mut net,
+            &mut fbs,
+            &grads,
+            0.34,
+            false,
+            &mut shards,
+            &mut scratches,
+            1,
+            &BucketPlan::single(6),
+            false,
+            &mut net,
         )
         .unwrap();
         // k = ceil(0.34 * 6) = 3 coords per node transmitted; transmitted
@@ -545,7 +652,15 @@ mod tests {
                 let grads: Vec<Vec<f32>> =
                     (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
                 let mean = sparse_ef_exchange(
-                    &mut fbs, &grads, 0.05, false, &mut shards, &mut scratches, threads,
+                    &mut fbs,
+                    &grads,
+                    0.05,
+                    false,
+                    &mut shards,
+                    &mut scratches,
+                    threads,
+                    &BucketPlan::single(n),
+                    false,
                     &mut net,
                 )
                 .unwrap();
@@ -565,6 +680,53 @@ mod tests {
         for threads in [2, 4, 8] {
             assert_eq!(run(threads), base, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn bucketed_no_overlap_is_bit_identical_to_single_plan() {
+        // Any bucket plan in --no-overlap mode must reproduce the
+        // single-plan exchange exactly: mean, EF state, merged ledger,
+        // and net trace (the tentpole's §13.2 contract at strategy level).
+        let run = |plan: BucketPlan, overlap: bool| {
+            let mut rng = Rng::new(0xB0C4);
+            let (nodes, n) = (4, 600);
+            let mut fbs: Vec<FeedbackMemory> = (0..nodes)
+                .map(|_| FeedbackMemory::new(n, Correction::Momentum, 0.9))
+                .collect();
+            let mut shards = NodeLedger::for_nodes(nodes);
+            let mut scratches = Scratch::for_nodes(nodes);
+            let mut ledger = Ledger::new();
+            let mut net = NetSim::new(Default::default(), nodes);
+            let mut means = Vec::new();
+            for _ in 0..3 {
+                let grads: Vec<Vec<f32>> =
+                    (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
+                let mean = sparse_ef_exchange(
+                    &mut fbs, &grads, 0.04, false, &mut shards, &mut scratches, 1, &plan,
+                    overlap, &mut net,
+                )
+                .unwrap();
+                crate::coordinator::scheduler::close_iteration(
+                    &mut ledger,
+                    &mut shards,
+                    &mut net,
+                );
+                means.push(mean);
+            }
+            let mems: Vec<Vec<f32>> = fbs.iter().map(|f| f.memory().to_vec()).collect();
+            (means, mems, ledger.iter_bytes.clone(), ledger.total(), net.into_report())
+        };
+        let base = run(BucketPlan::single(600), false);
+        for buckets in [2usize, 5, 32] {
+            let plan = BucketPlan::from_layers(600, &[], buckets);
+            assert_eq!(run(plan, false), base, "buckets={buckets}");
+        }
+        // Overlapped mode keeps the math identical — same means, same EF
+        // state — while packet framing (per-bucket index coding) and
+        // round structure legitimately differ.
+        let over = run(BucketPlan::from_layers(600, &[], 8), true);
+        assert_eq!(over.0, base.0);
+        assert_eq!(over.1, base.1);
     }
 
     #[test]

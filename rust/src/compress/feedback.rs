@@ -90,6 +90,29 @@ impl FeedbackMemory {
         self.clear_at(&sc.idx);
     }
 
+    /// [`FeedbackMemory::select_and_clear_into`] over a bucket partition
+    /// (DESIGN.md §13.2): same global threshold, same selection, same
+    /// memory clears — bit-identical to the monolithic path — but
+    /// additionally fills `sc.splits` with per-bucket offsets so each
+    /// bucket's packet can be encoded (and shipped) independently.
+    pub fn select_and_clear_bucketed_into(
+        &mut self,
+        k: usize,
+        ranges: &[std::ops::Range<usize>],
+        sc: &mut Scratch,
+    ) {
+        topk::top_k_bucketed_into(
+            &self.v,
+            k,
+            ranges,
+            &mut sc.mags,
+            &mut sc.idx,
+            &mut sc.vals,
+            &mut sc.splits,
+        );
+        self.clear_at(&sc.idx);
+    }
+
     /// Clear given coordinates after transmitting them (CLT-k path: the
     /// index set came from the leader, not from our own top-k).
     pub fn take_at(&mut self, indices: &[u32]) -> Vec<f32> {
@@ -196,6 +219,28 @@ mod tests {
             assert_eq!(sel.indices, sc.idx);
             assert_eq!(sel.values, sc.vals);
             assert_eq!(a.memory(), b.memory());
+        }
+    }
+
+    #[test]
+    fn bucketed_select_matches_monolithic_select() {
+        let mut rng = crate::util::rng::Rng::new(29);
+        let n = 700;
+        let ranges = vec![0..100, 100..101, 101..450, 450..700];
+        let mut a = FeedbackMemory::new(n, Correction::Momentum, 0.9);
+        let mut b = a.clone();
+        let (mut sa, mut sb) = (Scratch::new(), Scratch::new());
+        for k in [1usize, 13, 200] {
+            let g = rng.normal_vec(n, 1.0);
+            a.accumulate(&g);
+            b.accumulate(&g);
+            a.select_and_clear_into(k, &mut sa);
+            b.select_and_clear_bucketed_into(k, &ranges, &mut sb);
+            assert_eq!(sa.idx, sb.idx);
+            assert_eq!(sa.vals, sb.vals);
+            assert_eq!(a.memory(), b.memory());
+            assert_eq!(sb.splits.len(), ranges.len() + 1);
+            assert_eq!(*sb.splits.last().unwrap(), sb.idx.len());
         }
     }
 

@@ -29,6 +29,13 @@ pub struct Scratch {
     pub idx: Vec<u32>,
     /// Values at `idx` (same order), or the last gathered value-vector.
     pub vals: Vec<f32>,
+    /// Cumulative per-bucket offsets into `idx`/`vals` after a bucketed
+    /// selection (`plan.len() + 1` entries, leading 0): bucket `b` owns
+    /// `idx[splits[b]..splits[b + 1]]`.  See DESIGN.md §13.
+    pub splits: Vec<usize>,
+    /// Bucket-local index staging for per-bucket index coding (global
+    /// index minus the bucket range's start).
+    pub idx_local: Vec<u32>,
     /// Index-codec state: varint staging, payload output, DEFLATE state.
     pub enc: EncScratch,
 }
@@ -66,6 +73,8 @@ impl Scratch {
             mags: Vec::new(),
             idx: Vec::new(),
             vals: Vec::new(),
+            splits: Vec::new(),
+            idx_local: Vec::new(),
             enc: EncScratch::new(),
         }
     }

@@ -89,6 +89,74 @@ pub fn top_k_into(
     threshold
 }
 
+/// [`top_k_into`] over an explicit bucket partition of `g` (DESIGN.md
+/// §13.2): the *global* threshold is computed first (node-local, O(n)),
+/// then each contiguous range is scanned independently in ascending
+/// order.  For any ascending, contiguous partition of `0..g.len()` the
+/// selected index set, its order, and the gathered values are
+/// **bit-identical** to the monolithic [`top_k_into`] — the strict pass
+/// visits indices in exactly `0..n` order either way, fewer than `k`
+/// coordinates can be strictly above the k-th magnitude, and the shared
+/// tie budget fills in the same ascending order.  This is what makes the
+/// bucketed pipeline's `--no-overlap` mode reproduce the legacy path
+/// exactly.
+///
+/// Additionally fills `splits` with cumulative per-bucket offsets
+/// (`ranges.len() + 1` entries, leading 0): bucket `b`'s selection is
+/// `indices[splits[b]..splits[b + 1]]`.
+pub fn top_k_bucketed_into(
+    g: &[f32],
+    k: usize,
+    ranges: &[std::ops::Range<usize>],
+    mags: &mut Vec<f32>,
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+    splits: &mut Vec<usize>,
+) -> f32 {
+    indices.clear();
+    values.clear();
+    splits.clear();
+    if k == 0 || g.is_empty() {
+        splits.resize(ranges.len() + 1, 0);
+        return f32::INFINITY;
+    }
+    let k = k.min(g.len());
+    let threshold = threshold_for_k_in(g, k, mags);
+    for r in ranges {
+        for i in r.clone() {
+            if g[i].abs() > threshold {
+                indices.push(i as u32);
+            }
+        }
+    }
+    // Shared tie budget, filled across buckets in ascending index order —
+    // exactly the monolithic tie pass restricted to the same walk.
+    if indices.len() < k {
+        'fill: for r in ranges {
+            for i in r.clone() {
+                if g[i].abs() == threshold {
+                    indices.push(i as u32);
+                    if indices.len() == k {
+                        break 'fill;
+                    }
+                }
+            }
+        }
+    }
+    indices.sort_unstable();
+    indices.truncate(k);
+    values.extend(indices.iter().map(|&i| g[i as usize]));
+    splits.push(0);
+    let mut pos = 0usize;
+    for r in ranges {
+        while pos < indices.len() && (indices[pos] as usize) < r.end {
+            pos += 1;
+        }
+        splits.push(pos);
+    }
+    threshold
+}
+
 /// Select the k largest-magnitude entries. Ties at the threshold are
 /// resolved by index order, and the result is always *exactly*
 /// `min(k, g.len())` entries (the paper's rate accounting assumes a fixed
@@ -204,6 +272,79 @@ mod tests {
         let g = vec![1.0, -2.0];
         let t = top_k(&g, 2);
         assert_eq!(t.indices, vec![0, 1]);
+    }
+
+    /// Random ragged partitions of `0..n`, ascending and contiguous.
+    fn random_partition(
+        rng: &mut crate::util::rng::Rng,
+        n: usize,
+        buckets: usize,
+    ) -> Vec<std::ops::Range<usize>> {
+        let b = buckets.min(n).max(1);
+        let mut cuts = vec![0usize, n];
+        while cuts.len() < b + 1 {
+            let c = 1 + rng.below(n - 1);
+            if !cuts.contains(&c) {
+                cuts.push(c);
+            }
+        }
+        cuts.sort_unstable();
+        cuts.windows(2).map(|w| w[0]..w[1]).collect()
+    }
+
+    #[test]
+    fn bucketed_selection_is_bit_identical_to_monolithic() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        let mut mags = Vec::new();
+        let (mut idx, mut vals) = (Vec::new(), Vec::new());
+        let (mut bidx, mut bvals, mut splits) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..40 {
+            let n = 64 + rng.below(2000);
+            let mut g = rng.normal_vec(n, 1.0);
+            // Force magnitude ties so the shared tie budget is exercised.
+            for _ in 0..10 {
+                let (a, b) = (rng.below(n), rng.below(n));
+                g[a] = g[b].abs();
+            }
+            let k = 1 + rng.below(n / 2 + 1);
+            let nb = 1 + rng.below(32);
+            let ranges = random_partition(&mut rng, n, nb);
+            let thr = top_k_into(&g, k, &mut mags, &mut idx, &mut vals);
+            let bthr =
+                top_k_bucketed_into(&g, k, &ranges, &mut mags, &mut bidx, &mut bvals, &mut splits);
+            assert_eq!(thr.to_bits(), bthr.to_bits());
+            assert_eq!(idx, bidx);
+            assert_eq!(vals, bvals);
+            // splits tile the selection and respect bucket bounds.
+            assert_eq!(splits.len(), ranges.len() + 1);
+            assert_eq!(*splits.last().unwrap(), bidx.len());
+            for (b, r) in ranges.iter().enumerate() {
+                for &i in &bidx[splits[b]..splits[b + 1]] {
+                    assert!(r.contains(&(i as usize)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bucketed_selection_degenerate_inputs() {
+        let (mut mags, mut idx, mut vals, mut splits) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let thr = top_k_bucketed_into(&[], 3, &[0..0], &mut mags, &mut idx, &mut vals, &mut splits);
+        assert_eq!(thr, f32::INFINITY);
+        assert!(idx.is_empty());
+        assert_eq!(splits, vec![0, 0]);
+        let thr = top_k_bucketed_into(
+            &[1.0, -2.0],
+            0,
+            &[0..1, 1..2],
+            &mut mags,
+            &mut idx,
+            &mut vals,
+            &mut splits,
+        );
+        assert_eq!(thr, f32::INFINITY);
+        assert_eq!(splits, vec![0, 0, 0]);
     }
 }
 

@@ -172,6 +172,19 @@ pub struct TrainConfig {
     /// `nodes` are ignored.
     pub straggler_spec: Vec<(usize, f64)>,
     pub verbose: bool,
+    /// Bucketed pipeline (DESIGN.md §13): split the mid group into ~this
+    /// many contiguous buckets cut at layer boundaries.  1 = the legacy
+    /// monolithic exchange.  Only the dense baseline and the sparse-EF
+    /// family bucket; other methods keep a single-bucket plan.
+    pub buckets: usize,
+    /// Alternative bucket policy: target dense bucket size in bytes
+    /// (0 = off; wins over `buckets` when set).
+    pub bucket_bytes: usize,
+    /// Overlap the exchange of bucket *i* with the encode of bucket
+    /// *i+1* (default).  `--no-overlap` serializes encode-then-exchange,
+    /// which is bit-identical — curves, ledgers, net traces — to the
+    /// unbucketed path for any bucket count.
+    pub overlap: bool,
     /// Exchange backend: simulated (default) or real sockets.  The sim
     /// path is the bit-exactness reference; `Tcp` must reproduce its
     /// ledgers and curves byte-for-byte (tests/tcp_e2e.rs).
@@ -212,6 +225,9 @@ impl Default for TrainConfig {
             latency_s: 50e-6,
             straggler_spec: Vec::new(),
             verbose: false,
+            buckets: 1,
+            bucket_bytes: 0,
+            overlap: true,
             transport: TransportKind::Sim,
             checkpoint: None,
         }
@@ -296,6 +312,11 @@ impl TrainConfig {
                 .unwrap_or_else(|| panic!("bad --straggler {s:?} (e.g. 2.5 or 0:2,3:1.5)"));
         }
         c.verbose = a.has("verbose");
+        c.buckets = a.usize("buckets", c.buckets);
+        c.bucket_bytes = a.usize("bucket-bytes", c.bucket_bytes);
+        if a.has("no-overlap") {
+            c.overlap = false;
+        }
         if let Some(t) = a.opt_str("transport") {
             c.transport = TransportKind::parse(&t)
                 .unwrap_or_else(|| panic!("bad --transport {t:?} (sim|tcp)"));
@@ -367,5 +388,23 @@ mod tests {
         assert_eq!(c.model, "resnet_mini");
         assert_eq!(c.method, Method::Dgc);
         assert_eq!(c.steps, 7);
+    }
+
+    #[test]
+    fn bucket_flags_parse() {
+        let c = TrainConfig::default();
+        assert_eq!((c.buckets, c.bucket_bytes, c.overlap), (1, 0, true));
+        let a = Args::parse(
+            ["--buckets", "8", "--bucket-bytes", "4096", "--no-overlap"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["buckets", "bucket-bytes"],
+            &["no-overlap"],
+        )
+        .unwrap();
+        let c = TrainConfig::from_args(&a);
+        assert_eq!(c.buckets, 8);
+        assert_eq!(c.bucket_bytes, 4096);
+        assert!(!c.overlap);
     }
 }

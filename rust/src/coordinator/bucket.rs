@@ -1,0 +1,260 @@
+//! Bucket plans for the pipelined execution path (DESIGN.md §13).
+//!
+//! A [`BucketPlan`] partitions a flat gradient group into contiguous,
+//! ascending ranges ("buckets") derived from the manifest's layer
+//! boundaries.  Buckets are the unit of the overlap pipeline: bucket *i*
+//! encodes independently of bucket *i+1* (the per-node selection shares
+//! one global top-k threshold, so the bucketed selection is bit-identical
+//! to the monolithic one for *any* partition — see
+//! [`crate::compress::topk::top_k_bucketed_into`]), and in `--overlap`
+//! mode the exchange of bucket *i* runs while bucket *i+1* is still
+//! encoding ([`crate::coordinator::scheduler::bucket_task_graph`]).
+//!
+//! Policy (`TrainConfig`):
+//!
+//! * `--buckets N`      — split the mid group into ~N buckets, cutting at
+//!   the layer boundary nearest each ideal cut when one is close enough,
+//!   else mid-layer (large layers are split rather than inflating a
+//!   bucket to several times the target size);
+//! * `--bucket-bytes B` — derive N from the group's dense byte size;
+//! * neither            — one bucket, the legacy monolithic path.
+//!
+//! The plan is a pure function of `(group length, layer boundaries,
+//! config)`, so the simulator, the TCP coordinator, and every worker
+//! process derive the *same* plan independently — nothing about it is
+//! ever negotiated on the wire beyond the config blob.
+
+use std::ops::Range;
+
+use crate::config::{Method, TrainConfig};
+
+/// Methods whose mid-group exchange supports bucketed execution: the
+/// dense baseline and the sparse-EF family, whose selections decompose
+/// exactly across contiguous ranges.  ScaleCom's leader support,
+/// QSGD's bucket-quantized stream, and LGC's AE latents are monolithic
+/// payloads, so those methods always run a single-bucket plan
+/// (DESIGN.md §13.4).
+pub fn method_bucketable(m: Method) -> bool {
+    matches!(
+        m,
+        Method::Baseline | Method::SparseGd | Method::Dgc | Method::Threshold
+    )
+}
+
+/// A contiguous, ascending partition of `0..n` into buckets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketPlan {
+    ranges: Vec<Range<usize>>,
+}
+
+impl BucketPlan {
+    /// The legacy plan: one bucket covering the whole group.
+    pub fn single(n: usize) -> BucketPlan {
+        BucketPlan { ranges: vec![0..n] }
+    }
+
+    /// Partition `0..n` into ~`buckets` ranges, snapping each ideal cut
+    /// (`i * n / buckets`) to the nearest layer boundary when one lies
+    /// within half a bucket of it.  `layers` are the group's contiguous
+    /// per-layer ranges ([`crate::model::Model::layer_slices`]); passing
+    /// an empty slice degrades to an even split.  Deterministic integer
+    /// arithmetic only.
+    pub fn from_layers(n: usize, layers: &[Range<usize>], buckets: usize) -> BucketPlan {
+        if buckets <= 1 || n <= 1 {
+            return BucketPlan::single(n);
+        }
+        let b = buckets.min(n);
+        let target = n / b;
+        let bounds: Vec<usize> =
+            layers.iter().map(|r| r.end).filter(|&e| e > 0 && e < n).collect();
+        let mut cuts = Vec::with_capacity(b + 1);
+        cuts.push(0usize);
+        for i in 1..b {
+            let ideal = i * n / b;
+            let diff = |e: usize| if e > ideal { e - ideal } else { ideal - e };
+            let cut = bounds
+                .iter()
+                .copied()
+                .min_by_key(|&e| diff(e))
+                .filter(|&e| diff(e) * 2 <= target)
+                .unwrap_or(ideal);
+            if cut > *cuts.last().unwrap() && cut < n {
+                cuts.push(cut);
+            }
+        }
+        cuts.push(n);
+        BucketPlan { ranges: cuts.windows(2).map(|w| w[0]..w[1]).collect() }
+    }
+
+    /// The configured plan for a group of `n` coordinates with the given
+    /// layer boundaries: `--bucket-bytes` wins over `--buckets`; both
+    /// default to the single-bucket legacy plan.
+    pub fn for_group(n: usize, layers: &[Range<usize>], cfg: &TrainConfig) -> BucketPlan {
+        let buckets = if cfg.bucket_bytes > 0 {
+            ((n * 4 + cfg.bucket_bytes - 1) / cfg.bucket_bytes).max(1)
+        } else {
+            cfg.buckets.max(1)
+        };
+        BucketPlan::from_layers(n, layers, buckets)
+    }
+
+    /// Number of buckets.
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// True for the legacy single-bucket plan.
+    pub fn is_single(&self) -> bool {
+        self.ranges.len() <= 1
+    }
+
+    /// Never true — a plan always holds at least one (possibly empty)
+    /// range.
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    /// Total coordinates covered (`n`).
+    pub fn total(&self) -> usize {
+        self.ranges.last().map(|r| r.end).unwrap_or(0)
+    }
+
+    /// All bucket ranges, ascending and contiguous.
+    pub fn ranges(&self) -> &[Range<usize>] {
+        &self.ranges
+    }
+
+    /// Range of bucket `b` (panics if out of plan — wire-facing callers
+    /// must go through [`BucketPlan::check_bucket`] first).
+    pub fn range(&self, b: usize) -> Range<usize> {
+        self.ranges[b].clone()
+    }
+
+    /// Wire-facing bounds check: a descriptive error instead of an index
+    /// panic for an out-of-plan bucket id.
+    pub fn check_bucket(&self, b: usize) -> anyhow::Result<Range<usize>> {
+        self.ranges.get(b).cloned().ok_or_else(|| {
+            anyhow::anyhow!(
+                "bucket id {b} out of plan bounds (plan has {} buckets over {} coords)",
+                self.ranges.len(),
+                self.total()
+            )
+        })
+    }
+
+    /// Split an ascending global index list into per-bucket segments:
+    /// fills `splits` with cumulative offsets (`len() + 1` entries,
+    /// leading 0), so bucket `b`'s entries are `idx[splits[b]..splits[b+1]]`.
+    pub fn splits_of(&self, idx: &[u32], splits: &mut Vec<usize>) {
+        splits.clear();
+        splits.push(0);
+        let mut pos = 0usize;
+        for r in &self.ranges {
+            while pos < idx.len() && (idx[pos] as usize) < r.end {
+                pos += 1;
+            }
+            splits.push(pos);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiles(plan: &BucketPlan, n: usize) {
+        let rs = plan.ranges();
+        assert_eq!(rs.first().unwrap().start, 0);
+        assert_eq!(rs.last().unwrap().end, n);
+        for w in rs.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "{rs:?}");
+        }
+    }
+
+    #[test]
+    fn single_covers_everything() {
+        let p = BucketPlan::single(10);
+        assert!(p.is_single());
+        assert_eq!(p.total(), 10);
+        tiles(&p, 10);
+    }
+
+    #[test]
+    fn even_split_without_layers() {
+        let p = BucketPlan::from_layers(100, &[], 4);
+        assert_eq!(p.len(), 4);
+        tiles(&p, 100);
+        assert_eq!(p.ranges(), &[0..25, 25..50, 50..75, 75..100]);
+    }
+
+    #[test]
+    fn cuts_snap_to_nearby_layer_boundaries() {
+        // Layers end at 24, 52, 75; ideal cuts 25/50/75 all snap.
+        let layers = vec![0..24, 24..52, 52..75, 75..100];
+        let p = BucketPlan::from_layers(100, &layers, 4);
+        assert_eq!(p.ranges(), &[0..24, 24..52, 52..75, 75..100]);
+    }
+
+    #[test]
+    fn oversized_layer_is_split_mid_layer() {
+        // One huge layer: no boundary near the ideal cuts, so they stay
+        // at the even positions instead of collapsing buckets.
+        let layers = vec![0..97, 97..100];
+        let p = BucketPlan::from_layers(100, &layers, 4);
+        assert_eq!(p.len(), 4);
+        tiles(&p, 100);
+        assert_eq!(p.ranges()[0], 0..25);
+    }
+
+    #[test]
+    fn buckets_clamp_to_len_and_degenerate_inputs() {
+        assert_eq!(BucketPlan::from_layers(3, &[], 8).len(), 3);
+        assert!(BucketPlan::from_layers(0, &[], 8).is_single());
+        assert!(BucketPlan::from_layers(50, &[], 1).is_single());
+        assert!(BucketPlan::from_layers(1, &[], 5).is_single());
+    }
+
+    #[test]
+    fn bucket_bytes_policy_derives_count() {
+        let cfg = TrainConfig { bucket_bytes: 100, ..Default::default() };
+        // 100 coords * 4 B = 400 B => 4 buckets of <= 100 B.
+        let p = BucketPlan::for_group(100, &[], &cfg);
+        assert_eq!(p.len(), 4);
+        let cfg = TrainConfig { buckets: 5, ..Default::default() };
+        assert_eq!(BucketPlan::for_group(100, &[], &cfg).len(), 5);
+        let cfg = TrainConfig::default();
+        assert!(BucketPlan::for_group(100, &[], &cfg).is_single());
+    }
+
+    #[test]
+    fn check_bucket_rejects_out_of_plan_ids() {
+        let p = BucketPlan::from_layers(10, &[], 2);
+        assert!(p.check_bucket(1).is_ok());
+        let err = p.check_bucket(7).unwrap_err().to_string();
+        assert!(err.contains("bucket id 7"), "{err}");
+    }
+
+    #[test]
+    fn splits_partition_ascending_indices() {
+        let p = BucketPlan::from_layers(10, &[], 3); // 0..3, 3..6, 6..10
+        let mut splits = Vec::new();
+        p.splits_of(&[0, 2, 5, 6, 9], &mut splits);
+        assert_eq!(splits, vec![0, 2, 3, 5]);
+        p.splits_of(&[], &mut splits);
+        assert_eq!(splits, vec![0, 0, 0, 0]);
+        p.splits_of(&[7, 8], &mut splits);
+        assert_eq!(splits, vec![0, 0, 0, 2]);
+    }
+
+    #[test]
+    fn bucketable_methods_are_the_sparse_ef_family_plus_dense() {
+        assert!(method_bucketable(Method::Baseline));
+        assert!(method_bucketable(Method::SparseGd));
+        assert!(method_bucketable(Method::Dgc));
+        assert!(method_bucketable(Method::Threshold));
+        assert!(!method_bucketable(Method::ScaleCom));
+        assert!(!method_bucketable(Method::Qsgd));
+        assert!(!method_bucketable(Method::LgcPs));
+        assert!(!method_bucketable(Method::LgcRar));
+    }
+}

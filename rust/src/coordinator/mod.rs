@@ -20,6 +20,7 @@
 //!   mid layers  — the selected [`MidStrategy`] (baselines or LGC)
 //!   last layer  — dense for Baseline/QSGD; top-k + EF for sparse methods
 
+pub mod bucket;
 pub mod lgc;
 pub mod parallel;
 pub mod remote;
@@ -32,17 +33,18 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::baselines::{
-    dense_mean_accounted, Baseline, Dgc, ExchangeCtx, HardThreshold, MidStrategy, Qsgd,
-    ScaleCom, SparseGd,
+    dense_mean_accounted, sparse_ef_exchange, Baseline, Dgc, ExchangeCtx, HardThreshold,
+    MidStrategy, Qsgd, ScaleCom, SparseGd,
 };
-use crate::compress::{index_coding, topk, Correction, FeedbackMemory, Scratch};
+use crate::compress::{Correction, FeedbackMemory, Scratch};
 use crate::config::{Method, TrainConfig, TransportKind};
 use crate::data::{self, Dataset};
-use crate::metrics::{Kind, Ledger, NodeLedger};
+use crate::metrics::{Ledger, NodeLedger};
 use crate::model::{Group, Model};
 use crate::net::{LinkModel, NetReport, NetSim};
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
+use bucket::{method_bucketable, BucketPlan};
 use scheduler::{phase_and_alpha, Phase};
 
 /// Step LR decay mirroring the paper's schedule ("initial learning rate of
@@ -200,6 +202,15 @@ pub struct Trainer<'e> {
     /// their high-water mark in the first iterations and the steady state
     /// allocates nothing on the encode path.
     arenas: Vec<Scratch>,
+    /// Mid-group bucket plan (DESIGN.md §13): layer-boundary-derived
+    /// contiguous ranges for bucketable methods, single-bucket otherwise.
+    plan: BucketPlan,
+    /// Last-group plan: always single-bucket (the classifier head is
+    /// small; bucketing it would buy nothing and complicate the wire
+    /// ledger contract).
+    last_plan: BucketPlan,
+    /// Effective overlap mode: `cfg.overlap` and a real multi-bucket plan.
+    overlap: bool,
     rng: Rng,
 }
 
@@ -231,14 +242,42 @@ impl<'e> Trainer<'e> {
             .map(|_| FeedbackMemory::new(n_last, last_correction, cfg.momentum))
             .collect();
         let arenas = Scratch::for_nodes(cfg.nodes);
+        // Bucket plan over the mid group's layer boundaries (§13); the
+        // same pure derivation runs in the TCP coordinator and in every
+        // worker process, so no plan negotiation happens on the wire.
+        let plan = if method_bucketable(cfg.method) {
+            let layers: Vec<std::ops::Range<usize>> =
+                model.layer_slices(Group::Mid).into_iter().map(|(_, r)| r).collect();
+            BucketPlan::for_group(n_mid, &layers, &cfg)
+        } else {
+            BucketPlan::single(n_mid)
+        };
+        let overlap = cfg.overlap && !plan.is_single();
+        let last_plan = BucketPlan::single(n_last);
         let rng = Rng::new(cfg.seed ^ 0x7124);
-        Ok(Trainer { engine, cfg, model, dataset, strategy, last_fbs, arenas, rng })
+        Ok(Trainer {
+            engine,
+            cfg,
+            model,
+            dataset,
+            strategy,
+            last_fbs,
+            arenas,
+            plan,
+            last_plan,
+            overlap,
+            rng,
+        })
     }
 
     /// Last-layer exchange: dense for Baseline/QSGD (and everyone's dense
     /// phase), top-k + EF otherwise (§VI-A: "top-magnitude values ...
-    /// without further compression").  The per-node EF + selection +
-    /// encoding stage fans out; the scatter-mean is the barrier.
+    /// without further compression").  The sparse branch routes through
+    /// the same [`sparse_ef_exchange`] machinery as SparseGd/Dgc — one
+    /// owner of the EF -> select -> encode -> scatter-mean sequence
+    /// instead of a duplicated copy here — always on the single-bucket
+    /// last-group plan, with value payloads at full precision (the
+    /// paper's "without further compression").
     fn last_exchange(
         &mut self,
         phase: Phase,
@@ -247,7 +286,6 @@ impl<'e> Trainer<'e> {
         net: &mut NetSim,
     ) -> Result<Vec<f32>> {
         let n = grads[0].len();
-        let nodes = grads.len();
         let dense = matches!(self.cfg.method, Method::Baseline | Method::Qsgd)
             || phase == Phase::Dense;
         if dense {
@@ -255,30 +293,18 @@ impl<'e> Trainer<'e> {
             net.fanout((n * 4) as u64);
             return Ok(mean);
         }
-        let k_sel = topk::k_of(n, self.cfg.alpha);
-        let packet_bytes = parallel::collect_node_results(parallel::par_zip3_mut(
-            self.cfg.threads,
+        sparse_ef_exchange(
             &mut self.last_fbs,
+            grads,
+            self.cfg.alpha,
+            false,
             shards,
             &mut self.arenas,
-            |node, fb, shard, sc| -> Result<usize> {
-                fb.accumulate(&grads[node]);
-                fb.select_and_clear_into(k_sel, sc);
-                shard.record(Kind::Values, sc.vals.len() * 4);
-                let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
-                shard.record(Kind::Indices, coded);
-                Ok(sc.vals.len() * 4 + coded)
-            },
-        ))?;
-        let mut mean = vec![0.0f32; n];
-        for sc in &self.arenas {
-            topk::scatter_add(&mut mean, &sc.idx, &sc.vals);
-        }
-        mean.iter_mut().for_each(|m| *m /= nodes as f32);
-        // Fan-out: relay of the concatenated per-node sparse packets
-        // (DESIGN.md §11).
-        net.fanout(packet_bytes.iter().map(|&b| b as u64).sum());
-        Ok(mean)
+            self.cfg.threads,
+            &self.last_plan,
+            false,
+            net,
+        )
     }
 
     /// Run the full training loop.
@@ -365,6 +391,8 @@ impl<'e> Trainer<'e> {
                     threads,
                     scratches: &mut self.arenas,
                     net: &mut net,
+                    plan: &self.plan,
+                    overlap: self.overlap,
                 };
                 self.strategy.exchange(&mut ctx, &mid_g)?
             };
@@ -382,30 +410,10 @@ impl<'e> Trainer<'e> {
                 lr_at(&self.cfg, it),
             );
             time_update += t_up0.elapsed();
-            // Feed each node's pending shard payloads into the fabric's
-            // fan-in round (node-local uplinks pipeline per node; cross-
-            // node they run concurrently), then close the fabric
-            // iteration.  Must precede `merge_shards`, which drains the
-            // shards; same ascending-node order, so modeled times inherit
-            // the §6.5 thread-invariance.  Shard-recorded one-offs (none
-            // on today's strategy paths) close as a flagged setup round,
-            // keeping the steady-state time and byte views mirrored.
-            if shards.iter().any(|s| s.pending_oneoff().0 > 0) {
-                for shard in shards.iter() {
-                    let (msgs, bytes) = shard.pending_oneoff();
-                    net.send_many(shard.node(), msgs, bytes);
-                }
-                net.barrier_oneoff();
-            }
-            for shard in shards.iter() {
-                let (msgs, bytes) = shard.pending_recurring();
-                net.send_many(shard.node(), msgs, bytes);
-            }
-            net.end_iteration();
-            // Deterministic shard merge (ascending node order), then close
-            // the iteration's accounting window.
-            ledger.merge_shards(&mut shards);
-            ledger.end_iteration();
+            // Close the iteration through the scheduler — the single
+            // owner of the close-out sequence (fan-in round, shard merge,
+            // iteration boundaries) shared with the TCP coordinator.
+            scheduler::close_iteration(&mut ledger, &mut shards, &mut net);
 
             let dt = t0.elapsed();
             phase_time[phase.index()] += dt;

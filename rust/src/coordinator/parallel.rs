@@ -5,7 +5,10 @@
 //! updates, top-k selection, payload encoding — is independent across
 //! nodes by construction, so it fans out here; the *exchange* steps (PS
 //! gather, ring reduce-scatter/allgather, leader broadcasts) remain
-//! sequential barriers in the caller (DESIGN.md §6.5).
+//! sequential barriers in the caller (DESIGN.md §6.5).  This module holds
+//! no per-iteration ordering of its own: which encode/exchange runs when
+//! is owned solely by [`crate::coordinator::scheduler::bucket_task_graph`]
+//! and [`crate::coordinator::scheduler::close_iteration`] (DESIGN.md §13).
 //!
 //! Determinism contract: every helper returns results indexed by node,
 //! each node's closure sees only that node's `&mut` state (enforced by

@@ -36,19 +36,20 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::baselines::dense_mean_accounted;
+use crate::baselines::{dense_mean_accounted, fanout_rounds};
 use crate::compress::autoencoder::{AeCompressor, Pattern};
 use crate::compress::{index_coding, topk, Scratch};
 use crate::config::{Method, TrainConfig};
+use crate::coordinator::bucket::{method_bucketable, BucketPlan};
 use crate::coordinator::lgc::{clip_to_gradient_scale, ef_on_rec, innovation_into, AE_GATE_WINDOW};
-use crate::coordinator::scheduler::{phase_and_alpha, Phase};
+use crate::coordinator::scheduler::{self, phase_and_alpha, Phase};
 use crate::coordinator::{lr_at, ring, CurvePoint, TrainResult};
 use crate::data::{self, Dataset};
 use crate::metrics::{Kind, Ledger, NodeLedger};
 use crate::model::{Group, Model};
 use crate::net::NetSim;
 use crate::runtime::{Engine, ModelMeta};
-use crate::transport::{accept_workers, Conn, LastUp, Listener, MidUp, Msg, RejectorGuard};
+use crate::transport::{accept_workers, BucketUp, Conn, LastUp, Listener, MidUp, Msg, RejectorGuard};
 use crate::util::rng::Rng;
 
 /// Methods the wire transport supports (the others error loudly; see
@@ -278,6 +279,9 @@ struct Up {
     mid: MidUp,
     last: LastUp,
     ctrl_mid: Option<Vec<f32>>,
+    /// GradientBucket frames streamed ahead of the closing Gradient
+    /// (overlap pipeline); bucket ids validated + deduped at receive.
+    buckets: Vec<(u32, BucketUp)>,
 }
 
 /// The multi-process training session: K worker connections plus the
@@ -294,6 +298,11 @@ struct Coordinator<'e> {
     lgc: Option<LgcMirror>,
     n_mid: usize,
     n_last: usize,
+    /// Mid-group bucket plan — same (cfg, layer-slice) derivation as the
+    /// workers' and the sim Trainer's, so all three agree frame-for-frame.
+    plan: BucketPlan,
+    /// Effective overlap: configured on *and* the plan actually splits.
+    overlap: bool,
 }
 
 impl<'e> Coordinator<'e> {
@@ -334,7 +343,28 @@ impl<'e> Coordinator<'e> {
             _ => None,
         };
         let rng = Rng::new(cfg.seed ^ 0x7124);
-        Ok(Coordinator { engine, cfg, meta, conns, model, dataset, rng, lgc, n_mid, n_last })
+        let plan = if method_bucketable(cfg.method) {
+            let layers: Vec<std::ops::Range<usize>> =
+                model.layer_slices(Group::Mid).into_iter().map(|(_, r)| r).collect();
+            BucketPlan::for_group(n_mid, &layers, &cfg)
+        } else {
+            BucketPlan::single(n_mid)
+        };
+        let overlap = cfg.overlap && !plan.is_single();
+        Ok(Coordinator {
+            engine,
+            cfg,
+            meta,
+            conns,
+            model,
+            dataset,
+            rng,
+            lgc,
+            n_mid,
+            n_last,
+            plan,
+            overlap,
+        })
     }
 
     fn broadcast_best_effort(&mut self, msg: &Msg) {
@@ -415,26 +445,52 @@ impl<'e> Coordinator<'e> {
         Ok(coded)
     }
 
-    /// Receive each node's gradient uplink, in node order.
+    /// Receive each node's gradient uplink, in node order.  Overlapped
+    /// runs stream [`Msg::GradientBucket`] frames first; bucket ids are
+    /// validated against the plan *here* — an out-of-plan or duplicate id
+    /// gets a descriptive [`Msg::Error`] frame back, never an index panic
+    /// downstream in the replay.
     fn recv_gradients(&mut self, it: usize) -> Result<Vec<Up>> {
         let mut ups = Vec::with_capacity(self.conns.len());
         for node in 0..self.conns.len() {
-            match self.conns[node]
-                .expect("Gradient")
-                .with_context(|| format!("node {node} at iter {it}"))?
-            {
-                Msg::Gradient { iter, loss, acc, first, mid, last, ctrl_mid } => {
-                    ensure!(
-                        iter as usize == it,
-                        "protocol desync: Gradient from node {node} for iter {iter}, expected {it}"
-                    );
-                    ensure!(
-                        first.len() == self.meta.group_len(&self.meta.first_param_idx),
-                        "node {node} sent a first-group gradient of wrong length"
-                    );
-                    ups.push(Up { loss, acc, first, mid, last, ctrl_mid });
+            let mut buckets: Vec<(u32, BucketUp)> = Vec::new();
+            loop {
+                match self.conns[node]
+                    .expect("Gradient")
+                    .with_context(|| format!("node {node} at iter {it}"))?
+                {
+                    Msg::GradientBucket { iter, bucket, up } => {
+                        ensure!(
+                            iter as usize == it,
+                            "protocol desync: GradientBucket from node {node} for iter {iter}, \
+                             expected {it}"
+                        );
+                        if let Err(e) = self.plan.check_bucket(bucket as usize) {
+                            let msg = format!("node {node} at iter {it}: {e}");
+                            return Err(reject(&mut self.conns[node], msg));
+                        }
+                        if buckets.iter().any(|(b, _)| *b == bucket) {
+                            let msg =
+                                format!("node {node} at iter {it}: duplicate bucket id {bucket}");
+                            return Err(reject(&mut self.conns[node], msg));
+                        }
+                        buckets.push((bucket, up));
+                    }
+                    Msg::Gradient { iter, loss, acc, first, mid, last, ctrl_mid } => {
+                        ensure!(
+                            iter as usize == it,
+                            "protocol desync: Gradient from node {node} for iter {iter}, \
+                             expected {it}"
+                        );
+                        ensure!(
+                            first.len() == self.meta.group_len(&self.meta.first_param_idx),
+                            "node {node} sent a first-group gradient of wrong length"
+                        );
+                        ups.push(Up { loss, acc, first, mid, last, ctrl_mid, buckets });
+                        break;
+                    }
+                    other => bail!("expected Gradient from node {node}, got {}", other.name()),
                 }
-                other => bail!("expected Gradient from node {node}, got {}", other.name()),
             }
         }
         Ok(ups)
@@ -574,21 +630,9 @@ impl<'e> Coordinator<'e> {
             );
             time_update += t_up0.elapsed();
 
-            // Fabric + ledger close-out, verbatim from Trainer::run.
-            if shards.iter().any(|s| s.pending_oneoff().0 > 0) {
-                for shard in shards.iter() {
-                    let (msgs, bytes) = shard.pending_oneoff();
-                    net.send_many(shard.node(), msgs, bytes);
-                }
-                net.barrier_oneoff();
-            }
-            for shard in shards.iter() {
-                let (msgs, bytes) = shard.pending_recurring();
-                net.send_many(shard.node(), msgs, bytes);
-            }
-            net.end_iteration();
-            ledger.merge_shards(&mut shards);
-            ledger.end_iteration();
+            // Fabric + ledger close-out — the scheduler owns the one
+            // sequence both transports run (DESIGN.md §13).
+            scheduler::close_iteration(&mut ledger, &mut shards, &mut net);
 
             let dt = t0.elapsed();
             phase_time[phase.index()] += dt;
@@ -662,16 +706,36 @@ impl<'e> Coordinator<'e> {
         let n = self.n_mid;
         match self.cfg.method {
             Method::Baseline => {
+                if self.overlap {
+                    let mut mids = Vec::with_capacity(nodes);
+                    for node in 0..nodes {
+                        mids.push(self.dense_from_buckets(node, &mut ups[node])?);
+                    }
+                    let mean = dense_mean_accounted(&mids, shards);
+                    // Per-bucket tagged fan-out rounds — byte-for-byte the
+                    // sim Baseline's overlapped pricing.
+                    let per_bucket: Vec<u64> = self
+                        .plan
+                        .ranges()
+                        .iter()
+                        .map(|r| ((r.end - r.start) * 4) as u64)
+                        .collect();
+                    fanout_rounds(net, true, self.plan.len(), &[per_bucket]);
+                    return Ok(mean);
+                }
                 let mids = take_dense_mids(ups)?;
                 let mean = dense_mean_accounted(&mids, shards);
                 net.fanout((mean.len() * 4) as u64);
                 Ok(mean)
             }
             Method::SparseGd | Method::Dgc | Method::Threshold => {
+                let fp16 = self.cfg.fp16_values;
+                if self.overlap {
+                    return self.sparse_bucket_replay(ups, fp16, shards, net);
+                }
                 // Mirror of baselines::sparse_ef_exchange / HardThreshold:
                 // per-node Values+Indices records, scatter-mean in node
                 // order, one fan-out of the concatenated packets.
-                let fp16 = self.cfg.fp16_values;
                 let mut mean = vec![0.0f32; n];
                 let mut total = 0u64;
                 for (node, up) in ups.iter().enumerate() {
@@ -721,6 +785,121 @@ impl<'e> Coordinator<'e> {
             }
             Method::ScaleCom | Method::Qsgd => unreachable!("gated in gate_method"),
         }
+    }
+
+    /// Reassemble a node's streamed dense bucket frames into the full mid
+    /// vector (overlapped Baseline).  Ids were validated and deduped at
+    /// receive; completeness and per-bucket lengths are checked here, and
+    /// every failure sends the worker a descriptive [`Msg::Error`] frame.
+    fn dense_from_buckets(&mut self, node: usize, up: &mut Up) -> Result<Vec<f32>> {
+        let b_count = self.plan.len();
+        let MidUp::Buckets(nb) = up.mid else {
+            bail!("node {node} sent {} on the overlapped dense path", up.mid.name())
+        };
+        if nb as usize != b_count || up.buckets.len() != b_count {
+            let msg = format!(
+                "node {node}: bucketed upload announced {nb} buckets, streamed {}, plan has \
+                 {b_count}",
+                up.buckets.len()
+            );
+            return Err(reject(&mut self.conns[node], msg));
+        }
+        let mut full = vec![0.0f32; self.n_mid];
+        for (b, bu) in std::mem::take(&mut up.buckets) {
+            let range = self.plan.range(b as usize);
+            let BucketUp::Dense(v) = bu else {
+                let msg =
+                    format!("node {node}: bucket {b} carried a sparse payload on a dense path");
+                return Err(reject(&mut self.conns[node], msg));
+            };
+            if v.len() != range.end - range.start {
+                let msg = format!(
+                    "node {node}: bucket {b} has {} values for a range of {}",
+                    v.len(),
+                    range.end - range.start
+                );
+                return Err(reject(&mut self.conns[node], msg));
+            }
+            full[range].copy_from_slice(&v);
+        }
+        Ok(full)
+    }
+
+    /// Overlapped sparse-EF replay: per node, decode each bucket-local
+    /// packet, record per-bucket Values/Indices in bucket order, scatter
+    /// into the mean, then price per-bucket tagged fan-out rounds —
+    /// exactly `baselines::record_sparse_packet` + `fanout_rounds` in the
+    /// sim.  Out-of-plan ranges reject with an [`Msg::Error`] frame.
+    fn sparse_bucket_replay(
+        &mut self,
+        ups: &mut [Up],
+        fp16: bool,
+        shards: &mut [NodeLedger],
+        net: &mut NetSim,
+    ) -> Result<Vec<f32>> {
+        let nodes = ups.len();
+        let b_count = self.plan.len();
+        let mut mean = vec![0.0f32; self.n_mid];
+        let mut per_node: Vec<Vec<u64>> = Vec::with_capacity(nodes);
+        for (node, up) in ups.iter_mut().enumerate() {
+            let MidUp::Buckets(nb) = up.mid else {
+                bail!("node {node} sent {} on the overlapped sparse path", up.mid.name())
+            };
+            if nb as usize != b_count || up.buckets.len() != b_count {
+                let msg = format!(
+                    "node {node}: bucketed upload announced {nb} buckets, streamed {}, plan has \
+                     {b_count}",
+                    up.buckets.len()
+                );
+                return Err(reject(&mut self.conns[node], msg));
+            }
+            let mut frames: Vec<Option<BucketUp>> = vec![None; b_count];
+            for (b, bu) in std::mem::take(&mut up.buckets) {
+                frames[b as usize] = Some(bu);
+            }
+            let mut bytes_b = Vec::with_capacity(b_count);
+            for (b, frame) in frames.into_iter().enumerate() {
+                let range = self.plan.range(b);
+                let width = range.end - range.start;
+                // Valid + deduped ids and an exact count make every slot
+                // Some; keep the reject path anyway (no panics on replay).
+                let Some(BucketUp::Sparse { coded_idx, vals }) = frame else {
+                    let msg = format!(
+                        "node {node}: bucket {b} carried a dense payload on a sparse path"
+                    );
+                    return Err(reject(&mut self.conns[node], msg));
+                };
+                let idx = match index_coding::decode(&coded_idx, width) {
+                    Ok(i) => i,
+                    Err(e) => {
+                        let msg = format!(
+                            "node {node}: bucket {b} indices failed to decode over its range \
+                             of {width}: {e:#}"
+                        );
+                        return Err(reject(&mut self.conns[node], msg));
+                    }
+                };
+                if idx.len() != vals.len() {
+                    let msg = format!(
+                        "node {node}: bucket {b} has {} indices vs {} values",
+                        idx.len(),
+                        vals.len()
+                    );
+                    return Err(reject(&mut self.conns[node], msg));
+                }
+                let bytes = vals.len() * if fp16 { 2 } else { 4 };
+                shards[node].record(Kind::Values, bytes);
+                shards[node].record(Kind::Indices, coded_idx.len());
+                bytes_b.push((bytes + coded_idx.len()) as u64);
+                let global: Vec<u32> =
+                    idx.iter().map(|&i| i + range.start as u32).collect();
+                topk::scatter_add(&mut mean, &global, &vals);
+            }
+            per_node.push(bytes_b);
+        }
+        mean.iter_mut().for_each(|m| *m /= nodes as f32);
+        fanout_rounds(net, true, b_count, &per_node);
+        Ok(mean)
     }
 
     /// Mirror of the support half of `LgcCommon::leader_support_inner`
@@ -982,6 +1161,15 @@ impl<'e> Coordinator<'e> {
         let n = self.cfg.eval_batches as f32;
         Ok((l / n, a / n))
     }
+}
+
+/// Send a descriptive [`Msg::Error`] frame to the offending worker
+/// (best-effort) and return the same text as the coordinator-side error —
+/// the wire rejection path for malformed bucketed uploads (never a
+/// panic).
+fn reject(conn: &mut Conn, msg: String) -> anyhow::Error {
+    let _ = conn.send(&Msg::Error { msg: msg.clone() });
+    anyhow::anyhow!(msg)
 }
 
 /// Extract dense mid payloads from every node (dense phases).

@@ -10,8 +10,92 @@
 //! * Fixed       — fixed alpha from iteration 0 (Sparse GD / QSGD / ScaleCom)
 //! * Exponential — DGC's ramp: keep-fraction decays 25% -> alpha over the
 //!                 ramp window, then stays at alpha
+//!
+//! This module is also the single owner of **per-iteration ordering**
+//! (DESIGN.md §13): [`bucket_task_graph`] fixes the encode/exchange
+//! interleaving every execution path follows — the in-process trainer,
+//! the sim strategies, and the TCP coordinator's replay — and
+//! [`close_iteration`] is the one close-out sequence (shard fan-in round,
+//! ledger merge, iteration boundaries) that both the sim trainer and
+//! `remote.rs` run, so the two paths cannot drift apart.
 
 use crate::config::{SparsifySchedule, TrainConfig};
+use crate::metrics::{Ledger, NodeLedger};
+use crate::net::NetSim;
+
+/// One node-side unit of the per-iteration pipeline over bucket `usize`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepTask {
+    /// Select/encode bucket *b*'s packet (EF accumulate happened before
+    /// the graph starts; selection shares one global threshold, so encode
+    /// order never changes the selection — DESIGN.md §13.2).
+    Encode(usize),
+    /// Exchange bucket *b*'s packets (fan-in + aggregate fan-out).
+    Exchange(usize),
+}
+
+/// The per-iteration task graph over `buckets` buckets, linearized in
+/// dependency order (DESIGN.md §13.1).
+///
+/// * `overlap == false`: all encodes, then all exchanges — the legacy
+///   barrier schedule, bit-identical to the unbucketed path.
+/// * `overlap == true`: the exchange of bucket *i* is issued directly
+///   after the encode of bucket *i + 1*, i.e. it overlaps that encode in
+///   the priced schedule ([`crate::net::NetReport::pipelined_iter_s_under`])
+///   and on the wire (workers stream bucket *i* while selecting
+///   *i + 1*).
+///
+/// ```
+/// use lgc::coordinator::scheduler::{bucket_task_graph, StepTask::*};
+/// assert_eq!(bucket_task_graph(2, false), vec![Encode(0), Encode(1), Exchange(0), Exchange(1)]);
+/// assert_eq!(bucket_task_graph(3, true), vec![Encode(0), Encode(1), Exchange(0), Encode(2), Exchange(1), Exchange(2)]);
+/// ```
+pub fn bucket_task_graph(buckets: usize, overlap: bool) -> Vec<StepTask> {
+    let b = buckets.max(1);
+    let mut tasks = Vec::with_capacity(2 * b);
+    if overlap {
+        tasks.push(StepTask::Encode(0));
+        for i in 1..b {
+            tasks.push(StepTask::Encode(i));
+            tasks.push(StepTask::Exchange(i - 1));
+        }
+        tasks.push(StepTask::Exchange(b - 1));
+    } else {
+        for i in 0..b {
+            tasks.push(StepTask::Encode(i));
+        }
+        for i in 0..b {
+            tasks.push(StepTask::Exchange(i));
+        }
+    }
+    tasks
+}
+
+/// Close one training iteration — the single owner of the close-out
+/// sequence shared by the sim trainer and the TCP coordinator's replay:
+/// flush one-off shard traffic as its own setup round, feed the
+/// recurring per-node shard payloads into the iteration's fan-in round,
+/// then advance the network trace and the byte ledger in lockstep.
+/// Merging walks shards in ascending node order (§6.5), which is what
+/// keeps ledgers and traces bit-identical for any `--threads`.
+pub fn close_iteration(ledger: &mut Ledger, shards: &mut [NodeLedger], net: &mut NetSim) {
+    for shard in shards.iter() {
+        let (msgs, bytes) = shard.pending_oneoff();
+        if msgs > 0 {
+            net.send_many(shard.node(), msgs, bytes);
+        }
+    }
+    net.barrier_oneoff();
+    for shard in shards.iter() {
+        let (msgs, bytes) = shard.pending_recurring();
+        if msgs > 0 {
+            net.send_many(shard.node(), msgs, bytes);
+        }
+    }
+    net.end_iteration();
+    ledger.merge_shards(shards);
+    ledger.end_iteration();
+}
 
 /// The three training phases of §V-B (eqs. 14-16).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

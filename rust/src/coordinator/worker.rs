@@ -36,12 +36,13 @@ use crate::baselines::pack_values_in_place;
 use crate::compress::autoencoder::{rms, AeCompressor, Pattern};
 use crate::compress::{index_coding, topk, Correction, FeedbackMemory, Scratch};
 use crate::config::{Method, TrainConfig};
+use crate::coordinator::bucket::{method_bucketable, BucketPlan};
 use crate::coordinator::lr_at;
 use crate::coordinator::scheduler::{exponential_alpha, phase_and_alpha, Phase};
 use crate::data::{self, Dataset};
 use crate::model::{Group, Model};
 use crate::runtime::Engine;
-use crate::transport::{Conn, LastUp, MidUp, Msg, PROTO_VERSION};
+use crate::transport::{BucketUp, Conn, LastUp, MidUp, Msg, PROTO_VERSION};
 
 /// Connection knobs for one worker process (`lgc worker`).
 #[derive(Debug, Clone)]
@@ -134,6 +135,11 @@ struct Node<'e> {
     n_mid: usize,
     n_last: usize,
     mu: usize,
+    /// Mid-group bucket plan, derived from the same (cfg, layer-slice)
+    /// inputs as the coordinator's — both sides must agree frame-for-frame.
+    plan: BucketPlan,
+    /// Effective overlap: configured on *and* the plan actually splits.
+    overlap: bool,
 }
 
 impl<'e> Node<'e> {
@@ -201,6 +207,14 @@ impl<'e> Node<'e> {
             ),
         };
         let mu = meta.mu;
+        let plan = if method_bucketable(cfg.method) {
+            let layers: Vec<std::ops::Range<usize>> =
+                model.layer_slices(Group::Mid).into_iter().map(|(_, r)| r).collect();
+            BucketPlan::for_group(n_mid, &layers, &cfg)
+        } else {
+            BucketPlan::single(n_mid)
+        };
+        let overlap = cfg.overlap && !plan.is_single();
         Ok(Node {
             engine,
             node,
@@ -216,6 +230,8 @@ impl<'e> Node<'e> {
             n_mid,
             n_last,
             mu,
+            plan,
+            overlap,
         })
     }
 
@@ -316,7 +332,21 @@ impl<'e> Node<'e> {
     ) -> Result<(MidUp, Option<Vec<f32>>, Option<Msg>)> {
         let fp16 = self.cfg.fp16_values;
         match &mut self.mid {
-            MidState::Dense => Ok((MidUp::Dense(mid_g.to_vec()), None, None)),
+            MidState::Dense => {
+                if self.overlap {
+                    // Stream one dense slice per bucket, exchange order of
+                    // the task graph (= ascending bucket id).
+                    for (b, range) in self.plan.ranges().iter().enumerate() {
+                        conn.send(&Msg::GradientBucket {
+                            iter: it as u32,
+                            bucket: b as u32,
+                            up: BucketUp::Dense(mid_g[range.clone()].to_vec()),
+                        })?;
+                    }
+                    return Ok((MidUp::Buckets(self.plan.len() as u32), None, None));
+                }
+                Ok((MidUp::Dense(mid_g.to_vec()), None, None))
+            }
             MidState::Sparse { fb, ramp } => {
                 let a = match ramp {
                     Some(r) => exponential_alpha(it, *r, self.cfg.alpha),
@@ -324,7 +354,14 @@ impl<'e> Node<'e> {
                 };
                 let k_sel = topk::k_of(self.n_mid, a);
                 fb.accumulate(mid_g);
-                fb.select_and_clear_into(k_sel, &mut self.sc);
+                // Bucketed selection is bit-identical to the monolithic
+                // top-k for any plan (global threshold — DESIGN.md §13.2);
+                // with a single-range plan it *is* the legacy path.
+                fb.select_and_clear_bucketed_into(k_sel, self.plan.ranges(), &mut self.sc);
+                if self.overlap {
+                    let up = send_sparse_buckets(conn, it, &self.plan, fp16, &mut self.sc)?;
+                    return Ok((up, None, None));
+                }
                 // Values ship post-pack: under fp16 the wire round-trip is
                 // what every receiver aggregates (baselines::pack_values).
                 pack_values_in_place(&mut self.sc.vals, fp16);
@@ -351,6 +388,13 @@ impl<'e> Node<'e> {
                     *threshold *= 1.25;
                 } else if self.sc.idx.len() < k_target / 2 {
                     *threshold *= 0.8;
+                }
+                if self.overlap {
+                    // The threshold scan emits ascending indices, so the
+                    // selection partitions cleanly into plan ranges.
+                    self.plan.splits_of(&self.sc.idx, &mut self.sc.splits);
+                    let up = send_sparse_buckets(conn, it, &self.plan, fp16, &mut self.sc)?;
+                    return Ok((up, None, None));
                 }
                 pack_values_in_place(&mut self.sc.vals, fp16);
                 let coded = index_coding::encode_into(&self.sc.idx, n, &mut self.sc.enc)?.to_vec();
@@ -469,4 +513,37 @@ impl<'e> Node<'e> {
             index_coding::encode_into(&self.sc.idx, self.n_last, &mut self.sc.enc)?.to_vec();
         Ok(LastUp::Sparse { coded_idx: coded, vals: self.sc.vals.clone() })
     }
+}
+
+/// Stream the selected sparse mid upload as one [`Msg::GradientBucket`]
+/// frame per plan bucket (ascending bucket id — the task graph's exchange
+/// order), then return the closing `MidUp::Buckets` tag.  Expects
+/// `sc.idx`/`sc.vals` from a bucketed (or splits-annotated) selection:
+/// `sc.splits[b]..sc.splits[b + 1]` is bucket *b*'s slice.  Indices go on
+/// the wire bucket-local, coded over the bucket width — exactly the
+/// framing `baselines::record_sparse_packet` prices in the sim.
+fn send_sparse_buckets(
+    conn: &mut Conn,
+    it: usize,
+    plan: &BucketPlan,
+    fp16: bool,
+    sc: &mut Scratch,
+) -> Result<MidUp> {
+    debug_assert_eq!(sc.splits.len(), plan.len() + 1);
+    for (b, range) in plan.ranges().iter().enumerate() {
+        let (lo, hi) = (sc.splits[b], sc.splits[b + 1]);
+        let mut vals = sc.vals[lo..hi].to_vec();
+        pack_values_in_place(&mut vals, fp16);
+        sc.idx_local.clear();
+        sc.idx_local.extend(sc.idx[lo..hi].iter().map(|&i| i - range.start as u32));
+        let coded =
+            index_coding::encode_into(&sc.idx_local, range.end - range.start, &mut sc.enc)?
+                .to_vec();
+        conn.send(&Msg::GradientBucket {
+            iter: it as u32,
+            bucket: b as u32,
+            up: BucketUp::Sparse { coded_idx: coded, vals },
+        })?;
+    }
+    Ok(MidUp::Buckets(plan.len() as u32))
 }

@@ -23,8 +23,10 @@ use anyhow::Result;
 
 use crate::compress::autoencoder::{AeCompressor, Pattern};
 use crate::config::{Method, TrainConfig};
+use crate::coordinator::bucket::BucketPlan;
 use crate::coordinator::{self, TrainResult};
 use crate::metrics::Csv;
+use crate::model::{Group, Model};
 pub use crate::net::LinkModel;
 use crate::net::Topology;
 use crate::runtime::Engine;
@@ -259,6 +261,132 @@ pub fn fig14_sweep(engine: &Engine, opts: &Fig14Opts) -> Result<Vec<SweepPoint>>
     csv.finish()?;
     println!("(speedup vs baseline at equal bandwidth; paper: 1.7x PS / 2.56x RAR on GbE)");
     println!("-> results/fig14_speedup.csv");
+    fig14_overlap(engine, opts)?;
+    Ok(points)
+}
+
+/// Pipeline depth of the overlap-adjusted Fig. 14 variant.
+pub const OVERLAP_BUCKETS: usize = 8;
+
+/// One point of the overlap-adjusted Fig. 14 variant.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlapPoint {
+    /// Method this point belongs to.
+    pub method: Method,
+    /// Link bandwidth in Mbit/s.
+    pub bandwidth_mbits: f64,
+    /// Pipeline depth the run was bucketed at.
+    pub buckets: usize,
+    /// Modeled iteration ms under the barrier (`--no-overlap`) schedule.
+    pub iter_ms_no_overlap: f64,
+    /// Modeled iteration ms under the overlapped schedule
+    /// ([`crate::net::NetReport::pipelined_iter_s_under`]).
+    pub iter_ms_overlap: f64,
+    /// `iter_ms_no_overlap / iter_ms_overlap` (> 1 = overlap wins).
+    pub overlap_speedup: f64,
+}
+
+/// Overlap-adjusted Fig. 14 variant (DESIGN.md §13.3): train the
+/// bucketable methods once with `--buckets` [`OVERLAP_BUCKETS`], then
+/// price the *same* bucket-tagged trace both ways across the bandwidth
+/// grid — as the barrier schedule (compute, then every round) and as the
+/// overlapped schedule (bucket `b`'s round may start once its share of
+/// compute is done).  The per-bucket compute model splits
+/// [`modeled_compute_s`] proportional to each bucket's coordinate count.
+/// Emits `results/fig14_overlap.csv`; deterministic for any `--threads`,
+/// like every CSV here.
+pub fn fig14_overlap(engine: &Engine, opts: &Fig14Opts) -> Result<Vec<OverlapPoint>> {
+    let meta = engine.manifest.resolve_model(&opts.model).clone();
+    let compute_s = modeled_compute_s(meta.n_params, meta.batch);
+    println!(
+        "\n=== Fig 14 overlap variant: pipelined vs barrier schedule, {} buckets ===",
+        OVERLAP_BUCKETS
+    );
+    // Per-bucket compute shares from the same plan the trainer uses.
+    let model = Model::new(&meta, TrainConfig::default().seed);
+    let layers: Vec<std::ops::Range<usize>> =
+        model.layer_slices(Group::Mid).into_iter().map(|(_, r)| r).collect();
+    let n_mid = meta.group_len(&meta.mid_param_idx);
+
+    let methods = [Method::Baseline, Method::SparseGd];
+    let mut points = Vec::new();
+    let mut csv = Csv::new(
+        "results/fig14_overlap.csv",
+        &[
+            "method",
+            "bandwidth_mbits",
+            "buckets",
+            "iter_ms_no_overlap",
+            "iter_ms_overlap",
+            "overlap_speedup",
+        ],
+    );
+    let mut t = {
+        let mut headers: Vec<String> = vec!["method".into()];
+        headers.extend(opts.bandwidths_mbits.iter().map(|b| format!("{b:.0} Mbit/s")));
+        Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+    };
+    for m in methods {
+        let cfg = TrainConfig {
+            model: meta.name.clone(),
+            method: m,
+            nodes: opts.nodes,
+            steps: opts.steps,
+            eval_every: 0,
+            threads: opts.threads,
+            latency_s: opts.latency_s,
+            straggler_spec: opts.straggler_spec.clone(),
+            bandwidth_mbits: opts.bandwidths_mbits.first().copied().unwrap_or(1000.0),
+            buckets: OVERLAP_BUCKETS,
+            overlap: true,
+            transport: super::transport(),
+            ..Default::default()
+        }
+        .scaled_phases();
+        let plan = BucketPlan::for_group(n_mid, &layers, &cfg);
+        let per_bucket: Vec<f64> = plan
+            .ranges()
+            .iter()
+            .map(|r| compute_s * (r.end - r.start) as f64 / n_mid as f64)
+            .collect();
+        let r = coordinator::train(engine, cfg)?;
+        let steady_iters = r.steps.min(50);
+        let mut cells = vec![m.name().to_string()];
+        for &bw in &opts.bandwidths_mbits {
+            let fabric = r.net.fabric.with_link(LinkModel::from_mbits(bw, opts.latency_s));
+            // Same steady window, same rounds, two schedules — the only
+            // difference is when each round may start.
+            let seq = r.net.iter_comm_s_under(&fabric);
+            let piped = r.net.pipelined_iter_s_under(&fabric, &per_bucket);
+            let w = steady_iters.min(seq.len()).max(1);
+            let no_overlap_s =
+                compute_s + seq[seq.len() - w..].iter().sum::<f64>() / w as f64;
+            let overlap_s = piped[piped.len() - w..].iter().sum::<f64>() / w as f64;
+            let speedup = no_overlap_s / overlap_s;
+            points.push(OverlapPoint {
+                method: m,
+                bandwidth_mbits: bw,
+                buckets: plan.len(),
+                iter_ms_no_overlap: no_overlap_s * 1e3,
+                iter_ms_overlap: overlap_s * 1e3,
+                overlap_speedup: speedup,
+            });
+            cells.push(format!("{speedup:.3}x"));
+            csv.row(&[
+                m.name().to_string(),
+                format!("{bw}"),
+                format!("{}", plan.len()),
+                format!("{}", no_overlap_s * 1e3),
+                format!("{}", overlap_s * 1e3),
+                format!("{speedup}"),
+            ]);
+        }
+        t.row(&cells);
+    }
+    t.print();
+    csv.finish()?;
+    println!("(overlap speedup = barrier iter time / pipelined iter time, same trace)");
+    println!("-> results/fig14_overlap.csv");
     Ok(points)
 }
 

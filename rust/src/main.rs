@@ -36,10 +36,11 @@ const FLAGS: &[&str] = &[
     "backend", "bandwidth", "latency-us", "straggler", "topology",
     "transport", "listen", "connect", "session", "net-timeout-ms",
     "join-timeout-ms", "retries", "backoff-ms", "checkpoint",
+    "buckets", "bucket-bytes",
 ];
 
 /// Boolean switches (never consume the next token).
-const SWITCHES: &[&str] = &["verbose", "assert-improves", "fp16"];
+const SWITCHES: &[&str] = &["verbose", "assert-improves", "fp16", "no-overlap"];
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), FLAGS, SWITCHES)
@@ -389,7 +390,8 @@ SUBCOMMANDS:
   exp          <id> or --id ID, one of table4|table5|table6|fig3|fig10|fig11|
                fig12|fig13|fig14|fig14-ae|speedup|ablation|all  [--steps N]
                fig14 = modeled speedup-vs-bandwidth sweep (results/
-               fig14_speedup.csv); fig14-ae = AE convergence traces
+               fig14_speedup.csv + overlap-adjusted fig14_overlap.csv);
+               fig14-ae = AE convergence traces
   info-plane   --model M [--steps N --bins B]
   latency      --model M
   profile      --model M --method X [--steps N]
@@ -405,6 +407,17 @@ TRANSPORT (train, serve, exp; DESIGN.md §12):
   --net-timeout-ms N   per-receive deadline; a dead peer errors out within
                        this bound instead of hanging (default 30000)
   --checkpoint PATH    save the final model replica to PATH (any transport)
+
+PIPELINED EXECUTION (train, serve, worker; DESIGN.md §13):
+  --buckets N        partition the mid-group gradient into N layer-aligned
+                     buckets (default 1 = monolithic); selection and values
+                     stay bit-identical to the unbucketed run
+  --bucket-bytes B   size-targeted alternative: cut buckets of <= B dense
+                     bytes each (wins over --buckets when set)
+  --no-overlap       keep the legacy barrier schedule: encode everything,
+                     then exchange everything.  Default (overlap on) streams
+                     bucket i's exchange while bucket i+1 encodes; training
+                     curves and final model state are identical either way
 
 NETWORK FABRIC (train, exp fig14, exp speedup; DESIGN.md §11):
   --bandwidth B      modeled link bandwidth: 1gbps, 50mbps, or Mbit/s number

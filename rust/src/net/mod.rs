@@ -48,6 +48,12 @@ pub struct Round {
     /// the iteration it happens in, excluded from steady-state means —
     /// the time-axis mirror of [`crate::metrics::Ledger::record_oneoff`].
     pub oneoff: bool,
+    /// Bucket id under the overlapped pipeline (DESIGN.md §13.3): a
+    /// tagged round may not start before its bucket's encode finishes
+    /// ([`NetReport::pipelined_iter_s_under`] prices that dependency).
+    /// Untagged rounds (`None`, the entire legacy trace) only wait for
+    /// the channel.
+    pub bucket: Option<u32>,
 }
 
 impl Round {
@@ -99,7 +105,7 @@ impl NetSim {
         NetSim {
             fabric,
             nodes,
-            cur: Round { per_node: vec![(0, 0); nodes], oneoff: false },
+            cur: Round { per_node: vec![(0, 0); nodes], oneoff: false, bucket: None },
             rounds: Vec::new(),
             trace: Vec::new(),
             uplink_bytes: 0,
@@ -138,12 +144,17 @@ impl NetSim {
     }
 
     fn close_round(&mut self, oneoff: bool) {
+        self.close_round_tagged(oneoff, None);
+    }
+
+    fn close_round_tagged(&mut self, oneoff: bool, bucket: Option<u32>) {
         if !self.cur.is_empty() {
             let mut closed = std::mem::replace(
                 &mut self.cur,
-                Round { per_node: vec![(0, 0); self.nodes], oneoff: false },
+                Round { per_node: vec![(0, 0); self.nodes], oneoff: false, bucket: None },
             );
             closed.oneoff = oneoff;
+            closed.bucket = bucket;
             self.rounds.push(closed);
         }
     }
@@ -153,6 +164,20 @@ impl NetSim {
     /// Closes any pending sends first, then emits the fan-out as its own
     /// round.
     pub fn fanout(&mut self, bytes: u64) {
+        self.fanout_inner(bytes, None);
+    }
+
+    /// [`NetSim::fanout`] tagged with the pipeline bucket that produced
+    /// the aggregate (DESIGN.md §13.3).  Sequential pricing
+    /// ([`NetReport::iter_comm_s_under`]) ignores the tag — same bytes,
+    /// same rounds-sum — while [`NetReport::pipelined_iter_s_under`]
+    /// uses it to start the round no earlier than the bucket's encode
+    /// finish time.
+    pub fn fanout_bucketed(&mut self, bucket: usize, bytes: u64) {
+        self.fanout_inner(bytes, Some(bucket as u32));
+    }
+
+    fn fanout_inner(&mut self, bytes: u64, bucket: Option<u32>) {
         self.barrier();
         if self.nodes == 0 || bytes == 0 {
             return;
@@ -160,7 +185,7 @@ impl NetSim {
         for slot in self.cur.per_node.iter_mut() {
             *slot = (1, bytes);
         }
-        self.barrier();
+        self.close_round_tagged(false, bucket);
     }
 
     /// Worker-to-peers broadcast: node `from` unicasts `bytes` to each of
@@ -307,6 +332,100 @@ impl NetReport {
             .map(|&(_, b)| b)
             .sum()
     }
+
+    /// Price the trace as an **overlapped schedule** (DESIGN.md §13.3):
+    /// modeled *iteration* seconds (compute + communication) per
+    /// iteration, where a round tagged with bucket `b` may not start
+    /// before bucket `b`'s encode finishes.
+    ///
+    /// `compute_s` is the per-bucket compute/encode time model for one
+    /// iteration: bucket `b` is ready at `compute_s[..=b].sum()`.
+    /// Bucket-tagged rounds are issued by the task graph as their bucket
+    /// encodes (they overlap the remaining compute); untagged rounds (the
+    /// fan-in round, ring steps, the whole legacy trace) sit on the
+    /// barrier path, so they — like out-of-range tags — wait for *all*
+    /// compute and drain after the tagged rounds on the shared channel:
+    ///
+    /// ```text
+    /// chan = 0
+    /// for round r tagged b (in emission order):
+    ///     start = max(chan, ready[b])          // out-of-range: total
+    ///     chan  = start + time(r)
+    /// for round r untagged (in emission order):
+    ///     start = max(chan, total_compute)
+    ///     chan  = start + time(r)
+    /// iter_s = max(chan, total_compute)
+    /// ```
+    ///
+    /// With one untagged trace this degrades to `compute + comm` —
+    /// exactly the sequential `--no-overlap` figure — so the overlapped
+    /// and barrier prices are directly comparable, and a trace with at
+    /// least two positive-time tagged rounds prices *strictly* below the
+    /// barrier whenever compute is positive.  Like every accessor here it
+    /// is pure arithmetic over the recorded `(msgs, bytes)` trace:
+    /// deterministic, thread-invariant, resweepable.
+    pub fn pipelined_iter_s_under(&self, fabric: &Fabric, compute_s: &[f64]) -> Vec<f64> {
+        let total_compute: f64 = compute_s.iter().sum();
+        let ready: Vec<f64> = compute_s
+            .iter()
+            .scan(0.0f64, |acc, c| {
+                *acc += c;
+                Some(*acc)
+            })
+            .collect();
+        self.trace
+            .iter()
+            .map(|rounds| {
+                let mut chan = 0.0f64;
+                for r in rounds.iter().filter(|r| r.bucket.is_some()) {
+                    let floor = match r.bucket {
+                        Some(b) => ready.get(b as usize).copied().unwrap_or(total_compute),
+                        None => unreachable!(),
+                    };
+                    let start = chan.max(floor);
+                    chan = start + r.time_s(fabric);
+                }
+                for r in rounds.iter().filter(|r| r.bucket.is_none()) {
+                    let start = chan.max(total_compute);
+                    chan = start + r.time_s(fabric);
+                }
+                chan.max(total_compute)
+            })
+            .collect()
+    }
+}
+
+/// Closed-form modeled iteration time of a `buckets`-deep overlap
+/// pipeline with total compute `compute_s` and total communication
+/// `comm_s`, both split evenly across buckets (DESIGN.md §13.3):
+///
+/// ```text
+/// pipelined(c, T, B) = max(c, T) + min(c, T) / B      (B >= 2)
+///                    = c + T                           (B <= 1)
+/// ```
+///
+/// The longer of the two resources is the pipeline bottleneck and runs
+/// continuously; only one slice of the shorter one pokes out at the
+/// boundary.  Strictly below the barrier price `c + T` whenever both are
+/// positive and `B >= 2`, and equal to
+/// [`NetReport::pipelined_iter_s_under`] on an even per-bucket split.
+///
+/// ```
+/// use lgc::net::pipelined_s;
+/// assert_eq!(pipelined_s(1.0, 4.0, 1), 5.0);       // no pipeline
+/// assert_eq!(pipelined_s(1.0, 4.0, 4), 4.25);      // comm-bound
+/// assert_eq!(pipelined_s(4.0, 1.0, 4), 4.25);      // compute-bound
+/// ```
+pub fn pipelined_s(compute_s: f64, comm_s: f64, buckets: usize) -> f64 {
+    if buckets <= 1 {
+        return compute_s + comm_s;
+    }
+    let (hi, lo) = if compute_s >= comm_s {
+        (compute_s, comm_s)
+    } else {
+        (comm_s, compute_s)
+    };
+    hi + lo / buckets as f64
 }
 
 #[cfg(test)]
@@ -510,5 +629,113 @@ mod tests {
         let report = sim.into_report();
         assert_eq!(report.trace.len(), 1);
         assert_eq!(report.total_bytes(), 125_000);
+    }
+
+    #[test]
+    fn bucket_tags_do_not_change_sequential_pricing() {
+        let fabric = flat(80.0, 1e-3);
+        let run = |tagged: bool| {
+            let mut sim = NetSim::new(fabric.clone(), 2);
+            for b in 0..4u64 {
+                if tagged {
+                    sim.fanout_bucketed(b as usize, 100_000 * (b + 1));
+                } else {
+                    sim.fanout(100_000 * (b + 1));
+                }
+            }
+            sim.end_iteration();
+            sim.into_report()
+        };
+        let (plain, tagged) = (run(false), run(true));
+        assert_eq!(plain.iter_comm_s(), tagged.iter_comm_s());
+        assert_eq!(plain.uplink_bytes, tagged.uplink_bytes);
+        assert_eq!(tagged.trace[0][2].bucket, Some(2));
+        assert_eq!(plain.trace[0][2].bucket, None);
+    }
+
+    #[test]
+    fn pipelined_pricing_matches_closed_form_on_even_splits() {
+        // Even per-bucket compute + even per-bucket rounds: the event
+        // model must reproduce pipelined_s exactly in both regimes.
+        let fabric = flat(80.0, 0.0); // 10 MB/s
+        for (compute_total, buckets) in [(0.05f64, 4usize), (3.0, 4), (0.4, 8), (1.0, 1)] {
+            let mut sim = NetSim::new(fabric.clone(), 2);
+            for b in 0..buckets {
+                sim.fanout_bucketed(b, 10_000_000 / buckets as u64); // 1 s comm total
+            }
+            sim.end_iteration();
+            let report = sim.into_report();
+            let comm = report.iter_comm_s()[0];
+            assert!((comm - 1.0).abs() < 1e-12, "{comm}");
+            let per_bucket = vec![compute_total / buckets as f64; buckets];
+            let got = report.pipelined_iter_s_under(&fabric, &per_bucket)[0];
+            let want = pipelined_s(compute_total, comm, buckets);
+            assert!((got - want).abs() < 1e-9, "{got} vs {want} (c={compute_total}, B={buckets})");
+            // And the pipeline strictly beats the barrier for B >= 2.
+            if buckets >= 2 {
+                assert!(got < compute_total + comm);
+            }
+        }
+    }
+
+    #[test]
+    fn untagged_trace_prices_as_compute_plus_comm() {
+        let fabric = flat(80.0, 0.0);
+        let mut sim = NetSim::new(fabric.clone(), 2);
+        sim.send(0, 10_000_000); // 1 s
+        sim.end_iteration();
+        let report = sim.into_report();
+        let got = report.pipelined_iter_s_under(&fabric, &[0.25, 0.25])[0];
+        assert!((got - 1.5).abs() < 1e-12, "{got}");
+    }
+
+    #[test]
+    fn out_of_range_bucket_tags_wait_for_all_compute() {
+        let fabric = flat(80.0, 0.0);
+        let mut sim = NetSim::new(fabric.clone(), 2);
+        sim.fanout_bucketed(7, 10_000_000); // tag beyond the compute model
+        sim.end_iteration();
+        let report = sim.into_report();
+        let got = report.pipelined_iter_s_under(&fabric, &[0.2, 0.2])[0];
+        assert!((got - 1.4).abs() < 1e-12, "{got}");
+    }
+
+    #[test]
+    fn mixed_trace_overlaps_tagged_rounds_only() {
+        // A realistic iteration: an untagged fan-out, tagged bucket
+        // rounds, and an untagged fan-in.  Tagged rounds drain under
+        // compute; untagged rounds serialize after max(chan, compute).
+        let fabric = flat(80.0, 0.0); // 10 MB/s
+        let mut sim = NetSim::new(fabric.clone(), 2);
+        sim.fanout(2_000_000); // 0.2 s, untagged
+        sim.fanout_bucketed(0, 1_000_000); // 0.1 s, ready at 0.5
+        sim.fanout_bucketed(1, 1_000_000); // 0.1 s, ready at 1.0
+        sim.send(0, 3_000_000); // 0.3 s fan-in, untagged
+        sim.end_iteration();
+        let report = sim.into_report();
+        let sequential = report.iter_comm_s()[0];
+        assert!((sequential - 0.7).abs() < 1e-12, "{sequential}");
+        // Compute 1.0 s over two buckets: bucket 0's round hides fully
+        // under compute (start 0.5, end 0.6); bucket 1 starts at 1.0 and
+        // ends 1.1; untagged rounds append: 1.1 + 0.2 + 0.3 = 1.6 —
+        // strictly below the barrier price 1.0 + 0.7 = 1.7.
+        let got = report.pipelined_iter_s_under(&fabric, &[0.5, 0.5])[0];
+        assert!((got - 1.6).abs() < 1e-12, "{got}");
+        assert!(got < 1.0 + sequential);
+    }
+
+    #[test]
+    fn pipelined_closed_form_properties() {
+        assert_eq!(pipelined_s(0.0, 2.0, 8), 2.0);
+        assert_eq!(pipelined_s(2.0, 0.0, 8), 2.0);
+        assert_eq!(pipelined_s(1.0, 1.0, 2), 1.5);
+        // Monotone improvement with depth, floored at max(c, T).
+        let mut prev = pipelined_s(1.0, 3.0, 1);
+        for b in 2..=32 {
+            let cur = pipelined_s(1.0, 3.0, b);
+            assert!(cur < prev);
+            assert!(cur > 3.0);
+            prev = cur;
+        }
     }
 }

@@ -25,5 +25,5 @@ pub mod server;
 
 pub use conn::{Conn, UNIX_PREFIX};
 pub use frame::{Frame, FrameDecoder, MAX_FRAME};
-pub use msg::{LastUp, MidUp, Msg, PROTO_VERSION};
+pub use msg::{BucketUp, LastUp, MidUp, Msg, PROTO_VERSION};
 pub use server::{accept_workers, Listener, RejectorGuard};

@@ -18,8 +18,9 @@ use anyhow::{bail, Context, Result};
 use crate::config::{Method, SparsifySchedule, TrainConfig, TransportKind};
 
 /// Wire protocol version; bumped on any grammar change.  A mismatch is
-/// rejected at join time with both numbers in the error.
-pub const PROTO_VERSION: u16 = 1;
+/// rejected at join time with both numbers in the error.  v2 added the
+/// `GRADIENT_BUCKET` frame and the `MidUp::Buckets` closing tag.
+pub const PROTO_VERSION: u16 = 2;
 
 /// Frame type bytes.  Values are wire contract — append only.
 pub mod kind {
@@ -35,6 +36,7 @@ pub mod kind {
     pub const HEARTBEAT: u8 = 10;
     pub const SHUTDOWN: u8 = 11;
     pub const ERROR: u8 = 12;
+    pub const GRADIENT_BUCKET: u8 = 13;
 }
 
 /// The mid-group upload a worker sends for one iteration; which variant
@@ -54,6 +56,11 @@ pub enum MidUp {
     /// Nothing rides the Gradient message (LGC-RAR compressed phase:
     /// the latent travels separately).
     None,
+    /// The mid upload already streamed as this many [`Msg::GradientBucket`]
+    /// frames ahead of this Gradient frame (overlap pipeline, DESIGN.md
+    /// §13.4); this tag closes the set so the coordinator can validate
+    /// completeness against its own plan.
+    Buckets(u32),
 }
 
 impl MidUp {
@@ -65,8 +72,19 @@ impl MidUp {
             MidUp::Vv(_) => "a value-vector upload",
             MidUp::Innovation { .. } => "an innovation upload",
             MidUp::None => "an empty mid upload",
+            MidUp::Buckets(_) => "a bucketed mid upload",
         }
     }
+}
+
+/// One bucket's mid-group payload inside a [`Msg::GradientBucket`] frame:
+/// a dense slice of the bucket range (Baseline), or bucket-local
+/// index-coded top-k (the sparse-EF family).  Indices are coded over the
+/// bucket's *own* width, relative to its range start.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BucketUp {
+    Dense(Vec<f32>),
+    Sparse { coded_idx: Vec<u8>, vals: Vec<f32> },
 }
 
 /// The last-group upload for one iteration.
@@ -103,6 +121,11 @@ pub enum Msg {
         /// needs it; the sim computes it in-process for free).
         ctrl_mid: Option<Vec<f32>>,
     },
+    /// Worker -> coordinator: one bucket of the mid upload, streamed as
+    /// soon as that bucket's encode finishes (overlap pipeline).  The
+    /// closing Gradient frame carries `MidUp::Buckets(n)` so the
+    /// coordinator can validate the set against its own plan.
+    GradientBucket { iter: u32, bucket: u32, up: BucketUp },
     /// Worker -> coordinator: AE latent (RAR: every node; PS: node 0).
     Latent { iter: u32, latent: Vec<f32>, scale: f32 },
     /// Coordinator -> all workers: aggregated group means to apply.
@@ -127,6 +150,7 @@ impl Msg {
             Msg::Support { .. } => "Support",
             Msg::SupportBcast { .. } => "SupportBcast",
             Msg::Gradient { .. } => "Gradient",
+            Msg::GradientBucket { .. } => "GradientBucket",
             Msg::Latent { .. } => "Latent",
             Msg::SyncInfo { .. } => "SyncInfo",
             Msg::Model { .. } => "Model",
@@ -194,6 +218,10 @@ impl Msg {
                         put_f32(&mut w, *scale);
                     }
                     MidUp::None => w.push(4),
+                    MidUp::Buckets(n) => {
+                        w.push(5);
+                        put_u32(&mut w, *n);
+                    }
                 }
                 match last {
                     LastUp::Dense(v) => {
@@ -214,6 +242,22 @@ impl Msg {
                     None => w.push(0),
                 }
                 kind::GRADIENT
+            }
+            Msg::GradientBucket { iter, bucket, up } => {
+                put_u32(&mut w, *iter);
+                put_u32(&mut w, *bucket);
+                match up {
+                    BucketUp::Dense(v) => {
+                        w.push(0);
+                        put_f32s(&mut w, v);
+                    }
+                    BucketUp::Sparse { coded_idx, vals } => {
+                        w.push(1);
+                        put_bytes(&mut w, coded_idx);
+                        put_f32s(&mut w, vals);
+                    }
+                }
+                kind::GRADIENT_BUCKET
             }
             Msg::Latent { iter, latent, scale } => {
                 put_u32(&mut w, *iter);
@@ -282,6 +326,7 @@ impl Msg {
                         scale: r.f32()?,
                     },
                     4 => MidUp::None,
+                    5 => MidUp::Buckets(r.u32()?),
                     t => bail!("Gradient: unknown mid-upload tag {t}"),
                 };
                 let last = match r.u8()? {
@@ -295,6 +340,16 @@ impl Msg {
                     t => bail!("Gradient: unknown ctrl-mid tag {t}"),
                 };
                 Msg::Gradient { iter, loss, acc, first, mid, last, ctrl_mid }
+            }
+            kind::GRADIENT_BUCKET => {
+                let iter = r.u32()?;
+                let bucket = r.u32()?;
+                let up = match r.u8()? {
+                    0 => BucketUp::Dense(r.f32s()?),
+                    1 => BucketUp::Sparse { coded_idx: r.bytes()?, vals: r.f32s()? },
+                    t => bail!("GradientBucket: unknown payload tag {t}"),
+                };
+                Msg::GradientBucket { iter, bucket, up }
             }
             kind::LATENT => Msg::Latent {
                 iter: r.u32()?,
@@ -437,7 +492,12 @@ impl<'a> Reader<'a> {
 // --------------------------------------------------- TrainConfig blob
 
 /// Version byte for the embedded config blob inside JoinAck.
-const CFG_VERSION: u8 = 1;
+/// v2 appended the bucket-pipeline knobs (`buckets`, `bucket_bytes`,
+/// `overlap`) so workers derive the same [`BucketPlan`] as the
+/// coordinator.
+///
+/// [`BucketPlan`]: crate::coordinator::bucket::BucketPlan
+const CFG_VERSION: u8 = 2;
 
 fn method_tag(m: Method) -> u8 {
     match m {
@@ -519,6 +579,9 @@ pub fn encode_cfg(w: &mut Vec<u8>, c: &TrainConfig) {
         put_f64(w, mult);
     }
     w.push(c.verbose as u8);
+    put_u64(w, c.buckets as u64);
+    put_u64(w, c.bucket_bytes as u64);
+    w.push(c.overlap as u8);
 }
 
 fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
@@ -556,6 +619,9 @@ fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
         straggler_spec.push((r.u64()? as usize, r.f64()?));
     }
     let verbose = r.bool()?;
+    let buckets = r.u64()? as usize;
+    let bucket_bytes = r.u64()? as usize;
+    let overlap = r.bool()?;
     Ok(TrainConfig {
         model,
         method,
@@ -583,6 +649,9 @@ fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
         latency_s,
         straggler_spec,
         verbose,
+        buckets,
+        bucket_bytes,
+        overlap,
         transport: TransportKind::Sim,
         checkpoint: None,
     })
@@ -624,6 +693,21 @@ mod tests {
                 last: LastUp::Sparse { coded_idx: vec![4, 5], vals: vec![-1.0] },
                 ctrl_mid: Some(vec![0.0; 3]),
             },
+            Msg::Gradient {
+                iter: 9,
+                loss: 0.75,
+                acc: 0.5,
+                first: vec![1.0],
+                mid: MidUp::Buckets(8),
+                last: LastUp::Dense(vec![0.5]),
+                ctrl_mid: None,
+            },
+            Msg::GradientBucket {
+                iter: 9,
+                bucket: 3,
+                up: BucketUp::Sparse { coded_idx: vec![7, 8], vals: vec![0.5, -0.25] },
+            },
+            Msg::GradientBucket { iter: 9, bucket: 0, up: BucketUp::Dense(vec![1.0, -0.0]) },
             Msg::Latent { iter: 3, latent: vec![0.1, 0.2], scale: 1.5 },
             Msg::SyncInfo { iter: 1, first: vec![1.0], mid: vec![], last: vec![2.0] },
             Msg::Model { iter: 0, payload: vec![0; 16] },
@@ -633,6 +717,10 @@ mod tests {
         ] {
             // NaN != NaN breaks PartialEq; compare the NaN case by bits.
             if let Msg::Gradient { loss, .. } = &m {
+                if !loss.is_nan() {
+                    roundtrip(&m);
+                    continue;
+                }
                 let (k, p) = m.encode();
                 let back = Msg::decode(k, &p).unwrap();
                 if let Msg::Gradient { loss: l2, .. } = &back {
@@ -679,6 +767,9 @@ mod tests {
             fp16_values: true,
             schedule: SparsifySchedule::Exponential,
             straggler_spec: vec![(1, 3.25)],
+            buckets: 8,
+            bucket_bytes: 65536,
+            overlap: false,
             transport: TransportKind::Tcp, // intentionally not carried
             checkpoint: Some("x.ckpt".into()),
             ..Default::default()
@@ -697,6 +788,9 @@ mod tests {
         assert_eq!(back.schedule, c.schedule);
         assert_eq!(back.straggler_spec, c.straggler_spec);
         assert!(back.fp16_values);
+        assert_eq!(back.buckets, 8);
+        assert_eq!(back.bucket_bytes, 65536);
+        assert!(!back.overlap);
         // Coordinator-local knobs never cross the wire.
         assert_eq!(back.transport, TransportKind::Sim);
         assert_eq!(back.checkpoint, None);

@@ -417,6 +417,137 @@ fn phases_progress_dense_topk_compressed() {
 }
 
 // ---------------------------------------------------------------------------
+// Bucketed pipeline (DESIGN.md §13) end-to-end in the simulator
+// ---------------------------------------------------------------------------
+
+const BUCKETABLE: [Method; 4] =
+    [Method::Baseline, Method::SparseGd, Method::Dgc, Method::Threshold];
+
+/// The tentpole's reference bar: `--buckets N --no-overlap` is bit-exact
+/// legacy — loss curve, final eval, ledger, and network trace — for every
+/// bucketable strategy and any bucket count, including the size-targeted
+/// `--bucket-bytes` policy.
+#[test]
+fn bucketed_no_overlap_is_bit_identical_to_legacy() {
+    let e = engine();
+    for method in BUCKETABLE {
+        let legacy = coordinator::train(&e, tiny_cfg("convnet_mini", method, 2)).unwrap();
+        let mut variants: Vec<TrainConfig> = [2usize, 7, 32]
+            .iter()
+            .map(|&b| {
+                let mut cfg = tiny_cfg("convnet_mini", method, 2);
+                cfg.buckets = b;
+                cfg.overlap = false;
+                cfg
+            })
+            .collect();
+        let mut by_bytes = tiny_cfg("convnet_mini", method, 2);
+        by_bytes.bucket_bytes = 4096;
+        by_bytes.overlap = false;
+        variants.push(by_bytes);
+        for cfg in variants {
+            let tag =
+                format!("{} buckets={} bytes={}", method.name(), cfg.buckets, cfg.bucket_bytes);
+            let r = coordinator::train(&e, cfg).unwrap();
+            let la: Vec<f32> = legacy.curve.iter().map(|p| p.train_loss).collect();
+            let lb: Vec<f32> = r.curve.iter().map(|p| p.train_loss).collect();
+            assert_eq!(la, lb, "{tag}: loss curve drifted");
+            assert_eq!(legacy.final_eval, r.final_eval, "{tag}");
+            assert_eq!(legacy.ledger.iter_bytes, r.ledger.iter_bytes, "{tag}: bytes drifted");
+            assert_eq!(legacy.ledger.total(), r.ledger.total(), "{tag}");
+            assert_eq!(legacy.ledger.per_kind, r.ledger.per_kind, "{tag}");
+            assert_eq!(legacy.ledger.per_node, r.ledger.per_node, "{tag}");
+            assert_eq!(legacy.net, r.net, "{tag}: network trace drifted");
+        }
+    }
+}
+
+/// Overlapped mode re-frames the mid exchange per bucket: Indices byte
+/// totals may differ (one coded header per bucket), but selection,
+/// values, EF state, and the aggregated means are untouched — so the
+/// training curve and final eval must match legacy exactly, and pricing
+/// the bucket-tagged trace under the pipelined schedule must come in
+/// strictly below the barrier at low bandwidth.
+#[test]
+fn overlapped_buckets_keep_curves_and_beat_the_barrier() {
+    use lgc::coordinator::bucket::BucketPlan;
+    use lgc::net::LinkModel;
+    let e = engine();
+    for method in [Method::Baseline, Method::SparseGd] {
+        let legacy = coordinator::train(&e, tiny_cfg("convnet_mini", method, 2)).unwrap();
+        let mut cfg = tiny_cfg("convnet_mini", method, 2);
+        cfg.buckets = 8;
+        assert!(cfg.overlap, "overlap is the default");
+        let r = coordinator::train(&e, cfg.clone()).unwrap();
+        let la: Vec<f32> = legacy.curve.iter().map(|p| p.train_loss).collect();
+        let lb: Vec<f32> = r.curve.iter().map(|p| p.train_loss).collect();
+        assert_eq!(la, lb, "{}: overlap changed the training curve", method.name());
+        assert_eq!(legacy.final_eval, r.final_eval, "{}", method.name());
+        // Value payloads are framing-independent; only index headers move.
+        assert_eq!(
+            legacy.ledger.per_kind.get(&lgc::metrics::Kind::Values),
+            r.ledger.per_kind.get(&lgc::metrics::Kind::Values),
+            "{}",
+            method.name()
+        );
+
+        let meta = e.manifest.model(&r.model).clone();
+        let model = Model::new(&meta, cfg.seed);
+        let layers: Vec<std::ops::Range<usize>> =
+            model.layer_slices(Group::Mid).into_iter().map(|(_, l)| l).collect();
+        let plan = BucketPlan::for_group(meta.n_mid, &layers, &cfg);
+        assert!(plan.len() >= 2, "convnet_mini mid must split into buckets");
+        let compute_s = 0.02f64;
+        let per_bucket: Vec<f64> = plan
+            .ranges()
+            .iter()
+            .map(|l| compute_s * (l.end - l.start) as f64 / meta.n_mid as f64)
+            .collect();
+        let fabric = r.net.fabric.with_link(LinkModel::from_mbits(50.0, 50e-6));
+        let seq = r.net.iter_comm_s_under(&fabric);
+        let piped = r.net.pipelined_iter_s_under(&fabric, &per_bucket);
+        assert_eq!(seq.len(), piped.len());
+        // No schedule beats the compute-bound or comm-bound floors...
+        for (c, p) in seq.iter().zip(&piped) {
+            assert!(*p >= compute_s - 1e-12, "{}: beat compute floor", method.name());
+            assert!(*p >= *c - 1e-12, "{}: beat comm floor", method.name());
+        }
+        // ...but overlap strictly beats the barrier on the steady tail.
+        let w = 4.min(seq.len());
+        let barrier: f64 = seq[seq.len() - w..].iter().map(|c| compute_s + c).sum();
+        let overlapped: f64 = piped[piped.len() - w..].iter().sum();
+        assert!(
+            overlapped < barrier,
+            "{}: pipelined {overlapped} !< barrier {barrier}",
+            method.name()
+        );
+    }
+}
+
+/// The overlapped schedule keeps the §6.5 determinism contract: curves,
+/// ledgers, and the bucket-tagged network trace (hence the overlap CSV
+/// derived from it) are bit-identical for any worker-thread count.
+#[test]
+fn overlapped_buckets_are_thread_count_invariant() {
+    let e = engine();
+    let run_with = |threads: usize| {
+        let mut cfg = tiny_cfg("convnet_mini", Method::SparseGd, 4);
+        cfg.buckets = 8;
+        cfg.threads = threads;
+        coordinator::train(&e, cfg).unwrap()
+    };
+    let seq = run_with(1);
+    for threads in [2, 4] {
+        let par = run_with(threads);
+        assert_eq!(seq.ledger.iter_bytes, par.ledger.iter_bytes, "threads={threads}");
+        let ls: Vec<f32> = seq.curve.iter().map(|p| p.train_loss).collect();
+        let lp: Vec<f32> = par.curve.iter().map(|p| p.train_loss).collect();
+        assert_eq!(ls, lp, "threads={threads}");
+        assert_eq!(seq.net, par.net, "threads={threads}: bucket-tagged trace drifted");
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Checkpointing through a native training run
 // ---------------------------------------------------------------------------
 

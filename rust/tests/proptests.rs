@@ -603,6 +603,124 @@ fn prop_scratch_encode_paths_match_allocating_paths() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bucketed pipeline (DESIGN.md §13): ragged partitions never change bits
+// ---------------------------------------------------------------------------
+
+/// Random ascending contiguous partition of `[0, n)` into `1..=max_b`
+/// ragged ranges — cut points drawn uniformly, so widths vary wildly,
+/// width-1 buckets included.
+fn random_partition(rng: &mut Rng, n: usize, max_b: usize) -> Vec<std::ops::Range<usize>> {
+    let b = 1 + rng.below(max_b.min(n - 1));
+    let mut cuts = std::collections::BTreeSet::new();
+    while cuts.len() < b - 1 {
+        cuts.insert(1 + rng.below(n - 1));
+    }
+    let mut edges = vec![0usize];
+    edges.extend(cuts);
+    edges.push(n);
+    edges.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+#[test]
+fn prop_ragged_buckets_bit_identical_for_ef_family() {
+    // The sparse-EF strategies (sparse_gd = plain EF, dgc = momentum-
+    // corrected EF) under any 1..=32 ragged bucket partition: selection,
+    // values, and residual feedback memory must all be bit-identical to
+    // the monolithic path, round after round (DESIGN.md §13.2).
+    use lgc::compress::Scratch;
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xB0C4E7 + case);
+        let n = 64 + rng.below(4000);
+        let ranges = random_partition(&mut rng, n, 32);
+        for correction in [Correction::Plain, Correction::Momentum] {
+            let mut mono = FeedbackMemory::new(n, correction, 0.9);
+            let mut buck = FeedbackMemory::new(n, correction, 0.9);
+            let (mut sc_m, mut sc_b) = (Scratch::new(), Scratch::new());
+            let mut grad_rng = Rng::new(0x6AAD + case);
+            for round in 0..4 {
+                let g = grad_rng.normal_vec(n, 1.0);
+                mono.accumulate(&g);
+                buck.accumulate(&g);
+                let k = 1 + rng.below(n / 4 + 1);
+                mono.select_and_clear_into(k, &mut sc_m);
+                buck.select_and_clear_bucketed_into(k, &ranges, &mut sc_b);
+                assert_eq!(sc_m.idx, sc_b.idx, "case {case} round {round}");
+                assert_eq!(sc_m.vals, sc_b.vals, "case {case} round {round}");
+                assert_eq!(mono.memory(), buck.memory(), "case {case} round {round}");
+                // The splits must tile the selection along the partition.
+                assert_eq!(sc_b.splits.len(), ranges.len() + 1, "case {case}");
+                assert_eq!(sc_b.splits[0], 0, "case {case}");
+                assert_eq!(*sc_b.splits.last().unwrap(), sc_b.idx.len(), "case {case}");
+                for (b, r) in ranges.iter().enumerate() {
+                    for &i in &sc_b.idx[sc_b.splits[b]..sc_b.splits[b + 1]] {
+                        assert!(r.contains(&(i as usize)), "case {case} bucket {b} idx {i}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_threshold_splits_and_bucket_packets_remerge() {
+    // The hard-threshold strategy ships whatever AIMD selected, cut into
+    // buckets by `splits_of`; each bucket's indices travel bucket-local,
+    // coded over the range width (the wire's GradientBucket framing).
+    // Decoding every bucket, re-globalizing, and concatenating must
+    // reproduce the monolithic packet bit-for-bit.
+    use lgc::coordinator::bucket::BucketPlan;
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x5B11 + case);
+        let n = 64 + rng.below(20_000);
+        let max_layers = 8 + rng.below(56);
+        let layers = random_partition(&mut rng, n, max_layers);
+        let plan = BucketPlan::from_layers(n, &layers, 1 + rng.below(32));
+        let k = 1 + rng.below(n / 4 + 1);
+        let idx = random_indices(&mut rng, n, k);
+        let vals: Vec<f32> = (0..idx.len()).map(|_| rng.normal()).collect();
+        let mut splits = Vec::new();
+        plan.splits_of(&idx, &mut splits);
+        assert_eq!(splits.len(), plan.len() + 1, "case {case}");
+        assert_eq!(splits[0], 0, "case {case}");
+        assert_eq!(*splits.last().unwrap(), idx.len(), "case {case}");
+        let (mut got_idx, mut got_vals) = (Vec::new(), Vec::new());
+        for (b, r) in plan.ranges().iter().enumerate() {
+            let (lo, hi) = (splits[b], splits[b + 1]);
+            let width = r.end - r.start;
+            let local: Vec<u32> = idx[lo..hi].iter().map(|&i| i - r.start as u32).collect();
+            assert!(
+                local.iter().all(|&i| (i as usize) < width),
+                "case {case} bucket {b}: local index out of range"
+            );
+            let coded = index_coding::encode(&local, width).unwrap();
+            let back = index_coding::decode(&coded, width).unwrap();
+            got_idx.extend(back.iter().map(|&i| i + r.start as u32));
+            got_vals.extend_from_slice(&vals[lo..hi]);
+        }
+        assert_eq!(got_idx, idx, "case {case}");
+        assert_eq!(got_vals, vals, "case {case}");
+    }
+}
+
+#[test]
+fn prop_dense_bucket_slices_reassemble_exactly() {
+    // The dense baseline streams each bucket as a raw slice; slotting the
+    // slices back by range must reproduce the original gradient bitwise,
+    // so the per-node mean (and everything downstream) cannot differ.
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xDE2E + case);
+        let n = 32 + rng.below(4000);
+        let ranges = random_partition(&mut rng, n, 32);
+        let g = rng.normal_vec(n, 1.0);
+        let mut back = vec![0.0f32; n];
+        for r in &ranges {
+            back[r.clone()].copy_from_slice(&g[r.clone()]);
+        }
+        assert_eq!(back, g, "case {case}");
+    }
+}
+
 #[test]
 fn prop_quantizer_error_bounded_by_bucket_norm() {
     use lgc::compress::quantize;

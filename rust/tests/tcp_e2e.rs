@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 use lgc::config::{Method, TrainConfig};
 use lgc::coordinator::{self, remote, TrainResult};
 use lgc::runtime::Engine;
-use lgc::transport::{Conn, Msg, PROTO_VERSION};
+use lgc::transport::{BucketUp, Conn, Msg, PROTO_VERSION};
 
 const LGC_BIN: &str = env!("CARGO_BIN_EXE_lgc");
 
@@ -56,6 +56,19 @@ fn tmp_path(tag: &str) -> String {
 /// Run the same config through the simulator and through K real worker
 /// processes, and assert every observable output is bit-identical.
 fn assert_tcp_matches_sim(model: &str, method: Method, nodes: usize, listen: &str, session: u64) {
+    assert_tcp_matches_sim_with(model, method, nodes, listen, session, |_| {});
+}
+
+/// [`assert_tcp_matches_sim`] with a config tweak applied to both runs
+/// (bucketing flags, thread counts, ...).
+fn assert_tcp_matches_sim_with(
+    model: &str,
+    method: Method,
+    nodes: usize,
+    listen: &str,
+    session: u64,
+    tweak: impl Fn(&mut TrainConfig),
+) {
     let e = engine();
     let tag = format!("{}-{}", method.name(), session);
     let ckpt_sim = tmp_path(&format!("{tag}-sim.ckpt"));
@@ -63,10 +76,12 @@ fn assert_tcp_matches_sim(model: &str, method: Method, nodes: usize, listen: &st
 
     let mut cfg_sim = cfg(model, method, nodes);
     cfg_sim.checkpoint = Some(ckpt_sim.clone());
+    tweak(&mut cfg_sim);
     let sim = coordinator::train(&e, cfg_sim).expect("sim run");
 
     let mut cfg_tcp = cfg(model, method, nodes);
     cfg_tcp.checkpoint = Some(ckpt_tcp.clone());
+    tweak(&mut cfg_tcp);
     let mut opts = remote::RemoteOpts::local(session);
     opts.listen = listen.into();
     opts.worker_bin = Some(LGC_BIN.into());
@@ -136,6 +151,31 @@ fn uds_run_bit_identical_to_sim() {
     let sock = tmp_path("uds.sock");
     let _ = std::fs::remove_file(&sock);
     assert_tcp_matches_sim("mlp_mini", Method::LgcPs, 2, &format!("unix:{sock}"), 0xE2E5);
+}
+
+/// DESIGN.md §13.4: with `--buckets 8 --no-overlap` the wire carries the
+/// legacy whole-group frames and must stay bit-identical to the sim —
+/// which in turn is bit-identical to the unbucketed run (native_e2e).
+#[test]
+fn tcp_bucketed_no_overlap_bit_identical_to_sim() {
+    assert_tcp_matches_sim_with("mlp_mini", Method::SparseGd, 4, "127.0.0.1:0", 0xE2E7, |c| {
+        c.buckets = 8;
+        c.overlap = false;
+    });
+}
+
+/// Overlapped mode streams one `GradientBucket` frame per bucket; the
+/// coordinator's replay mirrors the sim's per-bucket accounting exactly,
+/// so even here every observable — curves, ledgers, bucket-tagged net
+/// trace, checkpoint bytes — matches the simulator bit-for-bit.
+#[test]
+fn tcp_overlapped_buckets_bit_identical_to_sim() {
+    assert_tcp_matches_sim_with("convnet_mini", Method::Baseline, 4, "127.0.0.1:0", 0xE2E8, |c| {
+        c.buckets = 8;
+    });
+    assert_tcp_matches_sim_with("mlp_mini", Method::Dgc, 2, "127.0.0.1:0", 0xE2E9, |c| {
+        c.buckets = 4;
+    });
 }
 
 #[test]
@@ -239,6 +279,67 @@ fn killed_worker_errors_within_timeout_and_late_joins_are_refused() {
         let _ = w.kill();
         let _ = w.wait();
     }
+}
+
+/// A frame claiming a bucket id outside the session's plan must be
+/// answered with a descriptive `Error` frame and fail the run cleanly —
+/// never an index panic or a hang (the ISSUE-7 wire-validation bar).
+#[test]
+fn out_of_plan_bucket_id_is_refused_with_a_descriptive_error() {
+    let sock = tmp_path("badbucket.sock");
+    let _ = std::fs::remove_file(&sock);
+    let addr = format!("unix:{sock}");
+    let session = 0xBADBu64;
+    let nodes = 2;
+
+    let coord_addr = addr.clone();
+    let coord = std::thread::spawn(move || {
+        let e = engine();
+        let mut c = cfg("mlp_mini", Method::SparseGd, nodes);
+        c.buckets = 4;
+        c.steps = 1_000_000; // the rejection must end the run, not step count
+        c.eval_every = 0;
+        let mut opts = remote::RemoteOpts::local(session);
+        opts.listen = coord_addr;
+        opts.spawn_workers = false;
+        opts.net_timeout = Duration::from_secs(10);
+        remote::train_with_opts(&e, c, &opts)
+    });
+
+    // One honest worker process; the other node is this hand-rolled
+    // client, which joins properly and then lies about its bucket id.
+    let mut honest = spawn_external_worker(&addr, session);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut conn = loop {
+        match Conn::connect(&addr) {
+            Ok(c) => break c,
+            Err(e) if Instant::now() > deadline => panic!("connect: {e}"),
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    conn.send(&Msg::Join { proto: PROTO_VERSION, session }).unwrap();
+    let iter = loop {
+        match conn.recv().expect("handshake before the hostile frame") {
+            Msg::IterPlan { iter, .. } => break iter,
+            _ => continue, // JoinAck, weight broadcasts, ...
+        }
+    };
+    conn.send(&Msg::GradientBucket {
+        iter,
+        bucket: 999,
+        up: BucketUp::Sparse { coded_idx: Vec::new(), vals: Vec::new() },
+    })
+    .unwrap();
+
+    let refusal =
+        conn.recv().expect_err("out-of-plan bucket id must be refused").to_string();
+    assert!(refusal.contains("out of plan bounds"), "got: {refusal}");
+    let err = join_within(coord, 60, "bad bucket").expect_err("run must fail after rejection");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("out of plan bounds"), "coordinator error must name it, got: {msg}");
+    let _ = honest.kill();
+    let _ = honest.wait();
 }
 
 /// Workers launched before the coordinator binds must connect anyway:

@@ -8,7 +8,9 @@
 //! (every failure prints the case seed; re-running with it is exact).
 
 use lgc::config::{Method, SparsifySchedule, TrainConfig, TransportKind};
-use lgc::transport::{frame, Frame, FrameDecoder, LastUp, MidUp, Msg, MAX_FRAME, PROTO_VERSION};
+use lgc::transport::{
+    frame, BucketUp, Frame, FrameDecoder, LastUp, MidUp, Msg, MAX_FRAME, PROTO_VERSION,
+};
 use lgc::util::rng::Rng;
 
 const CASES: u64 = 200;
@@ -136,7 +138,7 @@ fn prop_garbage_streams_never_panic() {
 // ---------------------------------------------------------------------------
 
 fn random_mid(rng: &mut Rng) -> MidUp {
-    match rng.below(5) {
+    match rng.below(6) {
         0 => MidUp::Dense(vecf(rng)),
         1 => MidUp::Sparse { coded_idx: vecb(rng, 64), vals: vecf(rng) },
         2 => MidUp::Vv(vecf(rng)),
@@ -145,12 +147,13 @@ fn random_mid(rng: &mut Rng) -> MidUp {
             vals: vecf(rng),
             scale: f32::from_bits(rng.next_u64() as u32),
         },
+        4 => MidUp::Buckets(1 + rng.next_u64() as u32 % 32),
         _ => MidUp::None,
     }
 }
 
 fn random_msg(rng: &mut Rng) -> Msg {
-    match rng.below(12) {
+    match rng.below(13) {
         0 => Msg::Join { proto: rng.next_u64() as u16, session: rng.next_u64() },
         1 => Msg::JoinAck {
             node: rng.next_u64() as u32,
@@ -196,6 +199,15 @@ fn random_msg(rng: &mut Rng) -> Msg {
         8 => Msg::Model { iter: rng.next_u64() as u32, payload: vecb(rng, 256) },
         9 => Msg::Heartbeat,
         10 => Msg::Shutdown { reason: format!("reason {}", rng.below(1000)) },
+        11 => Msg::GradientBucket {
+            iter: rng.next_u64() as u32,
+            bucket: rng.next_u64() as u32,
+            up: if rng.below(2) == 0 {
+                BucketUp::Dense(vecf(rng))
+            } else {
+                BucketUp::Sparse { coded_idx: vecb(rng, 64), vals: vecf(rng) }
+            },
+        },
         _ => Msg::Error { msg: format!("error {}", rng.below(1000)) },
     }
 }
@@ -223,6 +235,9 @@ fn random_cfg(rng: &mut Rng) -> TrainConfig {
         straggler_spec: (0..rng.below(4))
             .map(|_| (rng.below(8), rng.uniform() as f64 * 4.0))
             .collect(),
+        buckets: 1 + rng.below(32),
+        bucket_bytes: rng.below(1 << 20),
+        overlap: rng.below(2) == 0,
         ..Default::default()
     }
 }
@@ -268,11 +283,11 @@ fn prop_cfg_blob_roundtrips_through_join_ack() {
 fn prop_unknown_message_type_bytes_error_cleanly() {
     for case in 0..CASES {
         let mut rng = Rng::new(0x1214 + case);
-        // Valid kinds are 1..=12; 0 and 13..=255 must be clean errors.
+        // Valid kinds are 1..=13; 0 and 14..=255 must be clean errors.
         let kind = if case % 2 == 0 {
             0
         } else {
-            13 + rng.below(243) as u8
+            14 + rng.below(242) as u8
         };
         let n = rng.below(128);
         let payload = random_bytes(&mut rng, n);
@@ -344,6 +359,8 @@ fn prop_interleaved_partial_reads_preserve_message_order() {
 #[test]
 fn proto_version_is_pinned() {
     // The join handshake rejects other versions; this test pins the
-    // constant so bumping it is a conscious, reviewed change.
-    assert_eq!(PROTO_VERSION, 1);
+    // constant so bumping it is a conscious, reviewed change.  v2 added
+    // bucketed streaming: kind 13 (GradientBucket), the MidUp::Buckets
+    // closing tag, and the buckets/bucket-bytes/overlap cfg fields.
+    assert_eq!(PROTO_VERSION, 2);
 }
