@@ -26,6 +26,7 @@ use crate::metrics::{Kind, Ledger, NodeLedger};
 use crate::net::NetSim;
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
+use crate::util::ser::{self, Reader};
 
 /// Per-iteration context handed to a strategy.
 pub struct ExchangeCtx<'a> {
@@ -68,6 +69,12 @@ pub struct ExchangeCtx<'a> {
     /// exact legacy accounting (one packet record pair, one fan-out
     /// round) — the `--no-overlap` bit-identity contract.
     pub overlap: bool,
+    /// Liveness mask under `--on-fault continue` (DESIGN.md §14): dead
+    /// nodes contribute no gradient, no EF work, and no bytes; every
+    /// aggregate renormalizes over the survivors.  All-true in fault-free
+    /// runs, where the masked paths are arithmetically identical to the
+    /// unmasked ones.
+    pub alive: &'a [bool],
 }
 
 /// Apply the configured value-payload precision: returns the values as
@@ -112,6 +119,59 @@ pub fn dense_mean_accounted(grads: &[Vec<f32>], shards: &mut [NodeLedger]) -> Ve
     mean
 }
 
+/// Number of live nodes in a liveness mask.
+pub fn live_count(alive: &[bool]) -> usize {
+    alive.iter().filter(|&&a| a).count()
+}
+
+/// Width of the exchanged gradient group: the first live node's length.
+/// Dead nodes may carry empty placeholder vectors under `--on-fault
+/// continue`, so `grads[0].len()` is not safe on masked paths.
+pub(crate) fn live_width(grads: &[Vec<f32>], alive: &[bool]) -> usize {
+    grads
+        .iter()
+        .zip(alive)
+        .find(|&(_, &a)| a)
+        .map(|(g, _)| g.len())
+        .expect("live_width: no live nodes left")
+}
+
+/// [`dense_mean_accounted`] over the survivors of a liveness mask: dead
+/// nodes contribute nothing (no bytes recorded, their EF residual is
+/// documented as lost — DESIGN.md §14) and the mean renormalizes over
+/// the live count.  With an all-true mask this is arithmetically
+/// identical to [`dense_mean_accounted`].
+pub fn dense_mean_masked(
+    grads: &[Vec<f32>],
+    alive: &[bool],
+    shards: &mut [NodeLedger],
+) -> Vec<f32> {
+    assert_eq!(grads.len(), shards.len(), "dense_mean_masked: one ledger shard per node");
+    assert_eq!(grads.len(), alive.len(), "dense_mean_masked: one liveness bit per node");
+    let n = live_width(grads, alive);
+    let mut mean = vec![0.0f32; n];
+    for ((g, shard), &live) in grads.iter().zip(shards.iter_mut()).zip(alive) {
+        if !live {
+            continue;
+        }
+        shard.record(Kind::Dense, n * 4);
+        for (m, x) in mean.iter_mut().zip(g) {
+            *m += x;
+        }
+    }
+    let k = live_count(alive) as f32;
+    mean.iter_mut().for_each(|m| *m /= k);
+    mean
+}
+
+/// Read + check the per-node row count prefix of a strategy state blob
+/// (crash-safe resume, DESIGN.md §14).
+pub(crate) fn check_node_count(r: &mut Reader, expect: usize, what: &str) -> Result<()> {
+    let n = r.u64()? as usize;
+    anyhow::ensure!(n == expect, "{what} state blob has {n} node rows, expected {expect}");
+    Ok(())
+}
+
 /// A mid-group exchange method: the single seam every comparator and
 /// both LGC instances plug into (strategy pattern over the §VI-A
 /// mid-layer group).
@@ -126,6 +186,18 @@ pub trait MidStrategy {
     fn ae_losses(&self) -> &[(f32, f32)] {
         &[]
     }
+
+    /// Serialize every piece of cross-iteration state this strategy owns
+    /// (EF memories, per-node RNG streams, learned-compressor weights,
+    /// latched gates) for crash-safe resume (DESIGN.md §14).  Transient
+    /// per-iteration buffers (supports, scratch arenas) are rebuilt by
+    /// the next exchange and are not serialized.
+    fn save_state(&self, out: &mut Vec<u8>);
+
+    /// Inverse of [`MidStrategy::save_state`]: restore into a freshly
+    /// constructed strategy of the same configuration.  A resumed run
+    /// must continue bit-identically to an uninterrupted one.
+    fn load_state(&mut self, r: &mut Reader) -> Result<()>;
 }
 
 /// Dense mean + per-node dense bytes (PS-pattern uncompressed training).
@@ -137,7 +209,7 @@ impl MidStrategy for Baseline {
     }
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
-        let mean = dense_mean_accounted(grads, &mut *ctx.shards);
+        let mean = dense_mean_masked(grads, ctx.alive, &mut *ctx.shards);
         // The server scatters the dense aggregate back to every worker —
         // per bucket under the overlap pipeline (per-node `Dense` ledger
         // records are slice-size-independent, so the byte ledger is
@@ -150,6 +222,12 @@ impl MidStrategy for Baseline {
             ctx.net.fanout((mean.len() * 4) as u64);
         }
         Ok(mean)
+    }
+
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    fn load_state(&mut self, _r: &mut Reader) -> Result<()> {
+        Ok(())
     }
 }
 
@@ -244,8 +322,9 @@ pub(crate) fn sparse_ef_exchange(
     plan: &BucketPlan,
     overlap: bool,
     net: &mut NetSim,
+    alive: &[bool],
 ) -> Result<Vec<f32>> {
-    let n = grads[0].len();
+    let n = live_width(grads, alive);
     let overlap = overlap && !plan.is_single();
     let k_sel = topk::k_of(n, alpha);
     let packet_bytes = parallel::collect_node_results(parallel::par_zip3_mut(
@@ -254,16 +333,25 @@ pub(crate) fn sparse_ef_exchange(
         shards,
         scratches,
         |node, fb, shard, sc| -> Result<Vec<u64>> {
+            if !alive[node] {
+                // Dead node: no EF work, no packet, no bytes.  Its arena
+                // is cleared so the scatter barrier below sees nothing.
+                sc.idx.clear();
+                sc.vals.clear();
+                return Ok(Vec::new());
+            }
             fb.accumulate(&grads[node]);
             fb.select_and_clear_bucketed_into(k_sel, plan.ranges(), sc);
             record_sparse_packet(n, plan, overlap, fp16, shard, sc)
         },
     ))?;
     let mut mean = vec![0.0f32; n];
-    for sc in scratches.iter() {
-        topk::scatter_add(&mut mean, &sc.idx, &sc.vals);
+    for (sc, &live) in scratches.iter().zip(alive) {
+        if live {
+            topk::scatter_add(&mut mean, &sc.idx, &sc.vals);
+        }
     }
-    let k = grads.len() as f32;
+    let k = live_count(alive) as f32;
     mean.iter_mut().for_each(|m| *m /= k);
     // Fan-out round(s): the server relays the sparse aggregate, measured
     // as the concatenation of the per-node compressed packets (an upper
@@ -307,7 +395,23 @@ impl MidStrategy for SparseGd {
             ctx.plan,
             ctx.overlap,
             &mut *ctx.net,
+            ctx.alive,
         )
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        ser::put_u64(out, self.fbs.len() as u64);
+        for fb in &self.fbs {
+            fb.write_state(out);
+        }
+    }
+
+    fn load_state(&mut self, r: &mut Reader) -> Result<()> {
+        check_node_count(r, self.fbs.len(), "sparse_gd")?;
+        for fb in &mut self.fbs {
+            fb.read_state(r)?;
+        }
+        Ok(())
     }
 }
 
@@ -348,7 +452,23 @@ impl MidStrategy for Dgc {
             ctx.plan,
             ctx.overlap,
             &mut *ctx.net,
+            ctx.alive,
         )
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        ser::put_u64(out, self.fbs.len() as u64);
+        for fb in &self.fbs {
+            fb.write_state(out);
+        }
+    }
+
+    fn load_state(&mut self, r: &mut Reader) -> Result<()> {
+        check_node_count(r, self.fbs.len(), "dgc")?;
+        for fb in &mut self.fbs {
+            fb.read_state(r)?;
+        }
+        Ok(())
     }
 }
 
@@ -380,6 +500,9 @@ impl MidStrategy for ScaleCom {
     }
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
+        // Leaderful method: `--on-fault continue` is rejected at config
+        // validation, so the mask is always all-true here.
+        debug_assert!(ctx.alive.iter().all(|&a| a), "scalecom does not support dead nodes");
         let n = grads[0].len();
         let k_sel = topk::k_of(n, self.alpha);
         let nodes = grads.len();
@@ -436,6 +559,23 @@ impl MidStrategy for ScaleCom {
         ctx.net.fanout(value_bytes[0] as u64);
         Ok(mean)
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        // The leader's support is refilled every iteration; only the EF
+        // memories carry across.
+        ser::put_u64(out, self.fbs.len() as u64);
+        for fb in &self.fbs {
+            fb.write_state(out);
+        }
+    }
+
+    fn load_state(&mut self, r: &mut Reader) -> Result<()> {
+        check_node_count(r, self.fbs.len(), "scalecom")?;
+        for fb in &mut self.fbs {
+            fb.read_state(r)?;
+        }
+        Ok(())
+    }
 }
 
 /// QSGD [22]: stochastic quantization, no error feedback (as published).
@@ -464,6 +604,10 @@ impl MidStrategy for Qsgd {
     }
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
+        // No error feedback: a dropped node's quantization noise is never
+        // retransmitted, so `--on-fault continue` is rejected at config
+        // validation and the mask is always all-true here.
+        debug_assert!(ctx.alive.iter().all(|&a| a), "qsgd does not support dead nodes");
         let n = grads[0].len();
         let (levels, bucket) = (self.levels, self.bucket);
         // Node-local stage: quantize into each node's arena buffer.
@@ -488,6 +632,23 @@ impl MidStrategy for Qsgd {
         // Fan-out: the dequantized aggregate is dense again.
         ctx.net.fanout((n * 4) as u64);
         Ok(mean)
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        // The per-node quantization RNG streams are the only
+        // cross-iteration state.
+        ser::put_u64(out, self.rngs.len() as u64);
+        for rng in &self.rngs {
+            rng.save_state(out);
+        }
+    }
+
+    fn load_state(&mut self, r: &mut Reader) -> Result<()> {
+        check_node_count(r, self.rngs.len(), "qsgd")?;
+        for rng in &mut self.rngs {
+            *rng = Rng::load_state(r)?;
+        }
+        Ok(())
     }
 }
 
@@ -530,17 +691,23 @@ impl MidStrategy for HardThreshold {
     }
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
-        let n = grads[0].len();
+        let n = live_width(grads, ctx.alive);
         let k_target = topk::k_of(n, self.alpha);
         let fp16 = ctx.fp16;
         let plan = ctx.plan;
         let overlap = ctx.overlap && !plan.is_single();
+        let alive = ctx.alive;
         let packet_bytes = parallel::collect_node_results(parallel::par_zip3_mut(
             ctx.threads,
             &mut self.nodes,
             &mut *ctx.shards,
             &mut *ctx.scratches,
             |node, st, shard, sc| -> Result<Vec<u64>> {
+                if !alive[node] {
+                    sc.idx.clear();
+                    sc.vals.clear();
+                    return Ok(Vec::new());
+                }
                 st.fb.accumulate(&grads[node]);
                 if st.threshold == 0.0 {
                     // Calibrate from the first post-accumulation
@@ -569,15 +736,34 @@ impl MidStrategy for HardThreshold {
             },
         ))?;
         let mut mean = vec![0.0f32; n];
-        for sc in ctx.scratches.iter() {
-            topk::scatter_add(&mut mean, &sc.idx, &sc.vals);
+        for (sc, &live) in ctx.scratches.iter().zip(alive) {
+            if live {
+                topk::scatter_add(&mut mean, &sc.idx, &sc.vals);
+            }
         }
-        mean.iter_mut().for_each(|m| *m /= grads.len() as f32);
+        mean.iter_mut().for_each(|m| *m /= live_count(alive) as f32);
         // Fan-out: relay of the concatenated per-node packets (variable
         // payloads, so this is measured per iteration) — per bucket when
         // overlapping.
         fanout_rounds(ctx.net, overlap, plan.len(), &packet_bytes);
         Ok(mean)
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        ser::put_u64(out, self.nodes.len() as u64);
+        for st in &self.nodes {
+            st.fb.write_state(out);
+            ser::put_f32(out, st.threshold);
+        }
+    }
+
+    fn load_state(&mut self, r: &mut Reader) -> Result<()> {
+        check_node_count(r, self.nodes.len(), "threshold")?;
+        for st in &mut self.nodes {
+            st.fb.read_state(r)?;
+            st.threshold = r.f32()?;
+        }
+        Ok(())
     }
 }
 
@@ -620,6 +806,7 @@ mod tests {
             &BucketPlan::single(6),
             false,
             &mut net,
+            &[true; 2],
         )
         .unwrap();
         // k = ceil(0.34 * 6) = 3 coords per node transmitted; transmitted
@@ -662,6 +849,7 @@ mod tests {
                     &BucketPlan::single(n),
                     false,
                     &mut net,
+                    &vec![true; nodes],
                 )
                 .unwrap();
                 for shard in shards.iter() {
@@ -703,7 +891,7 @@ mod tests {
                     (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
                 let mean = sparse_ef_exchange(
                     &mut fbs, &grads, 0.04, false, &mut shards, &mut scratches, 1, &plan,
-                    overlap, &mut net,
+                    overlap, &mut net, &[true; 4],
                 )
                 .unwrap();
                 crate::coordinator::scheduler::close_iteration(
@@ -744,5 +932,149 @@ mod tests {
         // exponential_alpha is tested in scheduler; here check DGC wiring
         // through the public helper only.
         assert!(exponential_alpha(0, 100, 1e-3) > exponential_alpha(99, 100, 1e-3));
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn dense_mean_masked_renormalizes_over_survivors() {
+        // A dead node (empty placeholder gradient) contributes nothing;
+        // the mean divides by the survivor count.
+        let grads = vec![vec![2.0f32; 8], Vec::new(), vec![4.0f32; 8]];
+        let mut shards = NodeLedger::for_nodes(3);
+        let mean = dense_mean_masked(&grads, &[true, false, true], &mut shards);
+        assert!(mean.iter().all(|&x| (x - 3.0).abs() < 1e-6));
+        let ledger = merged(&mut shards);
+        assert_eq!(ledger.total(), 2 * 8 * 4, "the dead node sent no bytes");
+        // All-alive path is bit-identical to the unmasked helper.
+        let grads2 = vec![vec![2.0f32; 8], vec![4.0f32; 8]];
+        let mut s1 = NodeLedger::for_nodes(2);
+        let mut s2 = NodeLedger::for_nodes(2);
+        let m1 = dense_mean_accounted(&grads2, &mut s1);
+        let m2 = dense_mean_masked(&grads2, &[true; 2], &mut s2);
+        assert_eq!(bits(&m1), bits(&m2));
+    }
+
+    #[test]
+    fn sparse_ef_exchange_drops_dead_node_and_renormalizes() {
+        let n = 6;
+        let mut fbs: Vec<FeedbackMemory> =
+            (0..3).map(|_| FeedbackMemory::new(n, Correction::Plain, 0.0)).collect();
+        let grads = vec![
+            vec![3.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            Vec::new(), // dead node's placeholder under --on-fault continue
+            vec![0.0, 0.0, 0.0, 0.0, 0.0, 9.0],
+        ];
+        let mut shards = NodeLedger::for_nodes(3);
+        let mut scratches = Scratch::for_nodes(3);
+        let mut net = NetSim::new(Default::default(), 3);
+        let mean = sparse_ef_exchange(
+            &mut fbs,
+            &grads,
+            0.2,
+            false,
+            &mut shards,
+            &mut scratches,
+            1,
+            &BucketPlan::single(n),
+            false,
+            &mut net,
+            &[true, false, true],
+        )
+        .unwrap();
+        // k = ceil(0.2 * 6) = 2 coords per *live* node; the mean divides
+        // by the two survivors, not three.
+        assert_eq!(mean[0], 1.5);
+        assert_eq!(mean[5], 4.5);
+        // The dead node's EF memory is untouched and its shard recorded
+        // no traffic.
+        assert!(fbs[1].memory().iter().all(|&x| x == 0.0));
+        let ledger = merged(&mut shards);
+        assert_eq!(ledger.per_kind[&Kind::Values], 2 * 2 * 4);
+    }
+
+    #[test]
+    fn sparse_gd_state_roundtrip_continues_bit_identically() {
+        // Drive the EF memories through real exchanges, snapshot via
+        // save_state, restore into a fresh instance, and check the next
+        // exchange is bit-identical (the resume contract at strategy
+        // level).
+        let mut rng = Rng::new(0x57A7E);
+        let (nodes, n) = (3usize, 96usize);
+        let plan = BucketPlan::single(n);
+        let alive = vec![true; nodes];
+        let mut a = SparseGd::new(nodes, n, 0.1);
+        let mut shards = NodeLedger::for_nodes(nodes);
+        let mut scratches = Scratch::for_nodes(nodes);
+        let mut net = NetSim::new(Default::default(), nodes);
+        for _ in 0..3 {
+            let grads: Vec<Vec<f32>> = (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
+            sparse_ef_exchange(
+                &mut a.fbs, &grads, 0.1, false, &mut shards, &mut scratches, 1, &plan, false,
+                &mut net, &alive,
+            )
+            .unwrap();
+        }
+        let mut blob = Vec::new();
+        a.save_state(&mut blob);
+        let mut b = SparseGd::new(nodes, n, 0.1);
+        let mut r = Reader::new(&blob);
+        b.load_state(&mut r).unwrap();
+        assert!(r.is_done());
+        let grads: Vec<Vec<f32>> = (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
+        let ma = sparse_ef_exchange(
+            &mut a.fbs, &grads, 0.1, false, &mut shards, &mut scratches, 1, &plan, false,
+            &mut net, &alive,
+        )
+        .unwrap();
+        let mut shards2 = NodeLedger::for_nodes(nodes);
+        let mut scratches2 = Scratch::for_nodes(nodes);
+        let mut net2 = NetSim::new(Default::default(), nodes);
+        let mb = sparse_ef_exchange(
+            &mut b.fbs, &grads, 0.1, false, &mut shards2, &mut scratches2, 1, &plan, false,
+            &mut net2, &alive,
+        )
+        .unwrap();
+        assert_eq!(bits(&ma), bits(&mb));
+        for (x, y) in a.fbs.iter().zip(&b.fbs) {
+            assert_eq!(x.memory(), y.memory());
+        }
+        // A blob for the wrong node count is rejected.
+        let mut c = SparseGd::new(nodes + 1, n, 0.1);
+        assert!(c.load_state(&mut Reader::new(&blob)).is_err());
+    }
+
+    #[test]
+    fn qsgd_and_threshold_state_roundtrip() {
+        // QSGD: the per-node RNG streams resume mid-sequence.
+        let mut q = Qsgd::new(16, 512, 2, 9);
+        q.rngs[0].next_u64();
+        q.rngs[0].normal();
+        q.rngs[1].normal();
+        let mut blob = Vec::new();
+        q.save_state(&mut blob);
+        let mut q2 = Qsgd::new(16, 512, 2, 9);
+        let mut r = Reader::new(&blob);
+        q2.load_state(&mut r).unwrap();
+        assert!(r.is_done());
+        assert_eq!(q.rngs[0].next_u64(), q2.rngs[0].next_u64());
+        assert_eq!(q.rngs[1].normal().to_bits(), q2.rngs[1].normal().to_bits());
+        // HardThreshold: EF memory + the calibrated threshold carry over.
+        let mut a = HardThreshold::new(2, 8, 0.25);
+        a.nodes[0].fb.accumulate(&[1.0; 8]);
+        a.nodes[0].threshold = 0.75;
+        let mut blob = Vec::new();
+        a.save_state(&mut blob);
+        let mut b = HardThreshold::new(2, 8, 0.25);
+        let mut r = Reader::new(&blob);
+        b.load_state(&mut r).unwrap();
+        assert!(r.is_done());
+        assert_eq!(b.nodes[0].threshold, 0.75);
+        assert_eq!(b.nodes[0].fb.memory(), a.nodes[0].fb.memory());
+        let mut blob2 = Vec::new();
+        b.save_state(&mut blob2);
+        assert_eq!(blob, blob2);
     }
 }

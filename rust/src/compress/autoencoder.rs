@@ -262,6 +262,58 @@ impl AeCompressor {
         Ok(())
     }
 
+    /// Serialize the *full* compressor state — encoder + decoder
+    /// parameters (raw LE f32 bits, declaration order, same discipline as
+    /// [`AeCompressor::export_encoder`]) plus the loss trace — for
+    /// crash-safe resume (DESIGN.md §14).
+    pub fn export_state(&self) -> Vec<u8> {
+        use crate::util::ser;
+        let mut out = Vec::new();
+        for group in [&self.enc_params, &self.dec_params] {
+            ser::put_u32(&mut out, group.len() as u32);
+            for t in group {
+                let flat: &[f32] = t.as_f32();
+                ser::put_f32s(&mut out, flat);
+            }
+        }
+        ser::put_u64(&mut out, self.train_losses.len() as u64);
+        for &(r, s) in &self.train_losses {
+            ser::put_f32(&mut out, r);
+            ser::put_f32(&mut out, s);
+        }
+        out
+    }
+
+    /// Restore from [`AeCompressor::export_state`] bytes; shapes stay
+    /// local (He-init replay), only values are replaced.
+    pub fn import_state(&mut self, r: &mut crate::util::ser::Reader) -> Result<()> {
+        for group in [&mut self.enc_params, &mut self.dec_params] {
+            let n = r.u32()? as usize;
+            anyhow::ensure!(
+                n == group.len(),
+                "AE state blob has {n} tensors, expected {}",
+                group.len()
+            );
+            for t in group.iter_mut() {
+                let vals = r.f32s()?;
+                anyhow::ensure!(
+                    vals.len() == t.len(),
+                    "AE tensor size mismatch: blob {} vs local {}",
+                    vals.len(),
+                    t.len()
+                );
+                *t = Tensor::f32(t.dims.clone(), vals);
+            }
+        }
+        let n_losses = r.count(8)?;
+        let mut losses = Vec::with_capacity(n_losses);
+        for _ in 0..n_losses {
+            losses.push((r.f32()?, r.f32()?));
+        }
+        self.train_losses = losses;
+        Ok(())
+    }
+
     /// One online SGD step on the autoencoder (phase 2), on unit-RMS
     /// normalized inputs (each row by its own scale; PS innovations by
     /// the matching row's scale, mirroring the inference path).

@@ -154,6 +154,32 @@ impl FeedbackMemory {
     pub fn residual_norm(&self) -> f32 {
         self.v.iter().map(|x| x * x).sum::<f32>().sqrt()
     }
+
+    /// Snapshot the memory (u, v) for resume/rejoin (DESIGN.md §14).  The
+    /// correction mode and momentum coefficient are config-derived and
+    /// therefore not part of the blob.
+    pub fn write_state(&self, out: &mut Vec<u8>) {
+        crate::util::ser::put_f32s(out, &self.u);
+        crate::util::ser::put_f32s(out, &self.v);
+    }
+
+    /// Restore (u, v) from [`FeedbackMemory::write_state`] bytes into a
+    /// memory already sized for its group.
+    pub fn read_state(&mut self, r: &mut crate::util::ser::Reader) -> anyhow::Result<()> {
+        let u = r.f32s()?;
+        let v = r.f32s()?;
+        anyhow::ensure!(
+            u.len() == self.u.len() && v.len() == self.v.len(),
+            "EF state size mismatch: blob ({}, {}) vs memory ({}, {})",
+            u.len(),
+            v.len(),
+            self.u.len(),
+            self.v.len()
+        );
+        self.u = u;
+        self.v = v;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -242,6 +268,27 @@ mod tests {
             assert_eq!(sb.splits.len(), ranges.len() + 1);
             assert_eq!(*sb.splits.last().unwrap(), sb.idx.len());
         }
+    }
+
+    #[test]
+    fn state_roundtrip_is_exact_and_size_checked() {
+        let mut rng = crate::util::rng::Rng::new(41);
+        let mut a = FeedbackMemory::new(64, Correction::Momentum, 0.9);
+        a.accumulate(&rng.normal_vec(64, 1.0));
+        a.select_and_clear(5);
+        a.accumulate(&rng.normal_vec(64, 1.0));
+        let mut blob = Vec::new();
+        a.write_state(&mut blob);
+        let mut b = FeedbackMemory::new(64, Correction::Momentum, 0.9);
+        let mut r = crate::util::ser::Reader::new(&blob);
+        b.read_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(a.memory(), b.memory());
+        assert_eq!(a.u, b.u);
+        // A blob for the wrong group size is rejected.
+        let mut c = FeedbackMemory::new(63, Correction::Momentum, 0.9);
+        let mut r = crate::util::ser::Reader::new(&blob);
+        assert!(c.read_state(&mut r).is_err());
     }
 
     #[test]

@@ -100,6 +100,43 @@ impl TransportKind {
     }
 }
 
+/// What the coordinator does when a worker dies mid-run (DESIGN.md §14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OnFault {
+    /// Fail-stop (default): abort the whole job with a descriptive error —
+    /// the PR-6 behavior, unchanged.
+    #[default]
+    Fail,
+    /// Remove the dead worker and renormalize aggregation over the K'
+    /// survivors.  The dead node's error-feedback residual is dropped;
+    /// survivors' state is untouched.  Only methods whose exchange is
+    /// leaderless support this (see `coordinator::faults`).
+    Continue,
+    /// Hold the iteration and re-admit the worker via the session-token
+    /// rejoin handshake: the coordinator resyncs iteration index, model
+    /// replica, AE encoder weights, and the worker's EF memory snapshot.
+    WaitRejoin,
+}
+
+impl OnFault {
+    pub fn parse(s: &str) -> Option<OnFault> {
+        Some(match s {
+            "fail" => OnFault::Fail,
+            "continue" => OnFault::Continue,
+            "wait-rejoin" | "wait_rejoin" | "rejoin" => OnFault::WaitRejoin,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OnFault::Fail => "fail",
+            OnFault::Continue => "continue",
+            OnFault::WaitRejoin => "wait-rejoin",
+        }
+    }
+}
+
 /// Sparsification schedule ablation (paper §VI-F, Fig. 13).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SparsifySchedule {
@@ -192,6 +229,25 @@ pub struct TrainConfig {
     /// Save the final model checkpoint here (both transports), so runs
     /// can be compared byte-for-byte across backends.
     pub checkpoint: Option<String>,
+    /// Worker→coordinator heartbeat period in milliseconds (0 = off, the
+    /// legacy behavior: liveness rests on per-read socket deadlines only).
+    pub heartbeat_ms: u64,
+    /// How many consecutive missed heartbeat periods the coordinator
+    /// tolerates before declaring a worker dead.
+    pub miss_budget: u32,
+    /// Fault policy: what happens when a worker dies (DESIGN.md §14).
+    pub on_fault: OnFault,
+    /// Deterministic fault-injection plan, e.g.
+    /// `"iter=40:kill=2;iter=60:stall=1:500ms;iter=80:corrupt-frame=3"`
+    /// (parsed by `coordinator::faults::FaultPlan`).
+    pub faults: Option<String>,
+    /// Resume a sim run from a v2 training-state checkpoint written by
+    /// `--ckpt-every`; the resumed run is bit-identical to an
+    /// uninterrupted one.
+    pub resume: Option<String>,
+    /// Write a full training-state snapshot to `checkpoint` every N
+    /// iterations (0 = final model checkpoint only).
+    pub ckpt_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -230,6 +286,12 @@ impl Default for TrainConfig {
             overlap: true,
             transport: TransportKind::Sim,
             checkpoint: None,
+            heartbeat_ms: 0,
+            miss_budget: 3,
+            on_fault: OnFault::Fail,
+            faults: None,
+            resume: None,
+            ckpt_every: 0,
         }
     }
 }
@@ -322,6 +384,15 @@ impl TrainConfig {
                 .unwrap_or_else(|| panic!("bad --transport {t:?} (sim|tcp)"));
         }
         c.checkpoint = a.opt_str("checkpoint");
+        c.heartbeat_ms = a.u64("heartbeat-ms", c.heartbeat_ms);
+        c.miss_budget = a.usize("miss-budget", c.miss_budget as usize) as u32;
+        if let Some(p) = a.opt_str("on-fault") {
+            c.on_fault = OnFault::parse(&p)
+                .unwrap_or_else(|| panic!("bad --on-fault {p:?} (fail|continue|wait-rejoin)"));
+        }
+        c.faults = a.opt_str("faults");
+        c.resume = a.opt_str("resume");
+        c.ckpt_every = a.usize("ckpt-every", c.ckpt_every);
         c
     }
 }
@@ -388,6 +459,51 @@ mod tests {
         assert_eq!(c.model, "resnet_mini");
         assert_eq!(c.method, Method::Dgc);
         assert_eq!(c.steps, 7);
+    }
+
+    #[test]
+    fn fault_flags_parse() {
+        let c = TrainConfig::default();
+        assert_eq!(c.heartbeat_ms, 0);
+        assert_eq!(c.miss_budget, 3);
+        assert_eq!(c.on_fault, OnFault::Fail);
+        assert_eq!(c.faults, None);
+        assert_eq!(c.resume, None);
+        assert_eq!(c.ckpt_every, 0);
+        let a = Args::parse(
+            [
+                "--heartbeat-ms",
+                "200",
+                "--miss-budget",
+                "5",
+                "--on-fault",
+                "wait-rejoin",
+                "--faults",
+                "iter=4:kill=1",
+                "--ckpt-every",
+                "8",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            &["heartbeat-ms", "miss-budget", "on-fault", "faults", "ckpt-every"],
+            &[],
+        )
+        .unwrap();
+        let c = TrainConfig::from_args(&a);
+        assert_eq!(c.heartbeat_ms, 200);
+        assert_eq!(c.miss_budget, 5);
+        assert_eq!(c.on_fault, OnFault::WaitRejoin);
+        assert_eq!(c.faults.as_deref(), Some("iter=4:kill=1"));
+        assert_eq!(c.ckpt_every, 8);
+        for (s, want) in [
+            ("fail", OnFault::Fail),
+            ("continue", OnFault::Continue),
+            ("wait_rejoin", OnFault::WaitRejoin),
+        ] {
+            assert_eq!(OnFault::parse(s), Some(want));
+            assert_eq!(OnFault::parse(want.name()), Some(want));
+        }
+        assert_eq!(OnFault::parse("retry"), None);
     }
 
     #[test]

@@ -1,0 +1,442 @@
+//! Deterministic fault injection + liveness bookkeeping (DESIGN.md §14).
+//!
+//! A [`FaultPlan`] is parsed from `--faults
+//! "iter=40:kill=2;iter=60:stall=1:500ms;iter=80:corrupt-frame=3"` and
+//! executed at iteration boundaries by *both* backends: the simulator
+//! perturbs its own loop and the fabric, the TCP coordinator kills or
+//! stalls real worker child processes and mangles frames through the
+//! [`crate::transport::Conn`] corruption shim.  Because the plan is part
+//! of the config and fires on iteration indices (never wall-clock), every
+//! recovery path is exercised by reproducible chaos tests instead of
+//! hand-timed kills.
+//!
+//! What happens *after* a fault fires is the [`crate::config::OnFault`]
+//! policy's job (fail / continue / wait-rejoin); this module only decides
+//! *when and what* breaks, records what broke ([`FaultEvent`]), and keeps
+//! the coordinator's per-node liveness clock ([`LivenessMonitor`]).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Method, OnFault, TrainConfig};
+
+/// One injected fault, scheduled on an iteration index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Kill worker `node` (sim: the node goes silent; tcp: SIGKILL the
+    /// child process).
+    Kill { node: usize },
+    /// Stall worker `node` for `ms` milliseconds (sim: priced into the
+    /// fabric's modeled time; tcp: SIGSTOP / sleep / SIGCONT).
+    Stall { node: usize, ms: u64 },
+    /// Corrupt the next frame received from worker `node` (sim: priced as
+    /// a retransmit; tcp: a byte of the next frame payload is flipped
+    /// before decoding).
+    CorruptFrame { node: usize },
+    /// Crash the coordinator itself at the top of the iteration — the
+    /// hook the crash-safe-resume tests use to interrupt a run at a
+    /// planned point (`--resume` then proves bit-identity).
+    Crash,
+}
+
+impl FaultAction {
+    /// The node a fault targets (None for coordinator crashes).
+    pub fn node(&self) -> Option<usize> {
+        match self {
+            FaultAction::Kill { node }
+            | FaultAction::Stall { node, .. }
+            | FaultAction::CorruptFrame { node } => Some(*node),
+            FaultAction::Crash => None,
+        }
+    }
+
+    /// Short action name for event logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultAction::Kill { .. } => "kill",
+            FaultAction::Stall { .. } => "stall",
+            FaultAction::CorruptFrame { .. } => "corrupt-frame",
+            FaultAction::Crash => "crash",
+        }
+    }
+}
+
+/// One entry of a run's fault-event log ([`crate::coordinator::TrainResult`]
+/// carries the full list; `lgc train` prints it; CI uploads it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Iteration the event fired on.
+    pub iter: usize,
+    /// Affected node (None for coordinator-level events).
+    pub node: Option<usize>,
+    /// Action name (`kill`, `stall`, `corrupt-frame`, `crash`, plus
+    /// recovery outcomes like `removed` or `rejoined`).
+    pub kind: String,
+    /// Human-readable description of what happened / how it was handled.
+    pub detail: String,
+}
+
+impl FaultEvent {
+    /// One `FAULT ...` log line (the artifact format CI uploads).
+    pub fn log_line(&self) -> String {
+        match self.node {
+            Some(n) => format!("FAULT iter={} node={} {}: {}", self.iter, n, self.kind, self.detail),
+            None => format!("FAULT iter={} {}: {}", self.iter, self.kind, self.detail),
+        }
+    }
+}
+
+/// A parsed, iteration-indexed fault schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// (iteration, action), sorted by iteration (stable: spec order is
+    /// preserved within one iteration).
+    events: Vec<(usize, FaultAction)>,
+}
+
+impl FaultPlan {
+    /// Parse a `--faults` spec.  Grammar (`;`-separated segments):
+    ///
+    /// ```text
+    /// segment   := "iter=" N ":" action
+    /// action    := "kill=" NODE | "stall=" NODE ":" duration
+    ///            | "corrupt-frame=" NODE | "crash"
+    /// duration  := N "ms" | N "s"
+    /// ```
+    ///
+    /// Node ids are validated against `nodes`; every malformed input is a
+    /// descriptive error, never a panic (fuzzed below).
+    pub fn parse(spec: &str, nodes: usize) -> Result<FaultPlan> {
+        let mut events: Vec<(usize, FaultAction)> = Vec::new();
+        for seg in spec.split(';') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                continue;
+            }
+            let mut parts = seg.split(':');
+            let iter_part = parts.next().unwrap_or("");
+            let iter = match iter_part.strip_prefix("iter=") {
+                Some(n) => n
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad iteration {n:?} in --faults segment {seg:?}"))?,
+                None => bail!("--faults segment {seg:?} must start with iter=N"),
+            };
+            let action_part = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--faults segment {seg:?} is missing an action"))?
+                .trim();
+            let parse_node = |raw: &str| -> Result<usize> {
+                let node = raw
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad node id {raw:?} in --faults segment {seg:?}"))?;
+                if node >= nodes {
+                    bail!(
+                        "--faults segment {seg:?} targets node {node}, but the run has only \
+                         {nodes} nodes (ids 0..{})",
+                        nodes.saturating_sub(1)
+                    );
+                }
+                Ok(node)
+            };
+            let action = if let Some(raw) = action_part.strip_prefix("kill=") {
+                FaultAction::Kill { node: parse_node(raw)? }
+            } else if let Some(raw) = action_part.strip_prefix("stall=") {
+                let node = parse_node(raw)?;
+                let dur = parts
+                    .next()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("--faults stall in {seg:?} needs a duration (e.g. 500ms)")
+                    })?
+                    .trim();
+                FaultAction::Stall { node, ms: parse_duration_ms(dur, seg)? }
+            } else if let Some(raw) = action_part.strip_prefix("corrupt-frame=") {
+                FaultAction::CorruptFrame { node: parse_node(raw)? }
+            } else if action_part == "crash" {
+                FaultAction::Crash
+            } else {
+                bail!(
+                    "unknown --faults action {action_part:?} in segment {seg:?} \
+                     (kill=N | stall=N:DUR | corrupt-frame=N | crash)"
+                );
+            };
+            if let Some(extra) = parts.next() {
+                bail!("trailing field {extra:?} in --faults segment {seg:?}");
+            }
+            events.push((iter, action));
+        }
+        events.sort_by_key(|&(it, _)| it);
+        Ok(FaultPlan { events })
+    }
+
+    /// Whether any faults are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Drain every action scheduled for iteration `it` (in spec order).
+    /// Entries scheduled *before* `it` are dropped too — a resumed run
+    /// never re-fires faults that belong to the interrupted prefix.
+    pub fn take(&mut self, it: usize) -> Vec<FaultAction> {
+        let mut fired = Vec::new();
+        self.events.retain(|(when, action)| {
+            if *when == it {
+                fired.push(action.clone());
+                false
+            } else {
+                *when > it
+            }
+        });
+        fired
+    }
+
+    /// The nodes any scheduled kill/stall/corrupt targets (used by the
+    /// TCP coordinator to validate that it can actually reach the target
+    /// processes).
+    pub fn targets_processes(&self) -> bool {
+        self.events
+            .iter()
+            .any(|(_, a)| matches!(a, FaultAction::Kill { .. } | FaultAction::Stall { .. }))
+    }
+}
+
+fn parse_duration_ms(raw: &str, seg: &str) -> Result<u64> {
+    let (digits, mult) = if let Some(d) = raw.strip_suffix("ms") {
+        (d, 1u64)
+    } else if let Some(d) = raw.strip_suffix('s') {
+        (d, 1000u64)
+    } else {
+        bail!("bad duration {raw:?} in --faults segment {seg:?} (expected e.g. 500ms or 2s)");
+    };
+    let n = digits
+        .trim()
+        .parse::<u64>()
+        .map_err(|_| anyhow::anyhow!("bad duration {raw:?} in --faults segment {seg:?}"))?;
+    n.checked_mul(mult)
+        .ok_or_else(|| anyhow::anyhow!("duration {raw:?} in --faults segment {seg:?} overflows"))
+}
+
+/// Reject configurations whose fault policy the selected method cannot
+/// honor (loud errors, not silent fallbacks — same contract as
+/// [`crate::coordinator::remote::gate_method`]).
+pub fn validate_fault_config(cfg: &TrainConfig) -> Result<()> {
+    if cfg.on_fault == OnFault::Continue {
+        match cfg.method {
+            Method::LgcPs | Method::LgcRar | Method::ScaleCom | Method::Qsgd => bail!(
+                "--on-fault continue is not supported for method {} (its leader rotation / \
+                 per-node quantization streams are indexed by the full node set); use \
+                 --on-fault wait-rejoin instead",
+                cfg.method.name()
+            ),
+            _ => {}
+        }
+    }
+    if cfg.faults.is_some() {
+        // Parse eagerly so a bad spec fails before any training work.
+        FaultPlan::parse(cfg.faults.as_deref().unwrap_or(""), cfg.nodes)?;
+    }
+    if cfg.ckpt_every > 0 && cfg.checkpoint.is_none() {
+        bail!("--ckpt-every needs --checkpoint PATH to write the periodic snapshots to");
+    }
+    if cfg.resume.is_some() && cfg.transport == crate::config::TransportKind::Tcp {
+        bail!("--resume is sim-only for now; rerun with --transport sim");
+    }
+    Ok(())
+}
+
+/// The deterministic re-admission credential for `wait-rejoin`: both
+/// sides derive it from (session, node), so a respawned worker needs only
+/// `--rejoin-node N` and the session id it already has — and a stray
+/// process that knows the session but fakes a node id still has to match
+/// the mixed token.
+pub fn rejoin_token(session: u64, node: usize) -> u64 {
+    // splitmix64 finalizer over the pair.
+    let mut z = session ^ (node as u64).wrapping_mul(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Coordinator-side liveness clock: last observed progress per worker,
+/// plus the heartbeat parameters that turn "how long ago" into "how many
+/// missed beats".  Death is detected by *absence of progress* — the
+/// read-deadline on the socket fires — and this monitor turns that into a
+/// budget-aware description (DESIGN.md §14's liveness state machine).
+#[derive(Debug)]
+pub struct LivenessMonitor {
+    heartbeat_ms: u64,
+    miss_budget: u32,
+    last_progress: Vec<Instant>,
+}
+
+impl LivenessMonitor {
+    pub fn new(nodes: usize, heartbeat_ms: u64, miss_budget: u32) -> LivenessMonitor {
+        LivenessMonitor {
+            heartbeat_ms,
+            miss_budget,
+            last_progress: vec![Instant::now(); nodes],
+        }
+    }
+
+    /// Record that `node` made protocol progress (a real frame arrived or
+    /// a send succeeded).
+    pub fn observe(&mut self, node: usize) {
+        self.last_progress[node] = Instant::now();
+    }
+
+    /// Describe `node`'s liveness state for an error message: how stale
+    /// it is and how that relates to the configured miss budget.
+    pub fn describe(&self, node: usize) -> String {
+        let stale = self.last_progress[node].elapsed();
+        if self.heartbeat_ms == 0 {
+            return format!("node {node} last made progress {:.1}s ago", stale.as_secs_f64());
+        }
+        let missed = (stale.as_millis() as u64) / self.heartbeat_ms.max(1);
+        format!(
+            "node {node} last made progress {:.1}s ago (~{missed} heartbeat periods of {}ms; \
+             miss budget {})",
+            stale.as_secs_f64(),
+            self.heartbeat_ms,
+            self.miss_budget
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let mut p = FaultPlan::parse(
+            "iter=40:kill=2;iter=60:stall=1:500ms;iter=80:corrupt-frame=3",
+            8,
+        )
+        .unwrap();
+        assert_eq!(p.take(40), vec![FaultAction::Kill { node: 2 }]);
+        assert_eq!(p.take(41), vec![]);
+        assert_eq!(p.take(60), vec![FaultAction::Stall { node: 1, ms: 500 }]);
+        assert_eq!(p.take(80), vec![FaultAction::CorruptFrame { node: 3 }]);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn crash_and_seconds_durations() {
+        let mut p = FaultPlan::parse("iter=5:stall=0:2s;iter=5:crash", 2).unwrap();
+        assert_eq!(
+            p.take(5),
+            vec![FaultAction::Stall { node: 0, ms: 2000 }, FaultAction::Crash]
+        );
+    }
+
+    #[test]
+    fn overlapping_iters_fire_in_spec_order() {
+        let mut p = FaultPlan::parse("iter=3:kill=1;iter=3:kill=0", 4).unwrap();
+        assert_eq!(
+            p.take(3),
+            vec![FaultAction::Kill { node: 1 }, FaultAction::Kill { node: 0 }]
+        );
+    }
+
+    #[test]
+    fn stale_entries_dropped_on_resume() {
+        let mut p = FaultPlan::parse("iter=3:kill=1;iter=9:kill=0", 4).unwrap();
+        // A resumed run starting at iteration 5 never re-fires iter 3.
+        assert_eq!(p.take(5), vec![]);
+        assert_eq!(p.take(9), vec![FaultAction::Kill { node: 0 }]);
+    }
+
+    #[test]
+    fn out_of_range_node_rejected() {
+        let e = FaultPlan::parse("iter=1:kill=4", 4).unwrap_err();
+        assert!(e.to_string().contains("node 4"), "{e}");
+        assert!(FaultPlan::parse("iter=1:stall=9:1ms", 4).is_err());
+        assert!(FaultPlan::parse("iter=1:corrupt-frame=100", 4).is_err());
+    }
+
+    #[test]
+    fn garbage_specs_are_errors() {
+        for bad in [
+            "kill=2",
+            "iter=x:kill=1",
+            "iter=1",
+            "iter=1:explode=2",
+            "iter=1:stall=1",
+            "iter=1:stall=1:fast",
+            "iter=1:stall=1:-5ms",
+            "iter=1:kill=1:extra",
+            "iter=1:stall=1:99999999999999999999ms",
+            "iter=1:crash:now",
+        ] {
+            assert!(FaultPlan::parse(bad, 4).is_err(), "{bad:?} must be rejected");
+        }
+        // Empty / whitespace / stray separators are fine (empty plan).
+        for ok in ["", "  ", ";", "; ;"] {
+            assert!(FaultPlan::parse(ok, 4).unwrap().is_empty());
+        }
+    }
+
+    /// Never-panic fuzz over hostile specs (satellite: the parser is fed
+    /// attacker-shaped strings and must always return, Ok or Err).
+    #[test]
+    fn parser_never_panics_on_hostile_input() {
+        let mut rng = Rng::new(0xFA_015);
+        let alphabet: Vec<char> =
+            "iter=kilstacorup-fmh;:0123456789xms \u{7f}\u{0}=;;".chars().collect();
+        for case in 0..500 {
+            let len = rng.below(40);
+            let s: String =
+                (0..len).map(|_| alphabet[rng.below(alphabet.len())]).collect();
+            let nodes = 1 + rng.below(9);
+            let _ = FaultPlan::parse(&s, nodes); // must not panic
+            let _ = case;
+        }
+        // Structured-but-wrong inputs too.
+        for case in 0..200 {
+            let s = format!(
+                "iter={}:kill={};iter={}:stall={}:{}ms",
+                rng.below(1000),
+                rng.below(20),
+                rng.below(1000),
+                rng.below(20),
+                rng.below(10_000)
+            );
+            let _ = FaultPlan::parse(&s, 1 + rng.below(8));
+            let _ = case;
+        }
+    }
+
+    #[test]
+    fn rejoin_token_is_deterministic_and_node_specific() {
+        let a = rejoin_token(0xE2E1, 2);
+        assert_eq!(a, rejoin_token(0xE2E1, 2));
+        assert_ne!(a, rejoin_token(0xE2E1, 3));
+        assert_ne!(a, rejoin_token(0xE2E2, 2));
+    }
+
+    #[test]
+    fn validate_rejects_continue_for_leaderful_methods() {
+        let mut cfg = TrainConfig { on_fault: OnFault::Continue, ..Default::default() };
+        cfg.method = Method::LgcPs;
+        assert!(validate_fault_config(&cfg).is_err());
+        cfg.method = Method::ScaleCom;
+        assert!(validate_fault_config(&cfg).is_err());
+        cfg.method = Method::SparseGd;
+        assert!(validate_fault_config(&cfg).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_ckpt_every_without_path() {
+        let cfg = TrainConfig { ckpt_every: 10, ..Default::default() };
+        assert!(validate_fault_config(&cfg).is_err());
+        let cfg = TrainConfig {
+            ckpt_every: 10,
+            checkpoint: Some("/tmp/x".into()),
+            ..Default::default()
+        };
+        assert!(validate_fault_config(&cfg).is_ok());
+    }
+}

@@ -34,13 +34,14 @@
 
 use anyhow::Result;
 
-use crate::baselines::{dense_mean_accounted, ExchangeCtx, MidStrategy};
+use crate::baselines::{check_node_count, dense_mean_accounted, ExchangeCtx, MidStrategy};
 use crate::compress::autoencoder::{rms, AeCompressor, Pattern};
 use crate::compress::{index_coding, topk, Correction, FeedbackMemory, Scratch};
 use crate::coordinator::parallel;
 use crate::coordinator::ring;
 use crate::coordinator::scheduler::Phase;
 use crate::metrics::Kind;
+use crate::util::ser::{self, Reader};
 
 /// Knobs shared by both LGC instances (subset of [`crate::config::TrainConfig`]).
 #[derive(Debug, Clone, Copy)]
@@ -174,6 +175,35 @@ impl LgcCommon {
             ae_gate: p.ae_gate,
             ae_ready: false,
         }
+    }
+
+    /// Serialize the cross-iteration state shared by both LGC instances
+    /// (crash-safe resume, DESIGN.md §14): per-node EF memories, the
+    /// latched readiness gate, and the autoencoder (weights + the online
+    /// loss history the gate averages over).  The support and the
+    /// per-node value/innovation buffers are refilled every iteration
+    /// and are not serialized.
+    fn save_state(&self, out: &mut Vec<u8>) {
+        ser::put_u64(out, self.nodes.len() as u64);
+        for st in &self.nodes {
+            st.fb.write_state(out);
+        }
+        ser::put_u8(out, self.ae_ready as u8);
+        out.extend_from_slice(&self.ae.export_state());
+    }
+
+    fn load_state(&mut self, r: &mut Reader) -> Result<()> {
+        check_node_count(r, self.nodes.len(), "lgc")?;
+        for st in &mut self.nodes {
+            st.fb.read_state(r)?;
+        }
+        self.ae_ready = match r.u8()? {
+            0 => false,
+            1 => true,
+            other => anyhow::bail!("bad ae_ready tag {other}"),
+        };
+        self.ae.import_state(r)?;
+        Ok(())
     }
 
     /// Check (and latch) autoencoder readiness.
@@ -371,6 +401,9 @@ impl MidStrategy for LgcPs {
     }
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
+        // Leaderful method: `--on-fault continue` is rejected at config
+        // validation (use wait-rejoin), so the mask is all-true here.
+        debug_assert!(ctx.alive.iter().all(|&a| a), "lgc_ps does not support dead nodes");
         match ctx.phase {
             Phase::Dense => {
                 let mean = dense_mean_accounted(grads, &mut *ctx.shards);
@@ -468,6 +501,14 @@ impl MidStrategy for LgcPs {
     fn ae_losses(&self) -> &[(f32, f32)] {
         &self.c.ae.train_losses
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        self.c.save_state(out);
+    }
+
+    fn load_state(&mut self, r: &mut Reader) -> Result<()> {
+        self.c.load_state(r)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -514,6 +555,9 @@ impl MidStrategy for LgcRar {
     }
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx, grads: &[Vec<f32>]) -> Result<Vec<f32>> {
+        // Leaderful method: `--on-fault continue` is rejected at config
+        // validation (use wait-rejoin), so the mask is all-true here.
+        debug_assert!(ctx.alive.iter().all(|&a| a), "lgc_rar does not support dead nodes");
         // The dense-phase working copies are only live during warmup;
         // release the K gradient-sized buffers once the phase moves on.
         if ctx.phase != Phase::Dense && !self.ring_work.is_empty() {
@@ -618,5 +662,22 @@ impl MidStrategy for LgcRar {
 
     fn ae_losses(&self) -> &[(f32, f32)] {
         &self.c.ae.train_losses
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        self.c.save_state(out);
+        // The one-time phase-3 weight broadcast must not re-fire (and
+        // re-bill) after a resume.
+        ser::put_u8(out, self.weights_broadcast as u8);
+    }
+
+    fn load_state(&mut self, r: &mut Reader) -> Result<()> {
+        self.c.load_state(r)?;
+        self.weights_broadcast = match r.u8()? {
+            0 => false,
+            1 => true,
+            other => anyhow::bail!("bad weights_broadcast tag {other}"),
+        };
+        Ok(())
     }
 }

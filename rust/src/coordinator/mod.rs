@@ -21,6 +21,7 @@
 //!   last layer  — dense for Baseline/QSGD; top-k + EF for sparse methods
 
 pub mod bucket;
+pub mod faults;
 pub mod lgc;
 pub mod parallel;
 pub mod remote;
@@ -33,18 +34,20 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::baselines::{
-    dense_mean_accounted, sparse_ef_exchange, Baseline, Dgc, ExchangeCtx, HardThreshold,
-    MidStrategy, Qsgd, ScaleCom, SparseGd,
+    dense_mean_masked, live_count, sparse_ef_exchange, Baseline, Dgc, ExchangeCtx,
+    HardThreshold, MidStrategy, Qsgd, ScaleCom, SparseGd,
 };
 use crate::compress::{Correction, FeedbackMemory, Scratch};
-use crate::config::{Method, TrainConfig, TransportKind};
+use crate::config::{Method, OnFault, TrainConfig, TransportKind};
 use crate::data::{self, Dataset};
 use crate::metrics::{Ledger, NodeLedger};
-use crate::model::{Group, Model};
+use crate::model::{checkpoint, Group, Model};
 use crate::net::{LinkModel, NetReport, NetSim};
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
+use crate::util::ser::{self, Reader};
 use bucket::{method_bucketable, BucketPlan};
+use faults::{FaultAction, FaultEvent, FaultPlan};
 use scheduler::{phase_and_alpha, Phase};
 
 /// Step LR decay mirroring the paper's schedule ("initial learning rate of
@@ -98,6 +101,9 @@ pub struct TrainResult {
     /// The simulated network fabric's recorded trace + pricing — the
     /// per-node modeled time ledger (DESIGN.md §11).
     pub net: NetReport,
+    /// Every injected/observed fault this run handled, in execution order
+    /// (DESIGN.md §14).  Empty for fault-free runs.
+    pub fault_events: Vec<FaultEvent>,
 }
 
 impl TrainResult {
@@ -141,6 +147,26 @@ impl TrainResult {
         let steady_iters = *self.phase_iters.iter().rev().find(|&&n| n > 0).unwrap_or(&1);
         self.net.steady_comm_s_under(fabric, window.min(steady_iters.max(1)))
     }
+}
+
+/// Modeled retransmit window charged to a node whose frame arrives
+/// corrupted in the simulated backend (detected by frame CRC,
+/// retransmitted once): a fixed, deterministic stall (DESIGN.md §14).
+const CORRUPT_RETRANSMIT_S: f64 = 0.05;
+
+/// Configuration fingerprint stored in resume checkpoints: the Debug
+/// rendering of the config with every resume-orthogonal field normalized
+/// away — the fault/checkpoint plumbing itself plus fields the
+/// bit-identity contracts prove irrelevant (thread count, verbosity).
+fn cfg_fingerprint(cfg: &TrainConfig) -> String {
+    let mut c = cfg.clone();
+    c.resume = None;
+    c.faults = None;
+    c.checkpoint = None;
+    c.ckpt_every = 0;
+    c.verbose = false;
+    c.threads = 0;
+    format!("{c:?}")
 }
 
 /// Build the mid-group strategy for a config.
@@ -212,6 +238,9 @@ pub struct Trainer<'e> {
     /// Effective overlap mode: `cfg.overlap` and a real multi-bucket plan.
     overlap: bool,
     rng: Rng,
+    /// Liveness mask (DESIGN.md §14): flipped false by `kill` faults under
+    /// `--on-fault continue`; all-true otherwise.
+    alive: Vec<bool>,
 }
 
 impl<'e> Trainer<'e> {
@@ -255,6 +284,7 @@ impl<'e> Trainer<'e> {
         let overlap = cfg.overlap && !plan.is_single();
         let last_plan = BucketPlan::single(n_last);
         let rng = Rng::new(cfg.seed ^ 0x7124);
+        let alive = vec![true; cfg.nodes];
         Ok(Trainer {
             engine,
             cfg,
@@ -267,6 +297,7 @@ impl<'e> Trainer<'e> {
             last_plan,
             overlap,
             rng,
+            alive,
         })
     }
 
@@ -285,12 +316,11 @@ impl<'e> Trainer<'e> {
         shards: &mut [NodeLedger],
         net: &mut NetSim,
     ) -> Result<Vec<f32>> {
-        let n = grads[0].len();
         let dense = matches!(self.cfg.method, Method::Baseline | Method::Qsgd)
             || phase == Phase::Dense;
         if dense {
-            let mean = dense_mean_accounted(grads, shards);
-            net.fanout((n * 4) as u64);
+            let mean = dense_mean_masked(grads, &self.alive, shards);
+            net.fanout((mean.len() * 4) as u64);
             return Ok(mean);
         }
         sparse_ef_exchange(
@@ -304,6 +334,7 @@ impl<'e> Trainer<'e> {
             &self.last_plan,
             false,
             net,
+            &self.alive,
         )
     }
 
@@ -323,9 +354,38 @@ impl<'e> Trainer<'e> {
         let mut time_grad = Duration::ZERO;
         let mut time_exchange = Duration::ZERO;
         let mut time_update = Duration::ZERO;
+        // Deterministic fault plan + the events it produces (DESIGN.md
+        // §14).  Parsed up front so a bad spec fails before any compute.
+        let mut fault_plan = match &self.cfg.faults {
+            Some(spec) => FaultPlan::parse(spec, self.cfg.nodes)?,
+            None => FaultPlan::default(),
+        };
+        let mut fault_events: Vec<FaultEvent> = Vec::new();
+        // Crash-safe resume: restore every piece of loop state from the
+        // blob checkpoint, then continue from the recorded iteration.
+        // Contract (tests/native_e2e.rs): a run cut at iteration t and
+        // resumed is bit-identical to an uninterrupted run.
+        let start_iter = match self.cfg.resume.clone() {
+            Some(path) => self.restore_train_state(
+                &path,
+                &mut phase_iters,
+                &mut fault_events,
+                &mut curve,
+                &mut evals,
+                &mut ledger,
+                &mut net,
+            )?,
+            None => 0,
+        };
 
-        for it in 0..self.cfg.steps {
+        for it in start_iter..self.cfg.steps {
             let (phase, _alpha) = phase_and_alpha(&self.cfg, it);
+            // Injected faults fire at the iteration boundary, before any
+            // compute; `FaultPlan::take` also drops entries behind a
+            // resumed run so prefix faults never re-fire.
+            for action in fault_plan.take(it) {
+                self.execute_sim_fault(it, action, &mut net, &mut fault_events)?;
+            }
             ledger.set_phase(phase.index() as u8 + 1);
             let t0 = Instant::now();
 
@@ -336,11 +396,17 @@ impl<'e> Trainer<'e> {
             let dataset = &*self.dataset;
             let method_name = self.cfg.method.name();
             let lr_cfg = self.cfg.lr;
+            let alive = &self.alive;
             type NodeGrads = (f32, f32, Vec<f32>, Vec<f32>, Vec<f32>);
             let per_node = parallel::collect_node_results(parallel::par_map_indexed(
                 threads,
                 self.cfg.nodes,
                 |node| -> Result<NodeGrads> {
+                    if !alive[node] {
+                        // Dead node under --on-fault continue: no compute,
+                        // empty placeholders the masked exchanges skip.
+                        return Ok((0.0, 0.0, Vec::new(), Vec::new(), Vec::new()));
+                    }
                     let batch = dataset.batch(node, it);
                     let (loss, acc, grads) = model.grad_step(engine, &batch)?;
                     anyhow::ensure!(
@@ -375,7 +441,7 @@ impl<'e> Trainer<'e> {
             let t_ex0 = Instant::now();
             // First layer: always dense (all methods, §VI-A), PS-style
             // scatter of the aggregate on the fabric.
-            let first_mean = dense_mean_accounted(&first_g, &mut shards);
+            let first_mean = dense_mean_masked(&first_g, &self.alive, &mut shards);
             net.fanout((first_mean.len() * 4) as u64);
 
             let mid_mean = {
@@ -393,6 +459,7 @@ impl<'e> Trainer<'e> {
                     net: &mut net,
                     plan: &self.plan,
                     overlap: self.overlap,
+                    alive: &self.alive,
                 };
                 self.strategy.exchange(&mut ctx, &mid_g)?
             };
@@ -419,10 +486,13 @@ impl<'e> Trainer<'e> {
             phase_time[phase.index()] += dt;
             phase_iters[phase.index()] += 1;
 
+            // Dead nodes contributed 0.0 to the sums; the recorded means
+            // average over the survivors (== all nodes when fault-free).
+            let live = live_count(&self.alive) as f32;
             curve.push(CurvePoint {
                 iter: it,
-                train_loss: loss_sum / self.cfg.nodes as f32,
-                train_acc: acc_sum / self.cfg.nodes as f32,
+                train_loss: loss_sum / live,
+                train_acc: acc_sum / live,
             });
 
             if self.cfg.eval_every > 0 && (it + 1) % self.cfg.eval_every == 0 {
@@ -439,6 +509,28 @@ impl<'e> Trainer<'e> {
                         a
                     );
                 }
+            }
+
+            // Periodic crash-safe snapshot (--ckpt-every): the full
+            // training state at this iteration boundary, written
+            // atomically (temp + fsync + rename) so a crash mid-write
+            // leaves the previous snapshot intact.
+            if self.cfg.ckpt_every > 0 && (it + 1) % self.cfg.ckpt_every == 0 {
+                let path = self
+                    .cfg
+                    .checkpoint
+                    .clone()
+                    .expect("validated: --ckpt-every requires --checkpoint");
+                self.save_train_state(
+                    &path,
+                    it + 1,
+                    &phase_iters,
+                    &fault_events,
+                    &curve,
+                    &evals,
+                    &ledger,
+                    &net,
+                )?;
             }
         }
 
@@ -463,7 +555,271 @@ impl<'e> Trainer<'e> {
             time_exchange,
             time_update,
             net: net.into_report(),
+            fault_events,
         })
+    }
+
+    /// Execute one planned fault in the simulated backend (DESIGN.md §14).
+    fn execute_sim_fault(
+        &mut self,
+        it: usize,
+        action: FaultAction,
+        net: &mut NetSim,
+        events: &mut Vec<FaultEvent>,
+    ) -> Result<()> {
+        fn push(events: &mut Vec<FaultEvent>, ev: FaultEvent) {
+            eprintln!("{}", ev.log_line());
+            events.push(ev);
+        }
+        match action {
+            FaultAction::Kill { node } => match self.cfg.on_fault {
+                OnFault::Fail => anyhow::bail!(
+                    "node {node} killed by fault plan at iteration {it} (--on-fault fail); \
+                     rerun with --on-fault continue or wait-rejoin to survive it"
+                ),
+                OnFault::Continue => {
+                    if self.alive[node] {
+                        self.alive[node] = false;
+                        let survivors = live_count(&self.alive);
+                        anyhow::ensure!(survivors > 0, "no live nodes left at iteration {it}");
+                        push(
+                            events,
+                            FaultEvent {
+                                iter: it,
+                                node: Some(node),
+                                kind: "kill".into(),
+                                detail: format!(
+                                    "removed from aggregation; {survivors} survivors; \
+                                     the node's EF residual is dropped"
+                                ),
+                            },
+                        );
+                    }
+                }
+                OnFault::WaitRejoin => {
+                    // Simulated nodes share the process: state never leaves
+                    // it, so a kill+rejoin is a no-op on the math.  Logged
+                    // so fault plans behave uniformly across backends.
+                    push(
+                        events,
+                        FaultEvent {
+                            iter: it,
+                            node: Some(node),
+                            kind: "kill".into(),
+                            detail: "wait-rejoin: simulated node re-admitted instantly \
+                                     (its state never left the process)"
+                                .into(),
+                        },
+                    );
+                }
+            },
+            FaultAction::Stall { node, ms } => {
+                net.stall(node, ms as f64 / 1000.0);
+                push(
+                    events,
+                    FaultEvent {
+                        iter: it,
+                        node: Some(node),
+                        kind: "stall".into(),
+                        detail: format!("{ms}ms frozen; priced into this iteration's modeled time"),
+                    },
+                );
+            }
+            FaultAction::CorruptFrame { node } => {
+                net.stall(node, CORRUPT_RETRANSMIT_S);
+                push(
+                    events,
+                    FaultEvent {
+                        iter: it,
+                        node: Some(node),
+                        kind: "corrupt-frame".into(),
+                        detail: format!(
+                            "frame CRC failure -> one retransmit window ({:.0}ms) priced",
+                            CORRUPT_RETRANSMIT_S * 1000.0
+                        ),
+                    },
+                );
+            }
+            FaultAction::Crash => {
+                // The one fault the sim cannot absorb — used by the resume
+                // tests to cut a run at an exact iteration boundary.
+                anyhow::bail!("injected crash at iteration {it} (fault plan)");
+            }
+        }
+        Ok(())
+    }
+
+    /// Write the complete iteration-boundary training state as a v2 blob
+    /// checkpoint (crash-safe resume, DESIGN.md §14).  Wall-clock
+    /// durations are deliberately excluded: a resumed run reports only
+    /// its own elapsed time, while every deterministic output (curve,
+    /// evals, ledger, net trace, model, RNG streams, strategy state) is
+    /// restored bit-exactly.
+    #[allow(clippy::too_many_arguments)]
+    fn save_train_state(
+        &self,
+        path: &str,
+        next_iter: usize,
+        phase_iters: &[usize; 3],
+        fault_events: &[FaultEvent],
+        curve: &[CurvePoint],
+        evals: &[(usize, f32, f32)],
+        ledger: &Ledger,
+        net: &NetSim,
+    ) -> Result<()> {
+        let mut meta = Vec::new();
+        ser::put_str(&mut meta, &cfg_fingerprint(&self.cfg));
+        ser::put_u64(&mut meta, next_iter as u64);
+        for &pi in phase_iters {
+            ser::put_u64(&mut meta, pi as u64);
+        }
+        ser::put_u64(&mut meta, self.alive.len() as u64);
+        for &a in &self.alive {
+            ser::put_u8(&mut meta, a as u8);
+        }
+        ser::put_u64(&mut meta, fault_events.len() as u64);
+        for ev in fault_events {
+            ser::put_u64(&mut meta, ev.iter as u64);
+            match ev.node {
+                Some(n) => {
+                    ser::put_u8(&mut meta, 1);
+                    ser::put_u64(&mut meta, n as u64);
+                }
+                None => ser::put_u8(&mut meta, 0),
+            }
+            ser::put_str(&mut meta, &ev.kind);
+            ser::put_str(&mut meta, &ev.detail);
+        }
+        let mut rng_b = Vec::new();
+        self.rng.save_state(&mut rng_b);
+        let mut strat_b = Vec::new();
+        self.strategy.save_state(&mut strat_b);
+        let mut fbs_b = Vec::new();
+        ser::put_u64(&mut fbs_b, self.last_fbs.len() as u64);
+        for fb in &self.last_fbs {
+            fb.write_state(&mut fbs_b);
+        }
+        let mut curve_b = Vec::new();
+        ser::put_u64(&mut curve_b, curve.len() as u64);
+        for p in curve {
+            ser::put_u64(&mut curve_b, p.iter as u64);
+            ser::put_f32(&mut curve_b, p.train_loss);
+            ser::put_f32(&mut curve_b, p.train_acc);
+        }
+        let mut evals_b = Vec::new();
+        ser::put_u64(&mut evals_b, evals.len() as u64);
+        for &(i, l, a) in evals {
+            ser::put_u64(&mut evals_b, i as u64);
+            ser::put_f32(&mut evals_b, l);
+            ser::put_f32(&mut evals_b, a);
+        }
+        let mut net_b = Vec::new();
+        net.save_state(&mut net_b);
+        checkpoint::save_blobs(
+            path,
+            &[
+                ("meta", meta),
+                ("model", self.model.state_bytes()),
+                ("rng", rng_b),
+                ("strategy", strat_b),
+                ("last_fbs", fbs_b),
+                ("curve", curve_b),
+                ("evals", evals_b),
+                ("ledger", ledger.to_bytes()),
+                ("net", net_b),
+            ],
+        )
+    }
+
+    /// Inverse of [`Trainer::save_train_state`]: restore everything from a
+    /// v2 blob checkpoint and return the iteration to continue from.
+    #[allow(clippy::too_many_arguments)]
+    fn restore_train_state(
+        &mut self,
+        path: &str,
+        phase_iters: &mut [usize; 3],
+        fault_events: &mut Vec<FaultEvent>,
+        curve: &mut Vec<CurvePoint>,
+        evals: &mut Vec<(usize, f32, f32)>,
+        ledger: &mut Ledger,
+        net: &mut NetSim,
+    ) -> Result<usize> {
+        let blobs = checkpoint::load_blobs(path)?;
+        let mut r = Reader::new(checkpoint::blob(&blobs, "meta")?);
+        let fp = r.string()?;
+        let want = cfg_fingerprint(&self.cfg);
+        anyhow::ensure!(
+            fp == want,
+            "resume checkpoint {path:?} was written by a different configuration\n  \
+             checkpoint: {fp}\n  this run:   {want}"
+        );
+        let next_iter = r.u64()? as usize;
+        anyhow::ensure!(
+            next_iter <= self.cfg.steps,
+            "checkpoint is ahead of --steps: next iteration {next_iter} > {}",
+            self.cfg.steps
+        );
+        for pi in phase_iters.iter_mut() {
+            *pi = r.u64()? as usize;
+        }
+        let n = r.count(1)?;
+        anyhow::ensure!(n == self.cfg.nodes, "checkpoint has {n} nodes, run has {}", self.cfg.nodes);
+        for a in self.alive.iter_mut() {
+            *a = match r.u8()? {
+                0 => false,
+                1 => true,
+                other => anyhow::bail!("bad liveness tag {other}"),
+            };
+        }
+        let ne = r.count(25)?;
+        for _ in 0..ne {
+            let iter = r.u64()? as usize;
+            let node = match r.u8()? {
+                0 => None,
+                1 => Some(r.u64()? as usize),
+                other => anyhow::bail!("bad fault-event node tag {other}"),
+            };
+            let kind = r.string()?;
+            let detail = r.string()?;
+            fault_events.push(FaultEvent { iter, node, kind, detail });
+        }
+        r.finish()?;
+        self.model.load_state_bytes(checkpoint::blob(&blobs, "model")?)?;
+        let mut r = Reader::new(checkpoint::blob(&blobs, "rng")?);
+        self.rng = Rng::load_state(&mut r)?;
+        r.finish()?;
+        let mut r = Reader::new(checkpoint::blob(&blobs, "strategy")?);
+        self.strategy.load_state(&mut r)?;
+        r.finish()?;
+        let mut r = Reader::new(checkpoint::blob(&blobs, "last_fbs")?);
+        crate::baselines::check_node_count(&mut r, self.last_fbs.len(), "last_fbs")?;
+        for fb in &mut self.last_fbs {
+            fb.read_state(&mut r)?;
+        }
+        r.finish()?;
+        let mut r = Reader::new(checkpoint::blob(&blobs, "curve")?);
+        let nc = r.count(16)?;
+        for _ in 0..nc {
+            curve.push(CurvePoint {
+                iter: r.u64()? as usize,
+                train_loss: r.f32()?,
+                train_acc: r.f32()?,
+            });
+        }
+        r.finish()?;
+        let mut r = Reader::new(checkpoint::blob(&blobs, "evals")?);
+        let nv = r.count(16)?;
+        for _ in 0..nv {
+            evals.push((r.u64()? as usize, r.f32()?, r.f32()?));
+        }
+        r.finish()?;
+        let mut r = Reader::new(checkpoint::blob(&blobs, "ledger")?);
+        *ledger = Ledger::from_bytes(&mut r)?;
+        r.finish()?;
+        let mut r = Reader::new(checkpoint::blob(&blobs, "net")?);
+        net.restore_state(&mut r)?;
+        r.finish()?;
+        Ok(next_iter)
     }
 
     /// Mean loss/acc over the held-out eval batches.
@@ -487,6 +843,10 @@ impl<'e> Trainer<'e> {
 /// produce bit-identical results for the supported methods
 /// (tests/tcp_e2e.rs).
 pub fn train(engine: &Engine, cfg: TrainConfig) -> Result<TrainResult> {
+    // Fail fast on inconsistent fault-tolerance flags (bad --faults
+    // specs, continue with a leaderful method, --ckpt-every without
+    // --checkpoint, --resume over TCP) before spawning anything.
+    faults::validate_fault_config(&cfg)?;
     match cfg.transport {
         TransportKind::Sim => Trainer::new(engine, cfg)?.run(),
         TransportKind::Tcp => remote::train_tcp(engine, cfg),

@@ -36,11 +36,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::baselines::{dense_mean_accounted, fanout_rounds};
+use crate::baselines::{dense_mean_masked, fanout_rounds, live_count};
 use crate::compress::autoencoder::{AeCompressor, Pattern};
 use crate::compress::{index_coding, topk, Scratch};
-use crate::config::{Method, TrainConfig};
+use crate::config::{Method, OnFault, TrainConfig};
 use crate::coordinator::bucket::{method_bucketable, BucketPlan};
+use crate::coordinator::faults::{self, FaultAction, FaultEvent, FaultPlan, LivenessMonitor};
 use crate::coordinator::lgc::{clip_to_gradient_scale, ef_on_rec, innovation_into, AE_GATE_WINDOW};
 use crate::coordinator::scheduler::{self, phase_and_alpha, Phase};
 use crate::coordinator::{lr_at, ring, CurvePoint, TrainResult};
@@ -49,7 +50,9 @@ use crate::metrics::{Kind, Ledger, NodeLedger};
 use crate::model::{Group, Model};
 use crate::net::NetSim;
 use crate::runtime::{Engine, ModelMeta};
-use crate::transport::{accept_workers, BucketUp, Conn, LastUp, Listener, MidUp, Msg, RejectorGuard};
+use crate::transport::{
+    accept_rejoin, accept_workers, BucketUp, Conn, LastUp, Listener, MidUp, Msg, RejectorGuard,
+};
 use crate::util::rng::Rng;
 
 /// Methods the wire transport supports (the others error loudly; see
@@ -135,6 +138,7 @@ pub fn train_with_opts(
     opts: &RemoteOpts,
 ) -> Result<TrainResult> {
     gate_method(&cfg)?;
+    faults::validate_fault_config(&cfg)?;
     ensure!(cfg.nodes >= 1, "--transport tcp needs at least one worker node");
     // Resolve the model up front so every worker receives the resolved
     // name and builds the identical replica.
@@ -149,29 +153,62 @@ pub fn train_with_opts(
         opts.session, cfg.nodes
     );
 
+    // The deterministic fault plan fires from the coordinator's loop;
+    // kill/stall faults signal real OS processes, so they need the
+    // workers to be this coordinator's own children.
+    let fault_plan = match &cfg.faults {
+        Some(spec) => FaultPlan::parse(spec, cfg.nodes)?,
+        None => FaultPlan::default(),
+    };
+    if fault_plan.targets_processes() && !opts.spawn_workers {
+        bail!(
+            "--faults kill/stall need self-spawned workers (lgc train --transport tcp); \
+             lgc serve workers are processes this coordinator cannot signal"
+        );
+    }
+
     let mut children = ChildGuard::default();
     if opts.spawn_workers {
         for _ in 0..cfg.nodes {
-            children.spawn(engine, &addr, opts)?;
+            children.spawn(engine, &addr, opts, None)?;
         }
     }
 
-    let mut conns = accept_workers(
+    let (mut conns, pids): (Vec<Conn>, Vec<u64>) = accept_workers(
         &listener,
         cfg.nodes,
         opts.session,
         &engine.platform(),
         &cfg,
         opts.join_timeout,
-    )?;
+    )?
+    .into_iter()
+    .unzip();
     for conn in &mut conns {
-        conn.set_read_timeout(Some(opts.net_timeout))?;
+        apply_timeouts(conn, &cfg, opts.net_timeout)?;
     }
     // Late connections (double joins, strays) get a descriptive "session
-    // full" refusal for the rest of the run.
-    let _rejector = RejectorGuard::spawn(listener, cfg.nodes)?;
+    // full" refusal for the rest of the run — except under wait-rejoin,
+    // where the listener must stay available for the token-checked
+    // re-admission handshake (strays then simply queue unanswered).
+    let (kept_listener, _rejector) = if cfg.on_fault == OnFault::WaitRejoin {
+        (Some(listener), None)
+    } else {
+        (None, Some(RejectorGuard::spawn(listener, cfg.nodes)?))
+    };
 
-    let mut co = Coordinator::new(engine, cfg, meta, conns)?;
+    let mut co = Coordinator::new(
+        engine,
+        cfg,
+        meta,
+        conns,
+        pids,
+        children,
+        kept_listener,
+        addr,
+        opts.clone(),
+        fault_plan,
+    )?;
     let result = co.run();
     match &result {
         Ok(_) => co.broadcast_best_effort(&Msg::Shutdown { reason: "training complete".into() }),
@@ -180,10 +217,28 @@ pub fn train_with_opts(
         }),
     }
     if result.is_ok() {
-        children.reap(Duration::from_secs(10));
+        co.children.reap(Duration::from_secs(10));
     }
     // On error, ChildGuard::drop kills any still-running children.
     result
+}
+
+/// Socket deadlines for one worker connection.  Without heartbeats the
+/// per-read deadline is the configured net timeout (the legacy shape).
+/// With heartbeats on, a live worker emits a frame at least every
+/// `heartbeat_ms`, so death is declared after `miss_budget` silent
+/// periods — much faster than the net timeout — while the *progress*
+/// deadline (heartbeats excluded, [`Conn::set_progress_timeout`]) keeps
+/// the net timeout as the bound on a wedged-but-heartbeating peer.
+fn apply_timeouts(conn: &mut Conn, cfg: &TrainConfig, net_timeout: Duration) -> Result<()> {
+    if cfg.heartbeat_ms > 0 {
+        let budget = cfg.heartbeat_ms.saturating_mul(cfg.miss_budget.max(1) as u64);
+        conn.set_read_timeout(Some(Duration::from_millis(budget.max(50))))?;
+        conn.set_progress_timeout(Some(net_timeout))?;
+    } else {
+        conn.set_read_timeout(Some(net_timeout))?;
+    }
+    Ok(())
 }
 
 /// Kills still-running spawned workers on drop (error paths); `reap`
@@ -194,7 +249,16 @@ struct ChildGuard {
 }
 
 impl ChildGuard {
-    fn spawn(&mut self, engine: &Engine, addr: &str, opts: &RemoteOpts) -> Result<()> {
+    /// Spawn one worker process; `rejoin` makes it re-enter a live
+    /// elastic run as that node via the token handshake instead of a
+    /// fresh join.  Returns the OS pid (the handle for planned kills).
+    fn spawn(
+        &mut self,
+        engine: &Engine,
+        addr: &str,
+        opts: &RemoteOpts,
+        rejoin: Option<u32>,
+    ) -> Result<u64> {
         let bin = match &opts.worker_bin {
             Some(p) => p.clone(),
             None => std::env::current_exe().context("locating this executable to spawn workers")?,
@@ -206,8 +270,8 @@ impl ChildGuard {
         } else {
             "pjrt"
         };
-        let child = Command::new(&bin)
-            .arg("worker")
+        let mut cmd = Command::new(&bin);
+        cmd.arg("worker")
             .arg("--connect")
             .arg(addr)
             .arg("--session")
@@ -217,14 +281,32 @@ impl ChildGuard {
             .arg("--backoff-ms")
             .arg("50")
             .arg("--net-timeout-ms")
-            .arg((opts.net_timeout.as_millis() as u64 * 4).to_string())
+            .arg((opts.net_timeout.as_millis() as u64 * 4).to_string());
+        if let Some(node) = rejoin {
+            cmd.arg("--rejoin-node").arg(node.to_string());
+        }
+        let child = cmd
             .env("LGC_BACKEND", backend)
             .stdin(Stdio::null())
             .stdout(Stdio::null())
             .stderr(Stdio::inherit())
             .spawn()
             .with_context(|| format!("spawning worker process from {bin:?}"))?;
+        let pid = child.id() as u64;
         self.children.push(child);
+        Ok(pid)
+    }
+
+    /// SIGKILL the spawned child with OS pid `pid` (planned kill faults)
+    /// and reap it.  Errors if no such child exists — externally launched
+    /// workers (`lgc serve`) cannot be kill-faulted.
+    fn kill_pid(&mut self, pid: u64) -> Result<()> {
+        let Some(i) = self.children.iter().position(|c| c.id() as u64 == pid) else {
+            bail!("no spawned worker child with pid {pid} to kill (externally launched?)")
+        };
+        let mut c = self.children.remove(i);
+        let _ = c.kill();
+        let _ = c.wait();
         Ok(())
     }
 
@@ -249,6 +331,20 @@ impl Drop for ChildGuard {
             let _ = c.wait();
         }
     }
+}
+
+/// Send `sig` (e.g. "-STOP" / "-CONT") to an OS process via kill(1) —
+/// the stall fault's freeze/thaw mechanism.  std exposes no signal API,
+/// and the only platform this targets is the POSIX one the rest of the
+/// transport already assumes.
+fn signal_pid(pid: u64, sig: &str) -> Result<()> {
+    let status = Command::new("kill")
+        .arg(sig)
+        .arg(pid.to_string())
+        .status()
+        .with_context(|| format!("running kill {sig} {pid}"))?;
+    ensure!(status.success(), "kill {sig} {pid} exited with {status}");
+    Ok(())
 }
 
 /// Coordinator-side LGC mirror: the full autoencoder (training + both
@@ -284,6 +380,23 @@ struct Up {
     buckets: Vec<(u32, BucketUp)>,
 }
 
+impl Up {
+    /// What a dead node contributes under `--on-fault continue`: empty
+    /// placeholders every masked replay path skips — the wire twin of the
+    /// sim's empty per-node closure results (DESIGN.md §14).
+    fn placeholder() -> Up {
+        Up {
+            loss: 0.0,
+            acc: 0.0,
+            first: Vec::new(),
+            mid: MidUp::None,
+            last: LastUp::Dense(Vec::new()),
+            ctrl_mid: None,
+            buckets: Vec::new(),
+        }
+    }
+}
+
 /// The multi-process training session: K worker connections plus the
 /// coordinator's replica of everything the sim's `Trainer` owns
 /// centrally.
@@ -292,6 +405,27 @@ struct Coordinator<'e> {
     cfg: TrainConfig,
     meta: ModelMeta,
     conns: Vec<Conn>,
+    /// OS pid per node (from the Join handshake; updated on rejoin) —
+    /// the handle planned kill/stall faults act through.
+    pids: Vec<u64>,
+    /// Self-spawned worker processes (empty for `lgc serve`).
+    children: ChildGuard,
+    /// Retained under `--on-fault wait-rejoin` so the rejoin handshake
+    /// can re-admit a respawned worker; `None` otherwise (a
+    /// [`RejectorGuard`] owns the listener then).
+    listener: Option<Listener>,
+    /// The bound address workers (re)connect to.
+    addr: String,
+    ropts: RemoteOpts,
+    /// Liveness mask under `--on-fault continue`; all-true otherwise.
+    alive: Vec<bool>,
+    liveness: LivenessMonitor,
+    fault_plan: FaultPlan,
+    fault_events: Vec<FaultEvent>,
+    /// Latest per-node strategy-state blob ([`Msg::StateSync`]), kept
+    /// only under wait-rejoin: the resurrection payload for a node killed
+    /// before its next sync.
+    worker_states: Vec<Vec<u8>>,
     model: Model,
     dataset: Box<dyn Dataset>,
     rng: Rng,
@@ -306,11 +440,18 @@ struct Coordinator<'e> {
 }
 
 impl<'e> Coordinator<'e> {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         engine: &'e Engine,
         cfg: TrainConfig,
         meta: ModelMeta,
         conns: Vec<Conn>,
+        pids: Vec<u64>,
+        children: ChildGuard,
+        listener: Option<Listener>,
+        addr: String,
+        ropts: RemoteOpts,
+        fault_plan: FaultPlan,
     ) -> Result<Self> {
         let mut model = Model::new(&meta, cfg.seed);
         model.momentum = match cfg.method {
@@ -351,11 +492,24 @@ impl<'e> Coordinator<'e> {
             BucketPlan::single(n_mid)
         };
         let overlap = cfg.overlap && !plan.is_single();
+        let alive = vec![true; cfg.nodes];
+        let liveness = LivenessMonitor::new(cfg.nodes, cfg.heartbeat_ms, cfg.miss_budget);
+        let worker_states = vec![Vec::new(); cfg.nodes];
         Ok(Coordinator {
             engine,
             cfg,
             meta,
             conns,
+            pids,
+            children,
+            listener,
+            addr,
+            ropts,
+            alive,
+            liveness,
+            fault_plan,
+            fault_events: Vec::new(),
+            worker_states,
             model,
             dataset,
             rng,
@@ -365,6 +519,25 @@ impl<'e> Coordinator<'e> {
             plan,
             overlap,
         })
+    }
+
+    /// Log + record one fault-event line (the artifact CI uploads).
+    fn push_event(&mut self, ev: FaultEvent) {
+        eprintln!("{}", ev.log_line());
+        self.fault_events.push(ev);
+    }
+
+    /// Deadline-bounded receive from one worker with liveness
+    /// bookkeeping: progress refreshes the node's clock; a timeout or
+    /// disconnect error carries the monitor's budget-aware description.
+    fn recv_from(&mut self, node: usize, what: &str) -> Result<Msg> {
+        match self.conns[node].expect(what) {
+            Ok(m) => {
+                self.liveness.observe(node);
+                Ok(m)
+            }
+            Err(e) => Err(e.context(self.liveness.describe(node))),
+        }
     }
 
     fn broadcast_best_effort(&mut self, msg: &Msg) {
@@ -406,6 +579,9 @@ impl<'e> Coordinator<'e> {
             None => (false, false, Vec::new()),
         };
         for (node, conn) in self.conns.iter_mut().enumerate() {
+            if !self.alive[node] {
+                continue;
+            }
             let follows = ship && (!ps || node == 0);
             conn.send(&Msg::IterPlan { iter: it as u32, engaged, weights_follow: follows })
                 .with_context(|| format!("sending iter {it} plan to node {node}"))?;
@@ -425,8 +601,8 @@ impl<'e> Coordinator<'e> {
     /// Receive the leader's support upload and relay it to every worker
     /// (the leader included — one uniform decode path on the workers).
     fn relay_support(&mut self, it: usize, leader: usize) -> Result<Vec<u8>> {
-        let coded = match self.conns[leader]
-            .expect("Support")
+        let coded = match self
+            .recv_from(leader, "Support")
             .with_context(|| format!("node {leader} (support leader) at iter {it}"))?
         {
             Msg::Support { iter, coded } => {
@@ -453,12 +629,29 @@ impl<'e> Coordinator<'e> {
     fn recv_gradients(&mut self, it: usize) -> Result<Vec<Up>> {
         let mut ups = Vec::with_capacity(self.conns.len());
         for node in 0..self.conns.len() {
+            if !self.alive[node] {
+                ups.push(Up::placeholder());
+                continue;
+            }
             let mut buckets: Vec<(u32, BucketUp)> = Vec::new();
+            let mut died = false;
             loop {
-                match self.conns[node]
-                    .expect("Gradient")
-                    .with_context(|| format!("node {node} at iter {it}"))?
-                {
+                let msg = match self.recv_from(node, "Gradient") {
+                    Ok(m) => m,
+                    Err(e) if self.cfg.on_fault == OnFault::Continue => {
+                        // Organic mid-iteration death (disconnect, decode
+                        // kill from a corrupted frame, liveness timeout):
+                        // drop the node and keep training on the
+                        // survivors, exactly like a planned kill.
+                        self.mark_dead(it, node, &e)?;
+                        died = true;
+                        break;
+                    }
+                    Err(e) => {
+                        return Err(e.context(format!("node {node} at iter {it}")));
+                    }
+                };
+                match msg {
                     Msg::GradientBucket { iter, bucket, up } => {
                         ensure!(
                             iter as usize == it,
@@ -492,8 +685,199 @@ impl<'e> Coordinator<'e> {
                     other => bail!("expected Gradient from node {node}, got {}", other.name()),
                 }
             }
+            if died {
+                ups.push(Up::placeholder());
+            }
         }
         Ok(ups)
+    }
+
+    /// Remove a node that died without a plan entry (`--on-fault
+    /// continue` only): flip its liveness bit, log the event, keep going
+    /// on the survivors.
+    fn mark_dead(&mut self, it: usize, node: usize, err: &anyhow::Error) -> Result<()> {
+        self.alive[node] = false;
+        let survivors = live_count(&self.alive);
+        ensure!(survivors > 0, "no live nodes left at iteration {it}");
+        self.push_event(FaultEvent {
+            iter: it,
+            node: Some(node),
+            kind: "death".into(),
+            detail: format!(
+                "removed from aggregation; {survivors} survivors; the node's EF residual \
+                 is dropped ({err:#})"
+            ),
+        });
+        Ok(())
+    }
+
+    /// Read the end-of-iteration [`Msg::StateSync`] from every live
+    /// worker (wait-rejoin only; `None` = the initial pre-loop sync,
+    /// tagged `u32::MAX`).  Per-connection FIFO ordering makes this a
+    /// plain synchronous read: the sync always precedes the next
+    /// iteration's uploads.
+    fn recv_state_syncs(&mut self, it: Option<usize>) -> Result<()> {
+        let want = it.map(|i| i as u32).unwrap_or(u32::MAX);
+        for node in 0..self.cfg.nodes {
+            if !self.alive[node] {
+                continue;
+            }
+            match self.recv_from(node, "StateSync")? {
+                Msg::StateSync { iter, blob } => {
+                    ensure!(
+                        iter == want,
+                        "protocol desync: StateSync from node {node} for iter {iter}, \
+                         expected {want}"
+                    );
+                    self.worker_states[node] = blob;
+                }
+                other => bail!("expected StateSync from node {node}, got {}", other.name()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one planned fault against the real worker processes
+    /// (DESIGN.md §14).  Fabric perturbations that the sim prices
+    /// (stalls) are priced identically here, so a faulted TCP run's
+    /// modeled-time report still matches its sim twin.
+    fn execute_fault(
+        &mut self,
+        it: usize,
+        action: FaultAction,
+        net: &mut NetSim,
+    ) -> Result<()> {
+        match action {
+            FaultAction::Kill { node } => match self.cfg.on_fault {
+                OnFault::Fail => bail!(
+                    "node {node} killed by fault plan at iteration {it} (--on-fault fail); \
+                     rerun with --on-fault continue or wait-rejoin to survive it"
+                ),
+                OnFault::Continue => {
+                    if self.alive[node] {
+                        self.children.kill_pid(self.pids[node])?;
+                        self.alive[node] = false;
+                        let survivors = live_count(&self.alive);
+                        ensure!(survivors > 0, "no live nodes left at iteration {it}");
+                        // Same event detail as the simulator's, so fault
+                        // logs compare across backends.
+                        self.push_event(FaultEvent {
+                            iter: it,
+                            node: Some(node),
+                            kind: "kill".into(),
+                            detail: format!(
+                                "removed from aggregation; {survivors} survivors; \
+                                 the node's EF residual is dropped"
+                            ),
+                        });
+                    }
+                }
+                OnFault::WaitRejoin => self.kill_and_rejoin(it, node)?,
+            },
+            FaultAction::Stall { node, ms } => {
+                // Freeze the real process for the window, then thaw it —
+                // synchronously, so the run's message order is untouched —
+                // and price the same modeled stall the sim does.
+                signal_pid(self.pids[node], "-STOP")?;
+                std::thread::sleep(Duration::from_millis(ms));
+                signal_pid(self.pids[node], "-CONT")?;
+                net.stall(node, ms as f64 / 1000.0);
+                self.push_event(FaultEvent {
+                    iter: it,
+                    node: Some(node),
+                    kind: "stall".into(),
+                    detail: format!(
+                        "{ms}ms frozen (SIGSTOP/SIGCONT); priced into this iteration's \
+                         modeled time"
+                    ),
+                });
+            }
+            FaultAction::CorruptFrame { node } => {
+                // Arm the wire shim: the next frame to this worker goes
+                // out with its type byte flipped, so the worker dies on a
+                // clean decode error (the sim instead prices a detected
+                // retransmit — the asymmetry is documented in DESIGN.md
+                // §14).  Recovery is the fault policy's job.
+                self.conns[node].corrupt_next();
+                self.push_event(FaultEvent {
+                    iter: it,
+                    node: Some(node),
+                    kind: "corrupt-frame".into(),
+                    detail: "next frame to the node corrupted in flight; its decode will \
+                             fail loudly"
+                        .into(),
+                });
+            }
+            FaultAction::Crash => {
+                bail!("injected crash at iteration {it} (fault plan)");
+            }
+        }
+        Ok(())
+    }
+
+    /// The wait-rejoin recovery arc for a planned kill: SIGKILL the
+    /// worker, respawn a replacement with `--rejoin-node`, re-admit it
+    /// through the token-checked handshake, and resync it from the
+    /// coordinator's replica + the node's last StateSync blob (the end of
+    /// iteration `it - 1` — planned kills fire at iteration start, so
+    /// that is exactly the state the node died with).  Bit-exactness
+    /// argument in DESIGN.md §14.3.
+    fn kill_and_rejoin(&mut self, it: usize, node: usize) -> Result<()> {
+        self.children.kill_pid(self.pids[node])?;
+        self.push_event(FaultEvent {
+            iter: it,
+            node: Some(node),
+            kind: "kill".into(),
+            detail: "killed; respawning for token-checked rejoin (--on-fault wait-rejoin)"
+                .into(),
+        });
+        let ropts = self.ropts.clone();
+        self.pids[node] = self.children.spawn(self.engine, &self.addr, &ropts, Some(node as u32))?;
+        let ack = Msg::RejoinAck {
+            node: node as u32,
+            nodes: self.cfg.nodes as u32,
+            platform: self.engine.platform(),
+            cfg: self.cfg.clone(),
+            iter: it as u32,
+            model: self.model.state_bytes(),
+            state: self.worker_states[node].clone(),
+            encoder: match &self.lgc {
+                Some(l) if l.enc_shipped => Some(l.ae.export_encoder()),
+                _ => None,
+            },
+        };
+        let token = faults::rejoin_token(ropts.session, node);
+        let listener = self
+            .listener
+            .as_ref()
+            .expect("wait-rejoin retains the listener for re-admission");
+        let mut conn = accept_rejoin(
+            listener,
+            node as u32,
+            ropts.session,
+            token,
+            &ack,
+            ropts.join_timeout,
+        )
+        .with_context(|| format!("re-admitting node {node} at iteration {it}"))?;
+        apply_timeouts(&mut conn, &self.cfg, ropts.net_timeout)?;
+        self.conns[node] = conn;
+        self.liveness.observe(node);
+        self.push_event(FaultEvent {
+            iter: it,
+            node: Some(node),
+            kind: "rejoin".into(),
+            detail: format!(
+                "re-admitted via session token; resynced to iteration {it} (model replica, \
+                 strategy state{})",
+                if matches!(&self.lgc, Some(l) if l.enc_shipped) {
+                    ", AE encoder"
+                } else {
+                    ""
+                }
+            ),
+        });
+        Ok(())
     }
 
     /// Receive the expected AE latents (engaged iterations only): node 0
@@ -547,8 +931,20 @@ impl<'e> Coordinator<'e> {
         let mut time_exchange = Duration::ZERO;
         let mut time_update = Duration::ZERO;
 
+        // Elastic runs: every worker ships its initial strategy state
+        // before the first plan, so even an iteration-0 kill has a
+        // resurrection payload.
+        if self.cfg.on_fault == OnFault::WaitRejoin {
+            self.recv_state_syncs(None)?;
+        }
+
         for it in 0..steps {
             let (phase, _alpha) = phase_and_alpha(&self.cfg, it);
+            // Injected faults fire at the iteration boundary, before any
+            // plan goes out — the same point the simulator fires them.
+            for action in self.fault_plan.take(it) {
+                self.execute_fault(it, action, &mut net)?;
+            }
             ledger.set_phase(phase.index() as u8 + 1);
             let t0 = Instant::now();
             let engaged = self.engaged(phase);
@@ -580,6 +976,9 @@ impl<'e> Coordinator<'e> {
             let mut loss_sum = 0.0f32;
             let mut acc_sum = 0.0f32;
             for (node, up) in ups.iter().enumerate() {
+                if !self.alive[node] {
+                    continue;
+                }
                 anyhow::ensure!(
                     up.loss.is_finite(),
                     "training diverged: non-finite loss at iter {it}, node {node} \
@@ -589,10 +988,10 @@ impl<'e> Coordinator<'e> {
                 acc_sum += up.acc;
             }
 
-            // First layer: always dense.
+            // First layer: always dense (mean over the live nodes).
             let first_g: Vec<Vec<f32>> =
                 ups.iter_mut().map(|u| std::mem::take(&mut u.first)).collect();
-            let first_mean = dense_mean_accounted(&first_g, &mut shards);
+            let first_mean = dense_mean_masked(&first_g, &self.alive, &mut shards);
             net.fanout((first_mean.len() * 4) as u64);
 
             let mid_mean = self.mid_replay(
@@ -610,6 +1009,9 @@ impl<'e> Coordinator<'e> {
 
             // --- update: broadcast the means, apply locally ------------
             for (node, conn) in self.conns.iter_mut().enumerate() {
+                if !self.alive[node] {
+                    continue;
+                }
                 conn.send(&Msg::SyncInfo {
                     iter: it as u32,
                     first: first_mean.clone(),
@@ -617,6 +1019,12 @@ impl<'e> Coordinator<'e> {
                     last: last_mean.clone(),
                 })
                 .with_context(|| format!("broadcasting sync to node {node} at iter {it}"))?;
+            }
+            // Elastic bookkeeping: after applying the sync, each worker
+            // ships its end-of-iteration strategy state — the payload a
+            // kill at iteration `it + 1` resurrects from.
+            if self.cfg.on_fault == OnFault::WaitRejoin {
+                self.recv_state_syncs(Some(it))?;
             }
             time_exchange += t_ex0.elapsed();
             let t_up0 = Instant::now();
@@ -638,10 +1046,11 @@ impl<'e> Coordinator<'e> {
             phase_time[phase.index()] += dt;
             phase_iters[phase.index()] += 1;
 
+            let live = live_count(&self.alive) as f32;
             curve.push(CurvePoint {
                 iter: it,
-                train_loss: loss_sum / nodes as f32,
-                train_acc: acc_sum / nodes as f32,
+                train_loss: loss_sum / live,
+                train_acc: acc_sum / live,
             });
 
             if self.cfg.eval_every > 0 && (it + 1) % self.cfg.eval_every == 0 {
@@ -683,6 +1092,7 @@ impl<'e> Coordinator<'e> {
             time_exchange,
             time_update,
             net: net.into_report(),
+            fault_events: std::mem::take(&mut self.fault_events),
         })
     }
 
@@ -709,9 +1119,13 @@ impl<'e> Coordinator<'e> {
                 if self.overlap {
                     let mut mids = Vec::with_capacity(nodes);
                     for node in 0..nodes {
+                        if !self.alive[node] {
+                            mids.push(Vec::new());
+                            continue;
+                        }
                         mids.push(self.dense_from_buckets(node, &mut ups[node])?);
                     }
-                    let mean = dense_mean_accounted(&mids, shards);
+                    let mean = dense_mean_masked(&mids, &self.alive, shards);
                     // Per-bucket tagged fan-out rounds — byte-for-byte the
                     // sim Baseline's overlapped pricing.
                     let per_bucket: Vec<u64> = self
@@ -723,8 +1137,8 @@ impl<'e> Coordinator<'e> {
                     fanout_rounds(net, true, self.plan.len(), &[per_bucket]);
                     return Ok(mean);
                 }
-                let mids = take_dense_mids(ups)?;
-                let mean = dense_mean_accounted(&mids, shards);
+                let mids = take_dense_mids(ups, &self.alive)?;
+                let mean = dense_mean_masked(&mids, &self.alive, shards);
                 net.fanout((mean.len() * 4) as u64);
                 Ok(mean)
             }
@@ -739,6 +1153,9 @@ impl<'e> Coordinator<'e> {
                 let mut mean = vec![0.0f32; n];
                 let mut total = 0u64;
                 for (node, up) in ups.iter().enumerate() {
+                    if !self.alive[node] {
+                        continue;
+                    }
                     let MidUp::Sparse { coded_idx, vals } = &up.mid else {
                         bail!("node {node} sent {} for a sparse method", up.mid.name())
                     };
@@ -755,16 +1172,17 @@ impl<'e> Coordinator<'e> {
                     total += (bytes + coded_idx.len()) as u64;
                     topk::scatter_add(&mut mean, &idx, vals);
                 }
-                mean.iter_mut().for_each(|m| *m /= nodes as f32);
+                let live = live_count(&self.alive) as f32;
+                mean.iter_mut().for_each(|m| *m /= live);
                 net.fanout(total);
                 Ok(mean)
             }
             Method::LgcPs | Method::LgcRar => {
                 let ps = matches!(self.cfg.method, Method::LgcPs);
                 if phase == Phase::Dense {
-                    let mut mids = take_dense_mids(ups)?;
+                    let mut mids = take_dense_mids(ups, &self.alive)?;
                     if ps {
-                        let mean = dense_mean_accounted(&mids, shards);
+                        let mean = dense_mean_masked(&mids, &self.alive, shards);
                         net.fanout((mean.len() * 4) as u64);
                         Ok(mean)
                     } else {
@@ -842,6 +1260,12 @@ impl<'e> Coordinator<'e> {
         let mut mean = vec![0.0f32; self.n_mid];
         let mut per_node: Vec<Vec<u64>> = Vec::with_capacity(nodes);
         for (node, up) in ups.iter_mut().enumerate() {
+            if !self.alive[node] {
+                // Same empty packet row the sim's masked exchange emits —
+                // `fanout_rounds` tolerates short rows, so pricing matches.
+                per_node.push(Vec::new());
+                continue;
+            }
             let MidUp::Buckets(nb) = up.mid else {
                 bail!("node {node} sent {} on the overlapped sparse path", up.mid.name())
             };
@@ -897,7 +1321,8 @@ impl<'e> Coordinator<'e> {
             }
             per_node.push(bytes_b);
         }
-        mean.iter_mut().for_each(|m| *m /= nodes as f32);
+        let live = live_count(&self.alive) as f32;
+        mean.iter_mut().for_each(|m| *m /= live);
         fanout_rounds(net, true, b_count, &per_node);
         Ok(mean)
     }
@@ -1114,19 +1539,26 @@ impl<'e> Coordinator<'e> {
         if dense {
             let mut lasts = Vec::with_capacity(nodes);
             for (node, up) in ups.iter_mut().enumerate() {
+                if !self.alive[node] {
+                    lasts.push(Vec::new());
+                    continue;
+                }
                 let LastUp::Dense(g) = &mut up.last else {
                     bail!("node {node} sent a sparse last-group payload on a dense path")
                 };
                 ensure!(g.len() == n, "node {node} last-group length {} != {n}", g.len());
                 lasts.push(std::mem::take(g));
             }
-            let mean = dense_mean_accounted(&lasts, shards);
+            let mean = dense_mean_masked(&lasts, &self.alive, shards);
             net.fanout((n * 4) as u64);
             return Ok(mean);
         }
         let mut mean = vec![0.0f32; n];
         let mut total = 0u64;
         for (node, up) in ups.iter().enumerate() {
+            if !self.alive[node] {
+                continue;
+            }
             let LastUp::Sparse { coded_idx, vals } = &up.last else {
                 bail!("node {node} sent a dense last-group payload on a sparse path")
             };
@@ -1142,7 +1574,8 @@ impl<'e> Coordinator<'e> {
             total += (vals.len() * 4 + coded_idx.len()) as u64;
             topk::scatter_add(&mut mean, &idx, vals);
         }
-        mean.iter_mut().for_each(|m| *m /= nodes as f32);
+        let live = live_count(&self.alive) as f32;
+        mean.iter_mut().for_each(|m| *m /= live);
         net.fanout(total);
         Ok(mean)
     }
@@ -1172,10 +1605,15 @@ fn reject(conn: &mut Conn, msg: String) -> anyhow::Error {
     anyhow::anyhow!(msg)
 }
 
-/// Extract dense mid payloads from every node (dense phases).
-fn take_dense_mids(ups: &mut [Up]) -> Result<Vec<Vec<f32>>> {
+/// Extract dense mid payloads from every live node (dense phases); dead
+/// nodes contribute the empty vector every masked mean skips.
+fn take_dense_mids(ups: &mut [Up], alive: &[bool]) -> Result<Vec<Vec<f32>>> {
     let mut out = Vec::with_capacity(ups.len());
     for (node, up) in ups.iter_mut().enumerate() {
+        if !alive[node] {
+            out.push(Vec::new());
+            continue;
+        }
         let MidUp::Dense(g) = &mut up.mid else {
             bail!("node {node} sent {} on a dense path", up.mid.name())
         };

@@ -35,14 +35,16 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::baselines::pack_values_in_place;
 use crate::compress::autoencoder::{rms, AeCompressor, Pattern};
 use crate::compress::{index_coding, topk, Correction, FeedbackMemory, Scratch};
-use crate::config::{Method, TrainConfig};
+use crate::config::{Method, OnFault, TrainConfig};
 use crate::coordinator::bucket::{method_bucketable, BucketPlan};
+use crate::coordinator::faults;
 use crate::coordinator::lr_at;
 use crate::coordinator::scheduler::{exponential_alpha, phase_and_alpha, Phase};
 use crate::data::{self, Dataset};
 use crate::model::{Group, Model};
 use crate::runtime::Engine;
-use crate::transport::{BucketUp, Conn, LastUp, MidUp, Msg, PROTO_VERSION};
+use crate::transport::{BucketUp, Conn, HeartbeatPump, LastUp, MidUp, Msg, PROTO_VERSION};
+use crate::util::ser::{self, Reader};
 
 /// Connection knobs for one worker process (`lgc worker`).
 #[derive(Debug, Clone)]
@@ -61,6 +63,10 @@ pub struct WorkerOpts {
     /// default: the coordinator runs AE training and eval between
     /// iterations.
     pub net_timeout: Duration,
+    /// When set, reconnect to a live elastic run as this node via the
+    /// token-checked rejoin handshake instead of a fresh join
+    /// (`--on-fault wait-rejoin`, DESIGN.md §14.3).
+    pub rejoin_node: Option<u32>,
 }
 
 impl Default for WorkerOpts {
@@ -71,6 +77,7 @@ impl Default for WorkerOpts {
             retries: 40,
             backoff_ms: 50,
             net_timeout: Duration::from_secs(120),
+            rejoin_node: None,
         }
     }
 }
@@ -79,9 +86,20 @@ impl Default for WorkerOpts {
 /// coordinator sends [`Msg::Shutdown`] (clean end of training, or a
 /// coordinator-side error relayed as the shutdown reason).
 pub fn run(engine: &Engine, opts: &WorkerOpts) -> Result<()> {
-    let mut conn = Conn::connect_with_retry(&opts.connect, opts.retries, opts.backoff_ms)?;
+    // Per-process jitter (session ^ pid) keeps a thundering herd of
+    // simultaneously restarted workers from retrying in lockstep.
+    let pid = std::process::id() as u64;
+    let mut conn = Conn::connect_with_retry_jittered(
+        &opts.connect,
+        opts.retries,
+        opts.backoff_ms,
+        opts.session ^ pid,
+    )?;
     conn.set_read_timeout(Some(opts.net_timeout))?;
-    conn.send(&Msg::Join { proto: PROTO_VERSION, session: opts.session })?;
+    if let Some(rejoin) = opts.rejoin_node {
+        return run_rejoin(engine, opts, conn, rejoin);
+    }
+    conn.send(&Msg::Join { proto: PROTO_VERSION, session: opts.session, pid })?;
     let (node, nodes, platform, cfg) = match conn.expect("JoinAck")? {
         Msg::JoinAck { node, nodes, platform, cfg } => {
             (node as usize, nodes as usize, platform, cfg)
@@ -100,7 +118,61 @@ pub fn run(engine: &Engine, opts: &WorkerOpts) -> Result<()> {
         cfg.method.name(),
         cfg.model
     );
-    Node::new(engine, node, nodes, cfg)?.serve(&mut conn)
+    let _pump = spawn_pump(&conn, &cfg);
+    let mut n = Node::new(engine, node, nodes, cfg)?;
+    if n.cfg.on_fault == OnFault::WaitRejoin {
+        // Initial state sync (sentinel iter u32::MAX): gives even an
+        // iteration-0 kill a resurrection payload.  Rejoiners skip this —
+        // the coordinator keeps the blob it just shipped them.
+        conn.send(&Msg::StateSync { iter: u32::MAX, blob: n.export_state() })?;
+    }
+    n.serve(&mut conn)
+}
+
+/// Heartbeat pump for this connection when the run enables liveness
+/// monitoring; `None` (no thread at all) when `heartbeat_ms == 0`.
+fn spawn_pump(conn: &Conn, cfg: &TrainConfig) -> Option<HeartbeatPump> {
+    (cfg.heartbeat_ms > 0)
+        .then(|| HeartbeatPump::spawn(conn.writer(), Duration::from_millis(cfg.heartbeat_ms)))
+}
+
+/// The elastic re-entry path: prove identity with the session token,
+/// receive the full resync (run parameters, model replica, this node's
+/// own strategy state from the end of the last completed iteration, and
+/// the current AE encoder when one was ever broadcast), then serve as if
+/// nothing happened.  Bit-exactness argument in DESIGN.md §14.3.
+fn run_rejoin(engine: &Engine, opts: &WorkerOpts, mut conn: Conn, node: u32) -> Result<()> {
+    let token = faults::rejoin_token(opts.session, node as usize);
+    conn.send(&Msg::Rejoin { proto: PROTO_VERSION, session: opts.session, node, token })?;
+    let (node, nodes, platform, cfg, iter, model, state, encoder) =
+        match conn.expect("RejoinAck")? {
+            Msg::RejoinAck { node, nodes, platform, cfg, iter, model, state, encoder } => {
+                (node as usize, nodes as usize, platform, cfg, iter, model, state, encoder)
+            }
+            other => bail!("expected RejoinAck, got {}", other.name()),
+        };
+    ensure!(
+        platform == engine.platform(),
+        "backend mismatch: coordinator runs on {:?}, this worker on {:?} — results would \
+         not be bit-identical; relaunch the worker with a matching --backend/$LGC_BACKEND",
+        platform,
+        engine.platform()
+    );
+    eprintln!(
+        "lgc worker: node {node}/{nodes} rejoined at iteration {iter} (method {})",
+        cfg.method.name()
+    );
+    let _pump = spawn_pump(&conn, &cfg);
+    let mut n = Node::new(engine, node, nodes, cfg)?;
+    n.model.load_state_bytes(&model).context("restoring model replica on rejoin")?;
+    n.import_state(&state).context("restoring strategy state on rejoin")?;
+    if let Some(enc) = encoder {
+        match &mut n.mid {
+            MidState::Lgc { ae, .. } => ae.import_encoder(&enc)?,
+            _ => bail!("received AE encoder weights for a non-LGC method"),
+        }
+    }
+    n.serve(&mut conn)
 }
 
 /// Mid-group method state owned by this node — the single-node slice of
@@ -315,7 +387,63 @@ impl<'e> Node<'e> {
             }
             other => bail!("expected SyncInfo, got {}", other.name()),
         }
+        if self.cfg.on_fault == OnFault::WaitRejoin {
+            // Elastic runs: ship the post-step strategy state so the
+            // coordinator can resurrect this node bit-identically if it
+            // dies before the next step completes.  The coordinator
+            // reads this synchronously before the next IterPlan.
+            conn.send(&Msg::StateSync { iter: it as u32, blob: self.export_state() })?;
+        }
         Ok(())
+    }
+
+    /// Serialize everything this node owns beyond the (deterministic)
+    /// model replica: the mid-group method state and the last-group EF
+    /// memory.  `ramp`/`ps` and all shapes are config-derived and not
+    /// serialized; [`Node::import_state`] into a freshly built node of
+    /// the same config continues bit-identically.
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match &self.mid {
+            MidState::Dense => out.push(0),
+            MidState::Sparse { fb, .. } => {
+                out.push(1);
+                fb.write_state(&mut out);
+            }
+            MidState::Threshold { fb, threshold } => {
+                out.push(2);
+                fb.write_state(&mut out);
+                ser::put_f32(&mut out, *threshold);
+            }
+            MidState::Lgc { fb, .. } => {
+                out.push(3);
+                fb.write_state(&mut out);
+            }
+        }
+        self.last_fb.write_state(&mut out);
+        out
+    }
+
+    /// Inverse of [`Node::export_state`]; the blob's variant tag must
+    /// match what this node's config dictates.
+    fn import_state(&mut self, blob: &[u8]) -> Result<()> {
+        let mut r = Reader::new(blob);
+        let tag = r.u8()?;
+        match (&mut self.mid, tag) {
+            (MidState::Dense, 0) => {}
+            (MidState::Sparse { fb, .. }, 1) => fb.read_state(&mut r)?,
+            (MidState::Threshold { fb, threshold }, 2) => {
+                fb.read_state(&mut r)?;
+                *threshold = r.f32()?;
+            }
+            (MidState::Lgc { fb, .. }, 3) => fb.read_state(&mut r)?,
+            (_, t) => bail!(
+                "worker state blob variant tag {t} does not match method {}",
+                self.cfg.method.name()
+            ),
+        }
+        self.last_fb.read_state(&mut r)?;
+        r.finish().context("worker state blob")
     }
 
     /// Build the mid-group uplink: the node-local half of the selected

@@ -37,6 +37,8 @@ const FLAGS: &[&str] = &[
     "transport", "listen", "connect", "session", "net-timeout-ms",
     "join-timeout-ms", "retries", "backoff-ms", "checkpoint",
     "buckets", "bucket-bytes",
+    "heartbeat-ms", "miss-budget", "on-fault", "faults", "resume",
+    "ckpt-every", "rejoin-node",
 ];
 
 /// Boolean switches (never consume the next token).
@@ -131,6 +133,7 @@ fn main() -> Result<()> {
                     r.steady_comm_s_at(link, 50) * 1e3
                 );
             }
+            print_fault_events(&r);
             println!("{}", r.ledger.summary());
             if args.has("assert-improves") {
                 // CI gate: the run must end with a finite, improved loss.
@@ -151,6 +154,7 @@ fn main() -> Result<()> {
             opts.spawn_workers = false;
             let r = remote::train_with_opts(&engine, cfg, &opts)?;
             println!("final eval: loss {:.4}, acc {:.4}", r.final_eval.0, r.final_eval.1);
+            print_fault_events(&r);
             println!("{}", r.ledger.summary());
         }
         "worker" => {
@@ -164,6 +168,9 @@ fn main() -> Result<()> {
             opts.net_timeout = Duration::from_millis(
                 args.u64("net-timeout-ms", opts.net_timeout.as_millis() as u64),
             );
+            if args.has("rejoin-node") {
+                opts.rejoin_node = Some(args.u64("rejoin-node", 0) as u32);
+            }
             worker::run(&engine, &opts)?;
         }
         "exp" => {
@@ -237,6 +244,18 @@ fn main() -> Result<()> {
         other => bail!("unknown subcommand {other:?}; run `lgc help`"),
     }
     Ok(())
+}
+
+/// The fault-event log (each line also streamed to stderr as it fired) —
+/// CI's chaos job uploads these lines as its artifact.
+fn print_fault_events(r: &lgc::coordinator::TrainResult) {
+    if r.fault_events.is_empty() {
+        return;
+    }
+    println!("fault events ({}):", r.fault_events.len());
+    for ev in &r.fault_events {
+        println!("  {}", ev.log_line());
+    }
 }
 
 /// Coordinator-side transport knobs from the command line (`train
@@ -386,7 +405,8 @@ SUBCOMMANDS:
                flags as train, plus --listen ADDR --session ID
                [--join-timeout-ms N --net-timeout-ms N]
   worker       one node of a multi-process run: --connect HOST:PORT|unix:/path
-               [--session ID --retries N --backoff-ms N --net-timeout-ms N]
+               [--session ID --retries N --backoff-ms N --net-timeout-ms N
+               --rejoin-node N (re-enter a live elastic run as node N)]
   exp          <id> or --id ID, one of table4|table5|table6|fig3|fig10|fig11|
                fig12|fig13|fig14|fig14-ae|speedup|ablation|all  [--steps N]
                fig14 = modeled speedup-vs-bandwidth sweep (results/
@@ -407,6 +427,27 @@ TRANSPORT (train, serve, exp; DESIGN.md §12):
   --net-timeout-ms N   per-receive deadline; a dead peer errors out within
                        this bound instead of hanging (default 30000)
   --checkpoint PATH    save the final model replica to PATH (any transport)
+
+FAULT TOLERANCE (train, serve; DESIGN.md §14):
+  --heartbeat-ms N     worker->coordinator heartbeat period (0 = off); with
+                       heartbeats on, a silent worker is declared dead after
+                       the miss budget instead of the full net timeout
+  --miss-budget N      consecutive missed heartbeat periods tolerated
+                       (default 3)
+  --on-fault POLICY    fail (default) = any worker death aborts the run;
+                       continue = drop the dead worker and renormalize
+                       aggregation over the survivors (its EF residual is
+                       lost; methods with shared coordinator state refuse);
+                       wait-rejoin = respawn the worker and resync it via a
+                       token-checked rejoin handshake, bit-identically
+  --faults SPEC        deterministic fault plan, e.g.
+                       "iter=40:kill=2;iter=60:stall=1:500ms;
+                        iter=80:corrupt-frame=3;iter=90:crash"
+                       (executed by sim and tcp backends alike)
+  --ckpt-every N       write an atomic training checkpoint every N
+                       iterations to --checkpoint PATH (sim transport)
+  --resume PATH        resume a sim run from a training checkpoint; the
+                       resumed run is bit-identical to an uninterrupted one
 
 PIPELINED EXECUTION (train, serve, worker; DESIGN.md §13):
   --buckets N        partition the mid-group gradient into N layer-aligned

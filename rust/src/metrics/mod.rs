@@ -50,6 +50,28 @@ impl Kind {
             Kind::AeWeights => "ae_weights",
         }
     }
+
+    /// Stable serialization tag (resume checkpoints, DESIGN.md §14).
+    fn tag(self) -> u8 {
+        match self {
+            Kind::Dense => 0,
+            Kind::Values => 1,
+            Kind::Indices => 2,
+            Kind::Latent => 3,
+            Kind::AeWeights => 4,
+        }
+    }
+
+    fn from_tag(t: u8) -> anyhow::Result<Kind> {
+        Ok(match t {
+            0 => Kind::Dense,
+            1 => Kind::Values,
+            2 => Kind::Indices,
+            3 => Kind::Latent,
+            4 => Kind::AeWeights,
+            other => anyhow::bail!("unknown ledger kind tag {other}"),
+        })
+    }
 }
 
 /// The global measured-bytes ledger of one training run (§6.4): every
@@ -142,6 +164,74 @@ impl Ledger {
         }
         let tail = &self.iter_bytes[self.iter_bytes.len().saturating_sub(n)..];
         tail.iter().sum::<u64>() as f64 / tail.len() as f64
+    }
+
+    /// Serialize the ledger for a resume checkpoint (DESIGN.md §14).
+    /// Snapshots happen at iteration boundaries — after
+    /// [`Ledger::end_iteration`] — so `cur_iter` is always 0 and is not
+    /// written; the current phase tag is.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        use crate::util::ser::{put_u64, put_u8};
+        debug_assert_eq!(self.cur_iter, 0, "snapshot only at iteration boundaries");
+        let mut out = Vec::new();
+        put_u8(&mut out, self.phase);
+        put_u64(&mut out, self.per_node.len() as u64);
+        for (&node, &b) in &self.per_node {
+            put_u64(&mut out, node as u64);
+            put_u64(&mut out, b);
+        }
+        put_u64(&mut out, self.per_kind.len() as u64);
+        for (&kind, &b) in &self.per_kind {
+            put_u8(&mut out, kind.tag());
+            put_u64(&mut out, b);
+        }
+        put_u64(&mut out, self.per_phase.len() as u64);
+        for (&phase, &b) in &self.per_phase {
+            put_u8(&mut out, phase);
+            put_u64(&mut out, b);
+        }
+        put_u64(&mut out, self.per_phase_node.len() as u64);
+        for (&(phase, node), &b) in &self.per_phase_node {
+            put_u8(&mut out, phase);
+            put_u64(&mut out, node as u64);
+            put_u64(&mut out, b);
+        }
+        put_u64(&mut out, self.iter_bytes.len() as u64);
+        for &b in &self.iter_bytes {
+            put_u64(&mut out, b);
+        }
+        out
+    }
+
+    /// Restore a ledger from [`Ledger::to_bytes`].
+    pub fn from_bytes(r: &mut crate::util::ser::Reader) -> anyhow::Result<Ledger> {
+        let mut l = Ledger::new();
+        l.phase = r.u8()?;
+        for _ in 0..r.count(16)? {
+            let node = r.u64()? as usize;
+            let b = r.u64()?;
+            l.per_node.insert(node, b);
+        }
+        for _ in 0..r.count(9)? {
+            let kind = Kind::from_tag(r.u8()?)?;
+            let b = r.u64()?;
+            l.per_kind.insert(kind, b);
+        }
+        for _ in 0..r.count(9)? {
+            let phase = r.u8()?;
+            let b = r.u64()?;
+            l.per_phase.insert(phase, b);
+        }
+        for _ in 0..r.count(17)? {
+            let phase = r.u8()?;
+            let node = r.u64()? as usize;
+            let b = r.u64()?;
+            l.per_phase_node.insert((phase, node), b);
+        }
+        for _ in 0..r.count(8)? {
+            l.iter_bytes.push(r.u64()?);
+        }
+        Ok(l)
     }
 
     /// Human-readable total + per-kind byte breakdown (the `lgc train`
@@ -345,6 +435,40 @@ mod tests {
         // One-offs count in totals but not the per-iteration series.
         assert_eq!(l.iter_bytes, vec![100]);
         assert_eq!(l.per_node[&1], 5000);
+    }
+
+    #[test]
+    fn ledger_bytes_roundtrip_exact() {
+        let mut l = Ledger::new();
+        l.set_phase(1);
+        l.record(0, Kind::Dense, 100);
+        l.record(3, Kind::Values, 7);
+        l.end_iteration();
+        l.set_phase(3);
+        l.record_oneoff(1, Kind::AeWeights, 9999);
+        l.record(1, Kind::Latent, 12);
+        l.end_iteration();
+        let blob = l.to_bytes();
+        let mut r = crate::util::ser::Reader::new(&blob);
+        let back = Ledger::from_bytes(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back, l);
+        // The restored ledger keeps recording under the snapshotted phase.
+        let mut a = l.clone();
+        let mut b = back.clone();
+        a.record(2, Kind::Indices, 5);
+        b.record(2, Kind::Indices, 5);
+        a.end_iteration();
+        b.end_iteration();
+        assert_eq!(a, b);
+        // Truncated blobs error.
+        for cut in [0, 1, blob.len() / 2] {
+            let mut r = crate::util::ser::Reader::new(&blob[..cut]);
+            assert!(
+                Ledger::from_bytes(&mut r).and_then(|_| r.finish()).is_err(),
+                "cut {cut}"
+            );
+        }
     }
 
     #[test]

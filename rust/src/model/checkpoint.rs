@@ -1,22 +1,38 @@
 //! Training-state checkpointing (framework feature; not in the paper).
 //!
-//! Binary format, versioned, self-describing:
-//!   magic "LGCK" | u32 version | u32 n_tensors |
+//! Two binary formats share the magic and the trailing CRC32 (so truncated
+//! files fail loudly):
+//!
+//! v1 — model tensors (unchanged on-disk bytes since PR 4):
+//!   magic "LGCK" | u32 1 | u32 n_tensors |
 //!   per tensor: u32 rank | u64 dims[rank] | u8 dtype | payload bytes
-//! plus a trailing CRC32 so truncated files fail loudly.
+//!
+//! v2 — named state blobs, the full-training-state container behind
+//! `--ckpt-every` / `--resume` (DESIGN.md §14):
+//!   magic "LGCK" | u32 2 | u32 n_blobs |
+//!   per blob: str name | bytes payload      (util::ser framing)
+//!
+//! All writes are atomic — temp file in the same directory, fsync, rename —
+//! so a crash mid-save leaves the previous checkpoint intact instead of a
+//! truncated file that only fails at resume time.
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 use flate2::Crc;
 
 use crate::runtime::{Data, Tensor};
+use crate::util::ser;
 
 const MAGIC: &[u8; 4] = b"LGCK";
 const VERSION: u32 = 1;
+const BLOB_VERSION: u32 = 2;
 
-pub fn save(path: impl AsRef<Path>, tensors: &[Tensor]) -> Result<()> {
+/// The exact v1 file bytes for a tensor list (magic through CRC trailer).
+/// Kept as a pure function so tests can byte-compare checkpoints across
+/// transports without touching the filesystem path logic.
+pub fn encode_tensors(tensors: &[Tensor]) -> Vec<u8> {
     let mut buf: Vec<u8> = Vec::new();
     buf.extend(MAGIC);
     buf.extend(VERSION.to_le_bytes());
@@ -41,23 +57,82 @@ pub fn save(path: impl AsRef<Path>, tensors: &[Tensor]) -> Result<()> {
             }
         }
     }
+    seal(buf)
+}
+
+/// Append the CRC32 trailer.
+fn seal(mut buf: Vec<u8>) -> Vec<u8> {
     let mut crc = Crc::new();
     crc.update(&buf);
     buf.extend(crc.sum().to_le_bytes());
-    if let Some(dir) = path.as_ref().parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::fs::File::create(path.as_ref())
-        .with_context(|| format!("creating {:?}", path.as_ref()))?;
-    f.write_all(&buf)?;
-    Ok(())
+    buf
 }
 
-pub fn load(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
-    let mut buf = Vec::new();
-    std::fs::File::open(path.as_ref())
-        .with_context(|| format!("opening {:?}", path.as_ref()))?
-        .read_to_end(&mut buf)?;
+fn temp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(format!(".tmp-{}", std::process::id()));
+    path.with_file_name(name)
+}
+
+/// Crash-safe file replacement: write to a temp file *in the same
+/// directory* (rename across filesystems is not atomic), fsync, then
+/// rename over the destination.  A crash at any point leaves either the
+/// old file or the new one — never a truncated hybrid.
+pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = temp_path(path);
+    let res = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp:?} over {path:?}"))?;
+        Ok(())
+    })();
+    if res.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    res
+}
+
+/// Fault-injection twin of [`atomic_write`]: writes only the first
+/// `limit` bytes to the temp file and then fails *before the rename*,
+/// simulating a crash mid-save.  The destination file is never touched —
+/// the partial-write test proves the old checkpoint survives and still
+/// loads.
+pub fn atomic_write_with_limit(
+    path: impl AsRef<Path>,
+    bytes: &[u8],
+    limit: usize,
+) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = temp_path(path);
+    let mut f = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+    f.write_all(&bytes[..limit.min(bytes.len())])?;
+    f.sync_all()?;
+    drop(f);
+    bail!("injected crash after {} of {} bytes (temp {tmp:?})", limit.min(bytes.len()), bytes.len());
+}
+
+pub fn save(path: impl AsRef<Path>, tensors: &[Tensor]) -> Result<()> {
+    atomic_write(path, &encode_tensors(tensors))
+}
+
+/// Verify the CRC trailer + magic of in-memory checkpoint bytes and
+/// return (version, body after the 8-byte header).  Shared by the file
+/// loaders and the wire-carried model-state blobs.
+pub fn verify_bytes(buf: &[u8]) -> Result<(u32, &[u8])> {
     if buf.len() < 16 {
         bail!("checkpoint too short");
     }
@@ -68,6 +143,37 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
     if crc.sum() != want_crc {
         bail!("checkpoint CRC mismatch (truncated or corrupted)");
     }
+    if &body[..4] != MAGIC {
+        bail!("not an LGC checkpoint");
+    }
+    let version = u32::from_le_bytes(body[4..8].try_into()?);
+    Ok((version, &body[8..]))
+}
+
+/// Read a checkpoint file and [`verify_bytes`] it.
+fn read_verified(path: &Path) -> Result<(u32, Vec<u8>)> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?
+        .read_to_end(&mut buf)?;
+    let (version, body) = verify_bytes(&buf)?;
+    Ok((version, body.to_vec()))
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
+    let (version, body) = read_verified(path.as_ref())?;
+    if version != VERSION {
+        bail!(
+            "unsupported checkpoint version {version} (model checkpoints are v1; \
+             v2 files hold full training state — resume them with --resume)"
+        );
+    }
+    decode_tensors(&body)
+}
+
+/// Parse the v1 tensor section (everything after magic+version, before the
+/// CRC trailer).
+pub fn decode_tensors(body: &[u8]) -> Result<Vec<Tensor>> {
     let mut pos = 0usize;
     let mut take = |n: usize| -> Result<&[u8]> {
         if pos + n > body.len() {
@@ -77,13 +183,6 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
         pos += n;
         Ok(s)
     };
-    if take(4)? != MAGIC {
-        bail!("not an LGC checkpoint");
-    }
-    let version = u32::from_le_bytes(take(4)?.try_into()?);
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
     let count = u32::from_le_bytes(take(4)?.try_into()?) as usize;
     let mut out = Vec::with_capacity(count);
     for _ in 0..count {
@@ -118,6 +217,54 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
         }
     }
     Ok(out)
+}
+
+/// Encode the v2 named-blob container (magic through CRC trailer).
+pub fn encode_blobs(blobs: &[(&str, Vec<u8>)]) -> Vec<u8> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend(MAGIC);
+    buf.extend(BLOB_VERSION.to_le_bytes());
+    buf.extend((blobs.len() as u32).to_le_bytes());
+    for (name, payload) in blobs {
+        ser::put_str(&mut buf, name);
+        ser::put_bytes(&mut buf, payload);
+    }
+    seal(buf)
+}
+
+/// Atomically write a v2 training-state checkpoint.
+pub fn save_blobs(path: impl AsRef<Path>, blobs: &[(&str, Vec<u8>)]) -> Result<()> {
+    atomic_write(path, &encode_blobs(blobs))
+}
+
+/// Load a v2 training-state checkpoint as (name, payload) pairs.
+pub fn load_blobs(path: impl AsRef<Path>) -> Result<Vec<(String, Vec<u8>)>> {
+    let (version, body) = read_verified(path.as_ref())?;
+    if version != BLOB_VERSION {
+        bail!(
+            "unsupported checkpoint version {version} (training-state checkpoints are v2; \
+             this looks like a model-only v1 file)"
+        );
+    }
+    let mut r = ser::Reader::new(&body);
+    let count = r.u32()? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name = r.string()?;
+        let payload = r.bytes()?;
+        out.push((name, payload));
+    }
+    r.finish()?;
+    Ok(out)
+}
+
+/// Find a named blob in a loaded v2 container.
+pub fn blob<'a>(blobs: &'a [(String, Vec<u8>)], name: &str) -> Result<&'a [u8]> {
+    blobs
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, b)| b.as_slice())
+        .ok_or_else(|| anyhow::anyhow!("checkpoint is missing the {name:?} state blob"))
 }
 
 #[cfg(test)]
@@ -179,6 +326,70 @@ mod tests {
         let p = tmp("empty");
         save(&p, &[]).unwrap();
         assert_eq!(load(&p).unwrap(), vec![]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn save_leaves_no_temp_files_and_same_bytes_as_encode() {
+        let tensors = vec![Tensor::f32(vec![3], vec![1.0, 2.0, 3.0])];
+        let p = tmp("atomic");
+        save(&p, &tensors).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), encode_tensors(&tensors));
+        assert!(!temp_path(&p).exists(), "temp file must be renamed away");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn partial_write_injection_preserves_old_checkpoint() {
+        let old = vec![Tensor::f32(vec![4], vec![9.0; 4])];
+        let new = vec![Tensor::f32(vec![256], vec![1.0; 256])];
+        let p = tmp("partial");
+        save(&p, &old).unwrap();
+        let old_bytes = std::fs::read(&p).unwrap();
+        // Crash mid-save at every interesting cut point: the destination
+        // is untouched and still loads.
+        let new_bytes = encode_tensors(&new);
+        for cut in [0, 1, 7, new_bytes.len() / 2, new_bytes.len() - 1] {
+            assert!(atomic_write_with_limit(&p, &new_bytes, cut).is_err());
+            assert_eq!(std::fs::read(&p).unwrap(), old_bytes);
+            assert_eq!(load(&p).unwrap(), old);
+        }
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(temp_path(&p)).ok();
+    }
+
+    #[test]
+    fn blob_container_roundtrip() {
+        let p = tmp("blobs");
+        let blobs: Vec<(&str, Vec<u8>)> =
+            vec![("model", vec![1, 2, 3]), ("rng", vec![]), ("ledger", vec![0xFF; 100])];
+        save_blobs(&p, &blobs).unwrap();
+        let back = load_blobs(&p).unwrap();
+        assert_eq!(back.len(), 3);
+        for ((n0, b0), (n1, b1)) in blobs.iter().zip(&back) {
+            assert_eq!(n0, n1);
+            assert_eq!(b0, b1);
+        }
+        assert_eq!(blob(&back, "rng").unwrap(), &[] as &[u8]);
+        assert!(blob(&back, "nope").is_err());
+        // Version confusion fails loudly in both directions.
+        assert!(load(&p).is_err());
+        let p1 = tmp("blobs_v1");
+        save(&p1, &[]).unwrap();
+        assert!(load_blobs(&p1).is_err());
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&p1).ok();
+    }
+
+    #[test]
+    fn blob_container_detects_corruption() {
+        let p = tmp("blobs_corrupt");
+        save_blobs(&p, &[("state", vec![7; 64])]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_blobs(&p).is_err());
         std::fs::remove_file(&p).ok();
     }
 }

@@ -158,6 +158,38 @@ impl Model {
         Ok(())
     }
 
+    /// Parameters + optimizer state as in-memory v1 checkpoint bytes —
+    /// the replica payload the rejoin handshake and the v2 resume
+    /// container both carry (same encoding as [`Model::save_checkpoint`],
+    /// minus the file).
+    pub fn state_bytes(&self) -> Vec<u8> {
+        let mut tensors = self.params.clone();
+        tensors.push(Tensor::f32(vec![self.velocity.len()], self.velocity.clone()));
+        checkpoint::encode_tensors(&tensors)
+    }
+
+    /// Restore parameters + optimizer state from [`Model::state_bytes`].
+    pub fn load_state_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        let (version, body) = checkpoint::verify_bytes(bytes)?;
+        anyhow::ensure!(version == 1, "model state blob has version {version}, want 1");
+        let mut tensors = checkpoint::decode_tensors(body)?;
+        anyhow::ensure!(
+            tensors.len() == self.params.len() + 1,
+            "model state tensor count mismatch: got {}, want {}",
+            tensors.len(),
+            self.params.len() + 1
+        );
+        let vel = tensors.pop().unwrap();
+        anyhow::ensure!(vel.len() == self.velocity.len(), "velocity length mismatch");
+        for (t, shape) in tensors.iter().zip(&self.meta.params) {
+            anyhow::ensure!(&t.dims == shape, "param shape mismatch: {:?} vs {:?}",
+                            t.dims, shape);
+        }
+        self.velocity = vel.as_f32().to_vec();
+        self.params = tensors;
+        Ok(())
+    }
+
     /// SGD update from group-flattened aggregated gradients.
     ///
     /// `lr` is the step size; momentum/weight decay per the model config.
@@ -267,6 +299,26 @@ mod tests {
         m.apply_update(&[(Group::Mid, vec![1.0; 4])], 0.1);
         // First step: -0.1; second: v=1.9 -> -0.19; total -0.29.
         assert!((m.params[2].as_f32()[0] - (w0 - 0.29)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn state_bytes_roundtrip_exact() {
+        let mut a = Model::new(&meta(), 7);
+        a.momentum = 0.9;
+        a.apply_update(&[(Group::Mid, vec![1.0; 4])], 0.1);
+        let blob = a.state_bytes();
+        let mut b = Model::new(&meta(), 8); // different init
+        b.momentum = 0.9;
+        b.load_state_bytes(&blob).unwrap();
+        for (pa, pb) in a.params.iter().zip(&b.params) {
+            assert_eq!(pa, pb);
+        }
+        assert_eq!(a.velocity, b.velocity);
+        // Corruption is caught by the CRC.
+        let mut bad = blob.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        assert!(b.load_state_bytes(&bad).is_err());
     }
 
     #[test]

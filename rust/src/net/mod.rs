@@ -97,6 +97,9 @@ pub struct NetSim {
     rounds: Vec<Round>,
     trace: Vec<Vec<Round>>,
     uplink_bytes: u64,
+    /// Injected stall events: (iteration, node, seconds) — see
+    /// [`NetSim::stall`].
+    stalls: Vec<(usize, usize, f64)>,
 }
 
 impl NetSim {
@@ -109,6 +112,7 @@ impl NetSim {
             rounds: Vec::new(),
             trace: Vec::new(),
             uplink_bytes: 0,
+            stalls: Vec::new(),
         }
     }
 
@@ -214,6 +218,16 @@ impl NetSim {
         self.close_round(oneoff);
     }
 
+    /// Record an injected stall: `node` is frozen for `seconds` of wall
+    /// clock during the *open* iteration (DESIGN.md §14).  Stalls of an
+    /// iteration run concurrently — every node waits at the barrier for
+    /// the longest one — and are absolute durations, so straggler
+    /// multipliers never scale them.  A frame corruption is priced the
+    /// same way (one retransmit-length stall on the corrupted link).
+    pub fn stall(&mut self, node: usize, seconds: f64) {
+        self.stalls.push((self.trace.len(), node, seconds));
+    }
+
     /// Close the iteration: flush the open round and append this
     /// iteration's rounds to the trace (an iteration with no traffic
     /// records an empty round list, keeping trace indices aligned with
@@ -233,7 +247,87 @@ impl NetSim {
             fabric: self.fabric,
             trace: self.trace,
             uplink_bytes: self.uplink_bytes,
+            stalls: self.stalls,
         }
+    }
+
+    /// Serialize the recorded trace for a resume checkpoint (DESIGN.md
+    /// §14).  Snapshots happen at iteration boundaries, so the open round
+    /// and the open iteration's round list are always empty and are not
+    /// written; the fabric is rebuilt from config on restore.
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::util::ser::{put_f64, put_u32, put_u64, put_u8};
+        debug_assert!(
+            self.rounds.is_empty() && self.cur.is_empty(),
+            "snapshot only at iteration boundaries"
+        );
+        put_u64(out, self.trace.len() as u64);
+        for rounds in &self.trace {
+            put_u64(out, rounds.len() as u64);
+            for r in rounds {
+                put_u64(out, r.per_node.len() as u64);
+                for &(m, b) in &r.per_node {
+                    put_u32(out, m);
+                    put_u64(out, b);
+                }
+                put_u8(out, r.oneoff as u8);
+                match r.bucket {
+                    Some(b) => {
+                        put_u8(out, 1);
+                        put_u32(out, b);
+                    }
+                    None => put_u8(out, 0),
+                }
+            }
+        }
+        put_u64(out, self.uplink_bytes);
+        put_u64(out, self.stalls.len() as u64);
+        for &(it, node, s) in &self.stalls {
+            put_u64(out, it as u64);
+            put_u64(out, node as u64);
+            put_f64(out, s);
+        }
+    }
+
+    /// Restore trace state from [`NetSim::save_state`] into a freshly
+    /// built simulator (fabric and node count come from config).
+    pub fn restore_state(&mut self, r: &mut crate::util::ser::Reader) -> anyhow::Result<()> {
+        let mut trace = Vec::new();
+        for _ in 0..r.count(8)? {
+            let mut rounds = Vec::new();
+            for _ in 0..r.count(10)? {
+                let mut per_node = Vec::new();
+                for _ in 0..r.count(12)? {
+                    let m = r.u32()?;
+                    let b = r.u64()?;
+                    per_node.push((m, b));
+                }
+                let oneoff = match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    other => anyhow::bail!("bad round oneoff tag {other}"),
+                };
+                let bucket = match r.u8()? {
+                    0 => None,
+                    1 => Some(r.u32()?),
+                    other => anyhow::bail!("bad round bucket tag {other}"),
+                };
+                rounds.push(Round { per_node, oneoff, bucket });
+            }
+            trace.push(rounds);
+        }
+        let uplink = r.u64()?;
+        let mut stalls = Vec::new();
+        for _ in 0..r.count(24)? {
+            let it = r.u64()? as usize;
+            let node = r.u64()? as usize;
+            let s = r.f64()?;
+            stalls.push((it, node, s));
+        }
+        self.trace = trace;
+        self.uplink_bytes = uplink;
+        self.stalls = stalls;
+        Ok(())
     }
 }
 
@@ -254,6 +348,12 @@ pub struct NetReport {
     /// sees, so `uplink_bytes == Ledger::total()` is an invariant the
     /// end-to-end tests check.
     pub uplink_bytes: u64,
+    /// Injected fault stalls, `(iteration, node, seconds)` (DESIGN.md
+    /// §14): absolute wall-clock freezes priced into that iteration's
+    /// modeled time ([`NetReport::iter_comm_s_under`]) but — like one-off
+    /// rounds — excluded from steady-state means, so fault-free runs and
+    /// steady-state comparisons are unchanged (empty by default).
+    pub stalls: Vec<(usize, usize, f64)>,
 }
 
 impl NetReport {
@@ -275,10 +375,30 @@ impl NetReport {
     /// counts: multipliers never enter recording, only pricing (this is
     /// what lets ablation A5 sweep stragglers from one run per method).
     pub fn iter_comm_s_under(&self, fabric: &Fabric) -> Vec<f64> {
-        self.trace
+        let mut out: Vec<f64> = self
+            .trace
             .iter()
             .map(|rounds| rounds.iter().map(|r| r.time_s(fabric)).sum())
-            .collect()
+            .collect();
+        for (it, extra) in self.stall_s(out.len()) {
+            out[it] += extra;
+        }
+        out
+    }
+
+    /// Per-iteration barrier delay from injected stalls: stalled nodes
+    /// freeze concurrently, so each iteration pays the *longest* stall,
+    /// as an absolute duration (no link scaling, no straggler
+    /// multipliers).
+    fn stall_s(&self, iters: usize) -> Vec<(usize, f64)> {
+        let mut per_iter: std::collections::BTreeMap<usize, f64> = std::collections::BTreeMap::new();
+        for &(it, _node, s) in &self.stalls {
+            if it < iters {
+                let slot = per_iter.entry(it).or_insert(0.0);
+                *slot = slot.max(s);
+            }
+        }
+        per_iter.into_iter().collect()
     }
 
     /// Mean modeled communication seconds over the last `window`
@@ -373,7 +493,8 @@ impl NetReport {
                 Some(*acc)
             })
             .collect();
-        self.trace
+        let mut out: Vec<f64> = self
+            .trace
             .iter()
             .map(|rounds| {
                 let mut chan = 0.0f64;
@@ -391,7 +512,11 @@ impl NetReport {
                 }
                 chan.max(total_compute)
             })
-            .collect()
+            .collect();
+        for (it, extra) in self.stall_s(out.len()) {
+            out[it] += extra;
+        }
+        out
     }
 }
 
@@ -722,6 +847,81 @@ mod tests {
         let got = report.pipelined_iter_s_under(&fabric, &[0.5, 0.5])[0];
         assert!((got - 1.6).abs() < 1e-12, "{got}");
         assert!(got < 1.0 + sequential);
+    }
+
+    #[test]
+    fn injected_stalls_price_into_their_iteration_only() {
+        let mut sim = NetSim::new(flat(80.0, 0.0), 3); // 10 MB/s
+        sim.send(0, 1_000_000); // 0.1 s
+        sim.stall(1, 0.5);
+        sim.stall(2, 0.2); // concurrent: the 0.5 s stall paces the barrier
+        sim.end_iteration();
+        sim.send(0, 1_000_000);
+        sim.end_iteration();
+        let report = sim.into_report();
+        let t = report.iter_comm_s();
+        assert!((t[0] - 0.6).abs() < 1e-12, "{t:?}");
+        assert!((t[1] - 0.1).abs() < 1e-12, "{t:?}");
+        // Steady-state means skip injected stalls (like one-off rounds).
+        let steady = report.steady_comm_s_at(report.fabric.link, 2);
+        assert!((steady - 0.1).abs() < 1e-12, "{steady}");
+        // Stalls are absolute: repricing the link changes only wire time.
+        let slow = report.iter_comm_s_at(LinkModel::from_mbits(8.0, 0.0));
+        assert!((slow[0] - 1.5).abs() < 1e-12, "{slow:?}");
+        // The pipelined price pays the same barrier delay.
+        let piped = report.pipelined_iter_s_under(&report.fabric, &[0.0]);
+        assert!((piped[0] - 0.6).abs() < 1e-12, "{piped:?}");
+    }
+
+    #[test]
+    fn fault_free_reports_unchanged_by_stall_field() {
+        // Default-empty stalls keep PartialEq comparisons across runs
+        // exactly as before.
+        let mut a = NetSim::new(flat(100.0, 0.0), 2);
+        a.send(0, 1000);
+        a.end_iteration();
+        let ra = a.into_report();
+        assert!(ra.stalls.is_empty());
+        assert_eq!(ra, ra.clone());
+    }
+
+    #[test]
+    fn netsim_state_roundtrip_exact() {
+        let build = || {
+            let mut sim = NetSim::new(flat(100.0, 2e-4), 3);
+            sim.send(0, 999);
+            sim.broadcast_oneoff(1, 64);
+            sim.fanout_bucketed(2, 512);
+            sim.stall(1, 0.25);
+            sim.end_iteration();
+            sim.send(2, 77);
+            sim.end_iteration();
+            sim
+        };
+        let orig = build();
+        let mut blob = Vec::new();
+        orig.save_state(&mut blob);
+        let mut restored = NetSim::new(flat(100.0, 2e-4), 3);
+        let mut r = crate::util::ser::Reader::new(&blob);
+        restored.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+        // The restored sim continues recording identically.
+        let mut a = orig;
+        let mut b = restored;
+        a.send(1, 123);
+        b.send(1, 123);
+        a.end_iteration();
+        b.end_iteration();
+        assert_eq!(a.into_report(), b.into_report());
+        // Truncations error, never panic.
+        for cut in [0, 1, blob.len() / 3, blob.len() - 1] {
+            let mut s = NetSim::new(flat(100.0, 2e-4), 3);
+            let mut r = crate::util::ser::Reader::new(&blob[..cut]);
+            assert!(
+                s.restore_state(&mut r).and_then(|_| r.finish()).is_err(),
+                "cut {cut}"
+            );
+        }
     }
 
     #[test]

@@ -7,19 +7,32 @@
 //! [`Msg`]s; heartbeats are skipped transparently on receive, and a
 //! received [`Msg::Error`] becomes this side's error.
 //!
-//! Liveness discipline (DESIGN.md §12.4): every blocking read runs under
-//! a read timeout, so a hung peer surfaces as a descriptive "timed out"
-//! error and a killed peer as "disconnected" — never a hang.
+//! Liveness discipline (DESIGN.md §12.4 and §14): every blocking read
+//! runs under a read timeout, so a hung peer surfaces as a descriptive
+//! "timed out" error and a killed peer as "disconnected" — never a
+//! hang.  On top of that, an optional *progress* deadline bounds the
+//! total wait for a real (non-heartbeat) message: heartbeats prove the
+//! peer's process is alive but deliberately do NOT extend the deadline,
+//! so a hostile or wedged peer cannot stall a receiver forever by
+//! heartbeating.
+//!
+//! The write half of a connection is behind a mutex and can be cloned
+//! into a [`ConnWriter`], so a background [`HeartbeatPump`] can prove
+//! liveness while the owning thread is deep in a compute step; the
+//! mutex keeps concurrently sent frames from interleaving on the wire.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::os::unix::net::UnixStream;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::frame::{self, FrameDecoder};
 use super::msg::Msg;
+use crate::util::rng::Rng;
 
 /// Prefix selecting a Unix-domain socket address.
 pub const UNIX_PREFIX: &str = "unix:";
@@ -29,11 +42,41 @@ enum Stream {
     Unix(UnixStream),
 }
 
+impl Stream {
+    fn try_clone(&self) -> Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone().context("clone tcp stream")?),
+            Stream::Unix(s) => {
+                Stream::Unix(s.try_clone().context("clone unix stream")?)
+            }
+        })
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t)?,
+            Stream::Unix(s) => s.set_read_timeout(t)?,
+        }
+        Ok(())
+    }
+}
+
 /// A framed, typed, blocking connection (either socket family).
 pub struct Conn {
-    stream: Stream,
+    reader: Stream,
+    /// Write half, shared with any [`ConnWriter`] clones; the lock keeps
+    /// a heartbeat from splitting a data frame mid-write.
+    writer: Arc<Mutex<Stream>>,
     dec: FrameDecoder,
     peer: String,
+    /// Mirror of the per-read timeout last applied via
+    /// [`Conn::set_read_timeout`], so the progress deadline can clamp
+    /// individual reads without losing the configured value.
+    read_timeout: Option<Duration>,
+    /// Overall bound on [`Conn::recv`]: heartbeats do not extend it.
+    progress_timeout: Option<Duration>,
+    /// Fault injection: bit-flip the next outgoing frame's type byte.
+    corrupt_next: bool,
 }
 
 impl Conn {
@@ -43,15 +86,24 @@ impl Conn {
             .peer_addr()
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "tcp-peer".into());
-        Ok(Conn { stream: Stream::Tcp(s), dec: FrameDecoder::new(), peer })
+        Conn::from_stream(Stream::Tcp(s), peer)
     }
 
-    pub fn from_unix(s: UnixStream) -> Conn {
-        Conn {
-            stream: Stream::Unix(s),
+    pub fn from_unix(s: UnixStream) -> Result<Conn> {
+        Conn::from_stream(Stream::Unix(s), "unix-peer".into())
+    }
+
+    fn from_stream(reader: Stream, peer: String) -> Result<Conn> {
+        let writer = Arc::new(Mutex::new(reader.try_clone()?));
+        Ok(Conn {
+            reader,
+            writer,
             dec: FrameDecoder::new(),
-            peer: "unix-peer".into(),
-        }
+            peer,
+            read_timeout: None,
+            progress_timeout: None,
+            corrupt_next: false,
+        })
     }
 
     /// Connect once to `addr` (`host:port` or `unix:PATH`).
@@ -59,7 +111,7 @@ impl Conn {
         if let Some(path) = addr.strip_prefix(UNIX_PREFIX) {
             let s = UnixStream::connect(path)
                 .with_context(|| format!("connect to unix socket {path:?}"))?;
-            Ok(Conn::from_unix(s))
+            Conn::from_unix(s)
         } else {
             let s = TcpStream::connect(addr)
                 .with_context(|| format!("connect to tcp address {addr:?}"))?;
@@ -70,33 +122,74 @@ impl Conn {
     /// Connect with exponential backoff: `retries` additional attempts
     /// after the first, starting at `backoff_ms` and doubling (capped at
     /// 2s).  Covers the worker-starts-before-coordinator-binds race.
+    /// Deterministic and jitterless — prefer
+    /// [`Conn::connect_with_retry_jittered`] when several workers race
+    /// for the same listener, or they retry in lockstep.
     pub fn connect_with_retry(addr: &str, retries: usize, backoff_ms: u64) -> Result<Conn> {
-        let mut delay = Duration::from_millis(backoff_ms.max(1));
-        let cap = Duration::from_secs(2);
+        let schedule: Vec<u64> = {
+            let base = backoff_ms.max(1);
+            let mut d = base;
+            (0..retries)
+                .map(|_| {
+                    let cur = d;
+                    d = (d * 2).min(RETRY_CAP_MS);
+                    cur
+                })
+                .collect()
+        };
+        Conn::connect_on_schedule(addr, &schedule)
+    }
+
+    /// Connect with decorrelated-jitter backoff derived from `seed`
+    /// (see [`retry_schedule`]).  Workers seed this with values that
+    /// differ per process (session ^ pid), so a thundering herd of
+    /// restarts spreads out instead of hammering the listener in
+    /// lockstep.
+    pub fn connect_with_retry_jittered(
+        addr: &str,
+        retries: usize,
+        backoff_ms: u64,
+        seed: u64,
+    ) -> Result<Conn> {
+        Conn::connect_on_schedule(addr, &retry_schedule(retries, backoff_ms, seed))
+    }
+
+    fn connect_on_schedule(addr: &str, delays_ms: &[u64]) -> Result<Conn> {
         let mut last_err = None;
-        for attempt in 0..=retries {
+        for attempt in 0..=delays_ms.len() {
             match Conn::connect(addr) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
                     last_err = Some(e);
-                    if attempt < retries {
-                        std::thread::sleep(delay);
-                        delay = (delay * 2).min(cap);
+                    if let Some(&d) = delays_ms.get(attempt) {
+                        std::thread::sleep(Duration::from_millis(d));
                     }
                 }
             }
         }
         Err(last_err.unwrap()).with_context(|| {
-            format!("giving up on {addr:?} after {} attempts", retries + 1)
+            format!("giving up on {addr:?} after {} attempts", delays_ms.len() + 1)
         })
     }
 
     /// Apply a read timeout to all subsequent [`Conn::recv`] calls.
     pub fn set_read_timeout(&mut self, t: Option<Duration>) -> Result<()> {
-        match &self.stream {
-            Stream::Tcp(s) => s.set_read_timeout(t)?,
-            Stream::Unix(s) => s.set_read_timeout(t)?,
+        self.reader.set_read_timeout(t)?;
+        self.read_timeout = t;
+        Ok(())
+    }
+
+    /// Bound the *total* time [`Conn::recv`] may spend waiting for a
+    /// real message.  The per-read timeout restarts on every byte, so a
+    /// peer sending nothing but heartbeats keeps resetting it forever;
+    /// this deadline counts heartbeats as liveness, not progress, and
+    /// fires regardless (DESIGN.md §14.2).
+    pub fn set_progress_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        if t.is_none() && self.progress_timeout.is_some() {
+            // recv() may have clamped the stream timeout; restore it.
+            self.reader.set_read_timeout(self.read_timeout)?;
         }
+        self.progress_timeout = t;
         Ok(())
     }
 
@@ -104,12 +197,31 @@ impl Conn {
         &self.peer
     }
 
+    /// A write-only handle sharing this connection's write half, for
+    /// sending from another thread (the heartbeat pump).
+    pub fn writer(&self) -> ConnWriter {
+        ConnWriter { writer: self.writer.clone(), peer: self.peer.clone() }
+    }
+
+    /// Arm the fault injector: the next outgoing frame's type byte is
+    /// bit-flipped.  The length prefix stays intact, so the peer remains
+    /// frame-synchronized and its hardened decoder reports a clean
+    /// "unknown message type byte" error instead of crashing or silently
+    /// mis-reading a later frame.
+    pub fn corrupt_next(&mut self) {
+        self.corrupt_next = true;
+    }
+
     /// Send one message (blocking write of one frame).
     pub fn send(&mut self, msg: &Msg) -> Result<()> {
         let (kind, payload) = msg.encode();
         let mut wire = Vec::with_capacity(frame::HEADER_LEN + 1 + payload.len());
         frame::encode_into(kind, &payload, &mut wire)?;
-        let r = match &mut self.stream {
+        if std::mem::take(&mut self.corrupt_next) {
+            wire[frame::HEADER_LEN] ^= 0x80; // the frame type byte
+        }
+        let mut w = self.writer.lock().expect("conn writer lock poisoned");
+        let r = match &mut *w {
             Stream::Tcp(s) => s.write_all(&wire),
             Stream::Unix(s) => s.write_all(&wire),
         };
@@ -119,19 +231,42 @@ impl Conn {
     /// Receive the next non-heartbeat message.
     ///
     /// A closed stream yields "disconnected", an expired read timeout
-    /// yields "timed out", and a received [`Msg::Error`] is surfaced as
-    /// this side's error — callers add who/what/when context.
+    /// yields "timed out", an expired progress deadline yields "no
+    /// progress", and a received [`Msg::Error`] is surfaced as this
+    /// side's error — callers add who/what/when context.
     pub fn recv(&mut self) -> Result<Msg> {
         let mut buf = [0u8; 64 * 1024];
+        let deadline = self.progress_timeout.map(|t| (t, Instant::now() + t));
+        let mut heartbeats = 0usize;
         loop {
             while let Some(f) = self.dec.pop()? {
                 match Msg::decode(f.kind, &f.payload)? {
-                    Msg::Heartbeat => continue,
+                    // Liveness, not progress: counted for the error
+                    // message but never extends the deadline.
+                    Msg::Heartbeat => heartbeats += 1,
                     Msg::Error { msg } => bail!("peer {} reported: {msg}", self.peer),
                     m => return Ok(m),
                 }
             }
-            let n = match &mut self.stream {
+            if let Some((total, d)) = deadline {
+                let remaining = d.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    bail!(
+                        "no progress from peer {} within {:.1}s \
+                         ({heartbeats} heartbeats received)",
+                        self.peer,
+                        total.as_secs_f64()
+                    );
+                }
+                // Clamp this read so the deadline fires on time even
+                // when the per-read timeout is longer or unset.
+                let eff = match self.read_timeout {
+                    Some(rt) => rt.min(remaining),
+                    None => remaining,
+                };
+                self.reader.set_read_timeout(Some(eff))?;
+            }
+            let n = match &mut self.reader {
                 Stream::Tcp(s) => s.read(&mut buf),
                 Stream::Unix(s) => s.read(&mut buf),
             };
@@ -142,6 +277,16 @@ impl Conn {
                     if e.kind() == std::io::ErrorKind::WouldBlock
                         || e.kind() == std::io::ErrorKind::TimedOut =>
                 {
+                    if let Some((total, d)) = deadline {
+                        if Instant::now() >= d {
+                            bail!(
+                                "no progress from peer {} within {:.1}s \
+                                 ({heartbeats} heartbeats received)",
+                                self.peer,
+                                total.as_secs_f64()
+                            );
+                        }
+                    }
                     bail!("timed out waiting for data from peer {}", self.peer)
                 }
                 Err(e) => {
@@ -156,6 +301,97 @@ impl Conn {
     /// else to a protocol error naming both sides' expectations.
     pub fn expect(&mut self, what: &str) -> Result<Msg> {
         self.recv().with_context(|| format!("while awaiting {what}"))
+    }
+}
+
+/// Upper bound on any single retry delay (jittered or not).
+const RETRY_CAP_MS: u64 = 2_000;
+
+/// Decorrelated-jitter retry delays (AWS architecture blog style):
+/// `d[0] = base`, `d[k+1] = uniform(base, min(cap, 3*d[k]))`, all
+/// bounded to `[base, 2s]`.  Two workers seeded differently (session ^
+/// pid) get different schedules, so a simultaneous restart of K workers
+/// does not retry in lockstep.
+pub fn retry_schedule(retries: usize, backoff_ms: u64, seed: u64) -> Vec<u64> {
+    let base = backoff_ms.max(1);
+    let mut rng = Rng::new(seed ^ 0x5E77_1E5C);
+    let mut prev = base;
+    (0..retries)
+        .map(|i| {
+            let d = if i == 0 {
+                base
+            } else {
+                let hi = (prev.saturating_mul(3)).min(RETRY_CAP_MS).max(base + 1);
+                base + rng.below((hi - base) as usize) as u64
+            };
+            prev = d;
+            d
+        })
+        .collect()
+}
+
+/// A write-only clone of a connection's write half.  Frames sent here
+/// and via [`Conn::send`] are serialized by the shared mutex, so they
+/// never interleave on the wire.
+pub struct ConnWriter {
+    writer: Arc<Mutex<Stream>>,
+    peer: String,
+}
+
+impl ConnWriter {
+    pub fn send(&mut self, msg: &Msg) -> Result<()> {
+        let (kind, payload) = msg.encode();
+        let mut wire = Vec::with_capacity(frame::HEADER_LEN + 1 + payload.len());
+        frame::encode_into(kind, &payload, &mut wire)?;
+        let mut w = self.writer.lock().expect("conn writer lock poisoned");
+        let r = match &mut *w {
+            Stream::Tcp(s) => s.write_all(&wire),
+            Stream::Unix(s) => s.write_all(&wire),
+        };
+        r.with_context(|| format!("send {} to {}", msg.name(), self.peer))
+    }
+}
+
+/// Background thread proving liveness: sends [`Msg::Heartbeat`] on a
+/// [`ConnWriter`] every `period` until dropped (or until a send fails,
+/// meaning the peer is gone — the owning thread's next recv/send
+/// surfaces that).  Workers run one of these so a long compute step or
+/// a blocking read never reads as death to the coordinator.
+pub struct HeartbeatPump {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HeartbeatPump {
+    pub fn spawn(mut writer: ConnWriter, period: Duration) -> HeartbeatPump {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            // Sleep in short ticks so drop() joins promptly even with a
+            // long heartbeat period.
+            let tick = Duration::from_millis(10).min(period);
+            let mut elapsed = Duration::ZERO;
+            while !stop2.load(Ordering::Relaxed) {
+                std::thread::sleep(tick);
+                elapsed += tick;
+                if elapsed >= period {
+                    elapsed = Duration::ZERO;
+                    if writer.send(&Msg::Heartbeat).is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+        HeartbeatPump { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for HeartbeatPump {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -190,7 +426,7 @@ mod tests {
         let addr = format!("{UNIX_PREFIX}{}", path.display());
         let t = std::thread::spawn(move || {
             let (s, _) = listener.accept().unwrap();
-            let mut c = Conn::from_unix(s);
+            let mut c = Conn::from_unix(s).unwrap();
             let m = c.recv().unwrap();
             c.send(&m).unwrap();
         });
@@ -248,5 +484,82 @@ mod tests {
         c.send(&Msg::Shutdown { reason: "ok".into() }).unwrap();
         let got = t.join().unwrap();
         assert_eq!(got, Msg::Shutdown { reason: "ok".into() });
+    }
+
+    #[test]
+    fn jittered_schedules_differ_across_seeds_and_stay_bounded() {
+        // The lockstep-retry fix: two workers restarting at the same
+        // instant must not share a delay schedule.
+        let a = retry_schedule(12, 20, 1);
+        let b = retry_schedule(12, 20, 2);
+        assert_ne!(a, b, "seeds 1 and 2 produced identical schedules");
+        // Same seed -> same schedule (deterministic, testable).
+        assert_eq!(a, retry_schedule(12, 20, 1));
+        for &d in a.iter().chain(&b) {
+            assert!((20..=2_000).contains(&d), "delay {d}ms out of [20ms, 2s]");
+        }
+        // First attempt keeps the configured base (fast path when the
+        // listener is simply not up yet).
+        assert_eq!(a[0], 20);
+    }
+
+    #[test]
+    fn hostile_peer_sending_only_heartbeats_trips_progress_deadline() {
+        // A peer that heartbeats forever resets the per-read timeout on
+        // every frame; the progress deadline must fire anyway.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut c = Conn::from_tcp(s).unwrap();
+            while !stop2.load(Ordering::Relaxed) {
+                if c.send(&Msg::Heartbeat).is_err() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        });
+        let mut c = Conn::connect(&addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        c.set_progress_timeout(Some(Duration::from_millis(250))).unwrap();
+        let start = Instant::now();
+        let err = c.recv().unwrap_err().to_string();
+        assert!(err.contains("no progress"), "got: {err}");
+        assert!(err.contains("heartbeats received"), "got: {err}");
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "deadline did not clamp the 10s read timeout"
+        );
+        stop.store(true, Ordering::Relaxed);
+        drop(c);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn heartbeat_pump_keeps_peer_alive_and_corrupt_next_breaks_one_frame() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut c = Conn::from_tcp(s).unwrap();
+            // Short per-read timeout: only the pump keeps this alive.
+            c.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+            let first = c.recv();
+            let second = c.recv();
+            (first, second)
+        });
+        let mut c = Conn::connect(&addr).unwrap();
+        let _pump = HeartbeatPump::spawn(c.writer(), Duration::from_millis(25));
+        std::thread::sleep(Duration::from_millis(600)); // >> read timeout
+        c.corrupt_next();
+        c.send(&Msg::Support { iter: 1, coded: vec![9] }).unwrap();
+        c.send(&Msg::Shutdown { reason: "ok".into() }).unwrap();
+        let (first, second) = t.join().unwrap();
+        let err = first.unwrap_err().to_string();
+        assert!(err.contains("unknown message type byte"), "got: {err}");
+        // The stream stays frame-synchronized after the corrupt frame.
+        assert_eq!(second.unwrap(), Msg::Shutdown { reason: "ok".into() });
     }
 }

@@ -11,9 +11,10 @@
 //!   Floats travel as raw IEEE bits, so the wire never perturbs values.
 //! * [`conn`] / [`server`] — blocking framed connections over TCP or
 //!   Unix-domain sockets (`unix:PATH` addresses), connect retry with
-//!   exponential backoff, read-timeout liveness, and the coordinator's
-//!   join handshake (node-id assignment, stale-session / version /
-//!   session-full rejection).
+//!   exponential backoff (optionally jittered), read-timeout and
+//!   progress-deadline liveness, the background [`HeartbeatPump`], and
+//!   the coordinator's join + rejoin handshakes (node-id assignment,
+//!   stale-session / version / session-full / bad-token rejection).
 //!
 //! The transport carries the *same* per-node pipeline the simulator
 //! runs; `tests/tcp_e2e.rs` asserts the results are bit-identical.
@@ -23,7 +24,7 @@ pub mod frame;
 pub mod msg;
 pub mod server;
 
-pub use conn::{Conn, UNIX_PREFIX};
+pub use conn::{retry_schedule, Conn, ConnWriter, HeartbeatPump, UNIX_PREFIX};
 pub use frame::{Frame, FrameDecoder, MAX_FRAME};
 pub use msg::{BucketUp, LastUp, MidUp, Msg, PROTO_VERSION};
-pub use server::{accept_workers, Listener, RejectorGuard};
+pub use server::{accept_rejoin, accept_workers, Listener, RejectorGuard};

@@ -15,12 +15,14 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{Method, SparsifySchedule, TrainConfig, TransportKind};
+use crate::config::{Method, OnFault, SparsifySchedule, TrainConfig, TransportKind};
 
 /// Wire protocol version; bumped on any grammar change.  A mismatch is
 /// rejected at join time with both numbers in the error.  v2 added the
-/// `GRADIENT_BUCKET` frame and the `MidUp::Buckets` closing tag.
-pub const PROTO_VERSION: u16 = 2;
+/// `GRADIENT_BUCKET` frame and the `MidUp::Buckets` closing tag.  v3
+/// added `pid` to `Join`, the `REJOIN`/`REJOIN_ACK`/`STATE_SYNC` frames,
+/// and the fault-tolerance knobs in the config blob.
+pub const PROTO_VERSION: u16 = 3;
 
 /// Frame type bytes.  Values are wire contract — append only.
 pub mod kind {
@@ -37,6 +39,9 @@ pub mod kind {
     pub const SHUTDOWN: u8 = 11;
     pub const ERROR: u8 = 12;
     pub const GRADIENT_BUCKET: u8 = 13;
+    pub const REJOIN: u8 = 14;
+    pub const REJOIN_ACK: u8 = 15;
+    pub const STATE_SYNC: u8 = 16;
 }
 
 /// The mid-group upload a worker sends for one iteration; which variant
@@ -99,9 +104,36 @@ pub enum LastUp {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
     /// Worker -> coordinator: first message on a fresh connection.
-    Join { proto: u16, session: u64 },
+    /// `pid` lets the coordinator's fault injector target the right OS
+    /// process when the worker was not spawned by the coordinator.
+    Join { proto: u16, session: u64, pid: u64 },
     /// Coordinator -> worker: node id assignment + run parameters.
     JoinAck { node: u32, nodes: u32, platform: String, cfg: TrainConfig },
+    /// Worker -> coordinator: first message when reconnecting to a live
+    /// run under `--on-fault wait-rejoin`.  `token` must equal
+    /// `faults::rejoin_token(session, node)` — a cheap guard against a
+    /// stray worker claiming someone else's slot.
+    Rejoin { proto: u16, session: u64, node: u32, token: u64 },
+    /// Coordinator -> rejoining worker: everything needed to resume at
+    /// iteration `iter` bit-identically: run parameters, model weights,
+    /// the worker's own strategy state blob from the end of `iter - 1`,
+    /// and (when the method ships one) the current AE encoder weights.
+    RejoinAck {
+        node: u32,
+        nodes: u32,
+        platform: String,
+        cfg: TrainConfig,
+        iter: u32,
+        model: Vec<u8>,
+        state: Vec<u8>,
+        encoder: Option<Vec<u8>>,
+    },
+    /// Worker -> coordinator: the worker's post-step strategy state for
+    /// iteration `iter` (EF memory, compressor state).  Sent only under
+    /// `--on-fault wait-rejoin`; the coordinator keeps the latest blob
+    /// per node so it can restore a rejoiner.  Never ledgered — it is
+    /// recovery metadata, not training traffic.
+    StateSync { iter: u32, blob: Vec<u8> },
     /// Coordinator -> all workers: start iteration `iter`.
     IterPlan { iter: u32, engaged: bool, weights_follow: bool },
     /// Leader -> coordinator: index-coded support for this iteration.
@@ -146,6 +178,9 @@ impl Msg {
         match self {
             Msg::Join { .. } => "Join",
             Msg::JoinAck { .. } => "JoinAck",
+            Msg::Rejoin { .. } => "Rejoin",
+            Msg::RejoinAck { .. } => "RejoinAck",
+            Msg::StateSync { .. } => "StateSync",
             Msg::IterPlan { .. } => "IterPlan",
             Msg::Support { .. } => "Support",
             Msg::SupportBcast { .. } => "SupportBcast",
@@ -164,9 +199,10 @@ impl Msg {
     pub fn encode(&self) -> (u8, Vec<u8>) {
         let mut w = Vec::new();
         let k = match self {
-            Msg::Join { proto, session } => {
+            Msg::Join { proto, session, pid } => {
                 put_u16(&mut w, *proto);
                 put_u64(&mut w, *session);
+                put_u64(&mut w, *pid);
                 kind::JOIN
             }
             Msg::JoinAck { node, nodes, platform, cfg } => {
@@ -175,6 +211,35 @@ impl Msg {
                 put_str(&mut w, platform);
                 encode_cfg(&mut w, cfg);
                 kind::JOIN_ACK
+            }
+            Msg::Rejoin { proto, session, node, token } => {
+                put_u16(&mut w, *proto);
+                put_u64(&mut w, *session);
+                put_u32(&mut w, *node);
+                put_u64(&mut w, *token);
+                kind::REJOIN
+            }
+            Msg::RejoinAck { node, nodes, platform, cfg, iter, model, state, encoder } => {
+                put_u32(&mut w, *node);
+                put_u32(&mut w, *nodes);
+                put_str(&mut w, platform);
+                encode_cfg(&mut w, cfg);
+                put_u32(&mut w, *iter);
+                put_bytes(&mut w, model);
+                put_bytes(&mut w, state);
+                match encoder {
+                    Some(e) => {
+                        w.push(1);
+                        put_bytes(&mut w, e);
+                    }
+                    None => w.push(0),
+                }
+                kind::REJOIN_ACK
+            }
+            Msg::StateSync { iter, blob } => {
+                put_u32(&mut w, *iter);
+                put_bytes(&mut w, blob);
+                kind::STATE_SYNC
             }
             Msg::IterPlan { iter, engaged, weights_follow } => {
                 put_u32(&mut w, *iter);
@@ -295,13 +360,38 @@ impl Msg {
     pub fn decode(kind_byte: u8, payload: &[u8]) -> Result<Msg> {
         let mut r = Reader::new(payload);
         let msg = match kind_byte {
-            kind::JOIN => Msg::Join { proto: r.u16()?, session: r.u64()? },
+            kind::JOIN => {
+                Msg::Join { proto: r.u16()?, session: r.u64()?, pid: r.u64()? }
+            }
             kind::JOIN_ACK => Msg::JoinAck {
                 node: r.u32()?,
                 nodes: r.u32()?,
                 platform: r.string()?,
                 cfg: decode_cfg(&mut r)?,
             },
+            kind::REJOIN => Msg::Rejoin {
+                proto: r.u16()?,
+                session: r.u64()?,
+                node: r.u32()?,
+                token: r.u64()?,
+            },
+            kind::REJOIN_ACK => Msg::RejoinAck {
+                node: r.u32()?,
+                nodes: r.u32()?,
+                platform: r.string()?,
+                cfg: decode_cfg(&mut r)?,
+                iter: r.u32()?,
+                model: r.bytes()?,
+                state: r.bytes()?,
+                encoder: match r.u8()? {
+                    0 => None,
+                    1 => Some(r.bytes()?),
+                    t => bail!("RejoinAck: unknown encoder tag {t}"),
+                },
+            },
+            kind::STATE_SYNC => {
+                Msg::StateSync { iter: r.u32()?, blob: r.bytes()? }
+            }
             kind::ITER_PLAN => Msg::IterPlan {
                 iter: r.u32()?,
                 engaged: r.bool()?,
@@ -494,10 +584,12 @@ impl<'a> Reader<'a> {
 /// Version byte for the embedded config blob inside JoinAck.
 /// v2 appended the bucket-pipeline knobs (`buckets`, `bucket_bytes`,
 /// `overlap`) so workers derive the same [`BucketPlan`] as the
-/// coordinator.
+/// coordinator.  v3 appended the fault-tolerance knobs
+/// (`heartbeat_ms`, `miss_budget`, `on_fault`) so workers run the
+/// heartbeat pump and know whether to ship `StateSync` blobs.
 ///
 /// [`BucketPlan`]: crate::coordinator::bucket::BucketPlan
-const CFG_VERSION: u8 = 2;
+const CFG_VERSION: u8 = 3;
 
 fn method_tag(m: Method) -> u8 {
     match m {
@@ -543,10 +635,31 @@ fn schedule_from_tag(t: u8) -> Result<SparsifySchedule> {
     })
 }
 
+fn on_fault_tag(p: OnFault) -> u8 {
+    match p {
+        OnFault::Fail => 0,
+        OnFault::Continue => 1,
+        OnFault::WaitRejoin => 2,
+    }
+}
+
+fn on_fault_from_tag(t: u8) -> Result<OnFault> {
+    Ok(match t {
+        0 => OnFault::Fail,
+        1 => OnFault::Continue,
+        2 => OnFault::WaitRejoin,
+        t => bail!("unknown on-fault tag {t}"),
+    })
+}
+
 /// Serialize every field a worker needs to replicate the run.  The
-/// coordinator-local knobs (`transport`, `checkpoint`) are deliberately
-/// omitted: the receiving side gets `Sim`/`None` so a worker can never
-/// recursively self-spawn or write the coordinator's checkpoint path.
+/// coordinator-local knobs (`transport`, `checkpoint`, `ckpt_every`,
+/// `faults`, `resume`) are deliberately omitted: the receiving side
+/// gets `Sim`/`None`/`0` so a worker can never recursively self-spawn,
+/// write the coordinator's checkpoint path, or execute the fault plan
+/// a second time.  `heartbeat_ms`, `miss_budget` and `on_fault` DO
+/// cross the wire — workers need them to run the heartbeat pump and to
+/// know whether to ship `StateSync` blobs.
 pub fn encode_cfg(w: &mut Vec<u8>, c: &TrainConfig) {
     w.push(CFG_VERSION);
     put_str(w, &c.model);
@@ -582,6 +695,9 @@ pub fn encode_cfg(w: &mut Vec<u8>, c: &TrainConfig) {
     put_u64(w, c.buckets as u64);
     put_u64(w, c.bucket_bytes as u64);
     w.push(c.overlap as u8);
+    put_u64(w, c.heartbeat_ms);
+    put_u32(w, c.miss_budget);
+    w.push(on_fault_tag(c.on_fault));
 }
 
 fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
@@ -622,6 +738,9 @@ fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
     let buckets = r.u64()? as usize;
     let bucket_bytes = r.u64()? as usize;
     let overlap = r.bool()?;
+    let heartbeat_ms = r.u64()?;
+    let miss_budget = r.u32()?;
+    let on_fault = on_fault_from_tag(r.u8()?)?;
     Ok(TrainConfig {
         model,
         method,
@@ -654,6 +773,12 @@ fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
         overlap,
         transport: TransportKind::Sim,
         checkpoint: None,
+        heartbeat_ms,
+        miss_budget,
+        on_fault,
+        faults: None,
+        resume: None,
+        ckpt_every: 0,
     })
 }
 
@@ -675,8 +800,30 @@ mod tests {
             ..Default::default()
         };
         for m in [
-            Msg::Join { proto: PROTO_VERSION, session: 0xDEAD_BEEF },
-            Msg::JoinAck { node: 2, nodes: 4, platform: "native-cpu".into(), cfg },
+            Msg::Join { proto: PROTO_VERSION, session: 0xDEAD_BEEF, pid: 4242 },
+            Msg::JoinAck {
+                node: 2,
+                nodes: 4,
+                platform: "native-cpu".into(),
+                cfg: cfg.clone(),
+            },
+            Msg::Rejoin {
+                proto: PROTO_VERSION,
+                session: 0xDEAD_BEEF,
+                node: 1,
+                token: 0xFACE_FEED,
+            },
+            Msg::RejoinAck {
+                node: 1,
+                nodes: 4,
+                platform: "native-cpu".into(),
+                cfg,
+                iter: 40,
+                model: vec![1, 2, 3],
+                state: vec![4, 5],
+                encoder: Some(vec![6]),
+            },
+            Msg::StateSync { iter: 40, blob: vec![7, 8, 9] },
             Msg::IterPlan { iter: 7, engaged: true, weights_follow: false },
             Msg::Support { iter: 7, coded: vec![1, 2, 3] },
             Msg::SupportBcast { iter: 7, coded: vec![] },
@@ -772,6 +919,12 @@ mod tests {
             overlap: false,
             transport: TransportKind::Tcp, // intentionally not carried
             checkpoint: Some("x.ckpt".into()),
+            heartbeat_ms: 250,
+            miss_budget: 5,
+            on_fault: OnFault::WaitRejoin,
+            faults: Some("iter=3:kill=0".into()), // intentionally not carried
+            resume: Some("y.ckpt".into()),        // intentionally not carried
+            ckpt_every: 7,                        // intentionally not carried
             ..Default::default()
         };
         let mut w = Vec::new();
@@ -791,8 +944,14 @@ mod tests {
         assert_eq!(back.buckets, 8);
         assert_eq!(back.bucket_bytes, 65536);
         assert!(!back.overlap);
+        assert_eq!(back.heartbeat_ms, 250);
+        assert_eq!(back.miss_budget, 5);
+        assert_eq!(back.on_fault, OnFault::WaitRejoin);
         // Coordinator-local knobs never cross the wire.
         assert_eq!(back.transport, TransportKind::Sim);
         assert_eq!(back.checkpoint, None);
+        assert_eq!(back.faults, None);
+        assert_eq!(back.resume, None);
+        assert_eq!(back.ckpt_every, 0);
     }
 }

@@ -1,13 +1,16 @@
 //! Coordinator-side listener: bind, join handshake, cluster membership.
 //!
 //! The join state machine (DESIGN.md §12.3): a fresh connection must
-//! send `Join{proto, session}` as its first message.  The coordinator
-//! rejects protocol-version mismatches and stale session ids with a
-//! descriptive [`Msg::Error`] and drops the connection (the worker
-//! surfaces the reason verbatim); a valid join is answered with
+//! send `Join{proto, session, pid}` as its first message.  The
+//! coordinator rejects protocol-version mismatches and stale session ids
+//! with a descriptive [`Msg::Error`] and drops the connection (the
+//! worker surfaces the reason verbatim); a valid join is answered with
 //! `JoinAck{node, nodes, platform, cfg}` where `node` is assigned in
 //! arrival order.  Once all `nodes` slots are filled the run starts and
-//! any further join attempt is refused with "session full".
+//! any further join attempt is refused with "session full" — unless the
+//! run is elastic (`--on-fault wait-rejoin`), in which case a departed
+//! node re-enters through [`accept_rejoin`]'s token-checked handshake
+//! (DESIGN.md §14.3).
 
 use std::net::TcpListener;
 use std::os::unix::net::UnixListener;
@@ -72,7 +75,7 @@ impl Listener {
         let conn = loop {
             let r = match self {
                 Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::from_tcp(s)),
-                Listener::Unix(l, _) => l.accept().map(|(s, _)| Ok(Conn::from_unix(s))),
+                Listener::Unix(l, _) => l.accept().map(|(s, _)| Conn::from_unix(s)),
             };
             match r {
                 Ok(c) => break c?,
@@ -99,7 +102,8 @@ impl Drop for Listener {
 }
 
 /// Run the join handshake until all `nodes` slots are filled; returns
-/// connections indexed by assigned node id.
+/// `(connection, worker pid)` pairs indexed by assigned node id.  The
+/// pid lets the fault injector target externally spawned workers.
 ///
 /// Invalid joiners (bad protocol version, stale session, or a first
 /// message that is not `Join`) are told why, dropped, and do not consume
@@ -111,9 +115,9 @@ pub fn accept_workers(
     platform: &str,
     cfg: &TrainConfig,
     timeout: Duration,
-) -> Result<Vec<Conn>> {
+) -> Result<Vec<(Conn, u64)>> {
     let deadline = Instant::now() + timeout;
-    let mut joined: Vec<Conn> = Vec::with_capacity(nodes);
+    let mut joined: Vec<(Conn, u64)> = Vec::with_capacity(nodes);
     while joined.len() < nodes {
         let mut conn = listener.accept_deadline(deadline).with_context(|| {
             format!("join phase: {}/{} workers joined", joined.len(), nodes)
@@ -122,7 +126,7 @@ pub fn accept_workers(
             deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(50)),
         ))?;
         match conn.recv() {
-            Ok(Msg::Join { proto, session: got }) if proto != PROTO_VERSION => {
+            Ok(Msg::Join { proto, session: got, .. }) if proto != PROTO_VERSION => {
                 let _ = conn.send(&Msg::Error {
                     msg: format!(
                         "protocol version mismatch: coordinator v{PROTO_VERSION}, \
@@ -138,7 +142,7 @@ pub fn accept_workers(
                     ),
                 });
             }
-            Ok(Msg::Join { .. }) => {
+            Ok(Msg::Join { pid, .. }) => {
                 let node = joined.len() as u32;
                 conn.send(&Msg::JoinAck {
                     node,
@@ -147,7 +151,7 @@ pub fn accept_workers(
                     cfg: cfg.clone(),
                 })
                 .with_context(|| format!("acking node {node}"))?;
-                joined.push(conn);
+                joined.push((conn, pid));
             }
             Ok(other) => {
                 let _ = conn.send(&Msg::Error {
@@ -162,6 +166,70 @@ pub fn accept_workers(
         }
     }
     Ok(joined)
+}
+
+/// Accept one rejoining worker for `node` (elastic runs, DESIGN.md
+/// §14.3): validates protocol version, session id, node id and the
+/// rejoin token, replies with the caller-built [`Msg::RejoinAck`], and
+/// returns the new connection.  Impostors (wrong token, wrong node,
+/// stale session) are refused with a descriptive error and do not end
+/// the wait; the `timeout` bounds the whole thing.
+pub fn accept_rejoin(
+    listener: &Listener,
+    node: u32,
+    session: u64,
+    token: u64,
+    ack: &Msg,
+    timeout: Duration,
+) -> Result<Conn> {
+    debug_assert!(matches!(ack, Msg::RejoinAck { .. }));
+    let deadline = Instant::now() + timeout;
+    loop {
+        let mut conn = listener
+            .accept_deadline(deadline)
+            .with_context(|| format!("waiting for node {node} to rejoin"))?;
+        conn.set_read_timeout(Some(
+            deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(50)),
+        ))?;
+        match conn.recv() {
+            Ok(Msg::Rejoin { proto, .. }) if proto != PROTO_VERSION => {
+                let _ = conn.send(&Msg::Error {
+                    msg: format!(
+                        "protocol version mismatch: coordinator v{PROTO_VERSION}, \
+                         rejoiner v{proto}"
+                    ),
+                });
+            }
+            Ok(Msg::Rejoin { session: got, .. }) if got != session => {
+                let _ = conn.send(&Msg::Error {
+                    msg: format!(
+                        "stale session: coordinator is running session {session:#x}, \
+                         rejoin offered {got:#x}"
+                    ),
+                });
+            }
+            Ok(Msg::Rejoin { node: n, token: t, .. }) if n != node || t != token => {
+                let _ = conn.send(&Msg::Error {
+                    msg: format!(
+                        "rejoin refused: expected node {node} with its session \
+                         token, got node {n}"
+                    ),
+                });
+            }
+            Ok(Msg::Rejoin { .. }) => {
+                conn.send(ack).with_context(|| format!("acking rejoin of node {node}"))?;
+                return Ok(conn);
+            }
+            Ok(other) => {
+                let _ = conn.send(&Msg::Error {
+                    msg: format!("expected Rejoin, got {}", other.name()),
+                });
+            }
+            Err(e) => {
+                eprintln!("[lgc serve] rejoin attempt failed: {e:#}");
+            }
+        }
+    }
 }
 
 /// Keeps refusing join attempts with "session full" for the lifetime of
@@ -181,9 +249,7 @@ impl RejectorGuard {
             while !stop2.load(Ordering::Relaxed) {
                 let r = match &listener {
                     Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::from_tcp(s)),
-                    Listener::Unix(l, _) => {
-                        l.accept().map(|(s, _)| Ok(Conn::from_unix(s)))
-                    }
+                    Listener::Unix(l, _) => l.accept().map(|(s, _)| Conn::from_unix(s)),
                 };
                 match r {
                     Ok(Ok(mut conn)) => {
@@ -219,7 +285,7 @@ mod tests {
     fn join(addr: &str, session: u64) -> Result<Msg> {
         let mut c = Conn::connect(addr)?;
         c.set_read_timeout(Some(Duration::from_secs(5)))?;
-        c.send(&Msg::Join { proto: PROTO_VERSION, session })?;
+        c.send(&Msg::Join { proto: PROTO_VERSION, session, pid: 777 })?;
         c.recv()
     }
 
@@ -235,10 +301,48 @@ mod tests {
         let b = join(&addr, 7).unwrap();
         let conns = t.join().unwrap().unwrap();
         assert_eq!(conns.len(), 2);
+        assert!(conns.iter().all(|(_, pid)| *pid == 777));
         match (a, b) {
             (Msg::JoinAck { node: 0, nodes: 2, .. }, Msg::JoinAck { node: 1, .. }) => {}
             other => panic!("bad acks: {other:?}"),
         }
+    }
+
+    #[test]
+    fn rejoin_checks_token_then_admits() {
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let token = crate::coordinator::faults::rejoin_token(11, 2);
+        let ack = Msg::RejoinAck {
+            node: 2,
+            nodes: 4,
+            platform: "native-cpu".into(),
+            cfg: TrainConfig::default(),
+            iter: 40,
+            model: vec![1],
+            state: vec![2],
+            encoder: None,
+        };
+        let t = std::thread::spawn(move || {
+            accept_rejoin(&listener, 2, 11, token, &ack, Duration::from_secs(5))
+        });
+        // An impostor with the wrong token is refused by name...
+        let mut bad = Conn::connect(&addr).unwrap();
+        bad.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        bad.send(&Msg::Rejoin { proto: PROTO_VERSION, session: 11, node: 2, token: 1 })
+            .unwrap();
+        let err = bad.recv().unwrap_err().to_string();
+        assert!(err.contains("rejoin refused"), "got: {err}");
+        // ...while the real rejoiner gets its state back.
+        let mut good = Conn::connect(&addr).unwrap();
+        good.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        good.send(&Msg::Rejoin { proto: PROTO_VERSION, session: 11, node: 2, token })
+            .unwrap();
+        match good.recv().unwrap() {
+            Msg::RejoinAck { node: 2, iter: 40, model, .. } => assert_eq!(model, vec![1]),
+            other => panic!("bad rejoin ack: {other:?}"),
+        }
+        t.join().unwrap().unwrap();
     }
 
     #[test]

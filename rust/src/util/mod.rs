@@ -11,3 +11,4 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod ser;

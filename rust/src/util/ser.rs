@@ -1,0 +1,207 @@
+//! Shared little-endian state serialization helpers.
+//!
+//! The resume/rejoin machinery (DESIGN.md §14) snapshots training state —
+//! error-feedback memories, RNG streams, autoencoder parameters, ledgers,
+//! network traces — into opaque byte blobs carried either inside a v2
+//! checkpoint container ([`crate::model::checkpoint`]) or inside wire
+//! frames (`StateSync` / `RejoinAck`).  Every writer here has a matching
+//! bounds-checked [`Reader`] method, floats travel as raw IEEE bits so a
+//! snapshot→restore round trip never perturbs a value, and malformed
+//! blobs surface as descriptive errors, never panics.
+
+use anyhow::{bail, Result};
+
+/// Append a `u8`.
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+/// Append a `u32` (little-endian).
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u64` (little-endian).
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an `f32` as raw IEEE bits.
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Append an `f64` as raw IEEE bits.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Append a length-prefixed byte slice.
+pub fn put_bytes(out: &mut Vec<u8>, v: &[u8]) {
+    put_u64(out, v.len() as u64);
+    out.extend_from_slice(v);
+}
+
+/// Append a length-prefixed UTF-8 string.
+pub fn put_str(out: &mut Vec<u8>, v: &str) {
+    put_bytes(out, v.as_bytes());
+}
+
+/// Append a length-prefixed `f32` vector (raw bits).
+pub fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Bounds-checked cursor over a state blob.  Every accessor errors (never
+/// panics) on truncation; [`Reader::finish`] rejects trailing bytes so a
+/// mis-framed blob cannot pass silently.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "state blob truncated: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length-prefixed count, sanity-bounded by what the remaining
+    /// bytes could possibly hold (`elem_size` bytes per element, which
+    /// may be 0 for variable-size elements).
+    pub fn count(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        let cap = self.buf.len() - self.pos;
+        if elem_size > 0 && n > cap / elem_size {
+            bail!("state blob count {n} exceeds remaining {cap} bytes");
+        }
+        if elem_size == 0 && n > cap {
+            bail!("state blob count {n} exceeds remaining {cap} bytes");
+        }
+        Ok(n)
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.count(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn string(&mut self) -> Result<String> {
+        let raw = self.bytes()?;
+        String::from_utf8(raw).map_err(|_| anyhow::anyhow!("state blob string is not UTF-8"))
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    /// Whether the cursor consumed everything.
+    pub fn is_done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    /// Require that the cursor consumed everything.
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("state blob has {} trailing bytes", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut out = Vec::new();
+        put_u8(&mut out, 7);
+        put_u32(&mut out, 0xDEAD_BEEF);
+        put_u64(&mut out, u64::MAX - 1);
+        put_f32(&mut out, f32::NAN);
+        put_f64(&mut out, -0.0);
+        put_bytes(&mut out, b"blob");
+        put_str(&mut out, "naïve");
+        put_f32s(&mut out, &[1.5, -2.25, 0.0]);
+        let mut r = Reader::new(&out);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert!(r.f32().unwrap().is_nan());
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.bytes().unwrap(), b"blob");
+        assert_eq!(r.string().unwrap(), "naïve");
+        assert_eq!(r.f32s().unwrap(), vec![1.5, -2.25, 0.0]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut out = Vec::new();
+        put_f32s(&mut out, &[1.0, 2.0, 3.0]);
+        for cut in 0..out.len() {
+            let mut r = Reader::new(&out[..cut]);
+            assert!(r.f32s().is_err(), "cut at {cut} must error");
+        }
+    }
+
+    #[test]
+    fn hostile_count_rejected() {
+        // A length prefix claiming far more elements than bytes exist.
+        let mut out = Vec::new();
+        put_u64(&mut out, u64::MAX / 8);
+        let mut r = Reader::new(&out);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 1);
+        put_u8(&mut out, 9);
+        let mut r = Reader::new(&out);
+        r.u32().unwrap();
+        assert!(r.finish().is_err());
+    }
+}

@@ -595,6 +595,152 @@ fn checkpoint_resume_is_bit_identical_to_uninterrupted_run() {
     std::fs::remove_file(&path).ok();
 }
 
+// ---------------------------------------------------------------------------
+// Fault tolerance (DESIGN.md §14): crash-safe resume + survivor continuation
+// ---------------------------------------------------------------------------
+
+/// Every deterministic output of two runs must match to the bit (the
+/// resume acceptance bar; wall-clock fields are exempt by design).
+fn assert_runs_bit_identical(a: &coordinator::TrainResult, b: &coordinator::TrainResult) {
+    assert_eq!(a.curve.len(), b.curve.len(), "curve lengths");
+    for (p, q) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(p.iter, q.iter);
+        assert_eq!(p.train_loss.to_bits(), q.train_loss.to_bits(), "loss at iter {}", p.iter);
+        assert_eq!(p.train_acc.to_bits(), q.train_acc.to_bits(), "acc at iter {}", p.iter);
+    }
+    assert_eq!(a.evals.len(), b.evals.len(), "eval counts");
+    for ((i1, l1, a1), (i2, l2, a2)) in a.evals.iter().zip(&b.evals) {
+        assert_eq!(i1, i2);
+        assert_eq!(l1.to_bits(), l2.to_bits(), "eval loss at iter {i1}");
+        assert_eq!(a1.to_bits(), a2.to_bits(), "eval acc at iter {i1}");
+    }
+    assert_eq!(a.final_eval.0.to_bits(), b.final_eval.0.to_bits(), "final eval loss");
+    assert_eq!(a.final_eval.1.to_bits(), b.final_eval.1.to_bits(), "final eval acc");
+    assert_eq!(a.phase_iters, b.phase_iters, "phase iteration counts");
+    assert_eq!(a.ledger, b.ledger, "byte ledgers");
+    assert_eq!(a.net, b.net, "net fabric reports");
+    assert_eq!(a.ae_losses.len(), b.ae_losses.len(), "AE loss trace lengths");
+    for (i, ((r1, s1), (r2, s2))) in a.ae_losses.iter().zip(&b.ae_losses).enumerate() {
+        assert_eq!(r1.to_bits(), r2.to_bits(), "AE rec loss {i}");
+        assert_eq!(s1.to_bits(), s2.to_bits(), "AE sim loss {i}");
+    }
+}
+
+/// The §14 resume acceptance bar, per strategy: run A straight through;
+/// run B with `--ckpt-every` snapshots and an injected crash exactly at
+/// the phase-2/phase-3 boundary; run C resumes B's snapshot and must be
+/// bit-identical to A — curve, evals, ledger, net trace, AE trace, and
+/// the final model checkpoint bytes on disk.
+#[test]
+fn crash_resume_is_bit_identical_for_every_strategy() {
+    let e = engine();
+    for method in [Method::Baseline, Method::SparseGd, Method::LgcPs, Method::LgcRar] {
+        let base = || {
+            let mut cfg = tiny_cfg("convnet_mini", method, 2);
+            cfg.steps = 24;
+            cfg.warmup_iters = 6;
+            cfg.ae_train_iters = 8;
+            cfg.ae_gate = f32::INFINITY;
+            cfg.eval_every = 6;
+            cfg
+        };
+        let tmp = std::env::temp_dir();
+        let pid = std::process::id();
+        let path_a = tmp.join(format!("lgc_resume_a_{pid}_{}", method.name()));
+        let path_b = tmp.join(format!("lgc_resume_b_{pid}_{}", method.name()));
+
+        // A: uninterrupted reference, final model checkpoint to path_a.
+        let mut cfg_a = base();
+        cfg_a.checkpoint = Some(path_a.to_string_lossy().into_owned());
+        let a = coordinator::train(&e, cfg_a).unwrap();
+
+        // B: snapshots every 7 iterations (so the last one lands at the
+        // it=13 boundary), then a planned crash at iteration 14 — the
+        // first compressed-phase iteration, where EF memories, the
+        // latched AE gate, and the trained encoder all matter.
+        let mut cfg_b = base();
+        cfg_b.checkpoint = Some(path_b.to_string_lossy().into_owned());
+        cfg_b.ckpt_every = 7;
+        cfg_b.faults = Some("iter=14:crash".into());
+        let err = coordinator::train(&e, cfg_b).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("injected crash at iteration 14"),
+            "{}: {err:#}",
+            method.name()
+        );
+        assert!(path_b.exists(), "{}: crash must leave the snapshot intact", method.name());
+
+        // C: resume B's snapshot; the crash directive is dropped.
+        let mut cfg_c = base();
+        cfg_c.checkpoint = Some(path_b.to_string_lossy().into_owned());
+        cfg_c.ckpt_every = 7;
+        cfg_c.resume = Some(path_b.to_string_lossy().into_owned());
+        let c = coordinator::train(&e, cfg_c).unwrap();
+
+        assert_runs_bit_identical(&a, &c);
+        assert!(c.fault_events.is_empty(), "{}", method.name());
+        // On completion the final model checkpoint overwrites the
+        // training-state snapshot — and matches A's byte for byte.
+        assert_eq!(
+            std::fs::read(&path_a).unwrap(),
+            std::fs::read(&path_b).unwrap(),
+            "{}: final checkpoints diverged",
+            method.name()
+        );
+        std::fs::remove_file(&path_a).ok();
+        std::fs::remove_file(&path_b).ok();
+    }
+}
+
+/// A resumed run refuses a snapshot written under a materially different
+/// configuration (method swapped), naming both fingerprints.
+#[test]
+fn resume_rejects_checkpoint_from_different_config() {
+    let e = engine();
+    let tmp = std::env::temp_dir().join(format!("lgc_resume_fp_{}", std::process::id()));
+    let mut cfg = tiny_cfg("convnet_mini", Method::SparseGd, 2);
+    cfg.checkpoint = Some(tmp.to_string_lossy().into_owned());
+    cfg.ckpt_every = 4;
+    cfg.faults = Some("iter=8:crash".into());
+    coordinator::train(&e, cfg).unwrap_err();
+    let mut other = tiny_cfg("convnet_mini", Method::Baseline, 2);
+    other.checkpoint = Some(tmp.to_string_lossy().into_owned());
+    other.resume = Some(tmp.to_string_lossy().into_owned());
+    let err = coordinator::train(&e, other).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("different configuration"),
+        "{err:#}"
+    );
+    std::fs::remove_file(&tmp).ok();
+}
+
+/// The ISSUE-8 sim chaos bar: K=8 nodes under `--on-fault continue`
+/// survive a kill/stall/corrupt-frame plan and the run still clears the
+/// `--assert-improves` bar (final train loss below the first).
+#[test]
+fn chaos_plan_with_eight_nodes_continues_and_improves() {
+    let e = engine();
+    let mut cfg = tiny_cfg("mlp_mini", Method::SparseGd, 8);
+    cfg.steps = 24;
+    cfg.on_fault = lgc::config::OnFault::Continue;
+    cfg.faults =
+        Some("iter=4:kill=5;iter=9:stall=2:100ms;iter=15:corrupt-frame=7;iter=18:kill=1".into());
+    let r = coordinator::train(&e, cfg).unwrap();
+    let kinds: Vec<&str> = r.fault_events.iter().map(|ev| ev.kind.as_str()).collect();
+    assert_eq!(kinds, ["kill", "stall", "corrupt-frame", "kill"]);
+    assert!(r.fault_events[0].detail.contains("7 survivors"), "{}", r.fault_events[0].detail);
+    assert!(r.fault_events[3].detail.contains("6 survivors"), "{}", r.fault_events[3].detail);
+    assert_eq!(r.curve.len(), 24);
+    assert!(r.curve.iter().all(|p| p.train_loss.is_finite()), "survivor math diverged");
+    // The --assert-improves bar from the CLI, applied directly.
+    assert!(
+        r.final_train_loss() < r.curve[0].train_loss,
+        "chaos run did not improve: {} !< {}",
+        r.final_train_loss(),
+        r.curve[0].train_loss
+    );
+}
+
 #[test]
 fn checkpoint_rejects_crc_corruption() {
     let e = engine();

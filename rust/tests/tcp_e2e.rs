@@ -261,7 +261,7 @@ fn killed_worker_errors_within_timeout_and_late_joins_are_refused() {
     // Probe: a fifth joiner on a live session is refused, descriptively.
     let mut probe = Conn::connect(&addr).expect("probe connect");
     probe.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-    probe.send(&Msg::Join { proto: PROTO_VERSION, session }).unwrap();
+    probe.send(&Msg::Join { proto: PROTO_VERSION, session, pid: 0 }).unwrap();
     let refusal = probe.recv().expect_err("late join must be refused").to_string();
     assert!(refusal.contains("session full"), "got: {refusal}");
 
@@ -318,7 +318,7 @@ fn out_of_plan_bucket_id_is_refused_with_a_descriptive_error() {
         }
     };
     conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-    conn.send(&Msg::Join { proto: PROTO_VERSION, session }).unwrap();
+    conn.send(&Msg::Join { proto: PROTO_VERSION, session, pid: 0 }).unwrap();
     let iter = loop {
         match conn.recv().expect("handshake before the hostile frame") {
             Msg::IterPlan { iter, .. } => break iter,
@@ -340,6 +340,127 @@ fn out_of_plan_bucket_id_is_refused_with_a_descriptive_error() {
     assert!(msg.contains("out of plan bounds"), "coordinator error must name it, got: {msg}");
     let _ = honest.kill();
     let _ = honest.wait();
+}
+
+// ---------------------------------------------------------------------------
+// Elastic fault tolerance (DESIGN.md §14)
+// ---------------------------------------------------------------------------
+
+/// Run one self-spawned tcp session with fault-tolerance knobs applied.
+fn run_tcp(mut cfg: TrainConfig, session: u64) -> Result<TrainResult, anyhow::Error> {
+    let e = engine();
+    cfg.transport = lgc::config::TransportKind::Tcp;
+    let mut opts = remote::RemoteOpts::local(session);
+    opts.worker_bin = Some(LGC_BIN.into());
+    remote::train_with_opts(&e, cfg, &opts)
+}
+
+/// `--on-fault continue`: killing one of 4 workers mid-run must not end
+/// the run.  The survivor continuation is *bit-identical* to the
+/// simulator executing the same fault plan (masked aggregation on both
+/// sides), the kill is logged, and the final loss stays within tolerance
+/// of the fault-free run (ISSUE-8 acceptance bar).
+#[test]
+fn continue_kill_survives_and_matches_faulted_sim() {
+    let session = 0xFA57u64;
+    let mut c = cfg("mlp_mini", Method::SparseGd, 4);
+    c.on_fault = lgc::config::OnFault::Continue;
+    c.faults = Some("iter=8:kill=2".into());
+    c.heartbeat_ms = 100; // exercise the pump + heartbeat-skip path too
+    c.eval_every = 0;
+
+    let e = engine();
+    let sim = coordinator::train(&e, c.clone()).expect("faulted sim run");
+    assert_eq!(sim.fault_events.len(), 1, "sim records the kill");
+    let tcp = run_tcp(c.clone(), session).expect("faulted tcp run survives the kill");
+    assert_bit_identical(&sim, &tcp);
+    assert_eq!(tcp.fault_events.len(), 1, "tcp records the kill");
+    let ev = &tcp.fault_events[0];
+    assert_eq!((ev.iter, ev.node, ev.kind.as_str()), (8, Some(2), "kill"));
+    assert!(ev.detail.contains("3 survivors"), "got: {}", ev.detail);
+
+    // Tolerance vs the fault-free twin: still converging, close by.
+    let mut free_cfg = c;
+    free_cfg.faults = None;
+    let free = coordinator::train(&e, free_cfg).expect("fault-free run");
+    let (first, faulted, fault_free) = (
+        tcp.curve.first().unwrap().train_loss,
+        tcp.final_train_loss(),
+        free.final_train_loss(),
+    );
+    assert!(faulted.is_finite() && faulted < first, "faulted run must still improve");
+    assert!(
+        (faulted - fault_free).abs() < 1.0,
+        "faulted final loss {faulted} vs fault-free {fault_free}"
+    );
+}
+
+/// `--on-fault wait-rejoin`: a worker killed by the plan is respawned,
+/// re-admitted through the token handshake, and resynced bit-exactly —
+/// the whole run (ledger byte counts included, from the rejoin iteration
+/// onward and everywhere else) matches the fault-free sim run.  Kills in
+/// the dense phase and in the engaged compressed phase (where the
+/// RejoinAck must also carry the AE encoder) are both exercised.
+#[test]
+fn wait_rejoin_is_bit_identical_to_fault_free() {
+    let session = 0x12E1u64;
+    let base = cfg("convnet_mini", Method::LgcPs, 4);
+
+    let e = engine();
+    let free = coordinator::train(&e, base.clone()).expect("fault-free sim run");
+
+    let mut c = base;
+    c.on_fault = lgc::config::OnFault::WaitRejoin;
+    c.faults = Some("iter=2:kill=1;iter=20:kill=1".into());
+    let tcp = run_tcp(c, session).expect("wait-rejoin tcp run");
+    assert_bit_identical(&free, &tcp);
+    let kinds: Vec<&str> = tcp.fault_events.iter().map(|ev| ev.kind.as_str()).collect();
+    assert_eq!(kinds, ["kill", "rejoin", "kill", "rejoin"], "events: {:?}", tcp.fault_events);
+    assert!(
+        tcp.fault_events[3].detail.contains("AE encoder"),
+        "the engaged-phase rejoin must resync the encoder, got: {}",
+        tcp.fault_events[3].detail
+    );
+}
+
+/// A `--faults`-driven chaos run mixing every process-level fault:
+/// stall (SIGSTOP window, priced), corrupt-frame (the armed frame kills
+/// the worker's decoder; `continue` absorbs the death), and a planned
+/// kill.  Two of four workers survive and the run completes, improving.
+#[test]
+fn chaos_plan_with_stall_corrupt_and_kill_completes() {
+    let session = 0xC405u64;
+    let mut c = cfg("mlp_mini", Method::Baseline, 4);
+    c.on_fault = lgc::config::OnFault::Continue;
+    c.faults = Some("iter=6:stall=1:50ms;iter=10:corrupt-frame=3;iter=14:kill=2".into());
+    c.heartbeat_ms = 100;
+    c.eval_every = 0;
+    let r = run_tcp(c, session).expect("chaos run completes on the survivors");
+    let kinds: Vec<&str> = r.fault_events.iter().map(|ev| ev.kind.as_str()).collect();
+    assert_eq!(
+        kinds,
+        ["stall", "corrupt-frame", "death", "kill"],
+        "events: {:?}",
+        r.fault_events
+    );
+    let first = r.curve.first().unwrap().train_loss;
+    let last = r.final_train_loss();
+    assert!(last.is_finite() && last < first, "chaos run must still improve: {first} -> {last}");
+}
+
+/// `--faults` kill/stall entries are refused when the workers are not
+/// this coordinator's own children (`lgc serve`) — it cannot signal them.
+#[test]
+fn process_faults_require_self_spawned_workers() {
+    let e = engine();
+    let mut c = cfg("mlp_mini", Method::Baseline, 2);
+    c.faults = Some("iter=1:kill=0".into());
+    c.on_fault = lgc::config::OnFault::Continue;
+    let mut opts = remote::RemoteOpts::local(0x5E12);
+    opts.spawn_workers = false;
+    let err = remote::train_with_opts(&e, c, &opts).expect_err("serve + kill faults");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("self-spawned workers"), "got: {msg}");
 }
 
 /// Workers launched before the coordinator binds must connect anyway:

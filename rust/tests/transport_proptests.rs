@@ -7,7 +7,7 @@
 //! deterministic RNG for randomized case generation with fixed seeds
 //! (every failure prints the case seed; re-running with it is exact).
 
-use lgc::config::{Method, SparsifySchedule, TrainConfig, TransportKind};
+use lgc::config::{Method, OnFault, SparsifySchedule, TrainConfig, TransportKind};
 use lgc::transport::{
     frame, BucketUp, Frame, FrameDecoder, LastUp, MidUp, Msg, MAX_FRAME, PROTO_VERSION,
 };
@@ -153,8 +153,12 @@ fn random_mid(rng: &mut Rng) -> MidUp {
 }
 
 fn random_msg(rng: &mut Rng) -> Msg {
-    match rng.below(13) {
-        0 => Msg::Join { proto: rng.next_u64() as u16, session: rng.next_u64() },
+    match rng.below(16) {
+        0 => Msg::Join {
+            proto: rng.next_u64() as u16,
+            session: rng.next_u64(),
+            pid: rng.next_u64(),
+        },
         1 => Msg::JoinAck {
             node: rng.next_u64() as u32,
             nodes: rng.next_u64() as u32,
@@ -208,6 +212,27 @@ fn random_msg(rng: &mut Rng) -> Msg {
                 BucketUp::Sparse { coded_idx: vecb(rng, 64), vals: vecf(rng) }
             },
         },
+        12 => Msg::Rejoin {
+            proto: rng.next_u64() as u16,
+            session: rng.next_u64(),
+            node: rng.next_u64() as u32,
+            token: rng.next_u64(),
+        },
+        13 => Msg::RejoinAck {
+            node: rng.next_u64() as u32,
+            nodes: rng.next_u64() as u32,
+            platform: format!("plat-{}", rng.below(100)),
+            cfg: random_cfg(rng),
+            iter: rng.next_u64() as u32,
+            model: vecb(rng, 256),
+            state: vecb(rng, 256),
+            encoder: if rng.below(2) == 0 {
+                Some(vecb(rng, 256))
+            } else {
+                None
+            },
+        },
+        14 => Msg::StateSync { iter: rng.next_u64() as u32, blob: vecb(rng, 256) },
         _ => Msg::Error { msg: format!("error {}", rng.below(1000)) },
     }
 }
@@ -238,6 +263,13 @@ fn random_cfg(rng: &mut Rng) -> TrainConfig {
         buckets: 1 + rng.below(32),
         bucket_bytes: rng.below(1 << 20),
         overlap: rng.below(2) == 0,
+        heartbeat_ms: rng.next_u64() >> 8,
+        miss_budget: rng.next_u64() as u32,
+        on_fault: match rng.below(3) {
+            0 => OnFault::Fail,
+            1 => OnFault::Continue,
+            _ => OnFault::WaitRejoin,
+        },
         ..Default::default()
     }
 }
@@ -265,16 +297,26 @@ fn prop_cfg_blob_roundtrips_through_join_ack() {
         let mut cfg = random_cfg(&mut rng);
         cfg.transport = TransportKind::Tcp;
         cfg.checkpoint = Some("never-forwarded.ckpt".into());
+        cfg.faults = Some("iter=1:crash".into());
+        cfg.resume = Some("never-forwarded.ckpt".into());
+        cfg.ckpt_every = 1 + rng.below(100);
+        cfg.heartbeat_ms = rng.next_u64() >> 8;
+        cfg.miss_budget = rng.next_u64() as u32;
         let msg =
             Msg::JoinAck { node: 1, nodes: 4, platform: "native".into(), cfg: cfg.clone() };
         let (kind, payload) = msg.encode();
         let Msg::JoinAck { cfg: back, .. } = Msg::decode(kind, &payload).unwrap() else {
             panic!("case {case}: wrong variant");
         };
-        // The decoder forces Sim + no checkpoint so a worker can never
-        // recursively self-spawn; everything else must survive exactly.
+        // The decoder forces Sim and drops checkpoint/faults/resume so a
+        // worker can never recursively self-spawn, re-inject the plan, or
+        // write over the coordinator's files; everything else (the
+        // heartbeat/on-fault fields included) must survive exactly.
         cfg.transport = TransportKind::Sim;
         cfg.checkpoint = None;
+        cfg.faults = None;
+        cfg.resume = None;
+        cfg.ckpt_every = 0;
         assert_eq!(back, cfg, "case {case}");
     }
 }
@@ -283,11 +325,11 @@ fn prop_cfg_blob_roundtrips_through_join_ack() {
 fn prop_unknown_message_type_bytes_error_cleanly() {
     for case in 0..CASES {
         let mut rng = Rng::new(0x1214 + case);
-        // Valid kinds are 1..=13; 0 and 14..=255 must be clean errors.
+        // Valid kinds are 1..=16; 0 and 17..=255 must be clean errors.
         let kind = if case % 2 == 0 {
             0
         } else {
-            14 + rng.below(242) as u8
+            17 + rng.below(239) as u8
         };
         let n = rng.below(128);
         let payload = random_bytes(&mut rng, n);
@@ -362,5 +404,8 @@ fn proto_version_is_pinned() {
     // constant so bumping it is a conscious, reviewed change.  v2 added
     // bucketed streaming: kind 13 (GradientBucket), the MidUp::Buckets
     // closing tag, and the buckets/bucket-bytes/overlap cfg fields.
-    assert_eq!(PROTO_VERSION, 2);
+    // v3 added elastic fault tolerance: the Join pid, kinds 14..=16
+    // (Rejoin / RejoinAck / StateSync), and the heartbeat-ms /
+    // miss-budget / on-fault cfg fields.
+    assert_eq!(PROTO_VERSION, 3);
 }
