@@ -203,6 +203,53 @@ fn index_encode_comparison(t: &mut Table, json: &mut JsonOut, smoke: bool) -> (f
     (med_speedup, med_old, med_new)
 }
 
+/// Telemetry cost on the encode hot path (DESIGN.md §15.1): the same
+/// corpus point timed with span recording off (today's default — the
+/// spans compile to one relaxed load each) and with a live recorder
+/// installed.  CI asserts the on/off median ratio stays under 1.05;
+/// since compiled-in-but-disabled is strictly cheaper than enabled,
+/// that bounds the disabled overhead too.
+fn telemetry_overhead(t: &mut Table, json: &mut JsonOut, smoke: bool) {
+    use lgc::obs::trace;
+    let (n, k) = (262_144usize, 4_096usize);
+    let mut rng = Rng::new(0x0B5);
+    let idx = random_indices(&mut rng, n, k);
+    let mut scratch = Scratch::new();
+
+    let s_off = time_budget(budget(smoke, 400), || {
+        std::hint::black_box(index_coding::encode_into(&idx, n, &mut scratch.enc).unwrap().len());
+    });
+
+    trace::install(1);
+    let s_on = {
+        let _lane = trace::lane_scope(0);
+        time_budget(budget(smoke, 400), || {
+            std::hint::black_box(
+                index_coding::encode_into(&idx, n, &mut scratch.enc).unwrap().len(),
+            );
+        })
+    };
+    let recorded = trace::uninstall().len();
+    assert!(recorded > 0, "recorder installed but no spans captured");
+
+    let ratio = s_on.p50_ns / s_off.p50_ns;
+    let (a, b) = fmt(&s_off);
+    t.row(&["index encode, tracing off".into(), a, b, format!("n={n} k={k}")]);
+    let (a, b) = fmt(&s_on);
+    t.row(&[
+        "index encode, tracing ON".into(),
+        a,
+        b,
+        format!("{recorded} spans recorded, {ratio:.3}x vs off"),
+    ]);
+    json.push("index_encode_telemetry_off", &s_off, None);
+    json.push("index_encode_telemetry_on", &s_on, None);
+    println!("telemetry overhead on encode: {ratio:.3}x (tracing on vs off)");
+    if !smoke && ratio > 1.05 {
+        eprintln!("WARNING: telemetry-on encode median {ratio:.3}x > 1.05x budget");
+    }
+}
+
 fn pure_sections(t: &mut Table, json: &mut JsonOut, n_mid: usize, mu: usize, smoke: bool) {
     let mut rng = Rng::new(1);
 
@@ -571,6 +618,7 @@ fn main() -> anyhow::Result<()> {
     let mut t = Table::new(&["hot-path op", "mean", "p95", "notes"]);
     pure_sections(&mut t, &mut json, n_mid, mu, smoke);
     json.index_encode = Some(index_encode_comparison(&mut t, &mut json, smoke));
+    telemetry_overhead(&mut t, &mut json, smoke);
     node_loop_comparison(&mut t, &mut json, 200_000, smoke);
     pipelined_section(&mut t, &mut json, smoke);
     native_ae_section(&mut t, &mut json, smoke)?;

@@ -24,6 +24,7 @@ use crate::coordinator::parallel;
 use crate::coordinator::scheduler::{bucket_task_graph, exponential_alpha, Phase, StepTask};
 use crate::metrics::{Kind, Ledger, NodeLedger};
 use crate::net::NetSim;
+use crate::obs::trace;
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
 use crate::util::ser::{self, Reader};
@@ -340,8 +341,15 @@ pub(crate) fn sparse_ef_exchange(
                 sc.vals.clear();
                 return Ok(Vec::new());
             }
-            fb.accumulate(&grads[node]);
-            fb.select_and_clear_bucketed_into(k_sel, plan.ranges(), sc);
+            let _lane = trace::lane_scope(node);
+            {
+                let _sp = trace::span(trace::Stage::Ef);
+                fb.accumulate(&grads[node]);
+            }
+            {
+                let _sp = trace::span(trace::Stage::TopK);
+                fb.select_and_clear_bucketed_into(k_sel, plan.ranges(), sc);
+            }
             record_sparse_packet(n, plan, overlap, fp16, shard, sc)
         },
     ))?;
@@ -508,6 +516,8 @@ impl MidStrategy for ScaleCom {
         let nodes = grads.len();
         // Node-local stage 1: EF accumulation.
         parallel::par_map_mut(ctx.threads, &mut self.fbs, |node, fb| {
+            let _lane = trace::lane_scope(node);
+            let _sp = trace::span(trace::Stage::Ef);
             fb.accumulate(&grads[node]);
         });
         // Barrier: the cyclic leader's local top-k defines everyone's
@@ -519,7 +529,10 @@ impl MidStrategy for ScaleCom {
         let coded = {
             let sc = &mut ctx.scratches[leader];
             let mem = self.fbs[leader].memory();
-            topk::top_k_into(mem, k_sel, &mut sc.mags, &mut sc.idx, &mut sc.vals);
+            {
+                let _sp = trace::span(trace::Stage::TopK);
+                topk::top_k_into(mem, k_sel, &mut sc.mags, &mut sc.idx, &mut sc.vals);
+            }
             let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
             ctx.ledger.record(leader, Kind::Indices, coded);
             self.support.clear();
@@ -617,6 +630,8 @@ impl MidStrategy for Qsgd {
             &mut *ctx.shards,
             &mut *ctx.scratches,
             |node, rng, shard, sc| {
+                let _lane = trace::lane_scope(node);
+                let _sp = trace::span(trace::Stage::Quantize);
                 let bytes = quantize::qsgd_into(&grads[node], levels, bucket, rng, &mut sc.vals);
                 shard.record(Kind::Values, bytes);
             },
@@ -708,7 +723,12 @@ impl MidStrategy for HardThreshold {
                     sc.vals.clear();
                     return Ok(Vec::new());
                 }
-                st.fb.accumulate(&grads[node]);
+                let _lane = trace::lane_scope(node);
+                {
+                    let _sp = trace::span(trace::Stage::Ef);
+                    st.fb.accumulate(&grads[node]);
+                }
+                let sp_sel = trace::span(trace::Stage::TopK);
                 if st.threshold == 0.0 {
                     // Calibrate from the first post-accumulation
                     // distribution.
@@ -722,6 +742,7 @@ impl MidStrategy for HardThreshold {
                         .filter(|&i| mem[i as usize].abs() >= thr && mem[i as usize] != 0.0),
                 );
                 st.fb.take_at_into(&sc.idx, &mut sc.vals);
+                drop(sp_sel);
                 // Adapt the threshold toward the target payload size
                 // (x2 AIMD).
                 if sc.idx.len() > 2 * k_target {

@@ -19,6 +19,7 @@ use anyhow::{bail, Result};
 use flate2::Compression;
 
 use super::scratch::EncScratch;
+use crate::obs::trace;
 
 const MODE_DEFLATE_DELTA: u8 = 0;
 const MODE_BITMAP: u8 = 1;
@@ -26,6 +27,10 @@ const MODE_BITMAP: u8 = 1;
 /// Encode a sorted index set over a universe of size `n`, reusing the
 /// arena's buffers; the returned slice borrows `s.payload`.
 pub fn encode_into<'a>(indices: &[u32], n: usize, s: &'a mut EncScratch) -> Result<&'a [u8]> {
+    // One span per payload (and one nested around the DEFLATE call): a
+    // single relaxed load when tracing is off, so the hot path the bench
+    // smoke job guards stays untouched.
+    let _sp = trace::span(trace::Stage::IndexCode);
     debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices must be sorted unique");
     if let Some(&last) = indices.last() {
         if last as usize >= n {
@@ -43,7 +48,10 @@ pub fn encode_into<'a>(indices: &[u32], n: usize, s: &'a mut EncScratch) -> Resu
     s.payload.clear();
     s.payload.push(MODE_DEFLATE_DELTA);
     s.payload.extend((indices.len() as u32).to_le_bytes());
-    flate2::compress_into(&s.varints, Compression::default(), &mut s.deflate, &mut s.payload);
+    {
+        let _sp = trace::span(trace::Stage::Deflate);
+        flate2::compress_into(&s.varints, Compression::default(), &mut s.deflate, &mut s.payload);
+    }
     let deflated_len = s.payload.len() - 5;
 
     // Candidate B: raw bitmap (wins for dense selections).  Compare full
@@ -187,13 +195,17 @@ pub fn decode(bytes: &[u8], n: usize) -> Result<Vec<u32>> {
 /// so this DEFLATEs the raw LE-u32 stream; still counted byte-exactly.
 /// The returned slice borrows `s.payload`.
 pub fn encode_ordered_into<'a>(indices: &[u32], s: &'a mut EncScratch) -> Result<&'a [u8]> {
+    let _sp = trace::span(trace::Stage::IndexCode);
     s.varints.clear();
     s.varints.extend((indices.len() as u32).to_le_bytes());
     for &i in indices {
         s.varints.extend(i.to_le_bytes());
     }
     s.payload.clear();
-    flate2::compress_into(&s.varints, Compression::default(), &mut s.deflate, &mut s.payload);
+    {
+        let _sp = trace::span(trace::Stage::Deflate);
+        flate2::compress_into(&s.varints, Compression::default(), &mut s.deflate, &mut s.payload);
+    }
     Ok(&s.payload)
 }
 

@@ -248,6 +248,19 @@ pub struct TrainConfig {
     /// Write a full training-state snapshot to `checkpoint` every N
     /// iterations (0 = final model checkpoint only).
     pub ckpt_every: usize,
+    /// Write a Chrome/Perfetto `trace_event` JSON of pipeline spans here
+    /// (DESIGN.md §15.2).  Shipped to TCP workers through the config
+    /// blob so every process records; `None` (default) keeps spans inert.
+    pub trace_out: Option<String>,
+    /// Write the structured JSONL run log here (DESIGN.md §15.3).
+    /// Coordinator-local: never shipped to workers.
+    pub log_json: Option<String>,
+    /// Serve Prometheus text-format scrapes from the coordinator at this
+    /// address (DESIGN.md §15.5).  Coordinator-local.
+    pub metrics_addr: Option<String>,
+    /// Stderr diagnostic level (`--log-level`); Info preserves the
+    /// historical output byte-for-byte.  Shipped to TCP workers.
+    pub log_level: crate::obs::log::Level,
 }
 
 impl Default for TrainConfig {
@@ -292,6 +305,10 @@ impl Default for TrainConfig {
             faults: None,
             resume: None,
             ckpt_every: 0,
+            trace_out: None,
+            log_json: None,
+            metrics_addr: None,
+            log_level: crate::obs::log::Level::Info,
         }
     }
 }
@@ -393,6 +410,13 @@ impl TrainConfig {
         c.faults = a.opt_str("faults");
         c.resume = a.opt_str("resume");
         c.ckpt_every = a.usize("ckpt-every", c.ckpt_every);
+        c.trace_out = a.opt_str("trace-out");
+        c.log_json = a.opt_str("log-json");
+        c.metrics_addr = a.opt_str("metrics-addr");
+        if let Some(l) = a.opt_str("log-level") {
+            c.log_level = crate::obs::log::Level::parse(&l)
+                .unwrap_or_else(|e| panic!("bad --log-level: {e}"));
+        }
         c
     }
 }
@@ -504,6 +528,37 @@ mod tests {
             assert_eq!(OnFault::parse(want.name()), Some(want));
         }
         assert_eq!(OnFault::parse("retry"), None);
+    }
+
+    #[test]
+    fn telemetry_flags_parse() {
+        let c = TrainConfig::default();
+        assert_eq!(c.trace_out, None);
+        assert_eq!(c.log_json, None);
+        assert_eq!(c.metrics_addr, None);
+        assert_eq!(c.log_level, crate::obs::log::Level::Info);
+        let a = Args::parse(
+            [
+                "--trace-out",
+                "run.trace.json",
+                "--log-json",
+                "run.jsonl",
+                "--metrics-addr",
+                "127.0.0.1:9464",
+                "--log-level",
+                "debug",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            &["trace-out", "log-json", "metrics-addr", "log-level"],
+            &[],
+        )
+        .unwrap();
+        let c = TrainConfig::from_args(&a);
+        assert_eq!(c.trace_out.as_deref(), Some("run.trace.json"));
+        assert_eq!(c.log_json.as_deref(), Some("run.jsonl"));
+        assert_eq!(c.metrics_addr.as_deref(), Some("127.0.0.1:9464"));
+        assert_eq!(c.log_level, crate::obs::log::Level::Debug);
     }
 
     #[test]

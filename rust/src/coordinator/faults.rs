@@ -85,6 +85,37 @@ impl FaultEvent {
             None => format!("FAULT iter={} {}: {}", self.iter, self.kind, self.detail),
         }
     }
+
+    /// Fan the event out to every telemetry sink (DESIGN.md §15): the
+    /// leveled stderr line (byte-identical to the historical `FAULT ...`
+    /// print at the default level), a structured JSONL record when a run
+    /// log is open, a trace instant event, and the matching Prometheus
+    /// counter.  Shared by the sim and TCP coordinators so the two
+    /// backends report faults identically.
+    pub fn observe(&self, run_log: &mut Option<crate::obs::jsonl::RunLog>) -> anyhow::Result<()> {
+        crate::log_info!("{}", self.log_line());
+        crate::obs::trace::event(&self.log_line());
+        match self.kind.as_str() {
+            "kill" | "death" => crate::obs::metrics::inc_deaths(),
+            "stall" => crate::obs::metrics::inc_stalls(),
+            "corrupt-frame" => crate::obs::metrics::inc_decode_errors(),
+            "rejoin" => crate::obs::metrics::inc_rejoins(),
+            _ => {}
+        }
+        if let Some(log) = run_log {
+            use crate::util::json::Json;
+            log.record(
+                "fault",
+                vec![
+                    ("iter", Json::Num(self.iter as f64)),
+                    ("node", self.node.map_or(Json::Null, |n| Json::Num(n as f64))),
+                    ("kind", Json::Str(self.kind.clone())),
+                    ("detail", Json::Str(self.detail.clone())),
+                ],
+            )?;
+        }
+        Ok(())
+    }
 }
 
 /// A parsed, iteration-indexed fault schedule.

@@ -41,6 +41,7 @@ use crate::coordinator::parallel;
 use crate::coordinator::ring;
 use crate::coordinator::scheduler::Phase;
 use crate::metrics::Kind;
+use crate::obs::trace;
 use crate::util::ser::{self, Reader};
 
 /// Knobs shared by both LGC instances (subset of [`crate::config::TrainConfig`]).
@@ -152,6 +153,13 @@ pub(crate) const AE_GATE_WINDOW: usize = 8;
 /// Kept as a switch for the ablation (LGC_EF_ON_REC=1).
 pub(crate) fn ef_on_rec() -> bool {
     std::env::var("LGC_EF_ON_REC").is_ok()
+}
+
+/// Per-iteration reconstruction diagnostics: on at `--log-level debug`,
+/// or under the legacy `LGC_DEBUG` env var (which keeps working at any
+/// level, so existing invocations are unchanged).
+fn dbg_rec() -> bool {
+    crate::obs::log::enabled(crate::obs::log::Level::Debug) || std::env::var("LGC_DEBUG").is_ok()
 }
 
 impl LgcCommon {
@@ -297,6 +305,7 @@ impl LgcCommon {
             ))?;
             let rows: Vec<&[f32]> = self.nodes.iter().map(|st| st.vv.as_slice()).collect();
             let inns: Vec<&[f32]> = self.nodes.iter().map(|st| st.inn.as_slice()).collect();
+            let _sp = trace::span(trace::Stage::AeTrain);
             for _ in 0..self.ae_inner_steps {
                 let ridx = ctx.rng.below(nodes);
                 self.ae.train_step(
@@ -311,6 +320,7 @@ impl LgcCommon {
             }
         } else {
             let rows: Vec<&[f32]> = self.nodes.iter().map(|st| st.vv.as_slice()).collect();
+            let _sp = trace::span(trace::Stage::AeTrain);
             for _ in 0..self.ae_inner_steps {
                 self.ae.train_step(ctx.engine, &rows, None, 0, self.ae_lr, 1.0, 0.0)?;
             }
@@ -344,11 +354,14 @@ impl LgcCommon {
         leader: usize,
     ) -> Result<()> {
         parallel::par_map_mut(ctx.threads, &mut self.nodes, |node, st| {
+            let _lane = trace::lane_scope(node);
+            let _sp = trace::span(trace::Stage::Ef);
             st.fb.accumulate(&grads[node]);
         });
         let mu = self.mu;
         let support = &mut self.support;
         let st = &mut self.nodes[leader];
+        let sp_sel = trace::span(trace::Stage::TopK);
         topk::top_k_into(st.fb.memory(), mu, &mut st.scratch.mags, support, &mut st.scratch.vals);
         debug_assert_eq!(support.len(), mu);
         let mem = st.fb.memory();
@@ -357,6 +370,7 @@ impl LgcCommon {
                 .partial_cmp(&mem[a as usize])
                 .unwrap_or(std::cmp::Ordering::Equal)
         });
+        drop(sp_sel);
         let coded = index_coding::encode_ordered_into(support, &mut st.scratch.enc)?.len();
         ctx.ledger.record(leader, Kind::Indices, coded);
         // The leader's ordered-support broadcast is its own fabric round.
@@ -444,7 +458,11 @@ impl MidStrategy for LgcPs {
                 // (latent + RMS scale).  Recorded on the leader's shard
                 // so it joins the iteration's fan-in round on the fabric,
                 // overlapping with the other nodes' innovation uplinks.
-                let (latent, _s0) = self.c.ae.encode(ctx.engine, &self.c.nodes[leader].vv)?;
+                let (latent, _s0) = {
+                    let _lane = trace::lane_scope(leader);
+                    let _sp = trace::span(trace::Stage::AeEncode);
+                    self.c.ae.encode(ctx.engine, &self.c.nodes[leader].vv)?
+                };
                 ctx.shards[leader].record(Kind::Latent, self.c.ae.latent_bytes());
 
                 // Master decodes per node with decoder D_c^k and the
@@ -457,6 +475,8 @@ impl MidStrategy for LgcPs {
                     ctx.threads,
                     nodes,
                     |node| -> Result<Vec<f32>> {
+                        let _lane = trace::lane_scope(node);
+                        let _sp = trace::span(trace::Stage::AeDecode);
                         ae.decode_ps(engine, node, &latent, &node_rows[node].inn, s_ks[node])
                     },
                 ))?;
@@ -481,7 +501,7 @@ impl MidStrategy for LgcPs {
                 // Fan-out: the master scatters the mu averaged
                 // reconstruction values (support already broadcast).
                 ctx.net.fanout((self.c.mu * 4) as u64);
-                if std::env::var("LGC_DEBUG").is_ok() {
+                if dbg_rec() {
                     let mut true_mean = vec![0.0f32; self.c.mu];
                     for st in &self.c.nodes {
                         for (t, x) in true_mean.iter_mut().zip(&st.vv) {
@@ -611,8 +631,10 @@ impl MidStrategy for LgcRar {
                     ctx.threads,
                     &mut self.c.nodes,
                     &mut *ctx.shards,
-                    |_node, st, _shard| -> Result<(Vec<f32>, f32)> {
+                    |node, st, _shard| -> Result<(Vec<f32>, f32)> {
+                        let _lane = trace::lane_scope(node);
                         st.fb.take_at_into(&self.c.support, &mut st.vv);
+                        let _sp = trace::span(trace::Stage::AeEncode);
                         ae.encode(engine, &st.vv)
                     },
                 ))?;
@@ -633,7 +655,10 @@ impl MidStrategy for LgcRar {
                 let scale_avg = scales.iter().sum::<f32>() / nodes as f32;
                 // Every node decodes the same averaged latent; compute is
                 // replicated, the result identical — one decode suffices.
-                let mut rec = self.c.ae.decode_rar(ctx.engine, &latent_avg, scale_avg)?;
+                let mut rec = {
+                    let _sp = trace::span(trace::Stage::AeDecode);
+                    self.c.ae.decode_rar(ctx.engine, &latent_avg, scale_avg)?
+                };
                 clip_to_gradient_scale(&mut rec, grads);
                 // Optional error feedback on the shared reconstruction
                 // (see ef_on_rec; default off, per Algorithm 2).
@@ -645,7 +670,7 @@ impl MidStrategy for LgcRar {
                         st.fb.add_at(&self.c.support, &e);
                     });
                 }
-                if std::env::var("LGC_DEBUG").is_ok() {
+                if dbg_rec() {
                     let nrm = |v: &[f32]| v.iter().map(|x| x * x).sum::<f32>().sqrt();
                     let vbar: f32 =
                         self.c.nodes.iter().map(|st| nrm(&st.vv)).sum::<f32>() / nodes as f32;

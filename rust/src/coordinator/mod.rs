@@ -43,7 +43,9 @@ use crate::data::{self, Dataset};
 use crate::metrics::{Ledger, NodeLedger};
 use crate::model::{checkpoint, Group, Model};
 use crate::net::{LinkModel, NetReport, NetSim};
+use crate::obs::{jsonl, trace};
 use crate::runtime::Engine;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::ser::{self, Reader};
 use bucket::{method_bucketable, BucketPlan};
@@ -98,6 +100,10 @@ pub struct TrainResult {
     pub time_grad: Duration,
     pub time_exchange: Duration,
     pub time_update: Duration,
+    /// Measured per-iteration wall-clock seconds `(grad_s, exchange_s)`,
+    /// recorded by both backends — the measured side `exp validate-net`
+    /// joins against the fabric's modeled rounds (DESIGN.md §15.5).
+    pub iter_wall: Vec<(f32, f32)>,
     /// The simulated network fabric's recorded trace + pricing — the
     /// per-node modeled time ledger (DESIGN.md §11).
     pub net: NetReport,
@@ -157,7 +163,8 @@ const CORRUPT_RETRANSMIT_S: f64 = 0.05;
 /// Configuration fingerprint stored in resume checkpoints: the Debug
 /// rendering of the config with every resume-orthogonal field normalized
 /// away — the fault/checkpoint plumbing itself plus fields the
-/// bit-identity contracts prove irrelevant (thread count, verbosity).
+/// bit-identity contracts prove irrelevant (thread count, verbosity, and
+/// the telemetry knobs, which by the §15 contract never touch the math).
 fn cfg_fingerprint(cfg: &TrainConfig) -> String {
     let mut c = cfg.clone();
     c.resume = None;
@@ -166,6 +173,10 @@ fn cfg_fingerprint(cfg: &TrainConfig) -> String {
     c.ckpt_every = 0;
     c.verbose = false;
     c.threads = 0;
+    c.trace_out = None;
+    c.log_json = None;
+    c.metrics_addr = None;
+    c.log_level = crate::obs::log::Level::Info;
     format!("{c:?}")
 }
 
@@ -361,6 +372,37 @@ impl<'e> Trainer<'e> {
             None => FaultPlan::default(),
         };
         let mut fault_events: Vec<FaultEvent> = Vec::new();
+        // Structured run log (--log-json, DESIGN.md §15.3): manifest
+        // first, then one record per iteration and per fault event.
+        let mut run_log = match &self.cfg.log_json {
+            Some(p) => Some(jsonl::RunLog::create(p)?),
+            None => None,
+        };
+        if let Some(log) = &mut run_log {
+            log.record(
+                "run_start",
+                vec![
+                    ("method", Json::Str(self.cfg.method.name().to_string())),
+                    ("model", Json::Str(self.cfg.model.clone())),
+                    ("nodes", Json::Num(self.cfg.nodes as f64)),
+                    ("steps", Json::Num(self.cfg.steps as f64)),
+                    ("transport", Json::Str("sim".to_string())),
+                    ("backend", Json::Str(self.engine.platform())),
+                    ("git", Json::Str(jsonl::git_describe())),
+                    ("seed", Json::Num(self.cfg.seed as f64)),
+                    ("cfg_fingerprint", Json::Str(cfg_fingerprint(&self.cfg))),
+                ],
+            )?;
+        }
+        // Measured (grad_s, exchange_s) per iteration — the measured side
+        // of `exp validate-net` (DESIGN.md §15.5).
+        let mut iter_wall: Vec<(f32, f32)> = Vec::with_capacity(self.cfg.steps);
+        // Previous-iteration cumulative per-kind bytes, for the JSONL
+        // per-iteration kind breakdown (deltas of a 5-entry map).
+        let mut prev_kind = std::collections::BTreeMap::new();
+        // Previous cumulative per-node uplink bytes, for the Prometheus
+        // per-worker byte counters.
+        let mut prev_node_bytes: Vec<u64> = vec![0; self.cfg.nodes];
         // Crash-safe resume: restore every piece of loop state from the
         // blob checkpoint, then continue from the recorded iteration.
         // Contract (tests/native_e2e.rs): a run cut at iteration t and
@@ -379,12 +421,13 @@ impl<'e> Trainer<'e> {
         };
 
         for it in start_iter..self.cfg.steps {
+            trace::set_iter(it);
             let (phase, _alpha) = phase_and_alpha(&self.cfg, it);
             // Injected faults fire at the iteration boundary, before any
             // compute; `FaultPlan::take` also drops entries behind a
             // resumed run so prefix faults never re-fire.
             for action in fault_plan.take(it) {
-                self.execute_sim_fault(it, action, &mut net, &mut fault_events)?;
+                self.execute_sim_fault(it, action, &mut net, &mut fault_events, &mut run_log)?;
             }
             ledger.set_phase(phase.index() as u8 + 1);
             let t0 = Instant::now();
@@ -407,6 +450,8 @@ impl<'e> Trainer<'e> {
                         // empty placeholders the masked exchanges skip.
                         return Ok((0.0, 0.0, Vec::new(), Vec::new(), Vec::new()));
                     }
+                    let _lane = trace::lane_scope(node);
+                    let _sp = trace::span(trace::Stage::Grad);
                     let batch = dataset.batch(node, it);
                     let (loss, acc, grads) = model.grad_step(engine, &batch)?;
                     anyhow::ensure!(
@@ -435,10 +480,12 @@ impl<'e> Trainer<'e> {
                 mid_g.push(mid);
                 last_g.push(last);
             }
-            time_grad += t_grad0.elapsed();
+            let dt_grad = t_grad0.elapsed();
+            time_grad += dt_grad;
 
             // --- exchanges (synchronization barriers) -------------------
             let t_ex0 = Instant::now();
+            let sp_ex = trace::span(trace::Stage::Exchange);
             // First layer: always dense (all methods, §VI-A), PS-style
             // scatter of the aggregate on the fabric.
             let first_mean = dense_mean_masked(&first_g, &self.alive, &mut shards);
@@ -464,10 +511,13 @@ impl<'e> Trainer<'e> {
                 self.strategy.exchange(&mut ctx, &mid_g)?
             };
             let last_mean = self.last_exchange(phase, &last_g, &mut shards, &mut net)?;
-            time_exchange += t_ex0.elapsed();
+            drop(sp_ex);
+            let dt_ex = t_ex0.elapsed();
+            time_exchange += dt_ex;
 
             // --- update -------------------------------------------------
             let t_up0 = Instant::now();
+            let sp_up = trace::span(trace::Stage::Update);
             self.model.apply_update(
                 &[
                     (Group::First, first_mean),
@@ -476,7 +526,9 @@ impl<'e> Trainer<'e> {
                 ],
                 lr_at(&self.cfg, it),
             );
-            time_update += t_up0.elapsed();
+            drop(sp_up);
+            let dt_up = t_up0.elapsed();
+            time_update += dt_up;
             // Close the iteration through the scheduler — the single
             // owner of the close-out sequence (fan-in round, shard merge,
             // iteration boundaries) shared with the TCP coordinator.
@@ -494,12 +546,61 @@ impl<'e> Trainer<'e> {
                 train_loss: loss_sum / live,
                 train_acc: acc_sum / live,
             });
+            iter_wall.push((dt_grad.as_secs_f32(), dt_ex.as_secs_f32()));
+
+            // Telemetry fan-out (all no-ops when nothing is installed;
+            // never feeds back into the math — DESIGN.md §15 contract).
+            if crate::obs::metrics::current().is_some() {
+                crate::obs::metrics::inc_iterations();
+                crate::obs::metrics::observe_stage("grad", dt_grad);
+                crate::obs::metrics::observe_stage("exchange", dt_ex);
+                crate::obs::metrics::observe_stage("update", dt_up);
+                for (&node, &b) in &ledger.per_node {
+                    if let Some(prev) = prev_node_bytes.get_mut(node) {
+                        crate::obs::metrics::add_bytes_up(node, b - *prev);
+                        *prev = b;
+                    }
+                }
+                for (node, &is_live) in self.alive.iter().enumerate() {
+                    if is_live {
+                        crate::obs::metrics::mark_progress(node);
+                    }
+                }
+            }
+            if let Some(log) = &mut run_log {
+                let mut kinds: Vec<(&str, Json)> = Vec::new();
+                for (&k, &v) in &ledger.per_kind {
+                    let d = v - prev_kind.get(&k).copied().unwrap_or(0);
+                    if d > 0 {
+                        kinds.push((k.name(), Json::Num(d as f64)));
+                    }
+                }
+                prev_kind = ledger.per_kind.clone();
+                let iter_total = ledger.iter_bytes.last().copied().unwrap_or(0);
+                let dense = (meta.n_params * 4 * live_count(&self.alive)) as u64;
+                let ratio = dense as f64 / (iter_total as f64).max(1e-9);
+                log.record(
+                    "iteration",
+                    vec![
+                        ("iter", Json::Num(it as f64)),
+                        ("phase", Json::Str(phase.name().to_string())),
+                        ("train_loss", Json::Num(f64::from(loss_sum / live))),
+                        ("train_acc", Json::Num(f64::from(acc_sum / live))),
+                        ("bytes_total", Json::Num(iter_total as f64)),
+                        ("bytes_by_kind", jsonl::obj(kinds)),
+                        ("compression_ratio", Json::Num(ratio)),
+                        ("grad_s", Json::Num(f64::from(dt_grad.as_secs_f32()))),
+                        ("exchange_s", Json::Num(f64::from(dt_ex.as_secs_f32()))),
+                        ("update_s", Json::Num(f64::from(dt_up.as_secs_f32()))),
+                    ],
+                )?;
+            }
 
             if self.cfg.eval_every > 0 && (it + 1) % self.cfg.eval_every == 0 {
                 let (l, a) = self.evaluate()?;
                 evals.push((it, l, a));
                 if self.cfg.verbose {
-                    eprintln!(
+                    crate::log_info!(
                         "[{}] it {:>5} phase {:<10} train_loss {:.4} eval_loss {:.4} eval_acc {:.4}",
                         self.strategy.name(),
                         it,
@@ -538,6 +639,18 @@ impl<'e> Trainer<'e> {
         if let Some(path) = &self.cfg.checkpoint {
             self.model.save_checkpoint(path)?;
         }
+        if let Some(mut log) = run_log.take() {
+            log.record(
+                "run_end",
+                vec![
+                    ("final_eval_loss", Json::Num(f64::from(final_eval.0))),
+                    ("final_eval_acc", Json::Num(f64::from(final_eval.1))),
+                    ("total_bytes", Json::Num(ledger.total() as f64)),
+                    ("fault_events", Json::Num(fault_events.len() as f64)),
+                ],
+            )?;
+            log.finish()?;
+        }
         Ok(TrainResult {
             method: self.cfg.method,
             model: self.cfg.model.clone(),
@@ -554,6 +667,7 @@ impl<'e> Trainer<'e> {
             time_grad,
             time_exchange,
             time_update,
+            iter_wall,
             net: net.into_report(),
             fault_events,
         })
@@ -566,10 +680,16 @@ impl<'e> Trainer<'e> {
         action: FaultAction,
         net: &mut NetSim,
         events: &mut Vec<FaultEvent>,
+        run_log: &mut Option<jsonl::RunLog>,
     ) -> Result<()> {
-        fn push(events: &mut Vec<FaultEvent>, ev: FaultEvent) {
-            eprintln!("{}", ev.log_line());
+        fn push(
+            events: &mut Vec<FaultEvent>,
+            run_log: &mut Option<jsonl::RunLog>,
+            ev: FaultEvent,
+        ) -> Result<()> {
+            ev.observe(run_log)?;
             events.push(ev);
+            Ok(())
         }
         match action {
             FaultAction::Kill { node } => match self.cfg.on_fault {
@@ -584,6 +704,7 @@ impl<'e> Trainer<'e> {
                         anyhow::ensure!(survivors > 0, "no live nodes left at iteration {it}");
                         push(
                             events,
+                            run_log,
                             FaultEvent {
                                 iter: it,
                                 node: Some(node),
@@ -593,7 +714,7 @@ impl<'e> Trainer<'e> {
                                      the node's EF residual is dropped"
                                 ),
                             },
-                        );
+                        )?;
                     }
                 }
                 OnFault::WaitRejoin => {
@@ -602,6 +723,7 @@ impl<'e> Trainer<'e> {
                     // so fault plans behave uniformly across backends.
                     push(
                         events,
+                        run_log,
                         FaultEvent {
                             iter: it,
                             node: Some(node),
@@ -610,25 +732,27 @@ impl<'e> Trainer<'e> {
                                      (its state never left the process)"
                                 .into(),
                         },
-                    );
+                    )?;
                 }
             },
             FaultAction::Stall { node, ms } => {
                 net.stall(node, ms as f64 / 1000.0);
                 push(
                     events,
+                    run_log,
                     FaultEvent {
                         iter: it,
                         node: Some(node),
                         kind: "stall".into(),
                         detail: format!("{ms}ms frozen; priced into this iteration's modeled time"),
                     },
-                );
+                )?;
             }
             FaultAction::CorruptFrame { node } => {
                 net.stall(node, CORRUPT_RETRANSMIT_S);
                 push(
                     events,
+                    run_log,
                     FaultEvent {
                         iter: it,
                         node: Some(node),
@@ -638,7 +762,7 @@ impl<'e> Trainer<'e> {
                             CORRUPT_RETRANSMIT_S * 1000.0
                         ),
                     },
-                );
+                )?;
             }
             FaultAction::Crash => {
                 // The one fault the sim cannot absorb — used by the resume
@@ -837,18 +961,63 @@ impl<'e> Trainer<'e> {
     }
 }
 
+/// Install the process-wide telemetry sinks a coordinator-side run
+/// asked for (`--log-level`, `--trace-out` span recording,
+/// `--metrics-addr` scrape endpoint), returning the metrics server
+/// handle if one was bound.  Shared by [`train`] and the `lgc serve`
+/// entry point; every sink stays inert when its flag is unset
+/// (DESIGN.md §15).
+pub fn telemetry_install(
+    cfg: &TrainConfig,
+) -> Result<Option<crate::obs::metrics::MetricsServer>> {
+    crate::obs::log::set_level(cfg.log_level);
+    if cfg.trace_out.is_some() {
+        trace::install(cfg.nodes);
+    }
+    match &cfg.metrics_addr {
+        Some(addr) => {
+            crate::obs::metrics::install(cfg.nodes);
+            let srv = crate::obs::metrics::serve(addr)?;
+            crate::log_info!("lgc: metrics endpoint listening on {}", srv.addr());
+            Ok(Some(srv))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Flush the trace sink after a run: merge worker part files (TCP runs
+/// write them at shutdown) with this process's lanes and emit the
+/// Chrome/Perfetto JSON at `--trace-out`.  A failed run discards the
+/// recorder instead of writing a partial trace.
+pub fn telemetry_finish(cfg: &TrainConfig, ok: bool) -> Result<()> {
+    if let Some(path) = &cfg.trace_out {
+        let write = if ok {
+            trace::write_merged(path, cfg.nodes)
+        } else {
+            Ok(())
+        };
+        let _ = trace::uninstall();
+        write?;
+    }
+    Ok(())
+}
+
 /// Train under the configured transport: the in-process simulator
 /// (default), or real worker processes over sockets
 /// (`cfg.transport == Tcp`, [`remote::train_tcp`]).  The two backends
 /// produce bit-identical results for the supported methods
-/// (tests/tcp_e2e.rs).
+/// (tests/tcp_e2e.rs) — with or without the telemetry flags, which only
+/// observe (DESIGN.md §15).
 pub fn train(engine: &Engine, cfg: TrainConfig) -> Result<TrainResult> {
     // Fail fast on inconsistent fault-tolerance flags (bad --faults
     // specs, continue with a leaderful method, --ckpt-every without
     // --checkpoint, --resume over TCP) before spawning anything.
     faults::validate_fault_config(&cfg)?;
-    match cfg.transport {
-        TransportKind::Sim => Trainer::new(engine, cfg)?.run(),
-        TransportKind::Tcp => remote::train_tcp(engine, cfg),
-    }
+    let _metrics = telemetry_install(&cfg)?;
+    let result = match cfg.transport {
+        TransportKind::Sim => Trainer::new(engine, cfg.clone()).and_then(Trainer::run),
+        TransportKind::Tcp => remote::train_tcp(engine, cfg.clone()),
+    };
+    telemetry_finish(&cfg, result.is_ok())?;
+    result
 }

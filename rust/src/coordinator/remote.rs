@@ -49,6 +49,7 @@ use crate::data::{self, Dataset};
 use crate::metrics::{Kind, Ledger, NodeLedger};
 use crate::model::{Group, Model};
 use crate::net::NetSim;
+use crate::obs::{jsonl, trace};
 use crate::runtime::{Engine, ModelMeta};
 use crate::transport::{
     accept_rejoin, accept_workers, BucketUp, Conn, LastUp, Listener, MidUp, Msg, RejectorGuard,
@@ -148,9 +149,10 @@ pub fn train_with_opts(
     let listener = Listener::bind(&opts.listen)
         .with_context(|| format!("binding coordinator listener on {:?}", opts.listen))?;
     let addr = listener.local_addr()?;
-    eprintln!(
+    crate::log_info!(
         "lgc: coordinator listening on {addr} (session {:#x}, {} workers)",
-        opts.session, cfg.nodes
+        opts.session,
+        cfg.nodes
     );
 
     // The deterministic fault plan fires from the coordinator's loop;
@@ -437,6 +439,9 @@ struct Coordinator<'e> {
     plan: BucketPlan,
     /// Effective overlap: configured on *and* the plan actually splits.
     overlap: bool,
+    /// Structured run log (--log-json, DESIGN.md §15.3); `None` when
+    /// the flag is unset.
+    run_log: Option<jsonl::RunLog>,
 }
 
 impl<'e> Coordinator<'e> {
@@ -495,6 +500,26 @@ impl<'e> Coordinator<'e> {
         let alive = vec![true; cfg.nodes];
         let liveness = LivenessMonitor::new(cfg.nodes, cfg.heartbeat_ms, cfg.miss_budget);
         let worker_states = vec![Vec::new(); cfg.nodes];
+        let mut run_log = match &cfg.log_json {
+            Some(p) => Some(jsonl::RunLog::create(p)?),
+            None => None,
+        };
+        if let Some(log) = &mut run_log {
+            use crate::util::json::Json;
+            log.record(
+                "run_start",
+                vec![
+                    ("method", Json::Str(cfg.method.name().to_string())),
+                    ("model", Json::Str(cfg.model.clone())),
+                    ("nodes", Json::Num(cfg.nodes as f64)),
+                    ("steps", Json::Num(cfg.steps as f64)),
+                    ("transport", Json::Str("tcp".to_string())),
+                    ("backend", Json::Str(engine.platform())),
+                    ("git", Json::Str(jsonl::git_describe())),
+                    ("seed", Json::Num(cfg.seed as f64)),
+                ],
+            )?;
+        }
         Ok(Coordinator {
             engine,
             cfg,
@@ -518,13 +543,17 @@ impl<'e> Coordinator<'e> {
             n_last,
             plan,
             overlap,
+            run_log,
         })
     }
 
-    /// Log + record one fault-event line (the artifact CI uploads).
-    fn push_event(&mut self, ev: FaultEvent) {
-        eprintln!("{}", ev.log_line());
+    /// Fan one fault event out to every telemetry sink (stderr line,
+    /// JSONL record, trace marker, Prometheus counter) and record it for
+    /// the [`TrainResult`] artifact CI uploads.
+    fn push_event(&mut self, ev: FaultEvent) -> Result<()> {
+        ev.observe(&mut self.run_log)?;
         self.fault_events.push(ev);
+        Ok(())
     }
 
     /// Deadline-bounded receive from one worker with liveness
@@ -534,6 +563,7 @@ impl<'e> Coordinator<'e> {
         match self.conns[node].expect(what) {
             Ok(m) => {
                 self.liveness.observe(node);
+                crate::obs::metrics::mark_progress(node);
                 Ok(m)
             }
             Err(e) => Err(e.context(self.liveness.describe(node))),
@@ -707,7 +737,7 @@ impl<'e> Coordinator<'e> {
                 "removed from aggregation; {survivors} survivors; the node's EF residual \
                  is dropped ({err:#})"
             ),
-        });
+        })?;
         Ok(())
     }
 
@@ -769,7 +799,7 @@ impl<'e> Coordinator<'e> {
                                 "removed from aggregation; {survivors} survivors; \
                                  the node's EF residual is dropped"
                             ),
-                        });
+                        })?;
                     }
                 }
                 OnFault::WaitRejoin => self.kill_and_rejoin(it, node)?,
@@ -790,7 +820,7 @@ impl<'e> Coordinator<'e> {
                         "{ms}ms frozen (SIGSTOP/SIGCONT); priced into this iteration's \
                          modeled time"
                     ),
-                });
+                })?;
             }
             FaultAction::CorruptFrame { node } => {
                 // Arm the wire shim: the next frame to this worker goes
@@ -806,7 +836,7 @@ impl<'e> Coordinator<'e> {
                     detail: "next frame to the node corrupted in flight; its decode will \
                              fail loudly"
                         .into(),
-                });
+                })?;
             }
             FaultAction::Crash => {
                 bail!("injected crash at iteration {it} (fault plan)");
@@ -830,7 +860,7 @@ impl<'e> Coordinator<'e> {
             kind: "kill".into(),
             detail: "killed; respawning for token-checked rejoin (--on-fault wait-rejoin)"
                 .into(),
-        });
+        })?;
         let ropts = self.ropts.clone();
         self.pids[node] = self.children.spawn(self.engine, &self.addr, &ropts, Some(node as u32))?;
         let ack = Msg::RejoinAck {
@@ -876,7 +906,7 @@ impl<'e> Coordinator<'e> {
                     ""
                 }
             ),
-        });
+        })?;
         Ok(())
     }
 
@@ -930,6 +960,12 @@ impl<'e> Coordinator<'e> {
         let mut time_grad = Duration::ZERO;
         let mut time_exchange = Duration::ZERO;
         let mut time_update = Duration::ZERO;
+        let mut iter_wall: Vec<(f32, f32)> = Vec::with_capacity(steps);
+        // Telemetry deltas (see the sim Trainer's twins): cumulative
+        // per-kind bytes for the JSONL breakdown, per-node uplink bytes
+        // for the Prometheus counters.
+        let mut prev_kind = std::collections::BTreeMap::new();
+        let mut prev_node_bytes: Vec<u64> = vec![0; nodes];
 
         // Elastic runs: every worker ships its initial strategy state
         // before the first plan, so even an iteration-0 kill has a
@@ -939,6 +975,7 @@ impl<'e> Coordinator<'e> {
         }
 
         for it in 0..steps {
+            trace::set_iter(it);
             let (phase, _alpha) = phase_and_alpha(&self.cfg, it);
             // Injected faults fire at the iteration boundary, before any
             // plan goes out — the same point the simulator fires them.
@@ -952,6 +989,10 @@ impl<'e> Coordinator<'e> {
 
             // --- wire exchange: plans out, payloads in -----------------
             let t_grad0 = Instant::now();
+            // From the coordinator's seat this window is the workers'
+            // compute + wire time — the trace twin of the workers' own
+            // in-process `grad` spans (their part files carry those).
+            let sp_grad = trace::span(trace::Stage::Grad);
             self.send_plans(it, engaged)?;
             let support_coded = if lgc_support_round {
                 let ps = self.lgc.as_ref().map(|l| l.ps).unwrap_or(false);
@@ -966,10 +1007,13 @@ impl<'e> Coordinator<'e> {
             } else {
                 Vec::new()
             };
-            time_grad += t_grad0.elapsed();
+            drop(sp_grad);
+            let dt_grad = t_grad0.elapsed();
+            time_grad += dt_grad;
 
             // --- central replay of the sim's exchange ------------------
             let t_ex0 = Instant::now();
+            let sp_ex = trace::span(trace::Stage::Exchange);
             // Divergence check in node order, with the sim's exact error.
             let method_name = self.cfg.method.name();
             let lr_cfg = self.cfg.lr;
@@ -1026,8 +1070,11 @@ impl<'e> Coordinator<'e> {
             if self.cfg.on_fault == OnFault::WaitRejoin {
                 self.recv_state_syncs(Some(it))?;
             }
-            time_exchange += t_ex0.elapsed();
+            drop(sp_ex);
+            let dt_ex = t_ex0.elapsed();
+            time_exchange += dt_ex;
             let t_up0 = Instant::now();
+            let sp_up = trace::span(trace::Stage::Update);
             self.model.apply_update(
                 &[
                     (Group::First, first_mean),
@@ -1036,7 +1083,9 @@ impl<'e> Coordinator<'e> {
                 ],
                 lr_at(&self.cfg, it),
             );
-            time_update += t_up0.elapsed();
+            drop(sp_up);
+            let dt_up = t_up0.elapsed();
+            time_update += dt_up;
 
             // Fabric + ledger close-out — the scheduler owns the one
             // sequence both transports run (DESIGN.md §13).
@@ -1052,12 +1101,59 @@ impl<'e> Coordinator<'e> {
                 train_loss: loss_sum / live,
                 train_acc: acc_sum / live,
             });
+            iter_wall.push((dt_grad.as_secs_f32(), dt_ex.as_secs_f32()));
+
+            // Telemetry fan-out — observation only, same as the sim's
+            // (DESIGN.md §15 contract).
+            if crate::obs::metrics::current().is_some() {
+                crate::obs::metrics::inc_iterations();
+                crate::obs::metrics::observe_stage("grad", dt_grad);
+                crate::obs::metrics::observe_stage("exchange", dt_ex);
+                crate::obs::metrics::observe_stage("update", dt_up);
+                for (&node, &b) in &ledger.per_node {
+                    if let Some(prev) = prev_node_bytes.get_mut(node) {
+                        crate::obs::metrics::add_bytes_up(node, b - *prev);
+                        *prev = b;
+                    }
+                }
+            }
+            if let Some(log) = &mut self.run_log {
+                use crate::util::json::Json;
+                let mut kinds: Vec<(&str, Json)> = Vec::new();
+                for (&k, &v) in &ledger.per_kind {
+                    let d = v - prev_kind.get(&k).copied().unwrap_or(0);
+                    if d > 0 {
+                        kinds.push((k.name(), Json::Num(d as f64)));
+                    }
+                }
+                prev_kind = ledger.per_kind.clone();
+                let iter_total = ledger.iter_bytes.last().copied().unwrap_or(0);
+                let dense = (self.meta.n_params * 4 * live_count(&self.alive)) as u64;
+                log.record(
+                    "iteration",
+                    vec![
+                        ("iter", Json::Num(it as f64)),
+                        ("phase", Json::Str(phase.name().to_string())),
+                        ("train_loss", Json::Num(f64::from(loss_sum / live))),
+                        ("train_acc", Json::Num(f64::from(acc_sum / live))),
+                        ("bytes_total", Json::Num(iter_total as f64)),
+                        ("bytes_by_kind", jsonl::obj(kinds)),
+                        (
+                            "compression_ratio",
+                            Json::Num(dense as f64 / (iter_total as f64).max(1e-9)),
+                        ),
+                        ("grad_s", Json::Num(f64::from(dt_grad.as_secs_f32()))),
+                        ("exchange_s", Json::Num(f64::from(dt_ex.as_secs_f32()))),
+                        ("update_s", Json::Num(f64::from(dt_up.as_secs_f32()))),
+                    ],
+                )?;
+            }
 
             if self.cfg.eval_every > 0 && (it + 1) % self.cfg.eval_every == 0 {
                 let (l, a) = self.evaluate()?;
                 evals.push((it, l, a));
                 if self.cfg.verbose {
-                    eprintln!(
+                    crate::log_info!(
                         "[{}/tcp] it {:>5} phase {:<10} train_loss {:.4} eval_loss {:.4} \
                          eval_acc {:.4}",
                         method_name,
@@ -1075,6 +1171,19 @@ impl<'e> Coordinator<'e> {
         if let Some(path) = &self.cfg.checkpoint {
             self.model.save_checkpoint(path)?;
         }
+        if let Some(mut log) = self.run_log.take() {
+            use crate::util::json::Json;
+            log.record(
+                "run_end",
+                vec![
+                    ("final_eval_loss", Json::Num(f64::from(final_eval.0))),
+                    ("final_eval_acc", Json::Num(f64::from(final_eval.1))),
+                    ("total_bytes", Json::Num(ledger.total() as f64)),
+                    ("fault_events", Json::Num(self.fault_events.len() as f64)),
+                ],
+            )?;
+            log.finish()?;
+        }
         Ok(TrainResult {
             method: self.cfg.method,
             model: self.cfg.model.clone(),
@@ -1091,6 +1200,7 @@ impl<'e> Coordinator<'e> {
             time_grad,
             time_exchange,
             time_update,
+            iter_wall,
             net: net.into_report(),
             fault_events: std::mem::take(&mut self.fault_events),
         })

@@ -42,6 +42,7 @@ use crate::coordinator::lr_at;
 use crate::coordinator::scheduler::{exponential_alpha, phase_and_alpha, Phase};
 use crate::data::{self, Dataset};
 use crate::model::{Group, Model};
+use crate::obs::trace;
 use crate::runtime::Engine;
 use crate::transport::{BucketUp, Conn, HeartbeatPump, LastUp, MidUp, Msg, PROTO_VERSION};
 use crate::util::ser::{self, Reader};
@@ -113,7 +114,14 @@ pub fn run(engine: &Engine, opts: &WorkerOpts) -> Result<()> {
         platform,
         engine.platform()
     );
-    eprintln!(
+    // Telemetry knobs ride in the config blob (CFG v4): adopt the
+    // coordinator's log level, and when the run traces, record this
+    // process's pipeline spans for the part-file flush at shutdown.
+    crate::obs::log::set_level(cfg.log_level);
+    if cfg.trace_out.is_some() {
+        trace::install(nodes);
+    }
+    crate::log_info!(
         "lgc worker: joined as node {node}/{nodes} (method {}, model {})",
         cfg.method.name(),
         cfg.model
@@ -158,7 +166,11 @@ fn run_rejoin(engine: &Engine, opts: &WorkerOpts, mut conn: Conn, node: u32) -> 
         platform,
         engine.platform()
     );
-    eprintln!(
+    crate::obs::log::set_level(cfg.log_level);
+    if cfg.trace_out.is_some() {
+        trace::install(nodes);
+    }
+    crate::log_info!(
         "lgc worker: node {node}/{nodes} rejoined at iteration {iter} (method {})",
         cfg.method.name()
     );
@@ -310,14 +322,27 @@ impl<'e> Node<'e> {
     /// The iteration loop: one [`Msg::IterPlan`] per step until the
     /// coordinator's [`Msg::Shutdown`].
     fn serve(&mut self, conn: &mut Conn) -> Result<()> {
+        // The whole serve loop runs on this one thread on behalf of this
+        // one node: route every span it opens to the node's lane.
+        let _lane = trace::lane_scope(self.node);
         loop {
             match conn.expect("IterPlan")? {
                 Msg::Shutdown { reason } => {
-                    eprintln!("lgc worker: node {} shutting down ({reason})", self.node);
+                    crate::log_info!(
+                        "lgc worker: node {} shutting down ({reason})",
+                        self.node
+                    );
+                    if let Some(path) = &self.cfg.trace_out {
+                        // Clean exit: flush this process's spans to the
+                        // part file the coordinator merges (§15.2).  A
+                        // killed worker simply never writes one.
+                        trace::write_part(path, self.node)?;
+                    }
                     return Ok(());
                 }
                 Msg::IterPlan { iter, engaged, weights_follow } => {
                     let it = iter as usize;
+                    trace::set_iter(it);
                     self.step(conn, it, engaged, weights_follow)
                         .with_context(|| format!("worker node {} at iter {it}", self.node))?;
                 }
@@ -348,16 +373,22 @@ impl<'e> Node<'e> {
         // Local compute: identical inputs (deterministic replica + data
         // stream) => identical gradients to the simulator's node closure.
         let batch = self.dataset.batch(self.node, it);
+        let sp_grad = trace::span(trace::Stage::Grad);
         let (loss, acc, grads) = self.model.grad_step(self.engine, &batch)?;
         let first = self.model.flatten_group(&grads, Group::First);
         let mid_g = self.model.flatten_group(&grads, Group::Mid);
         let last_g = self.model.flatten_group(&grads, Group::Last);
+        drop(sp_grad);
 
         let (mid_up, ctrl_mid, latent) = self.mid_upload(conn, it, phase, engaged, &mid_g)?;
         let last_up = self.last_upload(phase, last_g)?;
         // Loss is sent raw (NaN included): the coordinator raises the
         // simulator's canonical divergence error so both transports fail
         // with the same message.
+        // The worker's exchange span covers uplink send through SyncInfo
+        // receipt — the wire wait the coordinator's central replay sits
+        // inside.
+        let sp_ex = trace::span(trace::Stage::Exchange);
         conn.send(&Msg::Gradient {
             iter: it as u32,
             loss,
@@ -371,12 +402,15 @@ impl<'e> Node<'e> {
             conn.send(&l)?;
         }
 
-        match conn.expect("SyncInfo")? {
+        let sync = conn.expect("SyncInfo")?;
+        drop(sp_ex);
+        match sync {
             Msg::SyncInfo { iter, first, mid, last } => {
                 ensure!(
                     iter as usize == it,
                     "protocol desync: SyncInfo for iter {iter}, expected {it}"
                 );
+                let _sp = trace::span(trace::Stage::Update);
                 self.model.apply_update(
                     &[(Group::First, first), (Group::Mid, mid), (Group::Last, last)],
                     lr_at(&self.cfg, it),
@@ -481,11 +515,17 @@ impl<'e> Node<'e> {
                     None => self.cfg.alpha,
                 };
                 let k_sel = topk::k_of(self.n_mid, a);
-                fb.accumulate(mid_g);
+                {
+                    let _sp = trace::span(trace::Stage::Ef);
+                    fb.accumulate(mid_g);
+                }
                 // Bucketed selection is bit-identical to the monolithic
                 // top-k for any plan (global threshold — DESIGN.md §13.2);
                 // with a single-range plan it *is* the legacy path.
-                fb.select_and_clear_bucketed_into(k_sel, self.plan.ranges(), &mut self.sc);
+                {
+                    let _sp = trace::span(trace::Stage::TopK);
+                    fb.select_and_clear_bucketed_into(k_sel, self.plan.ranges(), &mut self.sc);
+                }
                 if self.overlap {
                     let up = send_sparse_buckets(conn, it, &self.plan, fp16, &mut self.sc)?;
                     return Ok((up, None, None));
@@ -500,7 +540,11 @@ impl<'e> Node<'e> {
             MidState::Threshold { fb, threshold } => {
                 let n = self.n_mid;
                 let k_target = topk::k_of(n, self.cfg.alpha);
-                fb.accumulate(mid_g);
+                {
+                    let _sp = trace::span(trace::Stage::Ef);
+                    fb.accumulate(mid_g);
+                }
+                let sp_sel = trace::span(trace::Stage::TopK);
                 if *threshold == 0.0 {
                     *threshold = topk::threshold_for_k_in(fb.memory(), k_target, &mut self.sc.mags);
                 }
@@ -512,6 +556,7 @@ impl<'e> Node<'e> {
                         .filter(|&i| mem[i as usize].abs() >= thr && mem[i as usize] != 0.0),
                 );
                 fb.take_at_into(&self.sc.idx, &mut self.sc.vals);
+                drop(sp_sel);
                 if self.sc.idx.len() > 2 * k_target {
                     *threshold *= 1.25;
                 } else if self.sc.idx.len() < k_target / 2 {
@@ -536,9 +581,13 @@ impl<'e> Node<'e> {
                     return Ok((MidUp::Dense(mid_g.to_vec()), None, None));
                 }
                 let ps = *ps;
-                fb.accumulate(mid_g);
+                {
+                    let _sp = trace::span(trace::Stage::Ef);
+                    fb.accumulate(mid_g);
+                }
                 let leader = if ps { 0 } else { it % self.nodes };
                 if self.node == leader {
+                    let sp_sel = trace::span(trace::Stage::TopK);
                     topk::top_k_into(
                         fb.memory(),
                         self.mu,
@@ -552,6 +601,7 @@ impl<'e> Node<'e> {
                             .partial_cmp(&mem[a as usize])
                             .unwrap_or(std::cmp::Ordering::Equal)
                     });
+                    drop(sp_sel);
                     let coded = index_coding::encode_ordered_into(&self.support, &mut self.sc.enc)?
                         .to_vec();
                     conn.send(&Msg::Support { iter: it as u32, coded })?;
@@ -592,18 +642,22 @@ impl<'e> Node<'e> {
                     // position) + RMS scale; the leader also encodes the
                     // shared latent (lgc::innovation_into, Algorithm 1).
                     let k_inn = topk::k_of(self.vv.len(), self.cfg.innovation_frac);
-                    topk::top_k_into(
-                        &self.vv,
-                        k_inn,
-                        &mut self.sc.mags,
-                        &mut self.sc.idx,
-                        &mut self.sc.vals,
-                    );
+                    {
+                        let _sp = trace::span(trace::Stage::TopK);
+                        topk::top_k_into(
+                            &self.vv,
+                            k_inn,
+                            &mut self.sc.mags,
+                            &mut self.sc.idx,
+                            &mut self.sc.vals,
+                        );
+                    }
                     let coded_idx =
                         index_coding::encode_into(&self.sc.idx, self.vv.len(), &mut self.sc.enc)?
                             .to_vec();
                     let scale = rms(&self.vv);
                     let latent = if self.node == leader {
+                        let _sp = trace::span(trace::Stage::AeEncode);
                         let (lat, s) = ae.encode(self.engine, &self.vv)?;
                         Some(Msg::Latent { iter: it as u32, latent: lat, scale: s })
                     } else {
@@ -617,7 +671,9 @@ impl<'e> Node<'e> {
                 } else {
                     // RAR: every node encodes; the latents ring-reduce on
                     // the coordinator (Algorithm 2, eq. 19).
+                    let sp_ae = trace::span(trace::Stage::AeEncode);
                     let (lat, s) = ae.encode(self.engine, &self.vv)?;
+                    drop(sp_ae);
                     let latent = Msg::Latent { iter: it as u32, latent: lat, scale: s };
                     Ok((MidUp::None, ctrl, Some(latent)))
                 }
@@ -635,8 +691,14 @@ impl<'e> Node<'e> {
             return Ok(LastUp::Dense(last_g));
         }
         let k_sel = topk::k_of(self.n_last, self.cfg.alpha);
-        self.last_fb.accumulate(&last_g);
-        self.last_fb.select_and_clear_into(k_sel, &mut self.sc);
+        {
+            let _sp = trace::span(trace::Stage::Ef);
+            self.last_fb.accumulate(&last_g);
+        }
+        {
+            let _sp = trace::span(trace::Stage::TopK);
+            self.last_fb.select_and_clear_into(k_sel, &mut self.sc);
+        }
         let coded =
             index_coding::encode_into(&self.sc.idx, self.n_last, &mut self.sc.enc)?.to_vec();
         Ok(LastUp::Sparse { coded_idx: coded, vals: self.sc.vals.clone() })

@@ -10,6 +10,7 @@
 pub mod ablation;
 pub mod info_plane;
 pub mod speedup;
+pub mod validate_net;
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
@@ -23,6 +24,7 @@ use crate::util::bench::Table;
 
 pub use info_plane::{info_plane_run, InfoPlaneRow};
 pub use speedup::{fig14, fig14_sweep, speedup_table, Fig14Opts, LinkModel, SweepPoint};
+pub use validate_net::PhaseRow;
 
 /// Default step budget for table experiments; benches/CLI can override.
 pub fn default_steps() -> usize {
@@ -100,7 +102,7 @@ pub fn compare_methods(
             Err(e) => {
                 // A diverged method is a *result* (NaN row), not a reason
                 // to abort the whole comparison.
-                eprintln!("[{model} K={nodes}] {} failed: {e:#}", m.name());
+                crate::log_info!("[{model} K={nodes}] {} failed: {e:#}", m.name());
                 rows.push(MethodRow {
                     method: m,
                     acc: f32::NAN,
@@ -123,7 +125,9 @@ pub fn compare_methods(
                         time_grad: Default::default(),
                         time_exchange: Default::default(),
                         time_update: Default::default(),
+                        iter_wall: vec![],
                         net: Default::default(),
+                        fault_events: vec![],
                     },
                 });
             }

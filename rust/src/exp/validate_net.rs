@@ -1,0 +1,237 @@
+//! `lgc exp validate-net` — measured-vs-modeled network validation
+//! (DESIGN.md §15.5).
+//!
+//! The fabric model ([`crate::net::NetSim`]) prices every exchange from
+//! measured byte counts; this driver closes the loop by running the SAME
+//! configuration twice — once under `--transport sim` (modeled rounds)
+//! and once under `--transport tcp` (real sockets, measured wall-clock
+//! timestamps from [`TrainResult::iter_wall`]) — and joining the two
+//! per iteration.  Because sim and tcp are bit-identical (tests/
+//! tcp_e2e.rs), the iteration axis lines up exactly: iteration *i* of
+//! one run exchanged the same bytes in the same rounds as iteration *i*
+//! of the other, so the modeled/measured delta isolates the *time*
+//! model, not the traffic.
+//!
+//! The join is aggregated per scheduler phase (dense / top-k /
+//! compressed — the three traffic regimes of the paper's pipeline) and
+//! emitted as `results/net_validation.csv` with modeled, measured, and
+//! error columns per phase.  Absolute agreement is not expected — the
+//! default model prices a 1 Gbit/s link while loopback TCP runs far
+//! faster — the value is the per-phase *shape*: a phase whose error is
+//! wildly out of line with the others indicates rounds the model
+//! mis-prices (that is exactly what this surfaced for early drafts of
+//! the ring path).
+
+use anyhow::{ensure, Result};
+
+use crate::config::{Method, TransportKind};
+use crate::coordinator::{self, scheduler, TrainResult};
+use crate::metrics::Csv;
+use crate::runtime::Engine;
+use crate::util::bench::Table;
+
+/// One aggregated comparison row (one scheduler phase, plus the overall
+/// summary row).
+#[derive(Debug, Clone)]
+pub struct PhaseRow {
+    /// Phase label: `dense`, `topk`, `compressed`, or `overall`.
+    pub phase: &'static str,
+    /// Iterations aggregated into this row.
+    pub iters: usize,
+    /// Mean modeled communication time per iteration (ms), from the sim
+    /// run's [`crate::net::NetReport`] under its own recorded link.
+    pub modeled_ms: f64,
+    /// Mean measured exchange wall-clock per iteration (ms), from the
+    /// tcp run's coordinator timestamps.
+    pub measured_ms: f64,
+    /// `(measured - modeled) / modeled`.
+    pub rel_err: f64,
+}
+
+fn phase_label(p: scheduler::Phase) -> &'static str {
+    match p {
+        scheduler::Phase::Dense => "dense",
+        scheduler::Phase::TopK => "topk",
+        scheduler::Phase::Compressed => "compressed",
+    }
+}
+
+/// Run `method` on `model`/`nodes`/`steps` under both transports and
+/// emit the per-phase modeled-vs-measured table to
+/// `results/net_validation.csv`.
+pub fn validate_net(
+    engine: &Engine,
+    model: &str,
+    method: Method,
+    nodes: usize,
+    steps: usize,
+) -> Result<Vec<PhaseRow>> {
+    let mut cfg = super::base_cfg(model, method, nodes, steps);
+    cfg.transport = TransportKind::Sim;
+    let r_sim = coordinator::train(engine, cfg.clone())?;
+
+    let mut tcp_cfg = cfg.clone();
+    tcp_cfg.transport = TransportKind::Tcp;
+    let r_tcp = coordinator::train(engine, tcp_cfg)?;
+
+    // The join below assumes iteration i shipped the same bytes in both
+    // runs; that is the sim-vs-tcp bit-identity contract, so check it
+    // here rather than silently comparing unrelated traffic.
+    ensure!(
+        r_sim.final_train_loss().to_bits() == r_tcp.final_train_loss().to_bits(),
+        "sim and tcp runs diverged (loss {} vs {}) — the modeled-vs-measured join \
+         would compare unrelated traffic",
+        r_sim.final_train_loss(),
+        r_tcp.final_train_loss()
+    );
+
+    let rows = join_phases(&cfg, &r_sim, &r_tcp);
+
+    println!("\n=== validate-net: {model} {} K={nodes}, {steps} steps ===", method.name());
+    let mut t = Table::new(&["phase", "iters", "modeled ms/iter", "measured ms/iter", "rel err"]);
+    let mut csv = Csv::new(
+        "results/net_validation.csv",
+        &["phase", "iters", "modeled_ms_per_iter", "measured_ms_per_iter", "abs_err_ms", "rel_err"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.phase.to_string(),
+            r.iters.to_string(),
+            format!("{:.4}", r.modeled_ms),
+            format!("{:.4}", r.measured_ms),
+            format!("{:+.2}x", r.rel_err),
+        ]);
+        csv.row(&[
+            r.phase.to_string(),
+            r.iters.to_string(),
+            format!("{}", r.modeled_ms),
+            format!("{}", r.measured_ms),
+            format!("{}", r.measured_ms - r.modeled_ms),
+            format!("{}", r.rel_err),
+        ]);
+    }
+    t.print();
+    csv.finish()?;
+    println!("-> results/net_validation.csv");
+    Ok(rows)
+}
+
+/// Aggregate modeled vs measured per scheduler phase.  The first
+/// iteration of each phase is excluded: phase entry is where one-off
+/// traffic lands (AE weight broadcast, support warm-up) and where the
+/// tcp coordinator's buffers are cold, so it is an outlier on both
+/// axes.
+fn join_phases(
+    cfg: &crate::config::TrainConfig,
+    r_sim: &TrainResult,
+    r_tcp: &TrainResult,
+) -> Vec<PhaseRow> {
+    let modeled = r_sim.net.iter_comm_s();
+    let iters = modeled.len().min(r_tcp.iter_wall.len());
+    // label -> (count, modeled sum s, measured sum s)
+    let mut acc: Vec<(&'static str, usize, f64, f64)> = vec![
+        ("dense", 0, 0.0, 0.0),
+        ("topk", 0, 0.0, 0.0),
+        ("compressed", 0, 0.0, 0.0),
+    ];
+    let mut prev_phase = None;
+    for it in 0..iters {
+        let (phase, _) = scheduler::phase_and_alpha(cfg, it);
+        let entered = prev_phase != Some(phase);
+        prev_phase = Some(phase);
+        if entered {
+            continue;
+        }
+        let label = phase_label(phase);
+        let slot = acc.iter_mut().find(|(l, ..)| *l == label).unwrap();
+        slot.1 += 1;
+        slot.2 += modeled[it];
+        slot.3 += r_tcp.iter_wall[it].1 as f64;
+    }
+    let mut rows: Vec<PhaseRow> = acc
+        .iter()
+        .filter(|(_, n, ..)| *n > 0)
+        .map(|&(label, n, m, w)| PhaseRow {
+            phase: label,
+            iters: n,
+            modeled_ms: m / n as f64 * 1e3,
+            measured_ms: w / n as f64 * 1e3,
+            rel_err: (w - m) / m.max(1e-12),
+        })
+        .collect();
+    let (n, m, w) = acc.iter().fold((0usize, 0.0f64, 0.0f64), |(n, m, w), &(_, cn, cm, cw)| {
+        (n + cn, m + cm, w + cw)
+    });
+    if n > 0 {
+        rows.push(PhaseRow {
+            phase: "overall",
+            iters: n,
+            modeled_ms: m / n as f64 * 1e3,
+            measured_ms: w / n as f64 * 1e3,
+            rel_err: (w - m) / m.max(1e-12),
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::net::{NetSim, Fabric, LinkModel};
+
+    fn result_with(cfg: &TrainConfig, comm_per_iter_bytes: u64, wall_s: f32) -> TrainResult {
+        // Synthesize a report with one fan-in round per iteration and a
+        // flat measured wall, enough to drive the join.
+        let mut net = NetSim::new(Fabric::new(LinkModel::from_mbits(80.0, 0.0), vec![]), cfg.nodes);
+        for _ in 0..cfg.steps {
+            net.send(0, comm_per_iter_bytes);
+            net.end_iteration();
+        }
+        TrainResult {
+            method: cfg.method,
+            model: cfg.model.clone(),
+            nodes: cfg.nodes,
+            steps: cfg.steps,
+            curve: vec![],
+            evals: vec![],
+            ledger: Default::default(),
+            phase_time: Default::default(),
+            phase_iters: [0; 3],
+            ae_losses: vec![],
+            final_eval: (0.0, 0.0),
+            dense_bytes_per_node: 0,
+            time_grad: Default::default(),
+            time_exchange: Default::default(),
+            time_update: Default::default(),
+            iter_wall: vec![(0.0, wall_s); cfg.steps],
+            net: net.into_report(),
+            fault_events: vec![],
+        }
+    }
+
+    #[test]
+    fn join_groups_by_phase_and_skips_phase_entry() {
+        let cfg = TrainConfig {
+            method: Method::Dgc,
+            steps: 12,
+            warmup_iters: 4,
+            ae_train_iters: 4,
+            ..Default::default()
+        };
+        // 10 MB/s link, 1 MB per iter => modeled 0.1 s; measured 0.2 s.
+        let r_sim = result_with(&cfg, 1_000_000, 0.2);
+        let r_tcp = result_with(&cfg, 1_000_000, 0.2);
+        let rows = join_phases(&cfg, &r_sim, &r_tcp);
+        let overall = rows.iter().find(|r| r.phase == "overall").unwrap();
+        // 12 iters, minus one entry iter per phase present.
+        let per_phase: usize = rows.iter().filter(|r| r.phase != "overall").map(|r| r.iters).sum();
+        assert_eq!(overall.iters, per_phase);
+        assert!(per_phase < 12 && per_phase >= 12 - 3);
+        for r in &rows {
+            assert!((r.modeled_ms - 100.0).abs() < 1e-9, "{:?}", r);
+            assert!((r.measured_ms - 200.0).abs() < 1e-6, "{:?}", r);
+            assert!((r.rel_err - 1.0).abs() < 1e-6, "{:?}", r);
+        }
+    }
+}

@@ -41,6 +41,9 @@
 //!   coordinator's join handshake (DESIGN.md §12);
 //! * [`exp`] — one driver per paper table/figure, each emitting
 //!   `results/*.csv`;
+//! * [`obs`] — observability: pipeline spans + Perfetto traces, the
+//!   JSONL run log, the Prometheus metrics endpoint, leveled logging
+//!   (DESIGN.md §15);
 //! * [`runtime`] — backend dispatch (PJRT or native CPU), manifest,
 //!   tensors;
 //! * [`config`], [`data`], [`model`], [`info`], [`util`] — run
@@ -57,6 +60,7 @@ pub mod info;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod transport;
 pub mod util;

@@ -39,6 +39,7 @@ const FLAGS: &[&str] = &[
     "buckets", "bucket-bytes",
     "heartbeat-ms", "miss-budget", "on-fault", "faults", "resume",
     "ckpt-every", "rejoin-node",
+    "trace-out", "log-json", "metrics-addr", "log-level",
 ];
 
 /// Boolean switches (never consume the next token).
@@ -90,7 +91,14 @@ fn main() -> Result<()> {
             let tcp = cfg.transport == TransportKind::Tcp;
             let iters = cfg.steps.max(1) as f64;
             let r = if tcp {
-                remote::train_with_opts(&engine, cfg, &remote_opts(&args))?
+                // The opts-carrying TCP path bypasses `coordinator::train`,
+                // so it owns the telemetry lifecycle itself (the metrics
+                // server must outlive the run; the trace merge happens
+                // after the workers' part files are flushed).
+                let _metrics = lgc::coordinator::telemetry_install(&cfg)?;
+                let result = remote::train_with_opts(&engine, cfg.clone(), &remote_opts(&args));
+                lgc::coordinator::telemetry_finish(&cfg, result.is_ok())?;
+                result?
             } else {
                 lgc::coordinator::train(&engine, cfg)?
             };
@@ -152,7 +160,10 @@ fn main() -> Result<()> {
             cfg.transport = TransportKind::Tcp;
             let mut opts = remote_opts(&args);
             opts.spawn_workers = false;
-            let r = remote::train_with_opts(&engine, cfg, &opts)?;
+            let _metrics = lgc::coordinator::telemetry_install(&cfg)?;
+            let result = remote::train_with_opts(&engine, cfg.clone(), &opts);
+            lgc::coordinator::telemetry_finish(&cfg, result.is_ok())?;
+            let r = result?;
             println!("final eval: loss {:.4}, acc {:.4}", r.final_eval.0, r.final_eval.1);
             print_fault_events(&r);
             println!("{}", r.ledger.summary());
@@ -353,6 +364,19 @@ fn run_exp(engine: &Engine, id: &str, steps: usize, args: &Args) -> Result<()> {
         "fig14-ae" => {
             exp::fig14_ae(engine, steps)?;
         }
+        "validate-net" => {
+            // Measured (tcp loopback) vs modeled (fabric) per phase;
+            // keep the default step budget tcp-sized.
+            let method = match args.opt_str("method") {
+                Some(s) => lgc::config::Method::parse(&s)
+                    .ok_or_else(|| anyhow::anyhow!("bad --method {s:?}"))?,
+                None => lgc::config::Method::LgcRar,
+            };
+            let model = args.str("model", "resnet_mini");
+            let nodes = args.usize("nodes", 4);
+            let steps = if args.has("steps") { steps } else { steps.min(60) };
+            exp::validate_net::validate_net(engine, &model, method, nodes, steps)?;
+        }
         "ablation" => {
             exp::ablation::run_all(engine, steps)?;
         }
@@ -408,10 +432,13 @@ SUBCOMMANDS:
                [--session ID --retries N --backoff-ms N --net-timeout-ms N
                --rejoin-node N (re-enter a live elastic run as node N)]
   exp          <id> or --id ID, one of table4|table5|table6|fig3|fig10|fig11|
-               fig12|fig13|fig14|fig14-ae|speedup|ablation|all  [--steps N]
+               fig12|fig13|fig14|fig14-ae|speedup|ablation|validate-net|all
+               [--steps N]
                fig14 = modeled speedup-vs-bandwidth sweep (results/
                fig14_speedup.csv + overlap-adjusted fig14_overlap.csv);
-               fig14-ae = AE convergence traces
+               fig14-ae = AE convergence traces;
+               validate-net = same config under sim and tcp, per-phase
+               modeled-vs-measured table (results/net_validation.csv)
   info-plane   --model M [--steps N --bins B]
   latency      --model M
   profile      --model M --method X [--steps N]
@@ -459,6 +486,27 @@ PIPELINED EXECUTION (train, serve, worker; DESIGN.md §13):
                      then exchange everything.  Default (overlap on) streams
                      bucket i's exchange while bucket i+1 encodes; training
                      curves and final model state are identical either way
+
+OBSERVABILITY (train, serve; DESIGN.md §15):
+  --trace-out PATH     write a Chrome/Perfetto trace of every pipeline
+                       stage (grad, EF, top-k, AE encode/decode, index
+                       coding, DEFLATE, exchange, update) per node and
+                       iteration; load at ui.perfetto.dev.  TCP workers
+                       inherit the flag and flush PATH.nodeN.part files
+                       the coordinator merges
+  --log-json PATH      structured JSONL run log: run manifest (config
+                       fingerprint, git describe, backend), one record
+                       per iteration (loss, bytes by kind, compression
+                       ratio, stage durations), every fault event
+  --metrics-addr ADDR  serve live Prometheus text-format metrics on ADDR
+                       while training (iterations, per-worker bytes,
+                       heartbeat age, stalls/deaths/rejoins, decode
+                       errors, per-stage latency histograms)
+  --log-level L        quiet|info|debug (default info preserves today's
+                       stderr output byte for byte; workers inherit the
+                       level through the config blob)
+  Telemetry off = zero overhead; on, the training math is unchanged
+  (curves, ledgers, checkpoints stay bit-identical — tests enforce it).
 
 NETWORK FABRIC (train, exp fig14, exp speedup; DESIGN.md §11):
   --bandwidth B      modeled link bandwidth: 1gbps, 50mbps, or Mbit/s number

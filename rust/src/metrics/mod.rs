@@ -333,6 +333,10 @@ impl Csv {
     }
 
     /// Create parent directories and write the buffered file out.
+    ///
+    /// The returned `io::Result` is the only signal the CSV made it to
+    /// disk — every experiment driver must propagate it (`csv.finish()?`),
+    /// never drop it, or a full disk silently produces empty results.
     pub fn finish(self) -> std::io::Result<()> {
         if let Some(dir) = std::path::Path::new(&self.path).parent() {
             std::fs::create_dir_all(dir)?;

@@ -1,0 +1,111 @@
+//! Structured JSONL run log (DESIGN.md §15.3).
+//!
+//! `--log-json PATH` writes one JSON object per line: a `run_start`
+//! manifest (config fingerprint, git describe, backend, run shape),
+//! one `iteration` record per training step (loss, bytes by
+//! [`crate::metrics::Kind`], per-stage wall-clock), one `fault` record
+//! per fault/liveness event (the structured twin of the `FAULT ...`
+//! stderr lines), and a closing `run_end` summary.  `exp` drivers and
+//! CI consume this instead of scraping stdout.
+//!
+//! Records are flushed line-by-line so a crashed run still leaves a
+//! readable prefix; every line parses with [`crate::util::json::Json`].
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::process::Command;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// An open JSONL run log.  Dropping it flushes; [`RunLog::finish`]
+/// flushes with an explicit error path.
+pub struct RunLog {
+    w: BufWriter<File>,
+    path: String,
+}
+
+/// Convenience: a `(key, value)` list turned into a JSON object.
+pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+impl RunLog {
+    /// Create (truncate) the log at `path`.
+    pub fn create(path: &str) -> Result<RunLog> {
+        let f = File::create(path).with_context(|| format!("creating run log {path:?}"))?;
+        Ok(RunLog { w: BufWriter::new(f), path: path.to_string() })
+    }
+
+    /// Append one record: `fields` plus an `event` tag, as a single
+    /// JSON line, flushed immediately.
+    pub fn record(&mut self, event: &str, fields: Vec<(&str, Json)>) -> Result<()> {
+        let mut m: BTreeMap<String, Json> =
+            fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        m.insert("event".to_string(), Json::Str(event.to_string()));
+        writeln!(self.w, "{}", Json::Obj(m))
+            .and_then(|()| self.w.flush())
+            .with_context(|| format!("writing run log {:?}", self.path))
+    }
+
+    /// Flush and close, surfacing any buffered I/O error loudly.
+    pub fn finish(mut self) -> Result<()> {
+        self.w.flush().with_context(|| format!("flushing run log {:?}", self.path))
+    }
+}
+
+/// `git describe --always --dirty` of the working tree, or `"unknown"`
+/// outside a git checkout — recorded in the run manifest so a results
+/// file can always be traced back to the code that produced it.
+pub fn git_describe() -> String {
+    Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_parse_line_by_line() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("lgc_runlog_test_{}.jsonl", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let mut log = RunLog::create(&path_s).unwrap();
+        log.record(
+            "run_start",
+            vec![
+                ("method", Json::Str("lgc_ps".into())),
+                ("nodes", Json::Num(4.0)),
+                ("note", Json::Str("quotes \" and \n newlines".into())),
+            ],
+        )
+        .unwrap();
+        log.record("iteration", vec![("iter", Json::Num(0.0)), ("loss", Json::Num(2.5))])
+            .unwrap();
+        log.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.str_of("event"), "run_start");
+        assert_eq!(first.usize_of("nodes"), 4);
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.str_of("event"), "iteration");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn git_describe_never_panics() {
+        let d = git_describe();
+        assert!(!d.is_empty());
+    }
+}

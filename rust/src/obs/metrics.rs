@@ -1,0 +1,349 @@
+//! Live coordinator metrics: a Prometheus text-format endpoint
+//! (DESIGN.md §15.5).
+//!
+//! `lgc serve --metrics-addr HOST:PORT` (and `lgc train --transport
+//! tcp --metrics-addr ...`) answers `GET /metrics` scrapes from a tiny
+//! single-threaded HTTP responder on the coordinator.  The registry is
+//! a fixed set of atomics the training loop bumps — no locking on the
+//! hot path, no allocation after startup — rendered on demand in the
+//! Prometheus exposition format (version 0.0.4).
+//!
+//! Exposed series:
+//! * `lgc_iterations_total` — completed training iterations;
+//! * `lgc_node_bytes_up_total{node}` — post-compression uplink bytes
+//!   per worker (ledger-accounted, so identical to the sim's);
+//! * `lgc_heartbeat_age_seconds{node}` — seconds since the node last
+//!   made progress;
+//! * `lgc_stalls_total`, `lgc_deaths_total`, `lgc_rejoins_total`,
+//!   `lgc_decode_errors_total` — fault/liveness counters;
+//! * `lgc_stage_seconds{stage}` — per-stage latency histograms (grad /
+//!   exchange / update) with fixed log2 buckets from 1 µs to ~67 s.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// Histogram bucket count: upper bounds 2^0 .. 2^24 microseconds plus
+/// the implicit `+Inf` bucket.
+const HIST_BUCKETS: usize = 25;
+
+/// The stages timed into `lgc_stage_seconds`.
+const STAGES: [&str; 3] = ["grad", "exchange", "update"];
+
+/// One log2-bucketed latency histogram (microsecond samples).
+struct Histogram {
+    /// `counts[i]` counts samples with `value_us <= 2^i`; the last
+    /// slot is `+Inf`.
+    counts: [AtomicU64; HIST_BUCKETS],
+    sum_us: AtomicU64,
+    total: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    fn observe_us(&self, us: u64) {
+        let slot = if us == 0 {
+            0
+        } else {
+            ((64 - us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        };
+        self.counts[slot].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn render(&self, name: &str, stage: &str, out: &mut String) {
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate().take(HIST_BUCKETS - 1) {
+            cum += c.load(Ordering::Relaxed);
+            let le = (1u64 << i) as f64 / 1e6;
+            out.push_str(&format!("{name}_bucket{{stage=\"{stage}\",le=\"{le}\"}} {cum}\n"));
+        }
+        cum += self.counts[HIST_BUCKETS - 1].load(Ordering::Relaxed);
+        out.push_str(&format!("{name}_bucket{{stage=\"{stage}\",le=\"+Inf\"}} {cum}\n"));
+        let sum = self.sum_us.load(Ordering::Relaxed) as f64 / 1e6;
+        out.push_str(&format!("{name}_sum{{stage=\"{stage}\"}} {sum}\n"));
+        out.push_str(&format!(
+            "{name}_count{{stage=\"{stage}\"}} {}\n",
+            self.total.load(Ordering::Relaxed)
+        ));
+    }
+}
+
+/// The coordinator's metric registry — a fixed set of atomics sized at
+/// install time for the run's node count.
+pub struct Registry {
+    epoch: Instant,
+    iterations: AtomicU64,
+    bytes_up: Vec<AtomicU64>,
+    /// Microseconds-since-epoch of each node's last observed progress.
+    last_progress_us: Vec<AtomicU64>,
+    stalls: AtomicU64,
+    deaths: AtomicU64,
+    rejoins: AtomicU64,
+    decode_errors: AtomicU64,
+    stage_hist: [Histogram; 3],
+}
+
+impl Registry {
+    fn new(nodes: usize) -> Registry {
+        Registry {
+            epoch: Instant::now(),
+            iterations: AtomicU64::new(0),
+            bytes_up: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
+            last_progress_us: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
+            stalls: AtomicU64::new(0),
+            deaths: AtomicU64::new(0),
+            rejoins: AtomicU64::new(0),
+            decode_errors: AtomicU64::new(0),
+            stage_hist: [Histogram::new(), Histogram::new(), Histogram::new()],
+        }
+    }
+
+    /// Render the whole registry in Prometheus text exposition format.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("# HELP lgc_iterations_total Completed training iterations.\n");
+        out.push_str("# TYPE lgc_iterations_total counter\n");
+        out.push_str(&format!(
+            "lgc_iterations_total {}\n",
+            self.iterations.load(Ordering::Relaxed)
+        ));
+        out.push_str("# HELP lgc_node_bytes_up_total Ledger-accounted uplink bytes per node.\n");
+        out.push_str("# TYPE lgc_node_bytes_up_total counter\n");
+        for (n, b) in self.bytes_up.iter().enumerate() {
+            out.push_str(&format!(
+                "lgc_node_bytes_up_total{{node=\"{n}\"}} {}\n",
+                b.load(Ordering::Relaxed)
+            ));
+        }
+        out.push_str("# HELP lgc_heartbeat_age_seconds Seconds since the node last progressed.\n");
+        out.push_str("# TYPE lgc_heartbeat_age_seconds gauge\n");
+        let now_us = self.epoch.elapsed().as_micros() as u64;
+        for (n, t) in self.last_progress_us.iter().enumerate() {
+            let age = now_us.saturating_sub(t.load(Ordering::Relaxed)) as f64 / 1e6;
+            out.push_str(&format!("lgc_heartbeat_age_seconds{{node=\"{n}\"}} {age}\n"));
+        }
+        for (name, help, v) in [
+            ("lgc_stalls_total", "Planned stall faults executed.", &self.stalls),
+            ("lgc_deaths_total", "Workers removed from aggregation.", &self.deaths),
+            ("lgc_rejoins_total", "Workers re-admitted via rejoin.", &self.rejoins),
+            ("lgc_decode_errors_total", "Frame decode/receive errors.", &self.decode_errors),
+        ] {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {}\n", v.load(Ordering::Relaxed)));
+        }
+        out.push_str("# HELP lgc_stage_seconds Per-stage wall-clock latency.\n");
+        out.push_str("# TYPE lgc_stage_seconds histogram\n");
+        for (stage, h) in STAGES.iter().zip(&self.stage_hist) {
+            h.render("lgc_stage_seconds", stage, &mut out);
+        }
+        out
+    }
+}
+
+fn registry_slot() -> &'static Mutex<Option<Arc<Registry>>> {
+    static SLOT: OnceLock<Mutex<Option<Arc<Registry>>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Install a fresh registry for a run with `nodes` workers and return
+/// it.  The bump helpers below are no-ops until this is called.
+pub fn install(nodes: usize) -> Arc<Registry> {
+    let reg = Arc::new(Registry::new(nodes));
+    *registry_slot().lock().unwrap() = Some(reg.clone());
+    reg
+}
+
+/// The live registry, if one is installed.
+pub fn current() -> Option<Arc<Registry>> {
+    registry_slot().lock().unwrap().clone()
+}
+
+fn with<F: FnOnce(&Registry)>(f: F) {
+    if let Some(r) = current() {
+        f(&r);
+    }
+}
+
+/// Count one completed iteration.
+pub fn inc_iterations() {
+    with(|r| {
+        r.iterations.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Add ledger-accounted uplink bytes for `node`.
+pub fn add_bytes_up(node: usize, bytes: u64) {
+    with(|r| {
+        if let Some(b) = r.bytes_up.get(node) {
+            b.fetch_add(bytes, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Refresh `node`'s last-progress clock (heartbeat age gauge).
+pub fn mark_progress(node: usize) {
+    with(|r| {
+        if let Some(t) = r.last_progress_us.get(node) {
+            t.store(r.epoch.elapsed().as_micros() as u64, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Count one planned stall fault.
+pub fn inc_stalls() {
+    with(|r| {
+        r.stalls.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Count one worker death (removal from aggregation).
+pub fn inc_deaths() {
+    with(|r| {
+        r.deaths.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Count one successful rejoin.
+pub fn inc_rejoins() {
+    with(|r| {
+        r.rejoins.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Count one frame decode/receive error.
+pub fn inc_decode_errors() {
+    with(|r| {
+        r.decode_errors.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Observe a per-stage duration (`stage` ∈ grad / exchange / update).
+pub fn observe_stage(stage: &str, dur: std::time::Duration) {
+    with(|r| {
+        if let Some(i) = STAGES.iter().position(|s| *s == stage) {
+            r.stage_hist[i].observe_us(dur.as_micros() as u64);
+        }
+    });
+}
+
+/// Handle to the scrape responder thread; the bound address is
+/// available for tests and logs.  The thread is detached and serves
+/// until process exit.
+pub struct MetricsServer {
+    addr: String,
+}
+
+impl MetricsServer {
+    /// The address the responder actually bound (port resolved).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:9464`; port 0 picks an ephemeral one)
+/// and serve Prometheus scrapes of the installed registry from a
+/// detached thread.  One request per connection, any path answered.
+pub fn serve(addr: &str) -> Result<MetricsServer> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding --metrics-addr {addr:?}"))?;
+    let bound = listener.local_addr().context("resolving metrics listener address")?;
+    std::thread::Builder::new()
+        .name("lgc-metrics".to_string())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut conn) = conn else { continue };
+                let _ = conn.set_read_timeout(Some(std::time::Duration::from_secs(2)));
+                // Drain the request line + headers (best effort; we
+                // answer every path identically).
+                let mut buf = [0u8; 1024];
+                let mut seen = Vec::new();
+                while !seen.windows(4).any(|w| w == b"\r\n\r\n") {
+                    match conn.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => {
+                            seen.extend_from_slice(&buf[..n]);
+                            if seen.len() > 16 * 1024 {
+                                break;
+                            }
+                        }
+                    }
+                }
+                let body = match current() {
+                    Some(r) => r.render(),
+                    None => String::from("# no registry installed\n"),
+                };
+                let resp = format!(
+                    "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; \
+                     charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = conn.write_all(resp.as_bytes());
+            }
+        })
+        .context("spawning metrics responder thread")?;
+    Ok(MetricsServer { addr: bound.to_string() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exposition_text_is_well_formed() {
+        let reg = Registry::new(2);
+        reg.iterations.fetch_add(3, Ordering::Relaxed);
+        reg.bytes_up[1].fetch_add(1024, Ordering::Relaxed);
+        reg.stage_hist[0].observe_us(100);
+        reg.stage_hist[0].observe_us(1_000_000);
+        let text = reg.render();
+        assert!(text.contains("lgc_iterations_total 3"));
+        assert!(text.contains("lgc_node_bytes_up_total{node=\"1\"} 1024"));
+        assert!(text.contains("le=\"+Inf\"} 2"));
+        assert!(text.contains("lgc_stage_seconds_count{stage=\"grad\"} 2"));
+        // Every non-comment line is `name{labels} value` or `name value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, value) = line.rsplit_once(' ').expect("metric line has a value");
+            value.parse::<f64>().expect("metric value parses");
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let h = Histogram::new();
+        for us in [0, 1, 2, 3, 1 << 20, u64::MAX] {
+            h.observe_us(us);
+        }
+        let mut out = String::new();
+        h.render("x", "s", &mut out);
+        let infs: Vec<&str> = out.lines().filter(|l| l.contains("+Inf")).collect();
+        assert_eq!(infs.len(), 1);
+        assert!(infs[0].ends_with(" 6"));
+    }
+
+    #[test]
+    fn scrape_roundtrip_over_tcp() {
+        install(1);
+        inc_iterations();
+        let srv = serve("127.0.0.1:0").unwrap();
+        let mut conn = std::net::TcpStream::connect(srv.addr()).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"));
+        assert!(resp.contains("lgc_iterations_total"));
+    }
+}

@@ -1,0 +1,31 @@
+//! Observability: spans, traces, structured logs, live metrics
+//! (DESIGN.md §15).
+//!
+//! A zero-dependency telemetry subsystem threaded through the training
+//! stack, with a hard contract the test suite enforces in both
+//! directions:
+//!
+//! * **telemetry off ⇒ nothing changes** — every [`trace::span`] call
+//!   compiled into the pipeline is a single relaxed atomic load when no
+//!   recorder is installed (no clock read, no allocation), and results
+//!   are bit-identical to a build that never heard of telemetry;
+//! * **telemetry on ⇒ only observation is added** — spans, JSONL
+//!   records, and metric bumps never feed back into training math, so
+//!   curves, ledgers, and checkpoints stay byte-identical with every
+//!   flag enabled.
+//!
+//! The four front-ends:
+//! * [`trace`] — RAII pipeline spans recorded into per-node lanes,
+//!   merged deterministically and written as Chrome/Perfetto
+//!   `trace_event` JSON (`--trace-out`);
+//! * [`jsonl`] — the structured run log (`--log-json`): manifest,
+//!   per-iteration records, fault/liveness events;
+//! * [`metrics`] — the coordinator's Prometheus text-format scrape
+//!   endpoint (`--metrics-addr`);
+//! * [`log`] — leveled stderr diagnostics (`--log-level`), default
+//!   byte-identical to the historical output.
+
+pub mod jsonl;
+pub mod log;
+pub mod metrics;
+pub mod trace;

@@ -586,10 +586,14 @@ impl<'a> Reader<'a> {
 /// `overlap`) so workers derive the same [`BucketPlan`] as the
 /// coordinator.  v3 appended the fault-tolerance knobs
 /// (`heartbeat_ms`, `miss_budget`, `on_fault`) so workers run the
-/// heartbeat pump and know whether to ship `StateSync` blobs.
+/// heartbeat pump and know whether to ship `StateSync` blobs.  v4
+/// appended the telemetry knobs that are observable from the worker
+/// side (`trace_out` — workers write span part files — and
+/// `log_level`); the other telemetry knobs (`log_json`,
+/// `metrics_addr`) stay coordinator-local.
 ///
 /// [`BucketPlan`]: crate::coordinator::bucket::BucketPlan
-const CFG_VERSION: u8 = 3;
+const CFG_VERSION: u8 = 4;
 
 fn method_tag(m: Method) -> u8 {
     match m {
@@ -652,14 +656,34 @@ fn on_fault_from_tag(t: u8) -> Result<OnFault> {
     })
 }
 
+fn log_level_tag(l: crate::obs::log::Level) -> u8 {
+    match l {
+        crate::obs::log::Level::Quiet => 0,
+        crate::obs::log::Level::Info => 1,
+        crate::obs::log::Level::Debug => 2,
+    }
+}
+
+fn log_level_from_tag(t: u8) -> Result<crate::obs::log::Level> {
+    Ok(match t {
+        0 => crate::obs::log::Level::Quiet,
+        1 => crate::obs::log::Level::Info,
+        2 => crate::obs::log::Level::Debug,
+        t => bail!("unknown log-level tag {t}"),
+    })
+}
+
 /// Serialize every field a worker needs to replicate the run.  The
 /// coordinator-local knobs (`transport`, `checkpoint`, `ckpt_every`,
-/// `faults`, `resume`) are deliberately omitted: the receiving side
-/// gets `Sim`/`None`/`0` so a worker can never recursively self-spawn,
-/// write the coordinator's checkpoint path, or execute the fault plan
-/// a second time.  `heartbeat_ms`, `miss_budget` and `on_fault` DO
+/// `faults`, `resume`, `log_json`, `metrics_addr`) are deliberately
+/// omitted: the receiving side gets `Sim`/`None`/`0` so a worker can
+/// never recursively self-spawn, write the coordinator's checkpoint
+/// path, serve a second metrics endpoint, or execute the fault plan a
+/// second time.  `heartbeat_ms`, `miss_budget` and `on_fault` DO
 /// cross the wire — workers need them to run the heartbeat pump and to
-/// know whether to ship `StateSync` blobs.
+/// know whether to ship `StateSync` blobs — and so do `trace_out`
+/// (workers write their span lanes to `{trace_out}.node{N}.part` for
+/// the coordinator to merge) and `log_level`.
 pub fn encode_cfg(w: &mut Vec<u8>, c: &TrainConfig) {
     w.push(CFG_VERSION);
     put_str(w, &c.model);
@@ -698,6 +722,14 @@ pub fn encode_cfg(w: &mut Vec<u8>, c: &TrainConfig) {
     put_u64(w, c.heartbeat_ms);
     put_u32(w, c.miss_budget);
     w.push(on_fault_tag(c.on_fault));
+    match &c.trace_out {
+        Some(p) => {
+            w.push(1);
+            put_str(w, p);
+        }
+        None => w.push(0),
+    }
+    w.push(log_level_tag(c.log_level));
 }
 
 fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
@@ -741,6 +773,8 @@ fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
     let heartbeat_ms = r.u64()?;
     let miss_budget = r.u32()?;
     let on_fault = on_fault_from_tag(r.u8()?)?;
+    let trace_out = if r.bool()? { Some(r.string()?) } else { None };
+    let log_level = log_level_from_tag(r.u8()?)?;
     Ok(TrainConfig {
         model,
         method,
@@ -779,6 +813,10 @@ fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
         faults: None,
         resume: None,
         ckpt_every: 0,
+        trace_out,
+        log_json: None,
+        metrics_addr: None,
+        log_level,
     })
 }
 
@@ -925,6 +963,10 @@ mod tests {
             faults: Some("iter=3:kill=0".into()), // intentionally not carried
             resume: Some("y.ckpt".into()),        // intentionally not carried
             ckpt_every: 7,                        // intentionally not carried
+            trace_out: Some("run.trace.json".into()),
+            log_json: Some("run.jsonl".into()), // intentionally not carried
+            metrics_addr: Some("127.0.0.1:9898".into()), // intentionally not carried
+            log_level: crate::obs::log::Level::Debug,
             ..Default::default()
         };
         let mut w = Vec::new();
@@ -947,11 +989,15 @@ mod tests {
         assert_eq!(back.heartbeat_ms, 250);
         assert_eq!(back.miss_budget, 5);
         assert_eq!(back.on_fault, OnFault::WaitRejoin);
+        assert_eq!(back.trace_out.as_deref(), Some("run.trace.json"));
+        assert_eq!(back.log_level, crate::obs::log::Level::Debug);
         // Coordinator-local knobs never cross the wire.
         assert_eq!(back.transport, TransportKind::Sim);
         assert_eq!(back.checkpoint, None);
         assert_eq!(back.faults, None);
         assert_eq!(back.resume, None);
         assert_eq!(back.ckpt_every, 0);
+        assert_eq!(back.log_json, None);
+        assert_eq!(back.metrics_addr, None);
     }
 }

@@ -161,7 +161,7 @@ pub fn accept_workers(
             Err(e) => {
                 // A connection that dies mid-handshake doesn't kill the
                 // join phase; the deadline still bounds total time.
-                eprintln!("[lgc serve] join attempt failed: {e:#}");
+                crate::log_info!("[lgc serve] join attempt failed: {e:#}");
             }
         }
     }
@@ -226,7 +226,7 @@ pub fn accept_rejoin(
                 });
             }
             Err(e) => {
-                eprintln!("[lgc serve] rejoin attempt failed: {e:#}");
+                crate::log_info!("[lgc serve] rejoin attempt failed: {e:#}");
             }
         }
     }

@@ -721,6 +721,126 @@ fn prop_dense_bucket_slices_reassemble_exactly() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Observability (DESIGN.md §15): checkpoint and trace serializers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ledger_checkpoint_roundtrips_after_shard_merges() {
+    // Ledger::to_bytes/from_bytes over randomized histories: direct
+    // records, one-off payloads, and sharded per-node records merged in,
+    // across random phase switches and iteration boundaries.  The
+    // restored ledger must compare equal (PartialEq covers every map and
+    // the per-iteration series).
+    use lgc::util::ser::Reader;
+    const KINDS: [Kind; 5] =
+        [Kind::Dense, Kind::Values, Kind::Indices, Kind::Latent, Kind::AeWeights];
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x13D6E2 + case);
+        let nodes = 1 + rng.below(9);
+        let mut ledger = Ledger::new();
+        let rounds = 1 + rng.below(12);
+        for _ in 0..rounds {
+            ledger.set_phase(1 + rng.below(3) as u8);
+            // Direct records on the coordinator path.
+            for _ in 0..rng.below(6) {
+                let kind = KINDS[rng.below(KINDS.len())];
+                let node = rng.below(nodes);
+                if rng.below(8) == 0 {
+                    ledger.record_oneoff(node, kind, rng.below(100_000));
+                } else {
+                    ledger.record(node, kind, rng.below(100_000));
+                }
+            }
+            // Sharded records merged like the parallel exchange does.
+            let mut shards = NodeLedger::for_nodes(nodes);
+            for shard in shards.iter_mut() {
+                for _ in 0..rng.below(4) {
+                    let kind = KINDS[rng.below(KINDS.len())];
+                    if rng.below(8) == 0 {
+                        shard.record_oneoff(kind, rng.below(100_000));
+                    } else {
+                        shard.record(kind, rng.below(100_000));
+                    }
+                }
+            }
+            ledger.merge_shards(&mut shards);
+            // Snapshots happen at iteration boundaries (cur_iter == 0).
+            ledger.end_iteration();
+        }
+        let bytes = ledger.to_bytes();
+        let back = Ledger::from_bytes(&mut Reader::new(&bytes))
+            .unwrap_or_else(|e| panic!("case {case}: from_bytes failed: {e:#}"));
+        assert_eq!(back, ledger, "case {case} nodes={nodes} rounds={rounds}");
+        // Serialization is a pure function of the ledger state.
+        assert_eq!(back.to_bytes(), bytes, "case {case}: re-serialize differs");
+    }
+}
+
+/// Hostile label generator: quotes, backslashes, every C0 control char,
+/// DEL, multi-byte UTF-8 (including astral-plane and bidi controls),
+/// NUL, and long runs — everything a part-file line or Chrome trace
+/// string field could choke on.
+fn hostile_label(rng: &mut Rng) -> String {
+    const POOL: &[&str] = &[
+        "\"", "\\", "\\\"", "\n", "\r", "\t", "\u{0}", "\u{1}", "\u{8}",
+        "\u{b}", "\u{c}", "\u{1f}", "\u{7f}", "ü", "漢", "🦀", "\u{202e}",
+        "\u{feff}", "}", "{", "[", "]", ",", ":", "grad", " ", "é\u{301}",
+    ];
+    let n = rng.below(40);
+    let mut s = String::new();
+    for _ in 0..n {
+        s.push_str(POOL[rng.below(POOL.len())]);
+    }
+    s
+}
+
+#[test]
+fn prop_trace_serializers_never_panic_and_part_lines_roundtrip() {
+    use lgc::obs::trace::{self, SpanEvent};
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x7AACE + case);
+        let n = rng.below(60);
+        let events: Vec<SpanEvent> = (0..n)
+            .map(|_| SpanEvent {
+                lane: if rng.below(4) == 0 { trace::COORD_LANE } else { rng.below(16) },
+                stage: hostile_label(&mut rng),
+                // Keep numeric fields inside f64's exact-integer range —
+                // the JSON transport is f64, and real timestamps
+                // (microseconds since the epoch) are far below 2^53.
+                iter: rng.below(1 << 40) as u64,
+                bucket: if rng.below(3) == 0 { -1 } else { rng.below(256) as i64 },
+                ts_us: rng.below(1 << 50) as u64,
+                dur_us: rng.below(1 << 40) as u64,
+            })
+            .collect();
+        // Part-file lines: one JSON object per event, exact roundtrip.
+        let lines = trace::part_lines(&events);
+        let parsed: Vec<SpanEvent> = lines
+            .lines()
+            .map(|l| {
+                trace::parse_part_line(l)
+                    .unwrap_or_else(|e| panic!("case {case}: parse failed: {e:#}\n{l}"))
+            })
+            .collect();
+        assert_eq!(parsed, events, "case {case}");
+        // Chrome trace JSON: must serialize without panicking and with
+        // every control character escaped (raw C0 bytes inside a string
+        // field would make the file unloadable).
+        let json = trace::chrome_trace_json(&events);
+        assert!(
+            json.chars().all(|c| c >= ' '),
+            "case {case}: unescaped control character in trace JSON"
+        );
+    }
+    // Arbitrary garbage into the part-line parser: Err, never a panic.
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x7AACF + case);
+        let blob = hostile_label(&mut rng);
+        let _ = lgc::obs::trace::parse_part_line(&blob);
+    }
+}
+
 #[test]
 fn prop_quantizer_error_bounded_by_bucket_norm() {
     use lgc::compress::quantize;

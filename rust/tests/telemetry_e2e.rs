@@ -1,0 +1,200 @@
+//! Telemetry contract (DESIGN.md §15): the observability flags only
+//! *observe* —
+//!
+//! * A run with `--trace-out`, `--log-json`, and `--metrics-addr` set
+//!   produces bit-identical curves, evals, ledgers, AE traces, and net
+//!   reports to the same config with telemetry off.
+//! * The emitted Chrome/Perfetto trace covers every pipeline stage, for
+//!   every node lane, for every iteration (the `grad` span is the
+//!   per-iteration heartbeat of each node).
+//! * The JSONL run log carries the manifest, one record per iteration,
+//!   every fault event, and the end-of-run summary — each line valid
+//!   JSON.
+//!
+//! The span recorder is process-global, so everything trace-related
+//! lives in ONE test; the fault-log test uses only `--log-json`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use lgc::config::{Method, OnFault, TrainConfig};
+use lgc::coordinator::{self, TrainResult};
+use lgc::runtime::Engine;
+use lgc::util::json::Json;
+
+fn engine() -> Engine {
+    Engine::native().expect("native engine always constructs")
+}
+
+/// Small three-phase run that reaches the compressed phase engaged
+/// (`ae_gate = +inf` latches readiness once the loss window fills), so
+/// the AE stages all appear in the trace.
+fn cfg(model: &str, method: Method, nodes: usize) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        method,
+        nodes,
+        steps: 24,
+        warmup_iters: 6,
+        ae_train_iters: 8,
+        eval_every: 6,
+        eval_batches: 2,
+        ae_gate: f32::INFINITY,
+        ..Default::default()
+    }
+}
+
+fn tmp_path(tag: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lgc-telemetry-{}-{tag}", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+fn assert_results_identical(plain: &TrainResult, obs: &TrainResult) {
+    assert_eq!(plain.curve.len(), obs.curve.len(), "curve lengths");
+    for (a, b) in plain.curve.iter().zip(&obs.curve) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "loss at iter {}", a.iter);
+        assert_eq!(a.train_acc.to_bits(), b.train_acc.to_bits(), "acc at iter {}", a.iter);
+    }
+    assert_eq!(plain.evals.len(), obs.evals.len(), "eval counts");
+    for ((i1, l1, a1), (i2, l2, a2)) in plain.evals.iter().zip(&obs.evals) {
+        assert_eq!(i1, i2);
+        assert_eq!(l1.to_bits(), l2.to_bits(), "eval loss at iter {i1}");
+        assert_eq!(a1.to_bits(), a2.to_bits(), "eval acc at iter {i1}");
+    }
+    assert_eq!(plain.final_eval.0.to_bits(), obs.final_eval.0.to_bits(), "final eval loss");
+    assert_eq!(plain.final_eval.1.to_bits(), obs.final_eval.1.to_bits(), "final eval acc");
+    assert_eq!(plain.phase_iters, obs.phase_iters, "phase iteration counts");
+    assert_eq!(plain.ledger, obs.ledger, "byte ledgers");
+    assert_eq!(plain.net, obs.net, "net fabric reports");
+    assert_eq!(plain.ae_losses.len(), obs.ae_losses.len(), "AE loss trace lengths");
+    for (i, ((r1, s1), (r2, s2))) in plain.ae_losses.iter().zip(&obs.ae_losses).enumerate() {
+        assert_eq!(r1.to_bits(), r2.to_bits(), "AE rec loss {i}");
+        assert_eq!(s1.to_bits(), s2.to_bits(), "AE sim loss {i}");
+    }
+}
+
+#[test]
+fn telemetry_run_bit_identical_and_trace_covers_pipeline() {
+    let e = engine();
+    let nodes = 4;
+    let steps = 24;
+    let plain = coordinator::train(&e, cfg("mlp_mini", Method::LgcRar, nodes))
+        .expect("plain run");
+
+    let trace_path = tmp_path("rar.trace.json");
+    let jsonl_path = tmp_path("rar.jsonl");
+    let mut c = cfg("mlp_mini", Method::LgcRar, nodes);
+    c.trace_out = Some(trace_path.clone());
+    c.log_json = Some(jsonl_path.clone());
+    // Ephemeral port: proves install + bind + scrape path is live
+    // without fixture ports colliding across CI shards.
+    c.metrics_addr = Some("127.0.0.1:0".into());
+    let obs = coordinator::train(&e, c).expect("telemetry run");
+
+    // Contract 1: telemetry never feeds back into the math.
+    assert_results_identical(&plain, &obs);
+
+    // Contract 2: the trace is one valid JSON document covering every
+    // stage of the engaged LGC-RAR pipeline, every node lane, and every
+    // iteration.
+    let text = std::fs::read_to_string(&trace_path).expect("trace written");
+    let root = Json::parse(&text).expect("trace parses");
+    let events = root
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    let mut stages: BTreeSet<String> = BTreeSet::new();
+    // pid -> iterations that recorded a `grad` span (pid 0 is the
+    // coordinator, pid N+1 is node N).
+    let mut grad_iters: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    for ev in events {
+        if ev.get("ph").and_then(Json::as_str) == Some("M") {
+            continue; // process-name metadata
+        }
+        let name = ev.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+        let pid = ev.get("pid").and_then(Json::as_usize).expect("event pid");
+        let iter = ev.get("args").and_then(|a| a.get("iter")).and_then(Json::as_usize);
+        if name == "grad" {
+            grad_iters.entry(pid).or_default().insert(iter.expect("grad iter tag"));
+        }
+        stages.insert(name);
+    }
+    for stage in [
+        "grad", "ef", "topk", "ae_encode", "ae_decode", "ae_train",
+        "index_code", "deflate", "exchange", "update",
+    ] {
+        assert!(stages.contains(stage), "trace missing stage {stage:?}; got {stages:?}");
+    }
+    for node in 0..nodes {
+        let iters = grad_iters
+            .get(&(node + 1))
+            .unwrap_or_else(|| panic!("no grad spans for node {node}"));
+        assert_eq!(
+            iters.len(),
+            steps,
+            "node {node}: grad spans cover {} of {steps} iterations",
+            iters.len()
+        );
+    }
+    // Exchange/update run on the coordinator lane (pid 0) in sim runs.
+    assert!(
+        events.iter().any(|e| e.get("pid").and_then(Json::as_usize) == Some(0)),
+        "no coordinator-lane events"
+    );
+
+    // Contract 3: the JSONL log is line-delimited valid JSON with the
+    // manifest first, one record per iteration, and the run_end summary.
+    let log = std::fs::read_to_string(&jsonl_path).expect("jsonl written");
+    let recs: Vec<Json> = log
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).expect("every JSONL line parses"))
+        .collect();
+    assert_eq!(recs[0].str_of("event"), "run_start");
+    assert_eq!(recs[0].str_of("method"), "lgc_rar");
+    assert!(recs[0].get("cfg_fingerprint").is_some(), "manifest has cfg fingerprint");
+    let iters: Vec<usize> = recs
+        .iter()
+        .filter(|r| r.str_of("event") == "iteration")
+        .map(|r| r.usize_of("iter"))
+        .collect();
+    assert_eq!(iters, (0..steps).collect::<Vec<_>>(), "one record per iteration");
+    for r in recs.iter().filter(|r| r.str_of("event") == "iteration") {
+        for key in ["phase", "train_loss", "bytes_total", "compression_ratio", "exchange_s"] {
+            assert!(r.get(key).is_some(), "iteration record missing {key:?}");
+        }
+    }
+    assert_eq!(recs.last().unwrap().str_of("event"), "run_end");
+
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(&jsonl_path);
+}
+
+#[test]
+fn jsonl_captures_every_fault_event() {
+    let e = engine();
+    let jsonl_path = tmp_path("faults.jsonl");
+    let mut c = cfg("mlp_mini", Method::SparseGd, 4);
+    c.log_json = Some(jsonl_path.clone());
+    c.faults = Some("iter=8:stall=2:50ms;iter=10:kill=1".into());
+    c.on_fault = OnFault::Continue;
+    let r = coordinator::train(&e, c).expect("faulty run completes under continue");
+    assert!(!r.fault_events.is_empty(), "run recorded fault events");
+
+    let log = std::fs::read_to_string(&jsonl_path).expect("jsonl written");
+    let faults: Vec<Json> = log
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).expect("line parses"))
+        .filter(|r| r.str_of("event") == "fault")
+        .collect();
+    // Every event in TrainResult::fault_events has a JSONL record with
+    // the same (iter, kind) — the log is the complete fault history.
+    assert_eq!(faults.len(), r.fault_events.len(), "fault record count");
+    for (rec, ev) in faults.iter().zip(&r.fault_events) {
+        assert_eq!(rec.usize_of("iter"), ev.iter, "fault iter");
+        assert_eq!(rec.str_of("kind"), ev.kind, "fault kind");
+    }
+    let _ = std::fs::remove_file(&jsonl_path);
+}
