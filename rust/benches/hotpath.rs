@@ -4,6 +4,8 @@
 //! isolation so the optimization loop (EXPERIMENTS.md §Perf) can see where
 //! per-iteration time goes:
 //!   top-k select | index coding (fixed-only baseline vs LZ77+dynamic) |
+//!   scalar-vs-SIMD kernel twins (DESIGN.md §16.1) | Golomb vs DEFLATE
+//!   index rate + the auto-picker contract (§16.2) |
 //!   sparsify scalar | ring allreduce | per-node pipeline K=8 sequential
 //!   vs parallel | bucketed per-bucket encode + modeled overlap-on/off
 //!   iteration at 50 Mbit/s (DESIGN.md §13) |
@@ -45,6 +47,10 @@ struct JsonOut {
     entries: Vec<JsonEntry>,
     /// (speedup_median, baseline_bytes_median, new_bytes_median)
     index_encode: Option<(f64, usize, usize)>,
+    /// (avx2_active, per-kernel (name, scalar_median_ns, simd_median_ns))
+    simd: Option<(bool, Vec<(String, f64, f64)>)>,
+    /// (encode_speedup_vs_deflate, golomb/deflate/auto bytes medians)
+    index_golomb: Option<(f64, usize, usize, usize)>,
 }
 
 impl JsonOut {
@@ -62,6 +68,28 @@ impl JsonOut {
             ie.insert("baseline_bytes_median".to_string(), Json::Num(old_b as f64));
             ie.insert("new_bytes_median".to_string(), Json::Num(new_b as f64));
             root.insert("index_encode".to_string(), Json::Obj(ie));
+        }
+        if let Some((avx2, kernels)) = &self.simd {
+            let mut sd = BTreeMap::new();
+            sd.insert("avx2".to_string(), Json::Bool(*avx2));
+            let mut ks = BTreeMap::new();
+            for (name, scalar_ns, simd_ns) in kernels {
+                let mut k = BTreeMap::new();
+                k.insert("scalar_median_ns".to_string(), Json::Num(*scalar_ns));
+                k.insert("simd_median_ns".to_string(), Json::Num(*simd_ns));
+                k.insert("ratio".to_string(), Json::Num(simd_ns / scalar_ns));
+                ks.insert(name.clone(), Json::Obj(k));
+            }
+            sd.insert("kernels".to_string(), Json::Obj(ks));
+            root.insert("simd".to_string(), Json::Obj(sd));
+        }
+        if let Some((speedup, gb, db, ab)) = self.index_golomb {
+            let mut ig = BTreeMap::new();
+            ig.insert("encode_speedup_vs_deflate_median".to_string(), Json::Num(speedup));
+            ig.insert("golomb_bytes_median".to_string(), Json::Num(gb as f64));
+            ig.insert("deflate_bytes_median".to_string(), Json::Num(db as f64));
+            ig.insert("auto_bytes_median".to_string(), Json::Num(ab as f64));
+            root.insert("index_golomb".to_string(), Json::Obj(ig));
         }
         let entries: Vec<Json> = self
             .entries
@@ -201,6 +229,153 @@ fn index_encode_comparison(t: &mut Table, json: &mut JsonOut, smoke: bool) -> (f
         eprintln!("WARNING: new index payloads not smaller ({med_new} >= {med_old})");
     }
     (med_speedup, med_old, med_new)
+}
+
+/// One scalar-vs-auto timing pair for a SIMD-twinned kernel: the same
+/// closure timed under forced-scalar dispatch and under auto dispatch
+/// (AVX2 where the host has it).  Pushes both rows to the table and the
+/// `(name, scalar_median_ns, simd_median_ns)` triple for the JSON `simd`
+/// section.
+fn simd_pair<F: FnMut()>(
+    t: &mut Table,
+    kernels: &mut Vec<(String, f64, f64)>,
+    smoke: bool,
+    name: &str,
+    ms: u64,
+    mut f: F,
+) {
+    use lgc::compress::simd;
+    simd::force_scalar(true);
+    let s = time_budget(budget(smoke, ms), &mut f);
+    simd::force_scalar(false);
+    let a = time_budget(budget(smoke, ms), &mut f);
+    let ratio = a.p50_ns / s.p50_ns;
+    let (m, p) = fmt(&s);
+    t.row(&[format!("{name} scalar"), m, p, "forced-scalar twin".into()]);
+    let (m, p) = fmt(&a);
+    t.row(&[format!("{name} auto"), m, p, format!("{ratio:.2}x vs scalar")]);
+    kernels.push((name.to_string(), s.p50_ns, a.p50_ns));
+}
+
+/// SIMD twins (DESIGN.md §16.1): each vectorized kernel timed through its
+/// public entry point under forced-scalar and auto dispatch.  On AVX2
+/// hosts CI asserts the auto medians stay at or below scalar; elsewhere
+/// both columns time the same scalar twin and the ratio just tracks
+/// measurement noise.
+fn simd_section(t: &mut Table, json: &mut JsonOut, smoke: bool) {
+    use lgc::compress::{f16, quantize, simd};
+
+    let avx2 = simd::using_avx2();
+    let mut rng = Rng::new(0x51D);
+    let n = 262_144usize;
+    let g = rng.normal_vec(n, 1.0);
+    let deflate_data: Vec<u8> = {
+        let half: Vec<u8> = (0..32_768).map(|_| rng.below(256) as u8).collect();
+        let mut d = half.clone();
+        d.extend(&half);
+        d
+    };
+
+    let mut kernels = Vec::new();
+    simd_pair(t, &mut kernels, smoke, "simd topk_scan", 400, || {
+        std::hint::black_box(topk::top_k(&g, 4_096));
+    });
+    let mut qrng = Rng::new(0x51D2);
+    simd_pair(t, &mut kernels, smoke, "simd qsgd", 400, || {
+        std::hint::black_box(quantize::qsgd(&g, 16, 512, &mut qrng));
+    });
+    // f16 values stabilize after the first roundtrip, so reusing one
+    // buffer times the identical workload every iteration.
+    let mut buf = rng.normal_vec(n, 0.01);
+    f16::roundtrip_in_place(&mut buf);
+    simd_pair(t, &mut kernels, smoke, "simd f16_roundtrip", 400, || {
+        f16::roundtrip_in_place(&mut buf);
+        std::hint::black_box(buf.len());
+    });
+    simd_pair(t, &mut kernels, smoke, "simd deflate", 400, || {
+        std::hint::black_box(flate2::compress(&deflate_data, flate2::Compression::new(6)));
+    });
+    simd::force_scalar(false); // leave auto dispatch for the later sections
+
+    println!(
+        "simd: avx2 {}; auto-vs-scalar medians {}",
+        if avx2 { "active" } else { "inactive (both columns run the scalar twin)" },
+        kernels
+            .iter()
+            .map(|(k, s, a)| format!("{k} {:.2}x", a / s))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    json.simd = Some((avx2, kernels));
+}
+
+/// The rate push (DESIGN.md §16.2): Golomb/Rice gap coding vs the legacy
+/// DEFLATE hybrid over the operating-point corpus, plus the auto-picker's
+/// contract — its payload is exactly the smallest candidate at every
+/// point.
+fn index_golomb_section(t: &mut Table, json: &mut JsonOut, smoke: bool) {
+    use lgc::compress::index_coding::IndexCodec;
+
+    let corpus: [(usize, usize); 4] =
+        [(262_144, 4_096), (1_000_000, 1_000), (200_000, 2_000), (65_536, 8_192)];
+    let mut scratch = Scratch::new();
+    let (mut speedups, mut g_bytes, mut d_bytes, mut a_bytes) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for (ci, &(n, k)) in corpus.iter().enumerate() {
+        let mut rng = Rng::new(0x601 + ci as u64);
+        let idx = random_indices(&mut rng, n, k);
+
+        let s_deflate = time_budget(budget(smoke, 300), || {
+            std::hint::black_box(
+                index_coding::encode_with_into(&idx, n, IndexCodec::Deflate, &mut scratch.enc)
+                    .unwrap()
+                    .len(),
+            );
+        });
+        let s_golomb = time_budget(budget(smoke, 300), || {
+            std::hint::black_box(
+                index_coding::encode_with_into(&idx, n, IndexCodec::Golomb, &mut scratch.enc)
+                    .unwrap()
+                    .len(),
+            );
+        });
+        let b_d = index_coding::encode_with(&idx, n, IndexCodec::Deflate).unwrap().len();
+        let b_g = index_coding::encode_with(&idx, n, IndexCodec::Golomb).unwrap().len();
+        let b_bm = index_coding::encode_with(&idx, n, IndexCodec::Bitmap).unwrap().len();
+        let b_a = index_coding::encode_with(&idx, n, IndexCodec::Auto).unwrap().len();
+        assert_eq!(b_a, b_d.min(b_g).min(b_bm), "auto must ship the smallest candidate");
+
+        let speedup = s_deflate.p50_ns / s_golomb.p50_ns;
+        speedups.push(speedup);
+        g_bytes.push(b_g);
+        d_bytes.push(b_d);
+        a_bytes.push(b_a);
+        let (a, b) = fmt(&s_golomb);
+        t.row(&[
+            format!("index encode golomb n={n} k={k}"),
+            a,
+            b,
+            format!("{b_g} B vs deflate {b_d} B (auto {b_a} B), {speedup:.2}x encode"),
+        ]);
+        json.push(&format!("index_golomb_n{n}_k{k}"), &s_golomb, Some(b_g));
+    }
+    let median_f = |v: &mut Vec<f64>| -> f64 {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let median_u = |v: &mut Vec<usize>| -> usize {
+        v.sort_unstable();
+        v[v.len() / 2]
+    };
+    let med_speedup = median_f(&mut speedups);
+    let med_g = median_u(&mut g_bytes);
+    let med_d = median_u(&mut d_bytes);
+    let med_a = median_u(&mut a_bytes);
+    println!(
+        "index-golomb: median bytes deflate {med_d} -> golomb {med_g} (auto {med_a}), \
+         encode {med_speedup:.2}x vs deflate"
+    );
+    json.index_golomb = Some((med_speedup, med_g, med_d, med_a));
 }
 
 /// Telemetry cost on the encode hot path (DESIGN.md §15.1): the same
@@ -614,10 +789,13 @@ fn main() -> anyhow::Result<()> {
         _ => (262_144, 4_096),
     };
 
-    let mut json = JsonOut { smoke, entries: Vec::new(), index_encode: None };
+    let mut json =
+        JsonOut { smoke, entries: Vec::new(), index_encode: None, simd: None, index_golomb: None };
     let mut t = Table::new(&["hot-path op", "mean", "p95", "notes"]);
     pure_sections(&mut t, &mut json, n_mid, mu, smoke);
     json.index_encode = Some(index_encode_comparison(&mut t, &mut json, smoke));
+    simd_section(&mut t, &mut json, smoke);
+    index_golomb_section(&mut t, &mut json, smoke);
     telemetry_overhead(&mut t, &mut json, smoke);
     node_loop_comparison(&mut t, &mut json, 200_000, smoke);
     pipelined_section(&mut t, &mut json, smoke);

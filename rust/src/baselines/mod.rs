@@ -18,6 +18,7 @@
 
 use anyhow::Result;
 
+use crate::compress::index_coding::IndexCodec;
 use crate::compress::{f16, index_coding, quantize, topk, Correction, FeedbackMemory, Scratch};
 use crate::coordinator::bucket::BucketPlan;
 use crate::coordinator::parallel;
@@ -46,6 +47,10 @@ pub struct ExchangeCtx<'a> {
     /// Transmit value payloads as f16 (rate ablation; lossy, the
     /// dequantized values are what the update actually applies).
     pub fp16: bool,
+    /// Index-coding strategy for sparse support sets (`--index-codec`,
+    /// DESIGN.md §16.2) — a pure rate knob: every strategy decodes to the
+    /// same index set regardless.
+    pub codec: IndexCodec,
     /// Coordinator-level RNG (AE sampling etc.); per-node stochastic work
     /// must use per-node streams owned by the strategy, never this.
     pub rng: &'a mut Rng,
@@ -90,9 +95,7 @@ pub fn pack_values(mut values: Vec<f32>, fp16: bool) -> (Vec<f32>, usize) {
 /// applies), element-wise with no allocation; returns the wire bytes.
 pub fn pack_values_in_place(values: &mut [f32], fp16: bool) -> usize {
     if fp16 {
-        for v in values.iter_mut() {
-            *v = f16::f16_bits_to_f32(f16::f32_to_f16_bits(*v));
-        }
+        f16::roundtrip_in_place(values);
         values.len() * 2
     } else {
         values.len() * 4
@@ -250,13 +253,14 @@ pub(crate) fn record_sparse_packet(
     plan: &BucketPlan,
     overlap: bool,
     fp16: bool,
+    codec: IndexCodec,
     shard: &mut NodeLedger,
     sc: &mut Scratch,
 ) -> Result<Vec<u64>> {
     if !overlap {
         let bytes = pack_values_in_place(&mut sc.vals, fp16);
         shard.record(Kind::Values, bytes);
-        let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
+        let coded = index_coding::encode_with_into(&sc.idx, n, codec, &mut sc.enc)?.len();
         shard.record(Kind::Indices, coded);
         return Ok(vec![(bytes + coded) as u64]);
     }
@@ -268,8 +272,13 @@ pub(crate) fn record_sparse_packet(
         shard.record(Kind::Values, bytes);
         sc.idx_local.clear();
         sc.idx_local.extend(sc.idx[lo..hi].iter().map(|&i| i - range.start as u32));
-        let coded =
-            index_coding::encode_into(&sc.idx_local, range.end - range.start, &mut sc.enc)?.len();
+        let coded = index_coding::encode_with_into(
+            &sc.idx_local,
+            range.end - range.start,
+            codec,
+            &mut sc.enc,
+        )?
+        .len();
         shard.record(Kind::Indices, coded);
         per_bucket.push((bytes + coded) as u64);
     }
@@ -317,6 +326,7 @@ pub(crate) fn sparse_ef_exchange(
     grads: &[Vec<f32>],
     alpha: f64,
     fp16: bool,
+    codec: IndexCodec,
     shards: &mut [NodeLedger],
     scratches: &mut [Scratch],
     threads: usize,
@@ -350,7 +360,7 @@ pub(crate) fn sparse_ef_exchange(
                 let _sp = trace::span(trace::Stage::TopK);
                 fb.select_and_clear_bucketed_into(k_sel, plan.ranges(), sc);
             }
-            record_sparse_packet(n, plan, overlap, fp16, shard, sc)
+            record_sparse_packet(n, plan, overlap, fp16, codec, shard, sc)
         },
     ))?;
     let mut mean = vec![0.0f32; n];
@@ -397,6 +407,7 @@ impl MidStrategy for SparseGd {
             grads,
             self.alpha,
             ctx.fp16,
+            ctx.codec,
             &mut *ctx.shards,
             &mut *ctx.scratches,
             ctx.threads,
@@ -454,6 +465,7 @@ impl MidStrategy for Dgc {
             grads,
             a,
             ctx.fp16,
+            ctx.codec,
             &mut *ctx.shards,
             &mut *ctx.scratches,
             ctx.threads,
@@ -533,7 +545,7 @@ impl MidStrategy for ScaleCom {
                 let _sp = trace::span(trace::Stage::TopK);
                 topk::top_k_into(mem, k_sel, &mut sc.mags, &mut sc.idx, &mut sc.vals);
             }
-            let coded = index_coding::encode_into(&sc.idx, n, &mut sc.enc)?.len();
+            let coded = index_coding::encode_with_into(&sc.idx, n, ctx.codec, &mut sc.enc)?.len();
             ctx.ledger.record(leader, Kind::Indices, coded);
             self.support.clear();
             self.support.extend_from_slice(&sc.idx);
@@ -709,6 +721,7 @@ impl MidStrategy for HardThreshold {
         let n = live_width(grads, ctx.alive);
         let k_target = topk::k_of(n, self.alpha);
         let fp16 = ctx.fp16;
+        let codec = ctx.codec;
         let plan = ctx.plan;
         let overlap = ctx.overlap && !plan.is_single();
         let alive = ctx.alive;
@@ -753,7 +766,7 @@ impl MidStrategy for HardThreshold {
                 // The filter scan above emits ascending indices, so the
                 // plan can segment them directly.
                 plan.splits_of(&sc.idx, &mut sc.splits);
-                record_sparse_packet(n, plan, overlap, fp16, shard, sc)
+                record_sparse_packet(n, plan, overlap, fp16, codec, shard, sc)
             },
         ))?;
         let mut mean = vec![0.0f32; n];
@@ -821,6 +834,7 @@ mod tests {
             &grads,
             0.34,
             false,
+            IndexCodec::Deflate,
             &mut shards,
             &mut scratches,
             1,
@@ -864,6 +878,7 @@ mod tests {
                     &grads,
                     0.05,
                     false,
+                    IndexCodec::Deflate,
                     &mut shards,
                     &mut scratches,
                     threads,
@@ -911,8 +926,8 @@ mod tests {
                 let grads: Vec<Vec<f32>> =
                     (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
                 let mean = sparse_ef_exchange(
-                    &mut fbs, &grads, 0.04, false, &mut shards, &mut scratches, 1, &plan,
-                    overlap, &mut net, &[true; 4],
+                    &mut fbs, &grads, 0.04, false, IndexCodec::Deflate, &mut shards,
+                    &mut scratches, 1, &plan, overlap, &mut net, &[true; 4],
                 )
                 .unwrap();
                 crate::coordinator::scheduler::close_iteration(
@@ -996,6 +1011,7 @@ mod tests {
             &grads,
             0.2,
             false,
+            IndexCodec::Deflate,
             &mut shards,
             &mut scratches,
             1,
@@ -1033,8 +1049,8 @@ mod tests {
         for _ in 0..3 {
             let grads: Vec<Vec<f32>> = (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
             sparse_ef_exchange(
-                &mut a.fbs, &grads, 0.1, false, &mut shards, &mut scratches, 1, &plan, false,
-                &mut net, &alive,
+                &mut a.fbs, &grads, 0.1, false, IndexCodec::Deflate, &mut shards,
+                &mut scratches, 1, &plan, false, &mut net, &alive,
             )
             .unwrap();
         }
@@ -1046,16 +1062,16 @@ mod tests {
         assert!(r.is_done());
         let grads: Vec<Vec<f32>> = (0..nodes).map(|_| rng.normal_vec(n, 1.0)).collect();
         let ma = sparse_ef_exchange(
-            &mut a.fbs, &grads, 0.1, false, &mut shards, &mut scratches, 1, &plan, false,
-            &mut net, &alive,
+            &mut a.fbs, &grads, 0.1, false, IndexCodec::Deflate, &mut shards, &mut scratches,
+            1, &plan, false, &mut net, &alive,
         )
         .unwrap();
         let mut shards2 = NodeLedger::for_nodes(nodes);
         let mut scratches2 = Scratch::for_nodes(nodes);
         let mut net2 = NetSim::new(Default::default(), nodes);
         let mb = sparse_ef_exchange(
-            &mut b.fbs, &grads, 0.1, false, &mut shards2, &mut scratches2, 1, &plan, false,
-            &mut net2, &alive,
+            &mut b.fbs, &grads, 0.1, false, IndexCodec::Deflate, &mut shards2, &mut scratches2,
+            1, &plan, false, &mut net2, &alive,
         )
         .unwrap();
         assert_eq!(bits(&ma), bits(&mb));

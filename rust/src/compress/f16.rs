@@ -69,13 +69,17 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
     }
 }
 
+/// Replace every element by its f16 wire round-trip, in place — the
+/// vectorized bulk path (bit-identical scalar twin; DESIGN.md §16.1).
+pub fn roundtrip_in_place(values: &mut [f32]) {
+    super::simd::f16_roundtrip_in_place(values);
+}
+
 /// Round-trip a whole vector through f16 (the wire representation), and
 /// report the payload size.
 pub fn quantize_f16(values: &[f32]) -> (Vec<f32>, usize) {
-    let deq = values
-        .iter()
-        .map(|&x| f16_bits_to_f32(f32_to_f16_bits(x)))
-        .collect();
+    let mut deq = values.to_vec();
+    roundtrip_in_place(&mut deq);
     (deq, values.len() * 2)
 }
 

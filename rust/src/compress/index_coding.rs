@@ -10,10 +10,17 @@
 //! through [`encode`] / [`encode_into`], so ledger totals are measured,
 //! never modeled.
 //!
-//! Hot-path variants ([`encode_into`], [`encode_ordered_into`]) borrow an
-//! [`EncScratch`] arena and allocate nothing in the steady state
-//! (DESIGN.md §6.11); the allocating wrappers delegate to them, so both
-//! paths are byte-identical by construction.
+//! Beyond the historical hybrid, the codec family is selectable per run
+//! ([`IndexCodec`], `--index-codec`): `golomb` Rice-codes the sorted index
+//! gaps with the parameter derived from the measured mean gap (DGC / Lin
+//! et al. budget indices this way; Sattler et al. show Golomb gap coding
+//! is rate-optimal for top-k index streams), and `auto` encodes all three
+//! candidates into scratch and emits the smallest (DESIGN.md §16.2).
+//!
+//! Hot-path variants ([`encode_into`], [`encode_with_into`],
+//! [`encode_ordered_into`]) borrow an [`EncScratch`] arena and allocate
+//! nothing in the steady state (DESIGN.md §6.11); the allocating wrappers
+//! delegate to them, so both paths are byte-identical by construction.
 
 use anyhow::{bail, Result};
 use flate2::Compression;
@@ -23,21 +30,72 @@ use crate::obs::trace;
 
 const MODE_DEFLATE_DELTA: u8 = 0;
 const MODE_BITMAP: u8 = 1;
+const MODE_GOLOMB: u8 = 2;
 
-/// Encode a sorted index set over a universe of size `n`, reusing the
-/// arena's buffers; the returned slice borrows `s.payload`.
-pub fn encode_into<'a>(indices: &[u32], n: usize, s: &'a mut EncScratch) -> Result<&'a [u8]> {
-    // One span per payload (and one nested around the DEFLATE call): a
-    // single relaxed load when tracing is off, so the hot path the bench
-    // smoke job guards stays untouched.
-    let _sp = trace::span(trace::Stage::IndexCode);
+/// Per-layer index-codec strategy (`--index-codec`, DESIGN.md §16.2).
+///
+/// `Deflate` is the historical default: delta + varint + DEFLATE with the
+/// built-in bitmap escape for dense selections — byte-identical to every
+/// release before the codec family existed.  `Bitmap` and `Golomb` force
+/// their single mode; `Auto` encodes all three candidates into scratch
+/// and emits the smallest wire payload (ties break toward the lowest
+/// mode byte: deflate 0, bitmap 1, golomb 2), so its payloads are \<= the
+/// default's at every operating point by construction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum IndexCodec {
+    /// Smallest of the three candidate encodings, per payload.
+    Auto,
+    /// Raw `n`-bit occupancy bitmap, always.
+    Bitmap,
+    /// Delta + varint + DEFLATE with bitmap escape (the historical codec).
+    #[default]
+    Deflate,
+    /// Rice/Golomb coding of the sorted index gaps, always.
+    Golomb,
+}
+
+impl IndexCodec {
+    /// CLI name (`--index-codec` value).
+    pub fn name(self) -> &'static str {
+        match self {
+            IndexCodec::Auto => "auto",
+            IndexCodec::Bitmap => "bitmap",
+            IndexCodec::Deflate => "deflate",
+            IndexCodec::Golomb => "golomb",
+        }
+    }
+
+    /// Parse a CLI name; `None` for unknown strategies.
+    pub fn parse(s: &str) -> Option<IndexCodec> {
+        match s {
+            "auto" => Some(IndexCodec::Auto),
+            "bitmap" => Some(IndexCodec::Bitmap),
+            "deflate" => Some(IndexCodec::Deflate),
+            "golomb" => Some(IndexCodec::Golomb),
+            _ => None,
+        }
+    }
+
+    /// Every strategy, for exhaustive tests and help text.
+    pub fn all() -> [IndexCodec; 4] {
+        [IndexCodec::Auto, IndexCodec::Bitmap, IndexCodec::Deflate, IndexCodec::Golomb]
+    }
+}
+
+/// Reject unsorted/out-of-universe inputs (shared by every encoder).
+fn validate(indices: &[u32], n: usize) -> Result<()> {
     debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices must be sorted unique");
     if let Some(&last) = indices.last() {
         if last as usize >= n {
             bail!("index {last} out of universe {n}");
         }
     }
-    // Candidate A: delta + varint + deflate.
+    Ok(())
+}
+
+/// Build the delta+varint+DEFLATE candidate (`MODE_DEFLATE_DELTA` framing)
+/// into `s.payload`; returns its full wire length.
+fn deflate_candidate(indices: &[u32], s: &mut EncScratch) -> usize {
     s.varints.clear();
     let mut prev = 0u32;
     for (i, &idx) in indices.iter().enumerate() {
@@ -52,7 +110,30 @@ pub fn encode_into<'a>(indices: &[u32], n: usize, s: &'a mut EncScratch) -> Resu
         let _sp = trace::span(trace::Stage::Deflate);
         flate2::compress_into(&s.varints, Compression::default(), &mut s.deflate, &mut s.payload);
     }
-    let deflated_len = s.payload.len() - 5;
+    s.payload.len()
+}
+
+/// Build the `MODE_BITMAP` framing into `out` (replacing its contents).
+fn bitmap_into(indices: &[u32], n: usize, out: &mut Vec<u8>) {
+    let bitmap_len = n.div_ceil(8);
+    out.clear();
+    out.resize(1 + bitmap_len, 0);
+    out[0] = MODE_BITMAP;
+    for &i in indices {
+        out[1 + (i as usize) / 8] |= 1 << (i % 8);
+    }
+}
+
+/// Encode a sorted index set over a universe of size `n`, reusing the
+/// arena's buffers; the returned slice borrows `s.payload`.
+pub fn encode_into<'a>(indices: &[u32], n: usize, s: &'a mut EncScratch) -> Result<&'a [u8]> {
+    // One span per payload (and one nested around the DEFLATE call): a
+    // single relaxed load when tracing is off, so the hot path the bench
+    // smoke job guards stays untouched.
+    let _sp = trace::span(trace::Stage::IndexCode);
+    validate(indices, n)?;
+    // Candidate A: delta + varint + deflate.
+    let deflated_len = deflate_candidate(indices, s) - 5;
 
     // Candidate B: raw bitmap (wins for dense selections).  Compare full
     // wire sizes: deflate mode carries a 5-byte header, bitmap 1 byte.
@@ -62,13 +143,59 @@ pub fn encode_into<'a>(indices: &[u32], n: usize, s: &'a mut EncScratch) -> Resu
     if deflated_len + 4 <= bitmap_len {
         return Ok(&s.payload);
     }
-    s.payload.clear();
-    s.payload.resize(1 + bitmap_len, 0);
-    s.payload[0] = MODE_BITMAP;
-    for &i in indices {
-        s.payload[1 + (i as usize) / 8] |= 1 << (i % 8);
-    }
+    bitmap_into(indices, n, &mut s.payload);
     Ok(&s.payload)
+}
+
+/// Encode under an explicit [`IndexCodec`] strategy, reusing the arena's
+/// buffers.  `Deflate` is exactly [`encode_into`]; the returned slice
+/// borrows either `s.payload` or the arena's Golomb candidate buffer.
+pub fn encode_with_into<'a>(
+    indices: &[u32],
+    n: usize,
+    codec: IndexCodec,
+    s: &'a mut EncScratch,
+) -> Result<&'a [u8]> {
+    match codec {
+        IndexCodec::Deflate => encode_into(indices, n, s),
+        IndexCodec::Bitmap => {
+            let _sp = trace::span(trace::Stage::IndexCode);
+            validate(indices, n)?;
+            bitmap_into(indices, n, &mut s.payload);
+            Ok(&s.payload)
+        }
+        IndexCodec::Golomb => {
+            let _sp = trace::span(trace::Stage::IndexCode);
+            validate(indices, n)?;
+            golomb_into(indices, &mut s.golomb);
+            Ok(&s.golomb)
+        }
+        IndexCodec::Auto => {
+            let _sp = trace::span(trace::Stage::IndexCode);
+            validate(indices, n)?;
+            // All three candidates priced on full wire length; ties break
+            // toward the lowest mode byte (deflate < bitmap < golomb), so
+            // the pick is a pure function of the index set and `n`.
+            let deflate_wire = deflate_candidate(indices, s);
+            golomb_into(indices, &mut s.golomb);
+            let golomb_wire = s.golomb.len();
+            let bitmap_wire = 1 + n.div_ceil(8);
+            if deflate_wire <= bitmap_wire && deflate_wire <= golomb_wire {
+                Ok(&s.payload)
+            } else if bitmap_wire <= golomb_wire {
+                bitmap_into(indices, n, &mut s.payload);
+                Ok(&s.payload)
+            } else {
+                Ok(&s.golomb)
+            }
+        }
+    }
+}
+
+/// Allocating wrapper around [`encode_with_into`].
+pub fn encode_with(indices: &[u32], n: usize, codec: IndexCodec) -> Result<Vec<u8>> {
+    let mut s = EncScratch::new();
+    encode_with_into(indices, n, codec, &mut s).map(|b| b.to_vec())
 }
 
 /// Encode a sorted index set over a universe of size `n` (allocating
@@ -84,6 +211,127 @@ pub fn encode_into<'a>(indices: &[u32], n: usize, s: &'a mut EncScratch) -> Resu
 pub fn encode(indices: &[u32], n: usize) -> Result<Vec<u8>> {
     let mut s = EncScratch::new();
     encode_into(indices, n, &mut s).map(|b| b.to_vec())
+}
+
+/// Rice parameter from the measured mean gap (DESIGN.md §16.2): `k =
+/// floor(log2(mean_gap))`, the deterministic integer form of the
+/// Golomb-parameter rule in Sattler et al.'s sparse binary compression
+/// (SNIPPETS.md `__golomb_idx_size` picks `M ~ mean/phi` from the
+/// sparsity rate; a power-of-two `M = 2^k` in `[mean/2, mean]` is within
+/// one bit/symbol of that optimum and needs no floating point, so the
+/// wire bytes are a pure function of the index set).
+fn golomb_k(indices: &[u32]) -> u8 {
+    let c = indices.len() as u64;
+    if c == 0 {
+        return 0;
+    }
+    // Sum of the coded gaps telescopes: gap_0 = idx_0, gap_i =
+    // idx_i - idx_{i-1} - 1, so sum = last - (c - 1).
+    let mean = (*indices.last().unwrap() as u64 + 1 - c) / c;
+    if mean <= 1 {
+        0
+    } else {
+        (63 - mean.leading_zeros()) as u8 // <= 31: mean <= u32::MAX
+    }
+}
+
+/// LSB-first bit appender over a byte vector (Golomb bitstream).
+struct BitWriter<'a> {
+    out: &'a mut Vec<u8>,
+    cur: u8,
+    filled: u8,
+}
+
+impl<'a> BitWriter<'a> {
+    fn new(out: &'a mut Vec<u8>) -> Self {
+        BitWriter { out, cur: 0, filled: 0 }
+    }
+
+    fn bit(&mut self, b: bool) {
+        if b {
+            self.cur |= 1 << self.filled;
+        }
+        self.filled += 1;
+        if self.filled == 8 {
+            self.out.push(self.cur);
+            self.cur = 0;
+            self.filled = 0;
+        }
+    }
+
+    fn bits(&mut self, v: u32, k: u8) {
+        for j in 0..k {
+            self.bit(v >> j & 1 != 0);
+        }
+    }
+
+    fn finish(self) {
+        if self.filled > 0 {
+            self.out.push(self.cur); // zero-padded final byte
+        }
+    }
+}
+
+/// LSB-first bit cursor over an untrusted byte slice; every read is
+/// bounds-checked so truncated payloads `bail!` instead of panicking.
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize, // in bits
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, pos: 0 }
+    }
+
+    fn bit(&mut self) -> Result<bool> {
+        if self.pos >= self.bytes.len() * 8 {
+            bail!("truncated golomb bitstream");
+        }
+        let b = self.bytes[self.pos / 8] >> (self.pos % 8) & 1;
+        self.pos += 1;
+        Ok(b != 0)
+    }
+
+    fn bits(&mut self, k: u8) -> Result<u32> {
+        let mut v = 0u32;
+        for j in 0..k {
+            if self.bit()? {
+                v |= 1 << j;
+            }
+        }
+        Ok(v)
+    }
+
+    /// Bytes touched so far (partial final byte included).
+    fn consumed_bytes(&self) -> usize {
+        self.pos.div_ceil(8)
+    }
+}
+
+/// Build the `MODE_GOLOMB` framing into `out` (replacing its contents):
+/// `[2][count u32 LE][k u8][bitstream]` where each sorted-gap is coded as
+/// `gap >> k` one-bits, a zero terminator, then the `k` low bits of the
+/// gap, all packed LSB-first.  Gap convention matches the deflate mode:
+/// first gap is the index itself, then `idx - prev - 1`.
+fn golomb_into(indices: &[u32], out: &mut Vec<u8>) {
+    out.clear();
+    out.push(MODE_GOLOMB);
+    out.extend((indices.len() as u32).to_le_bytes());
+    let k = golomb_k(indices);
+    out.push(k);
+    let mut bw = BitWriter::new(out);
+    let mut prev = 0u32;
+    for (i, &idx) in indices.iter().enumerate() {
+        let gap = if i == 0 { idx } else { idx - prev - 1 };
+        for _ in 0..gap >> k {
+            bw.bit(true);
+        }
+        bw.bit(false);
+        bw.bits(gap, k);
+        prev = idx;
+    }
+    bw.finish();
 }
 
 /// The PR-2-era encoder: identical delta+varint+bitmap framing, but the
@@ -184,7 +432,69 @@ pub fn decode(bytes: &[u8], n: usize) -> Result<Vec<u32>> {
             }
             Ok(out)
         }
-        _ => bail!("bad index-coding header"),
+        Some(&MODE_GOLOMB) => {
+            if bytes.len() < 6 {
+                bail!("truncated golomb payload: {} bytes < 6-byte header", bytes.len());
+            }
+            let count = u32::from_le_bytes(bytes[1..5].try_into()?) as usize;
+            let k = bytes[5];
+            if k > 31 {
+                bail!("golomb parameter k={k} out of range (max 31)");
+            }
+            // Indices are unique in [0, n), so more than n of them is
+            // corrupt; each symbol also costs at least k+1 bits, so a
+            // count beyond the bit budget is rejected before decoding.
+            if count > n {
+                bail!("golomb index count {count} exceeds universe {n}");
+            }
+            let body = &bytes[6..];
+            if (count as u64) * (k as u64 + 1) > body.len() as u64 * 8 {
+                bail!(
+                    "golomb payload too short: {count} symbols need more than {} bits",
+                    body.len() * 8
+                );
+            }
+            let mut br = BitReader::new(body);
+            let mut out = Vec::with_capacity(count);
+            let mut prev = 0u32;
+            for i in 0..count {
+                let mut q = 0u32;
+                while br.bit()? {
+                    q += 1;
+                    // The unary run is self-bounding (every one-bit comes
+                    // from the payload), but a quotient whose gap cannot
+                    // fit a u32 is corrupt — reject before it overflows.
+                    if (q as u64) << k > u32::MAX as u64 {
+                        bail!("golomb quotient overflows u32 (k={k})");
+                    }
+                }
+                let gap = (q << k) | br.bits(k)?;
+                let idx = if i == 0 {
+                    gap
+                } else {
+                    match prev.checked_add(gap).and_then(|v| v.checked_add(1)) {
+                        Some(v) => v,
+                        None => bail!("golomb index gap overflows u32"),
+                    }
+                };
+                if idx as usize >= n {
+                    bail!("decoded index {idx} out of universe {n}");
+                }
+                out.push(idx);
+                prev = idx;
+            }
+            // Padding bits in the final byte are ignored, but whole bytes
+            // past the last symbol mean the count and stream disagree.
+            if br.consumed_bytes() < body.len() {
+                bail!(
+                    "golomb payload has {} trailing bytes past the last symbol",
+                    body.len() - br.consumed_bytes()
+                );
+            }
+            Ok(out)
+        }
+        Some(&mode) => bail!("unknown index-coding mode byte {mode:#04x} (known: 0..=2)"),
+        None => bail!("empty index payload"),
     }
 }
 
@@ -451,6 +761,191 @@ mod tests {
             let c = encode_ordered(&sel).unwrap();
             let d = encode_ordered_into(&sel, &mut sc).unwrap();
             assert_eq!(c, d);
+            for codec in IndexCodec::all() {
+                let e = encode_with(&sel, n, codec).unwrap();
+                let f = encode_with_into(&sel, n, codec, &mut sc).unwrap();
+                assert_eq!(e, f, "codec {}", codec.name());
+            }
         }
+    }
+
+    /// Random sorted index set: `k` draws over `[0, n)`, deduplicated.
+    fn random_set(rng: &mut Rng, n: usize, k: usize) -> Vec<u32> {
+        let mut set = std::collections::BTreeSet::new();
+        while set.len() < k.min(n) {
+            set.insert(rng.below(n) as u32);
+        }
+        set.into_iter().collect()
+    }
+
+    #[test]
+    fn golomb_roundtrips_across_gap_distributions() {
+        // Dense, single-index, u32::MAX, empty — the adversarial shapes —
+        // plus random sparsities.
+        let huge = u32::MAX as usize + 1;
+        let cases: Vec<(Vec<u32>, usize)> = vec![
+            (vec![], 100),
+            (vec![0], 1),
+            (vec![0], 100),
+            (vec![99], 100),
+            (vec![u32::MAX], huge),
+            (vec![0, u32::MAX], huge),
+            (vec![u32::MAX - 1, u32::MAX], huge),
+            ((0..1024u32).collect(), 1024),
+            ((0..1024u32).step_by(2).collect(), 1024),
+        ];
+        for (sel, n) in cases {
+            let wire = encode_with(&sel, n, IndexCodec::Golomb).unwrap();
+            assert_eq!(wire[0], MODE_GOLOMB);
+            assert_eq!(decode(&wire, n).unwrap(), sel, "n={n} k={}", sel.len());
+        }
+        let mut rng = Rng::new(0x601);
+        for &(n, k) in &[(1usize, 1usize), (64, 64), (10_000, 10), (262_144, 4096), (1 << 20, 1)] {
+            let sel = random_set(&mut rng, n, k);
+            let wire = encode_with(&sel, n, IndexCodec::Golomb).unwrap();
+            assert_eq!(decode(&wire, n).unwrap(), sel, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn golomb_rate_matches_estimator() {
+        // Exact transliteration of the size estimator (SNIPPETS.md
+        // `__golomb_idx_size`, adapted to the integer parameter rule of
+        // DESIGN.md §16.2): 6 header bytes + ceil(sum(gap >> k) + count
+        // * (k + 1) bits / 8).  The encoder must hit it exactly.
+        let mut rng = Rng::new(0x602);
+        for &(n, k) in &[(262_144usize, 4096usize), (1_000_000, 1000), (65_536, 8192), (512, 500)]
+        {
+            let sel = random_set(&mut rng, n, k);
+            let c = sel.len() as u64;
+            let mean = (*sel.last().unwrap() as u64 + 1 - c) / c;
+            let kk = if mean <= 1 { 0 } else { 63 - mean.leading_zeros() as u64 };
+            let mut bits = 0u64;
+            let mut prev = 0u32;
+            for (i, &idx) in sel.iter().enumerate() {
+                let gap = if i == 0 { idx } else { idx - prev - 1 } as u64;
+                bits += (gap >> kk) + 1 + kk;
+                prev = idx;
+            }
+            let expect = 6 + bits.div_ceil(8) as usize;
+            let wire = encode_with(&sel, n, IndexCodec::Golomb).unwrap();
+            assert_eq!(wire.len(), expect, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn golomb_beats_deflate_at_paper_sparsities() {
+        // The rate-push claim at the fig10/11 operating points: Golomb
+        // gaps beat delta+varint+DEFLATE for uniform sparse supports, so
+        // `auto` has a real third candidate to pick.
+        let mut rng = Rng::new(0x603);
+        for &(n, k) in &[(262_144usize, 4096usize), (1_000_000, 1000), (200_000, 2000)] {
+            let sel = random_set(&mut rng, n, k);
+            let g = encode_with(&sel, n, IndexCodec::Golomb).unwrap();
+            let d = encode_with(&sel, n, IndexCodec::Deflate).unwrap();
+            assert!(g.len() < d.len(), "n={n} k={k}: golomb {} >= deflate {}", g.len(), d.len());
+        }
+    }
+
+    #[test]
+    fn auto_picks_the_minimum_candidate() {
+        let mut rng = Rng::new(0x604);
+        for _ in 0..40 {
+            let n = 64 + rng.below(200_000);
+            let k = 1 + rng.below(n.min(9000));
+            let sel = random_set(&mut rng, n, k);
+            let auto = encode_with(&sel, n, IndexCodec::Auto).unwrap();
+            let forced: Vec<usize> = [IndexCodec::Bitmap, IndexCodec::Deflate, IndexCodec::Golomb]
+                .into_iter()
+                .map(|c| encode_with(&sel, n, c).unwrap().len())
+                .collect();
+            let min = *forced.iter().min().unwrap();
+            assert_eq!(auto.len(), min, "n={n} k={} forced={forced:?}", sel.len());
+            assert_eq!(decode(&auto, n).unwrap(), sel);
+        }
+        // Empty selection: every candidate is tiny, auto still decodes.
+        let auto = encode_with(&[], 64, IndexCodec::Auto).unwrap();
+        assert_eq!(decode(&auto, 64).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn deflate_strategy_is_the_legacy_encoder_byte_for_byte() {
+        // The default strategy must keep every historical payload
+        // identical — ledger totals and sim-vs-wire identity depend on it.
+        let mut rng = Rng::new(0x605);
+        for _ in 0..20 {
+            let n = 64 + rng.below(100_000);
+            let sel = random_set(&mut rng, n, 1 + rng.below(n.min(5000)));
+            assert_eq!(
+                encode_with(&sel, n, IndexCodec::Deflate).unwrap(),
+                encode(&sel, n).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn every_codec_roundtrips_through_the_one_decoder() {
+        // The decoder dispatches on the wire mode byte alone, so it must
+        // accept all modes regardless of the sender's picker strategy.
+        let mut rng = Rng::new(0x606);
+        for codec in IndexCodec::all() {
+            for &(n, k) in &[(1usize, 1usize), (100, 7), (4096, 4096), (65_536, 700)] {
+                let sel = random_set(&mut rng, n, k);
+                let wire = encode_with(&sel, n, codec).unwrap();
+                assert_eq!(decode(&wire, n).unwrap(), sel, "codec {} n={n}", codec.name());
+            }
+            assert!(encode_with(&[100], 100, codec).is_err(), "out-of-universe must fail");
+        }
+    }
+
+    #[test]
+    fn unknown_mode_bytes_bail_descriptively() {
+        // Reserved/unknown mode bytes (3..=255 now that 2 is Golomb) must
+        // error — never panic — whatever follows them.
+        for mode in 3u8..=255 {
+            for tail in [0usize, 1, 5, 64] {
+                let mut bytes = vec![mode];
+                bytes.extend(std::iter::repeat_n(0xA5u8, tail));
+                let err = decode(&bytes, 1024).unwrap_err().to_string();
+                assert!(err.contains("unknown index-coding mode"), "mode {mode}: {err}");
+            }
+        }
+        assert!(decode(&[], 1024).unwrap_err().to_string().contains("empty"));
+    }
+
+    #[test]
+    fn corrupt_golomb_payloads_error_instead_of_panicking() {
+        let sel: Vec<u32> = (0..4096u32).step_by(3).collect();
+        let n = 65_536usize;
+        let wire = encode_with(&sel, n, IndexCodec::Golomb).unwrap();
+        // Truncations at every prefix class.
+        for cut in [1usize, 2, 5, 6, 7, wire.len() / 2, wire.len() - 1] {
+            assert!(decode(&wire[..cut], n).is_err(), "cut={cut}");
+        }
+        // Out-of-range parameter.
+        let mut bad = wire.clone();
+        bad[5] = 32;
+        assert!(decode(&bad, n).unwrap_err().to_string().contains("out of range"));
+        // Count beyond the universe.
+        let mut bad = wire.clone();
+        bad[1..5].copy_from_slice(&(n as u32 + 1).to_le_bytes());
+        assert!(decode(&bad, n).unwrap_err().to_string().contains("exceeds universe"));
+        // Count beyond the bit budget.
+        let mut bad = wire.clone();
+        bad[1..5].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&bad, usize::MAX).unwrap_err().to_string().contains("too short"));
+        // Trailing bytes past the last symbol.
+        let mut bad = wire.clone();
+        bad.extend([0u8; 3]);
+        assert!(decode(&bad, n).unwrap_err().to_string().contains("trailing"));
+        // A decoded index walking past the universe bound.
+        assert!(decode(&wire, sel.len()).is_err(), "shrunken universe must reject");
+        // All-ones bitstream: unbounded unary run must hit the quotient
+        // guard (or the truncation guard), not loop into an overflow.
+        let mut bad = vec![MODE_GOLOMB];
+        bad.extend(1u32.to_le_bytes());
+        bad.push(0);
+        bad.extend([0xFFu8; 64]);
+        assert!(decode(&bad, 1 << 20).is_err());
     }
 }

@@ -8,6 +8,8 @@
 //! * [`quantize`]     — QSGD / ternary baselines (§II-B)
 //! * [`autoencoder`]  — the learned compressor: wraps the AOT'd LGC
 //!   autoencoder HLOs (encode / decode / online train)
+//! * [`simd`]         — runtime-dispatched AVX2 kernels with bit-identical
+//!   scalar twins for the encode hot path (DESIGN.md §16)
 
 pub mod autoencoder;
 pub mod f16;
@@ -15,6 +17,7 @@ pub mod feedback;
 pub mod index_coding;
 pub mod quantize;
 pub mod scratch;
+pub mod simd;
 pub mod topk;
 
 pub use autoencoder::AeCompressor;

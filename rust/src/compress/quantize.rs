@@ -59,13 +59,11 @@ pub fn qsgd_into(
         if norm == 0.0 {
             continue;
         }
-        for (i, &x) in chunk.iter().enumerate() {
-            let r = x.abs() / norm * levels as f32;
-            let low = r.floor();
-            // Stochastic rounding: E[level] = r (unbiasedness, QSGD lemma 3.1)
-            let level = if rng.uniform() < r - low { low + 1.0 } else { low };
-            dequant[bi * bucket + i] = x.signum() * norm * level / levels as f32;
-        }
+        // Elementwise stage (stochastic round + dequant) is vectorized
+        // with a bit-identical scalar twin; the norm reduction above is
+        // order-sensitive and stays scalar (DESIGN.md §16.1).
+        let out = &mut dequant[bi * bucket..][..chunk.len()];
+        super::simd::qsgd_elems(chunk, norm, levels as f32, rng, out);
         bytes += (chunk.len() * bits_per_coord).div_ceil(8);
     }
     bytes

@@ -46,6 +46,10 @@ pub struct Scratch {
 pub struct EncScratch {
     pub(crate) varints: Vec<u8>,
     pub(crate) payload: Vec<u8>,
+    /// Golomb candidate staging for the `golomb`/`auto` strategies; kept
+    /// apart from `payload` so the auto-picker can price both candidates
+    /// before committing (DESIGN.md §16.2).
+    pub(crate) golomb: Vec<u8>,
     pub(crate) deflate: flate2::DeflateScratch,
 }
 
@@ -55,6 +59,7 @@ impl EncScratch {
         EncScratch {
             varints: Vec::new(),
             payload: Vec::new(),
+            golomb: Vec::new(),
             deflate: flate2::DeflateScratch::new(),
         }
     }

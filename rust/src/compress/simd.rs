@@ -1,0 +1,395 @@
+//! Runtime-dispatched SIMD kernels for the encode hot path (DESIGN.md
+//! §16.1).
+//!
+//! Every kernel here is a *pair*: a scalar twin (the reference semantics,
+//! always compiled, the only path on non-x86_64) and an AVX2 variant
+//! selected at runtime via `is_x86_feature_detected!`.  The pairs are
+//! bit-identical by construction — same selected indices, same f32 bit
+//! patterns, same bytes out — because ledgers, training curves, and the
+//! sim-vs-wire identity contract all flow through them; the differential
+//! suite (`tests/simd_differential.rs`) locks this down per kernel and
+//! end-to-end.  `LGC_FORCE_SCALAR=1` (or [`force_scalar`]) pins the
+//! scalar twins at runtime, which is how CI runs the whole tier-1 suite
+//! on the fallback path.
+//!
+//! The dispatch decision is cached in one atomic: the hot loops pay a
+//! single relaxed load, never a `cpuid`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::util::rng::Rng;
+
+const UNDECIDED: u8 = 0;
+const SCALAR: u8 = 1;
+const AVX2: u8 = 2;
+
+static DISPATCH: AtomicU8 = AtomicU8::new(UNDECIDED);
+
+/// Detect the dispatch state: AVX2 when the CPU has it and
+/// `LGC_FORCE_SCALAR=1` is not set; scalar otherwise (and always on
+/// non-x86_64 targets).
+fn detect() -> u8 {
+    if std::env::var_os("LGC_FORCE_SCALAR").is_some_and(|v| v == "1") {
+        return SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        return AVX2;
+    }
+    SCALAR
+}
+
+/// True when the AVX2 kernels are active (cached after the first call).
+pub fn using_avx2() -> bool {
+    match DISPATCH.load(Ordering::Relaxed) {
+        UNDECIDED => {
+            let d = detect();
+            DISPATCH.store(d, Ordering::Relaxed);
+            d == AVX2
+        }
+        d => d == AVX2,
+    }
+}
+
+/// Pin (`true`) or release (`false`) the scalar twins at runtime — the
+/// in-process equivalent of `LGC_FORCE_SCALAR=1`, used by the
+/// differential tests and benches to run both paths in one binary.
+/// Releasing re-detects, so the environment override still wins.
+/// Also switches the vendored `flate2`'s own match-loop dispatch, which
+/// cannot see this crate.
+pub fn force_scalar(force: bool) {
+    let d = if force { SCALAR } else { detect() };
+    DISPATCH.store(d, Ordering::Relaxed);
+    flate2::set_force_scalar(force);
+}
+
+// ---------------------------------------------------------------------------
+// Top-k threshold scan
+// ---------------------------------------------------------------------------
+
+/// Append `base + i` for every `g[i]` with `|g[i]| > threshold`, in
+/// ascending order (the strict pass of the top-k selection).
+///
+/// Bit-identity: AVX2 `|x|` is the same sign-bit clear as `f32::abs`,
+/// and `_CMP_GT_OQ` is IEEE ordered-greater — false for NaN on either
+/// side, exactly like the scalar `>` — so both variants select the same
+/// indices for every input including NaN/±inf/±0/denormals.
+pub(crate) fn scan_above(g: &[f32], base: u32, threshold: f32, out: &mut Vec<u32>) {
+    #[cfg(target_arch = "x86_64")]
+    if using_avx2() {
+        // SAFETY: AVX2 presence was runtime-checked by `using_avx2`.
+        unsafe { scan_above_avx2(g, base, threshold, out) };
+        return;
+    }
+    scan_above_scalar(g, base, threshold, out);
+}
+
+fn scan_above_scalar(g: &[f32], base: u32, threshold: f32, out: &mut Vec<u32>) {
+    for (i, &v) in g.iter().enumerate() {
+        if v.abs() > threshold {
+            out.push(base + i as u32);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scan_above_avx2(g: &[f32], base: u32, threshold: f32, out: &mut Vec<u32>) {
+    use std::arch::x86_64::*;
+    let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+    let thr = _mm256_set1_ps(threshold);
+    let mut j = 0usize;
+    while j + 8 <= g.len() {
+        // SAFETY: j + 8 <= g.len(), unaligned load.
+        let v = unsafe { _mm256_loadu_ps(g.as_ptr().add(j)) };
+        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(_mm256_and_ps(v, abs_mask), thr);
+        let mut m = _mm256_movemask_ps(gt) as u32;
+        while m != 0 {
+            out.push(base + (j + m.trailing_zeros() as usize) as u32);
+            m &= m - 1;
+        }
+        j += 8;
+    }
+    for (i, &v) in g[j..].iter().enumerate() {
+        if v.abs() > threshold {
+            out.push(base + (j + i) as u32);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QSGD stochastic quantization (elementwise stage; the norm reduction is
+// order-sensitive and stays scalar in the caller)
+// ---------------------------------------------------------------------------
+
+/// Quantize one non-zero-norm bucket: for each `chunk[i]`, draw one
+/// uniform (in index order — the RNG stream is part of the contract) and
+/// write the dequantized value into `out[i]`.
+///
+/// Bit-identity: the AVX2 variant batches 8 *scalar* RNG draws in index
+/// order, evaluates `|x|/norm*levels`, `floor`, `u < r - low` and the
+/// final `((sign*norm)*level)/levels` with the exact scalar operation
+/// order (IEEE ops round identically lane-wise), selects `low + 1.0` vs
+/// `low` by blend (not arithmetic, preserving `-0.0` and NaN payloads),
+/// and reproduces `f32::signum` — ±1.0 by sign-bit transfer, canonical
+/// NaN for NaN input — so every output bit matches the scalar twin.
+pub(crate) fn qsgd_elems(chunk: &[f32], norm: f32, levels: f32, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(chunk.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    if using_avx2() {
+        // SAFETY: AVX2 presence was runtime-checked by `using_avx2`.
+        unsafe { qsgd_elems_avx2(chunk, norm, levels, rng, out) };
+        return;
+    }
+    qsgd_elems_scalar(chunk, norm, levels, rng, out);
+}
+
+fn qsgd_elems_scalar(chunk: &[f32], norm: f32, levels: f32, rng: &mut Rng, out: &mut [f32]) {
+    for (i, &x) in chunk.iter().enumerate() {
+        let r = x.abs() / norm * levels;
+        let low = r.floor();
+        // Stochastic rounding: E[level] = r (unbiasedness, QSGD lemma 3.1)
+        let level = if rng.uniform() < r - low { low + 1.0 } else { low };
+        out[i] = x.signum() * norm * level / levels;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn qsgd_elems_avx2(chunk: &[f32], norm: f32, levels: f32, rng: &mut Rng, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+    let sign_mask = _mm256_set1_ps(-0.0);
+    let vnorm = _mm256_set1_ps(norm);
+    let vlev = _mm256_set1_ps(levels);
+    let one = _mm256_set1_ps(1.0);
+    let canon_nan = _mm256_set1_ps(f32::NAN);
+    let mut j = 0usize;
+    while j + 8 <= chunk.len() {
+        // The scalar twin draws one uniform per element in index order;
+        // batch the same 8 draws before touching the lanes.
+        let mut u = [0.0f32; 8];
+        for slot in &mut u {
+            *slot = rng.uniform();
+        }
+        // SAFETY: j + 8 <= chunk.len() == out.len(), unaligned load/store.
+        let x = unsafe { _mm256_loadu_ps(chunk.as_ptr().add(j)) };
+        let r = _mm256_mul_ps(_mm256_div_ps(_mm256_and_ps(x, abs_mask), vnorm), vlev);
+        let low = _mm256_floor_ps(r);
+        let bump = _mm256_cmp_ps::<_CMP_LT_OQ>(
+            // SAFETY: `u` is 8 contiguous f32s.
+            unsafe { _mm256_loadu_ps(u.as_ptr()) },
+            _mm256_sub_ps(r, low),
+        );
+        let level = _mm256_blendv_ps(low, _mm256_add_ps(low, one), bump);
+        let sgn = _mm256_or_ps(_mm256_and_ps(x, sign_mask), one);
+        let sgn = _mm256_blendv_ps(sgn, canon_nan, _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x));
+        let d = _mm256_div_ps(_mm256_mul_ps(_mm256_mul_ps(sgn, vnorm), level), vlev);
+        // SAFETY: as above.
+        unsafe { _mm256_storeu_ps(out.as_mut_ptr().add(j), d) };
+        j += 8;
+    }
+    qsgd_elems_scalar(&chunk[j..], norm, levels, rng, &mut out[j..]);
+}
+
+// ---------------------------------------------------------------------------
+// f32 <-> f16 wire round-trip
+// ---------------------------------------------------------------------------
+
+/// Replace every value by its f16 wire round-trip (what the receiver
+/// applies under `--fp16`), element-wise.
+///
+/// Bit-identity: the AVX2 variant does NOT use F16C (`vcvtps2ph` emits a
+/// different NaN payload than our scalar converter) — it emulates the
+/// exact integer algorithm of [`super::f16::f32_to_f16_bits`] /
+/// [`super::f16::f16_bits_to_f32`] with AVX2 integer ops (variable
+/// shifts, compares, blends), whose every step is bit-deterministic.
+/// The one float step per direction — the subnormal `frac * 2^-24`
+/// scale — is exact in both paths (int-to-float of a value < 2^11 and a
+/// power-of-two multiply round identically).
+pub(crate) fn f16_roundtrip_in_place(values: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if using_avx2() {
+        // SAFETY: AVX2 presence was runtime-checked by `using_avx2`.
+        unsafe { f16_roundtrip_avx2(values) };
+        return;
+    }
+    for v in values.iter_mut() {
+        *v = super::f16::f16_bits_to_f32(super::f16::f32_to_f16_bits(*v));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn f16_roundtrip_avx2(values: &mut [f32]) {
+    use std::arch::x86_64::*;
+
+    #[inline]
+    fn splat(v: i32) -> __m256i {
+        // SAFETY: no preconditions.
+        unsafe { _mm256_set1_epi32(v) }
+    }
+
+    let mut j = 0usize;
+    while j + 8 <= values.len() {
+        // SAFETY: j + 8 <= values.len(), unaligned load.
+        let x = unsafe { _mm256_loadu_ps(values.as_ptr().add(j)) };
+        let bits = _mm256_castps_si256(x);
+
+        // ---- f32 -> f16 (f32_to_f16_bits, lane-parallel) ----
+        let sign16 = _mm256_and_si256(_mm256_srli_epi32::<16>(bits), splat(0x8000));
+        let exp = _mm256_and_si256(_mm256_srli_epi32::<23>(bits), splat(0xff));
+        let frac = _mm256_and_si256(bits, splat(0x007f_ffff));
+        let one = splat(1);
+
+        // Normal path: exp16 = exp - 127 + 15, RNE on the low 13 bits;
+        // the mantissa carry bumps the exponent via the plain add.
+        let mant_n = _mm256_srli_epi32::<13>(frac);
+        let rem_n = _mm256_and_si256(frac, splat(0x1fff));
+        let odd_n = _mm256_cmpeq_epi32(_mm256_and_si256(mant_n, one), one);
+        let rnd_n = _mm256_or_si256(
+            _mm256_cmpgt_epi32(rem_n, splat(0x1000)),
+            _mm256_and_si256(_mm256_cmpeq_epi32(rem_n, splat(0x1000)), odd_n),
+        );
+        let mant_n = _mm256_add_epi32(mant_n, _mm256_and_si256(rnd_n, one));
+        let out_normal = _mm256_add_epi32(
+            _mm256_slli_epi32::<10>(_mm256_sub_epi32(exp, splat(112))),
+            mant_n,
+        );
+
+        // Subnormal path: shift = -1 - unbiased = 126 - exp (14..=24 when
+        // this branch is selected; other lanes produce garbage that the
+        // blend below discards).
+        let shift = _mm256_sub_epi32(splat(126), exp);
+        let mant32 = _mm256_or_si256(splat(0x0080_0000), frac);
+        let mant_s = _mm256_srlv_epi32(mant32, shift);
+        let rem_s = _mm256_and_si256(
+            mant32,
+            _mm256_sub_epi32(_mm256_sllv_epi32(one, shift), one),
+        );
+        let half = _mm256_sllv_epi32(one, _mm256_sub_epi32(shift, one));
+        let odd_s = _mm256_cmpeq_epi32(_mm256_and_si256(mant_s, one), one);
+        let rnd_s = _mm256_or_si256(
+            _mm256_cmpgt_epi32(rem_s, half),
+            _mm256_and_si256(_mm256_cmpeq_epi32(rem_s, half), odd_s),
+        );
+        let out_sub = _mm256_add_epi32(mant_s, _mm256_and_si256(rnd_s, one));
+
+        // Inf/NaN: 0x7c00 plus the fixed 0x0200 quiet payload for NaN.
+        let frac_nz = {
+            let z = _mm256_cmpeq_epi32(frac, _mm256_setzero_si256());
+            _mm256_xor_si256(z, splat(-1))
+        };
+        let out_special =
+            _mm256_or_si256(splat(0x7c00), _mm256_and_si256(frac_nz, splat(0x0200)));
+
+        // Select by exponent class, mirroring the scalar branch ladder:
+        // exp == 255 -> special; exp > 142 -> inf; exp >= 113 -> normal;
+        // exp >= 102 -> subnormal; else -> signed zero.
+        let is_specl = _mm256_cmpeq_epi32(exp, splat(0xff));
+        let is_inf = _mm256_cmpgt_epi32(exp, splat(142));
+        let is_norm = _mm256_cmpgt_epi32(exp, splat(112));
+        let is_sub = _mm256_cmpgt_epi32(exp, splat(101));
+        let mut h = _mm256_and_si256(is_sub, out_sub);
+        h = _mm256_blendv_epi8(h, out_normal, is_norm);
+        h = _mm256_blendv_epi8(h, splat(0x7c00), is_inf);
+        h = _mm256_blendv_epi8(h, out_special, is_specl);
+        let h = _mm256_or_si256(sign16, h);
+
+        // ---- f16 -> f32 (f16_bits_to_f32, lane-parallel) ----
+        let sign32 = _mm256_slli_epi32::<16>(_mm256_and_si256(h, splat(0x8000)));
+        let e16 = _mm256_and_si256(_mm256_srli_epi32::<10>(h), splat(0x1f));
+        let f16 = _mm256_and_si256(h, splat(0x3ff));
+
+        // exp == 0: frac * 2^-24 exactly (cvt of an int < 2^11 is exact,
+        // power-of-two scaling is exact); the scalar negates the
+        // magnitude, which for these non-NaN values is the sign-bit OR.
+        let sub_f = _mm256_mul_ps(_mm256_cvtepi32_ps(f16), _mm256_set1_ps(5.960_464_5e-8));
+        let back_sub = _mm256_castps_si256(sub_f);
+        // Normal: rebias and shift the fraction up.
+        let back_norm = _mm256_or_si256(
+            _mm256_slli_epi32::<23>(_mm256_add_epi32(e16, splat(112))),
+            _mm256_slli_epi32::<13>(f16),
+        );
+        // exp == 31: inf, or the canonical quiet NaN the scalar returns
+        // (f32::NAN, sign applied by the trailing negation).
+        let f16_nz = {
+            let z = _mm256_cmpeq_epi32(f16, _mm256_setzero_si256());
+            _mm256_xor_si256(z, splat(-1))
+        };
+        let back_spec = _mm256_blendv_epi8(splat(0x7f80_0000), splat(0x7fc0_0000), f16_nz);
+
+        let e_is_zero = _mm256_cmpeq_epi32(e16, _mm256_setzero_si256());
+        let e_is_max = _mm256_cmpeq_epi32(e16, splat(0x1f));
+        let mut back = back_norm;
+        back = _mm256_blendv_epi8(back, back_sub, e_is_zero);
+        back = _mm256_blendv_epi8(back, back_spec, e_is_max);
+        let back = _mm256_or_si256(back, sign32);
+
+        // SAFETY: as above, unaligned store.
+        unsafe { _mm256_storeu_ps(values.as_mut_ptr().add(j), _mm256_castsi256_ps(back)) };
+        j += 8;
+    }
+    for v in values[j..].iter_mut() {
+        *v = super::f16::f16_bits_to_f32(super::f16::f32_to_f16_bits(*v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize dispatch-flipping tests (the unit tests in this module
+    /// and the integration differential suite each guard their own
+    /// binary; within one binary the harness runs tests concurrently).
+    pub(crate) fn dispatch_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn force_scalar_pins_and_releases() {
+        let _g = dispatch_lock();
+        force_scalar(true);
+        assert!(!using_avx2());
+        force_scalar(false);
+        // Either outcome is legal (hardware/env dependent); the call must
+        // simply re-detect without panicking.
+        let _ = using_avx2();
+        force_scalar(true);
+        assert!(!using_avx2());
+        force_scalar(false);
+    }
+
+    #[test]
+    fn scan_above_pairs_agree_on_adversarial_values() {
+        let _g = dispatch_lock();
+        let mut rng = crate::util::rng::Rng::new(0x51D);
+        let specials = [
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            0.0,
+            -0.0,
+            1e-40,
+            -1e-40,
+            f32::MIN_POSITIVE,
+        ];
+        for len in [0usize, 1, 7, 8, 9, 16, 31, 32, 33, 257] {
+            let mut g: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            for _ in 0..len / 3 {
+                let at = rng.below(len.max(1));
+                g[at] = specials[rng.below(specials.len())];
+            }
+            for thr in [0.5f32, 0.0, -0.0, f32::NAN, f32::INFINITY] {
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                force_scalar(true);
+                scan_above(&g, 3, thr, &mut a);
+                force_scalar(false);
+                scan_above(&g, 3, thr, &mut b);
+                assert_eq!(a, b, "len={len} thr={thr}");
+            }
+        }
+        force_scalar(false);
+    }
+}

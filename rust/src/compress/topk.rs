@@ -67,11 +67,10 @@ pub fn top_k_into(
     }
     let k = k.min(g.len());
     let threshold = threshold_for_k_in(g, k, mags);
-    for (i, &v) in g.iter().enumerate() {
-        if v.abs() > threshold {
-            indices.push(i as u32);
-        }
-    }
+    // Strict pass: vectorized, bit-identical to the scalar scan
+    // (DESIGN.md §16.1).  The tie pass below terminates early and stays
+    // scalar.
+    super::simd::scan_above(g, 0, threshold, indices);
     // Fill the remainder with threshold-magnitude ties (index order).
     if indices.len() < k {
         for (i, &v) in g.iter().enumerate() {
@@ -123,11 +122,7 @@ pub fn top_k_bucketed_into(
     let k = k.min(g.len());
     let threshold = threshold_for_k_in(g, k, mags);
     for r in ranges {
-        for i in r.clone() {
-            if g[i].abs() > threshold {
-                indices.push(i as u32);
-            }
-        }
+        super::simd::scan_above(&g[r.clone()], r.start as u32, threshold, indices);
     }
     // Shared tie budget, filled across buckets in ascending index order —
     // exactly the monolithic tie pass restricted to the same walk.

@@ -191,6 +191,11 @@ pub struct TrainConfig {
     pub qsgd_levels: u32,
     /// Transmit sparse value payloads as f16 (rate ablation).
     pub fp16_values: bool,
+    /// Index-coding strategy for sparse support sets (`--index-codec`,
+    /// DESIGN.md §16.2): `deflate` is the legacy hybrid coder, `auto`
+    /// prices bitmap/deflate/Golomb per layer and emits the smallest.
+    /// Shipped to TCP workers (the encoder side) through the config blob.
+    pub index_codec: crate::compress::index_coding::IndexCodec,
     /// AE readiness gate: compressed updates engage once the online rec
     /// loss (unit-RMS MSE, 8-step mean) falls below this. Set high to
     /// force-engage (tests), low to never engage.
@@ -288,6 +293,7 @@ impl Default for TrainConfig {
             seed: 42,
             qsgd_levels: 15,
             fp16_values: false,
+            index_codec: crate::compress::index_coding::IndexCodec::Deflate,
             ae_gate: 0.55,
             threads: 0,
             bandwidth_mbits: 1000.0,
@@ -380,6 +386,10 @@ impl TrainConfig {
         c.eval_every = a.usize("eval-every", c.eval_every);
         c.seed = a.u64("seed", c.seed);
         c.fp16_values = a.has("fp16");
+        if let Some(s) = a.opt_str("index-codec") {
+            c.index_codec = crate::compress::index_coding::IndexCodec::parse(&s)
+                .unwrap_or_else(|| panic!("bad --index-codec {s:?} (auto|bitmap|deflate|golomb)"));
+        }
         c.threads = a.usize("threads", c.threads);
         if let Some(b) = a.opt_str("bandwidth") {
             c.bandwidth_mbits = parse_bandwidth_mbits(&b)
@@ -528,6 +538,25 @@ mod tests {
             assert_eq!(OnFault::parse(want.name()), Some(want));
         }
         assert_eq!(OnFault::parse("retry"), None);
+    }
+
+    #[test]
+    fn index_codec_flag_parses() {
+        use crate::compress::index_coding::IndexCodec;
+        // Default stays the legacy hybrid coder (bit-identity with
+        // pre-codec runs).
+        assert_eq!(TrainConfig::default().index_codec, IndexCodec::Deflate);
+        for codec in IndexCodec::all() {
+            let a = Args::parse(
+                ["--index-codec", codec.name()].iter().map(|s| s.to_string()),
+                &["index-codec"],
+                &[],
+            )
+            .unwrap();
+            assert_eq!(TrainConfig::from_args(&a).index_codec, codec);
+            assert_eq!(IndexCodec::parse(codec.name()), Some(codec));
+        }
+        assert_eq!(IndexCodec::parse("zstd"), None);
     }
 
     #[test]

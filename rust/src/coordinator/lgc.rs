@@ -36,6 +36,7 @@ use anyhow::Result;
 
 use crate::baselines::{check_node_count, dense_mean_accounted, ExchangeCtx, MidStrategy};
 use crate::compress::autoencoder::{rms, AeCompressor, Pattern};
+use crate::compress::index_coding::IndexCodec;
 use crate::compress::{index_coding, topk, Correction, FeedbackMemory, Scratch};
 use crate::coordinator::parallel;
 use crate::coordinator::ring;
@@ -108,13 +109,14 @@ struct NodeState {
 pub(crate) fn innovation_into(
     values: &[f32],
     frac: f64,
+    codec: IndexCodec,
     dense: &mut Vec<f32>,
     sc: &mut Scratch,
 ) -> Result<usize> {
     let k_inn = topk::k_of(values.len(), frac);
     topk::top_k_into(values, k_inn, &mut sc.mags, &mut sc.idx, &mut sc.vals);
     topk::scatter_into(dense, values.len(), &sc.idx, &sc.vals);
-    let coded = index_coding::encode_into(&sc.idx, values.len(), &mut sc.enc)?.len();
+    let coded = index_coding::encode_with_into(&sc.idx, values.len(), codec, &mut sc.enc)?.len();
     Ok(sc.vals.len() * 4 + coded)
 }
 
@@ -295,11 +297,12 @@ impl LgcCommon {
         // within our scaled phase-2 window.
         if ps {
             let frac = self.innovation_frac;
+            let codec = ctx.codec;
             parallel::collect_node_results(parallel::par_map_mut(
                 ctx.threads,
                 &mut self.nodes,
                 |_node, st| -> Result<()> {
-                    innovation_into(&st.vv, frac, &mut st.inn, &mut st.scratch)?;
+                    innovation_into(&st.vv, frac, codec, &mut st.inn, &mut st.scratch)?;
                     Ok(())
                 },
             ))?;
@@ -442,13 +445,15 @@ impl MidStrategy for LgcPs {
                 // (innovation + 4 B scale).  Returns each node's RMS
                 // scale s_k.
                 let frac = self.c.innovation_frac;
+                let codec = ctx.codec;
                 let s_ks = parallel::collect_node_results(parallel::par_zip_mut(
                     ctx.threads,
                     &mut self.c.nodes,
                     &mut *ctx.shards,
                     |_node, st, shard| -> Result<f32> {
                         st.fb.take_at_into(&self.c.support, &mut st.vv);
-                        let bytes = innovation_into(&st.vv, frac, &mut st.inn, &mut st.scratch)?;
+                        let bytes =
+                            innovation_into(&st.vv, frac, codec, &mut st.inn, &mut st.scratch)?;
                         shard.record(Kind::Values, bytes + 4);
                         Ok(rms(&st.vv))
                     },

@@ -339,6 +339,7 @@ impl<'e> Trainer<'e> {
             grads,
             self.cfg.alpha,
             false,
+            self.cfg.index_codec,
             shards,
             &mut self.arenas,
             self.cfg.threads,
@@ -500,6 +501,7 @@ impl<'e> Trainer<'e> {
                     phase,
                     alpha: self.cfg.alpha,
                     fp16: self.cfg.fp16_values,
+                    codec: self.cfg.index_codec,
                     rng: &mut self.rng,
                     threads,
                     scratches: &mut self.arenas,

@@ -1511,8 +1511,9 @@ impl<'e> Coordinator<'e> {
         let inner = self.cfg.ae_inner_steps.max(1);
         if ps {
             let frac = self.cfg.innovation_frac;
+            let codec = self.cfg.index_codec;
             for node in 0..nodes {
-                innovation_into(vvs[node], frac, &mut l.inns[node], &mut l.scratches[node])?;
+                innovation_into(vvs[node], frac, codec, &mut l.inns[node], &mut l.scratches[node])?;
             }
             let inns: Vec<&[f32]> = l.inns.iter().map(|i| i.as_slice()).collect();
             for _ in 0..inner {

@@ -34,6 +34,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::baselines::pack_values_in_place;
 use crate::compress::autoencoder::{rms, AeCompressor, Pattern};
+use crate::compress::index_coding::IndexCodec;
 use crate::compress::{index_coding, topk, Correction, FeedbackMemory, Scratch};
 use crate::config::{Method, OnFault, TrainConfig};
 use crate::coordinator::bucket::{method_bucketable, BucketPlan};
@@ -527,14 +528,26 @@ impl<'e> Node<'e> {
                     fb.select_and_clear_bucketed_into(k_sel, self.plan.ranges(), &mut self.sc);
                 }
                 if self.overlap {
-                    let up = send_sparse_buckets(conn, it, &self.plan, fp16, &mut self.sc)?;
+                    let up = send_sparse_buckets(
+                        conn,
+                        it,
+                        &self.plan,
+                        fp16,
+                        self.cfg.index_codec,
+                        &mut self.sc,
+                    )?;
                     return Ok((up, None, None));
                 }
                 // Values ship post-pack: under fp16 the wire round-trip is
                 // what every receiver aggregates (baselines::pack_values).
                 pack_values_in_place(&mut self.sc.vals, fp16);
-                let coded =
-                    index_coding::encode_into(&self.sc.idx, self.n_mid, &mut self.sc.enc)?.to_vec();
+                let coded = index_coding::encode_with_into(
+                    &self.sc.idx,
+                    self.n_mid,
+                    self.cfg.index_codec,
+                    &mut self.sc.enc,
+                )?
+                .to_vec();
                 Ok((MidUp::Sparse { coded_idx: coded, vals: self.sc.vals.clone() }, None, None))
             }
             MidState::Threshold { fb, threshold } => {
@@ -566,11 +579,24 @@ impl<'e> Node<'e> {
                     // The threshold scan emits ascending indices, so the
                     // selection partitions cleanly into plan ranges.
                     self.plan.splits_of(&self.sc.idx, &mut self.sc.splits);
-                    let up = send_sparse_buckets(conn, it, &self.plan, fp16, &mut self.sc)?;
+                    let up = send_sparse_buckets(
+                        conn,
+                        it,
+                        &self.plan,
+                        fp16,
+                        self.cfg.index_codec,
+                        &mut self.sc,
+                    )?;
                     return Ok((up, None, None));
                 }
                 pack_values_in_place(&mut self.sc.vals, fp16);
-                let coded = index_coding::encode_into(&self.sc.idx, n, &mut self.sc.enc)?.to_vec();
+                let coded = index_coding::encode_with_into(
+                    &self.sc.idx,
+                    n,
+                    self.cfg.index_codec,
+                    &mut self.sc.enc,
+                )?
+                .to_vec();
                 Ok((MidUp::Sparse { coded_idx: coded, vals: self.sc.vals.clone() }, None, None))
             }
             MidState::Lgc { fb, ae, ps } => {
@@ -652,9 +678,13 @@ impl<'e> Node<'e> {
                             &mut self.sc.vals,
                         );
                     }
-                    let coded_idx =
-                        index_coding::encode_into(&self.sc.idx, self.vv.len(), &mut self.sc.enc)?
-                            .to_vec();
+                    let coded_idx = index_coding::encode_with_into(
+                        &self.sc.idx,
+                        self.vv.len(),
+                        self.cfg.index_codec,
+                        &mut self.sc.enc,
+                    )?
+                    .to_vec();
                     let scale = rms(&self.vv);
                     let latent = if self.node == leader {
                         let _sp = trace::span(trace::Stage::AeEncode);
@@ -699,8 +729,13 @@ impl<'e> Node<'e> {
             let _sp = trace::span(trace::Stage::TopK);
             self.last_fb.select_and_clear_into(k_sel, &mut self.sc);
         }
-        let coded =
-            index_coding::encode_into(&self.sc.idx, self.n_last, &mut self.sc.enc)?.to_vec();
+        let coded = index_coding::encode_with_into(
+            &self.sc.idx,
+            self.n_last,
+            self.cfg.index_codec,
+            &mut self.sc.enc,
+        )?
+        .to_vec();
         Ok(LastUp::Sparse { coded_idx: coded, vals: self.sc.vals.clone() })
     }
 }
@@ -717,6 +752,7 @@ fn send_sparse_buckets(
     it: usize,
     plan: &BucketPlan,
     fp16: bool,
+    codec: IndexCodec,
     sc: &mut Scratch,
 ) -> Result<MidUp> {
     debug_assert_eq!(sc.splits.len(), plan.len() + 1);
@@ -726,9 +762,13 @@ fn send_sparse_buckets(
         pack_values_in_place(&mut vals, fp16);
         sc.idx_local.clear();
         sc.idx_local.extend(sc.idx[lo..hi].iter().map(|&i| i - range.start as u32));
-        let coded =
-            index_coding::encode_into(&sc.idx_local, range.end - range.start, &mut sc.enc)?
-                .to_vec();
+        let coded = index_coding::encode_with_into(
+            &sc.idx_local,
+            range.end - range.start,
+            codec,
+            &mut sc.enc,
+        )?
+        .to_vec();
         conn.send(&Msg::GradientBucket {
             iter: it as u32,
             bucket: b as u32,

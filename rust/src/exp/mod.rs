@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU8, Ordering};
 
 use anyhow::Result;
 
+use crate::compress::index_coding::IndexCodec;
 use crate::config::{Method, SparsifySchedule, TrainConfig, TransportKind};
 use crate::coordinator::{self, TrainResult};
 use crate::metrics::Csv;
@@ -50,6 +51,27 @@ pub(crate) fn transport() -> TransportKind {
     }
 }
 
+/// Index codec every experiment driver threads into its configs
+/// (`lgc exp --index-codec auto`).  Same process-wide pattern as
+/// [`TRANSPORT`]: the drivers build dozens of configs internally, and the
+/// codec is a pure rate knob, so one global is simpler than threading a
+/// parameter through every driver signature.
+static INDEX_CODEC: AtomicU8 = AtomicU8::new(IndexCodec::Deflate as u8);
+
+/// Select the index codec used by every config the `exp` drivers build.
+pub fn set_index_codec(codec: IndexCodec) {
+    INDEX_CODEC.store(codec as u8, Ordering::Relaxed);
+}
+
+pub(crate) fn index_codec() -> IndexCodec {
+    match INDEX_CODEC.load(Ordering::Relaxed) {
+        x if x == IndexCodec::Auto as u8 => IndexCodec::Auto,
+        x if x == IndexCodec::Bitmap as u8 => IndexCodec::Bitmap,
+        x if x == IndexCodec::Golomb as u8 => IndexCodec::Golomb,
+        _ => IndexCodec::Deflate,
+    }
+}
+
 fn base_cfg(model: &str, method: Method, nodes: usize, steps: usize) -> TrainConfig {
     TrainConfig {
         model: model.into(),
@@ -59,6 +81,7 @@ fn base_cfg(model: &str, method: Method, nodes: usize, steps: usize) -> TrainCon
         eval_every: (steps / 12).max(5),
         eval_batches: 4,
         transport: transport(),
+        index_codec: index_codec(),
         ..Default::default()
     }
     .scaled_phases()

@@ -36,7 +36,7 @@ const FLAGS: &[&str] = &[
     "backend", "bandwidth", "latency-us", "straggler", "topology",
     "transport", "listen", "connect", "session", "net-timeout-ms",
     "join-timeout-ms", "retries", "backoff-ms", "checkpoint",
-    "buckets", "bucket-bytes",
+    "buckets", "bucket-bytes", "index-codec",
     "heartbeat-ms", "miss-budget", "on-fault", "faults", "resume",
     "ckpt-every", "rejoin-node",
     "trace-out", "log-json", "metrics-addr", "log-level",
@@ -190,6 +190,12 @@ fn main() -> Result<()> {
                 let kind = TransportKind::parse(&t)
                     .ok_or_else(|| anyhow::anyhow!("bad --transport {t:?} (sim|tcp)"))?;
                 exp::set_transport(kind);
+            }
+            if let Some(c) = args.opt_str("index-codec") {
+                let codec = lgc::compress::index_coding::IndexCodec::parse(&c).ok_or_else(
+                    || anyhow::anyhow!("bad --index-codec {c:?} (auto|bitmap|deflate|golomb)"),
+                )?;
+                exp::set_index_codec(codec);
             }
             let id = args
                 .positional(0)
@@ -423,6 +429,9 @@ SUBCOMMANDS:
                --nodes K --steps N [--lr F --alpha F --schedule warmup|fixed|exp
                --warmup N --ae-train N --lambda2 F --seed S --verbose
                --fp16 (transmit sparse value payloads as f16)
+               --index-codec auto|bitmap|deflate|golomb (sparse index wire
+               codec; deflate = legacy hybrid default, auto prices all
+               three per layer and ships the smallest; DESIGN.md §16.2)
                --threads T (0 = one per core; results are identical for any T)
                --assert-improves (exit nonzero unless train loss decreased)]
   serve        coordinator for externally-launched workers; same training
@@ -433,7 +442,7 @@ SUBCOMMANDS:
                --rejoin-node N (re-enter a live elastic run as node N)]
   exp          <id> or --id ID, one of table4|table5|table6|fig3|fig10|fig11|
                fig12|fig13|fig14|fig14-ae|speedup|ablation|validate-net|all
-               [--steps N]
+               [--steps N --index-codec auto|bitmap|deflate|golomb]
                fig14 = modeled speedup-vs-bandwidth sweep (results/
                fig14_speedup.csv + overlap-adjusted fig14_overlap.csv);
                fig14-ae = AE convergence traces;
@@ -529,6 +538,11 @@ BACKENDS (--backend, or $LGC_BACKEND):
 
 MODELS (pjrt): convnet5, resnet_mini, resnet_mini_deep, segnet_mini,
 transformer_mini.  Artifacts are read from $LGC_ARTIFACTS or ./artifacts
-(run `make artifacts`)."#
+(run `make artifacts`).
+
+ENVIRONMENT:
+  LGC_FORCE_SCALAR=1  disable the runtime-dispatched AVX2 encode kernels
+                      and run their scalar twins instead; every output is
+                      bit-identical either way (DESIGN.md §16.1)"#
     );
 }

@@ -15,6 +15,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::compress::index_coding::IndexCodec;
 use crate::config::{Method, OnFault, SparsifySchedule, TrainConfig, TransportKind};
 
 /// Wire protocol version; bumped on any grammar change.  A mismatch is
@@ -590,10 +591,12 @@ impl<'a> Reader<'a> {
 /// appended the telemetry knobs that are observable from the worker
 /// side (`trace_out` — workers write span part files — and
 /// `log_level`); the other telemetry knobs (`log_json`,
-/// `metrics_addr`) stay coordinator-local.
+/// `metrics_addr`) stay coordinator-local.  v5 appended the
+/// `index_codec` tag so workers — the encoder side of every sparse
+/// upload — code support sets with the coordinator-selected strategy.
 ///
 /// [`BucketPlan`]: crate::coordinator::bucket::BucketPlan
-const CFG_VERSION: u8 = 4;
+const CFG_VERSION: u8 = 5;
 
 fn method_tag(m: Method) -> u8 {
     match m {
@@ -673,6 +676,25 @@ fn log_level_from_tag(t: u8) -> Result<crate::obs::log::Level> {
     })
 }
 
+fn index_codec_tag(c: IndexCodec) -> u8 {
+    match c {
+        IndexCodec::Auto => 0,
+        IndexCodec::Bitmap => 1,
+        IndexCodec::Deflate => 2,
+        IndexCodec::Golomb => 3,
+    }
+}
+
+fn index_codec_from_tag(t: u8) -> Result<IndexCodec> {
+    Ok(match t {
+        0 => IndexCodec::Auto,
+        1 => IndexCodec::Bitmap,
+        2 => IndexCodec::Deflate,
+        3 => IndexCodec::Golomb,
+        t => bail!("unknown index-codec tag {t}"),
+    })
+}
+
 /// Serialize every field a worker needs to replicate the run.  The
 /// coordinator-local knobs (`transport`, `checkpoint`, `ckpt_every`,
 /// `faults`, `resume`, `log_json`, `metrics_addr`) are deliberately
@@ -730,6 +752,7 @@ pub fn encode_cfg(w: &mut Vec<u8>, c: &TrainConfig) {
         None => w.push(0),
     }
     w.push(log_level_tag(c.log_level));
+    w.push(index_codec_tag(c.index_codec));
 }
 
 fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
@@ -775,6 +798,7 @@ fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
     let on_fault = on_fault_from_tag(r.u8()?)?;
     let trace_out = if r.bool()? { Some(r.string()?) } else { None };
     let log_level = log_level_from_tag(r.u8()?)?;
+    let index_codec = index_codec_from_tag(r.u8()?)?;
     Ok(TrainConfig {
         model,
         method,
@@ -796,6 +820,7 @@ fn decode_cfg(r: &mut Reader) -> Result<TrainConfig> {
         seed,
         qsgd_levels,
         fp16_values,
+        index_codec,
         ae_gate,
         threads,
         bandwidth_mbits,
@@ -950,6 +975,7 @@ mod tests {
             seed: 1234,
             alpha: 0.004,
             fp16_values: true,
+            index_codec: IndexCodec::Golomb,
             schedule: SparsifySchedule::Exponential,
             straggler_spec: vec![(1, 3.25)],
             buckets: 8,
@@ -983,6 +1009,7 @@ mod tests {
         assert_eq!(back.schedule, c.schedule);
         assert_eq!(back.straggler_spec, c.straggler_spec);
         assert!(back.fp16_values);
+        assert_eq!(back.index_codec, IndexCodec::Golomb);
         assert_eq!(back.buckets, 8);
         assert_eq!(back.bucket_bytes, 65536);
         assert!(!back.overlap);

@@ -5,6 +5,7 @@
 //! (shrinking is traded for reproducibility: every failure prints the
 //! case seed, and re-running with it is exact).
 
+use lgc::compress::index_coding::IndexCodec;
 use lgc::compress::{f16, index_coding, topk, Correction, FeedbackMemory};
 use lgc::coordinator::{parallel, ring};
 use lgc::info;
@@ -551,14 +552,15 @@ fn prop_index_decode_never_panics_on_arbitrary_bytes() {
         let n = 1 + rng.below(100_000);
         let len = rng.below(200);
         let mut blob: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
-        // Half the time force a valid mode byte to reach the deep paths.
+        // Half the time force a valid mode byte to reach the deep paths
+        // (0 = deflate-delta, 1 = bitmap, 2 = golomb).
         if !blob.is_empty() && rng.below(2) == 0 {
-            blob[0] = rng.below(2) as u8;
+            blob[0] = rng.below(3) as u8;
         }
         let _ = index_coding::decode(&blob, n);
         let _ = index_coding::decode_ordered(&blob);
     }
-    // Truncations of *valid* payloads (both modes).
+    // Truncations of *valid* payloads (all three modes).
     for case in 0..CASES {
         let mut rng = Rng::new(0x1E0 + case);
         let n = 64 + rng.below(10_000);
@@ -568,9 +570,106 @@ fn prop_index_decode_never_panics_on_arbitrary_bytes() {
         let bytes = index_coding::encode(&idx, n).unwrap();
         let cut = rng.below(bytes.len().max(1));
         let _ = index_coding::decode(&bytes[..cut], n);
+        let golomb = index_coding::encode_with(&idx, n, IndexCodec::Golomb).unwrap();
+        let cut = rng.below(golomb.len().max(1));
+        let _ = index_coding::decode(&golomb[..cut], n);
         let ordered = index_coding::encode_ordered(&idx).unwrap();
         let cut = rng.below(ordered.len().max(1));
         let _ = index_coding::decode_ordered(&ordered[..cut]);
+    }
+}
+
+#[test]
+fn prop_golomb_roundtrips_and_survives_hostile_payloads() {
+    // MODE_GOLOMB over the whole operating range: dense halves, paper-
+    // sparsity sets, singletons, empty — exact roundtrip; then truncated
+    // and bit-flipped payloads must error (or decode to *some* valid set
+    // when the flip lands in ignored padding), never panic.
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x60F + case);
+        let n = 1 + rng.below(300_000);
+        let k = match case % 4 {
+            0 => 0,
+            1 => 1,
+            2 => 1 + rng.below((n / 100).max(1)),
+            _ => 1 + rng.below((n / 2).max(1)),
+        };
+        let idx = random_indices(&mut rng, n, k);
+        let bytes = index_coding::encode_with(&idx, n, IndexCodec::Golomb).unwrap();
+        assert_eq!(bytes[0], 2, "case {case}: golomb mode byte");
+        assert_eq!(
+            index_coding::decode(&bytes, n).unwrap(),
+            idx,
+            "case {case} n={n} k={k}"
+        );
+        // Truncation: every strict prefix must fail or return a prefix-
+        // consistent set — and must not panic.
+        let cut = rng.below(bytes.len());
+        let _ = index_coding::decode(&bytes[..cut], n);
+        // Mutation: flip 1..4 random bits anywhere in the payload.
+        let mut bad = bytes.clone();
+        for _ in 0..1 + rng.below(4) {
+            let pos = rng.below(bad.len());
+            bad[pos] ^= 1 << rng.below(8);
+        }
+        if let Ok(back) = index_coding::decode(&bad, n) {
+            // A surviving decode must still be a sane index set.
+            assert!(back.windows(2).all(|w| w[0] < w[1]), "case {case}: unsorted");
+            assert!(back.iter().all(|&i| (i as usize) < n), "case {case}: out of range");
+        }
+    }
+}
+
+#[test]
+fn prop_auto_picker_emits_the_smallest_candidate() {
+    // `Auto`'s wire bytes == min over the three forced codecs, for any
+    // index set; and the emitted payload decodes back exactly.
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xA070 + case);
+        let n = 8 + rng.below(500_000);
+        let k = match case % 3 {
+            0 => rng.below(4),                        // near-empty
+            1 => 1 + rng.below((n / 200).max(1)),     // sparse (golomb/deflate regime)
+            _ => 1 + rng.below((n / 2).max(1)),       // dense (bitmap regime)
+        };
+        let idx = random_indices(&mut rng, n, k);
+        let auto = index_coding::encode_with(&idx, n, IndexCodec::Auto).unwrap();
+        let best = [IndexCodec::Bitmap, IndexCodec::Deflate, IndexCodec::Golomb]
+            .iter()
+            .map(|&c| index_coding::encode_with(&idx, n, c).unwrap().len())
+            .min()
+            .unwrap();
+        assert_eq!(auto.len(), best, "case {case} n={n} k={k}: auto is not minimal");
+        assert_eq!(index_coding::decode(&auto, n).unwrap(), idx, "case {case}");
+        // Auto never loses to the legacy hybrid (the fig10/11 rate bar).
+        let legacy = index_coding::encode(&idx, n).unwrap();
+        assert!(
+            auto.len() <= legacy.len(),
+            "case {case}: auto {} > legacy {}",
+            auto.len(),
+            legacy.len()
+        );
+    }
+}
+
+#[test]
+fn prop_every_codec_strategy_decodes_with_the_one_decoder() {
+    // The decoder is mode-dispatched off the wire byte, so any receiver
+    // accepts any sender-side strategy without configuration.
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xDEC0 + case);
+        let n = 8 + rng.below(100_000);
+        let k = rng.below((n / 4).max(1));
+        let idx = random_indices(&mut rng, n, k);
+        for codec in IndexCodec::all() {
+            let bytes = index_coding::encode_with(&idx, n, codec).unwrap();
+            assert_eq!(
+                index_coding::decode(&bytes, n).unwrap(),
+                idx,
+                "case {case} codec={}",
+                codec.name()
+            );
+        }
     }
 }
 

@@ -1,0 +1,344 @@
+//! Scalar <-> SIMD differential suite (DESIGN.md §16.1).
+//!
+//! Every vectorized kernel in the encode hot path ships with a scalar
+//! twin, and the pair must be *bit-identical* — same selected indices,
+//! same f32 bit patterns, same bytes out — because training curves,
+//! ledgers, and the sim-vs-wire identity contract all flow through them.
+//! Each test here drives a kernel through its public entry point under
+//! forced-scalar and auto dispatch over adversarial shapes (length 0, 1,
+//! non-multiples of the 8-lane width) and adversarial values (NaN, ±inf,
+//! ±0, denormals, all-equal-to-threshold ties), comparing outputs at the
+//! bit level; the final test runs whole native training sessions both
+//! ways and diffs every deterministic artifact, checkpoint bytes
+//! included.
+//!
+//! Dispatch is process-global, so every test serializes on one mutex and
+//! restores auto dispatch before releasing it.
+
+use lgc::compress::index_coding::IndexCodec;
+use lgc::compress::{f16, quantize, simd, topk};
+use lgc::config::{Method, TrainConfig};
+use lgc::coordinator;
+use lgc::runtime::Engine;
+use lgc::util::rng::Rng;
+
+const CASES: u64 = 220;
+
+/// Serialize dispatch flips across the concurrently-run tests in this
+/// binary; a poisoned lock just means another test failed, not that the
+/// dispatch state is corrupt.
+fn dispatch_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` twice — scalar twins pinned, then auto dispatch — and restore
+/// auto before returning `(scalar, auto)`.
+fn both<R>(mut f: impl FnMut() -> R) -> (R, R) {
+    simd::force_scalar(true);
+    let s = f();
+    simd::force_scalar(false);
+    let a = f();
+    (s, a)
+}
+
+/// Adversarial f32 pool: specials, signed zeros, f32 and f16 denormals,
+/// threshold-magnitude ties get injected separately.
+const SPECIALS: [f32; 12] = [
+    f32::NAN,
+    f32::INFINITY,
+    f32::NEG_INFINITY,
+    0.0,
+    -0.0,
+    1e-40,
+    -1e-40,
+    f32::MIN_POSITIVE,
+    -f32::MIN_POSITIVE,
+    6.1e-5,  // just below the f16 normal boundary
+    65520.0, // the f16 overflow tie
+    f32::MAX,
+];
+
+/// Lengths straddling the 8-lane width: empty, single, tail-only, exact
+/// multiples, multiples ± 1, and a large odd size.
+const LENS: [usize; 12] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 64, 255, 1021];
+
+fn adversarial_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut g = rng.normal_vec(len, 1.0);
+    for _ in 0..len / 3 {
+        let at = rng.below(len.max(1));
+        g[at] = SPECIALS[rng.below(SPECIALS.len())];
+    }
+    g
+}
+
+// ---------------------------------------------------------------------------
+// Top-k threshold scan
+// ---------------------------------------------------------------------------
+
+#[test]
+fn topk_selection_is_bit_identical_scalar_vs_simd() {
+    let _g = dispatch_lock();
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x70D1F + case);
+        let len = LENS[case as usize % LENS.len()];
+        let mut g = adversarial_vec(&mut rng, len);
+        // Force magnitude ties so the tie-fill pass has to disambiguate
+        // against the vectorized strict pass.
+        for _ in 0..len / 4 {
+            let (a, b) = (rng.below(len.max(1)), rng.below(len.max(1)));
+            if len > 0 {
+                g[a] = g[b].abs();
+            }
+        }
+        let k = rng.below(len + 2); // includes 0 and > len
+        let (s, a) = both(|| topk::top_k(&g, k));
+        assert_eq!(s.indices, a.indices, "case {case} len={len} k={k}");
+        let sv: Vec<u32> = s.values.iter().map(|v| v.to_bits()).collect();
+        let av: Vec<u32> = a.values.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(sv, av, "case {case}: value bits drifted");
+        assert_eq!(s.threshold.to_bits(), a.threshold.to_bits(), "case {case}");
+    }
+    // All-equal-to-threshold: every coordinate ties, the strict pass
+    // selects nothing, and both paths must fill identically.
+    for len in [1usize, 7, 8, 9, 33] {
+        let g = vec![1.0f32; len];
+        for k in [1, len / 2 + 1, len] {
+            let (s, a) = both(|| topk::top_k(&g, k));
+            assert_eq!(s.indices, a.indices, "ties len={len} k={k}");
+            assert_eq!(s.indices.len(), k.min(len));
+        }
+    }
+}
+
+#[test]
+fn bucketed_topk_is_bit_identical_scalar_vs_simd() {
+    let _g = dispatch_lock();
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xB0D1F + case);
+        let len = 16 + rng.below(2000);
+        let g = adversarial_vec(&mut rng, len);
+        let k = 1 + rng.below(len / 2 + 1);
+        // Random ascending contiguous partition.
+        let nb = 1 + rng.below(16);
+        let mut cuts = std::collections::BTreeSet::new();
+        while cuts.len() < nb.min(len - 1) {
+            cuts.insert(1 + rng.below(len - 1));
+        }
+        let mut edges = vec![0usize];
+        edges.extend(&cuts);
+        edges.push(len);
+        let ranges: Vec<std::ops::Range<usize>> =
+            edges.windows(2).map(|w| w[0]..w[1]).collect();
+        let run = || {
+            let (mut mags, mut idx, mut vals, mut splits) =
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            let thr =
+                topk::top_k_bucketed_into(&g, k, &ranges, &mut mags, &mut idx, &mut vals, &mut splits);
+            let vbits: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+            (thr.to_bits(), idx, vbits, splits)
+        };
+        let (s, a) = both(run);
+        assert_eq!(s, a, "case {case} len={len} k={k} buckets={}", ranges.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QSGD stochastic quantization
+// ---------------------------------------------------------------------------
+
+#[test]
+fn qsgd_is_bit_identical_scalar_vs_simd() {
+    let _g = dispatch_lock();
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x45D1F + case);
+        let len = LENS[case as usize % LENS.len()];
+        let g = adversarial_vec(&mut rng, len);
+        let levels = 1 + rng.below(255) as u32;
+        let bucket = 1 + rng.below(64);
+        // Both paths must consume the RNG stream identically, so each
+        // gets a fresh generator with the same seed.
+        let run = || {
+            let mut qrng = Rng::new(0x0123 + case);
+            let p = quantize::qsgd(&g, levels, bucket, &mut qrng);
+            let bits: Vec<u32> = p.dequant.iter().map(|v| v.to_bits()).collect();
+            (p.bytes, bits)
+        };
+        let (s, a) = both(run);
+        assert_eq!(s.0, a.0, "case {case}: packet bytes drifted");
+        assert_eq!(s.1, a.1, "case {case} len={len} levels={levels} bucket={bucket}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 <-> f16 wire round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn f16_roundtrip_is_bit_identical_scalar_vs_simd() {
+    let _g = dispatch_lock();
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xF16D1F + case);
+        let len = LENS[case as usize % LENS.len()];
+        // Raw bit-pattern sampling reaches every f32 class (denormals,
+        // NaN payloads, both signs) far more often than normal draws.
+        let vals: Vec<f32> = (0..len)
+            .map(|_| {
+                if rng.below(3) == 0 {
+                    SPECIALS[rng.below(SPECIALS.len())]
+                } else {
+                    f32::from_bits(rng.below(u32::MAX as usize + 1) as u32)
+                }
+            })
+            .collect();
+        let run = || {
+            let (deq, bytes) = f16::quantize_f16(&vals);
+            let bits: Vec<u32> = deq.iter().map(|v| v.to_bits()).collect();
+            (bytes, bits)
+        };
+        let (s, a) = both(run);
+        assert_eq!(s, a, "case {case} len={len}");
+    }
+    // Exhaustive over every f16-representable value (and its neighbours'
+    // roundtrip targets): all 65536 bit patterns decoded to f32, then
+    // round-tripped by both paths in one 65536-lane sweep.
+    let all: Vec<f32> = (0..=u16::MAX).map(f16::f16_bits_to_f32).collect();
+    let run = || {
+        let mut v = all.clone();
+        f16::roundtrip_in_place(&mut v);
+        v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+    };
+    let (s, a) = both(run);
+    assert_eq!(s, a, "exhaustive f16 sweep drifted");
+}
+
+// ---------------------------------------------------------------------------
+// DEFLATE LZ77 match loop (vendored flate2)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deflate_output_is_byte_identical_scalar_vs_simd() {
+    let _g = dispatch_lock();
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xDEF51 + case);
+        let n = rng.below(6000);
+        // Corpora spanning the match-finder's regimes: pure noise (no
+        // matches), small alphabets (many short matches), long periodic
+        // repeats (matches crossing the 32-byte SIMD stride), and a
+        // duplicated random block (maximal matches with a controlled
+        // mismatch tail).
+        let data: Vec<u8> = match case % 4 {
+            0 => (0..n).map(|_| rng.below(256) as u8).collect(),
+            1 => (0..n).map(|_| rng.below(4) as u8).collect(),
+            2 => {
+                let pat: Vec<u8> =
+                    (0..1 + rng.below(67)).map(|_| rng.below(256) as u8).collect();
+                (0..n).map(|i| pat[i % pat.len()]).collect()
+            }
+            _ => {
+                let half: Vec<u8> = (0..n / 2).map(|_| rng.below(256) as u8).collect();
+                let mut d = half.clone();
+                d.extend(&half);
+                d
+            }
+        };
+        for level in [1u32, 6, 9] {
+            let run = || flate2::compress(&data, flate2::Compression::new(level));
+            let (s, a) = both(run);
+            assert_eq!(s, a, "case {case} level={level}: compressed bytes drifted");
+            assert_eq!(flate2::decompress(&s).unwrap(), data, "case {case}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Environment override
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lgc_force_scalar_env_var_pins_the_scalar_twins() {
+    let _g = dispatch_lock();
+    // `force_scalar(false)` re-detects, and detection honours the env
+    // var — so setting it must keep dispatch scalar even after release.
+    std::env::set_var("LGC_FORCE_SCALAR", "1");
+    simd::force_scalar(false);
+    assert!(!simd::using_avx2(), "env override ignored by re-detection");
+    std::env::remove_var("LGC_FORCE_SCALAR");
+    simd::force_scalar(false); // restore hardware auto-detection
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: whole native training runs, scalar vs auto
+// ---------------------------------------------------------------------------
+
+fn tiny_cfg(method: Method, codec: IndexCodec) -> TrainConfig {
+    TrainConfig {
+        model: "convnet_mini".into(),
+        method,
+        nodes: 2,
+        steps: 12,
+        warmup_iters: 4,
+        ae_train_iters: 4,
+        eval_every: 4,
+        eval_batches: 2,
+        ae_gate: f32::INFINITY,
+        index_codec: codec,
+        ..Default::default()
+    }
+}
+
+/// Every deterministic training artifact, flattened to exact bits.
+type Fingerprint = (Vec<(usize, u32, u32)>, Vec<(usize, u32, u32)>, String, Vec<u64>);
+
+fn fingerprint(r: &coordinator::TrainResult) -> Fingerprint {
+    let curve: Vec<(usize, u32, u32)> = r
+        .curve
+        .iter()
+        .map(|p| (p.iter, p.train_loss.to_bits(), p.train_acc.to_bits()))
+        .collect();
+    let evals: Vec<(usize, u32, u32)> =
+        r.evals.iter().map(|(i, l, a)| (*i, l.to_bits(), a.to_bits())).collect();
+    (curve, evals, format!("{:?}", r.ledger), r.ledger.iter_bytes.clone())
+}
+
+/// The ISSUE acceptance bar: `LGC_FORCE_SCALAR=1` and auto dispatch
+/// produce bit-identical curves, evals, ledgers, network traces, and
+/// final checkpoint bytes — for a sparse-EF method under all four index
+/// codecs (fp16 on, driving the f16 kernel), for QSGD (driving the
+/// stochastic-round kernel), and for learned LGC (AE + innovation path).
+#[test]
+fn native_training_is_bit_identical_scalar_vs_simd() {
+    let _g = dispatch_lock();
+    let e = Engine::native().expect("native engine always constructs");
+    let tmp = std::env::temp_dir();
+    let pid = std::process::id();
+    let mut configs: Vec<(String, TrainConfig)> = IndexCodec::all()
+        .into_iter()
+        .map(|codec| {
+            let mut cfg = tiny_cfg(Method::SparseGd, codec);
+            cfg.fp16_values = true;
+            (format!("sparse_gd/{}", codec.name()), cfg)
+        })
+        .collect();
+    configs.push(("qsgd".into(), tiny_cfg(Method::Qsgd, IndexCodec::Deflate)));
+    configs.push(("lgc_ps/auto".into(), tiny_cfg(Method::LgcPs, IndexCodec::Auto)));
+    for (tag, cfg) in configs {
+        let safe_tag = tag.replace('/', "_");
+        let run = |suffix: &str| {
+            let path = tmp.join(format!("lgc_simd_diff_{pid}_{safe_tag}_{suffix}"));
+            let mut cfg = cfg.clone();
+            cfg.checkpoint = Some(path.to_string_lossy().into_owned());
+            let r = coordinator::train(&e, cfg).unwrap();
+            let ckpt = std::fs::read(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            (fingerprint(&r), format!("{:?}", r.net), ckpt)
+        };
+        simd::force_scalar(true);
+        let scalar = run("scalar");
+        simd::force_scalar(false);
+        let auto = run("auto");
+        assert_eq!(scalar.0, auto.0, "{tag}: curve/evals/ledger drifted");
+        assert_eq!(scalar.1, auto.1, "{tag}: network trace drifted");
+        assert_eq!(scalar.2, auto.2, "{tag}: checkpoint bytes drifted");
+    }
+}

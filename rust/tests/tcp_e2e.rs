@@ -178,6 +178,24 @@ fn tcp_overlapped_buckets_bit_identical_to_sim() {
     });
 }
 
+/// `--index-codec auto` prices every sparse upload per layer on the
+/// worker side; the coordinator-side sim replay must pick the same codec
+/// from the same bytes, so ledgers, curves, and checkpoints stay
+/// bit-identical across the wire (DESIGN.md §16.2).  Golomb forced
+/// everywhere is the other interesting wire shape (a codec the legacy
+/// decoder never produced).
+#[test]
+fn tcp_index_codec_auto_and_golomb_bit_identical_to_sim() {
+    use lgc::compress::index_coding::IndexCodec;
+    assert_tcp_matches_sim_with("convnet_mini", Method::LgcPs, 4, "127.0.0.1:0", 0xE2EA, |c| {
+        c.index_codec = IndexCodec::Auto;
+    });
+    assert_tcp_matches_sim_with("mlp_mini", Method::SparseGd, 2, "127.0.0.1:0", 0xE2EB, |c| {
+        c.index_codec = IndexCodec::Golomb;
+        c.fp16_values = true;
+    });
+}
+
 #[test]
 fn unsupported_methods_error_loudly() {
     let e = engine();

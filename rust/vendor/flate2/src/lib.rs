@@ -462,6 +462,101 @@ const TOKEN_MATCH: u32 = 1 << 31;
 /// never codes larger under fixed Huffman than the literal-only stream.
 const TOO_FAR: usize = 4096;
 
+// ---------------------------------------------------------------------------
+// Match-length extension: the LZ77 inner loop, SIMD-dispatched
+// ---------------------------------------------------------------------------
+
+const SIMD_UNDECIDED: u8 = 0;
+const SIMD_SCALAR: u8 = 1;
+const SIMD_AVX2: u8 = 2;
+
+/// Cached dispatch for [`match_len`].  This crate is vendored below the
+/// `lgc` workspace and cannot see its dispatch atomic, so it keeps its
+/// own, driven by the same inputs: `LGC_FORCE_SCALAR=1`, AVX2 detection,
+/// and [`set_force_scalar`] (which `lgc::compress::simd::force_scalar`
+/// forwards to).
+static SIMD_DISPATCH: std::sync::atomic::AtomicU8 =
+    std::sync::atomic::AtomicU8::new(SIMD_UNDECIDED);
+
+fn simd_detect() -> u8 {
+    if std::env::var_os("LGC_FORCE_SCALAR").is_some_and(|v| v == "1") {
+        return SIMD_SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        return SIMD_AVX2;
+    }
+    SIMD_SCALAR
+}
+
+fn simd_active() -> bool {
+    use std::sync::atomic::Ordering;
+    match SIMD_DISPATCH.load(Ordering::Relaxed) {
+        SIMD_UNDECIDED => {
+            let d = simd_detect();
+            SIMD_DISPATCH.store(d, Ordering::Relaxed);
+            d == SIMD_AVX2
+        }
+        d => d == SIMD_AVX2,
+    }
+}
+
+/// Pin (`true`) or re-detect (`false`) the scalar match loop at runtime;
+/// the environment override survives release.
+pub fn set_force_scalar(force: bool) {
+    let d = if force { SIMD_SCALAR } else { simd_detect() };
+    SIMD_DISPATCH.store(d, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Length of the common prefix of `data[a..]` and `data[b..]`, capped at
+/// `max_l`.  Caller guarantees `a < b` and `b + max_l <= data.len()`.
+///
+/// Both variants test exact byte equality, so they return identical
+/// lengths for every input (DESIGN.md §16.1).
+fn match_len(data: &[u8], a: usize, b: usize, max_l: usize) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2 presence was runtime-checked by `simd_active`.
+        return unsafe { match_len_avx2(data, a, b, max_l) };
+    }
+    match_len_scalar(data, a, b, max_l)
+}
+
+fn match_len_scalar(data: &[u8], a: usize, b: usize, max_l: usize) -> usize {
+    let mut l = 0usize;
+    while l < max_l && data[a + l] == data[b + l] {
+        l += 1;
+    }
+    l
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn match_len_avx2(data: &[u8], a: usize, b: usize, max_l: usize) -> usize {
+    use std::arch::x86_64::*;
+    let mut l = 0usize;
+    // 32-byte blocks while fully inside the cap: loads stay in bounds
+    // because a + l + 32 <= b + max_l <= data.len().
+    while l + 32 <= max_l {
+        // SAFETY: bounds argument above; unaligned loads.
+        let (x, y) = unsafe {
+            (
+                _mm256_loadu_si256(data.as_ptr().add(a + l) as *const __m256i),
+                _mm256_loadu_si256(data.as_ptr().add(b + l) as *const __m256i),
+            )
+        };
+        let eq = _mm256_movemask_epi8(_mm256_cmpeq_epi8(x, y)) as u32;
+        if eq != u32::MAX {
+            return l + (!eq).trailing_zeros() as usize;
+        }
+        l += 32;
+    }
+    while l < max_l && data[a + l] == data[b + l] {
+        l += 1;
+    }
+    l
+}
+
 /// Greedy hash-chain LZ77 over `data` into `s.tokens`.
 fn tokenize(data: &[u8], max_chain: usize, nice_len: usize, s: &mut DeflateScratch) {
     let n = data.len();
@@ -500,10 +595,7 @@ fn tokenize(data: &[u8], max_chain: usize, nice_len: usize, s: &mut DeflateScrat
                     j = s.prev[ju] as isize;
                     continue;
                 }
-                let mut l = 0usize;
-                while l < max_l && data[ju + l] == data[i + l] {
-                    l += 1;
-                }
+                let l = match_len(data, ju, i, max_l);
                 if l > best_len {
                     best_len = l;
                     best_dist = i - ju;
@@ -1396,6 +1488,45 @@ mod tests {
     fn roundtrip_all_byte_values() {
         let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
         roundtrip(&data);
+    }
+
+    #[test]
+    fn match_len_twins_agree_and_forced_scalar_output_is_identical() {
+        // Direct kernel differential: mismatch positions swept across the
+        // 32-byte block boundaries, with caps below/at/above one block.
+        let mut rng = TestRng(0xC0FFEE);
+        let base: Vec<u8> = (0..512).map(|_| rng.byte()).collect();
+        let mut data = base.clone();
+        data.extend_from_slice(&base);
+        for mis in [0usize, 1, 31, 32, 33, 63, 64, 65, 255, 256, 511] {
+            let saved = data[512 + mis];
+            data[512 + mis] = saved.wrapping_add(1);
+            for max_l in [0usize, 1, 31, 32, 33, 64, 65, 258, 512] {
+                let want = match_len_scalar(&data, 0, 512, max_l);
+                assert_eq!(want, mis.min(max_l), "scalar twin sanity");
+                let got = match_len(&data, 0, 512, max_l);
+                assert_eq!(got, want, "mis={mis} max_l={max_l}");
+            }
+            data[512 + mis] = saved;
+        }
+        // End-to-end: the emitted stream must be byte-identical with the
+        // match loop pinned scalar (dispatch is a wall-clock knob only).
+        let corpora: Vec<Vec<u8>> = vec![
+            (0..50_000).map(|_| rng.byte()).collect(),
+            b"abcabcabcabc".repeat(2000),
+            vec![0u8; 10_000],
+        ];
+        for data in &corpora {
+            for level in [1u32, 6, 9] {
+                set_force_scalar(true);
+                let scalar = compress(data, Compression::new(level));
+                set_force_scalar(false);
+                let auto = compress(data, Compression::new(level));
+                assert_eq!(scalar, auto, "len {} level {level}", data.len());
+                assert_eq!(decompress(&scalar).unwrap(), *data);
+            }
+        }
+        set_force_scalar(false);
     }
 
     #[test]
